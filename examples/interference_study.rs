@@ -1,0 +1,96 @@
+//! The §2.2 interference study end-to-end: instead of reading iteration
+//! latencies off the cost model (examples/figures.rs does that for the
+//! microbenchmark series), this drives whole *serving runs* through the
+//! coupled baseline and shows how victim requests suffer when co-located
+//! with aggressors — then shows TetriInfer's disaggregation removing the
+//! interference.
+//!
+//!   cargo run --release --example interference_study
+
+use tetri_infer::baseline::{run_baseline, BaselineConfig};
+use tetri_infer::coordinator::{run_cluster, ClusterConfig};
+use tetri_infer::metrics::RunMetrics;
+use tetri_infer::types::Request;
+use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+
+/// Mean JCT (ms) of the subset of records matching `pred`.
+fn mean_jct(m: &RunMetrics, pred: impl Fn(&tetri_infer::types::RequestRecord) -> bool) -> f64 {
+    let xs: Vec<f64> = m.records.iter().filter(|r| pred(r)).map(|r| r.jct() as f64 / 1e3).collect();
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+fn mean_ttft(m: &RunMetrics, pred: impl Fn(&tetri_infer::types::RequestRecord) -> bool) -> f64 {
+    let xs: Vec<f64> = m.records.iter().filter(|r| pred(r)).map(|r| r.ttft() as f64 / 1e3).collect();
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+fn victims(seed: u64) -> Vec<Request> {
+    // 32 light chat requests — the victims we measure.
+    WorkloadGen::new(seed).trace(WorkloadKind::Lpld, 32, 16.0, 0)
+}
+
+/// Distinct generators both number requests from 0; shift the aggressors'
+/// ids so a combined trace has unique ids.
+fn offset_ids(mut v: Vec<Request>, base: u64) -> Vec<Request> {
+    for r in &mut v {
+        r.id += base;
+    }
+    v
+}
+
+fn main() {
+    println!("== interference study (victim: 32 light chat requests @16/s) ==\n");
+    let baseline_cfg = || BaselineConfig { n_instances: 1, ..Default::default() };
+
+    // -- victims alone on one coupled instance
+    let alone = run_baseline(baseline_cfg(), victims(1));
+    let solo_ttft = mean_ttft(&alone, |_| true);
+    let solo_jct = mean_jct(&alone, |_| true);
+    println!("victims alone          : TTFT {solo_ttft:>7.1} ms   JCT {solo_jct:>8.1} ms");
+
+    // -- §2.2.1/§2.2.2: add heavy-prefill aggressors (summarization)
+    let mut tr = victims(1);
+    let mut gen = WorkloadGen::new(99);
+    tr.extend(offset_ids(gen.trace(WorkloadKind::Hpld, 24, 16.0, 0), 1000));
+    let hp = run_baseline(baseline_cfg(), tr.clone());
+    let is_victim = |r: &tetri_infer::types::RequestRecord| r.prompt_len <= 512 && r.decode_len <= 128;
+    println!(
+        "+ 24 heavy prefills    : TTFT {:>7.1} ms ({:>4.1}x)   JCT {:>8.1} ms ({:>4.1}x)   [vLLM coupled]",
+        mean_ttft(&hp, is_victim),
+        mean_ttft(&hp, is_victim) / solo_ttft,
+        mean_jct(&hp, is_victim),
+        mean_jct(&hp, is_victim) / solo_jct
+    );
+
+    // -- same mix on TetriInfer: disaggregation shields the victims
+    let tetri = run_cluster(ClusterConfig::ts_roce(1, 1), tr);
+    println!(
+        "  same on TetriInfer   : TTFT {:>7.1} ms ({:>4.1}x)   JCT {:>8.1} ms ({:>4.1}x)   [disaggregated]",
+        mean_ttft(&tetri, is_victim),
+        mean_ttft(&tetri, is_victim) / solo_ttft,
+        mean_jct(&tetri, is_victim),
+        mean_jct(&tetri, is_victim) / solo_jct
+    );
+
+    // -- §2.2.3: heavy-decode aggressors (creation)
+    let mut tr = victims(1);
+    tr.extend(offset_ids(gen.trace(WorkloadKind::Lphd, 24, 16.0, 0), 2000));
+    let hd = run_baseline(baseline_cfg(), tr.clone());
+    println!(
+        "+ 24 heavy decodes     : TTFT {:>7.1} ms ({:>4.1}x)   JCT {:>8.1} ms ({:>4.1}x)   [vLLM coupled]",
+        mean_ttft(&hd, is_victim),
+        mean_ttft(&hd, is_victim) / solo_ttft,
+        mean_jct(&hd, is_victim),
+        mean_jct(&hd, is_victim) / solo_jct
+    );
+    let tetri_hd = run_cluster(ClusterConfig::ts_roce(1, 1), tr);
+    println!(
+        "  same on TetriInfer   : TTFT {:>7.1} ms ({:>4.1}x)   JCT {:>8.1} ms ({:>4.1}x)   [disaggregated]",
+        mean_ttft(&tetri_hd, is_victim),
+        mean_ttft(&tetri_hd, is_victim) / solo_ttft,
+        mean_jct(&tetri_hd, is_victim),
+        mean_jct(&tetri_hd, is_victim) / solo_jct
+    );
+
+    println!("\npaper's corresponding microbenchmarks: Figures 3-5 (see examples/figures.rs)");
+}

@@ -1,0 +1,56 @@
+//! Cluster-scale scenario: a bigger disaggregated deployment (2 prefill +
+//! 4 decode instances) serving sustained mixed traffic with instance
+//! flipping enabled — the "cloud-scale" deployment of §3.2/§3.5.
+//!
+//!   cargo run --release --example mixed_cluster
+
+use tetri_infer::coordinator::{run_cluster, ClusterConfig, FlipConfig};
+use tetri_infer::prefill::DispatchPolicy;
+use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+
+fn main() {
+    println!("== mixed_cluster: 2 prefill + 4 decode, 512 mixed requests @ 24/s ==\n");
+    let trace = WorkloadGen::new(3).trace(WorkloadKind::Mixed, 512, 24.0, 0);
+
+    for (label, dispatch) in [
+        ("power-of-two", DispatchPolicy::PowerOfTwo),
+        ("random", DispatchPolicy::Random),
+        ("least-load", DispatchPolicy::LeastLoad),
+    ] {
+        let cfg = ClusterConfig {
+            n_prefill: 2,
+            n_decode: 4,
+            dispatch,
+            flip: Some(FlipConfig { idle_us: 10_000_000, ..Default::default() }),
+            seed: 3,
+            ..Default::default()
+        };
+        let m = run_cluster(cfg, trace.clone());
+        let t = m.ttft_summary();
+        let j = m.jct_summary();
+        let assigns: Vec<String> = m
+            .decode_assign
+            .iter()
+            .filter(|(h, l)| h + l > 0)
+            .map(|(h, l)| format!("{h}H/{l}L"))
+            .collect();
+        println!(
+            "{label:<13} TTFT {:>6.1} ms  JCT {:>8.1} ms (p99 {:>8.1})  makespan {:>5.1}s  util {:>4.1}%  flips {}",
+            t.mean, j.mean, j.p99, m.makespan_us as f64 / 1e6, m.utilization() * 100.0, m.flips
+        );
+        println!("              decode assignment (heavy/light): {}", assigns.join("  "));
+    }
+
+    println!("\nscaling decode instances (power-of-two, same trace):");
+    for n_dec in [2usize, 4, 8] {
+        let cfg = ClusterConfig { n_prefill: 2, n_decode: n_dec, seed: 3, ..Default::default() };
+        let m = run_cluster(cfg, trace.clone());
+        println!(
+            "  {} decode: JCT mean {:>8.1} ms  makespan {:>5.1}s  resource {:>6.1}s",
+            n_dec,
+            m.jct_summary().mean,
+            m.makespan_us as f64 / 1e6,
+            m.resource_seconds()
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! Perf probe: break down one real decode iteration (upload / execute /
+//! download) to target the §Perf optimization.
+use std::time::Instant;
+use tetri_infer::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let e = Engine::load("artifacts")?;
+    let m = &e.manifest;
+    let d = &m.decode;
+    let pool = e.decode_pool_numel();
+    let mut kp = vec![0f32; pool];
+    let mut vp = vec![0f32; pool];
+    let tokens = vec![1i32; d.batch];
+    let positions = vec![4i32; d.batch];
+    let bt: Vec<i32> = (0..d.batch * d.max_pages_per_req).map(|i| (1 + i % (d.n_pages - 1)) as i32).collect();
+    let lens = vec![5i32; d.batch];
+    // warm up
+    e.decode_step(&tokens, &positions, &mut kp, &mut vp, &bt, &lens)?;
+    let t = Instant::now();
+    let n = 20;
+    for _ in 0..n {
+        e.decode_step(&tokens, &positions, &mut kp, &mut vp, &bt, &lens)?;
+    }
+    println!("decode_step: {:.1} ms/iter (pool {:.1} MB x2 in+out)", t.elapsed().as_secs_f64()*1e3/n as f64, pool as f64*4.0/1e6);
+
+    // prefill
+    let kvn = e.prefill_kv_numel();
+    let mut k = vec![0f32; kvn];
+    let mut v = vec![0f32; kvn];
+    let toks = vec![1i32; m.model.chunk];
+    e.prefill_segment(&toks, 0, m.model.chunk as i32, &mut k, &mut v)?;
+    let t = Instant::now();
+    for _ in 0..n {
+        e.prefill_segment(&toks, 0, m.model.chunk as i32, &mut k, &mut v)?;
+    }
+    println!("prefill_segment: {:.1} ms/chunk (cache {:.1} MB x2)", t.elapsed().as_secs_f64()*1e3/n as f64, kvn as f64*4.0/1e6);
+
+    // predictor
+    let ptoks = vec![1i32; m.predictor.max_prompt];
+    let t = Instant::now();
+    for _ in 0..n { e.predict_len(&ptoks, 10)?; }
+    println!("predict_len: {:.2} ms", t.elapsed().as_secs_f64()*1e3/n as f64);
+    Ok(())
+}

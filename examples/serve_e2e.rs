@@ -1,0 +1,62 @@
+//! End-to-end real-mode driver: load the AOT'd model artifacts and serve a
+//! batched mixed workload through the full disaggregated pipeline —
+//! PJRT CPU execution, chunked prefill, real KV-cache transfer into the
+//! paged decode pool, length-predictor-informed scheduling — and report
+//! latency/throughput. This proves all three layers compose with Python
+//! nowhere on the request path.
+//!
+//!   make artifacts && cargo run --release --example serve_e2e [n_requests]
+
+use tetri_infer::fabric::Link;
+use tetri_infer::runtime::Engine;
+use tetri_infer::serve::{ServeConfig, Server};
+use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let engine = Engine::load("artifacts")?;
+    let m = &engine.manifest;
+    println!(
+        "loaded model: d={} layers={} heads={} ctx={} chunk={} | decode batch={} pages={}x{}",
+        m.model.d_model, m.model.n_layers, m.model.n_heads, m.model.max_seq, m.model.chunk,
+        m.decode.batch, m.decode.n_pages, m.decode.page_size
+    );
+    println!(
+        "length predictor: {} buckets @ granularity {} (fine-tuned acc@200 = {:?})",
+        m.predictor.n_buckets, m.predictor.granularity, m.predictor_acc200
+    );
+
+    let mut gen = WorkloadGen::new(11);
+    let trace = gen.trace(WorkloadKind::Mixed, n, 0.0, 0);
+    println!("\nserving {n} mixed requests (chat/summarization/creation) ...");
+
+    // Emulate the paper's TS-RoCE setup on KV transfers.
+    let cfg = ServeConfig { emulate_link: Some(Link::roce200()), ..Default::default() };
+    let report = Server::new(&engine, cfg).serve(trace, &mut gen)?;
+
+    let t = report.metrics.ttft_summary();
+    let j = report.metrics.jct_summary();
+    println!("\n== results ==");
+    println!(
+        "requests {}   generated tokens {}   wall {:.2}s   throughput {:.1} tok/s",
+        report.metrics.records.len(),
+        report.generated_tokens,
+        report.wall_secs,
+        report.generated_tokens as f64 / report.wall_secs
+    );
+    println!(
+        "TTFT mean {:.1} ms  p50 {:.1}  p99 {:.1}   |   JCT mean {:.1} ms  p50 {:.1}  p99 {:.1}",
+        t.mean, t.p50, t.p99, j.mean, j.p50, j.p99
+    );
+    println!(
+        "prefill chunks {}   decode iterations {}   KV transferred {:.2} MB",
+        report.prefill_chunks, report.decode_iters, report.transfer_bytes as f64 / 1e6
+    );
+    println!("sample output tokens (req 0): {:?}", &report.sample_output[..report.sample_output.len().min(16)]);
+
+    // Smoke checks: all requests served, deterministic token budget.
+    assert_eq!(report.metrics.records.len(), n, "every request must complete");
+    assert!(report.generated_tokens > 0);
+    println!("\nOK: three-layer stack (rust coordinator -> AOT HLO -> pallas kernels) verified end-to-end");
+    Ok(())
+}

@@ -1,0 +1,247 @@
+"""AOT pipeline: lower the L2 entrypoints to HLO *text* + weight blobs.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under artifacts/):
+  prefill.hlo.txt     prefill_segment(params, tokens, start, valid, k, v)
+  decode.hlo.txt      decode_step(params, tokens, positions, kpool, vpool, bt, lens)
+  predictor.hlo.txt   predict_len(pred_params, tokens, valid)
+  params.bin          target-model weights, flat f32 LE, pytree-flatten order
+  predictor_params.bin
+  manifest.json       config + per-artifact argument specs + predictor metrics
+
+Weights are runtime *arguments* (not baked constants) so the HLO stays
+small; the rust runtime uploads each .bin once and keeps the device
+buffers alive across calls (execute_b).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .config import DEFAULT, Config
+from .model import (
+    decode_step,
+    init_target_params,
+    predict_len,
+    prefill_segment,
+)
+from .train_predictor import train as train_predictor
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params):
+    """Deterministic (path, leaf) list in jax pytree-flatten order."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def save_params_bin(params, path):
+    """Concatenate all leaves (f32 LE) in flatten order; return spec list."""
+    spec = []
+    with open(path, "wb") as f:
+        for name, arr in flatten_params(params):
+            assert arr.dtype == np.float32, (name, arr.dtype)
+            f.write(arr.astype("<f4").tobytes())
+            spec.append({"name": name, "shape": list(arr.shape)})
+    return spec
+
+
+def _argspec(args):
+    """Shape/dtype spec for the non-param arguments of an entrypoint."""
+    return [
+        {"name": name, "shape": list(a.shape), "dtype": str(a.dtype)}
+        for name, a in args
+    ]
+
+
+def load_params_bin(path, template):
+    """Inverse of save_params_bin: read a flat f32 blob back into the
+    template pytree's structure (used by --reuse-predictor)."""
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten(template)
+    raw = np.fromfile(path, dtype="<f4")
+    out, off = [], 0
+    for leaf in leaves_with_paths:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        out.append(jnp.asarray(raw[off : off + n].reshape(leaf.shape)))
+        off += n
+    assert off == raw.size, f"{path}: size mismatch"
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def build(cfg: Config, out_dir: str, seed: int = 0, quick: bool = False,
+          skip_train: bool = False, reuse_predictor: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    m, d, p = cfg.model, cfg.decode, cfg.predictor
+
+    # ------------------------------------------------------------- weights
+    params = init_target_params(jax.random.PRNGKey(seed), cfg)
+    param_spec = save_params_bin(params, os.path.join(out_dir, "params.bin"))
+
+    pp_path = os.path.join(out_dir, "predictor_params.bin")
+    if reuse_predictor and os.path.exists(pp_path):
+        from .model import init_predictor_params
+
+        template = init_predictor_params(jax.random.PRNGKey(seed + 7), cfg)
+        pred_params = load_params_bin(pp_path, template)
+        old = json.load(open(os.path.join(out_dir, "manifest.json")))
+        metrics = old.get("predictor_metrics", {"note": "reused, metrics unknown"})
+        print("reusing fine-tuned predictor weights")
+    elif skip_train:
+        from .model import init_predictor_params
+
+        pred_params = init_predictor_params(jax.random.PRNGKey(seed + 7), cfg)
+        metrics = {"acc_200": 1.0 / p.n_buckets, "note": "untrained (--skip-train)"}
+    else:
+        kwargs = dict(n_train=1500, n_eval=400, steps=120) if quick else {}
+        print("training length predictor ...")
+        pred_params, metrics = train_predictor(cfg, seed=seed, **kwargs)
+        print(f"  acc@100/200/400 = {metrics['acc_100']:.3f} / "
+              f"{metrics['acc_200']:.3f} / {metrics['acc_400']:.3f}")
+    pred_spec = save_params_bin(pred_params, os.path.join(out_dir, "predictor_params.bin"))
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "predictor_metrics": metrics,
+        "params": {"file": "params.bin", "leaves": param_spec},
+        "predictor_params": {"file": "predictor_params.bin", "leaves": pred_spec},
+        "workload": {
+            "task_params": {
+                data.TASK_NAMES[t]: dict(
+                    zip(("prompt_median", "prompt_sigma", "decode_median", "decode_sigma"),
+                        data.TASK_PARAMS[t])
+                )
+                for t in sorted(data.TASK_PARAMS)
+            },
+            "hint": {"base": data.HINT_BASE, "levels": data.HINT_LEVELS,
+                     "gran": data.HINT_GRAN, "sigma": data.HINT_SIGMA},
+            "max_decode": data.MAX_DECODE,
+        },
+        "artifacts": {},
+    }
+
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    # ------------------------------------------------------------- prefill
+    kv_shape = (m.n_layers, m.max_seq, m.n_heads, m.d_head)
+    pre_args = [
+        ("tokens", sds((m.chunk,), i32)),
+        ("start", sds((), i32)),
+        ("valid", sds((), i32)),
+        ("k_cache", sds(kv_shape, f32)),
+        ("v_cache", sds(kv_shape, f32)),
+    ]
+    # donate the KV caches: input_output_alias survives HLO text, letting
+    # XLA:CPU update them in place instead of copying (§Perf)
+    lowered = jax.jit(
+        functools.partial(prefill_segment, cfg=cfg), donate_argnums=(4, 5)
+    ).lower(params, *[a for _, a in pre_args])
+    with open(os.path.join(out_dir, "prefill.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["prefill"] = {
+        "file": "prefill.hlo.txt",
+        "params": "params",
+        "args": _argspec(pre_args),
+        "outputs": [
+            {"name": "last_logits", "shape": [m.vocab]},
+            {"name": "k_cache", "shape": list(kv_shape)},
+            {"name": "v_cache", "shape": list(kv_shape)},
+        ],
+    }
+
+    # -------------------------------------------------------------- decode
+    pool_shape = (m.n_layers, d.n_pages * d.page_size, m.n_heads, m.d_head)
+    dec_args = [
+        ("tokens", sds((d.batch,), i32)),
+        ("positions", sds((d.batch,), i32)),
+        ("k_pool", sds(pool_shape, f32)),
+        ("v_pool", sds(pool_shape, f32)),
+        ("block_tables", sds((d.batch, d.max_pages_per_req), i32)),
+        ("seq_lens", sds((d.batch,), i32)),
+    ]
+    lowered = jax.jit(
+        functools.partial(decode_step, cfg=cfg), donate_argnums=(3, 4)
+    ).lower(params, *[a for _, a in dec_args])
+    with open(os.path.join(out_dir, "decode.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["decode"] = {
+        "file": "decode.hlo.txt",
+        "params": "params",
+        "args": _argspec(dec_args),
+        "outputs": [
+            {"name": "logits", "shape": [d.batch, m.vocab]},
+            {"name": "k_pool", "shape": list(pool_shape)},
+            {"name": "v_pool", "shape": list(pool_shape)},
+        ],
+    }
+
+    # ----------------------------------------------------------- predictor
+    prd_args = [
+        ("tokens", sds((p.max_prompt,), i32)),
+        ("valid", sds((), i32)),
+    ]
+    lowered = jax.jit(functools.partial(predict_len, cfg=cfg)).lower(
+        pred_params, *[a for _, a in prd_args]
+    )
+    with open(os.path.join(out_dir, "predictor.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["predictor"] = {
+        "file": "predictor.hlo.txt",
+        "params": "predictor_params",
+        "args": _argspec(prd_args),
+        "outputs": [{"name": "bucket_logits", "shape": [p.n_buckets]}],
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    for name, info in manifest["artifacts"].items():
+        size = os.path.getsize(os.path.join(out_dir, info["file"]))
+        print(f"  {name}: {info['file']} ({size/1e6:.1f} MB)")
+    print(f"wrote {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter predictor fine-tune (CI-speed)")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="random predictor weights (artifacts only)")
+    ap.add_argument("--reuse-predictor", action="store_true",
+                    help="keep existing fine-tuned predictor_params.bin")
+    args = ap.parse_args()
+    build(DEFAULT, args.out_dir, seed=args.seed, quick=args.quick,
+          skip_train=args.skip_train, reuse_predictor=args.reuse_predictor)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Model/runtime configuration shared by the L1 kernels, L2 model, and AOT.
+
+These are the *real-mode* shapes: a small OPT-style transformer that stands
+in for OPT-13B (see DESIGN.md §Hardware-Adaptation). The rust coordinator
+reads the same values from artifacts/manifest.json, so python and rust can
+never disagree about shapes.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Target model (stands in for OPT-13B)."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_head: int = 32
+    d_ffn: int = 1024
+    max_seq: int = 512          # per-request context window
+    chunk: int = 64             # ChunkSize (real mode); sim mode uses 512
+
+    @property
+    def n_params(self) -> int:
+        per_layer = (
+            4 * self.d_model * self.d_model  # wq wk wv wo
+            + 2 * self.d_model * self.d_ffn  # w1 w2
+            + self.d_ffn + self.d_model      # b1 b2
+            + 4 * self.d_model               # ln1/ln2 gains+biases
+        )
+        return (
+            self.vocab * self.d_model        # tok emb (tied head)
+            + self.max_seq * self.d_model    # pos emb
+            + self.n_layers * per_layer
+            + 2 * self.d_model               # final ln
+        )
+
+
+@dataclass(frozen=True)
+class DecodeConfig:
+    """Paged decode-instance shapes (vLLM-style paged KV)."""
+
+    batch: int = 8              # static decode batch (continuous batching pads)
+    page_size: int = 16         # tokens per KV page
+    n_pages: int = 288          # shared pool; page 0 is the trash page
+    # max pages one request may hold: ceil(max_seq / page_size)
+    max_pages_per_req: int = 32
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    """Length-prediction classifier (stands in for OPT-125M)."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_head: int = 32
+    d_ffn: int = 512
+    max_prompt: int = 64        # prompts truncated/padded to this for classification
+    n_buckets: int = 8          # predicted decode-length buckets
+    granularity: int = 200      # tokens per bucket (paper: 100/200/400)
+
+    @property
+    def n_params(self) -> int:
+        per_layer = (
+            4 * self.d_model * self.d_model
+            + 2 * self.d_model * self.d_ffn
+            + self.d_ffn + self.d_model
+            + 4 * self.d_model
+        )
+        return (
+            self.vocab * self.d_model
+            + self.max_prompt * self.d_model
+            + self.n_layers * per_layer
+            + 2 * self.d_model
+            + self.d_model * self.n_buckets + self.n_buckets  # cls head
+        )
+
+
+@dataclass(frozen=True)
+class Config:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    decode: DecodeConfig = field(default_factory=DecodeConfig)
+    predictor: PredictorConfig = field(default_factory=PredictorConfig)
+
+    def to_dict(self) -> dict:
+        return {
+            "model": asdict(self.model),
+            "decode": asdict(self.decode),
+            "predictor": asdict(self.predictor),
+        }
+
+
+DEFAULT = Config()

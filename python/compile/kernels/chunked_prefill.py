@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: flash-style attention for one fixed-size prefill chunk.
+
+This is TetriInfer's prefill hot spot (§3.3.3): the accelerator always runs
+one ChunkSize-token chunk per iteration, so the kernel's shapes are fully
+static — [C] queries against the request's [S]-row KV cache.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+heads; each program holds the whole chunk's queries in VMEM (C×Dh ≤ 64×32
+f32 = 8 KiB) and streams the KV cache HBM→VMEM in BK-row blocks via
+``pl.ds`` loads, maintaining a running-max online softmax — the same
+schedule FlashAttention expresses with threadblocks/shared memory, here
+expressed with a BlockSpec + fori_loop. MXU alignment: BK = 128 keeps the
+score matmul at [C,Dh]×[Dh,BK] with a 128-wide stationary dimension.
+
+Kernels must run with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+BK = 128  # KV rows streamed per inner step (MXU lane width)
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, n_kblocks: int):
+    """One grid program = one attention head.
+
+    q_ref:    [1, C, Dh]   this head's chunk queries (VMEM-resident)
+    k_ref:    [1, S, Dh]   this head's KV cache keys
+    v_ref:    [1, S, Dh]   this head's KV cache values
+    mask_ref: [C, S]       additive visibility mask (shared across heads)
+    o_ref:    [1, C, Dh]
+    """
+    q = q_ref[0]  # [C, Dh]
+    c, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        kb = k_ref[0, pl.ds(i * BK, BK)]          # [BK, Dh]
+        vb = v_ref[0, pl.ds(i * BK, BK)]          # [BK, Dh]
+        s = jnp.dot(q, kb.T) * scale              # [C, BK]
+        s = s + mask_ref[:, pl.ds(i * BK, BK)]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)           # rescale old accumulator
+        p = jnp.exp(s - m_cur[:, None])           # [C, BK]
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, vb)
+        return m_cur, l_cur, acc
+
+    init = (
+        jnp.full((c,), NEG_INF, q.dtype),
+        jnp.zeros((c,), q.dtype),
+        jnp.zeros((c, dh), q.dtype),
+    )
+    _, l, acc = jax.lax.fori_loop(0, n_kblocks, body, init)
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def chunked_prefill_attention(q, k, v, mask):
+    """Flash-style chunk attention. Same contract as the ref oracle.
+
+    q:    [C, H, Dh];  k, v: [S, H, Dh];  mask: [C, S] additive.
+    Returns [C, H, Dh].
+    """
+    c, h, dh = q.shape
+    s = k.shape[0]
+    assert s % BK == 0, f"KV rows {s} must be a multiple of BK={BK}"
+    # Head-major layout so each grid step owns one contiguous head.
+    qh = jnp.swapaxes(q, 0, 1)  # [H, C, Dh]
+    kh = jnp.swapaxes(k, 0, 1)  # [H, S, Dh]
+    vh = jnp.swapaxes(v, 0, 1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_kblocks=s // BK),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, c, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, c, dh), q.dtype),
+        interpret=True,
+    )(qh, kh, vh, mask)
+    return jnp.swapaxes(out, 0, 1)  # [C, H, Dh]
+
+
+def causal_chunk_mask(start, valid, chunk, max_seq, dtype=jnp.float32):
+    """Additive mask for a chunk whose queries sit at global positions
+    ``start .. start+chunk-1``; only the first ``valid`` are real tokens.
+
+    Query i may see key j iff j <= start+i (causal) — pad queries
+    (i >= valid) get a degenerate self-only row so their softmax stays
+    finite; their outputs are never read.
+    """
+    qi = jnp.arange(chunk)[:, None]
+    kj = jnp.arange(max_seq)[None, :]
+    visible = kj <= (start + qi)
+    return jnp.where(visible, 0.0, NEG_INF).astype(dtype)

@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis sweeps in python/tests/test_kernels.py). They intentionally use
+the most naive formulation: materialize full score matrices, full softmax,
+no blocking, no running-max tricks.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_chunked_prefill_attention(q, k, v, mask):
+    """Naive attention for one prefill chunk.
+
+    q:    [C, H, Dh]  chunk queries
+    k, v: [S, H, Dh]  full per-request KV cache (rows past the written
+                      region are excluded by ``mask``)
+    mask: [C, S]      additive mask (0 = visible, NEG_INF = hidden)
+    returns [C, H, Dh]
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    # [H, C, S]
+    scores = jnp.einsum("chd,shd->hcs", q, k) * scale + mask[None, :, :]
+    w = jnp.exp(scores - scores.max(-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("hcs,shd->chd", w, v)
+
+
+def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, seq_lens, page_size):
+    """Naive paged decode attention.
+
+    q:            [B, H, Dh]   one new query token per sequence
+    k_pool/v_pool:[P*psz, H, Dh] shared paged KV pool (flattened rows)
+    block_tables: [B, MaxP] i32  page ids per sequence
+    seq_lens:     [B] i32        tokens visible per sequence (incl. current)
+    returns [B, H, Dh]
+    """
+    B, H, Dh = q.shape
+    max_pages = block_tables.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, q.dtype))
+    # Gather each sequence's KV rows: [B, MaxP*psz, H, Dh]
+    rows = (
+        block_tables[:, :, None] * page_size
+        + jnp.arange(page_size, dtype=block_tables.dtype)[None, None, :]
+    ).reshape(B, max_pages * page_size)
+    k = k_pool[rows]  # [B, T, H, Dh]
+    v = v_pool[rows]
+    scores = jnp.einsum("bhd,bthd->bht", q, k) * scale
+    t_idx = jnp.arange(max_pages * page_size)
+    visible = t_idx[None, :] < seq_lens[:, None]  # [B, T]
+    scores = jnp.where(visible[:, None, :], scores, NEG_INF)
+    w = jnp.exp(scores - scores.max(-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bht,bthd->bhd", w, v)

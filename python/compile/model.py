@@ -1,0 +1,242 @@
+"""L2: OPT-style transformer in JAX, calling the L1 Pallas kernels.
+
+Three AOT entrypoints (all static-shape, lowered by aot.py to HLO text):
+
+  * ``prefill_segment`` — run one ChunkSize-token chunk of one request's
+    prompt, writing KV into that request's contiguous cache (the cache a
+    prefill instance later *transfers* to a decode instance, §3.3.4).
+  * ``decode_step``     — one continuous-batching iteration over the paged
+    KV pool (vLLM-style block tables, §3.4).
+  * ``predict_len``     — the OPT-125M-style classifier head used by the
+    length predictor (§3.3.2).
+
+Weights are *runtime arguments* (flattened pytree order, see aot.py), so
+the HLO text stays small and the rust side feeds params.bin once, keeping
+device buffers alive across calls (execute_b).
+
+Model flavour follows OPT: learned positional embeddings, pre-LN blocks,
+ReLU MLPs, tied input/output embedding.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import Config, DEFAULT
+from .kernels.chunked_prefill import chunked_prefill_attention, causal_chunk_mask
+from .kernels.paged_decode import paged_decode_attention
+from .kernels.ref import NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def init_layer(key, d, dff, scale=0.02):
+    ks = jax.random.split(key, 6)
+    g = lambda k, shape: (scale * jax.random.normal(k, shape)).astype(jnp.float32)
+    return {
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "wq": g(ks[0], (d, d)),
+        "wk": g(ks[1], (d, d)),
+        "wv": g(ks[2], (d, d)),
+        "wo": g(ks[3], (d, d)),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w1": g(ks[4], (d, dff)),
+        "b1": jnp.zeros((dff,), jnp.float32),
+        "w2": g(ks[5], (dff, d)),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_target_params(key, cfg: Config = DEFAULT):
+    m = cfg.model
+    ks = jax.random.split(key, m.n_layers + 2)
+    return {
+        "tok_emb": (0.02 * jax.random.normal(ks[0], (m.vocab, m.d_model))).astype(jnp.float32),
+        "pos_emb": (0.02 * jax.random.normal(ks[1], (m.max_seq, m.d_model))).astype(jnp.float32),
+        "layers": [init_layer(ks[2 + i], m.d_model, m.d_ffn) for i in range(m.n_layers)],
+        "lnf_g": jnp.ones((m.d_model,), jnp.float32),
+        "lnf_b": jnp.zeros((m.d_model,), jnp.float32),
+    }
+
+
+def init_predictor_params(key, cfg: Config = DEFAULT):
+    p = cfg.predictor
+    ks = jax.random.split(key, p.n_layers + 3)
+    return {
+        "tok_emb": (0.02 * jax.random.normal(ks[0], (p.vocab, p.d_model))).astype(jnp.float32),
+        "pos_emb": (0.02 * jax.random.normal(ks[1], (p.max_prompt, p.d_model))).astype(jnp.float32),
+        "layers": [init_layer(ks[2 + i], p.d_model, p.d_ffn) for i in range(p.n_layers)],
+        "lnf_g": jnp.ones((p.d_model,), jnp.float32),
+        "lnf_b": jnp.zeros((p.d_model,), jnp.float32),
+        "cls_w": (0.02 * jax.random.normal(ks[-1], (p.d_model, p.n_buckets))).astype(jnp.float32),
+        "cls_b": jnp.zeros((p.n_buckets,), jnp.float32),
+    }
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, h, dh):
+    return x.reshape(x.shape[0], h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (per-request contiguous KV, chunked — §3.3.3)
+
+
+def prefill_segment(params, tokens, start, valid, k_cache, v_cache, cfg: Config = DEFAULT):
+    """Prefill one chunk of one request.
+
+    tokens:  [C] i32     chunk token ids (pad tail is arbitrary)
+    start:   scalar i32  global position of tokens[0]
+    valid:   scalar i32  number of real tokens in this chunk (1..C)
+    k_cache: [L, S, H, Dh] request's contiguous KV cache (k)
+    v_cache: [L, S, H, Dh]
+    Returns (last_logits [V], k_cache', v_cache') where last_logits is the
+    next-token distribution after the last *valid* token.
+    """
+    m = cfg.model
+    c = m.chunk
+    pos = jnp.clip(start + jnp.arange(c), 0, m.max_seq - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]  # [C, d]
+    mask = causal_chunk_mask(start, valid, c, m.max_seq)
+
+    for li, lp in enumerate(params["layers"]):
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        q = _split_heads(h @ lp["wq"], m.n_heads, m.d_head)
+        k = _split_heads(h @ lp["wk"], m.n_heads, m.d_head)
+        v = _split_heads(h @ lp["wv"], m.n_heads, m.d_head)
+        # Write this chunk's KV rows into the contiguous [L, ...] cache
+        # (donated input → in-place update chain, no stack).
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None], (li, start, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None], (li, start, 0, 0))
+        att = chunked_prefill_attention(q, k_cache[li], v_cache[li], mask)  # [C, H, Dh]
+        x = x + att.reshape(c, m.d_model) @ lp["wo"]
+        h2 = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + jax.nn.relu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    last = jax.lax.dynamic_index_in_dim(x, valid - 1, axis=0, keepdims=False)
+    logits = last @ params["tok_emb"].T  # tied head, [V]
+    return logits, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (shared paged KV pool — §3.4)
+
+
+def decode_step(params, tokens, positions, k_pool, v_pool, block_tables, seq_lens,
+                cfg: Config = DEFAULT):
+    """One decode iteration for a (padded) continuous batch.
+
+    tokens:       [B] i32     current token per slot
+    positions:    [B] i32     global position of that token (0-based)
+    k_pool/v_pool:[L, P*psz, H, Dh] shared paged KV pool
+    block_tables: [B, MaxP] i32
+    seq_lens:     [B] i32     visible tokens per slot incl. current
+                              (= positions + 1 for active slots)
+    Inactive (padding) slots must point their block table at page 0, the
+    trash page; the rust KV manager never hands out page 0 (proptest'd).
+    Returns (logits [B, V], k_pool', v_pool').
+    """
+    m, d = cfg.model, cfg.decode
+    b = d.batch
+    psz = d.page_size
+    pos = jnp.clip(positions, 0, m.max_seq - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]  # [B, d]
+
+    # Row in the flattened pool where each slot's current token lives.
+    page_idx = positions // psz
+    page = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+    rows = page * psz + positions % psz  # [B]
+
+    for li, lp in enumerate(params["layers"]):
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        q = _split_heads(h @ lp["wq"], m.n_heads, m.d_head)  # [B, H, Dh]
+        k = _split_heads(h @ lp["wk"], m.n_heads, m.d_head)
+        v = _split_heads(h @ lp["wv"], m.n_heads, m.d_head)
+        # scatter new KV rows directly into the [L, ...] pool: with donated
+        # inputs this chains into in-place updates (no per-layer stack —
+        # EXPERIMENTS.md §Perf)
+        k_pool = k_pool.at[li, rows].set(k)
+        v_pool = v_pool.at[li, rows].set(v)
+        att = paged_decode_attention(q, k_pool[li], v_pool[li], block_tables, seq_lens, psz)
+        x = x + att.reshape(b, m.d_model) @ lp["wo"]
+        h2 = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + jax.nn.relu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T  # [B, V]
+    return logits, k_pool, v_pool
+
+
+# ---------------------------------------------------------------------------
+# Length predictor (§3.3.2) — small classifier, fixed-size batch, no chunking
+# (the paper notes small models show no clear compute-saturate threshold).
+
+
+def predict_len(params, tokens, valid, cfg: Config = DEFAULT):
+    """Classify a prompt into a decode-length bucket.
+
+    tokens: [PL] i32 (padded); valid: scalar i32. Returns bucket logits [NB].
+    """
+    p = cfg.predictor
+    pl_len = p.max_prompt
+    x = params["tok_emb"][tokens] + params["pos_emb"][jnp.arange(pl_len)]
+    kj = jnp.arange(pl_len)
+    # Bidirectional over real tokens only.
+    mask = jnp.where(kj[None, :] < valid, 0.0, NEG_INF).astype(jnp.float32)
+
+    for lp in params["layers"]:
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        q = _split_heads(h @ lp["wq"], p.n_heads, p.d_head)
+        k = _split_heads(h @ lp["wk"], p.n_heads, p.d_head)
+        v = _split_heads(h @ lp["wv"], p.n_heads, p.d_head)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(p.d_head, jnp.float32))
+        s = jnp.einsum("chd,shd->hcs", q, k) * scale + mask[None]
+        w = jax.nn.softmax(s, axis=-1)
+        att = jnp.einsum("hcs,shd->chd", w, v).reshape(pl_len, p.d_model)
+        x = x + att @ lp["wo"]
+        h2 = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + jax.nn.relu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    keep = (kj < valid).astype(jnp.float32)[:, None]
+    pooled = (x * keep).sum(0) / jnp.maximum(keep.sum(), 1.0)
+    return pooled @ params["cls_w"] + params["cls_b"]
+
+
+# ---------------------------------------------------------------------------
+# Reference full-context forward (oracle for prefill/decode consistency)
+
+
+def full_forward_ref(params, tokens, cfg: Config = DEFAULT):
+    """Naive full-sequence causal forward; returns logits [T, V].
+
+    Used only by tests: prefill chunks + decode steps must reproduce the
+    same next-token logits this produces in one shot.
+    """
+    m = cfg.model
+    t = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][jnp.arange(t)]
+    causal = jnp.where(jnp.tril(jnp.ones((t, t), bool)), 0.0, NEG_INF)
+    for lp in params["layers"]:
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        q = _split_heads(h @ lp["wq"], m.n_heads, m.d_head)
+        k = _split_heads(h @ lp["wk"], m.n_heads, m.d_head)
+        v = _split_heads(h @ lp["wv"], m.n_heads, m.d_head)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(m.d_head, jnp.float32))
+        s = jnp.einsum("chd,shd->hcs", q, k) * scale + causal[None]
+        w = jax.nn.softmax(s, axis=-1)
+        att = jnp.einsum("hcs,shd->chd", w, v).reshape(t, m.d_model)
+        x = x + att @ lp["wo"]
+        h2 = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + jax.nn.relu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["tok_emb"].T

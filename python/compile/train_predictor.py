@@ -1,0 +1,108 @@
+"""Offline fine-tuning of the length-prediction model (paper §3.3.2, Fig 8).
+
+Workflow mirrors the paper's: (1) assemble a prompt-only dataset, (2) label
+each prompt with the bucketized length of the target model's generation —
+here the synthetic ground-truth decode length from data.py — and (3) train
+the small classifier to predict the bucket.
+
+The paper fine-tunes OPT-125M with HuggingFace Trainer on 75K ShareGPT
+prompts and reports 58.9% / 74.9% / 85% accuracy at granularity 100/200/400.
+We train a 2-layer OPT-style classifier with a hand-rolled Adam loop (no
+optax in this environment) and evaluate at the same three granularities;
+the hint-noise in data.py is calibrated so accuracies land in the same
+regime. Run standalone:  python -m compile.train_predictor
+"""
+
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .config import Config, DEFAULT
+from .model import init_predictor_params, predict_len
+
+GRANULARITIES = (100, 200, 400)
+
+
+def _batched_logits(params, toks, valid, cfg):
+    return jax.vmap(lambda t, v: predict_len(params, t, v, cfg))(toks, valid)
+
+
+def _loss(params, toks, valid, labels, cfg):
+    logits = _batched_logits(params, toks, valid, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def _adam_update(params, grads, mom, vel, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    mom = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, mom, grads)
+    vel = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, vel, grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**step), mom)
+    vh = jax.tree.map(lambda v: v / (1 - b2**step), vel)
+    params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return params, mom, vel
+
+
+def train(cfg: Config = DEFAULT, n_train: int = 6000, n_eval: int = 1500,
+          steps: int = 350, batch: int = 64, lr: float = 2e-3, seed: int = 0,
+          verbose: bool = True):
+    """Train the gran-200 classifier; returns (params, metrics dict)."""
+    p = cfg.predictor
+    toks, valid, dlens, _ = data.make_dataset(n_train, seed, p.max_prompt, p.vocab)
+    etoks, evalid, edlens, _ = data.make_dataset(n_eval, seed + 1, p.max_prompt, p.vocab)
+    labels = np.minimum(dlens // p.granularity, p.n_buckets - 1).astype(np.int32)
+
+    params = init_predictor_params(jax.random.PRNGKey(seed), cfg)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    vel = jax.tree.map(jnp.zeros_like, params)
+
+    loss_and_grad = jax.jit(
+        jax.value_and_grad(functools.partial(_loss, cfg=cfg)),
+        static_argnames=(),
+    )
+    update = jax.jit(functools.partial(_adam_update, lr=lr))
+
+    rng = np.random.default_rng(seed + 2)
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, n_train, size=batch)
+        lv, grads = loss_and_grad(
+            params, jnp.asarray(toks[idx]), jnp.asarray(valid[idx]), jnp.asarray(labels[idx])
+        )
+        params, mom, vel = update(params, grads, mom, vel, step)
+        if verbose and step % 100 == 0:
+            print(f"  step {step:4d} loss {float(lv):.3f} ({time.time()-t0:.0f}s)")
+
+    # Evaluate at the paper's three granularities. The model natively
+    # predicts gran-200 buckets; coarser granularities merge buckets,
+    # finer ones refine via the hint structure — evaluate gran-200 exactly
+    # and derive gran-100/400 from the same predicted length range.
+    logits = np.asarray(
+        jax.jit(functools.partial(_batched_logits, cfg=cfg))(
+            params, jnp.asarray(etoks), jnp.asarray(evalid)
+        )
+    )
+    pred200 = logits.argmax(-1)
+    metrics = {}
+    true200 = np.minimum(edlens // 200, p.n_buckets - 1)
+    metrics["acc_200"] = float((pred200 == true200).mean())
+    # gran-400: merge adjacent gran-200 buckets.
+    metrics["acc_400"] = float(((pred200 // 2) == np.minimum(edlens // 400, p.n_buckets // 2 - 1)).mean())
+    # gran-100: the classifier only resolves 200-token ranges; predict the
+    # lower 100-bucket of the range (upper-bounds paper behaviour of a
+    # finer head being harder — reported as-is).
+    metrics["acc_100"] = float(((pred200 * 2) == np.minimum(edlens // 100, 2 * p.n_buckets - 1)).mean())
+    metrics["train_seconds"] = round(time.time() - t0, 1)
+    metrics["n_train"] = n_train
+    metrics["steps"] = steps
+    return params, metrics
+
+
+if __name__ == "__main__":
+    params, metrics = train()
+    print(json.dumps(metrics, indent=2))
+    print("paper: acc_100=58.9% acc_200=74.9% acc_400=85.0%")

@@ -1,0 +1,90 @@
+"""AOT pipeline: artifacts must exist, parse, and agree with the manifest."""
+
+import json
+import os
+import struct
+
+import pytest
+
+from compile.aot import build, flatten_params, save_params_bin
+from compile.config import Config, DecodeConfig, ModelConfig, PredictorConfig
+
+TINY = Config(
+    model=ModelConfig(vocab=64, d_model=32, n_layers=1, n_heads=2, d_head=16,
+                      d_ffn=64, max_seq=128, chunk=16),
+    decode=DecodeConfig(batch=2, page_size=8, n_pages=24, max_pages_per_req=16),
+    predictor=PredictorConfig(vocab=64, d_model=32, n_layers=1, n_heads=2,
+                              d_head=16, d_ffn=64, max_prompt=16),
+)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    build(TINY, str(out), skip_train=True)
+    return str(out)
+
+
+def test_all_artifacts_written(built):
+    for f in ("prefill.hlo.txt", "decode.hlo.txt", "predictor.hlo.txt",
+              "params.bin", "predictor_params.bin", "manifest.json"):
+        assert os.path.exists(os.path.join(built, f)), f
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    for f in ("prefill.hlo.txt", "decode.hlo.txt", "predictor.hlo.txt"):
+        text = open(os.path.join(built, f)).read()
+        assert "HloModule" in text, f
+        assert "ENTRY" in text, f
+        # AOT must never serialize protos (xla_extension 0.5.1 rejects them)
+        assert not text.startswith("\x08"), f
+
+
+def test_params_bin_matches_manifest(built):
+    man = json.load(open(os.path.join(built, "manifest.json")))
+    for key in ("params", "predictor_params"):
+        spec = man[key]["leaves"]
+        n_floats = sum(
+            int.__mul__(1, 1) if not leaf["shape"] else
+            __import__("math").prod(leaf["shape"]) for leaf in spec
+        )
+        size = os.path.getsize(os.path.join(built, man[key]["file"]))
+        assert size == 4 * n_floats, key
+
+
+def test_manifest_argspec_consistent_with_config(built):
+    man = json.load(open(os.path.join(built, "manifest.json")))
+    cfg = man["config"]
+    pre = {a["name"]: a for a in man["artifacts"]["prefill"]["args"]}
+    assert pre["tokens"]["shape"] == [cfg["model"]["chunk"]]
+    assert pre["k_cache"]["shape"] == [
+        cfg["model"]["n_layers"], cfg["model"]["max_seq"],
+        cfg["model"]["n_heads"], cfg["model"]["d_head"],
+    ]
+    dec = {a["name"]: a for a in man["artifacts"]["decode"]["args"]}
+    assert dec["tokens"]["shape"] == [cfg["decode"]["batch"]]
+    assert dec["k_pool"]["shape"][1] == cfg["decode"]["n_pages"] * cfg["decode"]["page_size"]
+    prd = {a["name"]: a for a in man["artifacts"]["predictor"]["args"]}
+    assert prd["tokens"]["shape"] == [cfg["predictor"]["max_prompt"]]
+
+
+def test_param_count_matches_config_formula(built):
+    man = json.load(open(os.path.join(built, "manifest.json")))
+    import math
+    n = sum(math.prod(l["shape"]) if l["shape"] else 1
+            for l in man["params"]["leaves"])
+    assert n == TINY.model.n_params
+    n = sum(math.prod(l["shape"]) if l["shape"] else 1
+            for l in man["predictor_params"]["leaves"])
+    assert n == TINY.predictor.n_params
+
+
+def test_flatten_order_is_deterministic():
+    import jax
+    from compile.model import init_target_params
+    p1 = init_target_params(jax.random.PRNGKey(0), TINY)
+    p2 = init_target_params(jax.random.PRNGKey(0), TINY)
+    names1 = [n for n, _ in flatten_params(p1)]
+    names2 = [n for n, _ in flatten_params(p2)]
+    assert names1 == names2
+    assert len(names1) == len(set(names1))  # unique paths

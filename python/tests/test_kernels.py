@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and dtypes; fixed-seed cases pin the exact
+configurations the AOT artifacts use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.chunked_prefill import (
+    BK,
+    causal_chunk_mask,
+    chunked_prefill_attention,
+)
+from compile.kernels.paged_decode import paged_decode_attention
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 5e-2}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------- prefill
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.sampled_from([4, 16, 64]),
+    h=st.sampled_from([1, 2, 8]),
+    dh=st.sampled_from([8, 32]),
+    s_blocks=st.integers(1, 4),
+    start_frac=st.floats(0.0, 0.9),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_prefill_matches_ref(c, h, dh, s_blocks, start_frac, dtype, seed):
+    s = s_blocks * BK
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (c, h, dh), dtype)
+    k = _rand(rng, (s, h, dh), dtype)
+    v = _rand(rng, (s, h, dh), dtype)
+    start = min(int(start_frac * s), s - c)
+    valid = rng.integers(1, c + 1)
+    mask = causal_chunk_mask(start, valid, c, s, dtype=dtype)
+    got = chunked_prefill_attention(q, k, v, mask)
+    want = ref.ref_chunked_prefill_attention(q, k, v, mask)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_chunked_prefill_aot_shape():
+    """The exact shape the prefill artifact uses (C=64, H=8, Dh=32, S=512)."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (64, 8, 32), jnp.float32)
+    k = _rand(rng, (512, 8, 32), jnp.float32)
+    v = _rand(rng, (512, 8, 32), jnp.float32)
+    mask = causal_chunk_mask(128, 64, 64, 512)
+    got = chunked_prefill_attention(q, k, v, mask)
+    want = ref.ref_chunked_prefill_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_prefill_rejects_unaligned_kv():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (8, 1, 8), jnp.float32)
+    k = _rand(rng, (100, 1, 8), jnp.float32)  # not a multiple of BK
+    with pytest.raises(AssertionError):
+        chunked_prefill_attention(q, k, k, causal_chunk_mask(0, 8, 8, 100))
+
+
+def test_causal_chunk_mask_semantics():
+    m = np.asarray(causal_chunk_mask(start=4, valid=2, chunk=3, max_seq=8))
+    # query i (global 4+i) sees keys j <= 4+i
+    for i in range(3):
+        for j in range(8):
+            assert (m[i, j] == 0.0) == (j <= 4 + i), (i, j)
+
+
+def test_pad_queries_do_not_affect_valid_rows():
+    """Pad tail contents must not change valid-query outputs."""
+    rng = np.random.default_rng(3)
+    c, h, dh, s = 16, 2, 8, 128
+    k = _rand(rng, (s, h, dh), jnp.float32)
+    v = _rand(rng, (s, h, dh), jnp.float32)
+    q1 = np.asarray(_rand(rng, (c, h, dh), jnp.float32))
+    q2 = q1.copy()
+    valid = 5
+    q2[valid:] = rng.normal(size=(c - valid, h, dh))  # different pad garbage
+    mask = causal_chunk_mask(0, valid, c, s)
+    o1 = np.asarray(chunked_prefill_attention(jnp.asarray(q1), k, v, mask))
+    o2 = np.asarray(chunked_prefill_attention(jnp.asarray(q2), k, v, mask))
+    np.testing.assert_allclose(o1[:valid], o2[:valid], atol=1e-6)
+
+
+# ----------------------------------------------------------------- decode
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    h=st.sampled_from([1, 4]),
+    dh=st.sampled_from([8, 32]),
+    psz=st.sampled_from([8, 16]),
+    n_pages=st.sampled_from([8, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_decode_matches_ref(b, h, dh, psz, n_pages, dtype, seed):
+    rng = np.random.default_rng(seed)
+    max_pages = n_pages // 2
+    q = _rand(rng, (b, h, dh), dtype)
+    kp = _rand(rng, (n_pages * psz, h, dh), dtype)
+    vp = _rand(rng, (n_pages * psz, h, dh), dtype)
+    bt = jnp.asarray(rng.integers(0, n_pages, size=(b, max_pages)), jnp.int32)
+    sl = jnp.asarray(rng.integers(1, max_pages * psz + 1, size=(b,)), jnp.int32)
+    got = paged_decode_attention(q, kp, vp, bt, sl, psz)
+    want = ref.ref_paged_decode_attention(q, kp, vp, bt, sl, psz)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_paged_decode_aot_shape():
+    """The exact shape the decode artifact uses (B=8, psz=16, P=288)."""
+    rng = np.random.default_rng(0)
+    b, h, dh, psz, p, maxp = 8, 8, 32, 16, 288, 32
+    q = _rand(rng, (b, h, dh), jnp.float32)
+    kp = _rand(rng, (p * psz, h, dh), jnp.float32)
+    vp = _rand(rng, (p * psz, h, dh), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, p, size=(b, maxp)), jnp.int32)
+    sl = jnp.asarray(rng.integers(1, maxp * psz, size=(b,)), jnp.int32)
+    got = paged_decode_attention(q, kp, vp, bt, sl, psz)
+    want = ref.ref_paged_decode_attention(q, kp, vp, bt, sl, psz)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_only_visible_tokens_matter():
+    """Rows beyond seq_len (and pages beyond the table) must not leak."""
+    rng = np.random.default_rng(7)
+    b, h, dh, psz, n_pages, maxp = 1, 2, 8, 8, 8, 4
+    q = _rand(rng, (b, h, dh), jnp.float32)
+    kp1 = np.asarray(_rand(rng, (n_pages * psz, h, dh), jnp.float32))
+    vp1 = np.asarray(_rand(rng, (n_pages * psz, h, dh), jnp.float32))
+    bt = np.zeros((b, maxp), np.int32)
+    bt[0] = [2, 3, 0, 0]
+    sl = jnp.asarray([11], jnp.int32)  # 8 rows of page 2 + 3 rows of page 3
+    o1 = np.asarray(paged_decode_attention(q, jnp.asarray(kp1), jnp.asarray(vp1), jnp.asarray(bt), sl, psz))
+    kp2, vp2 = kp1.copy(), vp1.copy()
+    kp2[3 * psz + 3 :] = 99.0  # beyond visible rows of page 3
+    vp2[3 * psz + 3 :] = -99.0
+    kp2[: 2 * psz] = 7.0  # pages not referenced
+    o2 = np.asarray(paged_decode_attention(q, jnp.asarray(kp2), jnp.asarray(vp2), jnp.asarray(bt), sl, psz))
+    np.testing.assert_allclose(o1, o2, atol=1e-6)
+
+
+def test_paged_decode_single_token():
+    """seq_len == 1: output must equal the single visible value row."""
+    rng = np.random.default_rng(9)
+    b, h, dh, psz = 1, 1, 4, 8
+    q = _rand(rng, (b, h, dh), jnp.float32)
+    kp = _rand(rng, (4 * psz, h, dh), jnp.float32)
+    vp = _rand(rng, (4 * psz, h, dh), jnp.float32)
+    bt = jnp.asarray([[2, 0]], jnp.int32)
+    sl = jnp.asarray([1], jnp.int32)
+    out = np.asarray(paged_decode_attention(q, kp, vp, bt, sl, psz))
+    np.testing.assert_allclose(out[0, 0], np.asarray(vp)[2 * psz, 0], atol=1e-6)

@@ -1,0 +1,176 @@
+"""L2 correctness: the chunked-prefill + paged-decode pipeline must
+reproduce the one-shot full-context forward (full_forward_ref) exactly —
+this is the end-to-end numerical contract the rust runtime relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.config import Config, DecodeConfig, ModelConfig, PredictorConfig
+
+SMALL = Config(
+    model=ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_head=16,
+                      d_ffn=64, max_seq=128, chunk=16),
+    decode=DecodeConfig(batch=2, page_size=8, n_pages=40, max_pages_per_req=16),
+    predictor=PredictorConfig(vocab=64, d_model=32, n_layers=1, n_heads=2,
+                              d_head=16, d_ffn=64, max_prompt=16),
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_target_params(jax.random.PRNGKey(0), SMALL)
+
+
+def run_chunked_prefill(params, toks, cfg):
+    m = cfg.model
+    k = jnp.zeros((m.n_layers, m.max_seq, m.n_heads, m.d_head), jnp.float32)
+    v = jnp.zeros_like(k)
+    start, last = 0, None
+    while start < len(toks):
+        valid = min(m.chunk, len(toks) - start)
+        buf = np.zeros(m.chunk, np.int32)
+        buf[:valid] = toks[start : start + valid]
+        last, k, v = M.prefill_segment(params, jnp.asarray(buf), start, valid, k, v, cfg)
+        start += valid
+    return last, k, v
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(1, 100), seed=st.integers(0, 2**31 - 1))
+def test_chunked_prefill_matches_full_forward(t, seed):
+    params = M.init_target_params(jax.random.PRNGKey(0), SMALL)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, SMALL.model.vocab, size=t).astype(np.int32)
+    last, _, _ = run_chunked_prefill(params, toks, SMALL)
+    want = M.full_forward_ref(params, jnp.asarray(toks), SMALL)[-1]
+    np.testing.assert_allclose(np.asarray(last), np.asarray(want), atol=5e-5, rtol=5e-4)
+
+
+def test_prefill_pad_tokens_do_not_change_output(params):
+    """Garbage in the pad tail of the final chunk must not matter."""
+    toks = np.arange(1, 20, dtype=np.int32) % SMALL.model.vocab  # 19 tokens → pad 13
+    m = SMALL.model
+    k = jnp.zeros((m.n_layers, m.max_seq, m.n_heads, m.d_head), jnp.float32)
+    v = jnp.zeros_like(k)
+    outs = []
+    for pad_val in (0, 7):
+        buf = np.full(m.chunk, pad_val, np.int32)
+        buf[:16] = toks[:16]
+        _, k1, v1 = M.prefill_segment(params, jnp.asarray(buf), 0, 16, k, v, SMALL)
+        buf2 = np.full(m.chunk, pad_val, np.int32)
+        buf2[:3] = toks[16:]
+        last, _, _ = M.prefill_segment(params, jnp.asarray(buf2), 16, 3, k1, v1, SMALL)
+        outs.append(np.asarray(last))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+
+
+def contiguous_to_paged(k_cache, v_cache, t, pages, pool_shape, psz):
+    """Mimic the rust-side KV transfer: contiguous rows → pool pages."""
+    k_pool = jnp.zeros(pool_shape, jnp.float32)
+    v_pool = jnp.zeros(pool_shape, jnp.float32)
+    for i, pg in enumerate(pages):
+        lo, hi = i * psz, min((i + 1) * psz, t)
+        if lo >= t:
+            break
+        k_pool = k_pool.at[:, pg * psz : pg * psz + hi - lo].set(k_cache[:, lo:hi])
+        v_pool = v_pool.at[:, pg * psz : pg * psz + hi - lo].set(v_cache[:, lo:hi])
+    return k_pool, v_pool
+
+
+def test_decode_after_transfer_matches_full_forward(params):
+    """prefill → transfer → N decode steps == one-shot forward, greedy."""
+    cfg = SMALL
+    m, d = cfg.model, cfg.decode
+    rng = np.random.default_rng(5)
+    t = 21
+    toks = rng.integers(0, m.vocab, size=t).astype(np.int32)
+    last, kc, vc = run_chunked_prefill(params, toks, cfg)
+
+    psz = d.page_size
+    pool_shape = (m.n_layers, d.n_pages * psz, m.n_heads, m.d_head)
+    pages = list(range(1, 9))
+    kp, vp = contiguous_to_paged(kc, vc, t, pages, pool_shape, psz)
+    bt = np.zeros((d.batch, d.max_pages_per_req), np.int32)
+    bt[0, : len(pages)] = pages
+
+    cur = int(jnp.argmax(last))
+    full = list(toks)
+    for step in range(4):
+        full.append(cur)
+        pos = t + step
+        logits, kp, vp = M.decode_step(
+            params,
+            jnp.asarray([cur, 0], jnp.int32),
+            jnp.asarray([pos, 0], jnp.int32),
+            kp, vp, jnp.asarray(bt),
+            jnp.asarray([pos + 1, 1], jnp.int32),
+            cfg,
+        )
+        want = M.full_forward_ref(params, jnp.asarray(full, jnp.int32), cfg)[-1]
+        np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(want),
+                                   atol=5e-5, rtol=5e-4)
+        cur = int(jnp.argmax(logits[0]))
+
+
+def test_decode_batch_isolation(params):
+    """Two active slots with disjoint pages must not influence each other."""
+    cfg = SMALL
+    m, d = cfg.model, cfg.decode
+    psz = d.page_size
+    pool_shape = (m.n_layers, d.n_pages * psz, m.n_heads, m.d_head)
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, m.vocab, size=9).astype(np.int32)
+    _, kc, vc = run_chunked_prefill(params, toks, cfg)
+    kp, vp = contiguous_to_paged(kc, vc, 9, [1, 2], pool_shape, psz)
+
+    bt_solo = np.zeros((d.batch, d.max_pages_per_req), np.int32)
+    bt_solo[0, :2] = [1, 2]
+    solo, _, _ = M.decode_step(
+        params,
+        jnp.asarray([5, 0], jnp.int32), jnp.asarray([9, 0], jnp.int32),
+        kp, vp, jnp.asarray(bt_solo), jnp.asarray([10, 1], jnp.int32), cfg,
+    )
+
+    # Same pool, but slot 1 now holds a *different* request on pages 5,6.
+    toks2 = rng.integers(0, m.vocab, size=12).astype(np.int32)
+    _, kc2, vc2 = run_chunked_prefill(params, toks2, cfg)
+    kp2, vp2 = contiguous_to_paged(kc2, vc2, 12, [5, 6], pool_shape, psz)
+    kp_both = kp + kp2  # disjoint pages → pure union
+    vp_both = vp + vp2
+    bt_both = bt_solo.copy()
+    bt_both[1, :2] = [5, 6]
+    both, _, _ = M.decode_step(
+        params,
+        jnp.asarray([5, 3], jnp.int32), jnp.asarray([9, 12], jnp.int32),
+        kp_both, vp_both, jnp.asarray(bt_both), jnp.asarray([10, 13], jnp.int32), cfg,
+    )
+    np.testing.assert_allclose(np.asarray(both[0]), np.asarray(solo[0]), atol=1e-5)
+
+
+def test_predictor_shapes_and_determinism():
+    cfg = SMALL
+    p = cfg.predictor
+    params = M.init_predictor_params(jax.random.PRNGKey(1), cfg)
+    toks = jnp.asarray(np.arange(p.max_prompt) % p.vocab, jnp.int32)
+    out1 = M.predict_len(params, toks, 10, cfg)
+    out2 = M.predict_len(params, toks, 10, cfg)
+    assert out1.shape == (p.n_buckets,)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_predictor_ignores_padding():
+    cfg = SMALL
+    p = cfg.predictor
+    params = M.init_predictor_params(jax.random.PRNGKey(1), cfg)
+    base = np.zeros(p.max_prompt, np.int32)
+    base[:6] = [1, 17, 40, 41, 42, 43]
+    alt = base.copy()
+    alt[6:] = 9  # different pad garbage
+    o1 = M.predict_len(params, jnp.asarray(base), 6, cfg)
+    o2 = M.predict_len(params, jnp.asarray(alt), 6, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)

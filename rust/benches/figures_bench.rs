@@ -1,0 +1,117 @@
+//! End-to-end benches, one per paper experiment: measures the wall time of
+//! regenerating each figure's workload run and prints the figure's key
+//! metric next to it, so `cargo bench` covers every table/figure the
+//! paper reports (DESIGN.md experiment index).
+
+use std::time::Instant;
+
+use tetri_infer::baseline::{run_baseline, BaselineConfig};
+use tetri_infer::coordinator::{run_cluster, ClusterConfig, PredictorMode};
+use tetri_infer::costmodel::CostModel;
+use tetri_infer::decode::DecodePolicy;
+use tetri_infer::prefill::{DispatchPolicy, PrefillPolicy};
+use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+
+const SEED: u64 = 42;
+
+fn timed<T>(name: &str, metric: impl FnOnce() -> (T, String)) {
+    let t = Instant::now();
+    let (_, desc) = metric();
+    println!("{name:<28} {:>8.1} ms   {desc}", t.elapsed().as_secs_f64() * 1e3);
+}
+
+fn e2e(kind: WorkloadKind) -> (f64, String) {
+    let trace = WorkloadGen::new(SEED).trace(kind, 128, 8.0, 0);
+    let base = run_baseline(BaselineConfig { seed: SEED, ..Default::default() }, trace.clone());
+    let tetri = run_cluster(ClusterConfig { seed: SEED, ..ClusterConfig::ts_roce(1, 1) }, trace);
+    let p = tetri.perf_per_dollar_vs(&base);
+    (
+        p,
+        format!(
+            "TTFT {:+.0}%  JCT {:+.0}%  perf/$ {p:.2}x",
+            (tetri.ttft_summary().mean / base.ttft_summary().mean - 1.0) * 100.0,
+            (tetri.jct_summary().mean / base.jct_summary().mean - 1.0) * 100.0
+        ),
+    )
+}
+
+fn main() {
+    println!("== figure-regeneration benches ==");
+    let m = CostModel::default();
+
+    timed("fig2 prefill saturation", || {
+        let t = m.prefill_throughput(512);
+        (t, format!("thpt@512 = {t:.0} tok/s"))
+    });
+    timed("fig3 prefill interference", || {
+        let x = m.prefill_iter_us(18 + 7 * 512) as f64 / m.prefill_iter_us(18) as f64;
+        (x, format!("LP+7HP slowdown = {x:.1}x"))
+    });
+    timed("fig4 mixed interference", || {
+        let x = m.mixed_iter_us(512, 8, 800) as f64 / m.mixed_iter_us(0, 8, 800) as f64;
+        (x, format!("decode slowdown w/ 1 HP = {x:.1}x"))
+    });
+    timed("fig5 decode interference", || {
+        let x = m.decode_iter_us(128, 64 * 60 + 64 * 512) as f64 / m.decode_iter_us(128, 128 * 60) as f64;
+        (x, format!("half-heavy latency = {x:+.0}%", x = (x - 1.0) * 100.0))
+    });
+
+    timed("fig11 LPLD e2e", || e2e(WorkloadKind::Lpld));
+    timed("fig12 LPHD e2e", || e2e(WorkloadKind::Lphd));
+    timed("fig13 HPLD e2e", || e2e(WorkloadKind::Hpld));
+    timed("fig14 HPHD e2e", || e2e(WorkloadKind::Hphd));
+    timed("fig15 Mixed e2e", || e2e(WorkloadKind::Mixed));
+
+    timed("fig16 scheduler policies", || {
+        let mk = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 256, 16.0, 0);
+        let base = run_baseline(BaselineConfig { seed: SEED, ..Default::default() }, mk());
+        let fcfs = run_cluster(
+            ClusterConfig { prefill_policy: PrefillPolicy::Fcfs, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
+            mk(),
+        );
+        let x = fcfs.ttft_summary().mean / base.ttft_summary().mean - 1.0;
+        (x, format!("chunked FCFS vs vLLM = {:+.0}%", x * 100.0))
+    });
+
+    timed("fig17 predictor co-run", || {
+        let mk = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 256, 32.0, 0);
+        let alone = run_cluster(
+            ClusterConfig { predictor_mode: PredictorMode::Disabled, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
+            mk(),
+        );
+        let par = run_cluster(
+            ClusterConfig { predictor_mode: PredictorMode::Parallel, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
+            mk(),
+        );
+        let x = par.ttft_summary().mean / alone.ttft_summary().mean - 1.0;
+        (x, format!("parallel-mode overhead = {:+.0}%", x * 100.0))
+    });
+
+    timed("fig18 intra-decode policies", || {
+        let mk = || WorkloadGen::new(SEED).trace(WorkloadKind::Lphd, 160, 10.0, 0);
+        let greedy = run_cluster(
+            ClusterConfig { decode_policy: DecodePolicy::Greedy, predictor_accuracy: 1.0, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
+            mk(),
+        );
+        let rd = run_cluster(
+            ClusterConfig { decode_policy: DecodePolicy::ReserveDynamic, predictor_accuracy: 1.0, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
+            mk(),
+        );
+        let x = rd.jct_summary().mean / greedy.jct_summary().mean - 1.0;
+        (x, format!("RD vs greedy (ideal acc) = {:+.0}%", x * 100.0))
+    });
+
+    timed("fig19 inter-decode balance", || {
+        let mk = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 128, 32.0, 0);
+        let po2 = run_cluster(
+            ClusterConfig { dispatch: DispatchPolicy::PowerOfTwo, seed: SEED, ..ClusterConfig::ts_roce(1, 4) },
+            mk(),
+        );
+        let imb = run_cluster(
+            ClusterConfig { dispatch: DispatchPolicy::Imbalance, seed: SEED, ..ClusterConfig::ts_roce(1, 4) },
+            mk(),
+        );
+        let x = po2.makespan_us as f64 / imb.makespan_us as f64 - 1.0;
+        (x, format!("po2 vs imbalance decode time = {:+.0}%", x * 100.0))
+    });
+}

@@ -1,0 +1,148 @@
+//! Microbenchmarks of the L3 hot paths (hand-rolled harness: the vendored
+//! environment has no criterion). Run with `cargo bench --offline`.
+//!
+//! These are the §Perf profiling base for EXPERIMENTS.md: the coordinator
+//! is the paper's contribution, so scheduling-decision throughput and DES
+//! event throughput are the headline numbers.
+
+use std::time::Instant;
+
+use tetri_infer::coordinator::{run_cluster, ClusterConfig};
+use tetri_infer::decode::{DecodePolicy, DecodeScheduler};
+use tetri_infer::kvcache::PagedKvCache;
+use tetri_infer::prefill::{choose, Chunker, DecodeLoad, DispatchPolicy, PrefillPolicy, PrefillScheduler};
+use tetri_infer::sim::{Event, EventQueue};
+use tetri_infer::types::Request;
+use tetri_infer::util::Pcg;
+use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+
+/// Time `f` (which performs `iters` inner operations), repeated `reps`
+/// times; prints the best rep (ns/op and Mops/s).
+fn bench(name: &str, iters: u64, reps: usize, mut f: impl FnMut()) {
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt);
+    }
+    let ns = best * 1e9 / iters as f64;
+    println!("{name:<40} {ns:>10.1} ns/op {:>10.2} Mops/s", 1e3 / ns);
+}
+
+fn req(id: u64, plen: u32, dlen: u32) -> Request {
+    Request {
+        id,
+        task: tetri_infer::types::TaskType::Chat,
+        arrival: 0,
+        prompt_len: plen,
+        decode_len: dlen,
+        predicted: None,
+    }
+}
+
+fn main() {
+    println!("== L3 microbenches (best of 5) ==");
+
+    // ---- prefill scheduler: push+pop under SJF sorting
+    let n = 100_000u64;
+    bench("prefill_scheduler sjf push+pop", n, 5, || {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Sjf, 16);
+        for i in 0..n {
+            s.push(req(i, (i % 997) as u32 + 1, 10));
+        }
+        while s.pop().is_some() {}
+    });
+
+    // ---- chunker: slice/merge a 100k-request stream
+    bench("chunker slice+merge", n, 5, || {
+        let mut c = Chunker::new(512);
+        let mut emitted = 0u64;
+        for i in 0..n {
+            c.admit(req(i, (i % 997) as u32 + 1, 10));
+            while let Some(ch) = c.next_chunk() {
+                emitted += ch.tokens as u64;
+            }
+        }
+        std::hint::black_box(emitted);
+    });
+
+    // ---- dispatcher: power-of-two decisions over 64 instances
+    let loads: Vec<DecodeLoad> = (0..64)
+        .map(|i| DecodeLoad {
+            instance: i,
+            free_kv_tokens: 10_000 + (i as u64 * 13 % 7_000),
+            n_heavy: (i % 5) as u32,
+            n_light: (i % 9) as u32,
+            queue_len: 0,
+        })
+        .collect();
+    let mut rng = Pcg::new(1);
+    bench("dispatcher power-of-two choose", n, 5, || {
+        for i in 0..n {
+            std::hint::black_box(choose(
+                &loads,
+                (i % 512) as u32,
+                None,
+                200,
+                DispatchPolicy::PowerOfTwo,
+                &mut rng,
+            ));
+        }
+    });
+
+    // ---- paged KV: alloc/append/release cycle
+    bench("kvcache alloc+append+release", n, 5, || {
+        let mut kv = PagedKvCache::new(4096, 16);
+        for i in 0..n {
+            let id = i % 128;
+            if kv.contains(id) {
+                kv.release(id);
+            }
+            kv.alloc(id, (i % 500) as u32 + 1).unwrap();
+            kv.append_token(id).unwrap();
+        }
+    });
+
+    // ---- decode scheduler: admission + step over a 128-deep batch
+    bench("decode_scheduler admit+step (bs128)", 10_000, 5, || {
+        let mut s = DecodeScheduler::new(DecodePolicy::ReserveDynamic, 200, 128);
+        let mut kv = PagedKvCache::new(8192, 16);
+        for i in 0..256u64 {
+            s.push(req(i, 64, 40));
+        }
+        for _ in 0..10_000 / 128 {
+            s.admit(&mut kv);
+            s.step(&mut kv);
+        }
+    });
+
+    // ---- DES event queue
+    bench("event_queue schedule+pop", n, 5, || {
+        let mut q = EventQueue::new();
+        for i in 0..n {
+            q.schedule_at(i * 7 % 1000, Event::Arrival(i));
+        }
+        while q.pop().is_some() {}
+    });
+
+    // ---- end-to-end cluster sim throughput (requests/s of sim)
+    let trace = WorkloadGen::new(5).trace(WorkloadKind::Mixed, 512, 32.0, 0);
+    let mut out = 0u64;
+    let t = Instant::now();
+    let reps = 5;
+    for s in 0..reps {
+        let m = run_cluster(
+            ClusterConfig { seed: s as u64, ..ClusterConfig::ts_roce(2, 4) },
+            trace.clone(),
+        );
+        out += m.records.len() as u64;
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "{:<40} {:>10.1} ms/run {:>10.0} req/s-sim",
+        "cluster sim 512 reqs 2P+4D",
+        dt * 1e3 / reps as f64,
+        out as f64 / dt
+    );
+}

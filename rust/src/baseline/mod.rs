@@ -1,0 +1,321 @@
+//! Vanilla-vLLM baseline (§5: "vanilla vLLM tightly couples prefill and
+//! decode phases"): coupled instances run continuous batching where each
+//! iteration mixes (a) up to `prefill_batch` whole waiting prompts —
+//! fixed-batch prefill, no chunking — with (b) every running decode.
+//! Memory is paged (the paper adopted vLLM's paging for both systems) with
+//! greedy admission.
+//!
+//! This is the system whose interference §2.2 measures: one heavy prompt
+//! in an iteration stalls every co-running decode (Figure 4), and decode
+//! batches are packed without working-set awareness (Figure 5).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::costmodel::CostModel;
+use crate::decode::{DecodeJob, DecodePolicy, DecodeScheduler};
+use crate::kvcache::PagedKvCache;
+use crate::metrics::RunMetrics;
+use crate::sim::{Event, EventQueue};
+use crate::types::{ReqId, Request, RequestRecord, Us};
+
+#[derive(Clone, Debug)]
+pub struct BaselineConfig {
+    pub n_instances: usize,
+    /// Fixed prefill batch size (paper §5.2.1: vLLM's batch size = 16).
+    /// Fixed-batch mode *waits* until this many prompts are queued before
+    /// running a prefill iteration (they all complete together at the
+    /// iteration's end) — the behaviour Figure 16 compares chunking
+    /// against. Partial batches run only when the instance has nothing
+    /// else to do and no more arrivals can fill them.
+    pub prefill_batch: usize,
+    /// Decode batch cap. The paper's vanilla-vLLM setup uses a *fixed*
+    /// batch size of 16 for both phases (§5.2.1, and Figure 12 credits
+    /// TetriInfer's "variable decode batch size over vLLM's fixed batch
+    /// size"); TetriInfer's decode instances batch up to 128.
+    pub max_batch: u32,
+    pub cost: CostModel,
+    pub seed: u64,
+}
+
+impl Default for BaselineConfig {
+    fn default() -> Self {
+        BaselineConfig {
+            n_instances: 1,
+            prefill_batch: 16,
+            max_batch: 16,
+            cost: CostModel::default(),
+            seed: 0,
+        }
+    }
+}
+
+struct CoupledInst {
+    /// Arrived, not yet prefilled.
+    waiting: VecDeque<Request>,
+    /// Decode-side state (greedy admission = vLLM's policy). We reuse the
+    /// decode scheduler with jobs that were prefilled locally.
+    dec: DecodeScheduler,
+    kv: PagedKvCache,
+    busy: bool,
+    /// (prefilled this iteration, completed this iteration)
+    pending: (Vec<ReqId>, Vec<ReqId>),
+}
+
+pub struct BaselineCluster {
+    cfg: BaselineConfig,
+    queue: EventQueue,
+    insts: Vec<CoupledInst>,
+    requests: HashMap<ReqId, Request>,
+    first_token: HashMap<ReqId, Us>,
+    metrics: RunMetrics,
+    outstanding: usize,
+    /// Arrivals not yet delivered (partial prefill batches wait on these).
+    arrivals_pending: usize,
+}
+
+impl BaselineCluster {
+    pub fn new(cfg: BaselineConfig) -> Self {
+        let pages = (cfg.cost.kv_capacity_tokens() / 16) as u32;
+        let insts = (0..cfg.n_instances)
+            .map(|_| CoupledInst {
+                waiting: VecDeque::new(),
+                // residency is memory-bound, not batch-bound: the fixed
+                // batch caps the per-iteration *step window* (see
+                // try_start), not how many requests hold pages.
+                dec: DecodeScheduler::new(DecodePolicy::Greedy, 200, u32::MAX),
+                kv: PagedKvCache::new(pages.max(2), 16),
+                busy: false,
+                pending: (Vec::new(), Vec::new()),
+            })
+            .collect();
+        let n = cfg.n_instances;
+        BaselineCluster {
+            cfg,
+            queue: EventQueue::new(),
+            insts,
+            requests: HashMap::new(),
+            first_token: HashMap::new(),
+            metrics: RunMetrics {
+                busy_us: vec![0; n],
+                alive_us: vec![0; n],
+                decode_assign: vec![(0, 0); n],
+                ..Default::default()
+            },
+            outstanding: 0,
+            arrivals_pending: 0,
+        }
+    }
+
+    pub fn run(mut self, trace: Vec<Request>) -> RunMetrics {
+        self.outstanding = trace.len();
+        self.arrivals_pending = trace.len();
+        for r in trace {
+            self.queue.schedule_at(r.arrival, Event::Arrival(r.id));
+            self.requests.insert(r.id, r);
+        }
+        while self.outstanding > 0 {
+            let Some((_, ev)) = self.queue.pop() else {
+                panic!("baseline deadlock: {} outstanding", self.outstanding);
+            };
+            match ev {
+                Event::Arrival(id) => self.on_arrival(id),
+                Event::CoupledIterDone { instance } => self.on_iter_done(instance),
+                _ => unreachable!("unexpected event in baseline"),
+            }
+        }
+        self.metrics.makespan_us = self.queue.now();
+        for a in self.metrics.alive_us.iter_mut() {
+            *a = self.queue.now();
+        }
+        for inst in &self.insts {
+            self.metrics.swapped_tokens += inst.kv.swapped_out_tokens;
+        }
+        self.metrics
+    }
+
+    fn on_arrival(&mut self, id: ReqId) {
+        // Least-loaded coupled instance (waiting prompts + resident jobs).
+        let i = (0..self.insts.len())
+            .min_by_key(|&i| {
+                let inst = &self.insts[i];
+                inst.waiting.iter().map(|r| r.prompt_len as u64).sum::<u64>()
+                    + inst.dec.total_jobs() as u64 * 64
+            })
+            .unwrap();
+        let req = self.requests[&id].clone();
+        self.insts[i].waiting.push_back(req);
+        self.arrivals_pending -= 1;
+        if self.arrivals_pending == 0 {
+            // last arrival: partial batches may now run everywhere
+            for j in 0..self.insts.len() {
+                self.try_start(j);
+            }
+        } else {
+            self.try_start(i);
+        }
+    }
+
+    fn try_start(&mut self, i: usize) {
+        let cost = self.cfg.cost.clone();
+        let prefill_batch = self.cfg.prefill_batch;
+        // May a partial prefill batch run? Only when no future arrival
+        // could still fill it and the decode side gives us nothing to do.
+        let more_arrivals = self.arrivals_pending > 0;
+        let inst = &mut self.insts[i];
+        if inst.busy {
+            return;
+        }
+        // (a) fixed-batch prefill: wait for `prefill_batch` prompts, then
+        // prefill them all in one iteration (greedy memory admission).
+        let mut prefill_tokens = 0u32;
+        let mut prefilled = Vec::new();
+        let batch_ready = inst.waiting.len() >= prefill_batch
+            || (!inst.waiting.is_empty() && (!more_arrivals || inst.dec.total_jobs() == 0));
+        if batch_ready {
+            while prefilled.len() < prefill_batch {
+                let Some(r) = inst.waiting.front() else { break };
+                if !inst.kv.can_fit(r.id, r.prompt_len + 1) {
+                    break; // head-of-line block: vLLM stalls prefill on memory
+                }
+                let r = inst.waiting.pop_front().unwrap();
+                inst.kv.alloc(r.id, r.prompt_len + 1).expect("can_fit checked");
+                prefill_tokens += r.prompt_len;
+                prefilled.push(r);
+            }
+        }
+        // (b) decodes ride the same iteration, capped at the *fixed* batch
+        // size (FCFS window over resident jobs — vanilla vLLM semantics).
+        let paged_in = inst.dec.admit(&mut inst.kv);
+        let window = (self.cfg.max_batch as usize).min(inst.dec.running.len());
+        let batch = window as u32;
+        let kv_tokens: u64 =
+            inst.dec.running.iter().take(window).map(|j| j.kv_tokens() as u64).sum();
+        if prefilled.is_empty() && batch == 0 {
+            return;
+        }
+        let (done, swapped_out) = inst.dec.step_n(&mut inst.kv, window);
+        debug_assert!(inst.kv.check_invariants().is_ok());
+        let dur = cost.mixed_iter_us(prefill_tokens, batch, kv_tokens)
+            + cost.swap_us(swapped_out + paged_in_swapped(paged_in, &inst.dec));
+
+        // Prefilled requests become decode jobs at iteration end.
+        for r in &prefilled {
+            let mut job = DecodeJob::new(r.clone());
+            job.generated = 1;
+            // keep its pages: move ownership into the decode scheduler's
+            // bookkeeping (the table already exists in `kv`)
+            job.running = true;
+            inst.dec.running.push(job);
+        }
+        inst.pending = (
+            prefilled.iter().map(|r| r.id).collect(),
+            done.iter().map(|j| j.req.id).collect(),
+        );
+        inst.busy = true;
+        self.metrics.busy_us[i] += dur;
+        self.queue.schedule_in(dur, Event::CoupledIterDone { instance: i });
+    }
+
+    fn on_iter_done(&mut self, i: usize) {
+        let now = self.queue.now();
+        let (prefilled, done) = {
+            let inst = &mut self.insts[i];
+            inst.busy = false;
+            std::mem::take(&mut inst.pending)
+        };
+        for id in prefilled {
+            self.first_token.insert(id, now);
+            // single-token requests finish at prefill
+            if self.requests[&id].decode_len <= 1 {
+                let inst = &mut self.insts[i];
+                if let Some(pos) = inst.dec.running.iter().position(|j| j.req.id == id) {
+                    inst.dec.running.remove(pos);
+                    inst.kv.release(id);
+                }
+                self.finish(id, now);
+            }
+        }
+        for id in done {
+            self.finish(id, now);
+        }
+        self.try_start(i);
+    }
+
+    fn finish(&mut self, id: ReqId, now: Us) {
+        let req = &self.requests[&id];
+        let first = *self.first_token.get(&id).unwrap_or(&now);
+        self.metrics.records.push(RequestRecord {
+            id,
+            task: req.task,
+            prompt_len: req.prompt_len,
+            decode_len: req.decode_len,
+            arrival: req.arrival,
+            first_token: first,
+            finished: now,
+            predicted: None,
+        });
+        self.outstanding -= 1;
+    }
+}
+
+fn paged_in_swapped(paged_in: u64, dec: &DecodeScheduler) -> u64 {
+    if dec.running.iter().any(|j| j.swaps > 0) {
+        paged_in
+    } else {
+        0
+    }
+}
+
+pub fn run_baseline(cfg: BaselineConfig, trace: Vec<Request>) -> RunMetrics {
+    BaselineCluster::new(cfg).run(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{WorkloadGen, WorkloadKind};
+
+    #[test]
+    fn completes_every_request() {
+        let mut gen = WorkloadGen::new(1);
+        let trace = gen.trace(WorkloadKind::Mixed, 64, 20.0, 0);
+        let m = run_baseline(BaselineConfig::default(), trace);
+        assert_eq!(m.records.len(), 64);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mk = || {
+            let mut gen = WorkloadGen::new(2);
+            run_baseline(BaselineConfig::default(), gen.trace(WorkloadKind::Lpld, 32, 0.0, 0))
+        };
+        assert_eq!(mk().makespan_us, mk().makespan_us);
+    }
+
+    #[test]
+    fn heavy_prompts_inflate_corunning_decode_latency() {
+        // The §2.2.2 effect end-to-end: a stream of light decodes completes
+        // slower when heavy prompts keep arriving on the same instance.
+        let mut gen = WorkloadGen::new(3);
+        let mut light = gen.trace(WorkloadKind::Lpld, 32, 0.0, 0);
+        let light_only = run_baseline(BaselineConfig { n_instances: 1, ..Default::default() }, light.clone());
+        // add heavy-prefill requests arriving alongside
+        let heavy = gen.trace(WorkloadKind::Hpld, 16, 0.0, 0);
+        light.extend(heavy);
+        let mixed = run_baseline(BaselineConfig { n_instances: 1, ..Default::default() }, light);
+        let jct_light_only = light_only.jct_summary().mean;
+        let jct_mixed_lights: f64 = {
+            let xs: Vec<f64> = mixed
+                .records
+                .iter()
+                .filter(|r| r.prompt_len <= 512)
+                .map(|r| r.jct() as f64 / 1e3)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            jct_mixed_lights > jct_light_only * 1.3,
+            "light requests should suffer from heavy co-runners: {jct_light_only} vs {jct_mixed_lights}"
+        );
+    }
+}

@@ -1,0 +1,734 @@
+//! Discrete-event TetriInfer cluster: the paper's full pipeline —
+//!
+//!   arrival → global scheduler (least-load prefill routing, §3.2)
+//!           → prefill local scheduler (FCFS/SJF/LJF, §3.3.1)
+//!           → length predictor (parallel/sequential, §3.3.2)
+//!           → chunked prefill (fixed ChunkSize iterations, §3.3.3)
+//!           → dispatcher (power-of-two over broadcast loads, §3.3.4)
+//!           → KV transfer over the emulated fabric (Figure 9)
+//!           → decode local scheduler (greedy/reserve-*, §3.4)
+//!           → continuous-batching decode until completion
+//!
+//! plus the cluster monitor's periodic load broadcast and instance
+//! flipping (§3.5). Deterministic given (config, trace).
+
+use std::collections::HashMap;
+
+
+use crate::decode::{DecodeJob, DecodeScheduler};
+use crate::fabric::Fabric;
+use crate::kvcache::PagedKvCache;
+use crate::metrics::RunMetrics;
+use crate::predictor::{OraclePredictor, Predictor};
+use crate::prefill::{choose, Chunk, Chunker, DecodeLoad, PrefillScheduler};
+use crate::sim::{Event, EventQueue};
+use crate::types::{ReqId, Request, RequestRecord, Role, Us, HEAVY_DECODE_TOKENS};
+use crate::util::Pcg;
+
+use super::config::{ClusterConfig, PredictorMode};
+
+/// Predictions a single saturated chunk iteration can absorb in parallel
+/// mode (the predict model is ~10x faster than the target, §3.3.2).
+const PREDICTIONS_PER_CHUNK: u32 = 10;
+/// Main-LLM slowdown while co-running the predictor (Figure 17: ~10%).
+const PARALLEL_PREDICT_OVERHEAD: f64 = 0.10;
+
+struct PrefillInst {
+    sched: PrefillScheduler,
+    chunker: Chunker,
+    busy: bool,
+    /// Chunk currently executing (applied at PrefillIterDone).
+    current: Option<Chunk>,
+    /// KV tokens resident for prefilled-but-untransferred requests plus
+    /// in-flight chunked requests (backpressure input).
+    resident_kv: u64,
+    /// Predictions waiting to ride the accelerator (parallel mode).
+    pending_pred: u32,
+    last_active: Us,
+}
+
+struct DecodeInst {
+    sched: DecodeScheduler,
+    kv: PagedKvCache,
+    busy: bool,
+    /// Completions computed at iteration start, recorded at iteration end.
+    pending_done: Vec<ReqId>,
+    last_active: Us,
+}
+
+enum InstState {
+    Prefill(PrefillInst),
+    Decode(DecodeInst),
+    Flipping { to: Role },
+}
+
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    queue: EventQueue,
+    insts: Vec<InstState>,
+    /// Request book: everything the global scheduler has seen.
+    requests: HashMap<ReqId, Request>,
+    first_token: HashMap<ReqId, Us>,
+    /// Last monitor broadcast of decode loads (stale by design, §3.2).
+    broadcast: Vec<DecodeLoad>,
+    /// What this coordinator's dispatchers sent since the last broadcast:
+    /// (heavy, light, kv footprint) per instance. A real dispatcher knows
+    /// its own recent sends even though the broadcast is stale.
+    since_tick: Vec<(u32, u32, u64)>,
+    /// Scratch buffer for merged load views (avoids an allocation per
+    /// dispatch on the hot path — see EXPERIMENTS.md §Perf).
+    loads_scratch: Vec<DecodeLoad>,
+    predictor: OraclePredictor,
+    fabric: Fabric,
+    rng: Pcg,
+    pub metrics: RunMetrics,
+    /// Prefilled requests awaiting a dispatch target (mid-flip windows).
+    pending_dispatch: Vec<ReqId>,
+    /// Requests remaining (termination condition).
+    outstanding: usize,
+    pub total_chunks: u64,
+    pub total_pad_tokens: u64,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        let mut insts = Vec::new();
+        for _ in 0..cfg.n_prefill {
+            insts.push(InstState::Prefill(PrefillInst {
+                sched: PrefillScheduler::new(cfg.prefill_policy, cfg.sched_batch),
+                chunker: new_chunker(&cfg),
+                busy: false,
+                current: None,
+                resident_kv: 0,
+                pending_pred: 0,
+                last_active: 0,
+            }));
+        }
+        for _ in 0..cfg.n_decode {
+            insts.push(InstState::Decode(new_decode_inst(&cfg)));
+        }
+        let n = insts.len();
+        let predictor = OraclePredictor::new(
+            cfg.granularity,
+            cfg.n_buckets,
+            if cfg.predictor_mode == PredictorMode::Disabled { 0.0 } else { cfg.predictor_accuracy },
+            cfg.seed ^ 0xabcd,
+        );
+        let mut fabric = Fabric::new(cfg.link.clone(), cfg.cost.kv_bytes_per_tok);
+        fabric.granularity = cfg.transfer_granularity;
+        let rng = Pcg::with_stream(cfg.seed, 0x1234_5678_9abc_def1);
+        Cluster {
+            cfg,
+            queue: EventQueue::new(),
+            insts,
+            requests: HashMap::new(),
+            first_token: HashMap::new(),
+            broadcast: Vec::new(),
+            since_tick: vec![(0, 0, 0); n],
+            loads_scratch: Vec::with_capacity(n),
+            predictor,
+            fabric,
+            rng,
+            metrics: RunMetrics {
+                busy_us: vec![0; n],
+                alive_us: vec![0; n],
+                decode_assign: vec![(0, 0); n],
+                ..Default::default()
+            },
+            pending_dispatch: Vec::new(),
+            outstanding: 0,
+            total_chunks: 0,
+            total_pad_tokens: 0,
+        }
+    }
+
+    /// Run a trace to completion; returns final metrics.
+    pub fn run(mut self, trace: Vec<Request>) -> RunMetrics {
+        self.outstanding = trace.len();
+        for r in trace {
+            self.queue.schedule_at(r.arrival, Event::Arrival(r.id));
+            self.requests.insert(r.id, r);
+        }
+        self.refresh_broadcast();
+        self.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
+
+        while self.outstanding > 0 {
+            let Some((_, ev)) = self.queue.pop() else {
+                panic!(
+                    "cluster deadlock: {} requests outstanding, no events",
+                    self.outstanding
+                );
+            };
+            self.handle(ev);
+        }
+        let now = self.queue.now();
+        self.metrics.makespan_us = now;
+        for a in self.metrics.alive_us.iter_mut() {
+            *a = now;
+        }
+        for inst in &self.insts {
+            if let InstState::Decode(d) = inst {
+                self.metrics.swapped_tokens += d.kv.swapped_out_tokens;
+            }
+        }
+        self.metrics
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Arrival(id) => self.on_arrival(id),
+            Event::PredictDone { instance, req } => self.on_predict_done(instance, req),
+            Event::PrefillIterDone { instance } => self.on_prefill_done(instance),
+            Event::TransferDone { instance, req } => self.on_transfer_done(instance, req),
+            Event::DecodeIterDone { instance } => self.on_decode_done(instance),
+            Event::MonitorTick => self.on_monitor_tick(),
+            Event::FlipDone { instance } => self.on_flip_done(instance),
+            Event::CoupledIterDone { .. } => unreachable!("coupled events belong to the baseline"),
+        }
+    }
+
+    // ----------------------------------------------------------- arrival
+
+    fn on_arrival(&mut self, id: ReqId) {
+        // Global scheduler: least queued prompt tokens among prefill
+        // instances (§3.2 "choose a prefill instance with the least load").
+        let target = self
+            .insts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                InstState::Prefill(p) => Some((i, p.sched.queued_tokens() + p.chunker.pending_tokens())),
+                _ => None,
+            })
+            .min_by_key(|&(_, load)| load)
+            .map(|(i, _)| i);
+        let Some(i) = target else {
+            // No prefill instance right now (all flipped/flipping): retry
+            // after a monitor period.
+            let at = self.queue.now() + self.cfg.monitor_interval_us;
+            self.queue.schedule_at(at, Event::Arrival(id));
+            return;
+        };
+
+        let req = self.requests.get(&id).unwrap().clone();
+        match self.cfg.predictor_mode {
+            PredictorMode::Parallel => {
+                // Prediction rides alongside; request is immediately
+                // schedulable, concurrent chunks pay the Figure 17 tax.
+                let pred = self.predictor.predict(&[], req.decode_len);
+                self.requests.get_mut(&id).unwrap().predicted = Some(pred);
+                let req = self.requests[&id].clone();
+                let p = self.prefill_mut(i);
+                p.pending_pred += 1;
+                p.sched.push(req);
+                self.try_start_prefill(i);
+            }
+            PredictorMode::Sequential => {
+                let tokens = req.prompt_len.min(512);
+                let dur = self.cfg.cost.predictor_iter_us(tokens);
+                self.queue.schedule_in(dur, Event::PredictDone { instance: i, req: id });
+            }
+            PredictorMode::Disabled => {
+                self.prefill_mut(i).sched.push(req);
+                self.try_start_prefill(i);
+            }
+        }
+    }
+
+    fn on_predict_done(&mut self, i: usize, id: ReqId) {
+        let dlen = self.requests[&id].decode_len;
+        let pred = self.predictor.predict(&[], dlen);
+        self.requests.get_mut(&id).unwrap().predicted = Some(pred);
+        let req = self.requests[&id].clone();
+        if let InstState::Prefill(p) = &mut self.insts[i] {
+            p.sched.push(req);
+            self.try_start_prefill(i);
+        } else {
+            // instance flipped while predicting: re-route
+            self.queue.schedule_in(0, Event::Arrival(id));
+        }
+    }
+
+    // ----------------------------------------------------------- prefill
+
+    fn prefill_mut(&mut self, i: usize) -> &mut PrefillInst {
+        match &mut self.insts[i] {
+            InstState::Prefill(p) => p,
+            _ => panic!("instance {i} is not a prefill instance"),
+        }
+    }
+
+    fn try_start_prefill(&mut self, i: usize) {
+        let cap = self.cfg.cost.kv_capacity_tokens();
+        let chunk_size = self.cfg.chunk_size;
+        let cost = self.cfg.cost.clone();
+        let InstState::Prefill(p) = &mut self.insts[i] else { return };
+        if p.busy {
+            return;
+        }
+        // Admit scheduled requests into the chunker lazily — just enough
+        // to keep the next iterations fed. The backlog stays in the local
+        // scheduler where PrefillSchedBatch sorting applies (§3.3.1), and
+        // KV backpressure caps residency (prompt KV lives here until
+        // transferred out).
+        while p.chunker.pending_tokens() < 2 * chunk_size as u64 {
+            let Some(nxt) = p.sched.peek() else { break };
+            if p.resident_kv + nxt.prompt_len as u64 > cap {
+                break;
+            }
+            let r = p.sched.pop().unwrap();
+            p.resident_kv += r.prompt_len as u64;
+            p.chunker.admit(r);
+        }
+        let Some(chunk) = p.chunker.next_chunk() else { return };
+        // Fixed-size iteration, charged by real tokens: the ChunkSize cap
+        // is what prevents over-saturated iterations (§3.3.3); the final
+        // partial chunk's zero-padding is shape filler, not useful compute
+        // (under the paper's stress workloads chunks are full anyway, so
+        // this matches their regime — see DESIGN.md §Calibration).
+        let _ = chunk_size;
+        let mut dur = cost.prefill_iter_us(chunk.tokens);
+        if p.pending_pred > 0 {
+            dur = (dur as f64 * (1.0 + PARALLEL_PREDICT_OVERHEAD)) as Us;
+            p.pending_pred = p.pending_pred.saturating_sub(PREDICTIONS_PER_CHUNK);
+        }
+        self.total_chunks += 1;
+        self.total_pad_tokens += chunk.pad() as u64;
+        p.current = Some(chunk);
+        p.busy = true;
+        p.last_active = self.queue.now();
+        self.metrics.busy_us[i] += dur;
+        self.queue.schedule_in(dur, Event::PrefillIterDone { instance: i });
+    }
+
+    fn on_prefill_done(&mut self, i: usize) {
+        let now = self.queue.now();
+        let chunk = {
+            let p = self.prefill_mut(i);
+            p.busy = false;
+            p.last_active = now;
+            p.current.take().expect("iteration completed without a chunk")
+        };
+        for seg in &chunk.segments {
+            if !seg.last {
+                continue;
+            }
+            // Request fully prefilled: first token exists now (TTFT).
+            self.first_token.insert(seg.req, now);
+            let req = self.requests[&seg.req].clone();
+            if req.decode_len <= 1 {
+                // prefill's own token completes the request
+                self.finish(seg.req, now);
+                self.prefill_mut(i).resident_kv =
+                    self.prefill_mut(i).resident_kv.saturating_sub(req.prompt_len as u64);
+                continue;
+            }
+            // Dispatcher: decentralized inter-decode scheduling over the
+            // monitor's last broadcast (§3.3.4).
+            if !self.dispatch_request(seg.req) {
+                // No decode instance known (mid-flip window): park the
+                // request; the monitor tick retries dispatch.
+                self.pending_dispatch.push(seg.req);
+            }
+        }
+        self.try_start_prefill(i);
+    }
+
+    /// The §3.3.4 dispatch: stale broadcast + own recent sends → α/β split
+    /// → power-of-two → least interference; then schedule the KV transfer.
+    fn dispatch_request(&mut self, id: ReqId) -> bool {
+        let req = self.requests[&id].clone();
+        // merge broadcast with what we dispatched since the last tick
+        // (into the reusable scratch buffer — this runs once per request)
+        self.loads_scratch.clear();
+        self.loads_scratch.extend(self.broadcast.iter().map(|l| {
+            let (h, lt, kv) = self.since_tick[l.instance];
+            DecodeLoad {
+                instance: l.instance,
+                free_kv_tokens: l.free_kv_tokens.saturating_sub(kv),
+                n_heavy: l.n_heavy + h,
+                n_light: l.n_light + lt,
+                queue_len: l.queue_len + h + lt,
+            }
+        }));
+        let target = choose(
+            &self.loads_scratch,
+            req.prompt_len,
+            req.predicted,
+            self.cfg.granularity,
+            self.cfg.dispatch,
+            &mut self.rng,
+        );
+        let Some(d) = target else { return false };
+        let heavy = req
+            .predicted
+            .map(|p| p.predicts_heavy(HEAVY_DECODE_TOKENS))
+            .unwrap_or(false);
+        let entry = &mut self.since_tick[d];
+        if heavy {
+            entry.0 += 1;
+        } else {
+            entry.1 += 1;
+        }
+        entry.2 += crate::prefill::predicted_footprint(req.prompt_len, req.predicted, self.cfg.granularity);
+        // Exposed transfer latency: request-level ships everything now;
+        // chunk-level already overlapped earlier chunks with compute and
+        // only the tail chunk's wire time remains visible (§3.3.4).
+        let n_chunks = req.prompt_len.div_ceil(self.cfg.chunk_size).max(1);
+        let chunk_tokens = req.prompt_len.div_ceil(n_chunks);
+        let chunk_compute = self.cfg.cost.prefill_iter_us(self.cfg.chunk_size);
+        let dur = self
+            .fabric
+            .exposed_transfer_us(n_chunks, chunk_tokens, chunk_compute);
+        self.queue.schedule_in(dur, Event::TransferDone { instance: d, req: id });
+        true
+    }
+
+    // ------------------------------------------------------------ decode
+
+    fn on_transfer_done(&mut self, d: usize, id: ReqId) {
+        // KV has left the prefill instance: release backpressure there.
+        let plen = self.requests[&id].prompt_len as u64;
+        self.release_prefill_resident(id, plen);
+
+        let req = self.requests[&id].clone();
+        match &mut self.insts[d] {
+            InstState::Decode(di) => {
+                if req.heavy_decode() {
+                    self.metrics.decode_assign[d].0 += 1;
+                } else {
+                    self.metrics.decode_assign[d].1 += 1;
+                }
+                let mut job = DecodeJob::new(req);
+                job.generated = 1; // prefill produced the first token
+                di.sched.waiting.push_back(job);
+                self.try_start_decode(d);
+            }
+            _ => {
+                // Instance flipped away while the KV was in flight: pick a
+                // new decode instance and pay the transfer again.
+                if !self.dispatch_request(id) {
+                    self.pending_dispatch.push(id);
+                }
+            }
+        }
+    }
+
+    /// Release the prompt KV held on the (single) prefill instance that
+    /// prefilled this request. We track residency per instance; since a
+    /// request is prefilled by exactly one instance, subtract where it fits.
+    fn release_prefill_resident(&mut self, _id: ReqId, plen: u64) {
+        for inst in self.insts.iter_mut() {
+            if let InstState::Prefill(p) = inst {
+                if p.resident_kv >= plen {
+                    p.resident_kv -= plen;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn try_start_decode(&mut self, d: usize) {
+        let cost = self.cfg.cost.clone();
+        let now = self.queue.now();
+        let InstState::Decode(di) = &mut self.insts[d] else { return };
+        if di.busy {
+            return;
+        }
+        let paged_in = di.sched.admit(&mut di.kv);
+        if di.sched.running.is_empty() {
+            return;
+        }
+        // Execute the iteration's effects now; expose them at IterDone.
+        let batch = di.sched.running.len() as u32;
+        let kv_tokens = di.sched.running_kv_tokens();
+        let (done, swapped_out) = di.sched.step(&mut di.kv);
+        debug_assert!(di.kv.check_invariants().is_ok());
+        // Iteration cost: compute + any PCIe swap traffic this iteration
+        // (victim page-out now, victim page-in when it re-admits).
+        let dur = cost.decode_iter_us(batch, kv_tokens)
+            + cost.swap_us(swapped_out)
+            + cost.swap_us(paged_in_swapins(paged_in, &di.sched));
+        di.pending_done = done.iter().map(|j| j.req.id).collect();
+        di.busy = true;
+        di.last_active = now;
+        self.metrics.busy_us[d] += dur;
+        self.queue.schedule_in(dur, Event::DecodeIterDone { instance: d });
+    }
+
+    fn on_decode_done(&mut self, d: usize) {
+        let now = self.queue.now();
+        let done = {
+            let InstState::Decode(di) = &mut self.insts[d] else { return };
+            di.busy = false;
+            di.last_active = now;
+            std::mem::take(&mut di.pending_done)
+        };
+        for id in done {
+            self.finish(id, now);
+        }
+        self.try_start_decode(d);
+    }
+
+    fn finish(&mut self, id: ReqId, now: Us) {
+        let req = &self.requests[&id];
+        let first = *self.first_token.get(&id).unwrap_or(&now);
+        self.metrics.records.push(RequestRecord {
+            id,
+            task: req.task,
+            prompt_len: req.prompt_len,
+            decode_len: req.decode_len,
+            arrival: req.arrival,
+            first_token: first,
+            finished: now,
+            predicted: req.predicted,
+        });
+        self.outstanding -= 1;
+    }
+
+    // ----------------------------------------------------------- monitor
+
+    fn refresh_broadcast(&mut self) {
+        self.since_tick = vec![(0, 0, 0); self.insts.len()];
+        self.broadcast = self
+            .insts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                InstState::Decode(di) => {
+                    let (h, l) = di.sched.heavy_light(HEAVY_DECODE_TOKENS);
+                    Some(DecodeLoad {
+                        instance: i,
+                        free_kv_tokens: di.kv.free_tokens(),
+                        n_heavy: h,
+                        n_light: l,
+                        queue_len: di.sched.queue_len(),
+                    })
+                }
+                _ => None,
+            })
+            .collect();
+    }
+
+    fn on_monitor_tick(&mut self) {
+        self.refresh_broadcast();
+        self.maybe_flip();
+        // Retry any dispatches parked while no decode instance existed.
+        for id in std::mem::take(&mut self.pending_dispatch) {
+            if !self.dispatch_request(id) {
+                self.pending_dispatch.push(id);
+            }
+        }
+        if self.outstanding > 0 {
+            self.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
+        }
+    }
+
+    // -------------------------------------------------------------- flip
+
+    fn maybe_flip(&mut self) {
+        let Some(flip) = self.cfg.flip else { return };
+        let now = self.queue.now();
+        let n_prefill = self
+            .insts
+            .iter()
+            .filter(|s| matches!(s, InstState::Prefill(_)))
+            .count();
+        let n_decode = self
+            .insts
+            .iter()
+            .filter(|s| matches!(s, InstState::Decode(_)))
+            .count();
+        let prefill_pressure: u64 = self
+            .insts
+            .iter()
+            .filter_map(|s| match s {
+                InstState::Prefill(p) => Some(p.sched.queued_tokens() + p.chunker.pending_tokens()),
+                _ => None,
+            })
+            .sum();
+        // Pressure = any live work on the other role (the paper's policy
+        // flips on the instance's own idleness; requiring the other role
+        // to actually have work avoids useless role churn).
+        let decode_pressure: u64 = self
+            .insts
+            .iter()
+            .filter_map(|s| match s {
+                InstState::Decode(d) => Some(d.sched.total_jobs() as u64),
+                _ => None,
+            })
+            .sum();
+
+        for i in 0..self.insts.len() {
+            match &self.insts[i] {
+                InstState::Prefill(p)
+                    if !p.busy
+                        && p.sched.is_empty()
+                        && !p.chunker.has_work()
+                        && now.saturating_sub(p.last_active) >= flip.idle_us
+                        && n_prefill > flip.min_per_role
+                        && decode_pressure > 0 =>
+                {
+                    // drained already (idle): flip is just the role switch
+                    let dur = self.rng.range(flip.flip_min_us, flip.flip_max_us + 1);
+                    self.insts[i] = InstState::Flipping { to: Role::Decode };
+                    self.metrics.flips += 1;
+                    self.queue.schedule_in(dur, Event::FlipDone { instance: i });
+                    return; // at most one flip per tick
+                }
+                InstState::Decode(d)
+                    if !d.busy
+                        && d.sched.total_jobs() == 0
+                        && now.saturating_sub(d.last_active) >= flip.idle_us
+                        && n_decode > flip.min_per_role
+                        && prefill_pressure > 0 =>
+                {
+                    let dur = self.rng.range(flip.flip_min_us, flip.flip_max_us + 1);
+                    self.insts[i] = InstState::Flipping { to: Role::Prefill };
+                    self.metrics.flips += 1;
+                    self.queue.schedule_in(dur, Event::FlipDone { instance: i });
+                    return;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn on_flip_done(&mut self, i: usize) {
+        let InstState::Flipping { to } = self.insts[i] else { return };
+        self.insts[i] = match to {
+            Role::Prefill => InstState::Prefill(PrefillInst {
+                sched: PrefillScheduler::new(self.cfg.prefill_policy, self.cfg.sched_batch),
+                chunker: new_chunker(&self.cfg),
+                busy: false,
+                current: None,
+                resident_kv: 0,
+                pending_pred: 0,
+                last_active: self.queue.now(),
+            }),
+            Role::Decode => InstState::Decode(new_decode_inst(&self.cfg)),
+            Role::Coupled => unreachable!(),
+        };
+        self.refresh_broadcast();
+    }
+}
+
+fn new_chunker(cfg: &ClusterConfig) -> Chunker {
+    if cfg.srtf_chunking {
+        Chunker::new_srtf(cfg.chunk_size)
+    } else {
+        Chunker::new(cfg.chunk_size)
+    }
+}
+
+fn new_decode_inst(cfg: &ClusterConfig) -> DecodeInst {
+    let pages = (cfg.cost.kv_capacity_tokens() / 16) as u32;
+    DecodeInst {
+        sched: DecodeScheduler::new(cfg.decode_policy, cfg.granularity, cfg.max_batch),
+        kv: PagedKvCache::new(pages.max(2), 16),
+        busy: false,
+        pending_done: Vec::new(),
+        last_active: 0,
+    }
+}
+
+/// Swap-in charge: re-admitted (previously swapped) jobs pay the PCIe
+/// fetch; fresh admissions' KV arrived over the fabric and is charged
+/// there. We approximate by charging swap cost only when the scheduler has
+/// swap history. (Kept as a function for the ablation bench to override.)
+fn paged_in_swapins(paged_in: u64, sched: &DecodeScheduler) -> u64 {
+    if sched.running.iter().any(|j| j.swaps > 0) {
+        paged_in
+    } else {
+        0
+    }
+}
+
+/// Convenience: build a cluster and run a trace.
+pub fn run_cluster(cfg: ClusterConfig, trace: Vec<Request>) -> RunMetrics {
+    Cluster::new(cfg).run(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{WorkloadGen, WorkloadKind};
+
+    fn small_cfg() -> ClusterConfig {
+        ClusterConfig { n_prefill: 1, n_decode: 2, flip: None, ..Default::default() }
+    }
+
+    #[test]
+    fn completes_every_request() {
+        let mut gen = WorkloadGen::new(1);
+        let trace = gen.trace(WorkloadKind::Mixed, 64, 20.0, 0);
+        let m = run_cluster(small_cfg(), trace);
+        assert_eq!(m.records.len(), 64);
+        for r in &m.records {
+            assert!(r.first_token >= r.arrival, "TTFT before arrival");
+            assert!(r.finished >= r.first_token, "JCT before TTFT");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut gen = WorkloadGen::new(3);
+            run_cluster(small_cfg(), gen.trace(WorkloadKind::Mixed, 32, 50.0, 0))
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert!((a.jct_summary().mean - b.jct_summary().mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ttft_beats_jct_ordering_and_busy_time_positive() {
+        let mut gen = WorkloadGen::new(5);
+        let m = run_cluster(small_cfg(), gen.trace(WorkloadKind::Lpld, 32, 0.0, 0));
+        assert!(m.resource_seconds() > 0.0);
+        assert!(m.makespan_us > 0);
+        assert!(m.ttft_summary().mean <= m.jct_summary().mean);
+    }
+
+    #[test]
+    fn nvlink_transfers_beat_roce_on_ttft_to_first_decode() {
+        let mut gen = WorkloadGen::new(7);
+        let trace = gen.trace(WorkloadKind::Lphd, 48, 0.0, 0);
+        let roce = run_cluster(ClusterConfig { flip: None, ..ClusterConfig::ts_roce(1, 2) }, trace.clone());
+        let nv = run_cluster(ClusterConfig { flip: None, ..ClusterConfig::ts_nvlink(1, 2) }, trace);
+        // transfer is off the TTFT path but on the JCT path
+        assert!(nv.jct_summary().mean <= roce.jct_summary().mean * 1.01);
+    }
+
+    #[test]
+    fn flip_activates_under_idle_prefill() {
+        let mut gen = WorkloadGen::new(9);
+        // decode-heavy workload with a tiny flip threshold: the second
+        // prefill instance should flip to decode.
+        let cfg = ClusterConfig {
+            n_prefill: 2,
+            n_decode: 1,
+            flip: Some(crate::coordinator::FlipConfig {
+                idle_us: 1_000_000,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let trace = gen.trace(WorkloadKind::Lphd, 96, 0.0, 0);
+        let m = run_cluster(cfg, trace);
+        assert_eq!(m.records.len(), 96);
+        assert!(m.flips >= 1, "expected at least one prefill→decode flip");
+    }
+
+    #[test]
+    fn more_decode_instances_reduce_jct_for_heavy_decode() {
+        let mut gen = WorkloadGen::new(11);
+        let trace = gen.trace(WorkloadKind::Lphd, 128, 0.0, 0);
+        let one = run_cluster(ClusterConfig { n_decode: 1, ..small_cfg() }, trace.clone());
+        let four = run_cluster(ClusterConfig { n_decode: 4, ..small_cfg() }, trace);
+        assert!(
+            four.jct_summary().mean < one.jct_summary().mean,
+            "scaling decode must help heavy-decode workloads"
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Cluster configuration: topology, policies, hardware emulation knobs.
+
+use crate::costmodel::CostModel;
+use crate::decode::DecodePolicy;
+use crate::fabric::Link;
+use crate::prefill::{DispatchPolicy, PrefillPolicy};
+use crate::types::Us;
+
+/// How the length predictor shares the prefill accelerator (§3.3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictorMode {
+    /// Run predict model and main LLM concurrently: no added queueing
+    /// latency, but concurrent chunks slow ~10% under stress (Figure 17).
+    Parallel,
+    /// Predict first, then prefill: main LLM unaffected, but every request
+    /// pays the predictor's latency up front.
+    Sequential,
+    /// No prediction at all (ablation): schedulers fall back to
+    /// one-granule assumptions.
+    Disabled,
+}
+
+/// Instance-flip policy (§3.5): flip an instance that has been idle for
+/// `idle_us` toward the role with queued work.
+#[derive(Clone, Copy, Debug)]
+pub struct FlipConfig {
+    pub idle_us: Us,
+    /// Actual role-switch cost once drained (paper: 5–7 ms).
+    pub flip_min_us: Us,
+    pub flip_max_us: Us,
+    /// Never flip below this many instances of either role.
+    pub min_per_role: usize,
+}
+
+impl Default for FlipConfig {
+    fn default() -> Self {
+        FlipConfig { idle_us: 60_000_000, flip_min_us: 5_000, flip_max_us: 7_000, min_per_role: 1 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub n_prefill: usize,
+    pub n_decode: usize,
+    /// ChunkSize in tokens (512 for OPT-13B on V100, §3.3.3).
+    pub chunk_size: u32,
+    pub prefill_policy: PrefillPolicy,
+    /// PrefillSchedBatch (§3.3.1).
+    pub sched_batch: usize,
+    /// Shortest-remaining-time-first chunk assembly — the preemptive
+    /// scheduling §3.3.1 notes chunked prefill enables but leaves to
+    /// future work. Implemented here as an ablation (off by default).
+    pub srtf_chunking: bool,
+    pub dispatch: DispatchPolicy,
+    pub decode_policy: DecodePolicy,
+    /// Continuous-batching cap per decode instance.
+    pub max_batch: u32,
+    /// Prefill→decode KV link (TS-RoCE / TS-NVLink / Indirect).
+    pub link: Link,
+    /// KV transfer granularity (§3.3.4): the paper implements
+    /// request-level; chunk-level overlaps shipping with later chunks'
+    /// compute (its noted future work — kept as an ablation).
+    pub transfer_granularity: crate::fabric::Granularity,
+    pub predictor_mode: PredictorMode,
+    /// Bucket-prediction accuracy (sim oracle): paper acc-200 = 0.749.
+    pub predictor_accuracy: f64,
+    pub granularity: u32,
+    pub n_buckets: u8,
+    /// Cluster-monitor broadcast period (paper: ~100 ms).
+    pub monitor_interval_us: Us,
+    pub flip: Option<FlipConfig>,
+    pub cost: CostModel,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_prefill: 1,
+            n_decode: 1,
+            chunk_size: 512,
+            prefill_policy: PrefillPolicy::Sjf,
+            sched_batch: 16,
+            srtf_chunking: false,
+            dispatch: DispatchPolicy::PowerOfTwo,
+            decode_policy: DecodePolicy::ReserveDynamic,
+            max_batch: 128,
+            link: Link::roce200(),
+            transfer_granularity: crate::fabric::Granularity::RequestLevel,
+            predictor_mode: PredictorMode::Parallel,
+            predictor_accuracy: 0.749,
+            granularity: 200,
+            n_buckets: 8,
+            monitor_interval_us: 100_000,
+            flip: Some(FlipConfig::default()),
+            cost: CostModel::default(),
+            seed: 0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// The §5.1 evaluation setup: TS-RoCE emulated hardware.
+    pub fn ts_roce(n_prefill: usize, n_decode: usize) -> Self {
+        ClusterConfig { n_prefill, n_decode, link: Link::roce200(), ..Default::default() }
+    }
+
+    /// The §5.1 evaluation setup: TS-NVLink emulated hardware.
+    pub fn ts_nvlink(n_prefill: usize, n_decode: usize) -> Self {
+        ClusterConfig { n_prefill, n_decode, link: Link::nvlink(), ..Default::default() }
+    }
+}

@@ -1,0 +1,11 @@
+//! The TetriInfer cluster (§3): centralized control plane (global scheduler
+//! + cluster monitor), disaggregated prefill/decode instances, instance
+//! flipping — driven as a deterministic discrete-event simulation over the
+//! calibrated cost model. Real mode (rust/src/serve) reuses the same policy
+//! modules with wall-clock engines.
+
+pub mod cluster;
+pub mod config;
+
+pub use cluster::{run_cluster, Cluster};
+pub use config::{ClusterConfig, FlipConfig, PredictorMode};

@@ -1,0 +1,248 @@
+//! Calibrated analytical cost model of the paper's testbed: OPT-13B (TP=2)
+//! on NVIDIA V100-32GB pairs (§5).
+//!
+//! The model reproduces the *observables* every scheduling decision in the
+//! paper consumes — iteration latency as a function of batched prefill
+//! tokens, decode batch size and KV working set, HBM capacity, swap
+//! penalties — so the interference phenomena of §2.2 (Figures 3/4/5) are
+//! *emergent*, not hard-coded:
+//!
+//! * Prefill (compute-bound, Fig 2 left): throughput ramps until the
+//!   accelerator saturates at `sat_tokens` (512 for OPT-13B on V100),
+//!   then goes flat — latency becomes linear in tokens. A fixed `base`
+//!   per-iteration overhead makes small batches underutilize hardware.
+//! * Decode (memory-bound, Fig 2 right): every iteration streams the
+//!   weights plus the batch's KV working set from HBM; throughput grows
+//!   with batch size but plateaus at the memory-bandwidth roofline.
+//!
+//! Calibration targets (§2.2): 1 LP vs 7 co-running LPs → ~2x, vs 63 LPs →
+//! ~8x, vs HPs → >10x (Fig 3); one HP in a continuous batch → ~5x decode
+//! slowdown (Fig 4); half-heavy decode batch at bs=128 → ~16% throughput
+//! drop (Fig 5). See rust/tests/interference.rs.
+
+use crate::types::{Us, US_PER_SEC};
+
+/// Hardware + model constants for one serving instance (2xV100, OPT-13B).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Fixed per-iteration overhead (kernel launches, scheduling): µs.
+    pub base_us: f64,
+    /// Prefill per-token cost once the accelerator is saturated: µs/token.
+    pub prefill_us_per_tok: f64,
+    /// Token count at which prefill saturates compute (ChunkSize): tokens.
+    pub sat_tokens: u32,
+    /// Decode: weight-streaming floor per iteration: µs.
+    pub decode_base_us: f64,
+    /// Decode: per-sequence overhead (attention launch, sampling): µs.
+    pub decode_us_per_seq: f64,
+    /// Decode: KV-cache streaming cost: µs per cached token per iteration.
+    pub decode_us_per_kv_tok: f64,
+    /// KV bytes per token (all layers, fp16): bytes.
+    pub kv_bytes_per_tok: f64,
+    /// HBM available for KV after weights/activations: bytes.
+    pub hbm_kv_bytes: f64,
+    /// Swap (PCIe) cost per token moved: µs.
+    pub swap_us_per_tok: f64,
+    /// Dollar cost per instance-second (relative units; perf/$ only uses
+    /// ratios so the absolute value cancels).
+    pub dollar_per_sec: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            base_us: 28_000.0,            // ~28 ms launch+overhead floor
+            prefill_us_per_tok: 260.0,    // 512-tok chunk ≈ 133 ms compute
+            sat_tokens: 512,              // paper's measured ChunkSize
+            decode_base_us: 14_000.0,     // 26 GB fp16 weights / ~1.8 TB/s
+            decode_us_per_seq: 50.0,
+            // Effective KV-streaming cost per cached token per iteration.
+            // The naive bound (820 KB/tok / 1.8 TB/s = 0.45 µs) overstates
+            // what batched flash-decode attention pays; 0.17 µs calibrates
+            // the Figure 5 measurement (half-heavy bs=128 batch: latency
+            // +23%, throughput −16%).
+            decode_us_per_kv_tok: 0.17,
+            kv_bytes_per_tok: 820_000.0,  // 2*2*40 layers*5120 dim fp16
+            hbm_kv_bytes: 32e9,           // 2x32 GB minus weights+activations
+            // Preemption cost per token brought back. vLLM's default
+            // preemption mode *recomputes* the victim's KV (a full prefill
+            // pass, 260 µs/tok) rather than paging over PCIe (51 µs/tok);
+            // thrashing is therefore charged at recompute cost.
+            swap_us_per_tok: 260.0,
+            dollar_per_sec: 1.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// Latency of one prefill iteration processing `tokens` prompt tokens
+    /// (Figure 2 left: flat throughput past saturation).
+    ///
+    /// Below saturation the iteration still pays most of the fixed base —
+    /// that is exactly why batching more light prefills than the saturation
+    /// point "for free" is impossible and chunked prefill wins.
+    pub fn prefill_iter_us(&self, tokens: u32) -> Us {
+        (self.base_us + self.prefill_us_per_tok * tokens as f64) as Us
+    }
+
+    /// Prefill throughput in tokens/s at a given iteration size.
+    pub fn prefill_throughput(&self, tokens: u32) -> f64 {
+        tokens as f64 * US_PER_SEC as f64 / self.prefill_iter_us(tokens) as f64
+    }
+
+    /// Latency of one decode iteration over `batch` sequences whose KV
+    /// caches total `kv_tokens` (Figure 2 right: bandwidth plateau).
+    pub fn decode_iter_us(&self, batch: u32, kv_tokens: u64) -> Us {
+        if batch == 0 {
+            return 0;
+        }
+        (self.decode_base_us
+            + self.decode_us_per_seq * batch as f64
+            + self.decode_us_per_kv_tok * kv_tokens as f64) as Us
+    }
+
+    /// Decode throughput in generated tokens/s.
+    pub fn decode_throughput(&self, batch: u32, kv_tokens: u64) -> f64 {
+        batch as f64 * US_PER_SEC as f64 / self.decode_iter_us(batch, kv_tokens).max(1) as f64
+    }
+
+    /// Latency of one *mixed* continuous-batching iteration (the vanilla
+    /// vLLM deployment): prefill tokens and decode sequences ride the same
+    /// iteration, so each part inflates the other — this is the §2.2.2
+    /// interference. Selective batching runs the prefill and decode
+    /// kernel phases back to back, so both phases' costs add (the decode
+    /// phase re-streams weights: its attention/FFN passes cannot reuse
+    /// the prefill pass's tiles).
+    pub fn mixed_iter_us(&self, prefill_tokens: u32, batch: u32, kv_tokens: u64) -> Us {
+        if prefill_tokens == 0 {
+            return self.decode_iter_us(batch, kv_tokens);
+        }
+        let mut us = self.base_us + self.prefill_us_per_tok * prefill_tokens as f64;
+        if batch > 0 {
+            us += self.decode_base_us
+                + self.decode_us_per_seq * batch as f64
+                + self.decode_us_per_kv_tok * kv_tokens as f64;
+        }
+        us as Us
+    }
+
+    /// How many KV tokens fit in this instance's HBM.
+    pub fn kv_capacity_tokens(&self) -> u64 {
+        (self.hbm_kv_bytes / self.kv_bytes_per_tok) as u64
+    }
+
+    /// Cost of swapping `tokens` of KV cache out (or in) over PCIe.
+    pub fn swap_us(&self, tokens: u64) -> Us {
+        (self.swap_us_per_tok * tokens as f64) as Us
+    }
+
+    /// Time to stream a prompt's KV cache over a link of `gbps` (Gbit/s)
+    /// with `lat_us` fixed latency — the prefill→decode transfer (§3.3.4).
+    pub fn kv_transfer_us(&self, tokens: u32, gbps: f64, lat_us: f64) -> Us {
+        let bytes = self.kv_bytes_per_tok * tokens as f64;
+        (lat_us + bytes * 8.0 / (gbps * 1e3)) as Us // gbps*1e3 = bits/µs
+    }
+
+    /// The predictor model (OPT-125M) is ~10x faster than the target
+    /// (§3.3.2); its prefill rides the same accelerator in parallel mode.
+    pub fn predictor_iter_us(&self, tokens: u32) -> Us {
+        (self.base_us / 10.0 + self.prefill_us_per_tok / 10.0 * tokens as f64) as Us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LP: u32 = 18; // light prefill (ShareGPT short-prompt median)
+    const HP: u32 = 512; // heavy prefill (saturation length)
+
+    #[test]
+    fn fig2_prefill_throughput_saturates() {
+        let m = CostModel::default();
+        let t256 = m.prefill_throughput(256);
+        let t512 = m.prefill_throughput(512);
+        let t2048 = m.prefill_throughput(2048);
+        assert!(t512 > t256, "throughput still ramping below sat");
+        // flat (within 25%) past saturation
+        assert!((t2048 / t512 - 1.0).abs() < 0.25, "{t512} vs {t2048}");
+    }
+
+    #[test]
+    fn fig2_decode_throughput_plateaus() {
+        let m = CostModel::default();
+        // average context 512 tokens/sequence (where the plateau shows)
+        let t8 = m.decode_throughput(8, 8 * 512);
+        let t64 = m.decode_throughput(64, 64 * 512);
+        let t256 = m.decode_throughput(256, 256 * 512);
+        assert!(t64 > 4.0 * t8, "decode batching must pay off early");
+        assert!(t256 < 2.0 * t64, "bandwidth plateau past ~64");
+    }
+
+    #[test]
+    fn fig3_prefill_prefill_interference() {
+        let m = CostModel::default();
+        let solo = m.prefill_iter_us(LP) as f64;
+        let with7 = m.prefill_iter_us(8 * LP) as f64;
+        let with63 = m.prefill_iter_us(64 * LP) as f64;
+        let with_hp = m.prefill_iter_us(LP + 7 * HP) as f64;
+        assert!(with7 / solo > 1.6 && with7 / solo < 2.6, "{}", with7 / solo);
+        assert!(with63 / solo > 6.0 && with63 / solo < 11.0, "{}", with63 / solo);
+        assert!(with_hp / solo > 10.0, "{}", with_hp / solo);
+        // heavy prefill slows ~3x with 63 light co-runners
+        let hp_solo = m.prefill_iter_us(HP) as f64;
+        let hp_with = m.prefill_iter_us(HP + 63 * LP) as f64;
+        assert!(hp_with / hp_solo > 2.0 && hp_with / hp_solo < 4.0, "{}", hp_with / hp_solo);
+    }
+
+    #[test]
+    fn fig4_prefill_decode_interference() {
+        let m = CostModel::default();
+        // decode-only step, 8 sequences with ~100-token contexts
+        let dec = m.mixed_iter_us(0, 8, 800) as f64;
+        // one heavy prefill rides the same iteration → ≥5x (paper: ~5x)
+        let dec_hp = m.mixed_iter_us(HP, 8, 800) as f64;
+        assert!(dec_hp / dec > 5.0, "{}", dec_hp / dec);
+        // light prefill co-running with many light decodes slows ~2.5x
+        let lp_solo = m.mixed_iter_us(LP, 0, 0) as f64;
+        let lp_with = m.mixed_iter_us(LP, 64, 64 * 100) as f64;
+        assert!(lp_with / lp_solo > 1.5 && lp_with / lp_solo < 3.5, "{}", lp_with / lp_solo);
+    }
+
+    #[test]
+    fn fig5_decode_decode_interference() {
+        let m = CostModel::default();
+        // bs=128: all light (ctx ~60) vs half light / half heavy (ctx ~512)
+        let all_light = m.decode_iter_us(128, 128 * 60);
+        let half_heavy = m.decode_iter_us(128, 64 * 60 + 64 * 512);
+        let lat_ratio = half_heavy as f64 / all_light as f64;
+        let thpt_drop = 1.0 - all_light as f64 / half_heavy as f64;
+        assert!(lat_ratio > 1.15 && lat_ratio < 1.5, "{lat_ratio}");
+        assert!(thpt_drop > 0.10 && thpt_drop < 0.35, "{thpt_drop}");
+    }
+
+    #[test]
+    fn kv_capacity_matches_hardware() {
+        let m = CostModel::default();
+        let cap = m.kv_capacity_tokens();
+        assert!(cap > 30_000 && cap < 50_000, "{cap}");
+    }
+
+    #[test]
+    fn transfer_times_nvlink_vs_roce() {
+        let m = CostModel::default();
+        // 512-token prompt: NVLink 300 GBps = 2400 Gbps, RoCE 200 Gbps
+        let nv = m.kv_transfer_us(512, 2400.0, 30.0);
+        let roce = m.kv_transfer_us(512, 200.0, 100.0);
+        assert!(nv < 2_500, "{nv}");
+        assert!(roce > 10_000 && roce < 30_000, "{roce}");
+    }
+
+    #[test]
+    fn predictor_is_10x_faster() {
+        let m = CostModel::default();
+        let big = m.prefill_iter_us(512) as f64;
+        let small = m.predictor_iter_us(512) as f64;
+        assert!((big / small - 10.0).abs() < 1.0, "{}", big / small);
+    }
+}

@@ -1,0 +1,436 @@
+//! Decode instance (§3.4): receiver → local scheduler → continuous
+//! batching over the paged KV pool.
+//!
+//! Three admission policies:
+//!  * `Greedy` — vLLM's: admit while pages are free *now*; oblivious to
+//!    the working set, so it can thrash (swap) later.
+//!  * `ReserveStatic` — admit only if the request's full predicted memory
+//!    usage fits the currently-free pool.
+//!  * `ReserveDynamic` — admit if the footprint fits once the shortest
+//!    (predicted) remaining job in the batch finishes — proactive but not
+//!    as conservative as static reservation.
+//!
+//! Both reserve policies estimate usage from the predicted length range's
+//! *lower end*, matching §5.2.3's evaluation setup.
+
+use std::collections::VecDeque;
+
+use crate::kvcache::PagedKvCache;
+use crate::types::{BucketPrediction, ReqId, Request};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodePolicy {
+    Greedy,
+    ReserveStatic,
+    ReserveDynamic,
+}
+
+impl DecodePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodePolicy::Greedy => "greedy",
+            DecodePolicy::ReserveStatic => "reserve-static",
+            DecodePolicy::ReserveDynamic => "reserve-dynamic",
+        }
+    }
+}
+
+/// A request resident on the decode instance.
+#[derive(Clone, Debug)]
+pub struct DecodeJob {
+    pub req: Request,
+    /// Tokens generated so far.
+    pub generated: u32,
+    /// True once the job holds pages and sits in the running batch.
+    pub running: bool,
+    /// Times this job was swapped out (thrash diagnostics).
+    pub swaps: u32,
+}
+
+impl DecodeJob {
+    pub fn new(req: Request) -> Self {
+        DecodeJob { req, generated: 0, running: false, swaps: 0 }
+    }
+
+    /// Current KV footprint in tokens.
+    pub fn kv_tokens(&self) -> u32 {
+        self.req.prompt_len + self.generated
+    }
+
+    /// Predicted *remaining* generation, from the range's lower end
+    /// (clamped to at least 1 so jobs always make progress estimates).
+    pub fn predicted_remaining(&self, granularity: u32) -> u32 {
+        let total = predicted_total(self.req.predicted, granularity);
+        total.saturating_sub(self.generated).max(1)
+    }
+
+    /// Predicted *total* KV footprint at completion (lower end).
+    pub fn predicted_peak_kv(&self, granularity: u32) -> u64 {
+        self.req.prompt_len as u64 + predicted_total(self.req.predicted, granularity) as u64
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated >= self.req.decode_len
+    }
+}
+
+fn predicted_total(pred: Option<BucketPrediction>, granularity: u32) -> u32 {
+    match pred {
+        Some(p) => p.lo.max(granularity / 2), // lower end; half-granule floor
+        None => granularity / 2,
+    }
+}
+
+/// The decode instance's local scheduler state.
+#[derive(Debug)]
+pub struct DecodeScheduler {
+    pub policy: DecodePolicy,
+    pub granularity: u32,
+    /// Max sequences per iteration (continuous-batching cap).
+    pub max_batch: u32,
+    /// Waiting for first admission (KV already transferred but not paged
+    /// in — the sim charges the page-in at admission).
+    pub waiting: VecDeque<DecodeJob>,
+    /// Admitted, holding pages, decoded every iteration.
+    pub running: Vec<DecodeJob>,
+    /// Victims of memory pressure, waiting to swap back in.
+    pub swapped: VecDeque<DecodeJob>,
+}
+
+impl DecodeScheduler {
+    pub fn new(policy: DecodePolicy, granularity: u32, max_batch: u32) -> Self {
+        DecodeScheduler {
+            policy,
+            granularity,
+            max_batch,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            swapped: VecDeque::new(),
+        }
+    }
+
+    pub fn queue_len(&self) -> u32 {
+        (self.waiting.len() + self.swapped.len()) as u32
+    }
+
+    pub fn n_resident(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn total_jobs(&self) -> usize {
+        self.waiting.len() + self.running.len() + self.swapped.len()
+    }
+
+    /// Counts of (heavy, light) predicted decodes across all local jobs —
+    /// the load the cluster monitor broadcasts (§3.2).
+    pub fn heavy_light(&self, heavy_threshold: u32) -> (u32, u32) {
+        let mut h = 0;
+        let mut l = 0;
+        for j in self.waiting.iter().chain(self.running.iter()).chain(self.swapped.iter()) {
+            let heavy = j
+                .req
+                .predicted
+                .map(|p| p.predicts_heavy(heavy_threshold))
+                .unwrap_or(false);
+            if heavy {
+                h += 1;
+            } else {
+                l += 1;
+            }
+        }
+        (h, l)
+    }
+
+    /// Future KV growth already promised to running jobs (reserve-static's
+    /// notion of "unavailable" memory beyond current allocations).
+    fn reserved_growth(&self) -> u64 {
+        self.running
+            .iter()
+            .map(|j| j.predicted_peak_kv(self.granularity).saturating_sub(j.kv_tokens() as u64))
+            .sum()
+    }
+
+    /// Admission test for one candidate under the configured policy.
+    fn admits(&self, job: &DecodeJob, kv: &PagedKvCache) -> bool {
+        let now_need = job.kv_tokens() as u64 + 1; // prompt KV + first new token
+        if kv.free_tokens() < now_need {
+            return false; // can't even page the prompt in
+        }
+        match self.policy {
+            DecodePolicy::Greedy => true,
+            DecodePolicy::ReserveStatic => {
+                // full predicted footprint must fit memory not yet
+                // promised to running jobs
+                let available = kv.free_tokens().saturating_sub(self.reserved_growth());
+                job.predicted_peak_kv(self.granularity) <= available
+            }
+            DecodePolicy::ReserveDynamic => {
+                // Proactive variant: like reserve-static, but project to
+                // when the shortest (predicted) remaining job finishes —
+                // its entire footprint returns to the pool by the time the
+                // candidate approaches its own peak, so that release
+                // counts as available. Less conservative than static,
+                // still thrash-free under correct predictions.
+                let available =
+                    kv.free_tokens().saturating_sub(self.reserved_growth());
+                let release = self
+                    .running
+                    .iter()
+                    .min_by_key(|j| j.predicted_remaining(self.granularity))
+                    .map(|j| j.predicted_peak_kv(self.granularity))
+                    .unwrap_or(0);
+                job.predicted_peak_kv(self.granularity) <= available + release
+            }
+        }
+    }
+
+    /// Run one admission round: move admissible jobs from `swapped` (first,
+    /// they are oldest) then `waiting` into `running`, allocating pages.
+    /// Returns tokens paged in (for swap-in cost accounting).
+    pub fn admit(&mut self, kv: &mut PagedKvCache) -> u64 {
+        let mut paged_in = 0u64;
+        loop {
+            if self.running.len() as u32 >= self.max_batch {
+                break;
+            }
+            let from_swapped = !self.swapped.is_empty();
+            let candidate = if from_swapped {
+                self.swapped.front()
+            } else {
+                self.waiting.front()
+            };
+            let Some(job) = candidate else { break };
+            if !self.admits(job, kv) {
+                break; // FIFO head-of-line: preserve order, stop admitting
+            }
+            let mut job = if from_swapped {
+                self.swapped.pop_front().unwrap()
+            } else {
+                self.waiting.pop_front().unwrap()
+            };
+            kv.alloc(job.req.id, job.kv_tokens())
+                .expect("admits() guaranteed capacity");
+            paged_in += job.kv_tokens() as u64;
+            job.running = true;
+            self.running.push(job);
+        }
+        paged_in
+    }
+
+    /// Generate one token for every running job. Requests that overflow
+    /// their pages trigger vLLM-style preemption: the *newest* running job
+    /// is swapped out until the append succeeds. Returns
+    /// (completed jobs, tokens swapped out this iteration).
+    pub fn step(&mut self, kv: &mut PagedKvCache) -> (Vec<DecodeJob>, u64) {
+        self.step_n(kv, usize::MAX)
+    }
+
+    /// Like `step`, but only the first `n` running jobs decode this
+    /// iteration — the *fixed decode batch* of the vanilla-vLLM baseline
+    /// (later jobs wait their turn, FCFS).
+    pub fn step_n(&mut self, kv: &mut PagedKvCache, n: usize) -> (Vec<DecodeJob>, u64) {
+        let mut swapped_tokens = 0u64;
+        let mut i = 0;
+        while i < self.running.len().min(n) {
+            let id = self.running[i].req.id;
+            loop {
+                match kv.append_token(id) {
+                    Ok(()) => break,
+                    Err(_) => {
+                        // Preempt the newest running job that is not the
+                        // one appending (recompute/swap-in later).
+                        let victim_idx = (0..self.running.len())
+                            .rev()
+                            .find(|&j| self.running[j].req.id != id);
+                        let Some(v) = victim_idx else {
+                            // only this job left and still no pages: it
+                            // swaps itself out and retries next iteration
+                            let mut job = self.running.remove(i);
+                            swapped_tokens += kv.swap_out(id).unwrap_or(0) as u64;
+                            job.running = false;
+                            job.swaps += 1;
+                            self.swapped.push_back(job);
+                            break;
+                        };
+                        let mut job = self.running.remove(v);
+                        swapped_tokens += kv.swap_out(job.req.id).unwrap_or(0) as u64;
+                        job.running = false;
+                        job.swaps += 1;
+                        self.swapped.push_back(job);
+                        if v < i {
+                            i -= 1;
+                        }
+                    }
+                }
+            }
+            // if the job swapped itself out it is no longer at index i
+            if i < self.running.len() && self.running[i].req.id == id {
+                self.running[i].generated += 1;
+                i += 1;
+            }
+        }
+        let mut done = Vec::new();
+        let mut j = 0;
+        while j < self.running.len() {
+            if self.running[j].done() {
+                let job = self.running.remove(j);
+                kv.release(job.req.id);
+                done.push(job);
+            } else {
+                j += 1;
+            }
+        }
+        (done, swapped_tokens)
+    }
+
+    /// Total KV tokens resident in the running batch (iteration cost input).
+    pub fn running_kv_tokens(&self) -> u64 {
+        self.running.iter().map(|j| j.kv_tokens() as u64).sum()
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.waiting.push_back(DecodeJob::new(req));
+    }
+}
+
+/// Completed-job record helper for drivers.
+pub fn job_ids(jobs: &[DecodeJob]) -> Vec<ReqId> {
+    jobs.iter().map(|j| j.req.id).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{BucketPrediction, TaskType};
+
+    fn req(id: u64, plen: u32, dlen: u32, pred_bucket: Option<u8>) -> Request {
+        Request {
+            id,
+            task: TaskType::Chat,
+            arrival: 0,
+            prompt_len: plen,
+            decode_len: dlen,
+            predicted: pred_bucket.map(|b| BucketPrediction::from_bucket(b, 200, 8)),
+        }
+    }
+
+    fn sched(policy: DecodePolicy) -> (DecodeScheduler, PagedKvCache) {
+        (DecodeScheduler::new(policy, 200, 64), PagedKvCache::new(65, 16)) // 64 usable pages = 1024 tokens
+    }
+
+    #[test]
+    fn greedy_admits_until_pages_run_out() {
+        let (mut s, mut kv) = sched(DecodePolicy::Greedy);
+        for i in 0..10 {
+            s.push(req(i, 150, 50, Some(0))); // ~10 pages each
+        }
+        s.admit(&mut kv);
+        assert!(s.running.len() >= 6, "greedy should pack the pool: {}", s.running.len());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_static_reserves_predicted_peak() {
+        let (mut s, mut kv) = sched(DecodePolicy::ReserveStatic);
+        // predicted bucket 3 → lo=600 → peak 700 tokens each; pool 1024
+        s.push(req(0, 100, 650, Some(3)));
+        s.push(req(1, 100, 650, Some(3)));
+        s.admit(&mut kv);
+        assert_eq!(s.running.len(), 1, "static must reserve the 2nd job out");
+    }
+
+    #[test]
+    fn reserve_dynamic_projects_freed_memory() {
+        let (mut s, mut kv) = sched(DecodePolicy::ReserveDynamic);
+        // Job A: short remaining (bucket 0 → lo=0 → floor 100), holds 400.
+        s.push(req(0, 400, 90, Some(0)));
+        s.admit(&mut kv);
+        assert_eq!(s.running.len(), 1);
+        // Candidate B: peak 100+600=700. Free now: 1024-401=623 → static
+        // would refuse; dynamic sees A freeing ~500 soon and admits.
+        s.push(req(1, 100, 650, Some(3)));
+        let before = s.running.len();
+        s.admit(&mut kv);
+        assert_eq!(s.running.len(), before + 1, "dynamic should admit B");
+        let (mut s2, mut kv2) = sched(DecodePolicy::ReserveStatic);
+        s2.push(req(0, 400, 90, Some(0)));
+        s2.admit(&mut kv2);
+        s2.push(req(1, 100, 650, Some(3)));
+        s2.admit(&mut kv2);
+        assert_eq!(s2.running.len(), 1, "static refuses what dynamic admits");
+    }
+
+    #[test]
+    fn step_generates_and_completes() {
+        let (mut s, mut kv) = sched(DecodePolicy::Greedy);
+        s.push(req(0, 10, 3, None));
+        s.admit(&mut kv);
+        let (d1, _) = s.step(&mut kv);
+        assert!(d1.is_empty());
+        s.step(&mut kv);
+        let (d3, _) = s.step(&mut kv);
+        assert_eq!(job_ids(&d3), vec![0]);
+        assert_eq!(kv.n_live(), 0, "completed job must release pages");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn memory_pressure_triggers_swap_not_corruption() {
+        let (mut s, mut kv) = sched(DecodePolicy::Greedy);
+        // 3 jobs of 320 tokens = 20 pages each (60 of 64), each decoding
+        // 100 tokens → they outgrow the pool and must thrash.
+        for i in 0..3 {
+            s.push(req(i, 320, 100, Some(0)));
+        }
+        s.admit(&mut kv);
+        assert_eq!(s.running.len(), 3);
+        let mut swapped = 0;
+        for _ in 0..30 {
+            s.admit(&mut kv);
+            let (_, sw) = s.step(&mut kv);
+            swapped += sw;
+            kv.check_invariants().unwrap();
+        }
+        assert!(swapped > 0, "greedy under pressure must swap");
+        assert!(s.swapped.iter().chain(s.running.iter()).count() + s.waiting.len() == 3);
+    }
+
+    #[test]
+    fn reserve_static_avoids_swaps_with_ideal_prediction() {
+        // Same pressure as above, but predictions are exact and static
+        // reservation refuses the third job up front → no swaps at all.
+        let (mut s, mut kv) = sched(DecodePolicy::ReserveStatic);
+        for i in 0..3 {
+            s.push(req(i, 320, 100, Some(0))); // peak 420 ≤ free? 2*421 < 1024 only for 2
+        }
+        let mut swapped = 0;
+        for _ in 0..260 {
+            s.admit(&mut kv);
+            let (_, sw) = s.step(&mut kv);
+            swapped += sw;
+        }
+        assert_eq!(swapped, 0, "static reservation must not thrash");
+        assert_eq!(s.total_jobs(), 0, "all jobs finish eventually");
+    }
+
+    #[test]
+    fn heavy_light_uses_predictions() {
+        let (mut s, _) = sched(DecodePolicy::Greedy);
+        s.push(req(0, 10, 999, Some(3))); // heavy
+        s.push(req(1, 10, 5, Some(0))); // light
+        s.push(req(2, 10, 5, None)); // unpredicted → light
+        let (h, l) = s.heavy_light(128);
+        assert_eq!((h, l), (1, 2));
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let (mut s, mut kv) = sched(DecodePolicy::Greedy);
+        s.max_batch = 2;
+        for i in 0..5 {
+            s.push(req(i, 4, 10, None));
+        }
+        s.admit(&mut kv);
+        assert_eq!(s.running.len(), 2);
+    }
+}

@@ -1,0 +1,185 @@
+//! Unified network-transfer abstraction for prefill→decode KV shipping
+//! (§3.3.4, Figure 9).
+//!
+//! The paper classifies physical links into Direct (NVLink/HCCS),
+//! Direct-NIC (GPU↔NIC↔GPU), and Indirect (bounce via CPU DRAM) and could
+//! itself only *emulate* the fast ones (§4's mock mechanism: metadata-only
+//! transfer + computed wait). We implement the same: a `Link` computes the
+//! wire time of a KV payload; sim mode sleeps virtual time, real mode
+//! meters actual copies. One-sided vs two-sided changes the fixed latency
+//! and whether the receiver CPU adds a bounce copy.
+
+use crate::types::Us;
+
+/// Physical link class (Figure 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Accelerator-to-accelerator high-speed link (NVLink 300 GBps class).
+    Direct,
+    /// Via companion NICs (ConnectX-6 200 Gbps class RoCE/IB).
+    DirectNic,
+    /// Bounce through CPU DRAM (sockets) — what the paper's testbed had.
+    Indirect,
+}
+
+/// One-sided (receiver CPU not involved) vs two-sided transfer stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sidedness {
+    OneSided,
+    TwoSided,
+}
+
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub kind: LinkKind,
+    pub sidedness: Sidedness,
+    /// Payload bandwidth in Gbit/s.
+    pub gbps: f64,
+    /// Fixed per-transfer setup latency in µs.
+    pub setup_us: f64,
+    /// Extra per-byte factor for the DRAM bounce of Indirect links.
+    pub bounce_factor: f64,
+}
+
+impl Link {
+    /// The two emulated hardware setups of §5.1 plus the paper's own
+    /// socket testbed.
+    pub fn nvlink() -> Link {
+        // "TS-NVLink": 300 GBps = 2400 Gbps, one-sided device copy.
+        Link { kind: LinkKind::Direct, sidedness: Sidedness::OneSided, gbps: 2400.0, setup_us: 30.0, bounce_factor: 0.0 }
+    }
+
+    pub fn roce200() -> Link {
+        // "TS-RoCE": ConnectX-6 200 Gbps, one-sided RDMA write.
+        Link { kind: LinkKind::DirectNic, sidedness: Sidedness::OneSided, gbps: 200.0, setup_us: 100.0, bounce_factor: 0.0 }
+    }
+
+    pub fn indirect_socket() -> Link {
+        // TCP sockets via CPU DRAM: two-sided, extra memcpy each side.
+        Link { kind: LinkKind::Indirect, sidedness: Sidedness::TwoSided, gbps: 90.0, setup_us: 250.0, bounce_factor: 0.35 }
+    }
+
+    /// Wire time for `bytes` of payload.
+    pub fn transfer_us(&self, bytes: f64) -> Us {
+        let side = match self.sidedness {
+            Sidedness::OneSided => 0.0,
+            Sidedness::TwoSided => 50.0, // receiver CPU involvement
+        };
+        let wire = bytes * 8.0 / (self.gbps * 1e3); // gbps*1e3 bits per µs
+        (self.setup_us + side + wire * (1.0 + self.bounce_factor)) as Us
+    }
+}
+
+/// Transfer-granularity policy (§3.3.4 discussion). The paper implements
+/// request-level; chunk-level is modeled so the ablation bench can compare.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One transfer of the whole prompt KV after the last chunk prefills.
+    RequestLevel,
+    /// One transfer per chunk, overlapped with subsequent chunk compute.
+    ChunkLevel,
+}
+
+/// The unified API of Figure 9's "unified network transfer abstraction".
+/// Sim mode uses `transfer_us` for virtual waits; real mode's serve path
+/// meters actual byte copies through the same descriptor.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    pub link: Link,
+    pub granularity: Granularity,
+    /// Bytes of KV per token (model-dependent; from CostModel).
+    pub kv_bytes_per_tok: f64,
+}
+
+impl Fabric {
+    pub fn new(link: Link, kv_bytes_per_tok: f64) -> Self {
+        Fabric { link, granularity: Granularity::RequestLevel, kv_bytes_per_tok }
+    }
+
+    /// Time to ship a whole prompt's KV (request-level granularity).
+    pub fn request_transfer_us(&self, prompt_tokens: u32) -> Us {
+        self.link.transfer_us(self.kv_bytes_per_tok * prompt_tokens as f64)
+    }
+
+    /// Time to ship one chunk's KV (chunk-level granularity). The chunks
+    /// overlap compute, so the *exposed* cost of all but the last chunk is
+    /// max(0, transfer - next_chunk_compute).
+    pub fn chunk_transfer_us(&self, chunk_tokens: u32) -> Us {
+        self.link.transfer_us(self.kv_bytes_per_tok * chunk_tokens as f64)
+    }
+
+    /// Total exposed transfer latency for a prompt of `n_chunks` chunks of
+    /// `chunk_tokens` each, when each chunk's shipping overlaps the next
+    /// chunk's compute (`chunk_compute_us`).
+    pub fn exposed_transfer_us(
+        &self,
+        n_chunks: u32,
+        chunk_tokens: u32,
+        chunk_compute_us: Us,
+    ) -> Us {
+        match self.granularity {
+            Granularity::RequestLevel => self.request_transfer_us(n_chunks * chunk_tokens),
+            Granularity::ChunkLevel => {
+                let per = self.chunk_transfer_us(chunk_tokens);
+                let hidden = per.saturating_sub(chunk_compute_us);
+                // n-1 chunks overlap; the last is fully exposed.
+                hidden * n_chunks.saturating_sub(1) as u64 + per
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KV_TOK: f64 = 820_000.0; // OPT-13B fp16 bytes/token
+
+    #[test]
+    fn nvlink_is_much_faster_than_roce() {
+        let nv = Fabric::new(Link::nvlink(), KV_TOK);
+        let roce = Fabric::new(Link::roce200(), KV_TOK);
+        let t_nv = nv.request_transfer_us(512);
+        let t_roce = roce.request_transfer_us(512);
+        assert!(t_nv * 5 < t_roce, "nv={t_nv} roce={t_roce}");
+    }
+
+    #[test]
+    fn indirect_pays_bounce() {
+        let direct = Link { bounce_factor: 0.0, ..Link::indirect_socket() };
+        let indirect = Link::indirect_socket();
+        let bytes = KV_TOK * 100.0;
+        assert!(indirect.transfer_us(bytes) > direct.transfer_us(bytes));
+    }
+
+    #[test]
+    fn transfer_scales_linearly_in_tokens() {
+        let f = Fabric::new(Link::roce200(), KV_TOK);
+        let t1 = f.request_transfer_us(100) as f64;
+        let t2 = f.request_transfer_us(200) as f64;
+        let setup = Link::roce200().setup_us;
+        assert!(((t2 - setup) / (t1 - setup) - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn chunk_level_hides_transfer_behind_compute() {
+        let mut f = Fabric::new(Link::roce200(), KV_TOK);
+        f.granularity = Granularity::ChunkLevel;
+        let per_chunk = f.chunk_transfer_us(512);
+        let compute = per_chunk * 2; // compute dominates: fully hidden
+        let exposed = f.exposed_transfer_us(4, 512, compute);
+        assert_eq!(exposed, per_chunk, "only the last chunk is exposed");
+        // request-level ships everything at the end
+        f.granularity = Granularity::RequestLevel;
+        assert!(f.exposed_transfer_us(4, 512, compute) > exposed);
+    }
+
+    #[test]
+    fn one_sided_cheaper_than_two_sided() {
+        let mut a = Link::roce200();
+        a.sidedness = Sidedness::OneSided;
+        let mut b = Link::roce200();
+        b.sidedness = Sidedness::TwoSided;
+        assert!(a.transfer_us(1e6) < b.transfer_us(1e6));
+    }
+}

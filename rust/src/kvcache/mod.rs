@@ -1,0 +1,268 @@
+//! Paged KV-cache manager (vLLM-style [21]): fixed-size pages, per-request
+//! block tables, swap accounting. Both TetriInfer decode instances and the
+//! coupled baseline manage KV through this allocator; the real-mode engine
+//! additionally mirrors the block tables into the decode artifact's inputs.
+//!
+//! Invariants (property-tested in rust/tests/proptest_kv.rs):
+//!   * page 0 is never allocated (the decode artifact's trash page);
+//!   * no page is owned by two live requests;
+//!   * free + live + 1 == total pages;
+//!   * a request's capacity always covers its written tokens.
+
+use std::collections::HashMap;
+
+use crate::types::ReqId;
+
+#[derive(Clone, Debug)]
+pub struct PagedKvCache {
+    page_size: u32,
+    /// Free list of page ids (page 0 reserved, never enters the list).
+    free: Vec<u32>,
+    /// Live allocations: request → block table (page ids, in order).
+    tables: HashMap<ReqId, BlockTable>,
+    total_pages: u32,
+    /// Cumulative tokens swapped out (for swap-cost accounting).
+    pub swapped_out_tokens: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    pub pages: Vec<u32>,
+    /// Tokens actually written (≤ pages.len() * page_size).
+    pub len: u32,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum AllocError {
+    OutOfPages { needed: u32, free: u32 },
+    UnknownRequest,
+}
+
+impl PagedKvCache {
+    pub fn new(total_pages: u32, page_size: u32) -> Self {
+        assert!(total_pages >= 2, "need at least trash page + one real page");
+        assert!(page_size > 0);
+        PagedKvCache {
+            page_size,
+            free: (1..total_pages).rev().collect(), // page 0 reserved
+            tables: HashMap::new(),
+            total_pages,
+            swapped_out_tokens: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> u32 {
+        self.page_size
+    }
+
+    pub fn free_pages(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn free_tokens(&self) -> u64 {
+        self.free.len() as u64 * self.page_size as u64
+    }
+
+    pub fn total_pages(&self) -> u32 {
+        self.total_pages
+    }
+
+    /// Tokens currently resident across all live requests.
+    pub fn live_tokens(&self) -> u64 {
+        self.tables.values().map(|t| t.len as u64).sum()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn contains(&self, id: ReqId) -> bool {
+        self.tables.contains_key(&id)
+    }
+
+    pub fn table(&self, id: ReqId) -> Option<&BlockTable> {
+        self.tables.get(&id)
+    }
+
+    pub fn pages_for_tokens(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Can `tokens` more tokens be appended for `id` (or allocated fresh)
+    /// without running out of pages?
+    pub fn can_fit(&self, id: ReqId, tokens: u32) -> bool {
+        let (cap, len) = match self.tables.get(&id) {
+            Some(t) => (t.pages.len() as u32 * self.page_size, t.len),
+            None => (0, 0),
+        };
+        let needed_tokens = (len + tokens).saturating_sub(cap);
+        self.pages_for_tokens(needed_tokens) <= self.free.len() as u32
+    }
+
+    /// Allocate a fresh table for `id` sized for `tokens` (e.g. the
+    /// transferred prompt KV). Fails without side effects if pages are
+    /// short.
+    pub fn alloc(&mut self, id: ReqId, tokens: u32) -> Result<(), AllocError> {
+        assert!(!self.tables.contains_key(&id), "double alloc for {id}");
+        let need = self.pages_for_tokens(tokens).max(1);
+        if need > self.free.len() as u32 {
+            return Err(AllocError::OutOfPages { needed: need, free: self.free.len() as u32 });
+        }
+        let pages = self.free.split_off(self.free.len() - need as usize);
+        self.tables.insert(id, BlockTable { pages, len: tokens });
+        Ok(())
+    }
+
+    /// Append one generated token's KV for `id`, growing the table by a
+    /// page when the current capacity is exhausted.
+    pub fn append_token(&mut self, id: ReqId) -> Result<(), AllocError> {
+        let t = self.tables.get_mut(&id).ok_or(AllocError::UnknownRequest)?;
+        let cap = t.pages.len() as u32 * self.page_size;
+        if t.len == cap {
+            let Some(p) = self.free.pop() else {
+                return Err(AllocError::OutOfPages { needed: 1, free: 0 });
+            };
+            t.pages.push(p);
+        }
+        t.len += 1;
+        Ok(())
+    }
+
+    /// Release `id`'s pages back to the free list.
+    pub fn release(&mut self, id: ReqId) -> u32 {
+        match self.tables.remove(&id) {
+            Some(t) => {
+                let n = t.pages.len() as u32;
+                self.free.extend(t.pages);
+                n
+            }
+            None => 0,
+        }
+    }
+
+    /// Swap a victim out (vLLM-style preemption): frees its pages and
+    /// returns the token count that must later be re-fetched. The caller
+    /// keeps the request's metadata to swap it back in via `alloc`.
+    pub fn swap_out(&mut self, id: ReqId) -> Option<u32> {
+        let t = self.tables.remove(&id)?;
+        self.free.extend(t.pages);
+        self.swapped_out_tokens += t.len as u64;
+        Some(t.len)
+    }
+
+    /// Internal consistency check (used by tests and debug assertions).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for p in &self.free {
+            if *p == 0 || *p >= self.total_pages {
+                return Err(format!("free list holds invalid page {p}"));
+            }
+            if !seen.insert(*p) {
+                return Err(format!("page {p} duplicated in free list"));
+            }
+        }
+        for (id, t) in &self.tables {
+            for p in &t.pages {
+                if *p == 0 || *p >= self.total_pages {
+                    return Err(format!("req {id} holds invalid page {p}"));
+                }
+                if !seen.insert(*p) {
+                    return Err(format!("page {p} double-owned (req {id})"));
+                }
+            }
+            let cap = t.pages.len() as u32 * self.page_size;
+            if t.len > cap {
+                return Err(format!("req {id} len {} exceeds capacity {cap}", t.len));
+            }
+            if t.len > 0 && (cap - t.len) >= self.page_size {
+                return Err(format!("req {id} holds a fully-unused page"));
+            }
+        }
+        if seen.len() as u32 != self.total_pages - 1 {
+            return Err(format!(
+                "page leak: tracked {} of {} pages",
+                seen.len(),
+                self.total_pages - 1
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut kv = PagedKvCache::new(10, 16);
+        assert_eq!(kv.free_pages(), 9);
+        kv.alloc(1, 40).unwrap(); // 3 pages
+        assert_eq!(kv.free_pages(), 6);
+        assert_eq!(kv.table(1).unwrap().len, 40);
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.release(1), 3);
+        assert_eq!(kv.free_pages(), 9);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn page_zero_never_allocated() {
+        let mut kv = PagedKvCache::new(4, 8);
+        kv.alloc(1, 8).unwrap();
+        kv.alloc(2, 8).unwrap();
+        kv.alloc(3, 8).unwrap();
+        for id in [1, 2, 3] {
+            assert!(kv.table(id).unwrap().pages.iter().all(|&p| p != 0));
+        }
+        assert_eq!(kv.free_pages(), 0);
+        assert!(kv.alloc(4, 1).is_err());
+    }
+
+    #[test]
+    fn append_grows_pages_lazily() {
+        let mut kv = PagedKvCache::new(5, 4);
+        kv.alloc(1, 3).unwrap(); // 1 page, len 3
+        kv.append_token(1).unwrap(); // fills page: len 4
+        assert_eq!(kv.table(1).unwrap().pages.len(), 1);
+        kv.append_token(1).unwrap(); // allocates 2nd page
+        assert_eq!(kv.table(1).unwrap().pages.len(), 2);
+        assert_eq!(kv.table(1).unwrap().len, 5);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn failed_alloc_has_no_side_effects() {
+        let mut kv = PagedKvCache::new(4, 8);
+        kv.alloc(1, 16).unwrap(); // 2 pages
+        let before = kv.free_pages();
+        assert_eq!(
+            kv.alloc(2, 100),
+            Err(AllocError::OutOfPages { needed: 13, free: 1 })
+        );
+        assert_eq!(kv.free_pages(), before);
+        assert!(!kv.contains(2));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_out_frees_and_accounts() {
+        let mut kv = PagedKvCache::new(8, 4);
+        kv.alloc(1, 10).unwrap(); // 3 pages
+        assert_eq!(kv.swap_out(1), Some(10));
+        assert_eq!(kv.swapped_out_tokens, 10);
+        assert_eq!(kv.free_pages(), 7);
+        assert!(!kv.contains(1));
+    }
+
+    #[test]
+    fn can_fit_accounts_for_partial_pages() {
+        let mut kv = PagedKvCache::new(3, 4);
+        kv.alloc(1, 3).unwrap(); // 1 page, 1 slot spare
+        assert!(kv.can_fit(1, 1)); // fits in the spare slot
+        assert!(kv.can_fit(1, 5)); // needs 1 more page, 1 free
+        assert!(!kv.can_fit(1, 9)); // needs 2 more pages, only 1 free
+        assert!(kv.can_fit(2, 4)); // fresh request, 1 page
+        assert!(!kv.can_fit(2, 5));
+    }
+}

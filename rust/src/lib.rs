@@ -1,0 +1,32 @@
+//! TetriInfer — reproduction of "Inference without Interference:
+//! Disaggregate LLM Inference for Mixed Downstream Workloads" (Hu et al.,
+//! 2024) as a three-layer rust + JAX + Pallas serving stack.
+//!
+//! Layer map (see DESIGN.md):
+//!  * L3 (this crate): disaggregated prefill/decode coordinator — global
+//!    scheduler, cluster monitor, chunked prefill, length-prediction-aware
+//!    two-level scheduling, KV-transfer fabric, instance flipping, plus the
+//!    vanilla-vLLM coupled baseline and a calibrated V100/OPT-13B cost
+//!    model for cluster-scale simulation.
+//!  * L2/L1 (python/, build-time only): OPT-style JAX model whose chunked
+//!    prefill and paged decode attention are Pallas kernels, AOT-lowered to
+//!    HLO text and executed here via the PJRT CPU client (`runtime`).
+
+pub mod baseline;
+pub mod coordinator;
+pub mod costmodel;
+pub mod decode;
+pub mod fabric;
+pub mod kvcache;
+pub mod metrics;
+pub mod predictor;
+pub mod prefill;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod types;
+pub mod util;
+pub mod workload;
+
+pub use baseline::{run_baseline, BaselineConfig};
+pub use coordinator::{run_cluster, Cluster, ClusterConfig};

@@ -1,0 +1,142 @@
+//! Serving metrics (§5): TTFT, JCT, resource-usage time, perf-per-dollar.
+//!
+//! Resource usage follows the paper's definition: "the aggregated wall time
+//! that the prefill and decode instances use to run a particular workload"
+//! (busy time, per instance, summed). perf/$ is throughput-per-resource
+//! normalized against a baseline run:
+//!     perf/$  ∝  (1 / mean JCT) / (resource_time · $rate)
+//! so `perf_per_dollar_vs(base)` reports the paper's "x-fold" improvements.
+
+use crate::types::{RequestRecord, Us, US_PER_SEC};
+use crate::util::{summarize, Summary};
+
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub records: Vec<RequestRecord>,
+    /// Busy µs per instance (index = instance id).
+    pub busy_us: Vec<Us>,
+    /// µs each instance existed in the run (for utilization).
+    pub alive_us: Vec<Us>,
+    /// Total virtual duration of the run.
+    pub makespan_us: Us,
+    /// Swap traffic observed (tokens), for Figure 18 diagnostics.
+    pub swapped_tokens: u64,
+    /// Number of instance flips that occurred (§3.5).
+    pub flips: u32,
+    /// Per-instance (heavy, light) decode assignments by *true* decode
+    /// length — Figure 19's balance diagnostic. Indexed by instance id;
+    /// non-decode instances stay (0, 0).
+    pub decode_assign: Vec<(u32, u32)>,
+}
+
+impl RunMetrics {
+    pub fn ttft_summary(&self) -> Summary {
+        summarize(&self.records.iter().map(|r| r.ttft() as f64 / 1e3).collect::<Vec<_>>())
+    }
+
+    pub fn jct_summary(&self) -> Summary {
+        summarize(&self.records.iter().map(|r| r.jct() as f64 / 1e3).collect::<Vec<_>>())
+    }
+
+    /// Aggregate busy time across instances, in seconds (the paper's
+    /// "resource usage time").
+    pub fn resource_seconds(&self) -> f64 {
+        self.busy_us.iter().sum::<Us>() as f64 / US_PER_SEC as f64
+    }
+
+    /// Generated tokens per second of makespan.
+    pub fn decode_throughput(&self) -> f64 {
+        let toks: u64 = self.records.iter().map(|r| r.decode_len as u64).sum();
+        toks as f64 / (self.makespan_us.max(1) as f64 / US_PER_SEC as f64)
+    }
+
+    /// Performance-per-dollar of this run relative to `base` (>1 = better):
+    /// ratio of (1/meanJCT)/resource.
+    pub fn perf_per_dollar_vs(&self, base: &RunMetrics) -> f64 {
+        let own = 1.0 / (self.jct_summary().mean * self.resource_seconds());
+        let other = 1.0 / (base.jct_summary().mean * base.resource_seconds());
+        own / other
+    }
+
+    /// Mean utilization across instances that existed.
+    pub fn utilization(&self) -> f64 {
+        let busy: f64 = self.busy_us.iter().sum::<Us>() as f64;
+        let alive: f64 = self.alive_us.iter().sum::<Us>() as f64;
+        if alive == 0.0 {
+            0.0
+        } else {
+            busy / alive
+        }
+    }
+
+    /// Formatted single-line comparison against a baseline (used by the
+    /// figure harness to print the paper's headline rows).
+    pub fn vs_row(&self, name: &str, base: &RunMetrics) -> String {
+        let dt = 1.0 - self.ttft_summary().mean / base.ttft_summary().mean;
+        let dj = 1.0 - self.jct_summary().mean / base.jct_summary().mean;
+        let dr = 1.0 - self.resource_seconds() / base.resource_seconds();
+        format!(
+            "{name}: TTFT {:+.0}%  JCT {:+.0}%  resource {:+.0}%  perf/$ {:.2}x",
+            -dt * 100.0,
+            -dj * 100.0,
+            -dr * 100.0,
+            self.perf_per_dollar_vs(base)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::TaskType;
+
+    fn rec(arrival: Us, first: Us, fin: Us, dlen: u32) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            task: TaskType::Chat,
+            prompt_len: 10,
+            decode_len: dlen,
+            arrival,
+            first_token: first,
+            finished: fin,
+            predicted: None,
+        }
+    }
+
+    fn run(jct_ms: f64, resource_s: f64) -> RunMetrics {
+        RunMetrics {
+            records: vec![rec(0, 1_000, (jct_ms * 1e3) as Us, 100)],
+            busy_us: vec![(resource_s * 1e6) as Us],
+            alive_us: vec![(resource_s * 2e6) as Us],
+            makespan_us: 1_000_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ttft_and_jct_in_ms() {
+        let m = run(250.0, 1.0);
+        assert!((m.ttft_summary().mean - 1.0).abs() < 1e-9);
+        assert!((m.jct_summary().mean - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perf_per_dollar_rewards_speed_and_thrift() {
+        let fast_cheap = run(100.0, 1.0);
+        let slow_pricey = run(200.0, 2.0);
+        let ratio = fast_cheap.perf_per_dollar_vs(&slow_pricey);
+        assert!((ratio - 4.0).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn utilization_is_busy_over_alive() {
+        let m = run(100.0, 1.0);
+        assert!((m.utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_counts_generated_tokens() {
+        let m = run(100.0, 1.0); // 100 tokens over 1 s makespan
+        assert!((m.decode_throughput() - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,257 @@
+//! Chunked prefill (§3.3.3): slice and merge scheduled prompts into
+//! fixed-size `ChunkSize` chunks (Figure 7) without altering their order.
+//! The final chunk of a batch may be partial and is padded to ChunkSize —
+//! the accelerator always runs one saturated iteration per chunk.
+//!
+//! Progress tracking is the paper's "simple variable per request that
+//! records the last prefilled token position".
+
+use std::collections::VecDeque;
+
+use crate::types::{ReqId, Request};
+
+/// A contiguous span of one request's prompt inside a chunk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub req: ReqId,
+    /// First prompt position covered by this segment.
+    pub start: u32,
+    pub len: u32,
+    /// True iff this segment completes the request's prompt — its KV can
+    /// be dispatched and its first token emitted.
+    pub last: bool,
+}
+
+/// One fixed-size prefill iteration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub segments: Vec<Segment>,
+    /// Real prompt tokens in the chunk (≤ chunk_size; rest is padding).
+    pub tokens: u32,
+    pub chunk_size: u32,
+}
+
+impl Chunk {
+    pub fn pad(&self) -> u32 {
+        self.chunk_size - self.tokens
+    }
+}
+
+/// In-progress request state inside the chunker.
+#[derive(Clone, Debug)]
+struct Open {
+    req: Request,
+    /// Last prefilled token position (exclusive).
+    done: u32,
+}
+
+#[derive(Debug)]
+pub struct Chunker {
+    pub chunk_size: u32,
+    /// Shortest-remaining-time-first chunk assembly (§3.3.1's noted
+    /// future work): chunked prefill makes prefill preemptible, so at
+    /// every chunk boundary the open request with the least remaining
+    /// prompt goes first. Off by default (paper semantics: FIFO order of
+    /// the scheduled queue, no reordering).
+    pub srtf: bool,
+    open: VecDeque<Open>,
+}
+
+impl Chunker {
+    pub fn new(chunk_size: u32) -> Self {
+        assert!(chunk_size > 0);
+        Chunker { chunk_size, srtf: false, open: VecDeque::new() }
+    }
+
+    pub fn new_srtf(chunk_size: u32) -> Self {
+        Chunker { srtf: true, ..Chunker::new(chunk_size) }
+    }
+
+    /// Admit a scheduled request for slicing.
+    pub fn admit(&mut self, req: Request) {
+        self.open.push_back(Open { req, done: 0 });
+    }
+
+    pub fn pending_tokens(&self) -> u64 {
+        self.open.iter().map(|o| (o.req.prompt_len - o.done) as u64).sum()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.open.is_empty()
+    }
+
+    pub fn n_open(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Build the next fixed-size chunk by slicing the open requests in
+    /// order. Returns None when no prompt tokens are pending.
+    pub fn next_chunk(&mut self) -> Option<Chunk> {
+        if self.open.is_empty() {
+            return None;
+        }
+        if self.srtf {
+            // preempt at the chunk boundary: least remaining prompt first
+            // (stable, so equal-remaining requests keep arrival order)
+            self.open
+                .make_contiguous()
+                .sort_by_key(|o| o.req.prompt_len - o.done);
+        }
+        let mut segments = Vec::new();
+        let mut used = 0u32;
+        while used < self.chunk_size {
+            let Some(o) = self.open.front_mut() else { break };
+            let remaining = o.req.prompt_len - o.done;
+            let take = remaining.min(self.chunk_size - used);
+            let last = take == remaining;
+            segments.push(Segment { req: o.req.id, start: o.done, len: take, last });
+            o.done += take;
+            used += take;
+            if last {
+                self.open.pop_front();
+            }
+        }
+        debug_assert!(!segments.is_empty());
+        Some(Chunk { segments, tokens: used, chunk_size: self.chunk_size })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::TaskType;
+
+    fn req(id: u64, plen: u32) -> Request {
+        Request {
+            id,
+            task: TaskType::Chat,
+            arrival: 0,
+            prompt_len: plen,
+            decode_len: 1,
+            predicted: None,
+        }
+    }
+
+    fn chunker_with(reqs: &[(u64, u32)], size: u32) -> Chunker {
+        let mut c = Chunker::new(size);
+        for (id, p) in reqs {
+            c.admit(req(*id, *p));
+        }
+        c
+    }
+
+    #[test]
+    fn figure7_slicing_and_merging() {
+        // R1=700, R2=300, R3=512, R4=100 with ChunkSize=512 (FCFS order):
+        // C1 = R1[0..512); C2 = R1[512..700) + R2[0..300) + R3[0..24) ...
+        let mut c = chunker_with(&[(1, 700), (2, 300), (3, 512), (4, 100)], 512);
+        let c1 = c.next_chunk().unwrap();
+        assert_eq!(c1.segments, vec![Segment { req: 1, start: 0, len: 512, last: false }]);
+        assert_eq!(c1.pad(), 0);
+
+        let c2 = c.next_chunk().unwrap();
+        assert_eq!(
+            c2.segments,
+            vec![
+                Segment { req: 1, start: 512, len: 188, last: true },
+                Segment { req: 2, start: 0, len: 300, last: true },
+                Segment { req: 3, start: 0, len: 24, last: false },
+            ]
+        );
+
+        let c3 = c.next_chunk().unwrap();
+        assert_eq!(c3.segments[0], Segment { req: 3, start: 24, len: 488, last: true });
+        assert_eq!(c3.segments[1], Segment { req: 4, start: 0, len: 24, last: false });
+
+        let c4 = c.next_chunk().unwrap();
+        assert_eq!(c4.segments, vec![Segment { req: 4, start: 24, len: 76, last: true }]);
+        assert_eq!(c4.tokens, 76);
+        assert_eq!(c4.pad(), 436); // final partial chunk is padded
+
+        assert!(c.next_chunk().is_none());
+    }
+
+    #[test]
+    fn every_prompt_token_covered_exactly_once() {
+        let mut c = chunker_with(&[(1, 137), (2, 1), (3, 512), (4, 999), (5, 64)], 128);
+        let mut covered: std::collections::HashMap<u64, u32> = Default::default();
+        while let Some(ch) = c.next_chunk() {
+            assert!(ch.tokens <= 128);
+            let sum: u32 = ch.segments.iter().map(|s| s.len).sum();
+            assert_eq!(sum, ch.tokens);
+            for s in &ch.segments {
+                let e = covered.entry(s.req).or_default();
+                assert_eq!(*e, s.start, "segments must be contiguous per request");
+                *e += s.len;
+            }
+        }
+        for (id, plen) in [(1, 137), (2, 1), (3, 512), (4, 999), (5, 64)] {
+            assert_eq!(covered[&id], plen, "req {id}");
+        }
+    }
+
+    #[test]
+    fn last_flag_set_exactly_once_per_request() {
+        let mut c = chunker_with(&[(1, 1000), (2, 3), (3, 600)], 256);
+        let mut lasts: Vec<u64> = vec![];
+        while let Some(ch) = c.next_chunk() {
+            for s in ch.segments.iter().filter(|s| s.last) {
+                lasts.push(s.req);
+            }
+        }
+        lasts.sort();
+        assert_eq!(lasts, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn order_is_preserved_no_reordering() {
+        let mut c = chunker_with(&[(9, 100), (4, 100), (7, 100)], 512);
+        let ch = c.next_chunk().unwrap();
+        let ids: Vec<u64> = ch.segments.iter().map(|s| s.req).collect();
+        assert_eq!(ids, vec![9, 4, 7], "chunker must not reorder scheduled requests");
+    }
+
+    #[test]
+    fn srtf_preempts_long_request_at_chunk_boundary() {
+        // R1 = 1000 tokens in flight; a 50-token R2 arrives. SRTF runs R2
+        // ahead of R1's remaining chunks; FIFO would finish R1 first.
+        let mut c = Chunker::new_srtf(512);
+        c.admit(req(1, 1000));
+        let c1 = c.next_chunk().unwrap();
+        assert_eq!(c1.segments[0].req, 1);
+        c.admit(req(2, 50));
+        let c2 = c.next_chunk().unwrap();
+        assert_eq!(c2.segments[0].req, 2, "short request must preempt");
+        assert!(c2.segments[0].last);
+        assert_eq!(c2.segments[1].req, 1); // long request resumes in-chunk
+    }
+
+    #[test]
+    fn srtf_still_covers_everything() {
+        let mut c = Chunker::new_srtf(128);
+        for (id, p) in [(1u64, 999u32), (2, 3), (3, 600), (4, 128)] {
+            c.admit(req(id, p));
+        }
+        let mut covered: std::collections::HashMap<u64, u32> = Default::default();
+        while let Some(ch) = c.next_chunk() {
+            for s in &ch.segments {
+                *covered.entry(s.req).or_default() += s.len;
+            }
+        }
+        assert_eq!(covered[&1], 999);
+        assert_eq!(covered[&2], 3);
+        assert_eq!(covered[&3], 600);
+        assert_eq!(covered[&4], 128);
+    }
+
+    #[test]
+    fn late_admission_joins_next_chunk() {
+        let mut c = chunker_with(&[(1, 600)], 512);
+        let _c1 = c.next_chunk().unwrap();
+        c.admit(req(2, 10));
+        let c2 = c.next_chunk().unwrap();
+        assert_eq!(c2.segments.len(), 2);
+        assert_eq!(c2.segments[1].req, 2);
+        assert_eq!(c2.tokens, 88 + 10);
+    }
+}

@@ -1,0 +1,232 @@
+//! Inter-decode-instance dispatch (§3.3.4): decentralized load balancing
+//! run by each prefill instance once a request's prompt is prefilled.
+//!
+//! The paper's algorithm: (1) split decode instances into α (enough
+//! resources for this request's *predicted* decode footprint) and β (not);
+//! (2) power-of-two [25]: pick two random α members; (3) of the two, pick
+//! the one that minimizes interference — the lowest resulting
+//! heavy:light ratio, spreading heavy decodes evenly (Figure 5's lesson).
+//!
+//! `Random` and `Imbalance` are Figure 19's comparison policies.
+
+use crate::types::{BucketPrediction, InstanceId, HEAVY_DECODE_TOKENS};
+use crate::util::Pcg;
+
+/// A decode instance's load as last broadcast by the cluster monitor
+/// (§3.2) — deliberately stale information.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecodeLoad {
+    pub instance: InstanceId,
+    /// KV tokens still free in the paged pool.
+    pub free_kv_tokens: u64,
+    /// Running + waiting requests predicted heavy-decode.
+    pub n_heavy: u32,
+    /// Running + waiting requests predicted light-decode.
+    pub n_light: u32,
+    /// Requests waiting for a batch slot.
+    pub queue_len: u32,
+}
+
+impl DecodeLoad {
+    /// Interference score after hypothetically adding a request of the
+    /// given class. The paper minimizes the average heavy:light ratio,
+    /// i.e. spreads heavy decodes evenly; comparing (heavy, light) counts
+    /// lexicographically achieves exactly that without the ratio's
+    /// pathology of turning light-rich instances into heavy magnets.
+    fn interference_after(&self, heavy: bool) -> (u32, u32) {
+        (self.n_heavy + heavy as u32, self.n_light + !heavy as u32)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// The paper's decentralized power-of-two + least-interference.
+    PowerOfTwo,
+    /// Uniform random decode instance (Figure 19 baseline).
+    Random,
+    /// Worst case: heavy decodes always pile onto the same instance
+    /// (Figure 19's "imbalance").
+    Imbalance,
+    /// Classic join-least-loaded (extra ablation, not in the paper).
+    LeastLoad,
+}
+
+impl DispatchPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchPolicy::PowerOfTwo => "power-of-two",
+            DispatchPolicy::Random => "random",
+            DispatchPolicy::Imbalance => "imbalance",
+            DispatchPolicy::LeastLoad => "least-load",
+        }
+    }
+}
+
+/// Predicted KV footprint (tokens) of a request's decode phase: prompt KV
+/// plus the predicted generation, using the range's upper end for admission
+/// safety (the paper uses the lower end for *memory provisioning* inside
+/// the decode scheduler; the dispatcher just needs "enough resources").
+pub fn predicted_footprint(prompt_len: u32, pred: Option<BucketPrediction>, granularity: u32) -> u64 {
+    let gen = match pred {
+        Some(p) if p.hi != u32::MAX => p.hi,
+        Some(p) => p.lo + granularity, // top bucket: lo + one granule
+        None => granularity,           // unpredicted: assume one granule
+    };
+    prompt_len as u64 + gen as u64
+}
+
+/// Choose a decode instance for a prefilled request.
+pub fn choose(
+    loads: &[DecodeLoad],
+    prompt_len: u32,
+    pred: Option<BucketPrediction>,
+    granularity: u32,
+    policy: DispatchPolicy,
+    rng: &mut Pcg,
+) -> Option<InstanceId> {
+    if loads.is_empty() {
+        return None;
+    }
+    let heavy = pred.map(|p| p.predicts_heavy(HEAVY_DECODE_TOKENS)).unwrap_or(false);
+    match policy {
+        DispatchPolicy::Random => Some(loads[rng.index(loads.len())].instance),
+        DispatchPolicy::Imbalance => {
+            // Adversarial: all heavy decodes to the first instance, the
+            // rest spread randomly over the others.
+            if heavy || loads.len() == 1 {
+                Some(loads[0].instance)
+            } else {
+                Some(loads[1 + rng.index(loads.len() - 1)].instance)
+            }
+        }
+        DispatchPolicy::LeastLoad => loads
+            .iter()
+            .max_by_key(|l| l.free_kv_tokens)
+            .map(|l| l.instance),
+        DispatchPolicy::PowerOfTwo => {
+            let need = predicted_footprint(prompt_len, pred, granularity);
+            let alpha: Vec<&DecodeLoad> =
+                loads.iter().filter(|l| l.free_kv_tokens >= need).collect();
+            let pick_two = |set: &[&DecodeLoad], rng: &mut Pcg| -> (usize, usize) {
+                let a = rng.index(set.len());
+                if set.len() == 1 {
+                    return (a, a);
+                }
+                let mut b = rng.index(set.len() - 1);
+                if b >= a {
+                    b += 1;
+                }
+                (a, b)
+            };
+            if alpha.is_empty() {
+                // β fallback: the least-loaded instance, which will queue
+                // the request until pages free up.
+                return loads.iter().max_by_key(|l| l.free_kv_tokens).map(|l| l.instance);
+            }
+            let (a, b) = pick_two(&alpha, rng);
+            let (la, lb) = (alpha[a], alpha[b]);
+            let (ia, ib) = (la.interference_after(heavy), lb.interference_after(heavy));
+            // least interference; tie-break on free memory then queue
+            let winner = if (ia, std::cmp::Reverse(la.free_kv_tokens), la.queue_len)
+                <= (ib, std::cmp::Reverse(lb.free_kv_tokens), lb.queue_len)
+            {
+                la
+            } else {
+                lb
+            };
+            Some(winner.instance)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::BucketPrediction;
+
+    fn load(instance: usize, free: u64, h: u32, l: u32) -> DecodeLoad {
+        DecodeLoad { instance, free_kv_tokens: free, n_heavy: h, n_light: l, queue_len: 0 }
+    }
+
+    fn heavy_pred() -> Option<BucketPrediction> {
+        Some(BucketPrediction::from_bucket(3, 200, 8)) // [600, 800)
+    }
+
+    fn light_pred() -> Option<BucketPrediction> {
+        Some(BucketPrediction::from_bucket(0, 200, 8)) // [0, 200)
+    }
+
+    #[test]
+    fn footprint_uses_range_upper_bound() {
+        assert_eq!(predicted_footprint(100, heavy_pred(), 200), 100 + 800);
+        let top = Some(BucketPrediction::from_bucket(7, 200, 8));
+        assert_eq!(predicted_footprint(0, top, 200), 1400 + 200);
+        assert_eq!(predicted_footprint(50, None, 200), 250);
+    }
+
+    #[test]
+    fn power_of_two_filters_alpha_by_capacity() {
+        let mut rng = Pcg::new(1);
+        // only instance 2 can fit the 900-token footprint
+        let loads = vec![load(0, 100, 0, 0), load(1, 200, 0, 0), load(2, 5000, 0, 0)];
+        for _ in 0..32 {
+            let got = choose(&loads, 100, heavy_pred(), 200, DispatchPolicy::PowerOfTwo, &mut rng);
+            assert_eq!(got, Some(2));
+        }
+    }
+
+    #[test]
+    fn power_of_two_spreads_heavy_evenly() {
+        let mut rng = Pcg::new(2);
+        let mut loads = vec![load(0, 1 << 20, 0, 4), load(1, 1 << 20, 0, 4), load(2, 1 << 20, 0, 4)];
+        let mut counts = [0u32; 3];
+        for _ in 0..300 {
+            let i = choose(&loads, 10, heavy_pred(), 200, DispatchPolicy::PowerOfTwo, &mut rng).unwrap();
+            counts[i] += 1;
+            loads[i].n_heavy += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min < 1.5, "heavy spread uneven: {counts:?}");
+    }
+
+    #[test]
+    fn beta_fallback_picks_most_free() {
+        let mut rng = Pcg::new(3);
+        let loads = vec![load(0, 10, 0, 0), load(1, 50, 0, 0)];
+        let got = choose(&loads, 1000, heavy_pred(), 200, DispatchPolicy::PowerOfTwo, &mut rng);
+        assert_eq!(got, Some(1));
+    }
+
+    #[test]
+    fn imbalance_targets_first_instance_for_heavy() {
+        let mut rng = Pcg::new(4);
+        let loads = vec![load(0, 100, 0, 0), load(1, 100, 0, 0), load(2, 100, 0, 0)];
+        for _ in 0..16 {
+            assert_eq!(
+                choose(&loads, 10, heavy_pred(), 200, DispatchPolicy::Imbalance, &mut rng),
+                Some(0)
+            );
+            let l = choose(&loads, 10, light_pred(), 200, DispatchPolicy::Imbalance, &mut rng);
+            assert_ne!(l, Some(0));
+        }
+    }
+
+    #[test]
+    fn random_covers_all_instances() {
+        let mut rng = Pcg::new(5);
+        let loads = vec![load(0, 100, 0, 0), load(1, 100, 0, 0), load(2, 100, 0, 0)];
+        let mut seen = [false; 3];
+        for _ in 0..64 {
+            let i = choose(&loads, 10, light_pred(), 200, DispatchPolicy::Random, &mut rng).unwrap();
+            seen[i] = true;
+        }
+        assert_eq!(seen, [true, true, true]);
+    }
+
+    #[test]
+    fn empty_cluster_yields_none() {
+        let mut rng = Pcg::new(6);
+        assert_eq!(choose(&[], 1, None, 200, DispatchPolicy::PowerOfTwo, &mut rng), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! Prefill instance (§3.3): local scheduler → length predictor → chunked
+//! prefill → dispatcher. The sim/real drivers wire these pieces to an
+//! engine; all policy logic lives here.
+
+pub mod chunker;
+pub mod dispatcher;
+pub mod scheduler;
+
+pub use chunker::{Chunk, Chunker, Segment};
+pub use dispatcher::{choose, predicted_footprint, DecodeLoad, DispatchPolicy};
+pub use scheduler::{PrefillPolicy, PrefillScheduler};

@@ -1,0 +1,170 @@
+//! Prefill instance's local scheduler (§3.3.1): FCFS / SJF / LJF over a
+//! raw queue, with a `PrefillSchedBatch` anti-starvation window — only
+//! `sched_batch` requests are sorted and committed at a time, so a stream
+//! of short jobs cannot starve a long one forever (and vice versa).
+
+use std::collections::VecDeque;
+
+use crate::types::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillPolicy {
+    Fcfs,
+    /// Shortest-job-first: prefill time is accurately predictable from
+    /// prompt length, so SJF is exact (not estimated).
+    Sjf,
+    Ljf,
+}
+
+impl PrefillPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            PrefillPolicy::Fcfs => "FCFS",
+            PrefillPolicy::Sjf => "SJF",
+            PrefillPolicy::Ljf => "LJF",
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct PrefillScheduler {
+    pub policy: PrefillPolicy,
+    /// PrefillSchedBatch: how many requests are sorted per scheduling round.
+    pub sched_batch: usize,
+    raw: VecDeque<Request>,
+    scheduled: VecDeque<Request>,
+}
+
+impl PrefillScheduler {
+    pub fn new(policy: PrefillPolicy, sched_batch: usize) -> Self {
+        assert!(sched_batch > 0);
+        PrefillScheduler { policy, sched_batch, raw: VecDeque::new(), scheduled: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.raw.push_back(req);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.raw.len() + self.scheduled.len()
+    }
+
+    pub fn queued_tokens(&self) -> u64 {
+        self.raw.iter().chain(self.scheduled.iter()).map(|r| r.prompt_len as u64).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued() == 0
+    }
+
+    /// Move one scheduling batch from raw → scheduled, sorted per policy.
+    fn refill(&mut self) {
+        if !self.scheduled.is_empty() || self.raw.is_empty() {
+            return;
+        }
+        let n = self.sched_batch.min(self.raw.len());
+        let mut batch: Vec<Request> = self.raw.drain(..n).collect();
+        match self.policy {
+            PrefillPolicy::Fcfs => {}
+            // stable sort keeps arrival order among equal lengths
+            PrefillPolicy::Sjf => batch.sort_by_key(|r| r.prompt_len),
+            PrefillPolicy::Ljf => batch.sort_by_key(|r| std::cmp::Reverse(r.prompt_len)),
+        }
+        self.scheduled.extend(batch);
+    }
+
+    /// Next request to prefill (consumed by the chunker).
+    pub fn pop(&mut self) -> Option<Request> {
+        self.refill();
+        self.scheduled.pop_front()
+    }
+
+    /// Peek without consuming (used by backpressure checks).
+    pub fn peek(&mut self) -> Option<&Request> {
+        self.refill();
+        self.scheduled.front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::TaskType;
+
+    fn req(id: u64, plen: u32) -> Request {
+        Request {
+            id,
+            task: TaskType::Chat,
+            arrival: id,
+            prompt_len: plen,
+            decode_len: 10,
+            predicted: None,
+        }
+    }
+
+    fn drain(s: &mut PrefillScheduler) -> Vec<u64> {
+        std::iter::from_fn(|| s.pop()).map(|r| r.id).collect()
+    }
+
+    #[test]
+    fn fcfs_keeps_arrival_order() {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Fcfs, 16);
+        for (i, p) in [50, 10, 30].iter().enumerate() {
+            s.push(req(i as u64, *p));
+        }
+        assert_eq!(drain(&mut s), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sjf_sorts_ascending_within_batch() {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Sjf, 16);
+        for (i, p) in [50, 10, 30].iter().enumerate() {
+            s.push(req(i as u64, *p));
+        }
+        assert_eq!(drain(&mut s), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn ljf_sorts_descending_within_batch() {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Ljf, 16);
+        for (i, p) in [50, 10, 30].iter().enumerate() {
+            s.push(req(i as u64, *p));
+        }
+        assert_eq!(drain(&mut s), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn sched_batch_prevents_starvation() {
+        // One long job among shorts: with batch=2, the long job must be
+        // scheduled within its window even under SJF.
+        let mut s = PrefillScheduler::new(PrefillPolicy::Sjf, 2);
+        s.push(req(0, 1000)); // long, arrives first
+        s.push(req(1, 1));
+        s.push(req(2, 2));
+        s.push(req(3, 3));
+        let order = drain(&mut s);
+        let pos = order.iter().position(|&id| id == 0).unwrap();
+        assert!(pos < 2, "long job starved: order {order:?}");
+    }
+
+    #[test]
+    fn late_arrivals_do_not_jump_committed_batch() {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Sjf, 4);
+        s.push(req(0, 100));
+        s.push(req(1, 200));
+        assert_eq!(s.pop().unwrap().id, 0); // batch {0,1} committed
+        s.push(req(2, 1)); // shorter, but next batch
+        assert_eq!(s.pop().unwrap().id, 1);
+        assert_eq!(s.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn queued_tokens_counts_both_queues() {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Fcfs, 1);
+        s.push(req(0, 10));
+        s.push(req(1, 20));
+        s.peek(); // forces one refill
+        assert_eq!(s.queued_tokens(), 30);
+        assert_eq!(s.queued(), 2);
+    }
+}

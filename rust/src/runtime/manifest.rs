@@ -1,0 +1,189 @@
+//! artifacts/manifest.json loader: shapes, argument order, and model
+//! configuration shared between aot.py and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl LeafSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    /// Which param bundle feeds this artifact ("params"/"predictor_params").
+    pub params: String,
+    pub args: Vec<ArgSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelShapes {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub chunk: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct DecodeShapes {
+    pub batch: usize,
+    pub page_size: usize,
+    pub n_pages: usize,
+    pub max_pages_per_req: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct PredictorShapes {
+    pub max_prompt: usize,
+    pub n_buckets: usize,
+    pub granularity: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelShapes,
+    pub decode: DecodeShapes,
+    pub predictor: PredictorShapes,
+    pub params_file: PathBuf,
+    pub params_leaves: Vec<LeafSpec>,
+    pub predictor_params_file: PathBuf,
+    pub predictor_params_leaves: Vec<LeafSpec>,
+    pub prefill: ArtifactSpec,
+    pub decode_art: ArtifactSpec,
+    pub predictor_art: ArtifactSpec,
+    /// Reported fine-tune accuracy at granularity 200 (None if untrained).
+    pub predictor_acc200: Option<f64>,
+}
+
+fn usize_at(j: &Json, path: &[&str]) -> Result<usize> {
+    j.at(path)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest missing {}", path.join(".")))
+}
+
+fn leaves(j: &Json, key: &str) -> Result<(PathBuf, Vec<LeafSpec>)> {
+    let node = j.get(key).ok_or_else(|| anyhow!("manifest missing {key}"))?;
+    let file = node
+        .get("file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{key}.file missing"))?;
+    let leaves = node
+        .get("leaves")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{key}.leaves missing"))?
+        .iter()
+        .map(|l| {
+            Ok(LeafSpec {
+                name: l.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                shape: l
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("leaf shape missing"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((PathBuf::from(file), leaves))
+}
+
+fn artifact(j: &Json, key: &str) -> Result<ArtifactSpec> {
+    let node = j
+        .at(&["artifacts", key])
+        .ok_or_else(|| anyhow!("manifest missing artifacts.{key}"))?;
+    Ok(ArtifactSpec {
+        file: PathBuf::from(
+            node.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("file missing"))?,
+        ),
+        params: node.get("params").and_then(Json::as_str).unwrap_or("params").to_string(),
+        args: node
+            .get("args")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("args missing"))?
+            .iter()
+            .map(|a| ArgSpec {
+                name: a.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                shape: a
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                dtype: a.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+            })
+            .collect(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let model = ModelShapes {
+            vocab: usize_at(&j, &["config", "model", "vocab"])?,
+            d_model: usize_at(&j, &["config", "model", "d_model"])?,
+            n_layers: usize_at(&j, &["config", "model", "n_layers"])?,
+            n_heads: usize_at(&j, &["config", "model", "n_heads"])?,
+            d_head: usize_at(&j, &["config", "model", "d_head"])?,
+            max_seq: usize_at(&j, &["config", "model", "max_seq"])?,
+            chunk: usize_at(&j, &["config", "model", "chunk"])?,
+        };
+        let decode = DecodeShapes {
+            batch: usize_at(&j, &["config", "decode", "batch"])?,
+            page_size: usize_at(&j, &["config", "decode", "page_size"])?,
+            n_pages: usize_at(&j, &["config", "decode", "n_pages"])?,
+            max_pages_per_req: usize_at(&j, &["config", "decode", "max_pages_per_req"])?,
+        };
+        let predictor = PredictorShapes {
+            max_prompt: usize_at(&j, &["config", "predictor", "max_prompt"])?,
+            n_buckets: usize_at(&j, &["config", "predictor", "n_buckets"])?,
+            granularity: usize_at(&j, &["config", "predictor", "granularity"])?,
+        };
+        let (params_file, params_leaves) = leaves(&j, "params")?;
+        let (pp_file, pp_leaves) = leaves(&j, "predictor_params")?;
+        Ok(Manifest {
+            model,
+            decode,
+            predictor,
+            params_file,
+            params_leaves,
+            predictor_params_file: pp_file,
+            predictor_params_leaves: pp_leaves,
+            prefill: artifact(&j, "prefill")?,
+            decode_art: artifact(&j, "decode")?,
+            predictor_art: artifact(&j, "predictor")?,
+            predictor_acc200: j.at(&["predictor_metrics", "acc_200"]).and_then(Json::as_f64),
+            dir,
+        })
+    }
+
+    /// Total floats expected in a params bundle (size check for the .bin).
+    pub fn param_numel(leaves: &[LeafSpec]) -> usize {
+        leaves.iter().map(LeafSpec::numel).sum()
+    }
+}

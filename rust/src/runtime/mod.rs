@@ -1,0 +1,227 @@
+//! PJRT runtime: load the AOT'd HLO-text artifacts, keep the weights
+//! device-resident, and expose typed prefill/decode/predict calls.
+//!
+//! Interchange is HLO *text* (see aot.py / /opt/xla-example/README.md):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute_b`. Weights upload once at load time;
+//! each call uploads only the (small) data arguments plus the KV state,
+//! and the returned tuple is synced back to host.
+
+pub mod manifest;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::Manifest;
+
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Host-side tensor state for one engine call (f32 payloads).
+pub struct HostTensors;
+
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    prefill_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    predictor_exe: PjRtLoadedExecutable,
+    /// Target-model weights, uploaded once.
+    params: Vec<PjRtBuffer>,
+    pred_params: Vec<PjRtBuffer>,
+}
+
+/// Read a flat f32 (little-endian) params file and split it per leaf spec.
+fn read_params_bin(path: &Path, leaves: &[manifest::LeafSpec]) -> Result<Vec<(Vec<f32>, Vec<usize>)>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let want = manifest::Manifest::param_numel(leaves) * 4;
+    if bytes.len() != want {
+        bail!("{} is {} bytes, manifest expects {}", path.display(), bytes.len(), want);
+    }
+    let mut out = Vec::with_capacity(leaves.len());
+    let mut off = 0usize;
+    for leaf in leaves {
+        let n = leaf.numel();
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = &bytes[off + 4 * i..off + 4 * i + 4];
+            v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        off += 4 * n;
+        out.push((v, leaf.shape.clone()));
+    }
+    Ok(out)
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+
+        let prefill_exe = compile(&client, &manifest.dir.join(&manifest.prefill.file))?;
+        let decode_exe = compile(&client, &manifest.dir.join(&manifest.decode_art.file))?;
+        let predictor_exe = compile(&client, &manifest.dir.join(&manifest.predictor_art.file))?;
+
+        let upload = |file: &Path, leaves: &[manifest::LeafSpec]| -> Result<Vec<PjRtBuffer>> {
+            read_params_bin(file, leaves)?
+                .into_iter()
+                .map(|(data, shape)| {
+                    let dims = if shape.is_empty() { vec![] } else { shape };
+                    client
+                        .buffer_from_host_buffer::<f32>(&data, &dims, None)
+                        .map_err(|e| anyhow!("uploading params: {e:?}"))
+                })
+                .collect()
+        };
+        let params = upload(&manifest.dir.join(&manifest.params_file), &manifest.params_leaves)?;
+        let pred_params = upload(
+            &manifest.dir.join(&manifest.predictor_params_file),
+            &manifest.predictor_params_leaves,
+        )?;
+        Ok(Engine { client, manifest, prefill_exe, decode_exe, predictor_exe, params, pred_params })
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow!("upload f32: {e:?}"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, params: &[PjRtBuffer], data: Vec<PjRtBuffer>) -> Result<Vec<Literal>> {
+        let mut args: Vec<&PjRtBuffer> = params.iter().collect();
+        let extra: Vec<PjRtBuffer> = data;
+        for b in &extra {
+            args.push(b);
+        }
+        let out = exe.execute_b(&args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("sync: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// KV cache element count for one request's contiguous prefill cache.
+    pub fn prefill_kv_numel(&self) -> usize {
+        let m = &self.manifest.model;
+        m.n_layers * m.max_seq * m.n_heads * m.d_head
+    }
+
+    /// KV pool element count for the shared decode pool.
+    pub fn decode_pool_numel(&self) -> usize {
+        let m = &self.manifest.model;
+        let d = &self.manifest.decode;
+        m.n_layers * d.n_pages * d.page_size * m.n_heads * m.d_head
+    }
+
+    /// Run one chunk of one request's prompt. `k_cache`/`v_cache` are the
+    /// request's contiguous caches (mutated in place). Returns the
+    /// next-token logits after the last valid token.
+    pub fn prefill_segment(
+        &self,
+        tokens: &[i32],
+        start: i32,
+        valid: i32,
+        k_cache: &mut Vec<f32>,
+        v_cache: &mut Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        if tokens.len() != m.chunk {
+            bail!("prefill chunk must be exactly {} tokens (padded)", m.chunk);
+        }
+        let kv_dims = [m.n_layers, m.max_seq, m.n_heads, m.d_head];
+        let data = vec![
+            self.buf_i32(tokens, &[m.chunk])?,
+            self.buf_i32(&[start], &[])?,
+            self.buf_i32(&[valid], &[])?,
+            self.buf_f32(k_cache, &kv_dims)?,
+            self.buf_f32(v_cache, &kv_dims)?,
+        ];
+        let mut outs = self.run(&self.prefill_exe, &self.params, data)?;
+        if outs.len() != 3 {
+            bail!("prefill artifact returned {} outputs, want 3", outs.len());
+        }
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        *k_cache = k_new.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        *v_cache = v_new.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Run one decode iteration over the shared paged pool. Returns
+    /// per-slot logits ([batch, vocab] flattened).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_step(
+        &self,
+        tokens: &[i32],
+        positions: &[i32],
+        k_pool: &mut Vec<f32>,
+        v_pool: &mut Vec<f32>,
+        block_tables: &[i32],
+        seq_lens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        let d = &self.manifest.decode;
+        if tokens.len() != d.batch || positions.len() != d.batch || seq_lens.len() != d.batch {
+            bail!("decode batch must be exactly {}", d.batch);
+        }
+        if block_tables.len() != d.batch * d.max_pages_per_req {
+            bail!("block_tables must be {}x{}", d.batch, d.max_pages_per_req);
+        }
+        let pool_dims = [m.n_layers, d.n_pages * d.page_size, m.n_heads, m.d_head];
+        let data = vec![
+            self.buf_i32(tokens, &[d.batch])?,
+            self.buf_i32(positions, &[d.batch])?,
+            self.buf_f32(k_pool, &pool_dims)?,
+            self.buf_f32(v_pool, &pool_dims)?,
+            self.buf_i32(block_tables, &[d.batch, d.max_pages_per_req])?,
+            self.buf_i32(seq_lens, &[d.batch])?,
+        ];
+        let mut outs = self.run(&self.decode_exe, &self.params, data)?;
+        if outs.len() != 3 {
+            bail!("decode artifact returned {} outputs, want 3", outs.len());
+        }
+        let v_new = outs.pop().unwrap();
+        let k_new = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        *k_pool = k_new.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        *v_pool = v_new.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Classify a prompt into a decode-length bucket. Returns bucket logits.
+    pub fn predict_len(&self, tokens: &[i32], valid: i32) -> Result<Vec<f32>> {
+        let p = &self.manifest.predictor;
+        if tokens.len() != p.max_prompt {
+            bail!("predictor prompt must be padded to {}", p.max_prompt);
+        }
+        let data = vec![self.buf_i32(tokens, &[p.max_prompt])?, self.buf_i32(&[valid], &[])?];
+        let mut outs = self.run(&self.predictor_exe, &self.pred_params, data)?;
+        let logits = outs
+            .pop()
+            .ok_or_else(|| anyhow!("predictor artifact returned no outputs"))?;
+        logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Argmax helper for sampling (greedy decoding in the examples).
+    pub fn argmax(xs: &[f32]) -> usize {
+        xs.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}

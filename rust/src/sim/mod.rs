@@ -1,0 +1,149 @@
+//! Discrete-event simulation core: a virtual clock and a monotone event
+//! queue. Every figure-regeneration run is a deterministic DES over this
+//! substrate; real mode replaces the clock with wall time but reuses all
+//! policy code.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::types::Us;
+
+/// Event payloads understood by the cluster driver. Kept as a plain enum
+/// (not boxed closures) so runs are deterministic and debuggable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A request arrives at the global scheduler.
+    Arrival(crate::types::ReqId),
+    /// A prefill instance finished its current iteration.
+    PrefillIterDone { instance: usize },
+    /// Sequential-mode length prediction finished for a request.
+    PredictDone { instance: usize, req: crate::types::ReqId },
+    /// A KV-cache transfer to a decode instance completed.
+    TransferDone { instance: usize, req: crate::types::ReqId },
+    /// A decode instance finished its current iteration.
+    DecodeIterDone { instance: usize },
+    /// Cluster monitor tick: refresh load stats, broadcast, maybe flip.
+    MonitorTick,
+    /// An instance finished draining and flips role (§3.5).
+    FlipDone { instance: usize },
+    /// Coupled (vLLM baseline) instance finished an iteration.
+    CoupledIterDone { instance: usize },
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Scheduled {
+    at: Us,
+    seq: u64, // tiebreaker: FIFO among same-time events
+    ev: Event,
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Virtual-time event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Scheduled>>,
+    now: Us,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> Us {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `ev` at absolute time `at` (clamped to now — the DES never
+    /// travels backwards).
+    pub fn schedule_at(&mut self, at: Us, ev: Event) {
+        let at = at.max(self.now);
+        self.heap.push(Reverse(Scheduled { at, seq: self.seq, ev }));
+        self.seq += 1;
+    }
+
+    /// Schedule `ev` after a delay relative to now.
+    pub fn schedule_in(&mut self, delay: Us, ev: Event) {
+        self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(Us, Event)> {
+        let Reverse(s) = self.heap.pop()?;
+        debug_assert!(s.at >= self.now, "time went backwards");
+        self.now = s.at;
+        Some((s.at, s.ev))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(30, Event::MonitorTick);
+        q.schedule_at(10, Event::Arrival(1));
+        q.schedule_at(20, Event::Arrival(2));
+        let order: Vec<Us> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn fifo_among_equal_times() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5, Event::Arrival(1));
+        q.schedule_at(5, Event::Arrival(2));
+        q.schedule_at(5, Event::Arrival(3));
+        let ids: Vec<_> = std::iter::from_fn(|| q.pop())
+            .map(|(_, e)| match e {
+                Event::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule_in(100, Event::MonitorTick);
+        q.pop();
+        assert_eq!(q.now(), 100);
+        // scheduling in the past clamps to now
+        q.schedule_at(50, Event::Arrival(9));
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 100);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_in(10, Event::MonitorTick);
+        q.pop();
+        q.schedule_in(10, Event::MonitorTick);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 20);
+    }
+}

@@ -1,0 +1,186 @@
+//! Core request/phase/instance types shared by every module.
+//!
+//! Times are virtual microseconds (`Us`) in sim mode and wall-clock
+//! microseconds in real mode — policy code never knows the difference.
+
+pub type Us = u64;
+pub type ReqId = u64;
+pub type InstanceId = usize;
+
+pub const US_PER_MS: u64 = 1_000;
+pub const US_PER_SEC: u64 = 1_000_000;
+
+/// Downstream task family (Figure 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskType {
+    Chat,
+    Summarization,
+    Creation,
+}
+
+impl TaskType {
+    pub const ALL: [TaskType; 3] =
+        [TaskType::Chat, TaskType::Summarization, TaskType::Creation];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskType::Chat => "chat",
+            TaskType::Summarization => "summarization",
+            TaskType::Creation => "creation",
+        }
+    }
+}
+
+/// Light/heavy classification thresholds (§5.1): prefill heavy above 512
+/// prompt tokens, decode heavy above 128 generated tokens (ShareGPT answer
+/// median).
+pub const HEAVY_PREFILL_TOKENS: u32 = 512;
+pub const HEAVY_DECODE_TOKENS: u32 = 128;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefilling,
+    Transferring,
+    Decoding,
+    Finished,
+}
+
+/// One inference request as the serving system sees it.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: ReqId,
+    pub task: TaskType,
+    pub arrival: Us,
+    pub prompt_len: u32,
+    /// Ground-truth generation length. In sim mode the decode instance
+    /// "discovers" it one token at a time; schedulers must not read it —
+    /// they only see `predicted` (this separation is what Figure 18
+    /// ablates).
+    pub decode_len: u32,
+    /// Predicted decode-length bucket (filled by the length predictor).
+    pub predicted: Option<BucketPrediction>,
+}
+
+impl Request {
+    pub fn heavy_prefill(&self) -> bool {
+        self.prompt_len > HEAVY_PREFILL_TOKENS
+    }
+
+    pub fn heavy_decode(&self) -> bool {
+        self.decode_len > HEAVY_DECODE_TOKENS
+    }
+}
+
+/// A predicted decode-length range [lo, hi) in tokens (§3.3.2: ranges, not
+/// exact lengths — schedulers use lo/hi as resource bounds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BucketPrediction {
+    pub bucket: u8,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl BucketPrediction {
+    pub fn from_bucket(bucket: u8, granularity: u32, n_buckets: u8) -> Self {
+        let lo = bucket as u32 * granularity;
+        let hi = if bucket + 1 >= n_buckets {
+            u32::MAX
+        } else {
+            (bucket as u32 + 1) * granularity
+        };
+        BucketPrediction { bucket, lo, hi }
+    }
+
+    /// "Heavy decode" classification by the range midpoint (a bucket that
+    /// merely brushes the threshold — e.g. [0,200) vs threshold 128 —
+    /// stays light; the paper spreads *expected* heavy decodes).
+    pub fn predicts_heavy(&self, threshold: u32) -> bool {
+        if self.hi == u32::MAX {
+            return self.lo >= threshold;
+        }
+        (self.lo + self.hi) / 2 > threshold
+    }
+}
+
+/// What an instance is currently serving (§3.5: roles are virtual and flip).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Prefill,
+    Decode,
+    /// Coupled prefill+decode — the vanilla-vLLM baseline role.
+    Coupled,
+}
+
+/// Per-request serving record used for end-of-run metrics.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: ReqId,
+    pub task: TaskType,
+    pub prompt_len: u32,
+    pub decode_len: u32,
+    pub arrival: Us,
+    /// Time the first token was produced (end of prefill) — TTFT basis.
+    pub first_token: Us,
+    /// Time the last token was produced — JCT basis.
+    pub finished: Us,
+    pub predicted: Option<BucketPrediction>,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> Us {
+        self.first_token.saturating_sub(self.arrival)
+    }
+
+    pub fn jct(&self) -> Us {
+        self.finished.saturating_sub(self.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_ranges() {
+        let b = BucketPrediction::from_bucket(0, 200, 8);
+        assert_eq!((b.lo, b.hi), (0, 200));
+        let b = BucketPrediction::from_bucket(7, 200, 8);
+        assert_eq!(b.lo, 1400);
+        assert_eq!(b.hi, u32::MAX);
+    }
+
+    #[test]
+    fn heavy_classification() {
+        let mut r = Request {
+            id: 0,
+            task: TaskType::Chat,
+            arrival: 0,
+            prompt_len: 512,
+            decode_len: 128,
+            predicted: None,
+        };
+        assert!(!r.heavy_prefill());
+        assert!(!r.heavy_decode());
+        r.prompt_len = 513;
+        r.decode_len = 129;
+        assert!(r.heavy_prefill());
+        assert!(r.heavy_decode());
+    }
+
+    #[test]
+    fn record_times() {
+        let rec = RequestRecord {
+            id: 1,
+            task: TaskType::Chat,
+            prompt_len: 10,
+            decode_len: 5,
+            arrival: 100,
+            first_token: 150,
+            finished: 300,
+            predicted: None,
+        };
+        assert_eq!(rec.ttft(), 50);
+        assert_eq!(rec.jct(), 200);
+    }
+}

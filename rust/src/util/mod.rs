@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch (no external crates vendored for
+//! these): deterministic RNG, summary statistics, and a JSON parser.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Pcg;
+pub use stats::{percentile, summarize, Histogram, Summary};

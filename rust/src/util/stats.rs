@@ -1,0 +1,115 @@
+//! Summary statistics for latency/throughput series (used by metrics and
+//! every figure regenerator).
+
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+    pub sum: f64,
+}
+
+/// Percentile by linear interpolation on a sorted copy.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let sum: f64 = s.iter().sum();
+    Summary {
+        n: s.len(),
+        mean: sum / s.len() as f64,
+        p50: percentile(&s, 0.5),
+        p90: percentile(&s, 0.9),
+        p99: percentile(&s, 0.99),
+        min: s[0],
+        max: *s.last().unwrap(),
+        sum,
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with n bins (overflow in last bin).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        Self { lo, hi, bins: vec![0; n] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let idx = if x < self.lo {
+            0
+        } else {
+            (((x - self.lo) / (self.hi - self.lo) * n as f64) as usize).min(n - 1)
+        };
+        self.bins[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert!((percentile(&s, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan_or_default() {
+        assert_eq!(summarize(&[]).n, 0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(0.5);
+        h.add(9.99);
+        h.add(100.0); // overflow clamps to last bin
+        h.add(-5.0); // underflow clamps to first
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        assert_eq!(h.total(), 4);
+    }
+}

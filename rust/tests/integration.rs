@@ -1,0 +1,217 @@
+//! Cluster-level integration tests: random configurations and workloads
+//! driven end-to-end through both systems, checking global serving
+//! invariants (conservation, causality, determinism, accounting).
+
+use std::collections::HashSet;
+
+use tetri_infer::baseline::{run_baseline, BaselineConfig};
+use tetri_infer::coordinator::{run_cluster, ClusterConfig, FlipConfig, PredictorMode};
+use tetri_infer::decode::DecodePolicy;
+use tetri_infer::fabric::Link;
+use tetri_infer::metrics::RunMetrics;
+use tetri_infer::prefill::{DispatchPolicy, PrefillPolicy};
+use tetri_infer::util::Pcg;
+use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+
+fn check_run(m: &RunMetrics, n: usize, ctx: &str) {
+    assert_eq!(m.records.len(), n, "{ctx}: not all requests completed");
+    let mut ids = HashSet::new();
+    for r in &m.records {
+        assert!(ids.insert(r.id), "{ctx}: duplicate completion {r:?}");
+        assert!(r.first_token >= r.arrival, "{ctx}: TTFT causality {r:?}");
+        assert!(r.finished >= r.first_token, "{ctx}: JCT causality {r:?}");
+        assert!(r.finished <= m.makespan_us, "{ctx}: finished after makespan {r:?}");
+    }
+    for (i, &b) in m.busy_us.iter().enumerate() {
+        assert!(b <= m.makespan_us + 1, "{ctx}: instance {i} busier than the run is long");
+    }
+    assert!(m.resource_seconds() > 0.0, "{ctx}: no resource accounting");
+}
+
+fn random_cluster_cfg(rng: &mut Pcg) -> ClusterConfig {
+    ClusterConfig {
+        n_prefill: rng.range(1, 4) as usize,
+        n_decode: rng.range(1, 5) as usize,
+        chunk_size: [256u32, 512, 1024][rng.index(3)],
+        prefill_policy: [PrefillPolicy::Fcfs, PrefillPolicy::Sjf, PrefillPolicy::Ljf][rng.index(3)],
+        sched_batch: rng.range(1, 64) as usize,
+        dispatch: [
+            DispatchPolicy::PowerOfTwo,
+            DispatchPolicy::Random,
+            DispatchPolicy::Imbalance,
+            DispatchPolicy::LeastLoad,
+        ][rng.index(4)],
+        decode_policy: [DecodePolicy::Greedy, DecodePolicy::ReserveStatic, DecodePolicy::ReserveDynamic][rng.index(3)],
+        max_batch: [16u32, 64, 128][rng.index(3)],
+        link: [Link::nvlink(), Link::roce200(), Link::indirect_socket()][rng.index(3)].clone(),
+        predictor_mode: [PredictorMode::Parallel, PredictorMode::Sequential, PredictorMode::Disabled][rng.index(3)],
+        predictor_accuracy: rng.f64(),
+        flip: if rng.f64() < 0.5 {
+            Some(FlipConfig { idle_us: rng.range(500_000, 5_000_000), ..Default::default() })
+        } else {
+            None
+        },
+        seed: rng.next_u64(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn random_configs_complete_all_requests() {
+    let mut rng = Pcg::new(2024);
+    for case in 0..25 {
+        let cfg = random_cluster_cfg(&mut rng);
+        let kind = WorkloadKind::ALL[rng.index(5)];
+        let n = rng.range(8, 96) as usize;
+        let rate = [0.0, 4.0, 32.0][rng.index(3)];
+        let trace = WorkloadGen::new(rng.next_u64()).trace(kind, n, rate, 0);
+        let ctx = format!("case {case}: {kind:?} n={n} rate={rate} cfg={cfg:?}");
+        let m = run_cluster(cfg, trace);
+        check_run(&m, n, &ctx);
+    }
+}
+
+#[test]
+fn baseline_random_configs_complete_all_requests() {
+    let mut rng = Pcg::new(4048);
+    for case in 0..20 {
+        let cfg = BaselineConfig {
+            n_instances: rng.range(1, 4) as usize,
+            prefill_batch: rng.range(1, 33) as usize,
+            max_batch: [8u32, 16, 64][rng.index(3)],
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let kind = WorkloadKind::ALL[rng.index(5)];
+        let n = rng.range(8, 96) as usize;
+        let trace = WorkloadGen::new(rng.next_u64()).trace(kind, n, 8.0, 0);
+        let m = run_baseline(cfg.clone(), trace);
+        check_run(&m, n, &format!("baseline case {case}: {kind:?} n={n} {cfg:?}"));
+    }
+}
+
+#[test]
+fn identical_seeds_give_bitwise_identical_metrics() {
+    let run = |seed: u64| {
+        let trace = WorkloadGen::new(seed).trace(WorkloadKind::Mixed, 64, 16.0, 0);
+        run_cluster(ClusterConfig { seed, ..ClusterConfig::ts_roce(2, 2) }, trace)
+    };
+    let (a, b) = (run(7), run(7));
+    assert_eq!(a.makespan_us, b.makespan_us);
+    assert_eq!(a.busy_us, b.busy_us);
+    assert_eq!(a.flips, b.flips);
+    let mut ra: Vec<_> = a.records.iter().map(|r| (r.id, r.first_token, r.finished)).collect();
+    let mut rb: Vec<_> = b.records.iter().map(|r| (r.id, r.first_token, r.finished)).collect();
+    ra.sort();
+    rb.sort();
+    assert_eq!(ra, rb);
+}
+
+#[test]
+fn disaggregation_shields_ttft_from_heavy_decode() {
+    // The paper's core claim, as an invariant: adding heavy-decode load
+    // must not materially change TetriInfer's TTFT for light requests
+    // (prefill instances never run decode), while the coupled baseline's
+    // TTFT degrades.
+    let light = WorkloadGen::new(1).trace(WorkloadKind::Lpld, 32, 16.0, 0);
+    let mut heavy_gen = WorkloadGen::new(2);
+    let mut mixed = light.clone();
+    mixed.extend(heavy_gen.trace(WorkloadKind::Lphd, 32, 16.0, 0).into_iter().map(|mut r| {
+        r.id += 10_000;
+        r
+    }));
+
+    let ttft_light = |m: &RunMetrics| {
+        let xs: Vec<f64> = m
+            .records
+            .iter()
+            .filter(|r| r.id < 10_000)
+            .map(|r| r.ttft() as f64)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+
+    let t_alone = run_cluster(ClusterConfig { flip: None, ..ClusterConfig::ts_roce(1, 1) }, light.clone());
+    let t_mixed = run_cluster(ClusterConfig { flip: None, ..ClusterConfig::ts_roce(1, 1) }, mixed.clone());
+    let tetri_ratio = ttft_light(&t_mixed) / ttft_light(&t_alone);
+
+    let b_mixed = run_baseline(BaselineConfig::default(), mixed);
+
+    assert!(tetri_ratio < 2.0, "tetri TTFT should be nearly unaffected, got {tetri_ratio:.2}x");
+    assert!(
+        ttft_light(&t_mixed) < ttft_light(&b_mixed) / 2.0,
+        "disaggregated TTFT must beat the coupled baseline under heavy-decode load: {} vs {}",
+        ttft_light(&t_mixed),
+        ttft_light(&b_mixed)
+    );
+}
+
+#[test]
+fn transfer_time_scales_with_link_bandwidth() {
+    // JCT gap between socket and nvlink must be at least the KV wire-time
+    // difference for heavy prompts.
+    let trace = WorkloadGen::new(5).trace(WorkloadKind::Hphd, 32, 0.0, 0);
+    let nv = run_cluster(
+        ClusterConfig { flip: None, ..ClusterConfig::ts_nvlink(1, 1) },
+        trace.clone(),
+    );
+    let sock = run_cluster(
+        ClusterConfig { link: Link::indirect_socket(), flip: None, ..ClusterConfig::ts_roce(1, 1) },
+        trace,
+    );
+    assert!(
+        sock.jct_summary().mean > nv.jct_summary().mean,
+        "indirect sockets must be slower end-to-end than NVLink: {} vs {}",
+        sock.jct_summary().mean,
+        nv.jct_summary().mean
+    );
+}
+
+#[test]
+fn predictor_modes_trade_latency_for_throughput() {
+    // Figure 17's tradeoff: parallel mode taxes the main LLM (~10% per
+    // co-run iteration) relative to running it alone; sequential mode
+    // instead puts the prediction on each request's critical path.
+    let mk = || WorkloadGen::new(11).trace(WorkloadKind::Lpld, 48, 4.0, 0);
+    let off = run_cluster(
+        ClusterConfig { predictor_mode: PredictorMode::Disabled, flip: None, ..ClusterConfig::ts_roce(1, 1) },
+        mk(),
+    );
+    let par = run_cluster(
+        ClusterConfig { predictor_mode: PredictorMode::Parallel, flip: None, ..ClusterConfig::ts_roce(1, 1) },
+        mk(),
+    );
+    let seq = run_cluster(
+        ClusterConfig { predictor_mode: PredictorMode::Sequential, flip: None, ..ClusterConfig::ts_roce(1, 1) },
+        mk(),
+    );
+    assert!(
+        par.ttft_summary().mean >= off.ttft_summary().mean,
+        "parallel co-run cannot be faster than no predictor: {} vs {}",
+        par.ttft_summary().mean,
+        off.ttft_summary().mean
+    );
+    assert!(
+        seq.ttft_summary().mean >= off.ttft_summary().mean,
+        "sequential prediction cannot be faster than no predictor: {} vs {}",
+        seq.ttft_summary().mean,
+        off.ttft_summary().mean
+    );
+}
+
+#[test]
+fn swapped_tokens_accounted_under_memory_pressure() {
+    use tetri_infer::costmodel::CostModel;
+    let cost = CostModel { hbm_kv_bytes: 2e9, ..Default::default() }; // tiny HBM
+    let m = run_cluster(
+        ClusterConfig {
+            cost,
+            decode_policy: DecodePolicy::Greedy,
+            flip: None,
+            ..ClusterConfig::ts_roce(1, 1)
+        },
+        WorkloadGen::new(13).trace(WorkloadKind::Lphd, 64, 0.0, 0),
+    );
+    assert_eq!(m.records.len(), 64);
+    assert!(m.swapped_tokens > 0, "tiny HBM + greedy must thrash");
+}

@@ -1,0 +1,145 @@
+//! Property tests for the paged KV cache (hand-rolled: no proptest crate
+//! in the vendored environment — random op sequences from a seeded PCG,
+//! invariants checked after every operation, failing seed printed).
+//!
+//! Invariants (the decode artifact relies on all of them):
+//!   * page 0 (the trash page) is never allocated;
+//!   * no page is owned twice; free + live + trash == total;
+//!   * table length never exceeds page capacity;
+//!   * failed allocations have no side effects.
+
+use tetri_infer::kvcache::PagedKvCache;
+use tetri_infer::util::Pcg;
+
+#[derive(Debug)]
+enum Op {
+    Alloc { id: u64, tokens: u32 },
+    Append { id: u64 },
+    Release { id: u64 },
+    SwapOut { id: u64 },
+}
+
+fn random_op(rng: &mut Pcg, live: &[u64], next_id: &mut u64) -> Op {
+    let roll = rng.f64();
+    if live.is_empty() || roll < 0.3 {
+        let id = *next_id;
+        *next_id += 1;
+        Op::Alloc { id, tokens: rng.range(1, 400) as u32 }
+    } else {
+        let id = live[rng.index(live.len())];
+        if roll < 0.75 {
+            Op::Append { id }
+        } else if roll < 0.9 {
+            Op::Release { id }
+        } else {
+            Op::SwapOut { id }
+        }
+    }
+}
+
+fn run_case(seed: u64, ops: usize) {
+    let mut rng = Pcg::new(seed);
+    let total_pages = rng.range(4, 512) as u32;
+    let page_size = [1u32, 4, 8, 16, 64][rng.index(5)];
+    let mut kv = PagedKvCache::new(total_pages, page_size);
+    let mut live: Vec<u64> = vec![];
+    let mut next_id = 0u64;
+    let mut expected_len: std::collections::HashMap<u64, u32> = Default::default();
+
+    for step in 0..ops {
+        let op = random_op(&mut rng, &live, &mut next_id);
+        let ctx = || format!("seed={seed} step={step} op={op:?} pages={total_pages} psz={page_size}");
+        match op {
+            Op::Alloc { id, tokens } => {
+                let free_before = kv.free_pages();
+                match kv.alloc(id, tokens) {
+                    Ok(()) => {
+                        live.push(id);
+                        expected_len.insert(id, tokens);
+                        assert_eq!(kv.table(id).unwrap().len, tokens, "{}", ctx());
+                    }
+                    Err(_) => {
+                        assert_eq!(kv.free_pages(), free_before, "failed alloc leaked: {}", ctx());
+                        assert!(!kv.contains(id), "{}", ctx());
+                    }
+                }
+            }
+            Op::Append { id } => match kv.append_token(id) {
+                Ok(()) => {
+                    *expected_len.get_mut(&id).unwrap() += 1;
+                }
+                Err(_) => {
+                    assert_eq!(kv.free_pages(), 0, "append may only fail when out of pages: {}", ctx());
+                }
+            },
+            Op::Release { id } => {
+                kv.release(id);
+                live.retain(|&x| x != id);
+                expected_len.remove(&id);
+                assert!(!kv.contains(id), "{}", ctx());
+            }
+            Op::SwapOut { id } => {
+                let want = expected_len.remove(&id);
+                let got = kv.swap_out(id);
+                assert_eq!(got, want, "{}", ctx());
+                live.retain(|&x| x != id);
+            }
+        }
+        kv.check_invariants().unwrap_or_else(|e| panic!("{e} [{}]", ctx()));
+        for (&id, &len) in &expected_len {
+            assert_eq!(kv.table(id).map(|t| t.len), Some(len), "length drift: {}", ctx());
+        }
+    }
+}
+
+#[test]
+fn kv_invariants_hold_over_random_op_sequences() {
+    for seed in 0..40 {
+        run_case(seed, 400);
+    }
+}
+
+#[test]
+fn kv_invariants_hold_under_page_exhaustion() {
+    // Tiny pools: almost every op contends for the last pages.
+    for seed in 100..130 {
+        let mut rng = Pcg::new(seed);
+        let mut kv = PagedKvCache::new(3, 2);
+        let mut ids = vec![];
+        for step in 0..200 {
+            if rng.f64() < 0.5 {
+                let id = step as u64;
+                if kv.alloc(id, rng.range(1, 6) as u32).is_ok() {
+                    ids.push(id);
+                }
+            } else if let Some(&id) = ids.last() {
+                if rng.f64() < 0.5 {
+                    let _ = kv.append_token(id);
+                } else {
+                    kv.release(id);
+                    ids.pop();
+                }
+            }
+            kv.check_invariants().unwrap_or_else(|e| panic!("{e} seed={seed} step={step}"));
+        }
+    }
+}
+
+#[test]
+fn kv_free_tokens_is_monotone_in_releases() {
+    let mut kv = PagedKvCache::new(64, 8);
+    let mut frees = vec![kv.free_tokens()];
+    for id in 0..10u64 {
+        kv.alloc(id, 37).unwrap();
+        frees.push(kv.free_tokens());
+    }
+    for w in frees.windows(2) {
+        assert!(w[1] < w[0]);
+    }
+    for id in 0..10u64 {
+        let before = kv.free_tokens();
+        kv.release(id);
+        assert!(kv.free_tokens() > before);
+    }
+    assert_eq!(kv.free_pages(), 63);
+}

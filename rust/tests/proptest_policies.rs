@@ -1,0 +1,183 @@
+//! Property tests over the scheduling/policy substrate: chunker coverage,
+//! scheduler conservation, dispatcher membership, workload quadrants,
+//! predictor range soundness. Hand-rolled generators (seeded PCG).
+
+use std::collections::{HashMap, HashSet};
+
+use tetri_infer::decode::{DecodePolicy, DecodeScheduler};
+use tetri_infer::kvcache::PagedKvCache;
+use tetri_infer::predictor::{OraclePredictor, Predictor};
+use tetri_infer::prefill::{choose, Chunker, DecodeLoad, DispatchPolicy, PrefillPolicy, PrefillScheduler};
+use tetri_infer::types::{Request, TaskType};
+use tetri_infer::util::Pcg;
+use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+
+fn req(id: u64, plen: u32, dlen: u32) -> Request {
+    Request { id, task: TaskType::Chat, arrival: 0, prompt_len: plen, decode_len: dlen, predicted: None }
+}
+
+#[test]
+fn chunker_covers_every_token_exactly_once_random() {
+    for seed in 0..30 {
+        let mut rng = Pcg::new(seed);
+        let chunk = [32u32, 128, 512, 513][rng.index(4)];
+        let n = rng.range(1, 80) as usize;
+        let mut c = Chunker::new(chunk);
+        let mut want: HashMap<u64, u32> = Default::default();
+        for i in 0..n {
+            let plen = rng.range(1, 2000) as u32;
+            want.insert(i as u64, plen);
+            c.admit(req(i as u64, plen, 1));
+            // interleave admission and chunk production (arrival order)
+            if rng.f64() < 0.5 {
+                if let Some(ch) = c.next_chunk() {
+                    assert!(ch.tokens <= chunk, "seed={seed}");
+                    consume(&ch, &mut want, seed);
+                }
+            }
+        }
+        while let Some(ch) = c.next_chunk() {
+            consume(&ch, &mut want, seed);
+        }
+        assert!(want.values().all(|&v| v == 0), "uncovered tokens: seed={seed} {want:?}");
+    }
+}
+
+fn consume(ch: &tetri_infer::prefill::Chunk, want: &mut HashMap<u64, u32>, seed: u64) {
+    let sum: u32 = ch.segments.iter().map(|s| s.len).sum();
+    assert_eq!(sum, ch.tokens, "seed={seed}");
+    for s in &ch.segments {
+        let rem = want.get_mut(&s.req).unwrap();
+        assert!(s.len <= *rem, "over-coverage seed={seed}");
+        *rem -= s.len;
+        if s.last {
+            assert_eq!(*rem, 0, "`last` before prompt complete: seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prefill_scheduler_conserves_requests() {
+    for seed in 0..20 {
+        let mut rng = Pcg::new(seed);
+        let policy = [PrefillPolicy::Fcfs, PrefillPolicy::Sjf, PrefillPolicy::Ljf][rng.index(3)];
+        let batch = rng.range(1, 40) as usize;
+        let mut s = PrefillScheduler::new(policy, batch);
+        let mut pushed = HashSet::new();
+        let mut popped = HashSet::new();
+        for i in 0..500u64 {
+            if rng.f64() < 0.6 {
+                s.push(req(i, rng.range(1, 1000) as u32, 1));
+                pushed.insert(i);
+            } else if let Some(r) = s.pop() {
+                assert!(popped.insert(r.id), "duplicate pop seed={seed}");
+            }
+        }
+        while let Some(r) = s.pop() {
+            assert!(popped.insert(r.id), "duplicate pop seed={seed}");
+        }
+        assert_eq!(pushed, popped, "lost/invented requests seed={seed}");
+    }
+}
+
+#[test]
+fn sjf_within_committed_batch_is_sorted() {
+    for seed in 0..10 {
+        let mut rng = Pcg::new(seed + 500);
+        let mut s = PrefillScheduler::new(PrefillPolicy::Sjf, 16);
+        for i in 0..16u64 {
+            s.push(req(i, rng.range(1, 5000) as u32, 1));
+        }
+        let lens: Vec<u32> = std::iter::from_fn(|| s.pop()).map(|r| r.prompt_len).collect();
+        assert!(lens.windows(2).all(|w| w[0] <= w[1]), "not sorted: {lens:?}");
+    }
+}
+
+#[test]
+fn dispatcher_always_returns_a_member() {
+    let mut rng = Pcg::new(9);
+    for _ in 0..200 {
+        let n = rng.range(1, 16) as usize;
+        let loads: Vec<DecodeLoad> = (0..n)
+            .map(|i| DecodeLoad {
+                instance: i * 3, // non-contiguous ids
+                free_kv_tokens: rng.range(0, 50_000),
+                n_heavy: rng.range(0, 20) as u32,
+                n_light: rng.range(0, 20) as u32,
+                queue_len: rng.range(0, 10) as u32,
+            })
+            .collect();
+        let ids: HashSet<usize> = loads.iter().map(|l| l.instance).collect();
+        for pol in [DispatchPolicy::PowerOfTwo, DispatchPolicy::Random, DispatchPolicy::Imbalance, DispatchPolicy::LeastLoad] {
+            let got = choose(&loads, rng.range(1, 1000) as u32, None, 200, pol, &mut rng).unwrap();
+            assert!(ids.contains(&got), "{pol:?} returned non-member {got}");
+        }
+    }
+}
+
+#[test]
+fn oracle_predictor_range_contains_truth_at_full_accuracy() {
+    let mut p = OraclePredictor::ideal(3);
+    let mut rng = Pcg::new(4);
+    for _ in 0..2000 {
+        let len = rng.range(1, 3000) as u32;
+        let pred = p.predict(&[], len);
+        assert!(pred.lo <= len, "lo {} > len {len}", pred.lo);
+        assert!(len < pred.hi, "len {len} >= hi {}", pred.hi);
+    }
+}
+
+#[test]
+fn workload_generator_respects_bounds() {
+    let mut g = WorkloadGen::new(17);
+    for kind in WorkloadKind::ALL {
+        for r in g.trace(kind, 300, 100.0, 0) {
+            assert!(r.prompt_len >= 2 && r.prompt_len <= 1024, "{kind:?} {r:?}");
+            assert!(r.decode_len >= 1 && r.decode_len <= 1599, "{kind:?} {r:?}");
+        }
+    }
+}
+
+#[test]
+fn decode_scheduler_conserves_jobs_under_pressure() {
+    for seed in 0..15 {
+        let mut rng = Pcg::new(seed + 900);
+        let policy = [DecodePolicy::Greedy, DecodePolicy::ReserveStatic, DecodePolicy::ReserveDynamic][rng.index(3)];
+        let mut s = DecodeScheduler::new(policy, 200, 32);
+        let mut kv = PagedKvCache::new(rng.range(16, 128) as u32, 8);
+        let n = rng.range(5, 40);
+        for i in 0..n {
+            s.push(req(i, rng.range(1, 60) as u32, rng.range(1, 50) as u32));
+        }
+        let mut completed = 0u64;
+        for _ in 0..5_000 {
+            s.admit(&mut kv);
+            let (done, _) = s.step(&mut kv);
+            completed += done.len() as u64;
+            kv.check_invariants().unwrap();
+            if s.total_jobs() == 0 {
+                break;
+            }
+        }
+        assert_eq!(completed, n, "policy={policy:?} seed={seed}: jobs lost");
+        assert_eq!(kv.n_live(), 0, "pages leaked seed={seed}");
+    }
+}
+
+#[test]
+fn decode_scheduler_heavy_light_totals_match_jobs() {
+    let mut rng = Pcg::new(33);
+    let mut s = DecodeScheduler::new(DecodePolicy::Greedy, 200, 64);
+    let mut n = 0;
+    for i in 0..50u64 {
+        let mut r = req(i, 10, rng.range(1, 1000) as u32);
+        if rng.f64() < 0.8 {
+            let mut p = OraclePredictor::ideal(i);
+            r.predicted = Some(p.predict(&[], r.decode_len));
+        }
+        s.push(r);
+        n += 1;
+    }
+    let (h, l) = s.heavy_light(128);
+    assert_eq!(h + l, n);
+}

@@ -5,6 +5,11 @@
 //!   cargo run --release --example figures -- all
 //!   cargo run --release --example figures -- fig12 fig16 flip
 //!
+//! Figures are independent deterministic runs, so they fan out across the
+//! sweep harness's worker pool (tetri_infer::sweep); the heavyweight
+//! multi-seed figures additionally sweep their own cells. Output files are
+//! identical to a serial run — only the stdout interleaving varies.
+//!
 //! Absolute numbers come from the calibrated V100/OPT-13B cost model; the
 //! comparisons (who wins, by what factor, where crossovers fall) are the
 //! reproduction target (EXPERIMENTS.md records paper-vs-measured).
@@ -18,6 +23,7 @@ use tetri_infer::costmodel::CostModel;
 use tetri_infer::decode::DecodePolicy;
 use tetri_infer::metrics::RunMetrics;
 use tetri_infer::prefill::{DispatchPolicy, PrefillPolicy};
+use tetri_infer::sweep::{default_workers, parallel_map, run_cells, SweepCell, SweepSystem};
 use tetri_infer::types::TaskType;
 use tetri_infer::util::summarize;
 use tetri_infer::workload::{WorkloadGen, WorkloadKind};
@@ -321,21 +327,39 @@ fn fig19() {
     writeln!(s, "== Figure 19: inter-decode load balancing (32 reqs per decode instance) ==").unwrap();
     writeln!(s, "(paper: power-of-two lowest total decode time; heavy decodes spread evenly)").unwrap();
     const SEEDS: [u64; 5] = [42, 43, 44, 45, 46];
+    const POLICIES: [DispatchPolicy; 3] =
+        [DispatchPolicy::PowerOfTwo, DispatchPolicy::Random, DispatchPolicy::Imbalance];
+    // 3 cluster sizes × 3 policies × 5 seeds = 45 independent runs: sweep
+    // them all at once, then aggregate in cell order.
+    let mut cells = Vec::new();
     for n_dec in [2usize, 4, 8] {
-        writeln!(s, "  -- {n_dec} decode instances (mean over {} seeds) --", SEEDS.len()).unwrap();
-        for pol in [DispatchPolicy::PowerOfTwo, DispatchPolicy::Random, DispatchPolicy::Imbalance] {
-            let mut tot_time = 0.0;
-            let mut tot_h = 0.0;
-            let mut tot_l = 0.0;
+        for pol in POLICIES {
             for seed in SEEDS {
-                let m = run_cluster(
-                    ClusterConfig {
+                cells.push(SweepCell {
+                    label: format!("{n_dec}d/{}/s{seed}", pol.name()),
+                    system: SweepSystem::Cluster(ClusterConfig {
                         dispatch: pol,
                         seed,
                         ..ClusterConfig::ts_roce(1, n_dec)
-                    },
-                    WorkloadGen::new(seed).trace(WorkloadKind::Mixed, 32 * n_dec, 32.0, 0),
-                );
+                    }),
+                    kind: WorkloadKind::Mixed,
+                    n_requests: 32 * n_dec,
+                    rate_per_sec: 32.0,
+                    trace_seed: seed,
+                });
+            }
+        }
+    }
+    let results = run_cells(cells, default_workers());
+    let mut it = results.iter();
+    for n_dec in [2usize, 4, 8] {
+        writeln!(s, "  -- {n_dec} decode instances (mean over {} seeds) --", SEEDS.len()).unwrap();
+        for pol in POLICIES {
+            let mut tot_time = 0.0;
+            let mut tot_h = 0.0;
+            let mut tot_l = 0.0;
+            for _ in SEEDS {
+                let m = &it.next().expect("cell/aggregation order mismatch").metrics;
                 tot_time += m.makespan_us as f64 / 1e6;
                 // slowest decode instance = the busiest one
                 let slowest = (0..m.busy_us.len())
@@ -442,52 +466,62 @@ fn main() {
     let all = args.is_empty() || args.iter().any(|a| a == "all");
     let want = |n: &str| all || args.iter().any(|a| a == n);
 
+    // Every figure is an independent deterministic run writing its own
+    // results/ file, so fan the requested set across the sweep pool.
+    let mut tasks: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
     if want("fig1") {
-        fig1();
+        tasks.push(Box::new(fig1));
     }
     if want("fig2") {
-        fig2();
+        tasks.push(Box::new(fig2));
     }
     if want("fig3") {
-        fig3();
+        tasks.push(Box::new(fig3));
     }
     if want("fig4") {
-        fig4();
+        tasks.push(Box::new(fig4));
     }
     if want("fig5") {
-        fig5();
+        tasks.push(Box::new(fig5));
     }
     if want("fig11") {
-        e2e(WorkloadKind::Lpld, "fig11", "TTFT -44%, JCT -40%, perf/$ 1.4x");
+        tasks.push(Box::new(|| e2e(WorkloadKind::Lpld, "fig11", "TTFT -44%, JCT -40%, perf/$ 1.4x")));
     }
     if want("fig12") {
-        e2e(WorkloadKind::Lphd, "fig12", "TTFT -97%, JCT -47%, resource -38%, perf/$ 2.4x");
+        tasks.push(Box::new(|| {
+            e2e(WorkloadKind::Lphd, "fig12", "TTFT -97%, JCT -47%, resource -38%, perf/$ 2.4x")
+        }));
     }
     if want("fig13") {
-        e2e(WorkloadKind::Hpld, "fig13", "TTFT -9%, JCT -23%, resource +43%, perf/$ 0.86x (vLLM wins)");
+        tasks.push(Box::new(|| {
+            e2e(WorkloadKind::Hpld, "fig13", "TTFT -9%, JCT -23%, resource +43%, perf/$ 0.86x (vLLM wins)")
+        }));
     }
     if want("fig14") {
-        e2e(WorkloadKind::Hphd, "fig14", "JCT -19%, resource +7%, perf/$ 1.1x");
+        tasks.push(Box::new(|| e2e(WorkloadKind::Hphd, "fig14", "JCT -19%, resource +7%, perf/$ 1.1x")));
     }
     if want("fig15") {
-        e2e(WorkloadKind::Mixed, "fig15", "TTFT -85%, JCT -50%, resource -21%, perf/$ 1.9x");
+        tasks.push(Box::new(|| {
+            e2e(WorkloadKind::Mixed, "fig15", "TTFT -85%, JCT -50%, resource -21%, perf/$ 1.9x")
+        }));
     }
     if want("fig16") {
-        fig16();
+        tasks.push(Box::new(fig16));
     }
     if want("fig17") {
-        fig17();
+        tasks.push(Box::new(fig17));
     }
     if want("fig18") {
-        fig18();
+        tasks.push(Box::new(fig18));
     }
     if want("fig19") {
-        fig19();
+        tasks.push(Box::new(fig19));
     }
     if want("flip") {
-        flip();
+        tasks.push(Box::new(flip));
     }
     if want("ablation") {
-        ablation();
+        tasks.push(Box::new(ablation));
     }
+    parallel_map(tasks, default_workers(), |task| task());
 }

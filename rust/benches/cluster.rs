@@ -1,0 +1,203 @@
+//! End-to-end DES throughput bench: the perf-trajectory baseline future
+//! PRs regress against (hand-rolled harness: no criterion vendored).
+//!
+//! Measures events/sec and wall time of whole cluster runs on the
+//! scenarios that stress the hot paths this repo optimizes —
+//! preemption-heavy decode (greedy policy under memory pressure, where
+//! eviction/completion used to be O(batch²)), a multi-instance mixed
+//! cluster (dispatch + monitor + arena paths), and the coupled baseline —
+//! plus the parallel sweep harness's serial-vs-parallel speedup.
+//!
+//! Emits machine-readable `BENCH_cluster.json` at the repo root (see
+//! EXPERIMENTS.md §Perf for the schema and the recorded trajectory).
+//! Run via `cargo bench --bench cluster` or scripts/bench.sh.
+
+use std::time::Instant;
+
+use tetri_infer::baseline::BaselineConfig;
+use tetri_infer::coordinator::ClusterConfig;
+use tetri_infer::costmodel::CostModel;
+use tetri_infer::decode::DecodePolicy;
+use tetri_infer::metrics::RunMetrics;
+use tetri_infer::sweep::{default_workers, run_cells, SweepCell, SweepSystem};
+use tetri_infer::util::{repo_root, Json};
+use tetri_infer::workload::WorkloadKind;
+
+const REPS: usize = 3;
+
+struct Row {
+    name: String,
+    events: u64,
+    requests: u64,
+    wall_ms: f64,
+    events_per_sec: f64,
+    makespan_s: f64,
+}
+
+/// Best-of-REPS wall time for one deterministic scenario.
+fn run_scenario(name: &str, cell: SweepCell) -> Row {
+    let mut best = f64::MAX;
+    let mut metrics: Option<RunMetrics> = None;
+    for _ in 0..REPS {
+        let r = cell.clone().run();
+        best = best.min(r.wall_secs);
+        metrics = Some(r.metrics);
+    }
+    let m = metrics.unwrap();
+    let row = Row {
+        name: name.to_string(),
+        events: m.events,
+        requests: m.records.len() as u64,
+        wall_ms: best * 1e3,
+        events_per_sec: m.events as f64 / best.max(1e-12),
+        makespan_s: m.makespan_us as f64 / 1e6,
+    };
+    println!(
+        "{:<28} {:>9} events {:>7} reqs {:>9.1} ms {:>12.0} events/s  (makespan {:.1}s sim)",
+        row.name, row.events, row.requests, row.wall_ms, row.events_per_sec, row.makespan_s
+    );
+    row
+}
+
+fn cluster_cell(label: &str, cfg: ClusterConfig, kind: WorkloadKind, n: usize, rate: f64, seed: u64) -> SweepCell {
+    SweepCell {
+        label: label.to_string(),
+        system: SweepSystem::Cluster(cfg),
+        kind,
+        n_requests: n,
+        rate_per_sec: rate,
+        trace_seed: seed,
+    }
+}
+
+fn main() {
+    println!("== end-to-end cluster DES benches (best of {REPS}) ==");
+
+    let mut rows = Vec::new();
+
+    // The §Perf headline scenario: greedy decode admission under a
+    // shrunken HBM — constant preemption/swap churn, the regime where the
+    // old Vec::remove victim loops went quadratic in the batch.
+    rows.push(run_scenario(
+        "preempt_greedy_pressure",
+        cluster_cell(
+            "preempt",
+            ClusterConfig {
+                decode_policy: DecodePolicy::Greedy,
+                cost: CostModel { hbm_kv_bytes: 2e9, ..Default::default() },
+                flip: None,
+                ..ClusterConfig::ts_roce(1, 1)
+            },
+            WorkloadKind::Lphd,
+            192,
+            0.0,
+            13,
+        ),
+    ));
+
+    // Mixed multi-instance cluster: dispatch, monitor broadcast, arena
+    // and transfer paths all hot.
+    rows.push(run_scenario(
+        "mixed_cluster_2p4d",
+        cluster_cell(
+            "mixed",
+            ClusterConfig { seed: 5, ..ClusterConfig::ts_roce(2, 4) },
+            WorkloadKind::Mixed,
+            512,
+            32.0,
+            5,
+        ),
+    ));
+
+    // The coupled vLLM baseline driver (its own arena + fixed-batch path).
+    rows.push(run_scenario(
+        "baseline_coupled_2x",
+        SweepCell {
+            label: "baseline".to_string(),
+            system: SweepSystem::Baseline(BaselineConfig {
+                n_instances: 2,
+                seed: 7,
+                ..Default::default()
+            }),
+            kind: WorkloadKind::Mixed,
+            n_requests: 256,
+            rate_per_sec: 8.0,
+            trace_seed: 7,
+        },
+    ));
+
+    // Sweep harness: the same 8-seed mixed sweep serial vs parallel.
+    let mk_sweep = || -> Vec<SweepCell> {
+        (0..8u64)
+            .map(|seed| {
+                cluster_cell(
+                    &format!("sweep-seed{seed}"),
+                    ClusterConfig { seed, ..ClusterConfig::ts_roce(2, 4) },
+                    WorkloadKind::Mixed,
+                    256,
+                    32.0,
+                    seed,
+                )
+            })
+            .collect()
+    };
+    let t = Instant::now();
+    let serial = run_cells(mk_sweep(), 1);
+    let serial_s = t.elapsed().as_secs_f64();
+    let workers = default_workers();
+    let t = Instant::now();
+    let parallel = run_cells(mk_sweep(), workers);
+    let parallel_s = t.elapsed().as_secs_f64();
+    let sweep_events: u64 = parallel.iter().map(|c| c.metrics.events).sum();
+    for (a, b) in serial.iter().zip(parallel.iter()) {
+        assert_eq!(
+            a.metrics.makespan_us, b.metrics.makespan_us,
+            "sweep must be deterministic across worker counts"
+        );
+    }
+    let speedup = serial_s / parallel_s.max(1e-12);
+    println!(
+        "{:<28} {:>9} events {:>7} cells {:>9.1} ms serial {:>9.1} ms x{} workers  ({speedup:.2}x)",
+        "sweep_8seed_mixed",
+        sweep_events,
+        parallel.len(),
+        serial_s * 1e3,
+        parallel_s * 1e3,
+        workers
+    );
+
+    // ---- machine-readable trajectory
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj([
+                ("name", Json::from(r.name.clone())),
+                ("events", Json::from(r.events)),
+                ("requests", Json::from(r.requests)),
+                ("wall_ms", Json::from(r.wall_ms)),
+                ("events_per_sec", Json::from(r.events_per_sec)),
+                ("makespan_s", Json::from(r.makespan_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj([
+        ("bench", Json::from("cluster")),
+        ("schema", Json::from(1u64)),
+        ("reps", Json::from(REPS)),
+        ("rows", Json::from(json_rows)),
+        (
+            "sweep",
+            Json::obj([
+                ("cells", Json::from(parallel.len())),
+                ("events", Json::from(sweep_events)),
+                ("serial_ms", Json::from(serial_s * 1e3)),
+                ("parallel_ms", Json::from(parallel_s * 1e3)),
+                ("workers", Json::from(workers)),
+                ("speedup", Json::from(speedup)),
+            ]),
+        ),
+    ]);
+    let path = repo_root().join("BENCH_cluster.json");
+    std::fs::write(&path, doc.dump()).expect("writing BENCH_cluster.json");
+    println!("wrote {}", path.display());
+}

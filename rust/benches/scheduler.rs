@@ -1,9 +1,12 @@
 //! Microbenchmarks of the L3 hot paths (hand-rolled harness: the vendored
-//! environment has no criterion). Run with `cargo bench --offline`.
+//! environment has no criterion). Run with `cargo bench --bench scheduler`
+//! or scripts/bench.sh.
 //!
 //! These are the §Perf profiling base for EXPERIMENTS.md: the coordinator
 //! is the paper's contribution, so scheduling-decision throughput and DES
-//! event throughput are the headline numbers.
+//! event throughput are the headline numbers. Emits machine-readable
+//! `BENCH_sched.json` at the repo root (the perf trajectory future PRs
+//! regress against).
 
 use std::time::Instant;
 
@@ -13,12 +16,13 @@ use tetri_infer::kvcache::PagedKvCache;
 use tetri_infer::prefill::{choose, Chunker, DecodeLoad, DispatchPolicy, PrefillPolicy, PrefillScheduler};
 use tetri_infer::sim::{Event, EventQueue};
 use tetri_infer::types::Request;
-use tetri_infer::util::Pcg;
+use tetri_infer::util::{repo_root, Json, Pcg};
 use tetri_infer::workload::{WorkloadGen, WorkloadKind};
 
 /// Time `f` (which performs `iters` inner operations), repeated `reps`
-/// times; prints the best rep (ns/op and Mops/s).
-fn bench(name: &str, iters: u64, reps: usize, mut f: impl FnMut()) {
+/// times; prints the best rep (ns/op and Mops/s) and records it in `rows`
+/// for the BENCH_sched.json trajectory.
+fn bench(rows: &mut Vec<(String, f64)>, name: &str, iters: u64, reps: usize, mut f: impl FnMut()) {
     let mut best = f64::MAX;
     for _ in 0..reps {
         let t = Instant::now();
@@ -28,6 +32,7 @@ fn bench(name: &str, iters: u64, reps: usize, mut f: impl FnMut()) {
     }
     let ns = best * 1e9 / iters as f64;
     println!("{name:<40} {ns:>10.1} ns/op {:>10.2} Mops/s", 1e3 / ns);
+    rows.push((name.to_string(), ns));
 }
 
 fn req(id: u64, plen: u32, dlen: u32) -> Request {
@@ -43,23 +48,24 @@ fn req(id: u64, plen: u32, dlen: u32) -> Request {
 
 fn main() {
     println!("== L3 microbenches (best of 5) ==");
+    let mut rows: Vec<(String, f64)> = Vec::new();
 
     // ---- prefill scheduler: push+pop under SJF sorting
     let n = 100_000u64;
-    bench("prefill_scheduler sjf push+pop", n, 5, || {
+    bench(&mut rows, "prefill_scheduler sjf push+pop", n, 5, || {
         let mut s = PrefillScheduler::new(PrefillPolicy::Sjf, 16);
         for i in 0..n {
-            s.push(req(i, (i % 997) as u32 + 1, 10));
+            s.push(req(i, (i % 997) as u32 + 1, 10).meta());
         }
         while s.pop().is_some() {}
     });
 
     // ---- chunker: slice/merge a 100k-request stream
-    bench("chunker slice+merge", n, 5, || {
+    bench(&mut rows, "chunker slice+merge", n, 5, || {
         let mut c = Chunker::new(512);
         let mut emitted = 0u64;
         for i in 0..n {
-            c.admit(req(i, (i % 997) as u32 + 1, 10));
+            c.admit(req(i, (i % 997) as u32 + 1, 10).meta());
             while let Some(ch) = c.next_chunk() {
                 emitted += ch.tokens as u64;
             }
@@ -78,7 +84,7 @@ fn main() {
         })
         .collect();
     let mut rng = Pcg::new(1);
-    bench("dispatcher power-of-two choose", n, 5, || {
+    bench(&mut rows, "dispatcher power-of-two choose", n, 5, || {
         for i in 0..n {
             std::hint::black_box(choose(
                 &loads,
@@ -92,7 +98,7 @@ fn main() {
     });
 
     // ---- paged KV: alloc/append/release cycle
-    bench("kvcache alloc+append+release", n, 5, || {
+    bench(&mut rows, "kvcache alloc+append+release", n, 5, || {
         let mut kv = PagedKvCache::new(4096, 16);
         for i in 0..n {
             let id = i % 128;
@@ -105,20 +111,39 @@ fn main() {
     });
 
     // ---- decode scheduler: admission + step over a 128-deep batch
-    bench("decode_scheduler admit+step (bs128)", 10_000, 5, || {
+    bench(&mut rows, "decode_scheduler admit+step (bs128)", 10_000, 5, || {
         let mut s = DecodeScheduler::new(DecodePolicy::ReserveDynamic, 200, 128);
         let mut kv = PagedKvCache::new(8192, 16);
+        let mut done = Vec::new();
         for i in 0..256u64 {
             s.push(req(i, 64, 40));
         }
         for _ in 0..10_000 / 128 {
             s.admit(&mut kv);
-            s.step(&mut kv);
+            done.clear();
+            s.step(&mut kv, &mut done);
+        }
+    });
+
+    // ---- decode scheduler under constant preemption: a greedy batch that
+    // outgrows a small pool, so every iteration evicts victims — the path
+    // that used to be O(batch²) via Vec::remove.
+    bench(&mut rows, "decode_scheduler step under preemption", 2_000, 5, || {
+        let mut s = DecodeScheduler::new(DecodePolicy::Greedy, 200, 128);
+        let mut kv = PagedKvCache::new(512, 16); // 511 pages = 8176 tokens
+        let mut done = Vec::new();
+        for i in 0..128u64 {
+            s.push(req(i, 60, 200));
+        }
+        for _ in 0..2_000 {
+            s.admit(&mut kv);
+            done.clear();
+            s.step(&mut kv, &mut done);
         }
     });
 
     // ---- DES event queue
-    bench("event_queue schedule+pop", n, 5, || {
+    bench(&mut rows, "event_queue schedule+pop", n, 5, || {
         let mut q = EventQueue::new();
         for i in 0..n {
             q.schedule_at(i * 7 % 1000, Event::Arrival(i));
@@ -129,6 +154,7 @@ fn main() {
     // ---- end-to-end cluster sim throughput (requests/s of sim)
     let trace = WorkloadGen::new(5).trace(WorkloadKind::Mixed, 512, 32.0, 0);
     let mut out = 0u64;
+    let mut events = 0u64;
     let t = Instant::now();
     let reps = 5;
     for s in 0..reps {
@@ -137,12 +163,34 @@ fn main() {
             trace.clone(),
         );
         out += m.records.len() as u64;
+        events += m.events;
     }
     let dt = t.elapsed().as_secs_f64();
     println!(
-        "{:<40} {:>10.1} ms/run {:>10.0} req/s-sim",
+        "{:<40} {:>10.1} ms/run {:>10.0} req/s-sim {:>12.0} events/s",
         "cluster sim 512 reqs 2P+4D",
         dt * 1e3 / reps as f64,
-        out as f64 / dt
+        out as f64 / dt,
+        events as f64 / dt
     );
+    rows.push(("cluster sim 512 reqs 2P+4D (ns/event)".to_string(), dt * 1e9 / events as f64));
+
+    // ---- machine-readable trajectory
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|(name, ns)| {
+            Json::obj([
+                ("name", Json::from(name.clone())),
+                ("ns_per_op", Json::from(*ns)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj([
+        ("bench", Json::from("sched")),
+        ("schema", Json::from(1u64)),
+        ("rows", Json::from(json_rows)),
+    ]);
+    let path = repo_root().join("BENCH_sched.json");
+    std::fs::write(&path, doc.dump()).expect("writing BENCH_sched.json");
+    println!("wrote {}", path.display());
 }

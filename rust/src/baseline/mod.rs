@@ -8,15 +8,20 @@
 //! This is the system whose interference §2.2 measures: one heavy prompt
 //! in an iteration stalls every co-running decode (Figure 4), and decode
 //! batches are packed without working-set awareness (Figure 5).
+//!
+//! Like the TetriInfer cluster, the request book is a dense arena indexed
+//! by slot (events, KV tables and queues all carry slots), per-instance
+//! waiting-token load is a maintained counter, and iteration buffers are
+//! reused — no per-event hashing or cloning (DESIGN.md §Hot paths).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::costmodel::CostModel;
 use crate::decode::{DecodeJob, DecodePolicy, DecodeScheduler};
 use crate::kvcache::PagedKvCache;
 use crate::metrics::RunMetrics;
 use crate::sim::{Event, EventQueue};
-use crate::types::{ReqId, Request, RequestRecord, Us};
+use crate::types::{ReqId, ReqMeta, Request, RequestRecord, Us};
 
 #[derive(Clone, Debug)]
 pub struct BaselineConfig {
@@ -49,15 +54,27 @@ impl Default for BaselineConfig {
     }
 }
 
+/// Sentinel for "first token not yet produced".
+const NO_TIME: Us = Us::MAX;
+
+struct ReqState {
+    req: Request,
+    first_token: Us,
+}
+
 struct CoupledInst {
-    /// Arrived, not yet prefilled.
-    waiting: VecDeque<Request>,
+    /// Arrived, not yet prefilled (arena slots).
+    waiting: VecDeque<ReqId>,
+    /// Prompt tokens across `waiting`, maintained incrementally (the
+    /// arrival router's O(1) load input).
+    waiting_tokens: u64,
     /// Decode-side state (greedy admission = vLLM's policy). We reuse the
     /// decode scheduler with jobs that were prefilled locally.
     dec: DecodeScheduler,
     kv: PagedKvCache,
     busy: bool,
-    /// (prefilled this iteration, completed this iteration)
+    /// (prefilled this iteration, completed this iteration) — slot
+    /// buffers reused across iterations.
     pending: (Vec<ReqId>, Vec<ReqId>),
 }
 
@@ -65,8 +82,8 @@ pub struct BaselineCluster {
     cfg: BaselineConfig,
     queue: EventQueue,
     insts: Vec<CoupledInst>,
-    requests: HashMap<ReqId, Request>,
-    first_token: HashMap<ReqId, Us>,
+    /// Request arena indexed by slot (events carry slots).
+    requests: Vec<ReqState>,
     metrics: RunMetrics,
     outstanding: usize,
     /// Arrivals not yet delivered (partial prefill batches wait on these).
@@ -79,6 +96,7 @@ impl BaselineCluster {
         let insts = (0..cfg.n_instances)
             .map(|_| CoupledInst {
                 waiting: VecDeque::new(),
+                waiting_tokens: 0,
                 // residency is memory-bound, not batch-bound: the fixed
                 // batch caps the per-iteration *step window* (see
                 // try_start), not how many requests hold pages.
@@ -93,8 +111,7 @@ impl BaselineCluster {
             cfg,
             queue: EventQueue::new(),
             insts,
-            requests: HashMap::new(),
-            first_token: HashMap::new(),
+            requests: Vec::new(),
             metrics: RunMetrics {
                 busy_us: vec![0; n],
                 alive_us: vec![0; n],
@@ -109,16 +126,21 @@ impl BaselineCluster {
     pub fn run(mut self, trace: Vec<Request>) -> RunMetrics {
         self.outstanding = trace.len();
         self.arrivals_pending = trace.len();
-        for r in trace {
-            self.queue.schedule_at(r.arrival, Event::Arrival(r.id));
-            self.requests.insert(r.id, r);
+        self.requests = trace
+            .into_iter()
+            .map(|req| ReqState { req, first_token: NO_TIME })
+            .collect();
+        for slot in 0..self.requests.len() {
+            self.queue
+                .schedule_at(self.requests[slot].req.arrival, Event::Arrival(slot as ReqId));
         }
         while self.outstanding > 0 {
             let Some((_, ev)) = self.queue.pop() else {
                 panic!("baseline deadlock: {} outstanding", self.outstanding);
             };
+            self.metrics.events += 1;
             match ev {
-                Event::Arrival(id) => self.on_arrival(id),
+                Event::Arrival(slot) => self.on_arrival(slot),
                 Event::CoupledIterDone { instance } => self.on_iter_done(instance),
                 _ => unreachable!("unexpected event in baseline"),
             }
@@ -133,17 +155,19 @@ impl BaselineCluster {
         self.metrics
     }
 
-    fn on_arrival(&mut self, id: ReqId) {
-        // Least-loaded coupled instance (waiting prompts + resident jobs).
+    fn on_arrival(&mut self, slot: ReqId) {
+        // Least-loaded coupled instance (waiting prompts + resident jobs)
+        // — O(n_instances) over maintained counters.
         let i = (0..self.insts.len())
             .min_by_key(|&i| {
                 let inst = &self.insts[i];
-                inst.waiting.iter().map(|r| r.prompt_len as u64).sum::<u64>()
-                    + inst.dec.total_jobs() as u64 * 64
+                inst.waiting_tokens + inst.dec.total_jobs() as u64 * 64
             })
             .unwrap();
-        let req = self.requests[&id].clone();
-        self.insts[i].waiting.push_back(req);
+        let plen = self.requests[slot as usize].req.prompt_len;
+        let inst = &mut self.insts[i];
+        inst.waiting.push_back(slot);
+        inst.waiting_tokens += plen as u64;
         self.arrivals_pending -= 1;
         if self.arrivals_pending == 0 {
             // last arrival: partial batches may now run everywhere
@@ -156,7 +180,7 @@ impl BaselineCluster {
     }
 
     fn try_start(&mut self, i: usize) {
-        let cost = self.cfg.cost.clone();
+        let cost = self.cfg.cost;
         let prefill_batch = self.cfg.prefill_batch;
         // May a partial prefill batch run? Only when no future arrival
         // could still fill it and the decode side gives us nothing to do.
@@ -165,52 +189,63 @@ impl BaselineCluster {
         if inst.busy {
             return;
         }
+        inst.pending.0.clear();
+        inst.pending.1.clear();
         // (a) fixed-batch prefill: wait for `prefill_batch` prompts, then
         // prefill them all in one iteration (greedy memory admission).
         let mut prefill_tokens = 0u32;
-        let mut prefilled = Vec::new();
         let batch_ready = inst.waiting.len() >= prefill_batch
             || (!inst.waiting.is_empty() && (!more_arrivals || inst.dec.total_jobs() == 0));
         if batch_ready {
-            while prefilled.len() < prefill_batch {
-                let Some(r) = inst.waiting.front() else { break };
-                if !inst.kv.can_fit(r.id, r.prompt_len + 1) {
+            while inst.pending.0.len() < prefill_batch {
+                let Some(&slot) = inst.waiting.front() else { break };
+                let plen = self.requests[slot as usize].req.prompt_len;
+                if !inst.kv.can_fit(slot, plen + 1) {
                     break; // head-of-line block: vLLM stalls prefill on memory
                 }
-                let r = inst.waiting.pop_front().unwrap();
-                inst.kv.alloc(r.id, r.prompt_len + 1).expect("can_fit checked");
-                prefill_tokens += r.prompt_len;
-                prefilled.push(r);
+                inst.waiting.pop_front();
+                inst.waiting_tokens -= plen as u64;
+                inst.kv.alloc(slot, plen + 1).expect("can_fit checked");
+                prefill_tokens += plen;
+                inst.pending.0.push(slot);
             }
         }
         // (b) decodes ride the same iteration, capped at the *fixed* batch
         // size (FCFS window over resident jobs — vanilla vLLM semantics).
         let paged_in = inst.dec.admit(&mut inst.kv);
-        let window = (self.cfg.max_batch as usize).min(inst.dec.running.len());
+        let window = (self.cfg.max_batch as usize).min(inst.dec.n_resident());
         let batch = window as u32;
-        let kv_tokens: u64 =
-            inst.dec.running.iter().take(window).map(|j| j.kv_tokens() as u64).sum();
-        if prefilled.is_empty() && batch == 0 {
+        let kv_tokens: u64 = inst.dec.running()[..window]
+            .iter()
+            .map(|j| j.kv_tokens() as u64)
+            .sum();
+        if inst.pending.0.is_empty() && batch == 0 {
             return;
         }
-        let (done, swapped_out) = inst.dec.step_n(&mut inst.kv, window);
+        let swapped_out = inst.dec.step_n(&mut inst.kv, window, &mut inst.pending.1);
         debug_assert!(inst.kv.check_invariants().is_ok());
         let dur = cost.mixed_iter_us(prefill_tokens, batch, kv_tokens)
             + cost.swap_us(swapped_out + paged_in_swapped(paged_in, &inst.dec));
 
-        // Prefilled requests become decode jobs at iteration end.
-        for r in &prefilled {
-            let mut job = DecodeJob::new(r.clone());
+        // Prefilled requests become decode jobs at iteration end. Their
+        // pages were allocated above, so they enter the running batch
+        // directly (the scheduler keeps its aggregates in sync).
+        for k in 0..inst.pending.0.len() {
+            let slot = inst.pending.0[k];
+            let st = &self.requests[slot as usize];
+            let mut job = DecodeJob::new(
+                ReqMeta {
+                    id: slot,
+                    task: st.req.task,
+                    arrival: st.req.arrival,
+                    prompt_len: st.req.prompt_len,
+                    predicted: st.req.predicted,
+                },
+                st.req.decode_len,
+            );
             job.generated = 1;
-            // keep its pages: move ownership into the decode scheduler's
-            // bookkeeping (the table already exists in `kv`)
-            job.running = true;
-            inst.dec.running.push(job);
+            inst.dec.inject_running(job);
         }
-        inst.pending = (
-            prefilled.iter().map(|r| r.id).collect(),
-            done.iter().map(|j| j.req.id).collect(),
-        );
         inst.busy = true;
         self.metrics.busy_us[i] += dur;
         self.queue.schedule_in(dur, Event::CoupledIterDone { instance: i });
@@ -218,38 +253,42 @@ impl BaselineCluster {
 
     fn on_iter_done(&mut self, i: usize) {
         let now = self.queue.now();
-        let (prefilled, done) = {
+        let (mut prefilled, mut done) = {
             let inst = &mut self.insts[i];
             inst.busy = false;
-            std::mem::take(&mut inst.pending)
+            (
+                std::mem::take(&mut inst.pending.0),
+                std::mem::take(&mut inst.pending.1),
+            )
         };
-        for id in prefilled {
-            self.first_token.insert(id, now);
+        for slot in prefilled.drain(..) {
+            self.requests[slot as usize].first_token = now;
             // single-token requests finish at prefill
-            if self.requests[&id].decode_len <= 1 {
+            if self.requests[slot as usize].req.decode_len <= 1 {
                 let inst = &mut self.insts[i];
-                if let Some(pos) = inst.dec.running.iter().position(|j| j.req.id == id) {
-                    inst.dec.running.remove(pos);
-                    inst.kv.release(id);
+                if inst.dec.remove_running(slot).is_some() {
+                    inst.kv.release(slot);
                 }
-                self.finish(id, now);
+                self.finish(slot, now);
             }
         }
-        for id in done {
-            self.finish(id, now);
+        for slot in done.drain(..) {
+            self.finish(slot, now);
         }
+        // hand the buffers back so the next iteration reuses their capacity
+        self.insts[i].pending = (prefilled, done);
         self.try_start(i);
     }
 
-    fn finish(&mut self, id: ReqId, now: Us) {
-        let req = &self.requests[&id];
-        let first = *self.first_token.get(&id).unwrap_or(&now);
+    fn finish(&mut self, slot: ReqId, now: Us) {
+        let st = &self.requests[slot as usize];
+        let first = if st.first_token == NO_TIME { now } else { st.first_token };
         self.metrics.records.push(RequestRecord {
-            id,
-            task: req.task,
-            prompt_len: req.prompt_len,
-            decode_len: req.decode_len,
-            arrival: req.arrival,
+            id: st.req.id,
+            task: st.req.task,
+            prompt_len: st.req.prompt_len,
+            decode_len: st.req.decode_len,
+            arrival: st.req.arrival,
             first_token: first,
             finished: now,
             predicted: None,
@@ -259,7 +298,7 @@ impl BaselineCluster {
 }
 
 fn paged_in_swapped(paged_in: u64, dec: &DecodeScheduler) -> u64 {
-    if dec.running.iter().any(|j| j.swaps > 0) {
+    if dec.running_has_swap_history() {
         paged_in
     } else {
         0
@@ -281,6 +320,7 @@ mod tests {
         let trace = gen.trace(WorkloadKind::Mixed, 64, 20.0, 0);
         let m = run_baseline(BaselineConfig::default(), trace);
         assert_eq!(m.records.len(), 64);
+        assert!(m.events >= 64);
     }
 
     #[test]

@@ -11,9 +11,14 @@
 //!
 //! plus the cluster monitor's periodic load broadcast and instance
 //! flipping (§3.5). Deterministic given (config, trace).
-
-use std::collections::HashMap;
-
+//!
+//! Hot-path layout (see DESIGN.md §Hot paths): the request book is a
+//! dense arena `Vec<ReqState>` — at `run()` the trace is renumbered so
+//! every event carries an arena *slot*, and every per-event lookup is a
+//! direct index (no hashing, no `Request` clones). Per-instance load is
+//! read from O(1) cached counters, the least-loaded prefill choice is
+//! served from a dirty-tracked cache, and the monitor tick reuses its
+//! `broadcast`/`since_tick` buffers instead of reallocating them.
 
 use crate::decode::{DecodeJob, DecodeScheduler};
 use crate::fabric::Fabric;
@@ -22,7 +27,7 @@ use crate::metrics::RunMetrics;
 use crate::predictor::{OraclePredictor, Predictor};
 use crate::prefill::{choose, Chunk, Chunker, DecodeLoad, PrefillScheduler};
 use crate::sim::{Event, EventQueue};
-use crate::types::{ReqId, Request, RequestRecord, Role, Us, HEAVY_DECODE_TOKENS};
+use crate::types::{ReqId, ReqMeta, Request, RequestRecord, Role, Us};
 use crate::util::Pcg;
 
 use super::config::{ClusterConfig, PredictorMode};
@@ -32,6 +37,24 @@ use super::config::{ClusterConfig, PredictorMode};
 const PREDICTIONS_PER_CHUNK: u32 = 10;
 /// Main-LLM slowdown while co-running the predictor (Figure 17: ~10%).
 const PARALLEL_PREDICT_OVERHEAD: f64 = 0.10;
+
+/// Sentinel for "first token not yet produced".
+const NO_TIME: Us = Us::MAX;
+
+/// Arena entry: one request plus the driver-side state that used to live
+/// in side HashMaps (first-token time) or nowhere at all (the prefilling
+/// instance, which the KV-release path needs — see
+/// `release_prefill_resident`).
+struct ReqState {
+    req: Request,
+    first_token: Us,
+    /// The prefill instance (and its flip epoch) holding this request's
+    /// prompt KV until the transfer out completes. Consumed (`take`n)
+    /// exactly once; the epoch guards against the instance flipping away
+    /// and back while the KV is in flight (a reborn incarnation must not
+    /// have a stale release land on its counter).
+    prefilled_by: Option<(usize, u32)>,
+}
 
 struct PrefillInst {
     sched: PrefillScheduler,
@@ -47,11 +70,20 @@ struct PrefillInst {
     last_active: Us,
 }
 
+impl PrefillInst {
+    /// Scheduling load (§3.2): queued + in-flight prompt tokens. O(1) —
+    /// both counters are maintained incrementally.
+    fn load(&self) -> u64 {
+        self.sched.queued_tokens() + self.chunker.pending_tokens()
+    }
+}
+
 struct DecodeInst {
     sched: DecodeScheduler,
     kv: PagedKvCache,
     busy: bool,
-    /// Completions computed at iteration start, recorded at iteration end.
+    /// Completions computed at iteration start, recorded at iteration end
+    /// (buffer reused across iterations).
     pending_done: Vec<ReqId>,
     last_active: Us,
 }
@@ -66,10 +98,11 @@ pub struct Cluster {
     pub cfg: ClusterConfig,
     queue: EventQueue,
     insts: Vec<InstState>,
-    /// Request book: everything the global scheduler has seen.
-    requests: HashMap<ReqId, Request>,
-    first_token: HashMap<ReqId, Us>,
+    /// Request arena: everything the global scheduler has seen, indexed by
+    /// arena slot (events carry slots, not original request ids).
+    requests: Vec<ReqState>,
     /// Last monitor broadcast of decode loads (stale by design, §3.2).
+    /// Buffer reused across ticks.
     broadcast: Vec<DecodeLoad>,
     /// What this coordinator's dispatchers sent since the last broadcast:
     /// (heavy, light, kv footprint) per instance. A real dispatcher knows
@@ -78,6 +111,15 @@ pub struct Cluster {
     /// Scratch buffer for merged load views (avoids an allocation per
     /// dispatch on the hot path — see EXPERIMENTS.md §Perf).
     loads_scratch: Vec<DecodeLoad>,
+    /// Cached least-loaded prefill instance (the §3.2 routing target).
+    /// Invalidated when the cached instance's load grows or the instance
+    /// set changes; kept fresh in O(1) when any other instance's load
+    /// drops below it.
+    least_prefill: Option<usize>,
+    least_prefill_dirty: bool,
+    /// Per-instance flip epoch: bumped when an instance leaves its role
+    /// (any in-flight references to the old incarnation become stale).
+    insts_epoch: Vec<u32>,
     predictor: OraclePredictor,
     fabric: Fabric,
     rng: Pcg,
@@ -94,15 +136,7 @@ impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
         let mut insts = Vec::new();
         for _ in 0..cfg.n_prefill {
-            insts.push(InstState::Prefill(PrefillInst {
-                sched: PrefillScheduler::new(cfg.prefill_policy, cfg.sched_batch),
-                chunker: new_chunker(&cfg),
-                busy: false,
-                current: None,
-                resident_kv: 0,
-                pending_pred: 0,
-                last_active: 0,
-            }));
+            insts.push(InstState::Prefill(new_prefill_inst(&cfg, 0)));
         }
         for _ in 0..cfg.n_decode {
             insts.push(InstState::Decode(new_decode_inst(&cfg)));
@@ -114,18 +148,20 @@ impl Cluster {
             if cfg.predictor_mode == PredictorMode::Disabled { 0.0 } else { cfg.predictor_accuracy },
             cfg.seed ^ 0xabcd,
         );
-        let mut fabric = Fabric::new(cfg.link.clone(), cfg.cost.kv_bytes_per_tok);
+        let mut fabric = Fabric::new(cfg.link, cfg.cost.kv_bytes_per_tok);
         fabric.granularity = cfg.transfer_granularity;
         let rng = Pcg::with_stream(cfg.seed, 0x1234_5678_9abc_def1);
         Cluster {
             cfg,
             queue: EventQueue::new(),
             insts,
-            requests: HashMap::new(),
-            first_token: HashMap::new(),
+            requests: Vec::new(),
             broadcast: Vec::new(),
             since_tick: vec![(0, 0, 0); n],
             loads_scratch: Vec::with_capacity(n),
+            least_prefill: None,
+            least_prefill_dirty: true,
+            insts_epoch: vec![0; n],
             predictor,
             fabric,
             rng,
@@ -145,9 +181,16 @@ impl Cluster {
     /// Run a trace to completion; returns final metrics.
     pub fn run(mut self, trace: Vec<Request>) -> RunMetrics {
         self.outstanding = trace.len();
-        for r in trace {
-            self.queue.schedule_at(r.arrival, Event::Arrival(r.id));
-            self.requests.insert(r.id, r);
+        // Renumber the trace into dense arena slots: all internal ids
+        // (events, KV tables, queues) are slots from here on; the original
+        // request id resurfaces only in the final RequestRecord.
+        self.requests = trace
+            .into_iter()
+            .map(|req| ReqState { req, first_token: NO_TIME, prefilled_by: None })
+            .collect();
+        for slot in 0..self.requests.len() {
+            self.queue
+                .schedule_at(self.requests[slot].req.arrival, Event::Arrival(slot as ReqId));
         }
         self.refresh_broadcast();
         self.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
@@ -159,6 +202,7 @@ impl Cluster {
                     self.outstanding
                 );
             };
+            self.metrics.events += 1;
             self.handle(ev);
         }
         let now = self.queue.now();
@@ -176,7 +220,7 @@ impl Cluster {
 
     fn handle(&mut self, ev: Event) {
         match ev {
-            Event::Arrival(id) => self.on_arrival(id),
+            Event::Arrival(slot) => self.on_arrival(slot),
             Event::PredictDone { instance, req } => self.on_predict_done(instance, req),
             Event::PrefillIterDone { instance } => self.on_prefill_done(instance),
             Event::TransferDone { instance, req } => self.on_transfer_done(instance, req),
@@ -187,65 +231,129 @@ impl Cluster {
         }
     }
 
+    /// Scheduler-facing view of an arena slot (slot becomes the id).
+    fn meta_of(&self, slot: ReqId) -> ReqMeta {
+        let r = &self.requests[slot as usize].req;
+        ReqMeta {
+            id: slot,
+            task: r.task,
+            arrival: r.arrival,
+            prompt_len: r.prompt_len,
+            predicted: r.predicted,
+        }
+    }
+
+    // --------------------------------------------- least-loaded prefill
+
+    /// The cached instance's load grew (a request was routed to it): the
+    /// cache may no longer be the minimum.
+    fn note_prefill_load_increased(&mut self, i: usize) {
+        if self.least_prefill == Some(i) {
+            self.least_prefill_dirty = true;
+        }
+    }
+
+    /// Instance `i`'s load shrank (a chunk was sliced off): it may now
+    /// undercut the cached minimum. Same tie-break as the full scan
+    /// (lowest index among minima), so cache hits and rescans agree.
+    fn note_prefill_load_decreased(&mut self, i: usize) {
+        if self.least_prefill_dirty {
+            return;
+        }
+        let Some(j) = self.least_prefill else {
+            self.least_prefill_dirty = true;
+            return;
+        };
+        if i == j {
+            return; // the minimum got smaller: still the minimum
+        }
+        let (InstState::Prefill(pi), InstState::Prefill(pj)) = (&self.insts[i], &self.insts[j])
+        else {
+            self.least_prefill_dirty = true;
+            return;
+        };
+        let (li, lj) = (pi.load(), pj.load());
+        if li < lj || (li == lj && i < j) {
+            self.least_prefill = Some(i);
+        }
+    }
+
+    /// Least-loaded prefill instance (§3.2 "choose a prefill instance with
+    /// the least load"). Serves from the cache when clean; otherwise one
+    /// O(n_instances) pass over the O(1) load counters.
+    fn pick_prefill(&mut self) -> Option<usize> {
+        if !self.least_prefill_dirty {
+            if let Some(i) = self.least_prefill {
+                if matches!(self.insts[i], InstState::Prefill(_)) {
+                    return Some(i);
+                }
+            }
+        }
+        let mut best: Option<(usize, u64)> = None;
+        for (i, s) in self.insts.iter().enumerate() {
+            if let InstState::Prefill(p) = s {
+                let load = p.load();
+                if best.map(|(_, bl)| load < bl).unwrap_or(true) {
+                    best = Some((i, load));
+                }
+            }
+        }
+        self.least_prefill = best.map(|(i, _)| i);
+        self.least_prefill_dirty = false;
+        self.least_prefill
+    }
+
     // ----------------------------------------------------------- arrival
 
-    fn on_arrival(&mut self, id: ReqId) {
-        // Global scheduler: least queued prompt tokens among prefill
-        // instances (§3.2 "choose a prefill instance with the least load").
-        let target = self
-            .insts
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| match s {
-                InstState::Prefill(p) => Some((i, p.sched.queued_tokens() + p.chunker.pending_tokens())),
-                _ => None,
-            })
-            .min_by_key(|&(_, load)| load)
-            .map(|(i, _)| i);
-        let Some(i) = target else {
+    fn on_arrival(&mut self, slot: ReqId) {
+        let Some(i) = self.pick_prefill() else {
             // No prefill instance right now (all flipped/flipping): retry
             // after a monitor period.
             let at = self.queue.now() + self.cfg.monitor_interval_us;
-            self.queue.schedule_at(at, Event::Arrival(id));
+            self.queue.schedule_at(at, Event::Arrival(slot));
             return;
         };
 
-        let req = self.requests.get(&id).unwrap().clone();
         match self.cfg.predictor_mode {
             PredictorMode::Parallel => {
                 // Prediction rides alongside; request is immediately
                 // schedulable, concurrent chunks pay the Figure 17 tax.
-                let pred = self.predictor.predict(&[], req.decode_len);
-                self.requests.get_mut(&id).unwrap().predicted = Some(pred);
-                let req = self.requests[&id].clone();
+                let dlen = self.requests[slot as usize].req.decode_len;
+                let pred = self.predictor.predict(&[], dlen);
+                self.requests[slot as usize].req.predicted = Some(pred);
+                let meta = self.meta_of(slot);
                 let p = self.prefill_mut(i);
                 p.pending_pred += 1;
-                p.sched.push(req);
+                p.sched.push(meta);
+                self.note_prefill_load_increased(i);
                 self.try_start_prefill(i);
             }
             PredictorMode::Sequential => {
-                let tokens = req.prompt_len.min(512);
+                let tokens = self.requests[slot as usize].req.prompt_len.min(512);
                 let dur = self.cfg.cost.predictor_iter_us(tokens);
-                self.queue.schedule_in(dur, Event::PredictDone { instance: i, req: id });
+                self.queue.schedule_in(dur, Event::PredictDone { instance: i, req: slot });
             }
             PredictorMode::Disabled => {
-                self.prefill_mut(i).sched.push(req);
+                let meta = self.meta_of(slot);
+                self.prefill_mut(i).sched.push(meta);
+                self.note_prefill_load_increased(i);
                 self.try_start_prefill(i);
             }
         }
     }
 
-    fn on_predict_done(&mut self, i: usize, id: ReqId) {
-        let dlen = self.requests[&id].decode_len;
+    fn on_predict_done(&mut self, i: usize, slot: ReqId) {
+        let dlen = self.requests[slot as usize].req.decode_len;
         let pred = self.predictor.predict(&[], dlen);
-        self.requests.get_mut(&id).unwrap().predicted = Some(pred);
-        let req = self.requests[&id].clone();
+        self.requests[slot as usize].req.predicted = Some(pred);
+        let meta = self.meta_of(slot);
         if let InstState::Prefill(p) = &mut self.insts[i] {
-            p.sched.push(req);
+            p.sched.push(meta);
+            self.note_prefill_load_increased(i);
             self.try_start_prefill(i);
         } else {
             // instance flipped while predicting: re-route
-            self.queue.schedule_in(0, Event::Arrival(id));
+            self.queue.schedule_in(0, Event::Arrival(slot));
         }
     }
 
@@ -261,7 +369,6 @@ impl Cluster {
     fn try_start_prefill(&mut self, i: usize) {
         let cap = self.cfg.cost.kv_capacity_tokens();
         let chunk_size = self.cfg.chunk_size;
-        let cost = self.cfg.cost.clone();
         let InstState::Prefill(p) = &mut self.insts[i] else { return };
         if p.busy {
             return;
@@ -270,15 +377,16 @@ impl Cluster {
         // to keep the next iterations fed. The backlog stays in the local
         // scheduler where PrefillSchedBatch sorting applies (§3.3.1), and
         // KV backpressure caps residency (prompt KV lives here until
-        // transferred out).
+        // transferred out). Moving a request sched → chunker leaves the
+        // instance's total load unchanged.
         while p.chunker.pending_tokens() < 2 * chunk_size as u64 {
             let Some(nxt) = p.sched.peek() else { break };
             if p.resident_kv + nxt.prompt_len as u64 > cap {
                 break;
             }
-            let r = p.sched.pop().unwrap();
-            p.resident_kv += r.prompt_len as u64;
-            p.chunker.admit(r);
+            let m = p.sched.pop().unwrap();
+            p.resident_kv += m.prompt_len as u64;
+            p.chunker.admit(m);
         }
         let Some(chunk) = p.chunker.next_chunk() else { return };
         // Fixed-size iteration, charged by real tokens: the ChunkSize cap
@@ -286,8 +394,7 @@ impl Cluster {
         // partial chunk's zero-padding is shape filler, not useful compute
         // (under the paper's stress workloads chunks are full anyway, so
         // this matches their regime — see DESIGN.md §Calibration).
-        let _ = chunk_size;
-        let mut dur = cost.prefill_iter_us(chunk.tokens);
+        let mut dur = self.cfg.cost.prefill_iter_us(chunk.tokens);
         if p.pending_pred > 0 {
             dur = (dur as f64 * (1.0 + PARALLEL_PREDICT_OVERHEAD)) as Us;
             p.pending_pred = p.pending_pred.saturating_sub(PREDICTIONS_PER_CHUNK);
@@ -299,6 +406,8 @@ impl Cluster {
         p.last_active = self.queue.now();
         self.metrics.busy_us[i] += dur;
         self.queue.schedule_in(dur, Event::PrefillIterDone { instance: i });
+        // slicing the chunk shrank this instance's pending load
+        self.note_prefill_load_decreased(i);
     }
 
     fn on_prefill_done(&mut self, i: usize) {
@@ -314,21 +423,23 @@ impl Cluster {
                 continue;
             }
             // Request fully prefilled: first token exists now (TTFT).
-            self.first_token.insert(seg.req, now);
-            let req = self.requests[&seg.req].clone();
-            if req.decode_len <= 1 {
+            let slot = seg.req;
+            let epoch = self.insts_epoch[i];
+            let st = &mut self.requests[slot as usize];
+            st.first_token = now;
+            st.prefilled_by = Some((i, epoch));
+            if st.req.decode_len <= 1 {
                 // prefill's own token completes the request
-                self.finish(seg.req, now);
-                self.prefill_mut(i).resident_kv =
-                    self.prefill_mut(i).resident_kv.saturating_sub(req.prompt_len as u64);
+                self.finish(slot, now);
+                self.release_prefill_resident(slot);
                 continue;
             }
             // Dispatcher: decentralized inter-decode scheduling over the
             // monitor's last broadcast (§3.3.4).
-            if !self.dispatch_request(seg.req) {
+            if !self.dispatch_request(slot) {
                 // No decode instance known (mid-flip window): park the
                 // request; the monitor tick retries dispatch.
-                self.pending_dispatch.push(seg.req);
+                self.pending_dispatch.push(slot);
             }
         }
         self.try_start_prefill(i);
@@ -336,8 +447,8 @@ impl Cluster {
 
     /// The §3.3.4 dispatch: stale broadcast + own recent sends → α/β split
     /// → power-of-two → least interference; then schedule the KV transfer.
-    fn dispatch_request(&mut self, id: ReqId) -> bool {
-        let req = self.requests[&id].clone();
+    fn dispatch_request(&mut self, slot: ReqId) -> bool {
+        let req = self.requests[slot as usize].req;
         // merge broadcast with what we dispatched since the last tick
         // (into the reusable scratch buffer — this runs once per request)
         self.loads_scratch.clear();
@@ -362,7 +473,7 @@ impl Cluster {
         let Some(d) = target else { return false };
         let heavy = req
             .predicted
-            .map(|p| p.predicts_heavy(HEAVY_DECODE_TOKENS))
+            .map(|p| p.predicts_heavy(crate::types::HEAVY_DECODE_TOKENS))
             .unwrap_or(false);
         let entry = &mut self.since_tick[d];
         if heavy {
@@ -380,18 +491,18 @@ impl Cluster {
         let dur = self
             .fabric
             .exposed_transfer_us(n_chunks, chunk_tokens, chunk_compute);
-        self.queue.schedule_in(dur, Event::TransferDone { instance: d, req: id });
+        self.queue.schedule_in(dur, Event::TransferDone { instance: d, req: slot });
         true
     }
 
     // ------------------------------------------------------------ decode
 
-    fn on_transfer_done(&mut self, d: usize, id: ReqId) {
+    fn on_transfer_done(&mut self, d: usize, slot: ReqId) {
         // KV has left the prefill instance: release backpressure there.
-        let plen = self.requests[&id].prompt_len as u64;
-        self.release_prefill_resident(id, plen);
+        self.release_prefill_resident(slot);
 
-        let req = self.requests[&id].clone();
+        let req = self.requests[slot as usize].req;
+        let meta = self.meta_of(slot);
         match &mut self.insts[d] {
             InstState::Decode(di) => {
                 if req.heavy_decode() {
@@ -399,57 +510,63 @@ impl Cluster {
                 } else {
                     self.metrics.decode_assign[d].1 += 1;
                 }
-                let mut job = DecodeJob::new(req);
+                let mut job = DecodeJob::new(meta, req.decode_len);
                 job.generated = 1; // prefill produced the first token
-                di.sched.waiting.push_back(job);
+                di.sched.enqueue(job);
                 self.try_start_decode(d);
             }
             _ => {
                 // Instance flipped away while the KV was in flight: pick a
                 // new decode instance and pay the transfer again.
-                if !self.dispatch_request(id) {
-                    self.pending_dispatch.push(id);
+                if !self.dispatch_request(slot) {
+                    self.pending_dispatch.push(slot);
                 }
             }
         }
     }
 
-    /// Release the prompt KV held on the (single) prefill instance that
-    /// prefilled this request. We track residency per instance; since a
-    /// request is prefilled by exactly one instance, subtract where it fits.
-    fn release_prefill_resident(&mut self, _id: ReqId, plen: u64) {
-        for inst in self.insts.iter_mut() {
-            if let InstState::Prefill(p) = inst {
-                if p.resident_kv >= plen {
-                    p.resident_kv -= plen;
-                    return;
-                }
-            }
+    /// Release the prompt KV held on the prefill instance that actually
+    /// prefilled this request (recorded at prefill completion, consumed
+    /// exactly once). If that instance flipped away while the KV was in
+    /// flight, its residency counter died with the role change and there
+    /// is nothing to release. Releasing *only* at the recorded instance
+    /// keeps the per-instance backpressure signal honest under
+    /// multi-prefill configs (previously the subtraction landed on
+    /// whichever instance's counter happened to fit).
+    fn release_prefill_resident(&mut self, slot: ReqId) {
+        let st = &mut self.requests[slot as usize];
+        let plen = st.req.prompt_len as u64;
+        let Some((i, epoch)) = st.prefilled_by.take() else { return };
+        if self.insts_epoch[i] != epoch {
+            return; // instance flipped since: that residency died with it
+        }
+        if let InstState::Prefill(p) = &mut self.insts[i] {
+            p.resident_kv = p.resident_kv.saturating_sub(plen);
         }
     }
 
     fn try_start_decode(&mut self, d: usize) {
-        let cost = self.cfg.cost.clone();
+        let cost = self.cfg.cost;
         let now = self.queue.now();
         let InstState::Decode(di) = &mut self.insts[d] else { return };
         if di.busy {
             return;
         }
         let paged_in = di.sched.admit(&mut di.kv);
-        if di.sched.running.is_empty() {
+        if di.sched.n_resident() == 0 {
             return;
         }
         // Execute the iteration's effects now; expose them at IterDone.
-        let batch = di.sched.running.len() as u32;
+        let batch = di.sched.n_resident() as u32;
         let kv_tokens = di.sched.running_kv_tokens();
-        let (done, swapped_out) = di.sched.step(&mut di.kv);
+        di.pending_done.clear();
+        let swapped_out = di.sched.step(&mut di.kv, &mut di.pending_done);
         debug_assert!(di.kv.check_invariants().is_ok());
         // Iteration cost: compute + any PCIe swap traffic this iteration
         // (victim page-out now, victim page-in when it re-admits).
         let dur = cost.decode_iter_us(batch, kv_tokens)
             + cost.swap_us(swapped_out)
             + cost.swap_us(paged_in_swapins(paged_in, &di.sched));
-        di.pending_done = done.iter().map(|j| j.req.id).collect();
         di.busy = true;
         di.last_active = now;
         self.metrics.busy_us[d] += dur;
@@ -458,30 +575,34 @@ impl Cluster {
 
     fn on_decode_done(&mut self, d: usize) {
         let now = self.queue.now();
-        let done = {
+        let mut done = {
             let InstState::Decode(di) = &mut self.insts[d] else { return };
             di.busy = false;
             di.last_active = now;
             std::mem::take(&mut di.pending_done)
         };
-        for id in done {
-            self.finish(id, now);
+        for slot in done.drain(..) {
+            self.finish(slot, now);
+        }
+        // hand the buffer back so the next iteration reuses its capacity
+        if let InstState::Decode(di) = &mut self.insts[d] {
+            di.pending_done = done;
         }
         self.try_start_decode(d);
     }
 
-    fn finish(&mut self, id: ReqId, now: Us) {
-        let req = &self.requests[&id];
-        let first = *self.first_token.get(&id).unwrap_or(&now);
+    fn finish(&mut self, slot: ReqId, now: Us) {
+        let st = &self.requests[slot as usize];
+        let first = if st.first_token == NO_TIME { now } else { st.first_token };
         self.metrics.records.push(RequestRecord {
-            id,
-            task: req.task,
-            prompt_len: req.prompt_len,
-            decode_len: req.decode_len,
-            arrival: req.arrival,
+            id: st.req.id,
+            task: st.req.task,
+            prompt_len: st.req.prompt_len,
+            decode_len: st.req.decode_len,
+            arrival: st.req.arrival,
             first_token: first,
             finished: now,
-            predicted: req.predicted,
+            predicted: st.req.predicted,
         });
         self.outstanding -= 1;
     }
@@ -489,34 +610,32 @@ impl Cluster {
     // ----------------------------------------------------------- monitor
 
     fn refresh_broadcast(&mut self) {
-        self.since_tick = vec![(0, 0, 0); self.insts.len()];
-        self.broadcast = self
-            .insts
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| match s {
-                InstState::Decode(di) => {
-                    let (h, l) = di.sched.heavy_light(HEAVY_DECODE_TOKENS);
-                    Some(DecodeLoad {
-                        instance: i,
-                        free_kv_tokens: di.kv.free_tokens(),
-                        n_heavy: h,
-                        n_light: l,
-                        queue_len: di.sched.queue_len(),
-                    })
-                }
-                _ => None,
-            })
-            .collect();
+        // reuse both buffers — this runs every monitor tick
+        for e in self.since_tick.iter_mut() {
+            *e = (0, 0, 0);
+        }
+        self.broadcast.clear();
+        for (i, s) in self.insts.iter().enumerate() {
+            if let InstState::Decode(di) = s {
+                let (h, l) = di.sched.heavy_light();
+                self.broadcast.push(DecodeLoad {
+                    instance: i,
+                    free_kv_tokens: di.kv.free_tokens(),
+                    n_heavy: h,
+                    n_light: l,
+                    queue_len: di.sched.queue_len(),
+                });
+            }
+        }
     }
 
     fn on_monitor_tick(&mut self) {
         self.refresh_broadcast();
         self.maybe_flip();
         // Retry any dispatches parked while no decode instance existed.
-        for id in std::mem::take(&mut self.pending_dispatch) {
-            if !self.dispatch_request(id) {
-                self.pending_dispatch.push(id);
+        for slot in std::mem::take(&mut self.pending_dispatch) {
+            if !self.dispatch_request(slot) {
+                self.pending_dispatch.push(slot);
             }
         }
         if self.outstanding > 0 {
@@ -543,7 +662,7 @@ impl Cluster {
             .insts
             .iter()
             .filter_map(|s| match s {
-                InstState::Prefill(p) => Some(p.sched.queued_tokens() + p.chunker.pending_tokens()),
+                InstState::Prefill(p) => Some(p.load()),
                 _ => None,
             })
             .sum();
@@ -572,6 +691,8 @@ impl Cluster {
                     // drained already (idle): flip is just the role switch
                     let dur = self.rng.range(flip.flip_min_us, flip.flip_max_us + 1);
                     self.insts[i] = InstState::Flipping { to: Role::Decode };
+                    self.insts_epoch[i] += 1;
+                    self.least_prefill_dirty = true;
                     self.metrics.flips += 1;
                     self.queue.schedule_in(dur, Event::FlipDone { instance: i });
                     return; // at most one flip per tick
@@ -585,6 +706,7 @@ impl Cluster {
                 {
                     let dur = self.rng.range(flip.flip_min_us, flip.flip_max_us + 1);
                     self.insts[i] = InstState::Flipping { to: Role::Prefill };
+                    self.insts_epoch[i] += 1;
                     self.metrics.flips += 1;
                     self.queue.schedule_in(dur, Event::FlipDone { instance: i });
                     return;
@@ -597,19 +719,24 @@ impl Cluster {
     fn on_flip_done(&mut self, i: usize) {
         let InstState::Flipping { to } = self.insts[i] else { return };
         self.insts[i] = match to {
-            Role::Prefill => InstState::Prefill(PrefillInst {
-                sched: PrefillScheduler::new(self.cfg.prefill_policy, self.cfg.sched_batch),
-                chunker: new_chunker(&self.cfg),
-                busy: false,
-                current: None,
-                resident_kv: 0,
-                pending_pred: 0,
-                last_active: self.queue.now(),
-            }),
+            Role::Prefill => InstState::Prefill(new_prefill_inst(&self.cfg, self.queue.now())),
             Role::Decode => InstState::Decode(new_decode_inst(&self.cfg)),
             Role::Coupled => unreachable!(),
         };
+        self.least_prefill_dirty = true;
         self.refresh_broadcast();
+    }
+}
+
+fn new_prefill_inst(cfg: &ClusterConfig, now: Us) -> PrefillInst {
+    PrefillInst {
+        sched: PrefillScheduler::new(cfg.prefill_policy, cfg.sched_batch),
+        chunker: new_chunker(cfg),
+        busy: false,
+        current: None,
+        resident_kv: 0,
+        pending_pred: 0,
+        last_active: now,
     }
 }
 
@@ -637,7 +764,7 @@ fn new_decode_inst(cfg: &ClusterConfig) -> DecodeInst {
 /// there. We approximate by charging swap cost only when the scheduler has
 /// swap history. (Kept as a function for the ablation bench to override.)
 fn paged_in_swapins(paged_in: u64, sched: &DecodeScheduler) -> u64 {
-    if sched.running.iter().any(|j| j.swaps > 0) {
+    if sched.running_has_swap_history() {
         paged_in
     } else {
         0
@@ -664,6 +791,7 @@ mod tests {
         let trace = gen.trace(WorkloadKind::Mixed, 64, 20.0, 0);
         let m = run_cluster(small_cfg(), trace);
         assert_eq!(m.records.len(), 64);
+        assert!(m.events > 64, "every request takes several events");
         for r in &m.records {
             assert!(r.first_token >= r.arrival, "TTFT before arrival");
             assert!(r.finished >= r.first_token, "JCT before TTFT");
@@ -678,6 +806,7 @@ mod tests {
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.events, b.events);
         assert!((a.jct_summary().mean - b.jct_summary().mean).abs() < 1e-9);
     }
 
@@ -730,5 +859,41 @@ mod tests {
             four.jct_summary().mean < one.jct_summary().mean,
             "scaling decode must help heavy-decode workloads"
         );
+    }
+
+    #[test]
+    fn records_report_original_request_ids() {
+        // Arena slots are internal: records must carry the trace's ids
+        // even when they are sparse.
+        let mut gen = WorkloadGen::new(13);
+        let trace: Vec<Request> = gen
+            .trace(WorkloadKind::Lpld, 16, 0.0, 0)
+            .into_iter()
+            .map(|mut r| {
+                r.id += 5_000;
+                r
+            })
+            .collect();
+        let m = run_cluster(small_cfg(), trace);
+        assert_eq!(m.records.len(), 16);
+        for r in &m.records {
+            assert!(r.id >= 5_000, "record lost its original id: {}", r.id);
+        }
+    }
+
+    #[test]
+    fn multi_prefill_release_targets_the_prefilling_instance() {
+        // Two prefill instances under a standing backlog: the residency
+        // counters must drain back to a sane state (the old "subtract
+        // wherever it fits" release corrupted them), so the run completes
+        // and each instance keeps doing work.
+        let mut gen = WorkloadGen::new(17);
+        let trace = gen.trace(WorkloadKind::Hpld, 96, 0.0, 0);
+        let m = run_cluster(
+            ClusterConfig { flip: None, ..ClusterConfig::ts_roce(2, 2) },
+            trace,
+        );
+        assert_eq!(m.records.len(), 96);
+        assert!(m.busy_us[0] > 0 && m.busy_us[1] > 0, "both prefill instances must serve");
     }
 }

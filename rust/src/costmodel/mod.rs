@@ -23,7 +23,8 @@
 use crate::types::{Us, US_PER_SEC};
 
 /// Hardware + model constants for one serving instance (2xV100, OPT-13B).
-#[derive(Clone, Debug)]
+/// Plain constants — `Copy`, so hot paths pass it by value for free.
+#[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     /// Fixed per-iteration overhead (kernel launches, scheduling): µs.
     pub base_us: f64,

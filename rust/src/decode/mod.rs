@@ -12,11 +12,22 @@
 //!
 //! Both reserve policies estimate usage from the predicted length range's
 //! *lower end*, matching §5.2.3's evaluation setup.
+//!
+//! Hot-path design (see DESIGN.md §Hot paths): the scheduler maintains
+//! its aggregates — running KV tokens, reserved future growth, predicted
+//! heavy/light counts, swap-scarred count — *incrementally* on every
+//! admit/step/swap/finish instead of rescanning the batch, so a decode
+//! iteration is O(batch) total and every load query is O(1). Preemption
+//! victims leave from the back of the running batch (`pop`/one-slot
+//! `swap_remove`), and completions compact the batch in a single stable
+//! pass — no O(batch) `Vec::remove` shifting anywhere. The invariant
+//! "cached aggregates == from-scratch recount" is property-tested in
+//! rust/tests/proptest_decode.rs.
 
 use std::collections::VecDeque;
 
 use crate::kvcache::PagedKvCache;
-use crate::types::{BucketPrediction, ReqId, Request};
+use crate::types::{BucketPrediction, ReqId, ReqMeta, Request, HEAVY_DECODE_TOKENS};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DecodePolicy {
@@ -36,41 +47,57 @@ impl DecodePolicy {
 }
 
 /// A request resident on the decode instance.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct DecodeJob {
-    pub req: Request,
+    pub meta: ReqMeta,
+    /// Ground-truth generation target. The decode instance "discovers" it
+    /// one token at a time; policy code must only read `meta.predicted`.
+    pub target_len: u32,
     /// Tokens generated so far.
     pub generated: u32,
     /// True once the job holds pages and sits in the running batch.
     pub running: bool,
     /// Times this job was swapped out (thrash diagnostics).
     pub swaps: u32,
+    /// Predicted-heavy classification, fixed at creation (monitor input).
+    pub pred_heavy: bool,
+    /// Cached predicted peak KV (set when the job enters a scheduler).
+    peak_kv: u64,
 }
 
 impl DecodeJob {
-    pub fn new(req: Request) -> Self {
-        DecodeJob { req, generated: 0, running: false, swaps: 0 }
+    pub fn new(meta: ReqMeta, target_len: u32) -> Self {
+        let pred_heavy = meta
+            .predicted
+            .map(|p| p.predicts_heavy(HEAVY_DECODE_TOKENS))
+            .unwrap_or(false);
+        DecodeJob { meta, target_len, generated: 0, running: false, swaps: 0, pred_heavy, peak_kv: 0 }
     }
 
     /// Current KV footprint in tokens.
     pub fn kv_tokens(&self) -> u32 {
-        self.req.prompt_len + self.generated
+        self.meta.prompt_len + self.generated
     }
 
     /// Predicted *remaining* generation, from the range's lower end
     /// (clamped to at least 1 so jobs always make progress estimates).
     pub fn predicted_remaining(&self, granularity: u32) -> u32 {
-        let total = predicted_total(self.req.predicted, granularity);
+        let total = predicted_total(self.meta.predicted, granularity);
         total.saturating_sub(self.generated).max(1)
     }
 
     /// Predicted *total* KV footprint at completion (lower end).
     pub fn predicted_peak_kv(&self, granularity: u32) -> u64 {
-        self.req.prompt_len as u64 + predicted_total(self.req.predicted, granularity) as u64
+        self.meta.prompt_len as u64 + predicted_total(self.meta.predicted, granularity) as u64
     }
 
     pub fn done(&self) -> bool {
-        self.generated >= self.req.decode_len
+        self.generated >= self.target_len
+    }
+
+    /// This job's current contribution to the reserved-growth aggregate.
+    fn reserved_now(&self) -> u64 {
+        self.peak_kv.saturating_sub(self.kv_tokens() as u64)
     }
 }
 
@@ -79,6 +106,22 @@ fn predicted_total(pred: Option<BucketPrediction>, granularity: u32) -> u32 {
         Some(p) => p.lo.max(granularity / 2), // lower end; half-granule floor
         None => granularity / 2,
     }
+}
+
+/// The incrementally-maintained aggregates (exposed for the property test
+/// and debug assertions — see `DecodeScheduler::recount_aggregates`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct SchedAggregates {
+    /// Σ kv_tokens over the running batch.
+    pub running_kv: u64,
+    /// Σ max(0, predicted peak − current kv) over the running batch.
+    pub reserved_growth: u64,
+    /// Predicted-heavy jobs across waiting + running + swapped.
+    pub n_heavy: u32,
+    /// Predicted-light jobs across waiting + running + swapped.
+    pub n_light: u32,
+    /// Running jobs with swap history (swap-in cost attribution).
+    pub swap_scarred: u32,
 }
 
 /// The decode instance's local scheduler state.
@@ -90,11 +133,15 @@ pub struct DecodeScheduler {
     pub max_batch: u32,
     /// Waiting for first admission (KV already transferred but not paged
     /// in — the sim charges the page-in at admission).
-    pub waiting: VecDeque<DecodeJob>,
-    /// Admitted, holding pages, decoded every iteration.
-    pub running: Vec<DecodeJob>,
+    waiting: VecDeque<DecodeJob>,
+    /// Admitted, holding pages, decoded every iteration (push order =
+    /// admission order, so the *newest* job sits at the back).
+    running: Vec<DecodeJob>,
     /// Victims of memory pressure, waiting to swap back in.
-    pub swapped: VecDeque<DecodeJob>,
+    swapped: VecDeque<DecodeJob>,
+    agg: SchedAggregates,
+    /// Reusable buffer for the completion compaction pass.
+    compact_scratch: Vec<DecodeJob>,
 }
 
 impl DecodeScheduler {
@@ -106,6 +153,8 @@ impl DecodeScheduler {
             waiting: VecDeque::new(),
             running: Vec::new(),
             swapped: VecDeque::new(),
+            agg: SchedAggregates::default(),
+            compact_scratch: Vec::new(),
         }
     }
 
@@ -121,33 +170,103 @@ impl DecodeScheduler {
         self.waiting.len() + self.running.len() + self.swapped.len()
     }
 
-    /// Counts of (heavy, light) predicted decodes across all local jobs —
-    /// the load the cluster monitor broadcasts (§3.2).
-    pub fn heavy_light(&self, heavy_threshold: u32) -> (u32, u32) {
-        let mut h = 0;
-        let mut l = 0;
-        for j in self.waiting.iter().chain(self.running.iter()).chain(self.swapped.iter()) {
-            let heavy = j
-                .req
-                .predicted
-                .map(|p| p.predicts_heavy(heavy_threshold))
-                .unwrap_or(false);
-            if heavy {
-                h += 1;
-            } else {
-                l += 1;
-            }
-        }
-        (h, l)
+    /// The running batch, in admission order (read-only).
+    pub fn running(&self) -> &[DecodeJob] {
+        &self.running
     }
 
-    /// Future KV growth already promised to running jobs (reserve-static's
-    /// notion of "unavailable" memory beyond current allocations).
-    fn reserved_growth(&self) -> u64 {
-        self.running
-            .iter()
-            .map(|j| j.predicted_peak_kv(self.granularity).saturating_sub(j.kv_tokens() as u64))
-            .sum()
+    /// Counts of (heavy, light) predicted decodes across all local jobs —
+    /// the load the cluster monitor broadcasts (§3.2). O(1): maintained
+    /// on enqueue/inject/finish.
+    pub fn heavy_light(&self) -> (u32, u32) {
+        (self.agg.n_heavy, self.agg.n_light)
+    }
+
+    /// Total KV tokens resident in the running batch (iteration cost
+    /// input). O(1): maintained on admit/step/swap/finish.
+    pub fn running_kv_tokens(&self) -> u64 {
+        self.agg.running_kv
+    }
+
+    /// Whether any running job carries swap history (drivers use this to
+    /// attribute page-in traffic to PCIe swap-ins). O(1).
+    pub fn running_has_swap_history(&self) -> bool {
+        self.agg.swap_scarred > 0
+    }
+
+    /// Current cached aggregates.
+    pub fn aggregates(&self) -> SchedAggregates {
+        self.agg
+    }
+
+    /// From-scratch recount of every aggregate — the reference the cached
+    /// values must always match (property-tested after random op
+    /// sequences in rust/tests/proptest_decode.rs).
+    pub fn recount_aggregates(&self) -> SchedAggregates {
+        let mut agg = SchedAggregates::default();
+        for j in self.running.iter() {
+            agg.running_kv += j.kv_tokens() as u64;
+            agg.reserved_growth +=
+                self.predicted_peak(j).saturating_sub(j.kv_tokens() as u64);
+            if j.swaps > 0 {
+                agg.swap_scarred += 1;
+            }
+        }
+        for j in self.waiting.iter().chain(self.running.iter()).chain(self.swapped.iter()) {
+            let heavy = j
+                .meta
+                .predicted
+                .map(|p| p.predicts_heavy(HEAVY_DECODE_TOKENS))
+                .unwrap_or(false);
+            if heavy {
+                agg.n_heavy += 1;
+            } else {
+                agg.n_light += 1;
+            }
+        }
+        agg
+    }
+
+    fn predicted_peak(&self, job: &DecodeJob) -> u64 {
+        job.predicted_peak_kv(self.granularity)
+    }
+
+    /// Start tracking a job (it entered waiting/running/swapped).
+    fn count_tracked(&mut self, job: &DecodeJob) {
+        if job.pred_heavy {
+            self.agg.n_heavy += 1;
+        } else {
+            self.agg.n_light += 1;
+        }
+    }
+
+    /// Stop tracking a job (it left the scheduler for good).
+    fn count_untracked(&mut self, job: &DecodeJob) {
+        if job.pred_heavy {
+            self.agg.n_heavy -= 1;
+        } else {
+            self.agg.n_light -= 1;
+        }
+    }
+
+    /// Fold `job`'s current contribution into the running-batch
+    /// aggregates (call right before pushing it into `running`).
+    fn agg_add_running(&mut self, job: &DecodeJob) {
+        self.agg.running_kv += job.kv_tokens() as u64;
+        self.agg.reserved_growth += job.reserved_now();
+        if job.swaps > 0 {
+            self.agg.swap_scarred += 1;
+        }
+    }
+
+    /// Remove `job`'s current contribution from the running-batch
+    /// aggregates (call right after detaching it from `running`).
+    fn agg_sub_running(&mut self, job: &DecodeJob) {
+        self.agg.running_kv -= job.kv_tokens() as u64;
+        self.agg.reserved_growth -= job.reserved_now();
+        if job.swaps > 0 {
+            self.agg.swap_scarred -= 1;
+        }
     }
 
     /// Admission test for one candidate under the configured policy.
@@ -161,8 +280,8 @@ impl DecodeScheduler {
             DecodePolicy::ReserveStatic => {
                 // full predicted footprint must fit memory not yet
                 // promised to running jobs
-                let available = kv.free_tokens().saturating_sub(self.reserved_growth());
-                job.predicted_peak_kv(self.granularity) <= available
+                let available = kv.free_tokens().saturating_sub(self.agg.reserved_growth);
+                self.predicted_peak(job) <= available
             }
             DecodePolicy::ReserveDynamic => {
                 // Proactive variant: like reserve-static, but project to
@@ -170,18 +289,55 @@ impl DecodeScheduler {
                 // its entire footprint returns to the pool by the time the
                 // candidate approaches its own peak, so that release
                 // counts as available. Less conservative than static,
-                // still thrash-free under correct predictions.
-                let available =
-                    kv.free_tokens().saturating_sub(self.reserved_growth());
+                // still thrash-free under correct predictions. (The min
+                // scan is O(batch) but only runs on admission attempts,
+                // not every iteration.)
+                let available = kv.free_tokens().saturating_sub(self.agg.reserved_growth);
                 let release = self
                     .running
                     .iter()
                     .min_by_key(|j| j.predicted_remaining(self.granularity))
-                    .map(|j| j.predicted_peak_kv(self.granularity))
+                    .map(|j| self.predicted_peak(j))
                     .unwrap_or(0);
-                job.predicted_peak_kv(self.granularity) <= available + release
+                self.predicted_peak(job) <= available + release
             }
         }
+    }
+
+    /// Enqueue a job into the waiting line (KV transferred, not yet paged
+    /// in). All entry points go through here so the heavy/light counts
+    /// stay exact.
+    pub fn enqueue(&mut self, mut job: DecodeJob) {
+        job.peak_kv = self.predicted_peak(&job);
+        self.count_tracked(&job);
+        self.waiting.push_back(job);
+    }
+
+    /// Convenience: enqueue a fresh job for `req`.
+    pub fn push(&mut self, req: Request) {
+        self.enqueue(DecodeJob::new(req.meta(), req.decode_len));
+    }
+
+    /// Insert a job straight into the running batch *without* allocating
+    /// pages — for drivers whose jobs already own their pages (the coupled
+    /// baseline's locally-prefilled requests, real mode's transferred KV).
+    pub fn inject_running(&mut self, mut job: DecodeJob) {
+        job.running = true;
+        job.peak_kv = self.predicted_peak(&job);
+        self.count_tracked(&job);
+        self.agg_add_running(&job);
+        self.running.push(job);
+    }
+
+    /// Remove a specific job from the running batch, preserving order
+    /// (rare path: e.g. single-token requests that finish at prefill).
+    /// The caller owns the job's pages and must release them.
+    pub fn remove_running(&mut self, id: ReqId) -> Option<DecodeJob> {
+        let pos = self.running.iter().position(|j| j.meta.id == id)?;
+        let job = self.running.remove(pos);
+        self.agg_sub_running(&job);
+        self.count_untracked(&job);
+        Some(job)
     }
 
     /// Run one admission round: move admissible jobs from `swapped` (first,
@@ -208,94 +364,110 @@ impl DecodeScheduler {
             } else {
                 self.waiting.pop_front().unwrap()
             };
-            kv.alloc(job.req.id, job.kv_tokens())
+            kv.alloc(job.meta.id, job.kv_tokens())
                 .expect("admits() guaranteed capacity");
             paged_in += job.kv_tokens() as u64;
             job.running = true;
+            job.peak_kv = self.predicted_peak(&job);
+            self.agg_add_running(&job);
             self.running.push(job);
         }
         paged_in
     }
 
+    /// Move `job` (already detached from `running`) into the swapped
+    /// queue, returning the tokens freed.
+    fn evict(&mut self, mut job: DecodeJob, kv: &mut PagedKvCache) -> u64 {
+        let freed = kv.swap_out(job.meta.id).unwrap_or(0) as u64;
+        self.agg_sub_running(&job);
+        job.running = false;
+        job.swaps += 1;
+        self.swapped.push_back(job);
+        freed
+    }
+
     /// Generate one token for every running job. Requests that overflow
     /// their pages trigger vLLM-style preemption: the *newest* running job
-    /// is swapped out until the append succeeds. Returns
-    /// (completed jobs, tokens swapped out this iteration).
-    pub fn step(&mut self, kv: &mut PagedKvCache) -> (Vec<DecodeJob>, u64) {
-        self.step_n(kv, usize::MAX)
+    /// is swapped out until the append succeeds. Completed job ids are
+    /// appended to `done` (in batch order); returns tokens swapped out
+    /// this iteration.
+    pub fn step(&mut self, kv: &mut PagedKvCache, done: &mut Vec<ReqId>) -> u64 {
+        self.step_n(kv, usize::MAX, done)
     }
 
     /// Like `step`, but only the first `n` running jobs decode this
     /// iteration — the *fixed decode batch* of the vanilla-vLLM baseline
     /// (later jobs wait their turn, FCFS).
-    pub fn step_n(&mut self, kv: &mut PagedKvCache, n: usize) -> (Vec<DecodeJob>, u64) {
+    pub fn step_n(&mut self, kv: &mut PagedKvCache, n: usize, done: &mut Vec<ReqId>) -> u64 {
         let mut swapped_tokens = 0u64;
+        let mut newly_done = 0usize;
         let mut i = 0;
         while i < self.running.len().min(n) {
-            let id = self.running[i].req.id;
+            let id = self.running[i].meta.id;
             loop {
                 match kv.append_token(id) {
                     Ok(()) => break,
                     Err(_) => {
-                        // Preempt the newest running job that is not the
-                        // one appending (recompute/swap-in later).
-                        let victim_idx = (0..self.running.len())
-                            .rev()
-                            .find(|&j| self.running[j].req.id != id);
-                        let Some(v) = victim_idx else {
+                        let len = self.running.len();
+                        if len == 1 {
                             // only this job left and still no pages: it
                             // swaps itself out and retries next iteration
-                            let mut job = self.running.remove(i);
-                            swapped_tokens += kv.swap_out(id).unwrap_or(0) as u64;
-                            job.running = false;
-                            job.swaps += 1;
-                            self.swapped.push_back(job);
+                            let job = self.running.pop().unwrap();
+                            swapped_tokens += self.evict(job, kv);
                             break;
-                        };
-                        let mut job = self.running.remove(v);
-                        swapped_tokens += kv.swap_out(job.req.id).unwrap_or(0) as u64;
-                        job.running = false;
-                        job.swaps += 1;
-                        self.swapped.push_back(job);
-                        if v < i {
-                            i -= 1;
+                        }
+                        // Victim: the newest running job that is not the
+                        // one appending. Admission order puts it at the
+                        // tail — O(1) and order-preserving: `pop` when the
+                        // appender isn't the tail, else remove the tail's
+                        // neighbor (the appender slides one slot left).
+                        if i == len - 1 {
+                            let job = self.running.swap_remove(len - 2);
+                            swapped_tokens += self.evict(job, kv);
+                            i = len - 2;
+                        } else {
+                            let job = self.running.pop().unwrap();
+                            swapped_tokens += self.evict(job, kv);
                         }
                     }
                 }
             }
             // if the job swapped itself out it is no longer at index i
-            if i < self.running.len() && self.running[i].req.id == id {
-                self.running[i].generated += 1;
+            if i < self.running.len() && self.running[i].meta.id == id {
+                let job = &mut self.running[i];
+                if job.peak_kv > job.kv_tokens() as u64 {
+                    self.agg.reserved_growth -= 1;
+                }
+                job.generated += 1;
+                self.agg.running_kv += 1;
+                if job.done() {
+                    newly_done += 1;
+                }
                 i += 1;
             }
         }
-        let mut done = Vec::new();
-        let mut j = 0;
-        while j < self.running.len() {
-            if self.running[j].done() {
-                let job = self.running.remove(j);
-                kv.release(job.req.id);
-                done.push(job);
-            } else {
-                j += 1;
+        if newly_done > 0 {
+            // Single stable compaction pass over the batch (no per-removal
+            // shifting): completed jobs release pages and report their
+            // ids; survivors keep their order. Buffers are reused across
+            // iterations, so the steady state allocates nothing.
+            let mut olds =
+                std::mem::replace(&mut self.running, std::mem::take(&mut self.compact_scratch));
+            for job in olds.drain(..) {
+                if job.done() {
+                    kv.release(job.meta.id);
+                    self.agg_sub_running(&job);
+                    self.count_untracked(&job);
+                    done.push(job.meta.id);
+                } else {
+                    self.running.push(job);
+                }
             }
+            self.compact_scratch = olds;
         }
-        (done, swapped_tokens)
+        debug_assert_eq!(self.agg, self.recount_aggregates());
+        swapped_tokens
     }
-
-    /// Total KV tokens resident in the running batch (iteration cost input).
-    pub fn running_kv_tokens(&self) -> u64 {
-        self.running.iter().map(|j| j.kv_tokens() as u64).sum()
-    }
-
-    pub fn push(&mut self, req: Request) {
-        self.waiting.push_back(DecodeJob::new(req));
-    }
-}
-
-/// Completed-job record helper for drivers.
-pub fn job_ids(jobs: &[DecodeJob]) -> Vec<ReqId> {
-    jobs.iter().map(|j| j.req.id).collect()
 }
 
 #[cfg(test)]
@@ -318,6 +490,12 @@ mod tests {
         (DecodeScheduler::new(policy, 200, 64), PagedKvCache::new(65, 16)) // 64 usable pages = 1024 tokens
     }
 
+    fn step_ids(s: &mut DecodeScheduler, kv: &mut PagedKvCache) -> (Vec<u64>, u64) {
+        let mut done = Vec::new();
+        let sw = s.step(kv, &mut done);
+        (done, sw)
+    }
+
     #[test]
     fn greedy_admits_until_pages_run_out() {
         let (mut s, mut kv) = sched(DecodePolicy::Greedy);
@@ -325,7 +503,7 @@ mod tests {
             s.push(req(i, 150, 50, Some(0))); // ~10 pages each
         }
         s.admit(&mut kv);
-        assert!(s.running.len() >= 6, "greedy should pack the pool: {}", s.running.len());
+        assert!(s.n_resident() >= 6, "greedy should pack the pool: {}", s.n_resident());
         kv.check_invariants().unwrap();
     }
 
@@ -336,7 +514,7 @@ mod tests {
         s.push(req(0, 100, 650, Some(3)));
         s.push(req(1, 100, 650, Some(3)));
         s.admit(&mut kv);
-        assert_eq!(s.running.len(), 1, "static must reserve the 2nd job out");
+        assert_eq!(s.n_resident(), 1, "static must reserve the 2nd job out");
     }
 
     #[test]
@@ -345,19 +523,19 @@ mod tests {
         // Job A: short remaining (bucket 0 → lo=0 → floor 100), holds 400.
         s.push(req(0, 400, 90, Some(0)));
         s.admit(&mut kv);
-        assert_eq!(s.running.len(), 1);
+        assert_eq!(s.n_resident(), 1);
         // Candidate B: peak 100+600=700. Free now: 1024-401=623 → static
         // would refuse; dynamic sees A freeing ~500 soon and admits.
         s.push(req(1, 100, 650, Some(3)));
-        let before = s.running.len();
+        let before = s.n_resident();
         s.admit(&mut kv);
-        assert_eq!(s.running.len(), before + 1, "dynamic should admit B");
+        assert_eq!(s.n_resident(), before + 1, "dynamic should admit B");
         let (mut s2, mut kv2) = sched(DecodePolicy::ReserveStatic);
         s2.push(req(0, 400, 90, Some(0)));
         s2.admit(&mut kv2);
         s2.push(req(1, 100, 650, Some(3)));
         s2.admit(&mut kv2);
-        assert_eq!(s2.running.len(), 1, "static refuses what dynamic admits");
+        assert_eq!(s2.n_resident(), 1, "static refuses what dynamic admits");
     }
 
     #[test]
@@ -365,11 +543,11 @@ mod tests {
         let (mut s, mut kv) = sched(DecodePolicy::Greedy);
         s.push(req(0, 10, 3, None));
         s.admit(&mut kv);
-        let (d1, _) = s.step(&mut kv);
+        let (d1, _) = step_ids(&mut s, &mut kv);
         assert!(d1.is_empty());
-        s.step(&mut kv);
-        let (d3, _) = s.step(&mut kv);
-        assert_eq!(job_ids(&d3), vec![0]);
+        step_ids(&mut s, &mut kv);
+        let (d3, _) = step_ids(&mut s, &mut kv);
+        assert_eq!(d3, vec![0]);
         assert_eq!(kv.n_live(), 0, "completed job must release pages");
         kv.check_invariants().unwrap();
     }
@@ -383,16 +561,16 @@ mod tests {
             s.push(req(i, 320, 100, Some(0)));
         }
         s.admit(&mut kv);
-        assert_eq!(s.running.len(), 3);
+        assert_eq!(s.n_resident(), 3);
         let mut swapped = 0;
         for _ in 0..30 {
             s.admit(&mut kv);
-            let (_, sw) = s.step(&mut kv);
+            let (_, sw) = step_ids(&mut s, &mut kv);
             swapped += sw;
             kv.check_invariants().unwrap();
         }
         assert!(swapped > 0, "greedy under pressure must swap");
-        assert!(s.swapped.iter().chain(s.running.iter()).count() + s.waiting.len() == 3);
+        assert_eq!(s.total_jobs(), 3, "no job may be lost to preemption");
     }
 
     #[test]
@@ -404,13 +582,14 @@ mod tests {
             s.push(req(i, 320, 100, Some(0))); // peak 420 ≤ free? 2*421 < 1024 only for 2
         }
         let mut swapped = 0;
+        let mut done = Vec::new();
         for _ in 0..260 {
             s.admit(&mut kv);
-            let (_, sw) = s.step(&mut kv);
-            swapped += sw;
+            swapped += s.step(&mut kv, &mut done);
         }
         assert_eq!(swapped, 0, "static reservation must not thrash");
         assert_eq!(s.total_jobs(), 0, "all jobs finish eventually");
+        assert_eq!(done.len(), 3);
     }
 
     #[test]
@@ -419,7 +598,7 @@ mod tests {
         s.push(req(0, 10, 999, Some(3))); // heavy
         s.push(req(1, 10, 5, Some(0))); // light
         s.push(req(2, 10, 5, None)); // unpredicted → light
-        let (h, l) = s.heavy_light(128);
+        let (h, l) = s.heavy_light();
         assert_eq!((h, l), (1, 2));
     }
 
@@ -431,6 +610,40 @@ mod tests {
             s.push(req(i, 4, 10, None));
         }
         s.admit(&mut kv);
-        assert_eq!(s.running.len(), 2);
+        assert_eq!(s.n_resident(), 2);
+    }
+
+    #[test]
+    fn aggregates_match_recount_through_lifecycle() {
+        let (mut s, mut kv) = sched(DecodePolicy::Greedy);
+        for i in 0..6 {
+            s.push(req(i, 150, 40, Some((i % 4) as u8)));
+        }
+        assert_eq!(s.aggregates(), s.recount_aggregates());
+        let mut done = Vec::new();
+        for _ in 0..400 {
+            s.admit(&mut kv);
+            s.step(&mut kv, &mut done);
+            assert_eq!(s.aggregates(), s.recount_aggregates());
+            if s.total_jobs() == 0 {
+                break;
+            }
+        }
+        assert_eq!(done.len(), 6);
+        assert_eq!(s.aggregates(), SchedAggregates::default());
+    }
+
+    #[test]
+    fn remove_running_keeps_order_and_aggregates() {
+        let (mut s, mut kv) = sched(DecodePolicy::Greedy);
+        for i in 0..4 {
+            s.push(req(i, 10, 5, None));
+        }
+        s.admit(&mut kv);
+        let job = s.remove_running(1).expect("job 1 admitted");
+        kv.release(job.meta.id);
+        let order: Vec<u64> = s.running().iter().map(|j| j.meta.id).collect();
+        assert_eq!(order, vec![0, 2, 3], "removal must preserve batch order");
+        assert_eq!(s.aggregates(), s.recount_aggregates());
     }
 }

@@ -29,7 +29,7 @@ pub enum Sidedness {
     TwoSided,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct Link {
     pub kind: LinkKind,
     pub sidedness: Sidedness,
@@ -83,7 +83,7 @@ pub enum Granularity {
 /// The unified API of Figure 9's "unified network transfer abstraction".
 /// Sim mode uses `transfer_us` for virtual waits; real mode's serve path
 /// meters actual byte copies through the same descriptor.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct Fabric {
     pub link: Link,
     pub granularity: Granularity,

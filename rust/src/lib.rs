@@ -21,9 +21,15 @@ pub mod kvcache;
 pub mod metrics;
 pub mod predictor;
 pub mod prefill;
+/// Real-mode PJRT runtime. Gated behind the `pjrt` cargo feature: it
+/// needs the vendored `xla` bindings + `anyhow`, which the default
+/// (dependency-free) sim build does not ship.
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod serve;
 pub mod sim;
+pub mod sweep;
 pub mod types;
 pub mod util;
 pub mod workload;

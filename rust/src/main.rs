@@ -15,7 +15,9 @@ use tetri_infer::coordinator::{run_cluster, ClusterConfig};
 use tetri_infer::decode::DecodePolicy;
 use tetri_infer::fabric::Link;
 use tetri_infer::prefill::{DispatchPolicy, PrefillPolicy};
+#[cfg(feature = "pjrt")]
 use tetri_infer::runtime::Engine;
+#[cfg(feature = "pjrt")]
 use tetri_infer::serve::{ServeConfig, Server};
 use tetri_infer::workload::{WorkloadGen, WorkloadKind};
 
@@ -127,6 +129,16 @@ fn cmd_sim(args: &[String]) {
     println!("{}", tetri.vs_row("TetriInfer vs vLLM", &base));
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &[String]) {
+    eprintln!(
+        "this build has no real-mode runtime: rebuild with `--features pjrt` \
+         (requires the vendored xla bindings; sim mode is always available)"
+    );
+    std::process::exit(1);
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &[String]) {
     let dir = arg_val(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
     let n: usize = arg_val(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(8);
@@ -164,6 +176,13 @@ fn cmd_serve(args: &[String]) {
     );
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info(_args: &[String]) {
+    eprintln!("artifact inspection needs the `pjrt` feature (manifest loader lives in runtime/)");
+    std::process::exit(1);
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_info(args: &[String]) {
     let dir = arg_val(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
     match tetri_infer::runtime::Manifest::load(&dir) {

@@ -19,6 +19,9 @@ pub struct RunMetrics {
     pub alive_us: Vec<Us>,
     /// Total virtual duration of the run.
     pub makespan_us: Us,
+    /// DES events processed by the driver (sim-throughput denominator for
+    /// the perf-trajectory benches — see EXPERIMENTS.md §Perf).
+    pub events: u64,
     /// Swap traffic observed (tokens), for Figure 18 diagnostics.
     pub swapped_tokens: u64,
     /// Number of instance flips that occurred (§3.5).

@@ -8,7 +8,7 @@
 
 use std::collections::VecDeque;
 
-use crate::types::{ReqId, Request};
+use crate::types::{ReqId, ReqMeta};
 
 /// A contiguous span of one request's prompt inside a chunk.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -38,9 +38,9 @@ impl Chunk {
 }
 
 /// In-progress request state inside the chunker.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 struct Open {
-    req: Request,
+    req: ReqMeta,
     /// Last prefilled token position (exclusive).
     done: u32,
 }
@@ -55,12 +55,16 @@ pub struct Chunker {
     /// the scheduled queue, no reordering).
     pub srtf: bool,
     open: VecDeque<Open>,
+    /// Unprefilled tokens across all open requests, maintained
+    /// incrementally (admit adds, slicing subtracts) so backpressure and
+    /// load queries are O(1).
+    pending: u64,
 }
 
 impl Chunker {
     pub fn new(chunk_size: u32) -> Self {
         assert!(chunk_size > 0);
-        Chunker { chunk_size, srtf: false, open: VecDeque::new() }
+        Chunker { chunk_size, srtf: false, open: VecDeque::new(), pending: 0 }
     }
 
     pub fn new_srtf(chunk_size: u32) -> Self {
@@ -68,12 +72,14 @@ impl Chunker {
     }
 
     /// Admit a scheduled request for slicing.
-    pub fn admit(&mut self, req: Request) {
+    pub fn admit(&mut self, req: ReqMeta) {
+        self.pending += req.prompt_len as u64;
         self.open.push_back(Open { req, done: 0 });
     }
 
+    /// Unprefilled tokens still open — O(1) (cached).
     pub fn pending_tokens(&self) -> u64 {
-        self.open.iter().map(|o| (o.req.prompt_len - o.done) as u64).sum()
+        self.pending
     }
 
     pub fn has_work(&self) -> bool {
@@ -112,6 +118,7 @@ impl Chunker {
             }
         }
         debug_assert!(!segments.is_empty());
+        self.pending -= used as u64;
         Some(Chunk { segments, tokens: used, chunk_size: self.chunk_size })
     }
 }
@@ -121,15 +128,8 @@ mod tests {
     use super::*;
     use crate::types::TaskType;
 
-    fn req(id: u64, plen: u32) -> Request {
-        Request {
-            id,
-            task: TaskType::Chat,
-            arrival: 0,
-            prompt_len: plen,
-            decode_len: 1,
-            predicted: None,
-        }
+    fn req(id: u64, plen: u32) -> ReqMeta {
+        ReqMeta { id, task: TaskType::Chat, arrival: 0, prompt_len: plen, predicted: None }
     }
 
     fn chunker_with(reqs: &[(u64, u32)], size: u32) -> Chunker {
@@ -242,6 +242,17 @@ mod tests {
         assert_eq!(covered[&2], 3);
         assert_eq!(covered[&3], 600);
         assert_eq!(covered[&4], 128);
+    }
+
+    #[test]
+    fn pending_tokens_tracks_slicing_incrementally() {
+        let mut c = chunker_with(&[(1, 700), (2, 300)], 512);
+        assert_eq!(c.pending_tokens(), 1000);
+        let c1 = c.next_chunk().unwrap();
+        assert_eq!(c.pending_tokens(), 1000 - c1.tokens as u64);
+        while c.next_chunk().is_some() {}
+        assert_eq!(c.pending_tokens(), 0);
+        assert!(!c.has_work());
     }
 
     #[test]

@@ -2,10 +2,14 @@
 //! raw queue, with a `PrefillSchedBatch` anti-starvation window — only
 //! `sched_batch` requests are sorted and committed at a time, so a stream
 //! of short jobs cannot starve a long one forever (and vice versa).
+//!
+//! The queued-token total is maintained incrementally (push/pop), so the
+//! global scheduler's least-loaded routing reads it in O(1) instead of
+//! rescanning both queues per arrival (see DESIGN.md §Hot paths).
 
 use std::collections::VecDeque;
 
-use crate::types::Request;
+use crate::types::ReqMeta;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PrefillPolicy {
@@ -31,17 +35,26 @@ pub struct PrefillScheduler {
     pub policy: PrefillPolicy,
     /// PrefillSchedBatch: how many requests are sorted per scheduling round.
     pub sched_batch: usize,
-    raw: VecDeque<Request>,
-    scheduled: VecDeque<Request>,
+    raw: VecDeque<ReqMeta>,
+    scheduled: VecDeque<ReqMeta>,
+    /// Prompt tokens across both queues, maintained incrementally.
+    tokens: u64,
 }
 
 impl PrefillScheduler {
     pub fn new(policy: PrefillPolicy, sched_batch: usize) -> Self {
         assert!(sched_batch > 0);
-        PrefillScheduler { policy, sched_batch, raw: VecDeque::new(), scheduled: VecDeque::new() }
+        PrefillScheduler {
+            policy,
+            sched_batch,
+            raw: VecDeque::new(),
+            scheduled: VecDeque::new(),
+            tokens: 0,
+        }
     }
 
-    pub fn push(&mut self, req: Request) {
+    pub fn push(&mut self, req: ReqMeta) {
+        self.tokens += req.prompt_len as u64;
         self.raw.push_back(req);
     }
 
@@ -49,8 +62,9 @@ impl PrefillScheduler {
         self.raw.len() + self.scheduled.len()
     }
 
+    /// Prompt tokens awaiting prefill — O(1) (cached).
     pub fn queued_tokens(&self) -> u64 {
-        self.raw.iter().chain(self.scheduled.iter()).map(|r| r.prompt_len as u64).sum()
+        self.tokens
     }
 
     pub fn is_empty(&self) -> bool {
@@ -63,7 +77,7 @@ impl PrefillScheduler {
             return;
         }
         let n = self.sched_batch.min(self.raw.len());
-        let mut batch: Vec<Request> = self.raw.drain(..n).collect();
+        let mut batch: Vec<ReqMeta> = self.raw.drain(..n).collect();
         match self.policy {
             PrefillPolicy::Fcfs => {}
             // stable sort keeps arrival order among equal lengths
@@ -74,13 +88,15 @@ impl PrefillScheduler {
     }
 
     /// Next request to prefill (consumed by the chunker).
-    pub fn pop(&mut self) -> Option<Request> {
+    pub fn pop(&mut self) -> Option<ReqMeta> {
         self.refill();
-        self.scheduled.pop_front()
+        let req = self.scheduled.pop_front()?;
+        self.tokens -= req.prompt_len as u64;
+        Some(req)
     }
 
     /// Peek without consuming (used by backpressure checks).
-    pub fn peek(&mut self) -> Option<&Request> {
+    pub fn peek(&mut self) -> Option<&ReqMeta> {
         self.refill();
         self.scheduled.front()
     }
@@ -91,15 +107,8 @@ mod tests {
     use super::*;
     use crate::types::TaskType;
 
-    fn req(id: u64, plen: u32) -> Request {
-        Request {
-            id,
-            task: TaskType::Chat,
-            arrival: id,
-            prompt_len: plen,
-            decode_len: 10,
-            predicted: None,
-        }
+    fn req(id: u64, plen: u32) -> ReqMeta {
+        ReqMeta { id, task: TaskType::Chat, arrival: id, prompt_len: plen, predicted: None }
     }
 
     fn drain(s: &mut PrefillScheduler) -> Vec<u64> {
@@ -166,5 +175,18 @@ mod tests {
         s.peek(); // forces one refill
         assert_eq!(s.queued_tokens(), 30);
         assert_eq!(s.queued(), 2);
+    }
+
+    #[test]
+    fn queued_tokens_tracks_pops_incrementally() {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Sjf, 4);
+        for (i, p) in [100u32, 40, 7].iter().enumerate() {
+            s.push(req(i as u64, *p));
+        }
+        assert_eq!(s.queued_tokens(), 147);
+        let first = s.pop().unwrap();
+        assert_eq!(s.queued_tokens(), 147 - first.prompt_len as u64);
+        while s.pop().is_some() {}
+        assert_eq!(s.queued_tokens(), 0);
     }
 }

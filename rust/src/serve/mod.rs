@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::decode::{DecodeJob, DecodePolicy, DecodeScheduler};
+use crate::decode::{DecodeJob, DecodePolicy};
 use crate::fabric::Link;
 use crate::kvcache::PagedKvCache;
 use crate::metrics::RunMetrics;
@@ -110,9 +110,14 @@ impl<'e> Server<'e> {
         let mut pjobs: HashMap<ReqId, PrefillJob> = HashMap::new();
         let mut book: HashMap<ReqId, Request> = HashMap::new();
 
-        // ---- logical decode instance
-        let mut dsched =
-            DecodeScheduler::new(self.cfg.decode_policy, 200, d.batch as u32);
+        // ---- logical decode instance. Real mode drives its own admission
+        // (transferred jobs already own their pages), so it keeps plain
+        // queues instead of a DecodeScheduler; the pool-full backpressure
+        // below plays the admission-policy role.
+        let _policy = self.cfg.decode_policy;
+        let max_batch = d.batch as u32;
+        let mut d_waiting: VecDeque<DecodeJob> = VecDeque::new();
+        let mut d_running: Vec<DecodeJob> = Vec::new();
         let mut kv = PagedKvCache::new(d.n_pages as u32, d.page_size as u32);
         let pool_n = self.engine.decode_pool_numel();
         let mut k_pool = vec![0f32; pool_n];
@@ -138,7 +143,7 @@ impl<'e> Server<'e> {
                 req.predicted =
                     Some(BucketPrediction::from_bucket(bucket, p.granularity as u32, p.n_buckets as u8));
             }
-            sched.push(req.clone());
+            sched.push(req.meta());
             book.insert(r.id, req);
         }
 
@@ -173,7 +178,7 @@ impl<'e> Server<'e> {
 
             // ---------------- KV transfer: prefill cache → decode pool
             while let Some(id) = pending_transfer.pop_front() {
-                let req = book[&id].clone();
+                let req = book[&id];
                 let pj = pjobs.get(&id).unwrap();
                 let first_tok = Engine::argmax(pj.first_logits.as_ref().unwrap()) as i32;
                 if req.decode_len <= 1 {
@@ -207,33 +212,32 @@ impl<'e> Server<'e> {
                     let wire = link.transfer_us(bytes as f64);
                     std::thread::sleep(std::time::Duration::from_micros(wire));
                 }
-                // hand to decode scheduler: pages are already resident, so
-                // bypass `admit`'s alloc by marking the job running below.
-                let mut job = DecodeJob::new(req.clone());
+                // hand to the decode side: pages are already resident, so
+                // the job enters the waiting line holding them.
+                let mut job = DecodeJob::new(req.meta(), req.decode_len);
                 job.generated = 1;
                 slots.insert(id, DecodeSlotState { last_token: first_tok, out_tokens: vec![first_tok] });
                 report.generated_tokens += 1;
-                dsched.waiting.push_back(job);
+                d_waiting.push_back(job);
                 pjobs.remove(&id);
             }
 
             // ---------------- decode: one iteration per loop turn
-            // admission: waiting jobs already hold pages (transferred); the
-            // scheduler's admit() would re-alloc, so admit manually under
-            // the same policy decision.
-            while (dsched.running.len() as u32) < dsched.max_batch {
-                let Some(job) = dsched.waiting.front() else { break };
-                if !kv.contains(job.req.id) {
+            // admission: waiting jobs already hold pages (transferred), so
+            // admission is just moving them into the running batch.
+            while (d_running.len() as u32) < max_batch {
+                let Some(job) = d_waiting.front() else { break };
+                if !kv.contains(job.meta.id) {
                     break; // not transferred yet
                 }
-                let mut job = dsched.waiting.pop_front().unwrap();
+                let mut job = d_waiting.pop_front().unwrap();
                 job.running = true;
-                dsched.running.push(job);
+                d_running.push(job);
             }
-            if !dsched.running.is_empty() {
+            if !d_running.is_empty() {
                 report.decode_iters += 1;
                 let completed = self.decode_iteration(
-                    &mut dsched,
+                    &mut d_running,
                     &mut kv,
                     &mut slots,
                     &mut k_pool,
@@ -248,8 +252,8 @@ impl<'e> Server<'e> {
 
             if chunker.n_open() == 0
                 && sched.is_empty()
-                && dsched.running.is_empty()
-                && dsched.waiting.is_empty()
+                && d_running.is_empty()
+                && d_waiting.is_empty()
                 && pending_transfer.is_empty()
                 && finished < total
             {
@@ -327,7 +331,7 @@ impl<'e> Server<'e> {
 
     fn decode_iteration(
         &self,
-        dsched: &mut DecodeScheduler,
+        running: &mut Vec<DecodeJob>,
         kv: &mut PagedKvCache,
         slots: &mut HashMap<ReqId, DecodeSlotState>,
         k_pool: &mut Vec<f32>,
@@ -343,10 +347,10 @@ impl<'e> Server<'e> {
         let mut bt = vec![0i32; b * d.max_pages_per_req];
         let mut ids: Vec<Option<ReqId>> = vec![None; b];
 
-        for (slot, job) in dsched.running.iter().take(b).enumerate() {
-            let id = job.req.id;
+        for (slot, job) in running.iter().take(b).enumerate() {
+            let id = job.meta.id;
             let st = &slots[&id];
-            let pos = job.req.prompt_len as usize + job.generated as usize - 1;
+            let pos = job.meta.prompt_len as usize + job.generated as usize - 1;
             tokens[slot] = st.last_token;
             positions[slot] = pos as i32;
             seq_lens[slot] = pos as i32 + 1;
@@ -358,8 +362,8 @@ impl<'e> Server<'e> {
         }
 
         // grow pages for the tokens being written this iteration
-        for job in dsched.running.iter().take(b) {
-            kv.append_token(job.req.id).map_err(|e| anyhow!("decode pool exhausted: {e:?}"))?;
+        for job in running.iter().take(b) {
+            kv.append_token(job.meta.id).map_err(|e| anyhow!("decode pool exhausted: {e:?}"))?;
         }
         // refresh block tables after growth
         for (slot, id) in ids.iter().enumerate() {
@@ -381,15 +385,18 @@ impl<'e> Server<'e> {
             st.last_token = next;
             st.out_tokens.push(next);
             report.generated_tokens += 1;
-            let job = dsched.running.iter_mut().find(|j| j.req.id == *id).unwrap();
+            let job = running.iter_mut().find(|j| j.meta.id == *id).unwrap();
             job.generated += 1;
             if job.done() {
                 completed.push(*id);
             }
         }
-        for id in &completed {
-            dsched.running.retain(|j| j.req.id != *id);
-            kv.release(*id);
+        if !completed.is_empty() {
+            // single stable pass: completed jobs leave, survivors keep order
+            running.retain(|j| !j.done());
+            for id in &completed {
+                kv.release(*id);
+            }
         }
         Ok(completed)
     }

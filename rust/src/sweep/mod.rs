@@ -1,0 +1,180 @@
+//! Parallel sweep harness: fan (config × trace × seed) cells across
+//! `std::thread::scope` workers — the crate is dependency-free (no rayon),
+//! so this is a hand-rolled work queue over scoped threads.
+//!
+//! DistServe and TetriInfer both evaluate through exactly this kind of
+//! large simulated sweep (hundreds of policy × workload × seed cells), so
+//! sweep throughput directly bounds how many scenarios a PR can explore.
+//! Each cell is an independent deterministic DES run: results are
+//! bit-identical to running the cells sequentially, and they come back in
+//! input order regardless of which worker finished first.
+//!
+//! Used by `examples/figures.rs` (figure regeneration) and
+//! `benches/cluster.rs` (the BENCH_cluster.json perf baseline).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::baseline::{run_baseline, BaselineConfig};
+use crate::coordinator::{run_cluster, ClusterConfig};
+use crate::metrics::RunMetrics;
+use crate::workload::{WorkloadGen, WorkloadKind};
+
+/// Worker count to use when the caller has no preference.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over `items` on up to `workers` scoped threads, pulling work
+/// dynamically off a shared queue (cells vary wildly in cost — static
+/// partitioning would leave workers idle behind one slow shard). Results
+/// are returned in input order; a worker panic propagates.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect());
+    let mut tagged: Vec<(usize, R)> = std::thread::scope(|s| {
+        let queue = &queue;
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let job = queue.lock().expect("sweep queue poisoned").pop_front();
+                        let Some((i, t)) = job else { break };
+                        out.push((i, f(t)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    tagged.sort_by_key(|&(i, _)| i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Which simulated system a cell drives.
+#[derive(Clone, Debug)]
+pub enum SweepSystem {
+    Cluster(ClusterConfig),
+    Baseline(BaselineConfig),
+}
+
+/// One sweep cell: a complete simulated experiment. The trace is
+/// regenerated inside the worker from `(kind, n_requests, rate_per_sec,
+/// trace_seed)`, so cells are cheap to describe and the sweep ships no
+/// request vectors across threads.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub label: String,
+    pub system: SweepSystem,
+    pub kind: WorkloadKind,
+    pub n_requests: usize,
+    pub rate_per_sec: f64,
+    pub trace_seed: u64,
+}
+
+/// A finished cell: its metrics plus the wall time the DES run took.
+#[derive(Debug)]
+pub struct CellResult {
+    pub label: String,
+    pub metrics: RunMetrics,
+    pub wall_secs: f64,
+}
+
+impl SweepCell {
+    /// Run this cell to completion (deterministic given the cell).
+    pub fn run(self) -> CellResult {
+        let trace = WorkloadGen::new(self.trace_seed)
+            .trace(self.kind, self.n_requests, self.rate_per_sec, 0);
+        let t = std::time::Instant::now();
+        let metrics = match self.system {
+            SweepSystem::Cluster(cfg) => run_cluster(cfg, trace),
+            SweepSystem::Baseline(cfg) => run_baseline(cfg, trace),
+        };
+        CellResult { label: self.label, metrics, wall_secs: t.elapsed().as_secs_f64() }
+    }
+}
+
+/// Fan every cell across `workers` threads; results in input order.
+pub fn run_cells(cells: Vec<SweepCell>, workers: usize) -> Vec<CellResult> {
+    parallel_map(cells, workers, SweepCell::run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_input_order() {
+        let got = parallel_map((0..100).collect(), 8, |x: u64| x * 3);
+        let want: Vec<u64> = (0..100).map(|x| x * 3).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_single() {
+        let empty: Vec<u64> = parallel_map(Vec::new(), 8, |x: u64| x);
+        assert!(empty.is_empty());
+        assert_eq!(parallel_map(vec![7u64], 8, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn sweep_matches_sequential_runs() {
+        let mk_cells = || -> Vec<SweepCell> {
+            (0..6)
+                .map(|seed| SweepCell {
+                    label: format!("seed{seed}"),
+                    system: SweepSystem::Cluster(ClusterConfig {
+                        seed,
+                        ..ClusterConfig::ts_roce(1, 2)
+                    }),
+                    kind: WorkloadKind::Mixed,
+                    n_requests: 24,
+                    rate_per_sec: 16.0,
+                    trace_seed: seed,
+                })
+                .collect()
+        };
+        let serial: Vec<CellResult> = mk_cells().into_iter().map(SweepCell::run).collect();
+        let parallel = run_cells(mk_cells(), 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(parallel.iter()) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.metrics.makespan_us, b.metrics.makespan_us, "{}", a.label);
+            assert_eq!(a.metrics.events, b.metrics.events, "{}", a.label);
+            assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+        }
+    }
+
+    #[test]
+    fn baseline_cells_run_too() {
+        let cells = vec![SweepCell {
+            label: "base".into(),
+            system: SweepSystem::Baseline(BaselineConfig::default()),
+            kind: WorkloadKind::Lpld,
+            n_requests: 16,
+            rate_per_sec: 0.0,
+            trace_seed: 1,
+        }];
+        let res = run_cells(cells, 2);
+        assert_eq!(res[0].metrics.records.len(), 16);
+    }
+}

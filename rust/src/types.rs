@@ -46,8 +46,9 @@ pub enum Phase {
     Finished,
 }
 
-/// One inference request as the serving system sees it.
-#[derive(Clone, Debug)]
+/// One inference request as the serving system sees it. Plain old data —
+/// `Copy`, so drivers hand values around without heap traffic.
+#[derive(Clone, Copy, Debug)]
 pub struct Request {
     pub id: ReqId,
     pub task: TaskType,
@@ -69,6 +70,40 @@ impl Request {
 
     pub fn heavy_decode(&self) -> bool {
         self.decode_len > HEAVY_DECODE_TOKENS
+    }
+
+    /// Scheduler-facing view of this request (keeps the original id).
+    pub fn meta(&self) -> ReqMeta {
+        ReqMeta {
+            id: self.id,
+            task: self.task,
+            arrival: self.arrival,
+            prompt_len: self.prompt_len,
+            predicted: self.predicted,
+        }
+    }
+}
+
+/// Copyable scheduler-facing view of a request: everything policy code may
+/// legally read. The ground-truth `decode_len` is deliberately absent —
+/// schedulers only ever see `predicted` (the Figure 18 separation), and
+/// the decode instance "discovers" the true length one token at a time.
+///
+/// Drivers that renumber requests into dense arena slots put the *slot*
+/// in `id`; everything keyed off this id (KV tables, events, queues) then
+/// indexes the arena directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReqMeta {
+    pub id: ReqId,
+    pub task: TaskType,
+    pub arrival: Us,
+    pub prompt_len: u32,
+    pub predicted: Option<BucketPrediction>,
+}
+
+impl ReqMeta {
+    pub fn heavy_prefill(&self) -> bool {
+        self.prompt_len > HEAVY_PREFILL_TOKENS
     }
 }
 
@@ -166,6 +201,22 @@ mod tests {
         r.decode_len = 129;
         assert!(r.heavy_prefill());
         assert!(r.heavy_decode());
+    }
+
+    #[test]
+    fn meta_mirrors_request_minus_decode_len() {
+        let r = Request {
+            id: 9,
+            task: TaskType::Creation,
+            arrival: 77,
+            prompt_len: 600,
+            decode_len: 4,
+            predicted: Some(BucketPrediction::from_bucket(2, 200, 8)),
+        };
+        let m = r.meta();
+        assert_eq!((m.id, m.task, m.arrival, m.prompt_len), (9, TaskType::Creation, 77, 600));
+        assert_eq!(m.predicted, r.predicted);
+        assert!(m.heavy_prefill());
     }
 
     #[test]

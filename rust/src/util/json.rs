@@ -1,7 +1,10 @@
-//! Minimal recursive-descent JSON parser — enough for artifacts/manifest.json.
+//! Minimal recursive-descent JSON parser **and writer** — enough for
+//! artifacts/manifest.json and the BENCH_*.json perf baselines.
 //!
 //! Hand-rolled because the environment vendors no serde_json. Supports the
-//! full JSON grammar except `\u` surrogate pairs (manifest content is ASCII).
+//! full JSON grammar except `\u` surrogate pairs (manifest content is
+//! ASCII). `dump()` emits deterministic output (object keys are sorted by
+//! the BTreeMap), so perf baselines diff cleanly across runs.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -88,6 +91,114 @@ impl Json {
             Json::Obj(m) => Some(m),
             _ => None,
         }
+    }
+
+    /// Build an object from (key, value) pairs.
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Serialize to a compact JSON string (deterministic key order).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // Rust's {} prints the shortest roundtrip form
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(x: bool) -> Json {
+        Json::Bool(x)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
     }
 }
 
@@ -306,5 +417,31 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let j = Json::obj([
+            ("name", Json::from("cluster bench")),
+            ("events", Json::from(123456u64)),
+            ("speedup", Json::from(2.25)),
+            ("ok", Json::from(true)),
+            ("rows", Json::from(vec![Json::from(1.0), Json::Null])),
+            ("note", Json::from("line\nbreak \"quoted\"")),
+        ]);
+        let s = j.dump();
+        assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn dump_is_deterministic_and_sorted() {
+        let a = Json::obj([("b", Json::from(1u64)), ("a", Json::from(2u64))]);
+        assert_eq!(a.dump(), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn dump_replaces_non_finite_with_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
     }
 }

@@ -1,5 +1,6 @@
 //! Substrate utilities built from scratch (no external crates vendored for
-//! these): deterministic RNG, summary statistics, and a JSON parser.
+//! these): deterministic RNG, summary statistics, and a JSON
+//! parser/writer.
 
 pub mod json;
 pub mod rng;
@@ -8,3 +9,20 @@ pub mod stats;
 pub use json::Json;
 pub use rng::Pcg;
 pub use stats::{percentile, summarize, Histogram, Summary};
+
+/// Locate the repository root by walking up from the current directory
+/// until a `ROADMAP.md` is found (falling back to `.`). Lets the bench
+/// binaries emit `BENCH_*.json` at the repo root whether cargo was invoked
+/// from `rust/` (scripts/bench.sh) or from the root via
+/// `--manifest-path`.
+pub fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from(".");
+        }
+    }
+}

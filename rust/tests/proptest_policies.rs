@@ -27,7 +27,7 @@ fn chunker_covers_every_token_exactly_once_random() {
         for i in 0..n {
             let plen = rng.range(1, 2000) as u32;
             want.insert(i as u64, plen);
-            c.admit(req(i as u64, plen, 1));
+            c.admit(req(i as u64, plen, 1).meta());
             // interleave admission and chunk production (arrival order)
             if rng.f64() < 0.5 {
                 if let Some(ch) = c.next_chunk() {
@@ -67,7 +67,7 @@ fn prefill_scheduler_conserves_requests() {
         let mut popped = HashSet::new();
         for i in 0..500u64 {
             if rng.f64() < 0.6 {
-                s.push(req(i, rng.range(1, 1000) as u32, 1));
+                s.push(req(i, rng.range(1, 1000) as u32, 1).meta());
                 pushed.insert(i);
             } else if let Some(r) = s.pop() {
                 assert!(popped.insert(r.id), "duplicate pop seed={seed}");
@@ -86,7 +86,7 @@ fn sjf_within_committed_batch_is_sorted() {
         let mut rng = Pcg::new(seed + 500);
         let mut s = PrefillScheduler::new(PrefillPolicy::Sjf, 16);
         for i in 0..16u64 {
-            s.push(req(i, rng.range(1, 5000) as u32, 1));
+            s.push(req(i, rng.range(1, 5000) as u32, 1).meta());
         }
         let lens: Vec<u32> = std::iter::from_fn(|| s.pop()).map(|r| r.prompt_len).collect();
         assert!(lens.windows(2).all(|w| w[0] <= w[1]), "not sorted: {lens:?}");
@@ -150,9 +150,11 @@ fn decode_scheduler_conserves_jobs_under_pressure() {
             s.push(req(i, rng.range(1, 60) as u32, rng.range(1, 50) as u32));
         }
         let mut completed = 0u64;
+        let mut done = Vec::new();
         for _ in 0..5_000 {
             s.admit(&mut kv);
-            let (done, _) = s.step(&mut kv);
+            done.clear();
+            s.step(&mut kv, &mut done);
             completed += done.len() as u64;
             kv.check_invariants().unwrap();
             if s.total_jobs() == 0 {
@@ -178,6 +180,6 @@ fn decode_scheduler_heavy_light_totals_match_jobs() {
         s.push(r);
         n += 1;
     }
-    let (h, l) = s.heavy_light(128);
+    let (h, l) = s.heavy_light();
     assert_eq!(h + l, n);
 }

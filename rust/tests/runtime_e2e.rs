@@ -2,6 +2,10 @@
 //! `make artifacts`) and verifies the L3↔L2↔L1 numerical contracts from
 //! the rust side. Skips gracefully when artifacts are absent (CI without
 //! python), but `make test` always builds them first.
+//!
+//! The whole file needs the `pjrt` feature (runtime/serve are gated —
+//! the default sim build is dependency-free).
+#![cfg(feature = "pjrt")]
 
 use tetri_infer::fabric::Link;
 use tetri_infer::runtime::Engine;

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Regenerate the machine-readable perf baselines at the repo root:
+#   BENCH_sched.json   — L3 microbenches (benches/scheduler.rs)
+#   BENCH_cluster.json — end-to-end DES throughput (benches/cluster.rs)
+# Run after any hot-path change and commit the refreshed files; future
+# PRs regress against them (EXPERIMENTS.md §Perf).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+cargo bench --bench scheduler
+cargo bench --bench cluster
+cd ..
+echo "perf baselines:"
+ls -l BENCH_sched.json BENCH_cluster.json

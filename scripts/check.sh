@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify gate (ROADMAP.md): build + full test suite from rust/.
+# Every PR runs this before landing:  ./scripts/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+cargo build --release
+cargo test -q
+echo "tier-1 verify: OK"

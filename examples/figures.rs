@@ -1,14 +1,19 @@
 //! Regenerate every table/figure in the paper's evaluation (see DESIGN.md's
 //! experiment index). Each `figN` prints the same rows/series the paper
-//! reports and writes them to results/figN.txt.
+//! reports and writes them to results/figN.txt; the end-to-end figures
+//! additionally write machine-readable results/figN.json through the
+//! unified `api::Report` serializer.
 //!
 //!   cargo run --release --example figures -- all
 //!   cargo run --release --example figures -- fig12 fig16 flip
 //!
-//! Figures are independent deterministic runs, so they fan out across the
-//! sweep harness's worker pool (tetri_infer::sweep); the heavyweight
-//! multi-seed figures additionally sweep their own cells. Output files are
-//! identical to a serial run — only the stdout interleaving varies.
+//! Every simulated run is constructed through `api::Scenario` — the same
+//! declarative specs `tetri sim --spec` loads (scenarios/ ships the
+//! headline setups), so a figure row is reproducible from the CLI with
+//! the matching spec file. Figures are independent deterministic runs, so
+//! they fan out across the sweep harness's worker pool; the heavyweight
+//! multi-seed figures additionally sweep their own cells. Output files
+//! are identical to a serial run — only the stdout interleaving varies.
 //!
 //! Absolute numbers come from the calibrated V100/OPT-13B cost model; the
 //! comparisons (who wins, by what factor, where crossovers fall) are the
@@ -17,15 +22,15 @@
 use std::fmt::Write as _;
 use std::fs;
 
-use tetri_infer::baseline::{run_baseline, BaselineConfig};
-use tetri_infer::coordinator::{run_cluster, ClusterConfig, FlipConfig, PredictorMode};
+use tetri_infer::api::{LinkSpec, Report, Scenario};
+use tetri_infer::coordinator::PredictorMode;
 use tetri_infer::costmodel::CostModel;
 use tetri_infer::decode::DecodePolicy;
-use tetri_infer::metrics::RunMetrics;
+use tetri_infer::fabric::Granularity;
 use tetri_infer::prefill::{DispatchPolicy, PrefillPolicy};
-use tetri_infer::sweep::{default_workers, parallel_map, run_cells, SweepCell, SweepSystem};
+use tetri_infer::sweep::{default_workers, parallel_map, run_cells, SweepCell};
 use tetri_infer::types::TaskType;
-use tetri_infer::util::summarize;
+use tetri_infer::util::{summarize, Json};
 use tetri_infer::workload::{WorkloadGen, WorkloadKind};
 
 const SEED: u64 = 42;
@@ -38,6 +43,26 @@ fn out(name: &str, body: &str) {
     fs::create_dir_all("results").ok();
     fs::write(format!("results/{name}.txt"), body).unwrap();
     println!("{body}");
+}
+
+fn out_json(name: &str, doc: &Json) {
+    fs::create_dir_all("results").ok();
+    fs::write(format!("results/{name}.json"), doc.dump()).unwrap();
+}
+
+/// The §5.1 end-to-end base scenario (mirrors scenarios/figNN.json).
+fn e2e_scenario(kind: WorkloadKind, name: &str) -> Scenario {
+    Scenario::builder()
+        .name(name)
+        .workload(kind)
+        .requests(N_REQ)
+        .rate(RATE)
+        .seed(SEED)
+        .build()
+}
+
+fn run(sc: &Scenario) -> Report {
+    sc.run().expect("figure scenario must resolve")
 }
 
 // ---------------------------------------------------------------- fig 1
@@ -172,13 +197,17 @@ fn fig5() {
 
 // ------------------------------------------------------- figs 11-15 (e2e)
 
-fn e2e_row(s: &mut String, label: &str, m: &RunMetrics, base: &RunMetrics) {
-    let t = m.ttft_summary();
-    let j = m.jct_summary();
+fn e2e_row(s: &mut String, label: &str, r: &Report, base: &Report) {
+    let t = r.metrics.ttft_summary();
+    let j = r.metrics.jct_summary();
     writeln!(
         s,
         "  {:<12} TTFT {:>8.1} ms  JCT {:>9.1} ms  resource {:>7.1} s  perf/$ {:>5.2}x",
-        label, t.mean, j.mean, m.resource_seconds(), m.perf_per_dollar_vs(base)
+        label,
+        t.mean,
+        j.mean,
+        r.metrics.resource_seconds(),
+        r.perf_per_dollar_vs(base)
     )
     .unwrap();
 }
@@ -186,16 +215,23 @@ fn e2e_row(s: &mut String, label: &str, m: &RunMetrics, base: &RunMetrics) {
 fn e2e(kind: WorkloadKind, fig: &str, paper_note: &str) {
     let mut s = String::new();
     writeln!(s, "== {fig}: end-to-end {} (n={N_REQ}, poisson {RATE}/s) ==", kind.name()).unwrap();
-    let trace = WorkloadGen::new(SEED).trace(kind, N_REQ, RATE, 0);
-    let base = run_baseline(BaselineConfig { n_instances: 1, seed: SEED, ..Default::default() }, trace.clone());
-    let roce = run_cluster(ClusterConfig { seed: SEED, ..ClusterConfig::ts_roce(1, 1) }, trace.clone());
-    let nv = run_cluster(ClusterConfig { seed: SEED, ..ClusterConfig::ts_nvlink(1, 1) }, trace);
+    let sc = e2e_scenario(kind, fig);
+    let base = run(&sc.baseline_counterpart());
+    let roce = run(&sc);
+    let nv = run(&Scenario { link: LinkSpec::Nvlink, ..sc.clone() });
     e2e_row(&mut s, "vLLM", &base, &base);
     e2e_row(&mut s, "TS-RoCE", &roce, &base);
     e2e_row(&mut s, "TS-NVLink", &nv, &base);
     writeln!(s, "  {}", roce.vs_row("TS-RoCE vs vLLM", &base)).unwrap();
     writeln!(s, "  paper: {paper_note}").unwrap();
     out(fig, &s);
+    out_json(
+        fig,
+        &Json::obj([
+            ("roce_vs_vllm", roce.comparison_json(&base)),
+            ("nvlink", nv.to_json()),
+        ]),
+    );
 }
 
 // ---------------------------------------------------------------- fig 16
@@ -205,44 +241,32 @@ fn fig16() {
     writeln!(s, "== Figure 16: prefill scheduler policies & chunked prefill ==").unwrap();
     // Steady mixed serving (decodes present, so the baseline exhibits its
     // fixed-batch waiting + interference): prefill latency = TTFT.
-    let mk_trace = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 256, 16.0, 0);
-    let base = run_baseline(
-        BaselineConfig { n_instances: 1, prefill_batch: 16, seed: SEED, ..Default::default() },
-        mk_trace(),
-    );
-    writeln!(s, "  vLLM fixed-batch(16): avg prefill latency {:>8.1} ms", base.ttft_summary().mean).unwrap();
+    let steady = Scenario::builder()
+        .name("fig16")
+        .workload(WorkloadKind::Mixed)
+        .requests(256)
+        .rate(16.0)
+        .seed(SEED)
+        .build();
+    let base = run(&steady.baseline_counterpart());
+    writeln!(s, "  vLLM fixed-batch(16): avg prefill latency {:>8.1} ms", base.metrics.ttft_summary().mean).unwrap();
     let mut chunked = vec![];
     for pol in [PrefillPolicy::Fcfs, PrefillPolicy::Sjf, PrefillPolicy::Ljf] {
-        let m = run_cluster(
-            ClusterConfig {
-                prefill_policy: pol,
-                sched_batch: 16,
-                seed: SEED,
-                ..ClusterConfig::ts_roce(1, 1)
-            },
-            mk_trace(),
-        );
-        writeln!(s, "  chunked {:<5}       : avg prefill latency {:>8.1} ms", pol.name(), m.ttft_summary().mean).unwrap();
-        chunked.push((pol, m.ttft_summary().mean));
+        let m = run(&Scenario { prefill_policy: pol, ..steady.clone() });
+        writeln!(s, "  chunked {:<5}       : avg prefill latency {:>8.1} ms", pol.name(), m.metrics.ttft_summary().mean).unwrap();
+        chunked.push((pol, m.metrics.ttft_summary().mean));
     }
     let fcfs = chunked[0].1;
-    writeln!(s, "  chunked FCFS vs vLLM: {:+.1}%   (paper: -86.4%)", (fcfs / base.ttft_summary().mean - 1.0) * 100.0).unwrap();
+    writeln!(s, "  chunked FCFS vs vLLM: {:+.1}%   (paper: -86.4%)", (fcfs / base.metrics.ttft_summary().mean - 1.0) * 100.0).unwrap();
     writeln!(s, "  SJF vs FCFS: {:+.1}%   (paper: -7.8% wait)", (chunked[1].1 / fcfs - 1.0) * 100.0).unwrap();
     writeln!(s, "  -- right: SJF TTFT vs PrefillSchedBatch (batch arrival backlog; paper: 16->128 = -46.5%) --").unwrap();
     // A standing backlog (batch arrival) is where the sort window matters:
     // the paper's own example is "twenty requests awaiting scheduling".
+    let backlog = Scenario { rate: 0.0, ..steady.clone() };
     let mut first = None;
     for batch in [16usize, 32, 64, 128] {
-        let m = run_cluster(
-            ClusterConfig {
-                prefill_policy: PrefillPolicy::Sjf,
-                sched_batch: batch,
-                seed: SEED,
-                ..ClusterConfig::ts_roce(1, 1)
-            },
-            WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 256, 0.0, 0),
-        );
-        let v = m.ttft_summary().mean;
+        let m = run(&Scenario { sched_batch: batch, ..backlog.clone() });
+        let v = m.metrics.ttft_summary().mean;
         if first.is_none() {
             first = Some(v);
         }
@@ -256,32 +280,32 @@ fn fig16() {
 fn fig17() {
     let mut s = String::new();
     writeln!(s, "== Figure 17: running the length predictor alongside the main LLM ==").unwrap();
-    let mk_trace = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 256, 32.0, 0);
-    let alone = run_cluster(
-        ClusterConfig { predictor_mode: PredictorMode::Disabled, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-        mk_trace(),
+    let sc = Scenario::builder()
+        .name("fig17")
+        .workload(WorkloadKind::Mixed)
+        .requests(256)
+        .rate(32.0)
+        .seed(SEED)
+        .build();
+    let alone = run(&Scenario { predictor: PredictorMode::Disabled, ..sc.clone() });
+    let par = run(&Scenario { predictor: PredictorMode::Parallel, ..sc.clone() });
+    let seq = run(&Scenario { predictor: PredictorMode::Sequential, ..sc });
+    let (alone, par, seq) = (
+        alone.metrics.ttft_summary().mean,
+        par.metrics.ttft_summary().mean,
+        seq.metrics.ttft_summary().mean,
     );
-    let par = run_cluster(
-        ClusterConfig { predictor_mode: PredictorMode::Parallel, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-        mk_trace(),
-    );
-    let seq = run_cluster(
-        ClusterConfig { predictor_mode: PredictorMode::Sequential, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-        mk_trace(),
-    );
-    writeln!(s, "  L-Alone     : avg prefill latency {:>8.1} ms", alone.ttft_summary().mean).unwrap();
+    writeln!(s, "  L-Alone     : avg prefill latency {alone:>8.1} ms").unwrap();
     writeln!(
         s,
-        "  L+P parallel: avg prefill latency {:>8.1} ms ({:+.1}%)  (paper: +10%, thpt -12%)",
-        par.ttft_summary().mean,
-        (par.ttft_summary().mean / alone.ttft_summary().mean - 1.0) * 100.0
+        "  L+P parallel: avg prefill latency {par:>8.1} ms ({:+.1}%)  (paper: +10%, thpt -12%)",
+        (par / alone - 1.0) * 100.0
     )
     .unwrap();
     writeln!(
         s,
-        "  L+P sequential: avg prefill latency {:>8.1} ms ({:+.1}%)  (prediction on the critical path)",
-        seq.ttft_summary().mean,
-        (seq.ttft_summary().mean / alone.ttft_summary().mean - 1.0) * 100.0
+        "  L+P sequential: avg prefill latency {seq:>8.1} ms ({:+.1}%)  (prediction on the critical path)",
+        (seq / alone - 1.0) * 100.0
     )
     .unwrap();
     writeln!(s, "  predictor model itself is ~10x faster than the target (costmodel::predictor_iter_us)").unwrap();
@@ -294,25 +318,24 @@ fn fig18() {
     let mut s = String::new();
     writeln!(s, "== Figure 18: intra-decode scheduling (160 heavy-decode reqs @10/s, 1 decode inst) ==").unwrap();
     writeln!(s, "(paper: RD==greedy at acc-200 74.9%; RD -12% / RS -10% JCT at acc 100%)").unwrap();
+    let sc = Scenario::builder()
+        .name("fig18")
+        .workload(WorkloadKind::Lphd)
+        .requests(160)
+        .rate(10.0)
+        .seed(SEED)
+        .build();
     for (acc, label) in [(0.749, "acc-200 (74.9%)"), (1.0, "acc-ideal (100%)")] {
         writeln!(s, "  -- {label} --").unwrap();
         let mut greedy_jct = None;
         for pol in [DecodePolicy::Greedy, DecodePolicy::ReserveStatic, DecodePolicy::ReserveDynamic] {
-            let m = run_cluster(
-                ClusterConfig {
-                    decode_policy: pol,
-                    predictor_accuracy: acc,
-                    seed: SEED,
-                    ..ClusterConfig::ts_roce(1, 1)
-                },
-                WorkloadGen::new(SEED).trace(WorkloadKind::Lphd, 160, 10.0, 0),
-            );
-            let jct = m.jct_summary().mean;
+            let m = run(&Scenario { decode_policy: pol, predictor_accuracy: acc, ..sc.clone() });
+            let jct = m.metrics.jct_summary().mean;
             let g = *greedy_jct.get_or_insert(jct);
             writeln!(
                 s,
                 "  {:<16} avg JCT {:>9.1} ms ({:+5.1}% vs greedy)  swapped {:>8} tokens",
-                pol.name(), jct, (jct / g - 1.0) * 100.0, m.swapped_tokens
+                pol.name(), jct, (jct / g - 1.0) * 100.0, m.metrics.swapped_tokens
             )
             .unwrap();
         }
@@ -329,24 +352,23 @@ fn fig19() {
     const SEEDS: [u64; 5] = [42, 43, 44, 45, 46];
     const POLICIES: [DispatchPolicy; 3] =
         [DispatchPolicy::PowerOfTwo, DispatchPolicy::Random, DispatchPolicy::Imbalance];
-    // 3 cluster sizes × 3 policies × 5 seeds = 45 independent runs: sweep
-    // them all at once, then aggregate in cell order.
+    // 3 cluster sizes × 3 policies × 5 seeds = 45 independent scenarios:
+    // sweep them all at once, then aggregate in cell order.
     let mut cells = Vec::new();
     for n_dec in [2usize, 4, 8] {
         for pol in POLICIES {
             for seed in SEEDS {
-                cells.push(SweepCell {
-                    label: format!("{n_dec}d/{}/s{seed}", pol.name()),
-                    system: SweepSystem::Cluster(ClusterConfig {
-                        dispatch: pol,
-                        seed,
-                        ..ClusterConfig::ts_roce(1, n_dec)
-                    }),
-                    kind: WorkloadKind::Mixed,
-                    n_requests: 32 * n_dec,
-                    rate_per_sec: 32.0,
-                    trace_seed: seed,
-                });
+                cells.push(SweepCell::new(
+                    format!("{n_dec}d/{}/s{seed}", pol.name()),
+                    Scenario::builder()
+                        .workload(WorkloadKind::Mixed)
+                        .requests(32 * n_dec)
+                        .rate(32.0)
+                        .seed(seed)
+                        .topology(1, n_dec)
+                        .dispatch(pol)
+                        .build(),
+                ));
             }
         }
     }
@@ -359,7 +381,7 @@ fn fig19() {
             let mut tot_h = 0.0;
             let mut tot_l = 0.0;
             for _ in SEEDS {
-                let m = &it.next().expect("cell/aggregation order mismatch").metrics;
+                let m = &it.next().expect("cell/aggregation order mismatch").report.metrics;
                 tot_time += m.makespan_us as f64 / 1e6;
                 // slowest decode instance = the busiest one
                 let slowest = (0..m.busy_us.len())
@@ -390,21 +412,33 @@ fn flip() {
     let mut s = String::new();
     writeln!(s, "== §3.5: instance flip under load shift ==").unwrap();
     // Phase 1 floods prefill-heavy work, phase 2 is decode-heavy: with a
-    // short idle threshold the spare prefill instance flips to decode.
-    let mut gen = WorkloadGen::new(SEED);
-    let mut trace = gen.trace(WorkloadKind::Hpld, 64, 16.0, 0);
-    trace.extend(gen.trace(WorkloadKind::Lphd, 96, 16.0, 8_000_000));
-    let cfg = ClusterConfig {
-        n_prefill: 2,
-        n_decode: 1,
-        flip: Some(FlipConfig { idle_us: 2_000_000, ..Default::default() }),
-        seed: SEED,
-        ..Default::default()
-    };
-    let m = run_cluster(cfg.clone(), trace.clone());
-    let no_flip = run_cluster(ClusterConfig { flip: None, ..cfg }, trace);
-    writeln!(s, "  with flips   : {} flips, JCT {:>9.1} ms, makespan {:>6.1} s", m.flips, m.jct_summary().mean, m.makespan_us as f64 / 1e6).unwrap();
-    writeln!(s, "  without flips: 0 flips, JCT {:>9.1} ms, makespan {:>6.1} s", no_flip.jct_summary().mean, no_flip.makespan_us as f64 / 1e6).unwrap();
+    // short idle threshold the spare prefill instance flips to decode
+    // (scenarios/flip.json is this exact spec).
+    let sc = Scenario::builder()
+        .name("flip")
+        .seed(SEED)
+        .topology(2, 1)
+        .flip_idle_ms(Some(2_000.0))
+        .phase(WorkloadKind::Hpld, 64, 16.0, 0.0)
+        .phase(WorkloadKind::Lphd, 96, 16.0, 8_000.0)
+        .build();
+    let m = run(&sc);
+    let no_flip = run(&Scenario { flip_idle_ms: None, ..sc });
+    writeln!(
+        s,
+        "  with flips   : {} flips, JCT {:>9.1} ms, makespan {:>6.1} s",
+        m.metrics.flips,
+        m.metrics.jct_summary().mean,
+        m.metrics.makespan_us as f64 / 1e6
+    )
+    .unwrap();
+    writeln!(
+        s,
+        "  without flips: 0 flips, JCT {:>9.1} ms, makespan {:>6.1} s",
+        no_flip.metrics.jct_summary().mean,
+        no_flip.metrics.makespan_us as f64 / 1e6
+    )
+    .unwrap();
     writeln!(s, "  (mechanism cost is 5-7 ms per flip, excluding drain — §3.5)").unwrap();
     out("flip", &s);
 }
@@ -415,24 +449,22 @@ fn ablation() {
     let mut s = String::new();
     writeln!(s, "== ablation: KV transfer granularity (§3.3.4 discussion) ==").unwrap();
     writeln!(s, "(heavy prompts over the slow Indirect/socket link, where wire time is exposed)").unwrap();
-    use tetri_infer::fabric::{Granularity, Link};
-    let trace = WorkloadGen::new(SEED).trace(WorkloadKind::Hphd, 64, 8.0, 0);
+    let slow = Scenario::builder()
+        .name("ablation_transfer")
+        .workload(WorkloadKind::Hphd)
+        .requests(64)
+        .rate(8.0)
+        .seed(SEED)
+        .link(LinkSpec::Socket)
+        .build();
     for (label, gran) in [("request-level", Granularity::RequestLevel), ("chunk-level", Granularity::ChunkLevel)] {
-        let m = run_cluster(
-            ClusterConfig {
-                link: Link::indirect_socket(),
-                transfer_granularity: gran,
-                seed: SEED,
-                ..ClusterConfig::ts_roce(1, 1)
-            },
-            trace.clone(),
-        );
+        let m = run(&Scenario { transfer: gran, ..slow.clone() });
         writeln!(
             s,
             "  {:<14} JCT mean {:>9.1} ms  p99 {:>9.1} ms",
             label,
-            m.jct_summary().mean,
-            m.jct_summary().p99
+            m.metrics.jct_summary().mean,
+            m.metrics.jct_summary().p99
         )
         .unwrap();
     }
@@ -443,18 +475,21 @@ fn ablation() {
     let mut s = String::new();
     writeln!(s, "== ablation: SRTF preemptive chunked prefill (§3.3.1 future work) ==").unwrap();
     writeln!(s, "(prefill-latency view: short prompts preempt long ones at chunk boundaries)").unwrap();
-    let mk_trace = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 256, 0.0, 0);
+    let backlog = Scenario::builder()
+        .name("ablation_srtf")
+        .workload(WorkloadKind::Mixed)
+        .requests(256)
+        .rate(0.0)
+        .seed(SEED)
+        .build();
     for (label, srtf) in [("SJF + FIFO chunks", false), ("SJF + SRTF chunks", true)] {
-        let m = run_cluster(
-            ClusterConfig { srtf_chunking: srtf, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-            mk_trace(),
-        );
+        let m = run(&Scenario { srtf_chunking: srtf, ..backlog.clone() });
         writeln!(
             s,
             "  {:<18} avg TTFT {:>8.1} ms  p99 {:>8.1} ms",
             label,
-            m.ttft_summary().mean,
-            m.ttft_summary().p99
+            m.metrics.ttft_summary().mean,
+            m.metrics.ttft_summary().p99
         )
         .unwrap();
     }

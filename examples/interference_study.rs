@@ -5,10 +5,15 @@
 //! with aggressors — then shows TetriInfer's disaggregation removing the
 //! interference.
 //!
+//! The victim+aggressor traces are hand-stitched (two generators with
+//! offset ids), which a declarative `Scenario` can't express — so this
+//! example drives the `api::Driver` layer directly: registry-resolved
+//! drivers fed explicit traces. That is exactly what the Driver trait is
+//! for; everything scenario-shaped should go through `api::Scenario`.
+//!
 //!   cargo run --release --example interference_study
 
-use tetri_infer::baseline::{run_baseline, BaselineConfig};
-use tetri_infer::coordinator::{run_cluster, ClusterConfig};
+use tetri_infer::api::{Driver, NullObserver, Registry, Scenario};
 use tetri_infer::metrics::RunMetrics;
 use tetri_infer::types::Request;
 use tetri_infer::workload::{WorkloadGen, WorkloadKind};
@@ -40,10 +45,17 @@ fn offset_ids(mut v: Vec<Request>, base: u64) -> Vec<Request> {
 
 fn main() {
     println!("== interference study (victim: 32 light chat requests @16/s) ==\n");
-    let baseline_cfg = || BaselineConfig { n_instances: 1, ..Default::default() };
+    // Registry-resolved drivers with default 1-prefill/1-decode scenarios;
+    // the traces below are supplied explicitly.
+    let registry = Registry::builtin();
+    let sc = Scenario::default();
+    let vllm = registry.resolve(&sc.baseline_counterpart()).expect("builtin driver");
+    let tetri_drv = registry.resolve(&sc).expect("builtin driver");
+    let run_baseline = |trace: Vec<Request>| vllm.run(&trace, &mut NullObserver).metrics;
+    let run_cluster = |trace: Vec<Request>| tetri_drv.run(&trace, &mut NullObserver).metrics;
 
     // -- victims alone on one coupled instance
-    let alone = run_baseline(baseline_cfg(), victims(1));
+    let alone = run_baseline(victims(1));
     let solo_ttft = mean_ttft(&alone, |_| true);
     let solo_jct = mean_jct(&alone, |_| true);
     println!("victims alone          : TTFT {solo_ttft:>7.1} ms   JCT {solo_jct:>8.1} ms");
@@ -52,7 +64,7 @@ fn main() {
     let mut tr = victims(1);
     let mut gen = WorkloadGen::new(99);
     tr.extend(offset_ids(gen.trace(WorkloadKind::Hpld, 24, 16.0, 0), 1000));
-    let hp = run_baseline(baseline_cfg(), tr.clone());
+    let hp = run_baseline(tr.clone());
     let is_victim = |r: &tetri_infer::types::RequestRecord| r.prompt_len <= 512 && r.decode_len <= 128;
     println!(
         "+ 24 heavy prefills    : TTFT {:>7.1} ms ({:>4.1}x)   JCT {:>8.1} ms ({:>4.1}x)   [vLLM coupled]",
@@ -63,7 +75,7 @@ fn main() {
     );
 
     // -- same mix on TetriInfer: disaggregation shields the victims
-    let tetri = run_cluster(ClusterConfig::ts_roce(1, 1), tr);
+    let tetri = run_cluster(tr);
     println!(
         "  same on TetriInfer   : TTFT {:>7.1} ms ({:>4.1}x)   JCT {:>8.1} ms ({:>4.1}x)   [disaggregated]",
         mean_ttft(&tetri, is_victim),
@@ -75,7 +87,7 @@ fn main() {
     // -- §2.2.3: heavy-decode aggressors (creation)
     let mut tr = victims(1);
     tr.extend(offset_ids(gen.trace(WorkloadKind::Lphd, 24, 16.0, 0), 2000));
-    let hd = run_baseline(baseline_cfg(), tr.clone());
+    let hd = run_baseline(tr.clone());
     println!(
         "+ 24 heavy decodes     : TTFT {:>7.1} ms ({:>4.1}x)   JCT {:>8.1} ms ({:>4.1}x)   [vLLM coupled]",
         mean_ttft(&hd, is_victim),
@@ -83,7 +95,7 @@ fn main() {
         mean_jct(&hd, is_victim),
         mean_jct(&hd, is_victim) / solo_jct
     );
-    let tetri_hd = run_cluster(ClusterConfig::ts_roce(1, 1), tr);
+    let tetri_hd = run_cluster(tr);
     println!(
         "  same on TetriInfer   : TTFT {:>7.1} ms ({:>4.1}x)   JCT {:>8.1} ms ({:>4.1}x)   [disaggregated]",
         mean_ttft(&tetri_hd, is_victim),

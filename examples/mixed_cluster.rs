@@ -1,31 +1,37 @@
 //! Cluster-scale scenario: a bigger disaggregated deployment (2 prefill +
 //! 4 decode instances) serving sustained mixed traffic with instance
-//! flipping enabled — the "cloud-scale" deployment of §3.2/§3.5.
+//! flipping enabled — the "cloud-scale" deployment of §3.2/§3.5. Runs are
+//! built through `api::Scenario`; a `TimelineObserver` streams per-event
+//! hooks out of the DES to report per-instance busy time and chunk/iter
+//! counts without touching the drivers.
 //!
 //!   cargo run --release --example mixed_cluster
 
-use tetri_infer::coordinator::{run_cluster, ClusterConfig, FlipConfig};
+use tetri_infer::api::{Scenario, TimelineObserver};
 use tetri_infer::prefill::DispatchPolicy;
-use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+use tetri_infer::workload::WorkloadKind;
 
 fn main() {
     println!("== mixed_cluster: 2 prefill + 4 decode, 512 mixed requests @ 24/s ==\n");
-    let trace = WorkloadGen::new(3).trace(WorkloadKind::Mixed, 512, 24.0, 0);
+    let base = Scenario::builder()
+        .name("mixed_cluster")
+        .workload(WorkloadKind::Mixed)
+        .requests(512)
+        .rate(24.0)
+        .seed(3)
+        .topology(2, 4)
+        .flip_idle_ms(Some(10_000.0))
+        .build();
 
     for (label, dispatch) in [
         ("power-of-two", DispatchPolicy::PowerOfTwo),
         ("random", DispatchPolicy::Random),
         ("least-load", DispatchPolicy::LeastLoad),
     ] {
-        let cfg = ClusterConfig {
-            n_prefill: 2,
-            n_decode: 4,
-            dispatch,
-            flip: Some(FlipConfig { idle_us: 10_000_000, ..Default::default() }),
-            seed: 3,
-            ..Default::default()
-        };
-        let m = run_cluster(cfg, trace.clone());
+        let sc = Scenario { dispatch, ..base.clone() };
+        let mut timeline = TimelineObserver::new();
+        let r = sc.run_with(&mut timeline).expect("builtin driver");
+        let m = &r.metrics;
         let t = m.ttft_summary();
         let j = m.jct_summary();
         let assigns: Vec<String> = m
@@ -39,18 +45,35 @@ fn main() {
             t.mean, j.mean, j.p99, m.makespan_us as f64 / 1e6, m.utilization() * 100.0, m.flips
         );
         println!("              decode assignment (heavy/light): {}", assigns.join("  "));
+        // Observer-side view: per-instance busy seconds straight from the
+        // event stream ({} chunks / {} decode iters overall).
+        let busy: Vec<String> = (0..6)
+            .map(|i| format!("{:.1}s", timeline.busy_us(i) as f64 / 1e6))
+            .collect();
+        println!(
+            "              observed busy/instance: {}   ({} chunks, {} decode iters, {} transfers)",
+            busy.join(" "),
+            timeline.chunks,
+            timeline.decode_iters,
+            timeline.transfers
+        );
     }
 
     println!("\nscaling decode instances (power-of-two, same trace):");
     for n_dec in [2usize, 4, 8] {
-        let cfg = ClusterConfig { n_prefill: 2, n_decode: n_dec, seed: 3, ..Default::default() };
-        let m = run_cluster(cfg, trace.clone());
+        let sc = Scenario {
+            n_decode: n_dec,
+            dispatch: DispatchPolicy::PowerOfTwo,
+            flip_idle_ms: Some(60_000.0),
+            ..base.clone()
+        };
+        let r = sc.run().expect("builtin driver");
         println!(
             "  {} decode: JCT mean {:>8.1} ms  makespan {:>5.1}s  resource {:>6.1}s",
             n_dec,
-            m.jct_summary().mean,
-            m.makespan_us as f64 / 1e6,
-            m.resource_seconds()
+            r.metrics.jct_summary().mean,
+            r.metrics.makespan_us as f64 / 1e6,
+            r.metrics.resource_seconds()
         );
     }
 }

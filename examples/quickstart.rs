@@ -1,34 +1,36 @@
 //! Quickstart: simulate a small TetriInfer cluster on a mixed workload and
-//! compare it against the coupled vLLM baseline.
+//! compare it against the coupled vLLM baseline — all through the
+//! declarative `api::Scenario` front door.
 //!
 //!   cargo run --release --example quickstart
 
-use tetri_infer::baseline::{run_baseline, BaselineConfig};
-use tetri_infer::coordinator::{run_cluster, ClusterConfig};
-use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+use tetri_infer::api::Scenario;
+use tetri_infer::workload::WorkloadKind;
 
 fn main() {
     // 64 mixed requests arriving at 8/s (chat + summarization + creation).
-    let trace = WorkloadGen::new(7).trace(WorkloadKind::Mixed, 64, 8.0, 0);
-
     // TetriInfer: one prefill + one decode instance, paper defaults
     // (SJF prefill scheduling, chunked prefill at 512 tokens, parallel
     // length predictor at 74.9% accuracy, power-of-two dispatch,
     // reserve-dynamic decode admission, RoCE-200Gbps KV links).
-    let tetri = run_cluster(ClusterConfig::ts_roce(1, 1), trace.clone());
+    let sc = Scenario::builder()
+        .name("quickstart")
+        .workload(WorkloadKind::Mixed)
+        .requests(64)
+        .rate(8.0)
+        .seed(7)
+        .build();
 
+    let tetri = sc.run().expect("builtin driver");
     // Vanilla vLLM: one coupled instance, continuous batching, fixed
-    // prefill batch 16, greedy memory policy.
-    let vllm = run_baseline(BaselineConfig { n_instances: 1, ..Default::default() }, trace);
+    // prefill batch 16, greedy memory policy — the same trace and seeds.
+    let vllm = sc.baseline_counterpart().run().expect("builtin driver");
 
     println!("== quickstart: 64 mixed requests, 8 req/s ==");
-    for (name, m) in [("TetriInfer", &tetri), ("vLLM", &vllm)] {
-        let t = m.ttft_summary();
-        let j = m.jct_summary();
-        println!(
-            "{name:<10}  TTFT mean {:>7.1} ms (p99 {:>7.1})   JCT mean {:>8.1} ms (p99 {:>8.1})   resource {:>5.1}s",
-            t.mean, t.p99, j.mean, j.p99, m.resource_seconds()
-        );
+    println!("{}", sc.summary_line());
+    for r in [&tetri, &vllm] {
+        println!("{}", r.summary_line());
     }
     println!("{}", tetri.vs_row("TetriInfer vs vLLM", &vllm));
+    println!("(the same run, from the CLI: tetri sim --workload Mixed --requests 64 --rate 8 --seed 7)");
 }

@@ -6,7 +6,9 @@
 //! preemption-heavy decode (greedy policy under memory pressure, where
 //! eviction/completion used to be O(batch²)), a multi-instance mixed
 //! cluster (dispatch + monitor + arena paths), and the coupled baseline —
-//! plus the parallel sweep harness's serial-vs-parallel speedup.
+//! plus the parallel sweep harness's serial-vs-parallel speedup. Every
+//! run is described by an `api::Scenario` (the preemption cell is
+//! scenarios/preempt_pressure.json).
 //!
 //! Emits machine-readable `BENCH_cluster.json` at the repo root (see
 //! EXPERIMENTS.md §Perf for the schema and the recorded trajectory).
@@ -14,12 +16,10 @@
 
 use std::time::Instant;
 
-use tetri_infer::baseline::BaselineConfig;
-use tetri_infer::coordinator::ClusterConfig;
-use tetri_infer::costmodel::CostModel;
+use tetri_infer::api::Scenario;
 use tetri_infer::decode::DecodePolicy;
 use tetri_infer::metrics::RunMetrics;
-use tetri_infer::sweep::{default_workers, run_cells, SweepCell, SweepSystem};
+use tetri_infer::sweep::{default_workers, run_cells, SweepCell};
 use tetri_infer::util::{repo_root, Json};
 use tetri_infer::workload::WorkloadKind;
 
@@ -35,13 +35,13 @@ struct Row {
 }
 
 /// Best-of-REPS wall time for one deterministic scenario.
-fn run_scenario(name: &str, cell: SweepCell) -> Row {
+fn run_scenario(name: &str, sc: Scenario) -> Row {
     let mut best = f64::MAX;
     let mut metrics: Option<RunMetrics> = None;
     for _ in 0..REPS {
-        let r = cell.clone().run();
-        best = best.min(r.wall_secs);
-        metrics = Some(r.metrics);
+        let r = SweepCell::new(name, sc.clone()).run();
+        best = best.min(r.report.wall_secs);
+        metrics = Some(r.report.metrics);
     }
     let m = metrics.unwrap();
     let row = Row {
@@ -59,17 +59,6 @@ fn run_scenario(name: &str, cell: SweepCell) -> Row {
     row
 }
 
-fn cluster_cell(label: &str, cfg: ClusterConfig, kind: WorkloadKind, n: usize, rate: f64, seed: u64) -> SweepCell {
-    SweepCell {
-        label: label.to_string(),
-        system: SweepSystem::Cluster(cfg),
-        kind,
-        n_requests: n,
-        rate_per_sec: rate,
-        trace_seed: seed,
-    }
-}
-
 fn main() {
     println!("== end-to-end cluster DES benches (best of {REPS}) ==");
 
@@ -80,63 +69,58 @@ fn main() {
     // old Vec::remove victim loops went quadratic in the batch.
     rows.push(run_scenario(
         "preempt_greedy_pressure",
-        cluster_cell(
-            "preempt",
-            ClusterConfig {
-                decode_policy: DecodePolicy::Greedy,
-                cost: CostModel { hbm_kv_bytes: 2e9, ..Default::default() },
-                flip: None,
-                ..ClusterConfig::ts_roce(1, 1)
-            },
-            WorkloadKind::Lphd,
-            192,
-            0.0,
-            13,
-        ),
+        Scenario::builder()
+            .name("preempt")
+            .workload(WorkloadKind::Lphd)
+            .requests(192)
+            .seed(13)
+            .decode_policy(DecodePolicy::Greedy)
+            .hbm_kv_bytes(Some(2e9))
+            .flip_idle_ms(None)
+            .build(),
     ));
 
     // Mixed multi-instance cluster: dispatch, monitor broadcast, arena
     // and transfer paths all hot.
     rows.push(run_scenario(
         "mixed_cluster_2p4d",
-        cluster_cell(
-            "mixed",
-            ClusterConfig { seed: 5, ..ClusterConfig::ts_roce(2, 4) },
-            WorkloadKind::Mixed,
-            512,
-            32.0,
-            5,
-        ),
+        Scenario::builder()
+            .name("mixed")
+            .workload(WorkloadKind::Mixed)
+            .requests(512)
+            .rate(32.0)
+            .seed(5)
+            .topology(2, 4)
+            .build(),
     ));
 
     // The coupled vLLM baseline driver (its own arena + fixed-batch path).
     rows.push(run_scenario(
         "baseline_coupled_2x",
-        SweepCell {
-            label: "baseline".to_string(),
-            system: SweepSystem::Baseline(BaselineConfig {
-                n_instances: 2,
-                seed: 7,
-                ..Default::default()
-            }),
-            kind: WorkloadKind::Mixed,
-            n_requests: 256,
-            rate_per_sec: 8.0,
-            trace_seed: 7,
-        },
+        Scenario::builder()
+            .name("baseline")
+            .driver("vllm")
+            .workload(WorkloadKind::Mixed)
+            .requests(256)
+            .rate(8.0)
+            .seed(7)
+            .topology(2, 2) // → 2 coupled instances (min convention)
+            .build(),
     ));
 
     // Sweep harness: the same 8-seed mixed sweep serial vs parallel.
     let mk_sweep = || -> Vec<SweepCell> {
         (0..8u64)
             .map(|seed| {
-                cluster_cell(
-                    &format!("sweep-seed{seed}"),
-                    ClusterConfig { seed, ..ClusterConfig::ts_roce(2, 4) },
-                    WorkloadKind::Mixed,
-                    256,
-                    32.0,
-                    seed,
+                SweepCell::new(
+                    format!("sweep-seed{seed}"),
+                    Scenario::builder()
+                        .workload(WorkloadKind::Mixed)
+                        .requests(256)
+                        .rate(32.0)
+                        .seed(seed)
+                        .topology(2, 4)
+                        .build(),
                 )
             })
             .collect()
@@ -148,10 +132,10 @@ fn main() {
     let t = Instant::now();
     let parallel = run_cells(mk_sweep(), workers);
     let parallel_s = t.elapsed().as_secs_f64();
-    let sweep_events: u64 = parallel.iter().map(|c| c.metrics.events).sum();
+    let sweep_events: u64 = parallel.iter().map(|c| c.report.metrics.events).sum();
     for (a, b) in serial.iter().zip(parallel.iter()) {
         assert_eq!(
-            a.metrics.makespan_us, b.metrics.makespan_us,
+            a.report.metrics.makespan_us, b.report.metrics.makespan_us,
             "sweep must be deterministic across worker counts"
         );
     }

@@ -1,16 +1,18 @@
 //! End-to-end benches, one per paper experiment: measures the wall time of
 //! regenerating each figure's workload run and prints the figure's key
 //! metric next to it, so `cargo bench` covers every table/figure the
-//! paper reports (DESIGN.md experiment index).
+//! paper reports (DESIGN.md experiment index). All simulated runs are
+//! constructed through `api::Scenario`, the same specs the figure
+//! harness and `tetri sim --spec` resolve.
 
 use std::time::Instant;
 
-use tetri_infer::baseline::{run_baseline, BaselineConfig};
-use tetri_infer::coordinator::{run_cluster, ClusterConfig, PredictorMode};
+use tetri_infer::api::{Report, Scenario};
+use tetri_infer::coordinator::PredictorMode;
 use tetri_infer::costmodel::CostModel;
 use tetri_infer::decode::DecodePolicy;
 use tetri_infer::prefill::{DispatchPolicy, PrefillPolicy};
-use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+use tetri_infer::workload::WorkloadKind;
 
 const SEED: u64 = 42;
 
@@ -20,17 +22,21 @@ fn timed<T>(name: &str, metric: impl FnOnce() -> (T, String)) {
     println!("{name:<28} {:>8.1} ms   {desc}", t.elapsed().as_secs_f64() * 1e3);
 }
 
+fn run(sc: &Scenario) -> Report {
+    sc.run().expect("builtin driver")
+}
+
 fn e2e(kind: WorkloadKind) -> (f64, String) {
-    let trace = WorkloadGen::new(SEED).trace(kind, 128, 8.0, 0);
-    let base = run_baseline(BaselineConfig { seed: SEED, ..Default::default() }, trace.clone());
-    let tetri = run_cluster(ClusterConfig { seed: SEED, ..ClusterConfig::ts_roce(1, 1) }, trace);
+    let sc = Scenario::builder().workload(kind).requests(128).rate(8.0).seed(SEED).build();
+    let base = run(&sc.baseline_counterpart());
+    let tetri = run(&sc);
     let p = tetri.perf_per_dollar_vs(&base);
     (
         p,
         format!(
             "TTFT {:+.0}%  JCT {:+.0}%  perf/$ {p:.2}x",
-            (tetri.ttft_summary().mean / base.ttft_summary().mean - 1.0) * 100.0,
-            (tetri.jct_summary().mean / base.jct_summary().mean - 1.0) * 100.0
+            (tetri.metrics.ttft_summary().mean / base.metrics.ttft_summary().mean - 1.0) * 100.0,
+            (tetri.metrics.jct_summary().mean / base.metrics.jct_summary().mean - 1.0) * 100.0
         ),
     )
 }
@@ -63,55 +69,56 @@ fn main() {
     timed("fig15 Mixed e2e", || e2e(WorkloadKind::Mixed));
 
     timed("fig16 scheduler policies", || {
-        let mk = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 256, 16.0, 0);
-        let base = run_baseline(BaselineConfig { seed: SEED, ..Default::default() }, mk());
-        let fcfs = run_cluster(
-            ClusterConfig { prefill_policy: PrefillPolicy::Fcfs, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-            mk(),
-        );
-        let x = fcfs.ttft_summary().mean / base.ttft_summary().mean - 1.0;
+        let sc = Scenario::builder()
+            .workload(WorkloadKind::Mixed)
+            .requests(256)
+            .rate(16.0)
+            .seed(SEED)
+            .build();
+        let base = run(&sc.baseline_counterpart());
+        let fcfs = run(&Scenario { prefill_policy: PrefillPolicy::Fcfs, ..sc });
+        let x = fcfs.metrics.ttft_summary().mean / base.metrics.ttft_summary().mean - 1.0;
         (x, format!("chunked FCFS vs vLLM = {:+.0}%", x * 100.0))
     });
 
     timed("fig17 predictor co-run", || {
-        let mk = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 256, 32.0, 0);
-        let alone = run_cluster(
-            ClusterConfig { predictor_mode: PredictorMode::Disabled, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-            mk(),
-        );
-        let par = run_cluster(
-            ClusterConfig { predictor_mode: PredictorMode::Parallel, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-            mk(),
-        );
-        let x = par.ttft_summary().mean / alone.ttft_summary().mean - 1.0;
+        let sc = Scenario::builder()
+            .workload(WorkloadKind::Mixed)
+            .requests(256)
+            .rate(32.0)
+            .seed(SEED)
+            .build();
+        let alone = run(&Scenario { predictor: PredictorMode::Disabled, ..sc.clone() });
+        let par = run(&Scenario { predictor: PredictorMode::Parallel, ..sc });
+        let x = par.metrics.ttft_summary().mean / alone.metrics.ttft_summary().mean - 1.0;
         (x, format!("parallel-mode overhead = {:+.0}%", x * 100.0))
     });
 
     timed("fig18 intra-decode policies", || {
-        let mk = || WorkloadGen::new(SEED).trace(WorkloadKind::Lphd, 160, 10.0, 0);
-        let greedy = run_cluster(
-            ClusterConfig { decode_policy: DecodePolicy::Greedy, predictor_accuracy: 1.0, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-            mk(),
-        );
-        let rd = run_cluster(
-            ClusterConfig { decode_policy: DecodePolicy::ReserveDynamic, predictor_accuracy: 1.0, seed: SEED, ..ClusterConfig::ts_roce(1, 1) },
-            mk(),
-        );
-        let x = rd.jct_summary().mean / greedy.jct_summary().mean - 1.0;
+        let sc = Scenario::builder()
+            .workload(WorkloadKind::Lphd)
+            .requests(160)
+            .rate(10.0)
+            .seed(SEED)
+            .predictor_accuracy(1.0)
+            .build();
+        let greedy = run(&Scenario { decode_policy: DecodePolicy::Greedy, ..sc.clone() });
+        let rd = run(&Scenario { decode_policy: DecodePolicy::ReserveDynamic, ..sc });
+        let x = rd.metrics.jct_summary().mean / greedy.metrics.jct_summary().mean - 1.0;
         (x, format!("RD vs greedy (ideal acc) = {:+.0}%", x * 100.0))
     });
 
     timed("fig19 inter-decode balance", || {
-        let mk = || WorkloadGen::new(SEED).trace(WorkloadKind::Mixed, 128, 32.0, 0);
-        let po2 = run_cluster(
-            ClusterConfig { dispatch: DispatchPolicy::PowerOfTwo, seed: SEED, ..ClusterConfig::ts_roce(1, 4) },
-            mk(),
-        );
-        let imb = run_cluster(
-            ClusterConfig { dispatch: DispatchPolicy::Imbalance, seed: SEED, ..ClusterConfig::ts_roce(1, 4) },
-            mk(),
-        );
-        let x = po2.makespan_us as f64 / imb.makespan_us as f64 - 1.0;
+        let sc = Scenario::builder()
+            .workload(WorkloadKind::Mixed)
+            .requests(128)
+            .rate(32.0)
+            .seed(SEED)
+            .topology(1, 4)
+            .build();
+        let po2 = run(&Scenario { dispatch: DispatchPolicy::PowerOfTwo, ..sc.clone() });
+        let imb = run(&Scenario { dispatch: DispatchPolicy::Imbalance, ..sc });
+        let x = po2.metrics.makespan_us as f64 / imb.metrics.makespan_us as f64 - 1.0;
         (x, format!("po2 vs imbalance decode time = {:+.0}%", x * 100.0))
     });
 }

@@ -10,14 +10,14 @@
 
 use std::time::Instant;
 
-use tetri_infer::coordinator::{run_cluster, ClusterConfig};
+use tetri_infer::api::Scenario;
 use tetri_infer::decode::{DecodePolicy, DecodeScheduler};
 use tetri_infer::kvcache::PagedKvCache;
 use tetri_infer::prefill::{choose, Chunker, DecodeLoad, DispatchPolicy, PrefillPolicy, PrefillScheduler};
 use tetri_infer::sim::{Event, EventQueue};
 use tetri_infer::types::Request;
 use tetri_infer::util::{repo_root, Json, Pcg};
-use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+use tetri_infer::workload::WorkloadKind;
 
 /// Time `f` (which performs `iters` inner operations), repeated `reps`
 /// times; prints the best rep (ns/op and Mops/s) and records it in `rows`
@@ -151,17 +151,22 @@ fn main() {
         while q.pop().is_some() {}
     });
 
-    // ---- end-to-end cluster sim throughput (requests/s of sim)
-    let trace = WorkloadGen::new(5).trace(WorkloadKind::Mixed, 512, 32.0, 0);
+    // ---- end-to-end cluster sim throughput (requests/s of sim) — one
+    // api::Scenario per seed, same 512-request mixed trace (trace_seed 5).
     let mut out = 0u64;
     let mut events = 0u64;
     let t = Instant::now();
     let reps = 5;
     for s in 0..reps {
-        let m = run_cluster(
-            ClusterConfig { seed: s as u64, ..ClusterConfig::ts_roce(2, 4) },
-            trace.clone(),
-        );
+        let sc = Scenario::builder()
+            .workload(WorkloadKind::Mixed)
+            .requests(512)
+            .rate(32.0)
+            .seed(s as u64)
+            .trace_seed(5)
+            .topology(2, 4)
+            .build();
+        let m = sc.run().expect("builtin driver").metrics;
         out += m.records.len() as u64;
         events += m.events;
     }

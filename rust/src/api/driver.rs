@@ -1,0 +1,206 @@
+//! Pluggable run drivers and the string-keyed driver registry.
+//!
+//! A `Driver` turns a request trace into a [`Report`], streaming events to
+//! an [`Observer`](super::Observer) along the way. Two builtin drivers
+//! exist — the disaggregated TetriInfer cluster (`"tetri"`) and the
+//! coupled vanilla-vLLM baseline (`"vllm"`) — and future systems plug in
+//! by adding a registry entry. The legacy free functions
+//! `run_cluster`/`run_baseline` are thin wrappers over these drivers.
+
+use std::time::Instant;
+
+use crate::baseline::{BaselineCluster, BaselineConfig};
+use crate::coordinator::{Cluster, ClusterConfig};
+use crate::types::Request;
+
+use super::{Observer, Report, Scenario};
+
+/// A simulated serving system that can run a trace to completion.
+pub trait Driver {
+    /// Registry key / display name of this driver.
+    fn name(&self) -> &str;
+
+    /// Run `trace` to completion, streaming events to `obs`. Deterministic
+    /// given the driver's config and the trace; the observer never
+    /// influences the run.
+    fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report;
+}
+
+/// The disaggregated TetriInfer cluster (§3).
+pub struct ClusterDriver {
+    pub cfg: ClusterConfig,
+    /// Scenario echo for the report, when the driver came from a spec.
+    pub scenario: Option<Scenario>,
+}
+
+impl ClusterDriver {
+    pub fn from_config(cfg: ClusterConfig) -> Self {
+        ClusterDriver { cfg, scenario: None }
+    }
+
+    pub fn from_scenario(sc: &Scenario) -> Self {
+        ClusterDriver { cfg: sc.cluster_config(), scenario: Some(sc.clone()) }
+    }
+}
+
+impl Driver for ClusterDriver {
+    fn name(&self) -> &str {
+        "tetri"
+    }
+
+    fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report {
+        let t = Instant::now();
+        // One memcpy of the Copy-POD trace per run (~50 B/request) so the
+        // driver can be re-run on the same borrowed trace; noise next to
+        // the DES run itself.
+        let metrics = Cluster::new(self.cfg.clone()).run_observed(trace.to_vec(), obs);
+        Report {
+            driver: "tetri".to_string(),
+            scenario: self.scenario.clone(),
+            metrics,
+            wall_secs: t.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// The coupled vanilla-vLLM baseline (§5.2.1).
+pub struct BaselineDriver {
+    pub cfg: BaselineConfig,
+    pub scenario: Option<Scenario>,
+}
+
+impl BaselineDriver {
+    pub fn from_config(cfg: BaselineConfig) -> Self {
+        BaselineDriver { cfg, scenario: None }
+    }
+
+    pub fn from_scenario(sc: &Scenario) -> Self {
+        BaselineDriver { cfg: sc.baseline_config(), scenario: Some(sc.clone()) }
+    }
+}
+
+impl Driver for BaselineDriver {
+    fn name(&self) -> &str {
+        "vllm"
+    }
+
+    fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report {
+        let t = Instant::now();
+        let metrics = BaselineCluster::new(self.cfg.clone()).run_observed(trace.to_vec(), obs);
+        Report {
+            driver: "vllm".to_string(),
+            scenario: self.scenario.clone(),
+            metrics,
+            wall_secs: t.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+type DriverFactory = fn(&Scenario) -> Box<dyn Driver>;
+
+/// String-keyed driver registry: the single resolver behind CLI flags,
+/// JSON specs, and sweep grids. Unknown keys are errors that list the
+/// known drivers — never silent fallbacks.
+pub struct Registry {
+    entries: Vec<(&'static str, DriverFactory)>,
+}
+
+impl Registry {
+    /// The builtin systems: `"tetri"` and `"vllm"`.
+    pub fn builtin() -> Self {
+        Registry {
+            entries: vec![
+                ("tetri", |sc| Box::new(ClusterDriver::from_scenario(sc))),
+                ("vllm", |sc| Box::new(BaselineDriver::from_scenario(sc))),
+            ],
+        }
+    }
+
+    /// Register an additional driver under `key` (later entries shadow
+    /// earlier ones with the same key).
+    pub fn register(&mut self, key: &'static str, factory: DriverFactory) {
+        self.entries.retain(|(k, _)| *k != key);
+        self.entries.push((key, factory));
+    }
+
+    pub fn driver_names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+
+    /// Build the driver a scenario names, or an error listing valid keys.
+    pub fn resolve(&self, sc: &Scenario) -> Result<Box<dyn Driver>, String> {
+        self.entries
+            .iter()
+            .find(|(k, _)| *k == sc.driver)
+            .map(|(_, f)| f(sc))
+            .ok_or_else(|| {
+                format!(
+                    "unknown driver '{}' (known: {})",
+                    sc.driver,
+                    self.driver_names().join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::NullObserver;
+    use crate::workload::WorkloadKind;
+
+    fn tiny(driver: &str) -> Scenario {
+        Scenario::builder()
+            .driver(driver)
+            .workload(WorkloadKind::Lpld)
+            .requests(8)
+            .seed(3)
+            .build()
+    }
+
+    #[test]
+    fn registry_resolves_builtin_drivers() {
+        let reg = Registry::builtin();
+        assert_eq!(reg.driver_names(), vec!["tetri", "vllm"]);
+        for name in ["tetri", "vllm"] {
+            let sc = tiny(name);
+            let drv = reg.resolve(&sc).unwrap();
+            assert_eq!(drv.name(), name);
+            let report = drv.run(&sc.trace(), &mut NullObserver);
+            assert_eq!(report.metrics.records.len(), 8, "{name}");
+            assert_eq!(report.scenario.as_ref().unwrap(), &sc);
+        }
+    }
+
+    #[test]
+    fn unknown_driver_is_an_error_listing_known() {
+        let err = Registry::builtin().resolve(&tiny("sglang")).unwrap_err();
+        assert!(err.contains("sglang") && err.contains("tetri") && err.contains("vllm"), "{err}");
+    }
+
+    #[test]
+    fn register_shadows_existing_key() {
+        let mut reg = Registry::builtin();
+        reg.register("tetri", |sc| Box::new(BaselineDriver::from_scenario(sc)));
+        let drv = reg.resolve(&tiny("tetri")).unwrap();
+        assert_eq!(drv.name(), "vllm", "shadowed entry must win");
+        assert_eq!(reg.driver_names().len(), 2);
+    }
+
+    #[test]
+    fn driver_runs_match_legacy_free_functions() {
+        let sc = tiny("tetri");
+        let trace = sc.trace();
+        let via_driver = ClusterDriver::from_scenario(&sc).run(&trace, &mut NullObserver);
+        let via_fn = crate::coordinator::run_cluster(sc.cluster_config(), trace.clone());
+        assert_eq!(via_driver.metrics.makespan_us, via_fn.makespan_us);
+        assert_eq!(via_driver.metrics.events, via_fn.events);
+
+        let sc = tiny("vllm");
+        let trace = sc.trace();
+        let via_driver = BaselineDriver::from_scenario(&sc).run(&trace, &mut NullObserver);
+        let via_fn = crate::baseline::run_baseline(sc.baseline_config(), trace);
+        assert_eq!(via_driver.metrics.makespan_us, via_fn.makespan_us);
+        assert_eq!(via_driver.metrics.events, via_fn.events);
+    }
+}

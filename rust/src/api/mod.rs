@@ -1,0 +1,118 @@
+//! The experiment API — the crate's single front door (see DESIGN.md
+//! §Experiment API).
+//!
+//! Three pieces compose every run:
+//!
+//!   * [`Scenario`] — a declarative spec (builder / JSON file / CLI flags,
+//!     all bit-identical) covering workload, arrival process, topology,
+//!     policies, link, predictor mode, and seeds;
+//!   * [`Driver`] — a pluggable simulated system resolved from the
+//!     string-keyed [`Registry`] (`"tetri"`, `"vllm"`, ...);
+//!   * [`Observer`] — streaming per-event hooks (arrivals, chunks,
+//!     transfers, decode iterations, flips, finishes, monitor ticks)
+//!     threaded through both DES drivers.
+//!
+//! A run yields a [`Report`] (metrics + scenario echo + comparison
+//! helpers) with one JSON serializer shared by the CLI, the figure
+//! harness, the sweep, and the benches.
+//!
+//! ```no_run
+//! use tetri_infer::api::Scenario;
+//! use tetri_infer::workload::WorkloadKind;
+//!
+//! let report = Scenario::builder()
+//!     .name("quick")
+//!     .workload(WorkloadKind::Mixed)
+//!     .requests(64)
+//!     .rate(8.0)
+//!     .seed(7)
+//!     .build()
+//!     .run()
+//!     .unwrap();
+//! println!("{}", report.summary_line());
+//! ```
+
+pub mod driver;
+pub mod observer;
+pub mod report;
+pub mod scenario;
+
+pub use driver::{BaselineDriver, ClusterDriver, Driver, Registry};
+pub use observer::{
+    NullObserver, Observer, ProgressObserver, QueueSample, Span, SpanKind, TimelineObserver,
+};
+pub use report::{metrics_json, Report};
+pub use scenario::{
+    decode_policy_key, dispatch_key, granularity_key, parse_decode_policy, parse_dispatch,
+    parse_granularity, parse_link, parse_predictor, parse_prefill_policy, parse_workload,
+    predictor_key, prefill_policy_key, LinkSpec, Phase, Scenario, ScenarioBuilder,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadKind;
+
+    fn tiny() -> Scenario {
+        Scenario::builder().workload(WorkloadKind::Mixed).requests(16).rate(20.0).seed(1).build()
+    }
+
+    #[test]
+    fn scenario_run_completes_and_echoes() {
+        let sc = tiny();
+        let report = sc.run().unwrap();
+        assert_eq!(report.metrics.records.len(), 16);
+        assert_eq!(report.scenario.as_ref().unwrap(), &sc);
+        assert_eq!(report.driver, "tetri");
+    }
+
+    #[test]
+    fn observers_do_not_perturb_the_run() {
+        let sc = tiny();
+        let plain = sc.run().unwrap();
+        let mut timeline = TimelineObserver::new();
+        let observed = sc.run_with(&mut timeline).unwrap();
+        assert_eq!(plain.metrics.makespan_us, observed.metrics.makespan_us);
+        assert_eq!(plain.metrics.events, observed.metrics.events);
+        assert_eq!(
+            format!("{:.9}", plain.metrics.jct_summary().mean),
+            format!("{:.9}", observed.metrics.jct_summary().mean)
+        );
+    }
+
+    #[test]
+    fn timeline_observer_sees_the_whole_pipeline() {
+        let sc = tiny();
+        let mut t = TimelineObserver::new();
+        sc.run_with(&mut t).unwrap();
+        assert_eq!(t.arrivals, 16);
+        assert!(t.chunks > 0, "prefill chunks must be observed");
+        assert!(t.decode_iters > 0, "decode iterations must be observed");
+        assert!(t.transfers > 0, "KV transfers must be observed");
+        assert_eq!(t.finished.len(), 16);
+        assert!(t.busy_us(0) > 0);
+    }
+
+    #[test]
+    fn baseline_driver_fires_observer_hooks_too() {
+        let sc = Scenario { driver: "vllm".into(), ..tiny() };
+        let mut t = TimelineObserver::new();
+        let report = sc.run_with(&mut t).unwrap();
+        assert_eq!(report.driver, "vllm");
+        assert_eq!(t.arrivals, 16);
+        assert!(t.chunks > 0, "coupled prefill sides must be observed");
+        assert!(t.decode_iters > 0);
+        assert_eq!(t.transfers, 0, "the coupled baseline has no KV fabric");
+        assert_eq!(t.finished.len(), 16);
+    }
+
+    #[test]
+    fn spec_loaded_run_matches_builder_run() {
+        let sc = tiny();
+        let reparsed = Scenario::from_str(&sc.to_json().dump()).unwrap();
+        let a = sc.run().unwrap();
+        let b = reparsed.run().unwrap();
+        assert_eq!(a.metrics.makespan_us, b.metrics.makespan_us);
+        assert_eq!(a.metrics.events, b.metrics.events);
+    }
+}

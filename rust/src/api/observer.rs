@@ -1,0 +1,345 @@
+//! Streaming run observers: per-event hooks threaded through both DES
+//! drivers (cluster and coupled baseline).
+//!
+//! Observers *watch* a run — they never influence it. Both drivers call
+//! the hooks at the instant an action is issued into the event queue, so
+//! a hook receives `(now, dur)` and knows the action completes at
+//! `now + dur`; metrics are bit-identical whichever observer is attached
+//! (golden-tested). All hooks default to no-ops, so an observer implements
+//! only what it cares about.
+
+use crate::prefill::DecodeLoad;
+use crate::types::{ReqId, Request, RequestRecord, Role, Us};
+use crate::util::Json;
+
+/// Per-event hooks over a DES run. `now` is virtual µs.
+pub trait Observer {
+    /// A request was first admitted by the global scheduler (retries after
+    /// mid-flip windows do not re-fire this hook).
+    fn on_arrival(&mut self, _now: Us, _req: &Request) {}
+
+    /// A prefill chunk was issued on `instance`; it completes at
+    /// `now + dur`. `tokens` are real prompt tokens, `pad` the shape
+    /// filler of a partial final chunk.
+    fn on_chunk(&mut self, _now: Us, _instance: usize, _tokens: u32, _pad: u32, _dur: Us) {}
+
+    /// A KV transfer of `tokens` prompt tokens toward decode `instance`
+    /// was scheduled for original request `req`; it lands at `now + dur`.
+    fn on_transfer(&mut self, _now: Us, _instance: usize, _req: ReqId, _tokens: u32, _dur: Us) {}
+
+    /// A decode iteration was issued on `instance` over `batch` resident
+    /// requests holding `kv_tokens` of KV; it completes at `now + dur`.
+    /// The coupled baseline fires this for the decode side of its mixed
+    /// iterations, and only when that side is non-empty (`batch > 0`) —
+    /// a pure-prefill iteration fires `on_chunk` alone.
+    fn on_decode_iter(&mut self, _now: Us, _instance: usize, _batch: u32, _kv_tokens: u64, _dur: Us) {
+    }
+
+    /// `instance` began flipping toward role `to` (§3.5); the new
+    /// incarnation is live at `now + dur`.
+    fn on_flip(&mut self, _now: Us, _instance: usize, _to: Role, _dur: Us) {}
+
+    /// A request finished; `rec` carries the original id and timestamps.
+    fn on_finish(&mut self, _now: Us, _rec: &RequestRecord) {}
+
+    /// The cluster monitor broadcast fresh decode loads (one sample per
+    /// decode instance, paper period ~100 ms). The baseline never fires
+    /// this (it has no monitor).
+    fn on_monitor(&mut self, _now: Us, _loads: &[DecodeLoad]) {}
+}
+
+/// The do-nothing observer: what `run_cluster`/`run_baseline` attach.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// What kind of activity a [`TimelineObserver`] span records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    PrefillChunk,
+    DecodeIter,
+    Transfer,
+    Flip,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::PrefillChunk => "chunk",
+            SpanKind::DecodeIter => "decode",
+            SpanKind::Transfer => "transfer",
+            SpanKind::Flip => "flip",
+        }
+    }
+}
+
+/// One busy interval `[at, at + dur)` on an instance. `size` is the
+/// kind-specific magnitude: chunk tokens, decode batch, transfer tokens,
+/// or 0 for flips.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub at: Us,
+    pub dur: Us,
+    pub instance: usize,
+    pub kind: SpanKind,
+    pub size: u64,
+}
+
+/// One monitor-tick queue-depth sample for a decode instance.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueSample {
+    pub at: Us,
+    pub instance: usize,
+    pub queue_len: u32,
+    pub n_heavy: u32,
+    pub n_light: u32,
+}
+
+/// Records per-instance busy/queue traces — the raw series behind
+/// Figure-4-style interference plots. Also subsumes the driver's old
+/// ad-hoc chunk counters (`total_chunks`/`total_pad_tokens` lived on the
+/// cluster struct before this existed).
+#[derive(Clone, Debug, Default)]
+pub struct TimelineObserver {
+    pub spans: Vec<Span>,
+    pub queue: Vec<QueueSample>,
+    /// (finish time, original request id).
+    pub finished: Vec<(Us, ReqId)>,
+    pub arrivals: u64,
+    pub chunks: u64,
+    pub pad_tokens: u64,
+    pub transfers: u64,
+    pub decode_iters: u64,
+    pub flips: u64,
+}
+
+impl TimelineObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Busy µs attributed to `instance` (compute spans only — transfers
+    /// occupy the wire, not the instance).
+    pub fn busy_us(&self, instance: usize) -> Us {
+        self.spans
+            .iter()
+            .filter(|s| {
+                s.instance == instance
+                    && matches!(s.kind, SpanKind::PrefillChunk | SpanKind::DecodeIter)
+            })
+            .map(|s| s.dur)
+            .sum()
+    }
+
+    /// Busy intervals `(start, end)` for one instance, in issue order.
+    pub fn busy_series(&self, instance: usize) -> Vec<(Us, Us)> {
+        self.spans
+            .iter()
+            .filter(|s| {
+                s.instance == instance
+                    && matches!(s.kind, SpanKind::PrefillChunk | SpanKind::DecodeIter)
+            })
+            .map(|s| (s.at, s.at + s.dur))
+            .collect()
+    }
+
+    /// Queue-depth series `(t, queue_len)` for one decode instance.
+    pub fn queue_series(&self, instance: usize) -> Vec<(Us, u32)> {
+        self.queue
+            .iter()
+            .filter(|q| q.instance == instance)
+            .map(|q| (q.at, q.queue_len))
+            .collect()
+    }
+
+    /// Machine-readable dump (spans + queue samples) for external plotting.
+    pub fn to_json(&self) -> Json {
+        let spans: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::obj([
+                    ("at_us", Json::from(s.at)),
+                    ("dur_us", Json::from(s.dur)),
+                    ("instance", Json::from(s.instance)),
+                    ("kind", Json::from(s.kind.name())),
+                    ("size", Json::from(s.size)),
+                ])
+            })
+            .collect();
+        let queue: Vec<Json> = self
+            .queue
+            .iter()
+            .map(|q| {
+                Json::obj([
+                    ("at_us", Json::from(q.at)),
+                    ("instance", Json::from(q.instance)),
+                    ("queue_len", Json::from(u64::from(q.queue_len))),
+                    ("n_heavy", Json::from(u64::from(q.n_heavy))),
+                    ("n_light", Json::from(u64::from(q.n_light))),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("arrivals", Json::from(self.arrivals)),
+            ("chunks", Json::from(self.chunks)),
+            ("pad_tokens", Json::from(self.pad_tokens)),
+            ("transfers", Json::from(self.transfers)),
+            ("decode_iters", Json::from(self.decode_iters)),
+            ("flips", Json::from(self.flips)),
+            ("spans", Json::from(spans)),
+            ("queue", Json::from(queue)),
+        ])
+    }
+}
+
+impl Observer for TimelineObserver {
+    fn on_arrival(&mut self, _now: Us, _req: &Request) {
+        self.arrivals += 1;
+    }
+
+    fn on_chunk(&mut self, now: Us, instance: usize, tokens: u32, pad: u32, dur: Us) {
+        self.chunks += 1;
+        self.pad_tokens += pad as u64;
+        self.spans.push(Span {
+            at: now,
+            dur,
+            instance,
+            kind: SpanKind::PrefillChunk,
+            size: tokens as u64,
+        });
+    }
+
+    fn on_transfer(&mut self, now: Us, instance: usize, _req: ReqId, tokens: u32, dur: Us) {
+        self.transfers += 1;
+        self.spans.push(Span {
+            at: now,
+            dur,
+            instance,
+            kind: SpanKind::Transfer,
+            size: tokens as u64,
+        });
+    }
+
+    fn on_decode_iter(&mut self, now: Us, instance: usize, batch: u32, _kv_tokens: u64, dur: Us) {
+        self.decode_iters += 1;
+        self.spans.push(Span {
+            at: now,
+            dur,
+            instance,
+            kind: SpanKind::DecodeIter,
+            size: batch as u64,
+        });
+    }
+
+    fn on_flip(&mut self, now: Us, instance: usize, _to: Role, dur: Us) {
+        self.flips += 1;
+        self.spans.push(Span { at: now, dur, instance, kind: SpanKind::Flip, size: 0 });
+    }
+
+    fn on_finish(&mut self, now: Us, rec: &RequestRecord) {
+        self.finished.push((now, rec.id));
+    }
+
+    fn on_monitor(&mut self, now: Us, loads: &[DecodeLoad]) {
+        for l in loads {
+            self.queue.push(QueueSample {
+                at: now,
+                instance: l.instance,
+                queue_len: l.queue_len,
+                n_heavy: l.n_heavy,
+                n_light: l.n_light,
+            });
+        }
+    }
+}
+
+/// Prints coarse progress to stderr as requests finish — for long
+/// interactive runs (`tetri sim --progress`).
+#[derive(Debug)]
+pub struct ProgressObserver {
+    total: usize,
+    done: usize,
+    every: usize,
+}
+
+impl ProgressObserver {
+    /// Report every `every` completions (and at the end). `every` is
+    /// clamped to at least 1.
+    pub fn new(total: usize, every: usize) -> Self {
+        ProgressObserver { total, done: 0, every: every.max(1) }
+    }
+
+    pub fn done(&self) -> usize {
+        self.done
+    }
+}
+
+impl Observer for ProgressObserver {
+    fn on_finish(&mut self, now: Us, _rec: &RequestRecord) {
+        self.done += 1;
+        if self.done % self.every == 0 || self.done == self.total {
+            eprintln!(
+                "[progress] {}/{} requests done at t={:.2}s (sim)",
+                self.done,
+                self.total,
+                now as f64 / 1e6
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::TaskType;
+
+    fn rec(id: ReqId) -> RequestRecord {
+        RequestRecord {
+            id,
+            task: TaskType::Chat,
+            prompt_len: 10,
+            decode_len: 5,
+            arrival: 0,
+            first_token: 10,
+            finished: 20,
+            predicted: None,
+        }
+    }
+
+    #[test]
+    fn timeline_accumulates_spans_and_counters() {
+        let mut t = TimelineObserver::new();
+        t.on_chunk(0, 0, 512, 12, 100);
+        t.on_chunk(100, 0, 256, 0, 50);
+        t.on_decode_iter(200, 1, 8, 800, 30);
+        t.on_transfer(150, 1, 7, 512, 40);
+        t.on_flip(400, 0, Role::Decode, 6_000);
+        t.on_finish(500, &rec(7));
+        assert_eq!(t.chunks, 2);
+        assert_eq!(t.pad_tokens, 12);
+        assert_eq!(t.busy_us(0), 150, "flip spans are not busy compute");
+        assert_eq!(t.busy_us(1), 30, "transfer spans occupy the wire, not the instance");
+        assert_eq!(t.busy_series(0), vec![(0, 100), (100, 150)]);
+        assert_eq!(t.finished, vec![(500, 7)]);
+        // json dump parses back
+        let s = t.to_json().dump();
+        assert!(crate::util::Json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn progress_counts_finishes() {
+        let mut p = ProgressObserver::new(3, 100);
+        p.on_finish(1, &rec(0));
+        p.on_finish(2, &rec(1));
+        assert_eq!(p.done(), 2);
+    }
+
+    #[test]
+    fn null_observer_is_free() {
+        let mut n = NullObserver;
+        n.on_chunk(0, 0, 1, 0, 1);
+        n.on_finish(0, &rec(0));
+    }
+}

@@ -1,0 +1,187 @@
+//! The unified run report: metrics + scenario echo + comparison helpers,
+//! with the single JSON serializer used by `main.rs`,
+//! `examples/figures.rs`, the sweep harness, and both benches.
+
+use crate::metrics::RunMetrics;
+use crate::util::{Json, Summary};
+
+use super::Scenario;
+
+/// One finished run. Carries the scenario that produced it (when known),
+/// so a report alone is enough to reproduce the run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Driver registry key that produced this run.
+    pub driver: String,
+    /// Scenario echo; `None` when the driver was built from a raw config
+    /// (the legacy `run_cluster`/`run_baseline` path).
+    pub scenario: Option<Scenario>,
+    pub metrics: RunMetrics,
+    /// Host wall time of the DES run (not virtual time).
+    pub wall_secs: f64,
+}
+
+fn summary_json(s: &Summary) -> Json {
+    Json::obj([
+        ("mean", Json::from(s.mean)),
+        ("p50", Json::from(s.p50)),
+        ("p90", Json::from(s.p90)),
+        ("p99", Json::from(s.p99)),
+        ("min", Json::from(s.min)),
+        ("max", Json::from(s.max)),
+    ])
+}
+
+/// The one serializer for run metrics (milliseconds for latencies,
+/// seconds for resource/makespan). Every JSON artifact in the repo that
+/// embeds run results goes through this.
+pub fn metrics_json(m: &RunMetrics) -> Json {
+    Json::obj([
+        ("requests", Json::from(m.records.len())),
+        ("ttft_ms", summary_json(&m.ttft_summary())),
+        ("jct_ms", summary_json(&m.jct_summary())),
+        ("resource_s", Json::from(m.resource_seconds())),
+        ("makespan_s", Json::from(m.makespan_us as f64 / 1e6)),
+        ("events", Json::from(m.events)),
+        ("decode_tok_per_s", Json::from(m.decode_throughput())),
+        ("utilization", Json::from(m.utilization())),
+        ("swapped_tokens", Json::from(m.swapped_tokens)),
+        ("flips", Json::from(u64::from(m.flips))),
+    ])
+}
+
+impl Report {
+    /// Full machine-readable report: scenario echo + metrics + wall time.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("driver", Json::from(self.driver.clone())),
+            (
+                "scenario",
+                self.scenario.as_ref().map(|s| s.to_json()).unwrap_or(Json::Null),
+            ),
+            ("metrics", metrics_json(&self.metrics)),
+            ("wall_secs", Json::from(self.wall_secs)),
+        ])
+    }
+
+    /// One human-readable line of the headline metrics.
+    pub fn summary_line(&self) -> String {
+        let t = self.metrics.ttft_summary();
+        let j = self.metrics.jct_summary();
+        format!(
+            "{:<10} TTFT mean {:>8.1} ms p99 {:>8.1} | JCT mean {:>9.1} ms p99 {:>9.1} | resource {:>6.1}s | flips {}",
+            self.driver,
+            t.mean,
+            t.p99,
+            j.mean,
+            j.p99,
+            self.metrics.resource_seconds(),
+            self.metrics.flips
+        )
+    }
+
+    /// Formatted comparison row against a baseline report (delegates to
+    /// the paper's headline deltas).
+    pub fn vs_row(&self, name: &str, base: &Report) -> String {
+        self.metrics.vs_row(name, &base.metrics)
+    }
+
+    /// perf/$ of this run relative to `base` (>1 = better).
+    pub fn perf_per_dollar_vs(&self, base: &Report) -> f64 {
+        self.metrics.perf_per_dollar_vs(&base.metrics)
+    }
+
+    /// Machine-readable side-by-side of this run and a baseline, with the
+    /// paper's relative deltas precomputed.
+    pub fn comparison_json(&self, base: &Report) -> Json {
+        let rel = |own: f64, other: f64| -> Json {
+            if other == 0.0 {
+                Json::Null
+            } else {
+                Json::from(own / other - 1.0)
+            }
+        };
+        Json::obj([
+            ("report", self.to_json()),
+            ("baseline", base.to_json()),
+            (
+                "deltas",
+                Json::obj([
+                    (
+                        "ttft_rel",
+                        rel(self.metrics.ttft_summary().mean, base.metrics.ttft_summary().mean),
+                    ),
+                    (
+                        "jct_rel",
+                        rel(self.metrics.jct_summary().mean, base.metrics.jct_summary().mean),
+                    ),
+                    (
+                        "resource_rel",
+                        rel(self.metrics.resource_seconds(), base.metrics.resource_seconds()),
+                    ),
+                    ("perf_per_dollar", Json::from(self.perf_per_dollar_vs(base))),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{RequestRecord, TaskType};
+
+    fn mk(jct_ms: f64, resource_s: f64) -> Report {
+        Report {
+            driver: "tetri".to_string(),
+            scenario: Some(Scenario::default()),
+            metrics: RunMetrics {
+                records: vec![RequestRecord {
+                    id: 0,
+                    task: TaskType::Chat,
+                    prompt_len: 10,
+                    decode_len: 100,
+                    arrival: 0,
+                    first_token: 1_000,
+                    finished: (jct_ms * 1e3) as u64,
+                    predicted: None,
+                }],
+                busy_us: vec![(resource_s * 1e6) as u64],
+                alive_us: vec![(resource_s * 2e6) as u64],
+                makespan_us: 1_000_000,
+                ..Default::default()
+            },
+            wall_secs: 0.01,
+        }
+    }
+
+    #[test]
+    fn report_json_round_trips_and_echoes_scenario() {
+        let r = mk(100.0, 1.0);
+        let j = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(j.at(&["driver"]).unwrap().as_str(), Some("tetri"));
+        assert_eq!(j.at(&["metrics", "requests"]).unwrap().as_usize(), Some(1));
+        // scenario echo parses back to the original spec
+        let sc = Scenario::from_json(j.get("scenario").unwrap()).unwrap();
+        assert_eq!(sc, Scenario::default());
+    }
+
+    #[test]
+    fn comparison_json_carries_deltas() {
+        let fast = mk(100.0, 1.0);
+        let slow = mk(200.0, 2.0);
+        let j = fast.comparison_json(&slow);
+        let p = j.at(&["deltas", "perf_per_dollar"]).unwrap().as_f64().unwrap();
+        assert!((p - 4.0).abs() < 1e-9, "{p}");
+        let jd = j.at(&["deltas", "jct_rel"]).unwrap().as_f64().unwrap();
+        assert!((jd - (-0.5)).abs() < 1e-9, "{jd}");
+    }
+
+    #[test]
+    fn summary_and_vs_rows_render() {
+        let a = mk(100.0, 1.0);
+        let b = mk(200.0, 2.0);
+        assert!(a.summary_line().contains("TTFT"));
+        assert!(a.vs_row("a vs b", &b).contains("perf/$"));
+    }
+}

@@ -1,0 +1,932 @@
+//! Declarative experiment scenarios: one value that fully determines a
+//! simulated run — workload, arrival process, topology, every policy knob,
+//! link, predictor mode, and seeds.
+//!
+//! A `Scenario` can be built three equivalent ways that produce
+//! bit-identical runs (golden-tested):
+//!   * the builder API: `Scenario::builder().workload(..).seed(42).build()`
+//!   * a JSON spec file: `Scenario::load("scenarios/fig12.json")`
+//!   * CLI flags: `tetri sim --workload LPHD --seed 42` (main.rs assembles
+//!     the same struct through the same parsers)
+//!
+//! String keys (`"sjf"`, `"po2"`, `"roce"`, ...) are owned by this module:
+//! the `parse_*`/`*_key` pairs here are the single source of truth for
+//! CLI flags, JSON specs, and sweep grids alike — there is exactly one
+//! place a policy name can be spelled, and unknown spellings are errors
+//! everywhere (never silent defaults).
+
+use super::driver::Driver as _;
+use crate::coordinator::{ClusterConfig, FlipConfig, PredictorMode};
+use crate::costmodel::CostModel;
+use crate::decode::DecodePolicy;
+use crate::fabric::Link;
+use crate::prefill::{DispatchPolicy, PrefillPolicy};
+use crate::types::{Request, Us};
+use crate::util::Json;
+use crate::workload::{WorkloadGen, WorkloadKind};
+
+use crate::baseline::BaselineConfig;
+
+// ------------------------------------------------------------ key parsers
+
+/// Emulated hardware link (§5.1): the three setups the paper evaluates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkSpec {
+    Nvlink,
+    Roce,
+    Socket,
+}
+
+impl LinkSpec {
+    pub fn key(self) -> &'static str {
+        match self {
+            LinkSpec::Nvlink => "nvlink",
+            LinkSpec::Roce => "roce",
+            LinkSpec::Socket => "socket",
+        }
+    }
+
+    pub fn to_link(self) -> Link {
+        match self {
+            LinkSpec::Nvlink => Link::nvlink(),
+            LinkSpec::Roce => Link::roce200(),
+            LinkSpec::Socket => Link::indirect_socket(),
+        }
+    }
+}
+
+pub fn parse_link(s: &str) -> Result<LinkSpec, String> {
+    match s {
+        "nvlink" => Ok(LinkSpec::Nvlink),
+        "roce" => Ok(LinkSpec::Roce),
+        "socket" => Ok(LinkSpec::Socket),
+        _ => Err(format!("unknown link '{s}' (expected nvlink|roce|socket)")),
+    }
+}
+
+pub fn parse_workload(s: &str) -> Result<WorkloadKind, String> {
+    match s.to_ascii_uppercase().as_str() {
+        "LPLD" => Ok(WorkloadKind::Lpld),
+        "LPHD" => Ok(WorkloadKind::Lphd),
+        "HPLD" => Ok(WorkloadKind::Hpld),
+        "HPHD" => Ok(WorkloadKind::Hphd),
+        "MIXED" => Ok(WorkloadKind::Mixed),
+        _ => Err(format!("unknown workload '{s}' (expected LPLD|LPHD|HPLD|HPHD|Mixed)")),
+    }
+}
+
+pub fn prefill_policy_key(p: PrefillPolicy) -> &'static str {
+    match p {
+        PrefillPolicy::Fcfs => "fcfs",
+        PrefillPolicy::Sjf => "sjf",
+        PrefillPolicy::Ljf => "ljf",
+    }
+}
+
+pub fn parse_prefill_policy(s: &str) -> Result<PrefillPolicy, String> {
+    match s {
+        "fcfs" => Ok(PrefillPolicy::Fcfs),
+        "sjf" => Ok(PrefillPolicy::Sjf),
+        "ljf" => Ok(PrefillPolicy::Ljf),
+        _ => Err(format!("unknown prefill policy '{s}' (expected fcfs|sjf|ljf)")),
+    }
+}
+
+pub fn decode_policy_key(p: DecodePolicy) -> &'static str {
+    match p {
+        DecodePolicy::Greedy => "greedy",
+        DecodePolicy::ReserveStatic => "rs",
+        DecodePolicy::ReserveDynamic => "rd",
+    }
+}
+
+pub fn parse_decode_policy(s: &str) -> Result<DecodePolicy, String> {
+    match s {
+        "greedy" => Ok(DecodePolicy::Greedy),
+        "rs" => Ok(DecodePolicy::ReserveStatic),
+        "rd" => Ok(DecodePolicy::ReserveDynamic),
+        _ => Err(format!("unknown decode policy '{s}' (expected greedy|rs|rd)")),
+    }
+}
+
+pub fn dispatch_key(p: DispatchPolicy) -> &'static str {
+    match p {
+        DispatchPolicy::PowerOfTwo => "po2",
+        DispatchPolicy::Random => "random",
+        DispatchPolicy::Imbalance => "imbalance",
+        DispatchPolicy::LeastLoad => "least",
+    }
+}
+
+pub fn parse_dispatch(s: &str) -> Result<DispatchPolicy, String> {
+    match s {
+        "po2" => Ok(DispatchPolicy::PowerOfTwo),
+        "random" => Ok(DispatchPolicy::Random),
+        "imbalance" => Ok(DispatchPolicy::Imbalance),
+        "least" => Ok(DispatchPolicy::LeastLoad),
+        _ => Err(format!("unknown dispatch '{s}' (expected po2|random|imbalance|least)")),
+    }
+}
+
+pub fn predictor_key(m: PredictorMode) -> &'static str {
+    match m {
+        PredictorMode::Parallel => "parallel",
+        PredictorMode::Sequential => "sequential",
+        PredictorMode::Disabled => "disabled",
+    }
+}
+
+pub fn parse_predictor(s: &str) -> Result<PredictorMode, String> {
+    match s {
+        "parallel" => Ok(PredictorMode::Parallel),
+        "sequential" => Ok(PredictorMode::Sequential),
+        "disabled" => Ok(PredictorMode::Disabled),
+        _ => Err(format!("unknown predictor mode '{s}' (expected parallel|sequential|disabled)")),
+    }
+}
+
+pub fn granularity_key(g: crate::fabric::Granularity) -> &'static str {
+    match g {
+        crate::fabric::Granularity::RequestLevel => "request",
+        crate::fabric::Granularity::ChunkLevel => "chunk",
+    }
+}
+
+pub fn parse_granularity(s: &str) -> Result<crate::fabric::Granularity, String> {
+    match s {
+        "request" => Ok(crate::fabric::Granularity::RequestLevel),
+        "chunk" => Ok(crate::fabric::Granularity::ChunkLevel),
+        _ => Err(format!("unknown transfer granularity '{s}' (expected request|chunk)")),
+    }
+}
+
+// ---------------------------------------------------------------- phases
+
+/// One workload phase of a multi-phase trace (load-shift scenarios like
+/// the §3.5 flip study). Phases draw from a single `WorkloadGen` stream in
+/// order, so a phased scenario is exactly equivalent to the hand-stitched
+/// `gen.trace(..); trace.extend(gen.trace(..))` pattern it replaces.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Phase {
+    pub workload: WorkloadKind,
+    pub requests: usize,
+    pub rate: f64,
+    /// Arrival-process start offset, milliseconds of virtual time.
+    pub start_ms: f64,
+}
+
+// -------------------------------------------------------------- scenario
+
+/// A complete, declarative experiment specification. Equality is
+/// field-wise (`PartialEq`), and `to_json`/`from_json` round-trip to the
+/// identical value — the golden tests pin both properties.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Free-form label echoed into reports and file names.
+    pub name: String,
+    /// Driver registry key: `"tetri"` (disaggregated cluster) or `"vllm"`
+    /// (coupled baseline). See `api::Registry`.
+    pub driver: String,
+    pub workload: WorkloadKind,
+    pub requests: usize,
+    /// Poisson arrivals per second; 0 = batch arrival at t=0.
+    pub rate: f64,
+    /// Driver policy seed (`ClusterConfig::seed` / `BaselineConfig::seed`).
+    /// Keep seeds ≤ 2^53: the JSON spec format carries numbers as f64 and
+    /// `from_json` rejects seeds that would not round-trip exactly.
+    pub seed: u64,
+    /// Workload-generator seed (defaults to `seed` when absent in JSON;
+    /// same ≤ 2^53 bound).
+    pub trace_seed: u64,
+    pub n_prefill: usize,
+    pub n_decode: usize,
+    pub link: LinkSpec,
+    pub prefill_policy: PrefillPolicy,
+    pub decode_policy: DecodePolicy,
+    pub dispatch: DispatchPolicy,
+    pub predictor: PredictorMode,
+    pub predictor_accuracy: f64,
+    pub chunk_size: u32,
+    pub sched_batch: usize,
+    /// TetriInfer's decode continuous-batching cap (tetri driver only —
+    /// the coupled baseline's fixed batch is `prefill_batch`).
+    pub max_batch: u32,
+    /// Instance-flip idle threshold in ms; `None` disables flipping.
+    pub flip_idle_ms: Option<f64>,
+    /// KV transfer granularity (§3.3.4 ablation).
+    pub transfer: crate::fabric::Granularity,
+    /// SRTF preemptive chunk assembly (§3.3.1 future-work ablation).
+    pub srtf_chunking: bool,
+    /// The coupled baseline's fixed batch size for *both* phases
+    /// (vllm driver only; paper §5.2.1 uses 16).
+    pub prefill_batch: usize,
+    /// Override the per-instance KV pool in bytes (memory-pressure
+    /// scenarios); `None` = calibrated CostModel default.
+    pub hbm_kv_bytes: Option<f64>,
+    /// Multi-phase trace; when non-empty it replaces
+    /// `workload`/`requests`/`rate` for trace generation.
+    pub phases: Vec<Phase>,
+}
+
+impl Default for Scenario {
+    /// Paper defaults — identical to a bare `tetri sim` invocation and to
+    /// `ClusterConfig::default()`.
+    fn default() -> Self {
+        Scenario {
+            name: String::new(),
+            driver: "tetri".to_string(),
+            workload: WorkloadKind::Mixed,
+            requests: 128,
+            rate: 0.0,
+            seed: 0,
+            trace_seed: 0,
+            n_prefill: 1,
+            n_decode: 1,
+            link: LinkSpec::Roce,
+            prefill_policy: PrefillPolicy::Sjf,
+            decode_policy: DecodePolicy::ReserveDynamic,
+            dispatch: DispatchPolicy::PowerOfTwo,
+            predictor: PredictorMode::Parallel,
+            predictor_accuracy: 0.749,
+            chunk_size: 512,
+            sched_batch: 16,
+            max_batch: 128,
+            flip_idle_ms: Some(60_000.0),
+            transfer: crate::fabric::Granularity::RequestLevel,
+            srtf_chunking: false,
+            prefill_batch: 16,
+            hbm_kv_bytes: None,
+            phases: Vec::new(),
+        }
+    }
+}
+
+/// Every key the JSON spec format accepts (unknown keys are rejected so
+/// typos can't silently revert a knob to its default).
+const KNOWN_KEYS: &[&str] = &[
+    "name",
+    "driver",
+    "workload",
+    "requests",
+    "rate",
+    "seed",
+    "trace_seed",
+    "n_prefill",
+    "n_decode",
+    "link",
+    "prefill_policy",
+    "decode_policy",
+    "dispatch",
+    "predictor",
+    "predictor_accuracy",
+    "chunk_size",
+    "sched_batch",
+    "max_batch",
+    "flip_idle_ms",
+    "transfer",
+    "srtf_chunking",
+    "prefill_batch",
+    "hbm_kv_bytes",
+    "phases",
+];
+
+const PHASE_KEYS: &[&str] = &["workload", "requests", "rate", "start_ms"];
+
+fn want_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    j.as_str().ok_or_else(|| format!("spec key '{key}' must be a string"))
+}
+
+fn want_num(j: &Json, key: &str) -> Result<f64, String> {
+    j.as_f64().ok_or_else(|| format!("spec key '{key}' must be a number"))
+}
+
+fn want_bool(j: &Json, key: &str) -> Result<bool, String> {
+    match j {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(format!("spec key '{key}' must be a boolean")),
+    }
+}
+
+/// Seeds travel through JSON as f64, which represents integers exactly
+/// only below 2^53 — and a too-large literal silently *rounds* during
+/// parsing (2^53 + 1 parses as 2^53), so by the time we see the value the
+/// damage is done. Rejecting everything ≥ 2^53 therefore also rejects
+/// every literal that could have been corrupted; the spec/flag
+/// bit-identity guarantee depends on seeds surviving the trip.
+fn want_seed(j: &Json, key: &str) -> Result<u64, String> {
+    let x = want_num(j, key)?;
+    const LIMIT: f64 = 9_007_199_254_740_992.0; // 2^53
+    if !(0.0..LIMIT).contains(&x) || x.fract() != 0.0 {
+        return Err(format!(
+            "spec key '{key}' must be an integer in [0, 2^53) (JSON numbers are f64; \
+             larger seeds would not round-trip exactly)"
+        ));
+    }
+    Ok(x as u64)
+}
+
+impl Scenario {
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder { sc: Scenario::default() }
+    }
+
+    // ------------------------------------------------------------- trace
+
+    /// Generate this scenario's request trace (deterministic in
+    /// `trace_seed`; bit-identical to the legacy hand-rolled
+    /// `WorkloadGen::new(seed).trace(..)` call sites).
+    pub fn trace(&self) -> Vec<Request> {
+        let mut gen = WorkloadGen::new(self.trace_seed);
+        if self.phases.is_empty() {
+            return gen.trace(self.workload, self.requests, self.rate, 0);
+        }
+        let mut out = Vec::new();
+        for ph in &self.phases {
+            out.extend(gen.trace(
+                ph.workload,
+                ph.requests,
+                ph.rate,
+                (ph.start_ms * 1e3) as Us,
+            ));
+        }
+        out
+    }
+
+    /// Total requests across phases (or the flat `requests` count).
+    pub fn total_requests(&self) -> usize {
+        if self.phases.is_empty() {
+            self.requests
+        } else {
+            self.phases.iter().map(|p| p.requests).sum()
+        }
+    }
+
+    /// Clamp the scenario to at most `n` requests (per phase) — the smoke
+    /// mode `scripts/check.sh` uses to keep spec files runnable in CI
+    /// without paying full-size runs.
+    pub fn clamp_requests(&mut self, n: usize) {
+        self.requests = self.requests.min(n);
+        for ph in &mut self.phases {
+            ph.requests = ph.requests.min(n);
+        }
+    }
+
+    // ----------------------------------------------------------- configs
+
+    /// Resolve to the disaggregated cluster's config.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        let mut cost = CostModel::default();
+        if let Some(bytes) = self.hbm_kv_bytes {
+            cost.hbm_kv_bytes = bytes;
+        }
+        ClusterConfig {
+            n_prefill: self.n_prefill,
+            n_decode: self.n_decode,
+            chunk_size: self.chunk_size,
+            prefill_policy: self.prefill_policy,
+            sched_batch: self.sched_batch,
+            srtf_chunking: self.srtf_chunking,
+            dispatch: self.dispatch,
+            decode_policy: self.decode_policy,
+            max_batch: self.max_batch,
+            link: self.link.to_link(),
+            transfer_granularity: self.transfer,
+            predictor_mode: self.predictor,
+            predictor_accuracy: self.predictor_accuracy,
+            flip: self.flip_idle_ms.map(|ms| FlipConfig {
+                idle_us: (ms * 1e3) as Us,
+                ..Default::default()
+            }),
+            cost,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    /// Resolve to the coupled baseline's config. The instance count
+    /// follows the paper's §5.1 fairness convention: one coupled instance
+    /// per disaggregated prefill+decode *pair*, i.e.
+    /// `min(n_prefill, n_decode).max(1)`. `prefill_batch` is vanilla
+    /// vLLM's *fixed batch size for both phases* (§5.2.1), so it caps the
+    /// baseline's decode window too; `max_batch` is the TetriInfer decode
+    /// cap and does not apply here (see the field docs).
+    pub fn baseline_config(&self) -> BaselineConfig {
+        let mut cost = CostModel::default();
+        if let Some(bytes) = self.hbm_kv_bytes {
+            cost.hbm_kv_bytes = bytes;
+        }
+        BaselineConfig {
+            n_instances: self.n_prefill.min(self.n_decode).max(1),
+            prefill_batch: self.prefill_batch,
+            max_batch: self.prefill_batch as u32,
+            cost,
+            seed: self.seed,
+        }
+    }
+
+    /// The coupled-baseline counterpart of this scenario (same trace and
+    /// seeds, `vllm` driver) — what `tetri sim` runs for its comparison
+    /// rows.
+    pub fn baseline_counterpart(&self) -> Scenario {
+        Scenario { driver: "vllm".to_string(), ..self.clone() }
+    }
+
+    // -------------------------------------------------------------- runs
+
+    /// Resolve the driver from the builtin registry and run to completion
+    /// with no observer attached.
+    pub fn run(&self) -> Result<super::Report, String> {
+        self.run_with(&mut super::NullObserver)
+    }
+
+    /// Resolve the driver and run with `obs` attached. Errors only on an
+    /// unknown driver key.
+    pub fn run_with(&self, obs: &mut dyn super::Observer) -> Result<super::Report, String> {
+        let driver = super::Registry::builtin().resolve(self)?;
+        let trace = self.trace();
+        Ok(driver.run(&trace, obs))
+    }
+
+    // -------------------------------------------------------------- json
+
+    /// Canonical JSON form: every key, in the spec's vocabulary.
+    /// `Json::parse(s).and_then(Scenario::from_json)` returns the
+    /// identical value (round-trip-tested).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("name", Json::from(self.name.clone())),
+            ("driver", Json::from(self.driver.clone())),
+            ("workload", Json::from(self.workload.name())),
+            ("requests", Json::from(self.requests)),
+            ("rate", Json::from(self.rate)),
+            ("seed", Json::from(self.seed)),
+            ("trace_seed", Json::from(self.trace_seed)),
+            ("n_prefill", Json::from(self.n_prefill)),
+            ("n_decode", Json::from(self.n_decode)),
+            ("link", Json::from(self.link.key())),
+            ("prefill_policy", Json::from(prefill_policy_key(self.prefill_policy))),
+            ("decode_policy", Json::from(decode_policy_key(self.decode_policy))),
+            ("dispatch", Json::from(dispatch_key(self.dispatch))),
+            ("predictor", Json::from(predictor_key(self.predictor))),
+            ("predictor_accuracy", Json::from(self.predictor_accuracy)),
+            ("chunk_size", Json::from(u64::from(self.chunk_size))),
+            ("sched_batch", Json::from(self.sched_batch)),
+            ("max_batch", Json::from(u64::from(self.max_batch))),
+            (
+                "flip_idle_ms",
+                self.flip_idle_ms.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("transfer", Json::from(granularity_key(self.transfer))),
+            ("srtf_chunking", Json::from(self.srtf_chunking)),
+            ("prefill_batch", Json::from(self.prefill_batch)),
+            (
+                "hbm_kv_bytes",
+                self.hbm_kv_bytes.map(Json::from).unwrap_or(Json::Null),
+            ),
+        ];
+        if !self.phases.is_empty() {
+            let phases: Vec<Json> = self
+                .phases
+                .iter()
+                .map(|p| {
+                    Json::obj([
+                        ("workload", Json::from(p.workload.name())),
+                        ("requests", Json::from(p.requests)),
+                        ("rate", Json::from(p.rate)),
+                        ("start_ms", Json::from(p.start_ms)),
+                    ])
+                })
+                .collect();
+            pairs.push(("phases", Json::from(phases)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse a spec object. Missing keys take the paper defaults
+    /// (`trace_seed` defaults to `seed`); unknown keys and bad value
+    /// spellings are errors.
+    pub fn from_json(j: &Json) -> Result<Scenario, String> {
+        let obj = j.as_obj().ok_or("scenario spec must be a JSON object")?;
+        for key in obj.keys() {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown spec key '{key}' (known: {})",
+                    KNOWN_KEYS.join(", ")
+                ));
+            }
+        }
+        let mut sc = Scenario::default();
+        let mut saw_trace_seed = false;
+        for (key, v) in obj {
+            match key.as_str() {
+                "name" => sc.name = want_str(v, key)?.to_string(),
+                "driver" => sc.driver = want_str(v, key)?.to_string(),
+                "workload" => sc.workload = parse_workload(want_str(v, key)?)?,
+                "requests" => sc.requests = want_num(v, key)? as usize,
+                "rate" => sc.rate = want_num(v, key)?,
+                "seed" => sc.seed = want_seed(v, key)?,
+                "trace_seed" => {
+                    sc.trace_seed = want_seed(v, key)?;
+                    saw_trace_seed = true;
+                }
+                "n_prefill" => sc.n_prefill = want_num(v, key)? as usize,
+                "n_decode" => sc.n_decode = want_num(v, key)? as usize,
+                "link" => sc.link = parse_link(want_str(v, key)?)?,
+                "prefill_policy" => sc.prefill_policy = parse_prefill_policy(want_str(v, key)?)?,
+                "decode_policy" => sc.decode_policy = parse_decode_policy(want_str(v, key)?)?,
+                "dispatch" => sc.dispatch = parse_dispatch(want_str(v, key)?)?,
+                "predictor" => sc.predictor = parse_predictor(want_str(v, key)?)?,
+                "predictor_accuracy" => sc.predictor_accuracy = want_num(v, key)?,
+                "chunk_size" => sc.chunk_size = want_num(v, key)? as u32,
+                "sched_batch" => sc.sched_batch = want_num(v, key)? as usize,
+                "max_batch" => sc.max_batch = want_num(v, key)? as u32,
+                "flip_idle_ms" => {
+                    sc.flip_idle_ms = match v {
+                        Json::Null => None,
+                        _ => Some(want_num(v, key)?),
+                    }
+                }
+                "transfer" => sc.transfer = parse_granularity(want_str(v, key)?)?,
+                "srtf_chunking" => sc.srtf_chunking = want_bool(v, key)?,
+                "prefill_batch" => sc.prefill_batch = want_num(v, key)? as usize,
+                "hbm_kv_bytes" => {
+                    sc.hbm_kv_bytes = match v {
+                        Json::Null => None,
+                        _ => Some(want_num(v, key)?),
+                    }
+                }
+                "phases" => {
+                    let arr = v.as_arr().ok_or("spec key 'phases' must be an array")?;
+                    for pj in arr {
+                        let pobj = pj.as_obj().ok_or("each phase must be a JSON object")?;
+                        for pk in pobj.keys() {
+                            if !PHASE_KEYS.contains(&pk.as_str()) {
+                                return Err(format!(
+                                    "unknown phase key '{pk}' (known: {})",
+                                    PHASE_KEYS.join(", ")
+                                ));
+                            }
+                        }
+                        let workload = parse_workload(want_str(
+                            pj.get("workload").ok_or("phase missing 'workload'")?,
+                            "workload",
+                        )?)?;
+                        let requests = want_num(
+                            pj.get("requests").ok_or("phase missing 'requests'")?,
+                            "requests",
+                        )? as usize;
+                        let rate = pj.get("rate").map(|x| want_num(x, "rate")).transpose()?.unwrap_or(0.0);
+                        let start_ms = pj
+                            .get("start_ms")
+                            .map(|x| want_num(x, "start_ms"))
+                            .transpose()?
+                            .unwrap_or(0.0);
+                        sc.phases.push(Phase { workload, requests, rate, start_ms });
+                    }
+                }
+                _ => unreachable!("key checked against KNOWN_KEYS above"),
+            }
+        }
+        if !saw_trace_seed {
+            sc.trace_seed = sc.seed;
+        }
+        Ok(sc)
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn from_str(s: &str) -> Result<Scenario, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        Scenario::from_json(&j)
+    }
+
+    /// Load a spec file. The file name (minus `.json`) becomes the
+    /// scenario name when the spec doesn't set one.
+    pub fn load(path: &str) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read spec {path}: {e}"))?;
+        let mut sc = Scenario::from_str(&text).map_err(|e| format!("{path}: {e}"))?;
+        if sc.name.is_empty() {
+            sc.name = std::path::Path::new(path)
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("scenario")
+                .to_string();
+        }
+        Ok(sc)
+    }
+
+    /// One line with every resolved knob — printed at `tetri sim` startup
+    /// so any run is reproducible from its log.
+    pub fn summary_line(&self) -> String {
+        let phases = if self.phases.is_empty() {
+            format!("workload={} n={} rate={}/s", self.workload.name(), self.requests, self.rate)
+        } else {
+            let parts: Vec<String> = self
+                .phases
+                .iter()
+                .map(|p| format!("{}x{}@{}/s+{}ms", p.workload.name(), p.requests, p.rate, p.start_ms))
+                .collect();
+            format!("phases=[{}]", parts.join(","))
+        };
+        format!(
+            "scenario{}: driver={} {} prefill={} decode={} link={} prefill_policy={} \
+             decode_policy={} dispatch={} predictor={} acc={} chunk={} sched_batch={} \
+             max_batch={} flip_idle_ms={} transfer={} srtf={} prefill_batch={} \
+             hbm_kv_bytes={} seed={} trace_seed={}",
+            if self.name.is_empty() { String::new() } else { format!(" '{}'", self.name) },
+            self.driver,
+            phases,
+            self.n_prefill,
+            self.n_decode,
+            self.link.key(),
+            prefill_policy_key(self.prefill_policy),
+            decode_policy_key(self.decode_policy),
+            dispatch_key(self.dispatch),
+            predictor_key(self.predictor),
+            self.predictor_accuracy,
+            self.chunk_size,
+            self.sched_batch,
+            self.max_batch,
+            self.flip_idle_ms.map(|ms| ms.to_string()).unwrap_or_else(|| "off".into()),
+            granularity_key(self.transfer),
+            self.srtf_chunking,
+            self.prefill_batch,
+            self.hbm_kv_bytes.map(|b| b.to_string()).unwrap_or_else(|| "default".into()),
+            self.seed,
+            self.trace_seed,
+        )
+    }
+}
+
+// --------------------------------------------------------------- builder
+
+/// Fluent construction of a [`Scenario`] starting from paper defaults.
+/// `seed(s)` sets both the policy seed and the trace seed (the common
+/// case); use `trace_seed` after it to split them.
+#[derive(Clone, Debug)]
+pub struct ScenarioBuilder {
+    sc: Scenario,
+}
+
+impl ScenarioBuilder {
+    pub fn name(mut self, v: &str) -> Self {
+        self.sc.name = v.to_string();
+        self
+    }
+
+    pub fn driver(mut self, v: &str) -> Self {
+        self.sc.driver = v.to_string();
+        self
+    }
+
+    pub fn workload(mut self, v: WorkloadKind) -> Self {
+        self.sc.workload = v;
+        self
+    }
+
+    pub fn requests(mut self, v: usize) -> Self {
+        self.sc.requests = v;
+        self
+    }
+
+    pub fn rate(mut self, v: f64) -> Self {
+        self.sc.rate = v;
+        self
+    }
+
+    /// Sets both the policy seed and the trace seed.
+    pub fn seed(mut self, v: u64) -> Self {
+        self.sc.seed = v;
+        self.sc.trace_seed = v;
+        self
+    }
+
+    pub fn trace_seed(mut self, v: u64) -> Self {
+        self.sc.trace_seed = v;
+        self
+    }
+
+    pub fn topology(mut self, n_prefill: usize, n_decode: usize) -> Self {
+        self.sc.n_prefill = n_prefill;
+        self.sc.n_decode = n_decode;
+        self
+    }
+
+    pub fn link(mut self, v: LinkSpec) -> Self {
+        self.sc.link = v;
+        self
+    }
+
+    pub fn prefill_policy(mut self, v: PrefillPolicy) -> Self {
+        self.sc.prefill_policy = v;
+        self
+    }
+
+    pub fn decode_policy(mut self, v: DecodePolicy) -> Self {
+        self.sc.decode_policy = v;
+        self
+    }
+
+    pub fn dispatch(mut self, v: DispatchPolicy) -> Self {
+        self.sc.dispatch = v;
+        self
+    }
+
+    pub fn predictor(mut self, v: PredictorMode) -> Self {
+        self.sc.predictor = v;
+        self
+    }
+
+    pub fn predictor_accuracy(mut self, v: f64) -> Self {
+        self.sc.predictor_accuracy = v;
+        self
+    }
+
+    pub fn chunk_size(mut self, v: u32) -> Self {
+        self.sc.chunk_size = v;
+        self
+    }
+
+    pub fn sched_batch(mut self, v: usize) -> Self {
+        self.sc.sched_batch = v;
+        self
+    }
+
+    pub fn max_batch(mut self, v: u32) -> Self {
+        self.sc.max_batch = v;
+        self
+    }
+
+    pub fn flip_idle_ms(mut self, v: Option<f64>) -> Self {
+        self.sc.flip_idle_ms = v;
+        self
+    }
+
+    pub fn transfer(mut self, v: crate::fabric::Granularity) -> Self {
+        self.sc.transfer = v;
+        self
+    }
+
+    pub fn srtf_chunking(mut self, v: bool) -> Self {
+        self.sc.srtf_chunking = v;
+        self
+    }
+
+    pub fn prefill_batch(mut self, v: usize) -> Self {
+        self.sc.prefill_batch = v;
+        self
+    }
+
+    pub fn hbm_kv_bytes(mut self, v: Option<f64>) -> Self {
+        self.sc.hbm_kv_bytes = v;
+        self
+    }
+
+    pub fn phase(mut self, workload: WorkloadKind, requests: usize, rate: f64, start_ms: f64) -> Self {
+        self.sc.phases.push(Phase { workload, requests, rate, start_ms });
+        self
+    }
+
+    pub fn build(self) -> Scenario {
+        self.sc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_round_trips_through_json() {
+        let sc = Scenario::default();
+        let s = sc.to_json().dump();
+        assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+    }
+
+    #[test]
+    fn exotic_scenario_round_trips() {
+        let sc = Scenario::builder()
+            .name("fig-x")
+            .driver("vllm")
+            .workload(WorkloadKind::Hphd)
+            .requests(7)
+            .rate(3.25)
+            .seed(99)
+            .trace_seed(7)
+            .topology(2, 4)
+            .link(LinkSpec::Socket)
+            .prefill_policy(PrefillPolicy::Ljf)
+            .decode_policy(DecodePolicy::Greedy)
+            .dispatch(DispatchPolicy::Imbalance)
+            .predictor(PredictorMode::Sequential)
+            .predictor_accuracy(1.0)
+            .chunk_size(256)
+            .sched_batch(32)
+            .max_batch(64)
+            .flip_idle_ms(None)
+            .transfer(crate::fabric::Granularity::ChunkLevel)
+            .srtf_chunking(true)
+            .prefill_batch(8)
+            .hbm_kv_bytes(Some(2e9))
+            .phase(WorkloadKind::Hpld, 64, 16.0, 0.0)
+            .phase(WorkloadKind::Lphd, 96, 16.0, 8_000.0)
+            .build();
+        let s = sc.to_json().dump();
+        assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+    }
+
+    #[test]
+    fn unknown_keys_and_values_are_rejected() {
+        assert!(Scenario::from_str(r#"{"dispach": "po2"}"#).is_err());
+        assert!(Scenario::from_str(r#"{"dispatch": "typo"}"#).is_err());
+        assert!(Scenario::from_str(r#"{"workload": "XXXX"}"#).is_err());
+        assert!(Scenario::from_str(r#"{"link": "infiniband"}"#).is_err());
+        assert!(Scenario::from_str(r#"{"requests": "many"}"#).is_err());
+        assert!(Scenario::from_str(r#"{"phases": [{"workload": "LPLD"}]}"#).is_err());
+        assert!(Scenario::from_str(r#"{"phases": [{"workload": "LPLD", "requests": 4, "rat": 1}]}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn seeds_beyond_f64_precision_are_rejected() {
+        // largest exactly-representable-and-safe seed: 2^53 - 1
+        assert!(Scenario::from_str(r#"{"seed": 9007199254740991}"#).is_ok());
+        // 2^53 is rejected: 2^53 + 1 parses (rounded) to the same f64, so
+        // accepting it would let corrupted literals through undetected
+        assert!(Scenario::from_str(r#"{"seed": 9007199254740992}"#).is_err());
+        assert!(Scenario::from_str(r#"{"seed": 9007199254740993}"#).is_err());
+        assert!(Scenario::from_str(r#"{"trace_seed": 1e300}"#).is_err());
+        assert!(Scenario::from_str(r#"{"seed": -1}"#).is_err());
+        assert!(Scenario::from_str(r#"{"seed": 1.5}"#).is_err());
+    }
+
+    #[test]
+    fn trace_seed_defaults_to_seed() {
+        let sc = Scenario::from_str(r#"{"seed": 42}"#).unwrap();
+        assert_eq!(sc.trace_seed, 42);
+        let sc = Scenario::from_str(r#"{"seed": 42, "trace_seed": 7}"#).unwrap();
+        assert_eq!(sc.trace_seed, 7);
+    }
+
+    #[test]
+    fn phased_trace_matches_hand_stitched_generation() {
+        let sc = Scenario::builder()
+            .seed(42)
+            .phase(WorkloadKind::Hpld, 16, 16.0, 0.0)
+            .phase(WorkloadKind::Lphd, 24, 16.0, 8_000.0)
+            .build();
+        let got = sc.trace();
+        let mut gen = WorkloadGen::new(42);
+        let mut want = gen.trace(WorkloadKind::Hpld, 16, 16.0, 0);
+        want.extend(gen.trace(WorkloadKind::Lphd, 24, 16.0, 8_000_000));
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_eq!(
+                (a.id, a.arrival, a.prompt_len, a.decode_len),
+                (b.id, b.arrival, b.prompt_len, b.decode_len)
+            );
+        }
+        assert_eq!(sc.total_requests(), 40);
+    }
+
+    #[test]
+    fn configs_mirror_legacy_defaults() {
+        let sc = Scenario::default();
+        let c = sc.cluster_config();
+        let d = ClusterConfig::default();
+        assert_eq!(c.n_prefill, d.n_prefill);
+        assert_eq!(c.chunk_size, d.chunk_size);
+        assert_eq!(c.prefill_policy, d.prefill_policy);
+        assert_eq!(c.decode_policy, d.decode_policy);
+        assert_eq!(c.dispatch, d.dispatch);
+        assert_eq!(c.predictor_mode, d.predictor_mode);
+        assert_eq!(c.flip.unwrap().idle_us, d.flip.unwrap().idle_us);
+        let b = sc.baseline_config();
+        assert_eq!(b.n_instances, 1);
+        assert_eq!(b.prefill_batch, 16);
+        assert_eq!(b.max_batch, 16, "baseline fixed batch follows prefill_batch");
+    }
+
+    #[test]
+    fn clamp_requests_applies_to_phases_too() {
+        let mut sc = Scenario::builder()
+            .requests(128)
+            .phase(WorkloadKind::Lpld, 64, 0.0, 0.0)
+            .phase(WorkloadKind::Lphd, 4, 0.0, 0.0)
+            .build();
+        sc.clamp_requests(8);
+        assert_eq!(sc.requests, 8);
+        assert_eq!(sc.phases[0].requests, 8);
+        assert_eq!(sc.phases[1].requests, 4);
+    }
+
+    #[test]
+    fn summary_line_mentions_every_knob_family() {
+        let line = Scenario::default().summary_line();
+        for needle in
+            ["driver=", "workload=", "prefill=", "link=", "dispatch=", "seed=", "flip_idle_ms="]
+        {
+            assert!(line.contains(needle), "summary missing {needle}: {line}");
+        }
+    }
+}

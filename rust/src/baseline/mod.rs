@@ -16,6 +16,7 @@
 
 use std::collections::VecDeque;
 
+use crate::api::{NullObserver, Observer};
 use crate::costmodel::CostModel;
 use crate::decode::{DecodeJob, DecodePolicy, DecodeScheduler};
 use crate::kvcache::PagedKvCache;
@@ -123,7 +124,15 @@ impl BaselineCluster {
         }
     }
 
-    pub fn run(mut self, trace: Vec<Request>) -> RunMetrics {
+    pub fn run(self, trace: Vec<Request>) -> RunMetrics {
+        self.run_observed(trace, &mut NullObserver)
+    }
+
+    /// Run a trace to completion, streaming per-event hooks to `obs`
+    /// (the coupled baseline fires arrival/chunk/decode-iter/finish; it
+    /// has no fabric, monitor, or flips). Metrics are bit-identical to
+    /// `run` whatever the observer does.
+    pub fn run_observed(mut self, trace: Vec<Request>, obs: &mut dyn Observer) -> RunMetrics {
         self.outstanding = trace.len();
         self.arrivals_pending = trace.len();
         self.requests = trace
@@ -140,8 +149,8 @@ impl BaselineCluster {
             };
             self.metrics.events += 1;
             match ev {
-                Event::Arrival(slot) => self.on_arrival(slot),
-                Event::CoupledIterDone { instance } => self.on_iter_done(instance),
+                Event::Arrival(slot) => self.on_arrival(slot, obs),
+                Event::CoupledIterDone { instance } => self.on_iter_done(instance, obs),
                 _ => unreachable!("unexpected event in baseline"),
             }
         }
@@ -155,7 +164,11 @@ impl BaselineCluster {
         self.metrics
     }
 
-    fn on_arrival(&mut self, slot: ReqId) {
+    fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        {
+            let req = self.requests[slot as usize].req;
+            obs.on_arrival(self.queue.now(), &req);
+        }
         // Least-loaded coupled instance (waiting prompts + resident jobs)
         // — O(n_instances) over maintained counters.
         let i = (0..self.insts.len())
@@ -172,14 +185,14 @@ impl BaselineCluster {
         if self.arrivals_pending == 0 {
             // last arrival: partial batches may now run everywhere
             for j in 0..self.insts.len() {
-                self.try_start(j);
+                self.try_start(j, obs);
             }
         } else {
-            self.try_start(i);
+            self.try_start(i, obs);
         }
     }
 
-    fn try_start(&mut self, i: usize) {
+    fn try_start(&mut self, i: usize, obs: &mut dyn Observer) {
         let cost = self.cfg.cost;
         let prefill_batch = self.cfg.prefill_batch;
         // May a partial prefill batch run? Only when no future arrival
@@ -233,25 +246,28 @@ impl BaselineCluster {
         for k in 0..inst.pending.0.len() {
             let slot = inst.pending.0[k];
             let st = &self.requests[slot as usize];
-            let mut job = DecodeJob::new(
-                ReqMeta {
-                    id: slot,
-                    task: st.req.task,
-                    arrival: st.req.arrival,
-                    prompt_len: st.req.prompt_len,
-                    predicted: st.req.predicted,
-                },
-                st.req.decode_len,
-            );
+            // scheduler-facing meta keyed by the arena slot, not the
+            // original request id
+            let meta = ReqMeta { id: slot, ..st.req.meta() };
+            let mut job = DecodeJob::new(meta, st.req.decode_len);
             job.generated = 1;
             inst.dec.inject_running(job);
         }
         inst.busy = true;
         self.metrics.busy_us[i] += dur;
         self.queue.schedule_in(dur, Event::CoupledIterDone { instance: i });
+        // One mixed iteration = a prefill side and a decode side sharing
+        // `dur`: report whichever sides are non-empty.
+        let now = self.queue.now();
+        if prefill_tokens > 0 {
+            obs.on_chunk(now, i, prefill_tokens, 0, dur);
+        }
+        if batch > 0 {
+            obs.on_decode_iter(now, i, batch, kv_tokens, dur);
+        }
     }
 
-    fn on_iter_done(&mut self, i: usize) {
+    fn on_iter_done(&mut self, i: usize, obs: &mut dyn Observer) {
         let now = self.queue.now();
         let (mut prefilled, mut done) = {
             let inst = &mut self.insts[i];
@@ -269,21 +285,21 @@ impl BaselineCluster {
                 if inst.dec.remove_running(slot).is_some() {
                     inst.kv.release(slot);
                 }
-                self.finish(slot, now);
+                self.finish(slot, now, obs);
             }
         }
         for slot in done.drain(..) {
-            self.finish(slot, now);
+            self.finish(slot, now, obs);
         }
         // hand the buffers back so the next iteration reuses their capacity
         self.insts[i].pending = (prefilled, done);
-        self.try_start(i);
+        self.try_start(i, obs);
     }
 
-    fn finish(&mut self, slot: ReqId, now: Us) {
+    fn finish(&mut self, slot: ReqId, now: Us, obs: &mut dyn Observer) {
         let st = &self.requests[slot as usize];
         let first = if st.first_token == NO_TIME { now } else { st.first_token };
-        self.metrics.records.push(RequestRecord {
+        let rec = RequestRecord {
             id: st.req.id,
             task: st.req.task,
             prompt_len: st.req.prompt_len,
@@ -292,7 +308,9 @@ impl BaselineCluster {
             first_token: first,
             finished: now,
             predicted: None,
-        });
+        };
+        obs.on_finish(now, &rec);
+        self.metrics.records.push(rec);
         self.outstanding -= 1;
     }
 }
@@ -305,8 +323,14 @@ fn paged_in_swapped(paged_in: u64, dec: &DecodeScheduler) -> u64 {
     }
 }
 
+/// Convenience: run a trace through the coupled-baseline driver (the same
+/// `api::Driver` the scenario registry resolves for `"vllm"`), with no
+/// observer attached.
 pub fn run_baseline(cfg: BaselineConfig, trace: Vec<Request>) -> RunMetrics {
-    BaselineCluster::new(cfg).run(trace)
+    use crate::api::Driver as _;
+    crate::api::BaselineDriver::from_config(cfg)
+        .run(&trace, &mut NullObserver)
+        .metrics
 }
 
 #[cfg(test)]

@@ -20,6 +20,7 @@
 //! served from a dirty-tracked cache, and the monitor tick reuses its
 //! `broadcast`/`since_tick` buffers instead of reallocating them.
 
+use crate::api::{NullObserver, Observer};
 use crate::decode::{DecodeJob, DecodeScheduler};
 use crate::fabric::Fabric;
 use crate::kvcache::PagedKvCache;
@@ -54,6 +55,9 @@ struct ReqState {
     /// and back while the KV is in flight (a reborn incarnation must not
     /// have a stale release land on its counter).
     prefilled_by: Option<(usize, u32)>,
+    /// The arrival event fired at least once (mid-flip retries re-enqueue
+    /// `Event::Arrival`; observers must see one arrival per request).
+    seen: bool,
 }
 
 struct PrefillInst {
@@ -128,8 +132,6 @@ pub struct Cluster {
     pending_dispatch: Vec<ReqId>,
     /// Requests remaining (termination condition).
     outstanding: usize,
-    pub total_chunks: u64,
-    pub total_pad_tokens: u64,
 }
 
 impl Cluster {
@@ -173,20 +175,25 @@ impl Cluster {
             },
             pending_dispatch: Vec::new(),
             outstanding: 0,
-            total_chunks: 0,
-            total_pad_tokens: 0,
         }
     }
 
     /// Run a trace to completion; returns final metrics.
-    pub fn run(mut self, trace: Vec<Request>) -> RunMetrics {
+    pub fn run(self, trace: Vec<Request>) -> RunMetrics {
+        self.run_observed(trace, &mut NullObserver)
+    }
+
+    /// Run a trace to completion, streaming per-event hooks to `obs`.
+    /// The observer never influences the run: metrics are bit-identical
+    /// to `run` (golden-tested through `api::Scenario`).
+    pub fn run_observed(mut self, trace: Vec<Request>, obs: &mut dyn Observer) -> RunMetrics {
         self.outstanding = trace.len();
         // Renumber the trace into dense arena slots: all internal ids
         // (events, KV tables, queues) are slots from here on; the original
         // request id resurfaces only in the final RequestRecord.
         self.requests = trace
             .into_iter()
-            .map(|req| ReqState { req, first_token: NO_TIME, prefilled_by: None })
+            .map(|req| ReqState { req, first_token: NO_TIME, prefilled_by: None, seen: false })
             .collect();
         for slot in 0..self.requests.len() {
             self.queue
@@ -203,7 +210,7 @@ impl Cluster {
                 );
             };
             self.metrics.events += 1;
-            self.handle(ev);
+            self.handle(ev, obs);
         }
         let now = self.queue.now();
         self.metrics.makespan_us = now;
@@ -218,14 +225,14 @@ impl Cluster {
         self.metrics
     }
 
-    fn handle(&mut self, ev: Event) {
+    fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {
         match ev {
-            Event::Arrival(slot) => self.on_arrival(slot),
-            Event::PredictDone { instance, req } => self.on_predict_done(instance, req),
-            Event::PrefillIterDone { instance } => self.on_prefill_done(instance),
-            Event::TransferDone { instance, req } => self.on_transfer_done(instance, req),
-            Event::DecodeIterDone { instance } => self.on_decode_done(instance),
-            Event::MonitorTick => self.on_monitor_tick(),
+            Event::Arrival(slot) => self.on_arrival(slot, obs),
+            Event::PredictDone { instance, req } => self.on_predict_done(instance, req, obs),
+            Event::PrefillIterDone { instance } => self.on_prefill_done(instance, obs),
+            Event::TransferDone { instance, req } => self.on_transfer_done(instance, req, obs),
+            Event::DecodeIterDone { instance } => self.on_decode_done(instance, obs),
+            Event::MonitorTick => self.on_monitor_tick(obs),
             Event::FlipDone { instance } => self.on_flip_done(instance),
             Event::CoupledIterDone { .. } => unreachable!("coupled events belong to the baseline"),
         }
@@ -305,7 +312,12 @@ impl Cluster {
 
     // ----------------------------------------------------------- arrival
 
-    fn on_arrival(&mut self, slot: ReqId) {
+    fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        if !self.requests[slot as usize].seen {
+            self.requests[slot as usize].seen = true;
+            let req = self.requests[slot as usize].req;
+            obs.on_arrival(self.queue.now(), &req);
+        }
         let Some(i) = self.pick_prefill() else {
             // No prefill instance right now (all flipped/flipping): retry
             // after a monitor period.
@@ -326,7 +338,7 @@ impl Cluster {
                 p.pending_pred += 1;
                 p.sched.push(meta);
                 self.note_prefill_load_increased(i);
-                self.try_start_prefill(i);
+                self.try_start_prefill(i, obs);
             }
             PredictorMode::Sequential => {
                 let tokens = self.requests[slot as usize].req.prompt_len.min(512);
@@ -337,12 +349,12 @@ impl Cluster {
                 let meta = self.meta_of(slot);
                 self.prefill_mut(i).sched.push(meta);
                 self.note_prefill_load_increased(i);
-                self.try_start_prefill(i);
+                self.try_start_prefill(i, obs);
             }
         }
     }
 
-    fn on_predict_done(&mut self, i: usize, slot: ReqId) {
+    fn on_predict_done(&mut self, i: usize, slot: ReqId, obs: &mut dyn Observer) {
         let dlen = self.requests[slot as usize].req.decode_len;
         let pred = self.predictor.predict(&[], dlen);
         self.requests[slot as usize].req.predicted = Some(pred);
@@ -350,7 +362,7 @@ impl Cluster {
         if let InstState::Prefill(p) = &mut self.insts[i] {
             p.sched.push(meta);
             self.note_prefill_load_increased(i);
-            self.try_start_prefill(i);
+            self.try_start_prefill(i, obs);
         } else {
             // instance flipped while predicting: re-route
             self.queue.schedule_in(0, Event::Arrival(slot));
@@ -366,7 +378,7 @@ impl Cluster {
         }
     }
 
-    fn try_start_prefill(&mut self, i: usize) {
+    fn try_start_prefill(&mut self, i: usize, obs: &mut dyn Observer) {
         let cap = self.cfg.cost.kv_capacity_tokens();
         let chunk_size = self.cfg.chunk_size;
         let InstState::Prefill(p) = &mut self.insts[i] else { return };
@@ -399,18 +411,18 @@ impl Cluster {
             dur = (dur as f64 * (1.0 + PARALLEL_PREDICT_OVERHEAD)) as Us;
             p.pending_pred = p.pending_pred.saturating_sub(PREDICTIONS_PER_CHUNK);
         }
-        self.total_chunks += 1;
-        self.total_pad_tokens += chunk.pad() as u64;
+        let (tokens, pad) = (chunk.tokens, chunk.pad());
         p.current = Some(chunk);
         p.busy = true;
         p.last_active = self.queue.now();
         self.metrics.busy_us[i] += dur;
         self.queue.schedule_in(dur, Event::PrefillIterDone { instance: i });
+        obs.on_chunk(self.queue.now(), i, tokens, pad, dur);
         // slicing the chunk shrank this instance's pending load
         self.note_prefill_load_decreased(i);
     }
 
-    fn on_prefill_done(&mut self, i: usize) {
+    fn on_prefill_done(&mut self, i: usize, obs: &mut dyn Observer) {
         let now = self.queue.now();
         let chunk = {
             let p = self.prefill_mut(i);
@@ -430,24 +442,24 @@ impl Cluster {
             st.prefilled_by = Some((i, epoch));
             if st.req.decode_len <= 1 {
                 // prefill's own token completes the request
-                self.finish(slot, now);
+                self.finish(slot, now, obs);
                 self.release_prefill_resident(slot);
                 continue;
             }
             // Dispatcher: decentralized inter-decode scheduling over the
             // monitor's last broadcast (§3.3.4).
-            if !self.dispatch_request(slot) {
+            if !self.dispatch_request(slot, obs) {
                 // No decode instance known (mid-flip window): park the
                 // request; the monitor tick retries dispatch.
                 self.pending_dispatch.push(slot);
             }
         }
-        self.try_start_prefill(i);
+        self.try_start_prefill(i, obs);
     }
 
     /// The §3.3.4 dispatch: stale broadcast + own recent sends → α/β split
     /// → power-of-two → least interference; then schedule the KV transfer.
-    fn dispatch_request(&mut self, slot: ReqId) -> bool {
+    fn dispatch_request(&mut self, slot: ReqId, obs: &mut dyn Observer) -> bool {
         let req = self.requests[slot as usize].req;
         // merge broadcast with what we dispatched since the last tick
         // (into the reusable scratch buffer — this runs once per request)
@@ -492,12 +504,13 @@ impl Cluster {
             .fabric
             .exposed_transfer_us(n_chunks, chunk_tokens, chunk_compute);
         self.queue.schedule_in(dur, Event::TransferDone { instance: d, req: slot });
+        obs.on_transfer(self.queue.now(), d, req.id, req.prompt_len, dur);
         true
     }
 
     // ------------------------------------------------------------ decode
 
-    fn on_transfer_done(&mut self, d: usize, slot: ReqId) {
+    fn on_transfer_done(&mut self, d: usize, slot: ReqId, obs: &mut dyn Observer) {
         // KV has left the prefill instance: release backpressure there.
         self.release_prefill_resident(slot);
 
@@ -513,12 +526,12 @@ impl Cluster {
                 let mut job = DecodeJob::new(meta, req.decode_len);
                 job.generated = 1; // prefill produced the first token
                 di.sched.enqueue(job);
-                self.try_start_decode(d);
+                self.try_start_decode(d, obs);
             }
             _ => {
                 // Instance flipped away while the KV was in flight: pick a
                 // new decode instance and pay the transfer again.
-                if !self.dispatch_request(slot) {
+                if !self.dispatch_request(slot, obs) {
                     self.pending_dispatch.push(slot);
                 }
             }
@@ -545,7 +558,7 @@ impl Cluster {
         }
     }
 
-    fn try_start_decode(&mut self, d: usize) {
+    fn try_start_decode(&mut self, d: usize, obs: &mut dyn Observer) {
         let cost = self.cfg.cost;
         let now = self.queue.now();
         let InstState::Decode(di) = &mut self.insts[d] else { return };
@@ -571,9 +584,10 @@ impl Cluster {
         di.last_active = now;
         self.metrics.busy_us[d] += dur;
         self.queue.schedule_in(dur, Event::DecodeIterDone { instance: d });
+        obs.on_decode_iter(now, d, batch, kv_tokens, dur);
     }
 
-    fn on_decode_done(&mut self, d: usize) {
+    fn on_decode_done(&mut self, d: usize, obs: &mut dyn Observer) {
         let now = self.queue.now();
         let mut done = {
             let InstState::Decode(di) = &mut self.insts[d] else { return };
@@ -582,19 +596,19 @@ impl Cluster {
             std::mem::take(&mut di.pending_done)
         };
         for slot in done.drain(..) {
-            self.finish(slot, now);
+            self.finish(slot, now, obs);
         }
         // hand the buffer back so the next iteration reuses its capacity
         if let InstState::Decode(di) = &mut self.insts[d] {
             di.pending_done = done;
         }
-        self.try_start_decode(d);
+        self.try_start_decode(d, obs);
     }
 
-    fn finish(&mut self, slot: ReqId, now: Us) {
+    fn finish(&mut self, slot: ReqId, now: Us, obs: &mut dyn Observer) {
         let st = &self.requests[slot as usize];
         let first = if st.first_token == NO_TIME { now } else { st.first_token };
-        self.metrics.records.push(RequestRecord {
+        let rec = RequestRecord {
             id: st.req.id,
             task: st.req.task,
             prompt_len: st.req.prompt_len,
@@ -603,7 +617,9 @@ impl Cluster {
             first_token: first,
             finished: now,
             predicted: st.req.predicted,
-        });
+        };
+        obs.on_finish(now, &rec);
+        self.metrics.records.push(rec);
         self.outstanding -= 1;
     }
 
@@ -629,12 +645,13 @@ impl Cluster {
         }
     }
 
-    fn on_monitor_tick(&mut self) {
+    fn on_monitor_tick(&mut self, obs: &mut dyn Observer) {
         self.refresh_broadcast();
-        self.maybe_flip();
+        obs.on_monitor(self.queue.now(), &self.broadcast);
+        self.maybe_flip(obs);
         // Retry any dispatches parked while no decode instance existed.
         for slot in std::mem::take(&mut self.pending_dispatch) {
-            if !self.dispatch_request(slot) {
+            if !self.dispatch_request(slot, obs) {
                 self.pending_dispatch.push(slot);
             }
         }
@@ -645,7 +662,7 @@ impl Cluster {
 
     // -------------------------------------------------------------- flip
 
-    fn maybe_flip(&mut self) {
+    fn maybe_flip(&mut self, obs: &mut dyn Observer) {
         let Some(flip) = self.cfg.flip else { return };
         let now = self.queue.now();
         let n_prefill = self
@@ -695,6 +712,7 @@ impl Cluster {
                     self.least_prefill_dirty = true;
                     self.metrics.flips += 1;
                     self.queue.schedule_in(dur, Event::FlipDone { instance: i });
+                    obs.on_flip(now, i, Role::Decode, dur);
                     return; // at most one flip per tick
                 }
                 InstState::Decode(d)
@@ -709,6 +727,7 @@ impl Cluster {
                     self.insts_epoch[i] += 1;
                     self.metrics.flips += 1;
                     self.queue.schedule_in(dur, Event::FlipDone { instance: i });
+                    obs.on_flip(now, i, Role::Prefill, dur);
                     return;
                 }
                 _ => {}
@@ -771,9 +790,14 @@ fn paged_in_swapins(paged_in: u64, sched: &DecodeScheduler) -> u64 {
     }
 }
 
-/// Convenience: build a cluster and run a trace.
+/// Convenience: run a trace through the cluster driver (the same
+/// `api::Driver` the scenario registry resolves for `"tetri"`), with no
+/// observer attached.
 pub fn run_cluster(cfg: ClusterConfig, trace: Vec<Request>) -> RunMetrics {
-    Cluster::new(cfg).run(trace)
+    use crate::api::Driver as _;
+    crate::api::ClusterDriver::from_config(cfg)
+        .run(&trace, &mut NullObserver)
+        .metrics
 }
 
 #[cfg(test)]

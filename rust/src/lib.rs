@@ -12,6 +12,7 @@
 //!    prefill and paged decode attention are Pallas kernels, AOT-lowered to
 //!    HLO text and executed here via the PJRT CPU client (`runtime`).
 
+pub mod api;
 pub mod baseline;
 pub mod coordinator;
 pub mod costmodel;
@@ -34,5 +35,9 @@ pub mod types;
 pub mod util;
 pub mod workload;
 
+pub use api::{
+    Driver, NullObserver, Observer, ProgressObserver, Registry, Report, Scenario,
+    TimelineObserver,
+};
 pub use baseline::{run_baseline, BaselineConfig};
 pub use coordinator::{run_cluster, Cluster, ClusterConfig};

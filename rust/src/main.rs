@@ -1,132 +1,265 @@
 //! `tetri` — TetriInfer launcher.
 //!
 //! Subcommands:
-//!   sim    — run the TetriInfer cluster (and the vLLM baseline) on a
-//!            workload with the calibrated cost model; print TTFT/JCT/
-//!            resource/perf-$ comparisons.
+//!   sim    — run a declarative experiment `Scenario` (flags and/or a JSON
+//!            spec file; both resolve through `tetri_infer::api` and are
+//!            bit-identical) and print TTFT/JCT/resource/perf-$ rows.
 //!   serve  — real mode: load artifacts/ and serve a workload through the
 //!            AOT'd model on the PJRT CPU client.
 //!   info   — print the artifact manifest summary.
 //!
-//! (Hand-rolled arg parsing: no clap in the vendored environment.)
+//! (Hand-rolled arg parsing: no clap in the vendored environment. Unknown
+//! flags and unknown policy spellings are hard errors, never silent
+//! defaults; malformed numbers get a friendly message instead of a
+//! panic.)
 
-use tetri_infer::baseline::{run_baseline, BaselineConfig};
-use tetri_infer::coordinator::{run_cluster, ClusterConfig};
-use tetri_infer::decode::DecodePolicy;
-use tetri_infer::fabric::Link;
-use tetri_infer::prefill::{DispatchPolicy, PrefillPolicy};
+use tetri_infer::api::{
+    parse_decode_policy, parse_dispatch, parse_link, parse_predictor, parse_prefill_policy,
+    parse_workload, Driver as _, NullObserver, Observer, ProgressObserver, Registry, Scenario,
+};
 #[cfg(feature = "pjrt")]
 use tetri_infer::runtime::Engine;
 #[cfg(feature = "pjrt")]
 use tetri_infer::serve::{ServeConfig, Server};
+#[cfg(feature = "pjrt")]
 use tetri_infer::workload::{WorkloadGen, WorkloadKind};
 
 fn usage() -> ! {
     eprintln!(
         "usage: tetri <sim|serve|info> [options]
-  sim options:
-    --workload LPLD|LPHD|HPLD|HPHD|Mixed   (default Mixed)
-    --requests N          (default 128)
-    --rate R              arrivals/s, 0 = batch (default 0)
-    --prefill N --decode N (default 1/1; baseline uses (N+N)/2... see docs)
-    --link nvlink|roce|socket (default roce)
-    --prefill-policy fcfs|sjf|ljf   --decode-policy greedy|rs|rd
-    --dispatch po2|random|imbalance|least
-    --seed S
+  sim options (defaults in parentheses; flags override --spec values):
+    --spec FILE.json      load a scenario spec (see scenarios/)
+    --driver tetri|vllm   system under test (tetri)
+    --workload LPLD|LPHD|HPLD|HPHD|Mixed   (Mixed)
+    --requests N          (128; with a phased spec, caps each phase)
+    --rate R              arrivals/s, 0 = batch (0)
+    --prefill N --decode N   instances (1/1; the vLLM comparison uses
+                          min(prefill,decode) coupled instances — §5.1)
+    --link nvlink|roce|socket (roce)
+    --prefill-policy fcfs|sjf|ljf   (sjf)
+    --decode-policy greedy|rs|rd    (rd)
+    --dispatch po2|random|imbalance|least  (po2)
+    --predictor parallel|sequential|disabled  (parallel)
+    --predictor-accuracy F  (0.749)
+    --chunk-size N        (512)
+    --sched-batch N       (16)
+    --max-batch N         (128)
+    --flip MS|off         flip idle threshold in ms (60000)
+    --seed S              policy + trace seed (0)
+    --trace-seed S        split the trace seed from --seed
+    --name NAME           label echoed into reports
+    --json PATH|-         write the run report (one JSON doc) to PATH
+    --progress            print completion progress to stderr
   serve options:
     --artifacts DIR       (default artifacts)
     --requests N          (default 8)
-    --link nvlink|roce    emulate transfer bandwidth (default: raw)
+    --link nvlink|roce|socket  emulate transfer bandwidth (default: raw)
   info options:
     --artifacts DIR"
     );
     std::process::exit(2)
 }
 
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}\n");
+    usage()
+}
+
 fn arg_val(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
 }
 
-fn parse_kind(s: &str) -> WorkloadKind {
-    match s.to_ascii_uppercase().as_str() {
-        "LPLD" => WorkloadKind::Lpld,
-        "LPHD" => WorkloadKind::Lphd,
-        "HPLD" => WorkloadKind::Hpld,
-        "HPHD" => WorkloadKind::Hphd,
-        "MIXED" => WorkloadKind::Mixed,
-        _ => usage(),
+/// Parse a numeric flag value with a friendly error instead of a panic.
+fn num<T: std::str::FromStr>(key: &str, v: &str, expected: &str) -> T {
+    v.parse().unwrap_or_else(|_| die(&format!("invalid value '{v}' for {key} (expected {expected})")))
+}
+
+/// Every `sim` flag and whether it consumes a value. Anything else
+/// starting with `--` is rejected — a typo must never silently fall back
+/// to a default.
+const SIM_FLAGS: &[(&str, bool)] = &[
+    ("--spec", true),
+    ("--driver", true),
+    ("--workload", true),
+    ("--requests", true),
+    ("--rate", true),
+    ("--prefill", true),
+    ("--decode", true),
+    ("--link", true),
+    ("--prefill-policy", true),
+    ("--decode-policy", true),
+    ("--dispatch", true),
+    ("--predictor", true),
+    ("--predictor-accuracy", true),
+    ("--chunk-size", true),
+    ("--sched-batch", true),
+    ("--max-batch", true),
+    ("--flip", true),
+    ("--seed", true),
+    ("--trace-seed", true),
+    ("--name", true),
+    ("--json", true),
+    ("--progress", false),
+];
+
+fn validate_sim_flags(args: &[String]) {
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if !a.starts_with("--") {
+            die(&format!("unexpected argument '{a}'"));
+        }
+        match SIM_FLAGS.iter().find(|(k, _)| k == a) {
+            Some((_, true)) => {
+                if i + 1 >= args.len() {
+                    die(&format!("flag {a} needs a value"));
+                }
+                i += 2;
+            }
+            Some((_, false)) => i += 1,
+            None => die(&format!("unknown flag '{a}'")),
+        }
     }
 }
 
-fn parse_link(s: &str) -> Link {
-    match s {
-        "nvlink" => Link::nvlink(),
-        "roce" => Link::roce200(),
-        "socket" => Link::indirect_socket(),
-        _ => usage(),
+/// Assemble the scenario: spec file (if any) as the base, then any
+/// explicit flag overrides on top — so `--spec x.json` and the equivalent
+/// flag spelling produce the identical `Scenario` (golden-tested).
+fn scenario_from_args(args: &[String]) -> Scenario {
+    let mut sc = match arg_val(args, "--spec") {
+        Some(p) => Scenario::load(&p).unwrap_or_else(|e| die(&e)),
+        None => Scenario::default(),
+    };
+    if let Some(v) = arg_val(args, "--name") {
+        sc.name = v;
     }
+    if let Some(v) = arg_val(args, "--driver") {
+        sc.driver = v;
+    }
+    if let Some(v) = arg_val(args, "--workload") {
+        if !sc.phases.is_empty() {
+            die("--workload has no effect on a phased spec (edit the spec's phases instead)");
+        }
+        sc.workload = parse_workload(&v).unwrap_or_else(|e| die(&e));
+    }
+    if let Some(v) = arg_val(args, "--requests") {
+        let n: usize = num("--requests", &v, "a request count");
+        if sc.phases.is_empty() {
+            sc.requests = n;
+        } else {
+            sc.clamp_requests(n); // smoke mode for phased specs
+        }
+    }
+    if let Some(v) = arg_val(args, "--rate") {
+        if !sc.phases.is_empty() {
+            die("--rate has no effect on a phased spec (edit the spec's phases instead)");
+        }
+        sc.rate = num("--rate", &v, "arrivals/s");
+    }
+    if let Some(v) = arg_val(args, "--prefill") {
+        sc.n_prefill = num("--prefill", &v, "an instance count");
+    }
+    if let Some(v) = arg_val(args, "--decode") {
+        sc.n_decode = num("--decode", &v, "an instance count");
+    }
+    if let Some(v) = arg_val(args, "--link") {
+        sc.link = parse_link(&v).unwrap_or_else(|e| die(&e));
+    }
+    if let Some(v) = arg_val(args, "--prefill-policy") {
+        sc.prefill_policy = parse_prefill_policy(&v).unwrap_or_else(|e| die(&e));
+    }
+    if let Some(v) = arg_val(args, "--decode-policy") {
+        sc.decode_policy = parse_decode_policy(&v).unwrap_or_else(|e| die(&e));
+    }
+    if let Some(v) = arg_val(args, "--dispatch") {
+        sc.dispatch = parse_dispatch(&v).unwrap_or_else(|e| die(&e));
+    }
+    if let Some(v) = arg_val(args, "--predictor") {
+        sc.predictor = parse_predictor(&v).unwrap_or_else(|e| die(&e));
+    }
+    if let Some(v) = arg_val(args, "--predictor-accuracy") {
+        sc.predictor_accuracy = num("--predictor-accuracy", &v, "a fraction in [0,1]");
+    }
+    if let Some(v) = arg_val(args, "--chunk-size") {
+        sc.chunk_size = num("--chunk-size", &v, "a token count");
+    }
+    if let Some(v) = arg_val(args, "--sched-batch") {
+        sc.sched_batch = num("--sched-batch", &v, "a batch size");
+    }
+    if let Some(v) = arg_val(args, "--max-batch") {
+        sc.max_batch = num("--max-batch", &v, "a batch size");
+    }
+    if let Some(v) = arg_val(args, "--flip") {
+        sc.flip_idle_ms = if v == "off" {
+            None
+        } else {
+            Some(num("--flip", &v, "an idle threshold in ms, or 'off'"))
+        };
+    }
+    if let Some(v) = arg_val(args, "--seed") {
+        let s: u64 = num("--seed", &v, "an integer seed");
+        sc.seed = s;
+        sc.trace_seed = s;
+    }
+    if let Some(v) = arg_val(args, "--trace-seed") {
+        sc.trace_seed = num("--trace-seed", &v, "an integer seed");
+    }
+    sc
 }
 
 fn cmd_sim(args: &[String]) {
-    let kind = parse_kind(&arg_val(args, "--workload").unwrap_or_else(|| "Mixed".into()));
-    let n: usize = arg_val(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(128);
-    let rate: f64 = arg_val(args, "--rate").map(|v| v.parse().unwrap()).unwrap_or(0.0);
-    let n_prefill: usize = arg_val(args, "--prefill").map(|v| v.parse().unwrap()).unwrap_or(1);
-    let n_decode: usize = arg_val(args, "--decode").map(|v| v.parse().unwrap()).unwrap_or(1);
-    let seed: u64 = arg_val(args, "--seed").map(|v| v.parse().unwrap()).unwrap_or(0);
-    let link = parse_link(&arg_val(args, "--link").unwrap_or_else(|| "roce".into()));
-    let prefill_policy = match arg_val(args, "--prefill-policy").as_deref() {
-        Some("fcfs") => PrefillPolicy::Fcfs,
-        Some("ljf") => PrefillPolicy::Ljf,
-        _ => PrefillPolicy::Sjf,
-    };
-    let decode_policy = match arg_val(args, "--decode-policy").as_deref() {
-        Some("greedy") => DecodePolicy::Greedy,
-        Some("rs") => DecodePolicy::ReserveStatic,
-        _ => DecodePolicy::ReserveDynamic,
-    };
-    let dispatch = match arg_val(args, "--dispatch").as_deref() {
-        Some("random") => DispatchPolicy::Random,
-        Some("imbalance") => DispatchPolicy::Imbalance,
-        Some("least") => DispatchPolicy::LeastLoad,
-        _ => DispatchPolicy::PowerOfTwo,
-    };
+    validate_sim_flags(args);
+    let sc = scenario_from_args(args);
+    // Self-describing runs: one line with every resolved knob, so any run
+    // is reproducible from its log alone.
+    println!("{}", sc.summary_line());
 
-    let mut gen = WorkloadGen::new(seed);
-    let trace = gen.trace(kind, n, rate, 0);
+    let registry = Registry::builtin();
+    let driver = registry.resolve(&sc).unwrap_or_else(|e| die(&e));
+    let trace = sc.trace();
 
-    let cfg = ClusterConfig {
-        n_prefill,
-        n_decode,
-        prefill_policy,
-        decode_policy,
-        dispatch,
-        link,
-        seed,
-        ..Default::default()
+    let total = sc.total_requests();
+    let mut progress;
+    let mut null = NullObserver;
+    let obs: &mut dyn Observer = if args.iter().any(|a| a == "--progress") {
+        progress = ProgressObserver::new(total, (total / 10).max(1));
+        &mut progress
+    } else {
+        &mut null
     };
-    let tetri = run_cluster(cfg, trace.clone());
+    let report = driver.run(&trace, obs);
+    println!("{}", report.summary_line());
+
     // Paper's comparison setup (§5.1): TetriInfer's prefill+decode pair
     // uses twice the cards of one coupled vLLM instance; fairness is
     // restored through resource-usage time and perf/$.
-    let base_n = n_prefill.min(n_decode).max(1);
-    let base_cfg = BaselineConfig { n_instances: base_n, seed, ..Default::default() };
-    let base = run_baseline(base_cfg, trace);
+    let base = if sc.driver == "tetri" {
+        let base_sc = sc.baseline_counterpart();
+        let base = registry
+            .resolve(&base_sc)
+            .unwrap_or_else(|e| die(&e))
+            .run(&trace, &mut NullObserver);
+        println!("{}", base.summary_line());
+        println!("{}", report.vs_row("TetriInfer vs vLLM", &base));
+        Some(base)
+    } else {
+        None
+    };
 
-    println!("workload={} n={} rate={}/s", kind.name(), n, rate);
-    let t = tetri.ttft_summary();
-    let j = tetri.jct_summary();
-    println!(
-        "TetriInfer: TTFT mean {:.1} ms p99 {:.1} | JCT mean {:.1} ms p99 {:.1} | resource {:.1}s | flips {}",
-        t.mean, t.p99, j.mean, j.p99, tetri.resource_seconds(), tetri.flips
-    );
-    let t = base.ttft_summary();
-    let j = base.jct_summary();
-    println!(
-        "vLLM:       TTFT mean {:.1} ms p99 {:.1} | JCT mean {:.1} ms p99 {:.1} | resource {:.1}s",
-        t.mean, t.p99, j.mean, j.p99, base.resource_seconds()
-    );
-    println!("{}", tetri.vs_row("TetriInfer vs vLLM", &base));
+    if let Some(path) = arg_val(args, "--json") {
+        let doc = match &base {
+            Some(b) => report.comparison_json(b),
+            None => report.to_json(),
+        };
+        let text = doc.dump();
+        if path == "-" {
+            println!("{text}");
+        } else {
+            std::fs::write(&path, &text)
+                .unwrap_or_else(|e| die(&format!("cannot write {path}: {e}")));
+            eprintln!("wrote {path}");
+        }
+    }
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -141,8 +274,11 @@ fn cmd_serve(_args: &[String]) {
 #[cfg(feature = "pjrt")]
 fn cmd_serve(args: &[String]) {
     let dir = arg_val(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
-    let n: usize = arg_val(args, "--requests").map(|v| v.parse().unwrap()).unwrap_or(8);
-    let link = arg_val(args, "--link").map(|l| parse_link(&l));
+    let n: usize = arg_val(args, "--requests")
+        .map(|v| num("--requests", &v, "a request count"))
+        .unwrap_or(8);
+    let link = arg_val(args, "--link")
+        .map(|l| parse_link(&l).unwrap_or_else(|e| die(&e)).to_link());
     let engine = Engine::load(&dir).unwrap_or_else(|e| {
         eprintln!("failed to load artifacts from {dir}: {e:#}\nrun `make artifacts` first");
         std::process::exit(1);

@@ -1,13 +1,15 @@
-//! Parallel sweep harness: fan (config × trace × seed) cells across
-//! `std::thread::scope` workers — the crate is dependency-free (no rayon),
-//! so this is a hand-rolled work queue over scoped threads.
+//! Parallel sweep harness: fan scenario cells across `std::thread::scope`
+//! workers — the crate is dependency-free (no rayon), so this is a
+//! hand-rolled work queue over scoped threads.
 //!
 //! DistServe and TetriInfer both evaluate through exactly this kind of
 //! large simulated sweep (hundreds of policy × workload × seed cells), so
 //! sweep throughput directly bounds how many scenarios a PR can explore.
-//! Each cell is an independent deterministic DES run: results are
-//! bit-identical to running the cells sequentially, and they come back in
-//! input order regardless of which worker finished first.
+//! Each cell is one declarative [`Scenario`](crate::api::Scenario): the
+//! trace is regenerated inside the worker from the cell's `trace_seed`,
+//! so cells are cheap to describe, ship no request vectors across
+//! threads, and are bit-identical to running sequentially — results come
+//! back in input order regardless of which worker finished first.
 //!
 //! Used by `examples/figures.rs` (figure regeneration) and
 //! `benches/cluster.rs` (the BENCH_cluster.json perf baseline).
@@ -15,10 +17,7 @@
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
-use crate::baseline::{run_baseline, BaselineConfig};
-use crate::coordinator::{run_cluster, ClusterConfig};
-use crate::metrics::RunMetrics;
-use crate::workload::{WorkloadGen, WorkloadKind};
+use crate::api::{Report, Scenario};
 
 /// Worker count to use when the caller has no preference.
 pub fn default_workers() -> usize {
@@ -70,46 +69,39 @@ where
     tagged.into_iter().map(|(_, r)| r).collect()
 }
 
-/// Which simulated system a cell drives.
-#[derive(Clone, Debug)]
-pub enum SweepSystem {
-    Cluster(ClusterConfig),
-    Baseline(BaselineConfig),
-}
-
-/// One sweep cell: a complete simulated experiment. The trace is
-/// regenerated inside the worker from `(kind, n_requests, rate_per_sec,
-/// trace_seed)`, so cells are cheap to describe and the sweep ships no
-/// request vectors across threads.
+/// One sweep cell: a label plus a complete declarative experiment. The
+/// driver (cluster vs baseline vs future systems) is the scenario's
+/// `driver` registry key.
 #[derive(Clone, Debug)]
 pub struct SweepCell {
     pub label: String,
-    pub system: SweepSystem,
-    pub kind: WorkloadKind,
-    pub n_requests: usize,
-    pub rate_per_sec: f64,
-    pub trace_seed: u64,
-}
-
-/// A finished cell: its metrics plus the wall time the DES run took.
-#[derive(Debug)]
-pub struct CellResult {
-    pub label: String,
-    pub metrics: RunMetrics,
-    pub wall_secs: f64,
+    pub scenario: Scenario,
 }
 
 impl SweepCell {
-    /// Run this cell to completion (deterministic given the cell).
+    pub fn new(label: impl Into<String>, scenario: Scenario) -> Self {
+        SweepCell { label: label.into(), scenario }
+    }
+}
+
+/// A finished cell: the full run [`Report`] (metrics + scenario echo +
+/// host wall time of the DES run).
+#[derive(Debug)]
+pub struct CellResult {
+    pub label: String,
+    pub report: Report,
+}
+
+impl SweepCell {
+    /// Run this cell to completion (deterministic given the scenario).
+    /// Panics on an unknown driver key — sweep grids are authored in
+    /// code, so a bad key is a bug, not an input error.
     pub fn run(self) -> CellResult {
-        let trace = WorkloadGen::new(self.trace_seed)
-            .trace(self.kind, self.n_requests, self.rate_per_sec, 0);
-        let t = std::time::Instant::now();
-        let metrics = match self.system {
-            SweepSystem::Cluster(cfg) => run_cluster(cfg, trace),
-            SweepSystem::Baseline(cfg) => run_baseline(cfg, trace),
-        };
-        CellResult { label: self.label, metrics, wall_secs: t.elapsed().as_secs_f64() }
+        let report = self
+            .scenario
+            .run()
+            .unwrap_or_else(|e| panic!("sweep cell '{}': {e}", self.label));
+        CellResult { label: self.label, report }
     }
 }
 
@@ -121,6 +113,7 @@ pub fn run_cells(cells: Vec<SweepCell>, workers: usize) -> Vec<CellResult> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::WorkloadKind;
 
     #[test]
     fn parallel_map_preserves_input_order() {
@@ -140,16 +133,17 @@ mod tests {
     fn sweep_matches_sequential_runs() {
         let mk_cells = || -> Vec<SweepCell> {
             (0..6)
-                .map(|seed| SweepCell {
-                    label: format!("seed{seed}"),
-                    system: SweepSystem::Cluster(ClusterConfig {
-                        seed,
-                        ..ClusterConfig::ts_roce(1, 2)
-                    }),
-                    kind: WorkloadKind::Mixed,
-                    n_requests: 24,
-                    rate_per_sec: 16.0,
-                    trace_seed: seed,
+                .map(|seed| {
+                    SweepCell::new(
+                        format!("seed{seed}"),
+                        Scenario::builder()
+                            .workload(WorkloadKind::Mixed)
+                            .requests(24)
+                            .rate(16.0)
+                            .seed(seed)
+                            .topology(1, 2)
+                            .build(),
+                    )
                 })
                 .collect()
         };
@@ -158,23 +152,35 @@ mod tests {
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(parallel.iter()) {
             assert_eq!(a.label, b.label);
-            assert_eq!(a.metrics.makespan_us, b.metrics.makespan_us, "{}", a.label);
-            assert_eq!(a.metrics.events, b.metrics.events, "{}", a.label);
-            assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+            assert_eq!(
+                a.report.metrics.makespan_us, b.report.metrics.makespan_us,
+                "{}",
+                a.label
+            );
+            assert_eq!(a.report.metrics.events, b.report.metrics.events, "{}", a.label);
+            assert_eq!(a.report.metrics.records.len(), b.report.metrics.records.len());
         }
     }
 
     #[test]
     fn baseline_cells_run_too() {
-        let cells = vec![SweepCell {
-            label: "base".into(),
-            system: SweepSystem::Baseline(BaselineConfig::default()),
-            kind: WorkloadKind::Lpld,
-            n_requests: 16,
-            rate_per_sec: 0.0,
-            trace_seed: 1,
-        }];
+        let cells = vec![SweepCell::new(
+            "base",
+            Scenario::builder()
+                .driver("vllm")
+                .workload(WorkloadKind::Lpld)
+                .requests(16)
+                .seed(1)
+                .build(),
+        )];
         let res = run_cells(cells, 2);
-        assert_eq!(res[0].metrics.records.len(), 16);
+        assert_eq!(res[0].report.metrics.records.len(), 16);
+        assert_eq!(res[0].report.driver, "vllm");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown driver")]
+    fn unknown_driver_cell_panics_with_context() {
+        SweepCell::new("bad", Scenario::builder().driver("nope").requests(1).build()).run();
     }
 }

@@ -23,9 +23,11 @@
 
 use std::fmt::Write as _;
 
+use tetri_infer::api::{Registry, Scenario};
 use tetri_infer::baseline::{run_baseline, BaselineConfig};
 use tetri_infer::coordinator::{run_cluster, ClusterConfig};
 use tetri_infer::metrics::RunMetrics;
+use tetri_infer::util::repo_root;
 use tetri_infer::workload::{WorkloadGen, WorkloadKind};
 
 const GOLDEN_PATH: &str = "tests/golden_e2e.txt";
@@ -72,6 +74,16 @@ fn cases() -> Vec<(String, Box<dyn Fn() -> RunMetrics>)> {
             )
         }),
     ));
+    // one spec-file-driven case: the scenario front door must stay pinned
+    // to the same numbers as the raw-config path above
+    out.push((
+        "scenario/fig12-spec".to_string(),
+        Box::new(|| {
+            let path = repo_root().join("scenarios/fig12.json");
+            let sc = Scenario::load(path.to_str().unwrap()).expect("fig12 spec parses");
+            sc.run().expect("fig12 spec resolves").metrics
+        }),
+    ));
     out
 }
 
@@ -106,5 +118,61 @@ fn golden_metrics_are_deterministic_and_pinned() {
             std::fs::write(GOLDEN_PATH, &body).expect("blessing golden file");
             eprintln!("golden: blessed {GOLDEN_PATH} (first run) — commit it");
         }
+    }
+}
+
+/// Every shipped spec file must (a) survive a Scenario → JSON → Scenario
+/// round trip as the identical value and (b) name a resolvable driver —
+/// so scenarios/ can never rot silently.
+#[test]
+fn shipped_scenario_specs_round_trip_and_resolve() {
+    let dir = repo_root().join("scenarios");
+    let registry = Registry::builtin();
+    let mut n = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("cannot list {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let path_str = path.to_str().unwrap();
+        let sc = Scenario::load(path_str).unwrap_or_else(|e| panic!("{e}"));
+        let reparsed = Scenario::from_str(&sc.to_json().dump())
+            .unwrap_or_else(|e| panic!("{path_str}: {e}"));
+        assert_eq!(reparsed, sc, "{path_str}: JSON round trip must be identity");
+        registry.resolve(&sc).unwrap_or_else(|e| panic!("{path_str}: {e}"));
+        n += 1;
+    }
+    assert!(n >= 5, "expected the shipped scenario set, found {n} specs");
+}
+
+/// A spec-file-loaded run and the equivalent builder-constructed run must
+/// be the same experiment: identical `Scenario` values, and — run through
+/// the driver registry — identical event counts and virtual timelines.
+#[test]
+fn spec_loaded_run_matches_builder_run_event_for_event() {
+    let path = repo_root().join("scenarios/fig12.json");
+    let from_spec = Scenario::load(path.to_str().unwrap()).expect("fig12 spec parses");
+    let built = Scenario::builder()
+        .name("fig12")
+        .workload(WorkloadKind::Lphd)
+        .requests(128)
+        .rate(8.0)
+        .seed(SEED)
+        .build();
+    assert_eq!(from_spec, built, "spec file and builder must agree on every knob");
+
+    let a = from_spec.run().expect("spec run");
+    let b = built.run().expect("builder run");
+    assert_eq!(a.metrics.events, b.metrics.events, "event-for-event parity");
+    assert_eq!(a.metrics.makespan_us, b.metrics.makespan_us);
+    assert_eq!(fingerprint(&a.metrics), fingerprint(&b.metrics));
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+    for (ra, rb) in a.metrics.records.iter().zip(b.metrics.records.iter()) {
+        assert_eq!(
+            (ra.id, ra.arrival, ra.first_token, ra.finished),
+            (rb.id, rb.arrival, rb.first_token, rb.finished)
+        );
     }
 }

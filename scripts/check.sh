@@ -1,8 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 verify gate (ROADMAP.md): build + full test suite from rust/.
-# Every PR runs this before landing:  ./scripts/check.sh
+# Tier-1 verify gate (ROADMAP.md): build + full test suite from rust/,
+# plus (a) every example builds and (b) every shipped scenario spec still
+# loads and runs end-to-end in smoke mode (capped request counts), so
+# scenarios/ can never rot. Every PR runs this before landing:
+#   ./scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 cargo build --release
+cargo build --release --examples
 cargo test -q
+
+# Smoke-run every spec through the CLI: --requests caps flat scenarios
+# and each phase of phased ones, so this stays fast while exercising the
+# full spec → scenario → driver → report pipeline.
+for spec in ../scenarios/*.json; do
+  echo "spec smoke: ${spec}"
+  cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --requests 8 >/dev/null
+done
+
 echo "tier-1 verify: OK"

@@ -26,26 +26,45 @@ pub trait Driver {
     fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report;
 }
 
-/// The disaggregated TetriInfer cluster (§3).
+/// The disaggregated TetriInfer cluster (§3) — also, under the
+/// `"hybrid"` registry key, the mixed fleet that runs coupled
+/// vanilla-vLLM instances alongside disaggregated ones in a single
+/// simulation (the paper's comparison inside one cluster).
 pub struct ClusterDriver {
     pub cfg: ClusterConfig,
     /// Scenario echo for the report, when the driver came from a spec.
     pub scenario: Option<Scenario>,
+    /// Registry key this driver was resolved under (`"tetri"`/`"hybrid"`).
+    key: &'static str,
 }
 
 impl ClusterDriver {
     pub fn from_config(cfg: ClusterConfig) -> Self {
-        ClusterDriver { cfg, scenario: None }
+        ClusterDriver { cfg, scenario: None, key: "tetri" }
     }
 
     pub fn from_scenario(sc: &Scenario) -> Self {
-        ClusterDriver { cfg: sc.cluster_config(), scenario: Some(sc.clone()) }
+        ClusterDriver { cfg: sc.cluster_config(), scenario: Some(sc.clone()), key: "tetri" }
+    }
+
+    /// The `"hybrid"` resolution: same engine and config, but at least
+    /// one coupled instance serves inside the cluster (a hybrid spec that
+    /// sets `n_coupled` keeps its value). The normalization lands on the
+    /// echoed scenario too, so reports describe the run that actually
+    /// happened.
+    pub fn from_scenario_hybrid(sc: &Scenario) -> Self {
+        let mut sc = sc.clone();
+        if sc.n_coupled == 0 {
+            sc.n_coupled = 1;
+        }
+        let cfg = sc.cluster_config();
+        ClusterDriver { cfg, scenario: Some(sc), key: "hybrid" }
     }
 }
 
 impl Driver for ClusterDriver {
     fn name(&self) -> &str {
-        "tetri"
+        self.key
     }
 
     fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report {
@@ -55,7 +74,7 @@ impl Driver for ClusterDriver {
         // the DES run itself.
         let metrics = Cluster::new(self.cfg.clone()).run_observed(trace.to_vec(), obs);
         Report {
-            driver: "tetri".to_string(),
+            driver: self.key.to_string(),
             scenario: self.scenario.clone(),
             metrics,
             wall_secs: t.elapsed().as_secs_f64(),
@@ -106,12 +125,14 @@ pub struct Registry {
 }
 
 impl Registry {
-    /// The builtin systems: `"tetri"` and `"vllm"`.
+    /// The builtin systems: `"tetri"`, `"vllm"`, and `"hybrid"` (coupled
+    /// + disaggregated instances in one cluster).
     pub fn builtin() -> Self {
         Registry {
             entries: vec![
                 ("tetri", |sc| Box::new(ClusterDriver::from_scenario(sc))),
                 ("vllm", |sc| Box::new(BaselineDriver::from_scenario(sc))),
+                ("hybrid", |sc| Box::new(ClusterDriver::from_scenario_hybrid(sc))),
             ],
         }
     }
@@ -155,21 +176,40 @@ mod tests {
             .workload(WorkloadKind::Lpld)
             .requests(8)
             .seed(3)
+            // hybrid normalizes n_coupled 0 → 1 into its scenario echo;
+            // setting it explicitly keeps the echo-equality assertion exact
+            .coupled(if driver == "hybrid" { 1 } else { 0 })
             .build()
     }
 
     #[test]
     fn registry_resolves_builtin_drivers() {
         let reg = Registry::builtin();
-        assert_eq!(reg.driver_names(), vec!["tetri", "vllm"]);
-        for name in ["tetri", "vllm"] {
+        assert_eq!(reg.driver_names(), vec!["tetri", "vllm", "hybrid"]);
+        for name in ["tetri", "vllm", "hybrid"] {
             let sc = tiny(name);
             let drv = reg.resolve(&sc).unwrap();
             assert_eq!(drv.name(), name);
             let report = drv.run(&sc.trace(), &mut NullObserver);
             assert_eq!(report.metrics.records.len(), 8, "{name}");
             assert_eq!(report.scenario.as_ref().unwrap(), &sc);
+            assert_eq!(report.driver, name);
         }
+    }
+
+    #[test]
+    fn hybrid_defaults_to_one_coupled_instance() {
+        let bare = Scenario { n_coupled: 0, ..tiny("hybrid") };
+        let drv = ClusterDriver::from_scenario_hybrid(&bare);
+        assert_eq!(drv.cfg.n_coupled, 1, "a bare hybrid spec gets one coupled instance");
+        assert_eq!(
+            drv.scenario.as_ref().unwrap().n_coupled,
+            1,
+            "the scenario echo must describe the run that actually happens"
+        );
+        let sc = Scenario { n_coupled: 3, ..tiny("hybrid") };
+        let drv = ClusterDriver::from_scenario_hybrid(&sc);
+        assert_eq!(drv.cfg.n_coupled, 3, "explicit n_coupled wins");
     }
 
     #[test]
@@ -184,7 +224,7 @@ mod tests {
         reg.register("tetri", |sc| Box::new(BaselineDriver::from_scenario(sc)));
         let drv = reg.resolve(&tiny("tetri")).unwrap();
         assert_eq!(drv.name(), "vllm", "shadowed entry must win");
-        assert_eq!(reg.driver_names().len(), 2);
+        assert_eq!(reg.driver_names().len(), 3);
     }
 
     #[test]

@@ -45,7 +45,7 @@ pub use report::{metrics_json, Report};
 pub use scenario::{
     decode_policy_key, dispatch_key, granularity_key, parse_decode_policy, parse_dispatch,
     parse_granularity, parse_link, parse_predictor, parse_prefill_policy, parse_workload,
-    predictor_key, prefill_policy_key, LinkSpec, Phase, Scenario, ScenarioBuilder,
+    predictor_key, prefill_policy_key, ElasticSpec, LinkSpec, Phase, Scenario, ScenarioBuilder,
 };
 
 #[cfg(test)]

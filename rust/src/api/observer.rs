@@ -39,6 +39,11 @@ pub trait Observer {
     /// incarnation is live at `now + dur`.
     fn on_flip(&mut self, _now: Us, _instance: usize, _to: Role, _dur: Us) {}
 
+    /// The elastic autoscaler changed the pool: `instance` was added to
+    /// serve `role` (`added`), or finished draining and retired from
+    /// `role` (`!added`). Static pools never fire this.
+    fn on_scale(&mut self, _now: Us, _instance: usize, _role: Role, _added: bool) {}
+
     /// A request finished; `rec` carries the original id and timestamps.
     fn on_finish(&mut self, _now: Us, _rec: &RequestRecord) {}
 
@@ -112,6 +117,10 @@ pub struct TimelineObserver {
     pub transfers: u64,
     pub decode_iters: u64,
     pub flips: u64,
+    /// Elastic pool growth events (instances added mid-run).
+    pub scale_ups: u64,
+    /// Elastic pool shrink events (instances drained and retired).
+    pub scale_downs: u64,
 }
 
 impl TimelineObserver {
@@ -188,6 +197,8 @@ impl TimelineObserver {
             ("transfers", Json::from(self.transfers)),
             ("decode_iters", Json::from(self.decode_iters)),
             ("flips", Json::from(self.flips)),
+            ("scale_ups", Json::from(self.scale_ups)),
+            ("scale_downs", Json::from(self.scale_downs)),
             ("spans", Json::from(spans)),
             ("queue", Json::from(queue)),
         ])
@@ -236,6 +247,14 @@ impl Observer for TimelineObserver {
     fn on_flip(&mut self, now: Us, instance: usize, _to: Role, dur: Us) {
         self.flips += 1;
         self.spans.push(Span { at: now, dur, instance, kind: SpanKind::Flip, size: 0 });
+    }
+
+    fn on_scale(&mut self, _now: Us, _instance: usize, _role: Role, added: bool) {
+        if added {
+            self.scale_ups += 1;
+        } else {
+            self.scale_downs += 1;
+        }
     }
 
     fn on_finish(&mut self, now: Us, rec: &RequestRecord) {

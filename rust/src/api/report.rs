@@ -47,6 +47,8 @@ pub fn metrics_json(m: &RunMetrics) -> Json {
         ("utilization", Json::from(m.utilization())),
         ("swapped_tokens", Json::from(m.swapped_tokens)),
         ("flips", Json::from(u64::from(m.flips))),
+        ("scale_ups", Json::from(u64::from(m.scale_ups))),
+        ("scale_downs", Json::from(u64::from(m.scale_downs))),
     ])
 }
 

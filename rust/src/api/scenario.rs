@@ -160,6 +160,52 @@ pub fn parse_granularity(s: &str) -> Result<crate::fabric::Granularity, String> 
     }
 }
 
+// --------------------------------------------------------------- elastic
+
+/// Elastic instance-pool knob (the spec-level mirror of
+/// `coordinator::ElasticConfig`; milliseconds here, µs there). When set,
+/// the cluster monitor grows the pool under backlog and drains + retires
+/// idle instances (see DESIGN.md §Instance engine).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElasticSpec {
+    /// Hard cap on non-retired instances.
+    pub max_instances: usize,
+    /// Scale prefill up when queued+in-flight prompt tokens per active
+    /// prefill instance exceed this.
+    pub prefill_up_tokens: u64,
+    /// Scale decode up when decode jobs per active decode instance
+    /// exceed this.
+    pub decode_up_jobs: u64,
+    /// Drain + retire an instance idle at least this long (ms).
+    pub down_idle_ms: f64,
+    /// Never retire below this many active instances of either role.
+    pub min_per_role: usize,
+}
+
+impl Default for ElasticSpec {
+    fn default() -> Self {
+        ElasticSpec {
+            max_instances: 8,
+            prefill_up_tokens: 4096,
+            decode_up_jobs: 32,
+            down_idle_ms: 2_000.0,
+            min_per_role: 1,
+        }
+    }
+}
+
+impl ElasticSpec {
+    pub fn to_config(self) -> crate::coordinator::ElasticConfig {
+        crate::coordinator::ElasticConfig {
+            max_instances: self.max_instances,
+            prefill_up_tokens: self.prefill_up_tokens,
+            decode_up_jobs: self.decode_up_jobs,
+            down_idle_us: (self.down_idle_ms * 1e3) as Us,
+            min_per_role: self.min_per_role,
+        }
+    }
+}
+
 // ---------------------------------------------------------------- phases
 
 /// One workload phase of a multi-phase trace (load-shift scenarios like
@@ -200,6 +246,10 @@ pub struct Scenario {
     pub trace_seed: u64,
     pub n_prefill: usize,
     pub n_decode: usize,
+    /// Coupled (vanilla-vLLM) instances serving *inside* the cluster —
+    /// the hybrid-fleet study. 0 is the pure disaggregated setup; the
+    /// `"hybrid"` driver key defaults this to 1 when unset.
+    pub n_coupled: usize,
     pub link: LinkSpec,
     pub prefill_policy: PrefillPolicy,
     pub decode_policy: DecodePolicy,
@@ -223,6 +273,8 @@ pub struct Scenario {
     /// Override the per-instance KV pool in bytes (memory-pressure
     /// scenarios); `None` = calibrated CostModel default.
     pub hbm_kv_bytes: Option<f64>,
+    /// Elastic instance-pool policy; `None` keeps the pool static.
+    pub elastic: Option<ElasticSpec>,
     /// Multi-phase trace; when non-empty it replaces
     /// `workload`/`requests`/`rate` for trace generation.
     pub phases: Vec<Phase>,
@@ -242,6 +294,7 @@ impl Default for Scenario {
             trace_seed: 0,
             n_prefill: 1,
             n_decode: 1,
+            n_coupled: 0,
             link: LinkSpec::Roce,
             prefill_policy: PrefillPolicy::Sjf,
             decode_policy: DecodePolicy::ReserveDynamic,
@@ -256,6 +309,7 @@ impl Default for Scenario {
             srtf_chunking: false,
             prefill_batch: 16,
             hbm_kv_bytes: None,
+            elastic: None,
             phases: Vec::new(),
         }
     }
@@ -273,6 +327,7 @@ const KNOWN_KEYS: &[&str] = &[
     "trace_seed",
     "n_prefill",
     "n_decode",
+    "n_coupled",
     "link",
     "prefill_policy",
     "decode_policy",
@@ -287,10 +342,14 @@ const KNOWN_KEYS: &[&str] = &[
     "srtf_chunking",
     "prefill_batch",
     "hbm_kv_bytes",
+    "elastic",
     "phases",
 ];
 
 const PHASE_KEYS: &[&str] = &["workload", "requests", "rate", "start_ms"];
+
+const ELASTIC_KEYS: &[&str] =
+    &["max_instances", "prefill_up_tokens", "decode_up_jobs", "down_idle_ms", "min_per_role"];
 
 fn want_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
     j.as_str().ok_or_else(|| format!("spec key '{key}' must be a string"))
@@ -382,6 +441,8 @@ impl Scenario {
         ClusterConfig {
             n_prefill: self.n_prefill,
             n_decode: self.n_decode,
+            n_coupled: self.n_coupled,
+            coupled_batch: self.prefill_batch,
             chunk_size: self.chunk_size,
             prefill_policy: self.prefill_policy,
             sched_batch: self.sched_batch,
@@ -397,6 +458,7 @@ impl Scenario {
                 idle_us: (ms * 1e3) as Us,
                 ..Default::default()
             }),
+            elastic: self.elastic.map(ElasticSpec::to_config),
             cost,
             seed: self.seed,
             ..Default::default()
@@ -463,6 +525,7 @@ impl Scenario {
             ("trace_seed", Json::from(self.trace_seed)),
             ("n_prefill", Json::from(self.n_prefill)),
             ("n_decode", Json::from(self.n_decode)),
+            ("n_coupled", Json::from(self.n_coupled)),
             ("link", Json::from(self.link.key())),
             ("prefill_policy", Json::from(prefill_policy_key(self.prefill_policy))),
             ("decode_policy", Json::from(decode_policy_key(self.decode_policy))),
@@ -484,6 +547,18 @@ impl Scenario {
                 self.hbm_kv_bytes.map(Json::from).unwrap_or(Json::Null),
             ),
         ];
+        if let Some(el) = self.elastic {
+            pairs.push((
+                "elastic",
+                Json::obj([
+                    ("max_instances", Json::from(el.max_instances)),
+                    ("prefill_up_tokens", Json::from(el.prefill_up_tokens)),
+                    ("decode_up_jobs", Json::from(el.decode_up_jobs)),
+                    ("down_idle_ms", Json::from(el.down_idle_ms)),
+                    ("min_per_role", Json::from(el.min_per_role)),
+                ]),
+            ));
+        }
         if !self.phases.is_empty() {
             let phases: Vec<Json> = self
                 .phases
@@ -531,6 +606,7 @@ impl Scenario {
                 }
                 "n_prefill" => sc.n_prefill = want_num(v, key)? as usize,
                 "n_decode" => sc.n_decode = want_num(v, key)? as usize,
+                "n_coupled" => sc.n_coupled = want_num(v, key)? as usize,
                 "link" => sc.link = parse_link(want_str(v, key)?)?,
                 "prefill_policy" => sc.prefill_policy = parse_prefill_policy(want_str(v, key)?)?,
                 "decode_policy" => sc.decode_policy = parse_decode_policy(want_str(v, key)?)?,
@@ -553,6 +629,40 @@ impl Scenario {
                     sc.hbm_kv_bytes = match v {
                         Json::Null => None,
                         _ => Some(want_num(v, key)?),
+                    }
+                }
+                "elastic" => {
+                    sc.elastic = match v {
+                        Json::Null => None,
+                        _ => {
+                            let eobj =
+                                v.as_obj().ok_or("spec key 'elastic' must be an object or null")?;
+                            for ek in eobj.keys() {
+                                if !ELASTIC_KEYS.contains(&ek.as_str()) {
+                                    return Err(format!(
+                                        "unknown elastic key '{ek}' (known: {})",
+                                        ELASTIC_KEYS.join(", ")
+                                    ));
+                                }
+                            }
+                            let mut el = ElasticSpec::default();
+                            if let Some(x) = v.get("max_instances") {
+                                el.max_instances = want_num(x, "max_instances")? as usize;
+                            }
+                            if let Some(x) = v.get("prefill_up_tokens") {
+                                el.prefill_up_tokens = want_num(x, "prefill_up_tokens")? as u64;
+                            }
+                            if let Some(x) = v.get("decode_up_jobs") {
+                                el.decode_up_jobs = want_num(x, "decode_up_jobs")? as u64;
+                            }
+                            if let Some(x) = v.get("down_idle_ms") {
+                                el.down_idle_ms = want_num(x, "down_idle_ms")?;
+                            }
+                            if let Some(x) = v.get("min_per_role") {
+                                el.min_per_role = want_num(x, "min_per_role")? as usize;
+                            }
+                            Some(el)
+                        }
                     }
                 }
                 "phases" => {
@@ -629,15 +739,16 @@ impl Scenario {
             format!("phases=[{}]", parts.join(","))
         };
         format!(
-            "scenario{}: driver={} {} prefill={} decode={} link={} prefill_policy={} \
+            "scenario{}: driver={} {} prefill={} decode={} coupled={} link={} prefill_policy={} \
              decode_policy={} dispatch={} predictor={} acc={} chunk={} sched_batch={} \
-             max_batch={} flip_idle_ms={} transfer={} srtf={} prefill_batch={} \
+             max_batch={} flip_idle_ms={} elastic={} transfer={} srtf={} prefill_batch={} \
              hbm_kv_bytes={} seed={} trace_seed={}",
             if self.name.is_empty() { String::new() } else { format!(" '{}'", self.name) },
             self.driver,
             phases,
             self.n_prefill,
             self.n_decode,
+            self.n_coupled,
             self.link.key(),
             prefill_policy_key(self.prefill_policy),
             decode_policy_key(self.decode_policy),
@@ -648,6 +759,18 @@ impl Scenario {
             self.sched_batch,
             self.max_batch,
             self.flip_idle_ms.map(|ms| ms.to_string()).unwrap_or_else(|| "off".into()),
+            self.elastic
+                .map(|el| {
+                    format!(
+                        "max{},up{}t/{}j,down{}ms,min{}",
+                        el.max_instances,
+                        el.prefill_up_tokens,
+                        el.decode_up_jobs,
+                        el.down_idle_ms,
+                        el.min_per_role
+                    )
+                })
+                .unwrap_or_else(|| "off".into()),
             granularity_key(self.transfer),
             self.srtf_chunking,
             self.prefill_batch,
@@ -709,6 +832,17 @@ impl ScenarioBuilder {
     pub fn topology(mut self, n_prefill: usize, n_decode: usize) -> Self {
         self.sc.n_prefill = n_prefill;
         self.sc.n_decode = n_decode;
+        self
+    }
+
+    /// Coupled (vanilla-vLLM) instances inside the cluster (hybrid mode).
+    pub fn coupled(mut self, n: usize) -> Self {
+        self.sc.n_coupled = n;
+        self
+    }
+
+    pub fn elastic(mut self, v: Option<ElasticSpec>) -> Self {
+        self.sc.elastic = v;
         self
     }
 
@@ -814,6 +948,8 @@ mod tests {
             .seed(99)
             .trace_seed(7)
             .topology(2, 4)
+            .coupled(2)
+            .elastic(Some(ElasticSpec { max_instances: 12, down_idle_ms: 750.0, ..Default::default() }))
             .link(LinkSpec::Socket)
             .prefill_policy(PrefillPolicy::Ljf)
             .decode_policy(DecodePolicy::Greedy)
@@ -845,6 +981,32 @@ mod tests {
         assert!(Scenario::from_str(r#"{"phases": [{"workload": "LPLD"}]}"#).is_err());
         assert!(Scenario::from_str(r#"{"phases": [{"workload": "LPLD", "requests": 4, "rat": 1}]}"#)
             .is_err());
+        assert!(Scenario::from_str(r#"{"elastic": {"max_instanses": 4}}"#).is_err());
+        assert!(Scenario::from_str(r#"{"elastic": 4}"#).is_err());
+        assert!(Scenario::from_str(r#"{"n_coupled": "two"}"#).is_err());
+    }
+
+    #[test]
+    fn elastic_spec_defaults_fill_missing_keys() {
+        let sc = Scenario::from_str(r#"{"elastic": {"max_instances": 5}}"#).unwrap();
+        let el = sc.elastic.unwrap();
+        assert_eq!(el.max_instances, 5);
+        assert_eq!(el.min_per_role, ElasticSpec::default().min_per_role);
+        // null turns it back off
+        let sc = Scenario::from_str(r#"{"elastic": null}"#).unwrap();
+        assert!(sc.elastic.is_none());
+        // the resolved cluster config carries it through in µs
+        let sc = Scenario::from_str(r#"{"elastic": {"down_idle_ms": 250}}"#).unwrap();
+        let cfg = sc.cluster_config();
+        assert_eq!(cfg.elastic.unwrap().down_idle_us, 250_000);
+    }
+
+    #[test]
+    fn hybrid_knob_reaches_the_cluster_config() {
+        let sc = Scenario::from_str(r#"{"n_coupled": 2, "prefill_batch": 8}"#).unwrap();
+        let cfg = sc.cluster_config();
+        assert_eq!(cfg.n_coupled, 2);
+        assert_eq!(cfg.coupled_batch, 8, "coupled instances use the vLLM fixed batch");
     }
 
     #[test]

@@ -9,20 +9,19 @@
 //! in an iteration stalls every co-running decode (Figure 4), and decode
 //! batches are packed without working-set awareness (Figure 5).
 //!
-//! Like the TetriInfer cluster, the request book is a dense arena indexed
-//! by slot (events, KV tables and queues all carry slots), per-instance
-//! waiting-token load is a maintained counter, and iteration buffers are
-//! reused — no per-event hashing or cloning (DESIGN.md §Hot paths).
-
-use std::collections::VecDeque;
+//! Since the instance-engine refactor this driver is pure policy glue:
+//! the arena request store, event loop and finish bookkeeping live in
+//! `sim::EngineCore` (shared with the TetriInfer cluster driver), and the
+//! mixed-iteration mechanics live in `instance::CoupledInst` (shared with
+//! the hybrid cluster). What remains here is the least-loaded arrival
+//! routing and the last-arrival partial-batch kick.
 
 use crate::api::{NullObserver, Observer};
 use crate::costmodel::CostModel;
-use crate::decode::{DecodeJob, DecodePolicy, DecodeScheduler};
-use crate::kvcache::PagedKvCache;
+use crate::instance::CoupledInst;
 use crate::metrics::RunMetrics;
-use crate::sim::{Event, EventQueue};
-use crate::types::{ReqId, ReqMeta, Request, RequestRecord, Us};
+use crate::sim::{run_des, EngineCore, EngineHost, Event};
+use crate::types::{ReqId, Request};
 
 #[derive(Clone, Debug)]
 pub struct BaselineConfig {
@@ -55,38 +54,11 @@ impl Default for BaselineConfig {
     }
 }
 
-/// Sentinel for "first token not yet produced".
-const NO_TIME: Us = Us::MAX;
-
-struct ReqState {
-    req: Request,
-    first_token: Us,
-}
-
-struct CoupledInst {
-    /// Arrived, not yet prefilled (arena slots).
-    waiting: VecDeque<ReqId>,
-    /// Prompt tokens across `waiting`, maintained incrementally (the
-    /// arrival router's O(1) load input).
-    waiting_tokens: u64,
-    /// Decode-side state (greedy admission = vLLM's policy). We reuse the
-    /// decode scheduler with jobs that were prefilled locally.
-    dec: DecodeScheduler,
-    kv: PagedKvCache,
-    busy: bool,
-    /// (prefilled this iteration, completed this iteration) — slot
-    /// buffers reused across iterations.
-    pending: (Vec<ReqId>, Vec<ReqId>),
-}
-
 pub struct BaselineCluster {
     cfg: BaselineConfig,
-    queue: EventQueue,
+    /// Shared DES engine: queue + arena + metrics + termination.
+    core: EngineCore,
     insts: Vec<CoupledInst>,
-    /// Request arena indexed by slot (events carry slots).
-    requests: Vec<ReqState>,
-    metrics: RunMetrics,
-    outstanding: usize,
     /// Arrivals not yet delivered (partial prefill batches wait on these).
     arrivals_pending: usize,
 }
@@ -94,32 +66,12 @@ pub struct BaselineCluster {
 impl BaselineCluster {
     pub fn new(cfg: BaselineConfig) -> Self {
         let pages = (cfg.cost.kv_capacity_tokens() / 16) as u32;
-        let insts = (0..cfg.n_instances)
-            .map(|_| CoupledInst {
-                waiting: VecDeque::new(),
-                waiting_tokens: 0,
-                // residency is memory-bound, not batch-bound: the fixed
-                // batch caps the per-iteration *step window* (see
-                // try_start), not how many requests hold pages.
-                dec: DecodeScheduler::new(DecodePolicy::Greedy, 200, u32::MAX),
-                kv: PagedKvCache::new(pages.max(2), 16),
-                busy: false,
-                pending: (Vec::new(), Vec::new()),
-            })
-            .collect();
+        let insts = (0..cfg.n_instances).map(|_| CoupledInst::new(pages)).collect();
         let n = cfg.n_instances;
         BaselineCluster {
             cfg,
-            queue: EventQueue::new(),
+            core: EngineCore::new(n),
             insts,
-            requests: Vec::new(),
-            metrics: RunMetrics {
-                busy_us: vec![0; n],
-                alive_us: vec![0; n],
-                decode_assign: vec![(0, 0); n],
-                ..Default::default()
-            },
-            outstanding: 0,
             arrivals_pending: 0,
         }
     }
@@ -133,54 +85,18 @@ impl BaselineCluster {
     /// has no fabric, monitor, or flips). Metrics are bit-identical to
     /// `run` whatever the observer does.
     pub fn run_observed(mut self, trace: Vec<Request>, obs: &mut dyn Observer) -> RunMetrics {
-        self.outstanding = trace.len();
-        self.arrivals_pending = trace.len();
-        self.requests = trace
-            .into_iter()
-            .map(|req| ReqState { req, first_token: NO_TIME })
-            .collect();
-        for slot in 0..self.requests.len() {
-            self.queue
-                .schedule_at(self.requests[slot].req.arrival, Event::Arrival(slot as ReqId));
-        }
-        while self.outstanding > 0 {
-            let Some((_, ev)) = self.queue.pop() else {
-                panic!("baseline deadlock: {} outstanding", self.outstanding);
-            };
-            self.metrics.events += 1;
-            match ev {
-                Event::Arrival(slot) => self.on_arrival(slot, obs),
-                Event::CoupledIterDone { instance } => self.on_iter_done(instance, obs),
-                _ => unreachable!("unexpected event in baseline"),
-            }
-        }
-        self.metrics.makespan_us = self.queue.now();
-        for a in self.metrics.alive_us.iter_mut() {
-            *a = self.queue.now();
-        }
-        for inst in &self.insts {
-            self.metrics.swapped_tokens += inst.kv.swapped_out_tokens;
-        }
-        self.metrics
+        run_des(&mut self, trace, obs)
     }
 
     fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
-        {
-            let req = self.requests[slot as usize].req;
-            obs.on_arrival(self.queue.now(), &req);
-        }
+        self.core.note_arrival(slot, obs);
         // Least-loaded coupled instance (waiting prompts + resident jobs)
         // — O(n_instances) over maintained counters.
         let i = (0..self.insts.len())
-            .min_by_key(|&i| {
-                let inst = &self.insts[i];
-                inst.waiting_tokens + inst.dec.total_jobs() as u64 * 64
-            })
+            .min_by_key(|&i| self.insts[i].route_load())
             .unwrap();
-        let plen = self.requests[slot as usize].req.prompt_len;
-        let inst = &mut self.insts[i];
-        inst.waiting.push_back(slot);
-        inst.waiting_tokens += plen as u64;
+        let plen = self.core.requests[slot as usize].req.prompt_len;
+        self.insts[i].enqueue(slot, plen);
         self.arrivals_pending -= 1;
         if self.arrivals_pending == 0 {
             // last arrival: partial batches may now run everywhere
@@ -194,132 +110,78 @@ impl BaselineCluster {
 
     fn try_start(&mut self, i: usize, obs: &mut dyn Observer) {
         let cost = self.cfg.cost;
-        let prefill_batch = self.cfg.prefill_batch;
         // May a partial prefill batch run? Only when no future arrival
         // could still fill it and the decode side gives us nothing to do.
         let more_arrivals = self.arrivals_pending > 0;
-        let inst = &mut self.insts[i];
-        if inst.busy {
+        let now = self.core.now();
+        let Some(st) = self.insts[i].begin_iteration(
+            &self.core.requests,
+            &cost,
+            self.cfg.prefill_batch,
+            self.cfg.max_batch,
+            more_arrivals,
+            now,
+        ) else {
             return;
-        }
-        inst.pending.0.clear();
-        inst.pending.1.clear();
-        // (a) fixed-batch prefill: wait for `prefill_batch` prompts, then
-        // prefill them all in one iteration (greedy memory admission).
-        let mut prefill_tokens = 0u32;
-        let batch_ready = inst.waiting.len() >= prefill_batch
-            || (!inst.waiting.is_empty() && (!more_arrivals || inst.dec.total_jobs() == 0));
-        if batch_ready {
-            while inst.pending.0.len() < prefill_batch {
-                let Some(&slot) = inst.waiting.front() else { break };
-                let plen = self.requests[slot as usize].req.prompt_len;
-                if !inst.kv.can_fit(slot, plen + 1) {
-                    break; // head-of-line block: vLLM stalls prefill on memory
-                }
-                inst.waiting.pop_front();
-                inst.waiting_tokens -= plen as u64;
-                inst.kv.alloc(slot, plen + 1).expect("can_fit checked");
-                prefill_tokens += plen;
-                inst.pending.0.push(slot);
-            }
-        }
-        // (b) decodes ride the same iteration, capped at the *fixed* batch
-        // size (FCFS window over resident jobs — vanilla vLLM semantics).
-        let paged_in = inst.dec.admit(&mut inst.kv);
-        let window = (self.cfg.max_batch as usize).min(inst.dec.n_resident());
-        let batch = window as u32;
-        let kv_tokens: u64 = inst.dec.running()[..window]
-            .iter()
-            .map(|j| j.kv_tokens() as u64)
-            .sum();
-        if inst.pending.0.is_empty() && batch == 0 {
-            return;
-        }
-        let swapped_out = inst.dec.step_n(&mut inst.kv, window, &mut inst.pending.1);
-        debug_assert!(inst.kv.check_invariants().is_ok());
-        let dur = cost.mixed_iter_us(prefill_tokens, batch, kv_tokens)
-            + cost.swap_us(swapped_out + paged_in_swapped(paged_in, &inst.dec));
-
-        // Prefilled requests become decode jobs at iteration end. Their
-        // pages were allocated above, so they enter the running batch
-        // directly (the scheduler keeps its aggregates in sync).
-        for k in 0..inst.pending.0.len() {
-            let slot = inst.pending.0[k];
-            let st = &self.requests[slot as usize];
-            // scheduler-facing meta keyed by the arena slot, not the
-            // original request id
-            let meta = ReqMeta { id: slot, ..st.req.meta() };
-            let mut job = DecodeJob::new(meta, st.req.decode_len);
-            job.generated = 1;
-            inst.dec.inject_running(job);
-        }
-        inst.busy = true;
-        self.metrics.busy_us[i] += dur;
-        self.queue.schedule_in(dur, Event::CoupledIterDone { instance: i });
+        };
+        self.core.metrics.busy_us[i] += st.dur;
+        self.core.queue.schedule_in(st.dur, Event::CoupledIterDone { instance: i });
         // One mixed iteration = a prefill side and a decode side sharing
         // `dur`: report whichever sides are non-empty.
-        let now = self.queue.now();
-        if prefill_tokens > 0 {
-            obs.on_chunk(now, i, prefill_tokens, 0, dur);
+        if st.prefill_tokens > 0 {
+            obs.on_chunk(now, i, st.prefill_tokens, 0, st.dur);
         }
-        if batch > 0 {
-            obs.on_decode_iter(now, i, batch, kv_tokens, dur);
+        if st.batch > 0 {
+            obs.on_decode_iter(now, i, st.batch, st.kv_tokens, st.dur);
         }
     }
 
     fn on_iter_done(&mut self, i: usize, obs: &mut dyn Observer) {
-        let now = self.queue.now();
-        let (mut prefilled, mut done) = {
-            let inst = &mut self.insts[i];
-            inst.busy = false;
-            (
-                std::mem::take(&mut inst.pending.0),
-                std::mem::take(&mut inst.pending.1),
-            )
-        };
+        let now = self.core.now();
+        let (mut prefilled, mut done) = self.insts[i].end_iteration(now);
         for slot in prefilled.drain(..) {
-            self.requests[slot as usize].first_token = now;
+            self.core.requests[slot as usize].first_token = now;
             // single-token requests finish at prefill
-            if self.requests[slot as usize].req.decode_len <= 1 {
-                let inst = &mut self.insts[i];
-                if inst.dec.remove_running(slot).is_some() {
-                    inst.kv.release(slot);
-                }
-                self.finish(slot, now, obs);
+            if self.core.requests[slot as usize].req.decode_len <= 1 {
+                self.insts[i].drop_running(slot);
+                self.core.finish(slot, now, obs);
             }
         }
         for slot in done.drain(..) {
-            self.finish(slot, now, obs);
+            self.core.finish(slot, now, obs);
         }
         // hand the buffers back so the next iteration reuses their capacity
-        self.insts[i].pending = (prefilled, done);
+        self.insts[i].return_bufs(prefilled, done);
         self.try_start(i, obs);
-    }
-
-    fn finish(&mut self, slot: ReqId, now: Us, obs: &mut dyn Observer) {
-        let st = &self.requests[slot as usize];
-        let first = if st.first_token == NO_TIME { now } else { st.first_token };
-        let rec = RequestRecord {
-            id: st.req.id,
-            task: st.req.task,
-            prompt_len: st.req.prompt_len,
-            decode_len: st.req.decode_len,
-            arrival: st.req.arrival,
-            first_token: first,
-            finished: now,
-            predicted: None,
-        };
-        obs.on_finish(now, &rec);
-        self.metrics.records.push(rec);
-        self.outstanding -= 1;
     }
 }
 
-fn paged_in_swapped(paged_in: u64, dec: &DecodeScheduler) -> u64 {
-    if dec.running_has_swap_history() {
-        paged_in
-    } else {
-        0
+impl EngineHost for BaselineCluster {
+    fn core_mut(&mut self) -> &mut EngineCore {
+        &mut self.core
+    }
+
+    fn driver_name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn begin(&mut self, _obs: &mut dyn Observer) {
+        self.arrivals_pending = self.core.requests.len();
+    }
+
+    fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {
+        match ev {
+            Event::Arrival(slot) => self.on_arrival(slot, obs),
+            Event::CoupledIterDone { instance } => self.on_iter_done(instance, obs),
+            _ => unreachable!("unexpected event in baseline"),
+        }
+    }
+
+    fn end(&mut self, _obs: &mut dyn Observer) {
+        self.core.stamp_alive_full_run();
+        for inst in &self.insts {
+            self.core.metrics.swapped_tokens += inst.kv.swapped_out_tokens;
+        }
     }
 }
 

@@ -9,102 +9,52 @@
 //!           → decode local scheduler (greedy/reserve-*, §3.4)
 //!           → continuous-batching decode until completion
 //!
-//! plus the cluster monitor's periodic load broadcast and instance
-//! flipping (§3.5). Deterministic given (config, trace).
+//! plus the cluster monitor's periodic load broadcast, instance flipping
+//! (§3.5), elastic pool scaling, and — in hybrid mode (`n_coupled > 0`)
+//! — coupled vanilla-vLLM instances serving inside the same cluster.
+//! Deterministic given (config, trace).
 //!
-//! Hot-path layout (see DESIGN.md §Hot paths): the request book is a
-//! dense arena `Vec<ReqState>` — at `run()` the trace is renumbered so
-//! every event carries an arena *slot*, and every per-event lookup is a
-//! direct index (no hashing, no `Request` clones). Per-instance load is
-//! read from O(1) cached counters, the least-loaded prefill choice is
-//! served from a dirty-tracked cache, and the monitor tick reuses its
+//! Since the instance-engine refactor this file is *policy glue*: the
+//! arena request store, event loop and finish bookkeeping live in
+//! `sim::EngineCore` (shared with the coupled baseline driver), and the
+//! per-role iteration mechanics live in `instance::{PrefillInst,
+//! DecodeInst, CoupledInst}` behind `instance::InstancePool`'s role state
+//! machine. What remains here is the §3.2 routing, the two-level
+//! scheduling decisions, the monitor, and the flip/scale policies.
+//!
+//! Hot-path layout (see DESIGN.md §Hot paths): events carry dense arena
+//! *slots* (no hashing, no `Request` clones), per-instance load is read
+//! from O(1) cached counters, the least-loaded prefill choice is served
+//! from a dirty-tracked cache, and the monitor tick reuses its
 //! `broadcast`/`since_tick` buffers instead of reallocating them.
 
 use crate::api::{NullObserver, Observer};
-use crate::decode::{DecodeJob, DecodeScheduler};
+use crate::decode::DecodeJob;
 use crate::fabric::Fabric;
-use crate::kvcache::PagedKvCache;
+use crate::instance::{
+    CoupledInst, DecodeInst, DrainTarget, InstancePool, InstanceRole, InstanceState, PrefillInst,
+};
 use crate::metrics::RunMetrics;
 use crate::predictor::{OraclePredictor, Predictor};
-use crate::prefill::{choose, Chunk, Chunker, DecodeLoad, PrefillScheduler};
-use crate::sim::{Event, EventQueue};
-use crate::types::{ReqId, ReqMeta, Request, RequestRecord, Role, Us};
+use crate::prefill::{choose, predicted_footprint, DecodeLoad};
+use crate::sim::{run_des, EngineCore, EngineHost, Event};
+use crate::types::{ReqId, Request, Role, Us, HEAVY_DECODE_TOKENS};
 use crate::util::Pcg;
 
 use super::config::{ClusterConfig, PredictorMode};
 
-/// Predictions a single saturated chunk iteration can absorb in parallel
-/// mode (the predict model is ~10x faster than the target, §3.3.2).
-const PREDICTIONS_PER_CHUNK: u32 = 10;
-/// Main-LLM slowdown while co-running the predictor (Figure 17: ~10%).
-const PARALLEL_PREDICT_OVERHEAD: f64 = 0.10;
-
-/// Sentinel for "first token not yet produced".
-const NO_TIME: Us = Us::MAX;
-
-/// Arena entry: one request plus the driver-side state that used to live
-/// in side HashMaps (first-token time) or nowhere at all (the prefilling
-/// instance, which the KV-release path needs — see
-/// `release_prefill_resident`).
-struct ReqState {
-    req: Request,
-    first_token: Us,
-    /// The prefill instance (and its flip epoch) holding this request's
-    /// prompt KV until the transfer out completes. Consumed (`take`n)
-    /// exactly once; the epoch guards against the instance flipping away
-    /// and back while the KV is in flight (a reborn incarnation must not
-    /// have a stale release land on its counter).
-    prefilled_by: Option<(usize, u32)>,
-    /// The arrival event fired at least once (mid-flip retries re-enqueue
-    /// `Event::Arrival`; observers must see one arrival per request).
-    seen: bool,
-}
-
-struct PrefillInst {
-    sched: PrefillScheduler,
-    chunker: Chunker,
-    busy: bool,
-    /// Chunk currently executing (applied at PrefillIterDone).
-    current: Option<Chunk>,
-    /// KV tokens resident for prefilled-but-untransferred requests plus
-    /// in-flight chunked requests (backpressure input).
-    resident_kv: u64,
-    /// Predictions waiting to ride the accelerator (parallel mode).
-    pending_pred: u32,
-    last_active: Us,
-}
-
-impl PrefillInst {
-    /// Scheduling load (§3.2): queued + in-flight prompt tokens. O(1) —
-    /// both counters are maintained incrementally.
-    fn load(&self) -> u64 {
-        self.sched.queued_tokens() + self.chunker.pending_tokens()
-    }
-}
-
-struct DecodeInst {
-    sched: DecodeScheduler,
-    kv: PagedKvCache,
-    busy: bool,
-    /// Completions computed at iteration start, recorded at iteration end
-    /// (buffer reused across iterations).
-    pending_done: Vec<ReqId>,
-    last_active: Us,
-}
-
-enum InstState {
-    Prefill(PrefillInst),
-    Decode(DecodeInst),
-    Flipping { to: Role },
+/// Which entry point an arrival is routed to (hybrid clusters have two).
+enum Entry {
+    Prefill(usize),
+    Coupled(usize),
 }
 
 pub struct Cluster {
     pub cfg: ClusterConfig,
-    queue: EventQueue,
-    insts: Vec<InstState>,
-    /// Request arena: everything the global scheduler has seen, indexed by
-    /// arena slot (events carry slots, not original request ids).
-    requests: Vec<ReqState>,
+    /// Shared DES engine: queue + arena + metrics + termination.
+    core: EngineCore,
+    /// The elastic instance pool (role state machines + epochs).
+    pool: InstancePool,
     /// Last monitor broadcast of decode loads (stale by design, §3.2).
     /// Buffer reused across ticks.
     broadcast: Vec<DecodeLoad>,
@@ -121,29 +71,33 @@ pub struct Cluster {
     /// drops below it.
     least_prefill: Option<usize>,
     least_prefill_dirty: bool,
-    /// Per-instance flip epoch: bumped when an instance leaves its role
-    /// (any in-flight references to the old incarnation become stale).
-    insts_epoch: Vec<u32>,
     predictor: OraclePredictor,
     fabric: Fabric,
     rng: Pcg,
-    pub metrics: RunMetrics,
     /// Prefilled requests awaiting a dispatch target (mid-flip windows).
     pending_dispatch: Vec<ReqId>,
-    /// Requests remaining (termination condition).
-    outstanding: usize,
+    /// Arrivals not yet enqueued into any local scheduler (coupled
+    /// partial prefill batches wait on these — vanilla vLLM semantics).
+    arrivals_pending: usize,
+    /// Swap tallies of role states that already left the pool (flips,
+    /// drains, retirements) — folded into `swapped_tokens` at run end so
+    /// they don't die with the role.
+    swapped_graveyard: u64,
 }
 
 impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
-        let mut insts = Vec::new();
+        let mut pool = InstancePool::new();
         for _ in 0..cfg.n_prefill {
-            insts.push(InstState::Prefill(new_prefill_inst(&cfg, 0)));
+            pool.push(InstanceState::Prefill(new_prefill_inst(&cfg, 0)));
         }
         for _ in 0..cfg.n_decode {
-            insts.push(InstState::Decode(new_decode_inst(&cfg)));
+            pool.push(InstanceState::Decode(new_decode_inst(&cfg)));
         }
-        let n = insts.len();
+        for _ in 0..cfg.n_coupled {
+            pool.push(InstanceState::Coupled(new_coupled_inst(&cfg)));
+        }
+        let n = pool.len();
         let predictor = OraclePredictor::new(
             cfg.granularity,
             cfg.n_buckets,
@@ -155,26 +109,19 @@ impl Cluster {
         let rng = Pcg::with_stream(cfg.seed, 0x1234_5678_9abc_def1);
         Cluster {
             cfg,
-            queue: EventQueue::new(),
-            insts,
-            requests: Vec::new(),
+            core: EngineCore::new(n),
+            pool,
             broadcast: Vec::new(),
             since_tick: vec![(0, 0, 0); n],
             loads_scratch: Vec::with_capacity(n),
             least_prefill: None,
             least_prefill_dirty: true,
-            insts_epoch: vec![0; n],
             predictor,
             fabric,
             rng,
-            metrics: RunMetrics {
-                busy_us: vec![0; n],
-                alive_us: vec![0; n],
-                decode_assign: vec![(0, 0); n],
-                ..Default::default()
-            },
             pending_dispatch: Vec::new(),
-            outstanding: 0,
+            arrivals_pending: 0,
+            swapped_graveyard: 0,
         }
     }
 
@@ -187,70 +134,21 @@ impl Cluster {
     /// The observer never influences the run: metrics are bit-identical
     /// to `run` (golden-tested through `api::Scenario`).
     pub fn run_observed(mut self, trace: Vec<Request>, obs: &mut dyn Observer) -> RunMetrics {
-        self.outstanding = trace.len();
-        // Renumber the trace into dense arena slots: all internal ids
-        // (events, KV tables, queues) are slots from here on; the original
-        // request id resurfaces only in the final RequestRecord.
-        self.requests = trace
-            .into_iter()
-            .map(|req| ReqState { req, first_token: NO_TIME, prefilled_by: None, seen: false })
-            .collect();
-        for slot in 0..self.requests.len() {
-            self.queue
-                .schedule_at(self.requests[slot].req.arrival, Event::Arrival(slot as ReqId));
-        }
-        self.refresh_broadcast();
-        self.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
-
-        while self.outstanding > 0 {
-            let Some((_, ev)) = self.queue.pop() else {
-                panic!(
-                    "cluster deadlock: {} requests outstanding, no events",
-                    self.outstanding
-                );
-            };
-            self.metrics.events += 1;
-            self.handle(ev, obs);
-        }
-        let now = self.queue.now();
-        self.metrics.makespan_us = now;
-        for a in self.metrics.alive_us.iter_mut() {
-            *a = now;
-        }
-        for inst in &self.insts {
-            if let InstState::Decode(d) = inst {
-                self.metrics.swapped_tokens += d.kv.swapped_out_tokens;
-            }
-        }
-        self.metrics
-    }
-
-    fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {
-        match ev {
-            Event::Arrival(slot) => self.on_arrival(slot, obs),
-            Event::PredictDone { instance, req } => self.on_predict_done(instance, req, obs),
-            Event::PrefillIterDone { instance } => self.on_prefill_done(instance, obs),
-            Event::TransferDone { instance, req } => self.on_transfer_done(instance, req, obs),
-            Event::DecodeIterDone { instance } => self.on_decode_done(instance, obs),
-            Event::MonitorTick => self.on_monitor_tick(obs),
-            Event::FlipDone { instance } => self.on_flip_done(instance),
-            Event::CoupledIterDone { .. } => unreachable!("coupled events belong to the baseline"),
-        }
-    }
-
-    /// Scheduler-facing view of an arena slot (slot becomes the id).
-    fn meta_of(&self, slot: ReqId) -> ReqMeta {
-        let r = &self.requests[slot as usize].req;
-        ReqMeta {
-            id: slot,
-            task: r.task,
-            arrival: r.arrival,
-            prompt_len: r.prompt_len,
-            predicted: r.predicted,
-        }
+        run_des(&mut self, trace, obs)
     }
 
     // --------------------------------------------- least-loaded prefill
+
+    /// Load of instance `i` iff it is a prefill instance accepting work.
+    fn prefill_load_of(&self, i: usize) -> Option<u64> {
+        if !self.pool.accepts_work(i) {
+            return None;
+        }
+        match self.pool.state(i) {
+            InstanceState::Prefill(p) => Some(p.load()),
+            _ => None,
+        }
+    }
 
     /// The cached instance's load grew (a request was routed to it): the
     /// cache may no longer be the minimum.
@@ -274,12 +172,10 @@ impl Cluster {
         if i == j {
             return; // the minimum got smaller: still the minimum
         }
-        let (InstState::Prefill(pi), InstState::Prefill(pj)) = (&self.insts[i], &self.insts[j])
-        else {
+        let (Some(li), Some(lj)) = (self.prefill_load_of(i), self.prefill_load_of(j)) else {
             self.least_prefill_dirty = true;
             return;
         };
-        let (li, lj) = (pi.load(), pj.load());
         if li < lj || (li == lj && i < j) {
             self.least_prefill = Some(i);
         }
@@ -287,19 +183,19 @@ impl Cluster {
 
     /// Least-loaded prefill instance (§3.2 "choose a prefill instance with
     /// the least load"). Serves from the cache when clean; otherwise one
-    /// O(n_instances) pass over the O(1) load counters.
+    /// O(n_instances) pass over the O(1) load counters. Draining
+    /// instances are skipped — they take no new work.
     fn pick_prefill(&mut self) -> Option<usize> {
         if !self.least_prefill_dirty {
             if let Some(i) = self.least_prefill {
-                if matches!(self.insts[i], InstState::Prefill(_)) {
+                if self.prefill_load_of(i).is_some() {
                     return Some(i);
                 }
             }
         }
         let mut best: Option<(usize, u64)> = None;
-        for (i, s) in self.insts.iter().enumerate() {
-            if let InstState::Prefill(p) = s {
-                let load = p.load();
+        for i in 0..self.pool.len() {
+            if let Some(load) = self.prefill_load_of(i) {
                 if best.map(|(_, bl)| load < bl).unwrap_or(true) {
                     best = Some((i, load));
                 }
@@ -310,125 +206,160 @@ impl Cluster {
         self.least_prefill
     }
 
+    /// Least-loaded coupled instance accepting work (hybrid mode only).
+    fn pick_coupled(&self) -> Option<usize> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, inst) in self.pool.iter().enumerate() {
+            if !inst.accepts_work() {
+                continue;
+            }
+            if let InstanceState::Coupled(c) = &inst.state {
+                let load = c.route_load();
+                if best.map(|(_, bl)| load < bl).unwrap_or(true) {
+                    best = Some((i, load));
+                }
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
     // ----------------------------------------------------------- arrival
 
     fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
-        if !self.requests[slot as usize].seen {
-            self.requests[slot as usize].seen = true;
-            let req = self.requests[slot as usize].req;
-            obs.on_arrival(self.queue.now(), &req);
-        }
-        let Some(i) = self.pick_prefill() else {
-            // No prefill instance right now (all flipped/flipping): retry
-            // after a monitor period.
-            let at = self.queue.now() + self.cfg.monitor_interval_us;
-            self.queue.schedule_at(at, Event::Arrival(slot));
-            return;
+        self.core.note_arrival(slot, obs);
+        // The coupled scan only exists in hybrid mode — a pure
+        // disaggregated pool can never gain coupled instances mid-run,
+        // so the arrival hot path stays on the O(1) prefill cache.
+        let coupled = if self.cfg.n_coupled == 0 { None } else { self.pick_coupled() };
+        let entry = match (self.pick_prefill(), coupled) {
+            (Some(i), None) => Entry::Prefill(i),
+            (None, Some(c)) => Entry::Coupled(c),
+            (Some(i), Some(c)) => {
+                // Hybrid routing: both architectures expose a
+                // token-denominated entry load; the arrival takes the
+                // emptier front door (prefill wins ties — the
+                // disaggregated path is the paper's default).
+                let pl = self.prefill_load_of(i).unwrap_or(u64::MAX);
+                let cl = match self.pool.state(c) {
+                    InstanceState::Coupled(ci) => ci.route_load(),
+                    _ => u64::MAX,
+                };
+                if pl <= cl { Entry::Prefill(i) } else { Entry::Coupled(c) }
+            }
+            (None, None) => {
+                // No entry point right now (all flipped/flipping): retry
+                // after a monitor period.
+                let at = self.core.now() + self.cfg.monitor_interval_us;
+                self.core.queue.schedule_at(at, Event::Arrival(slot));
+                return;
+            }
         };
+        match entry {
+            Entry::Prefill(i) => self.route_to_prefill(slot, i, obs),
+            Entry::Coupled(c) => self.route_to_coupled(slot, c, obs),
+        }
+    }
 
+    fn route_to_prefill(&mut self, slot: ReqId, i: usize, obs: &mut dyn Observer) {
         match self.cfg.predictor_mode {
             PredictorMode::Parallel => {
                 // Prediction rides alongside; request is immediately
                 // schedulable, concurrent chunks pay the Figure 17 tax.
-                let dlen = self.requests[slot as usize].req.decode_len;
+                let dlen = self.core.requests[slot as usize].req.decode_len;
                 let pred = self.predictor.predict(&[], dlen);
-                self.requests[slot as usize].req.predicted = Some(pred);
-                let meta = self.meta_of(slot);
-                let p = self.prefill_mut(i);
+                self.core.requests[slot as usize].req.predicted = Some(pred);
+                let meta = self.core.meta_of(slot);
+                let p = self.pool.prefill_mut(i).expect("routed to a prefill instance");
                 p.pending_pred += 1;
                 p.sched.push(meta);
                 self.note_prefill_load_increased(i);
+                self.note_enqueued(obs);
                 self.try_start_prefill(i, obs);
             }
             PredictorMode::Sequential => {
-                let tokens = self.requests[slot as usize].req.prompt_len.min(512);
+                let tokens = self.core.requests[slot as usize].req.prompt_len.min(512);
                 let dur = self.cfg.cost.predictor_iter_us(tokens);
-                self.queue.schedule_in(dur, Event::PredictDone { instance: i, req: slot });
+                self.core.queue.schedule_in(dur, Event::PredictDone { instance: i, req: slot });
             }
             PredictorMode::Disabled => {
-                let meta = self.meta_of(slot);
-                self.prefill_mut(i).sched.push(meta);
+                let meta = self.core.meta_of(slot);
+                let p = self.pool.prefill_mut(i).expect("routed to a prefill instance");
+                p.sched.push(meta);
                 self.note_prefill_load_increased(i);
+                self.note_enqueued(obs);
                 self.try_start_prefill(i, obs);
+            }
+        }
+    }
+
+    fn route_to_coupled(&mut self, slot: ReqId, c: usize, obs: &mut dyn Observer) {
+        let plen = self.core.requests[slot as usize].req.prompt_len;
+        let ci = self.pool.coupled_mut(c).expect("routed to a coupled instance");
+        ci.enqueue(slot, plen);
+        self.note_enqueued(obs);
+        self.try_start_coupled(c, obs);
+    }
+
+    /// A request left the global queue into a local scheduler. The last
+    /// one unblocks coupled partial prefill batches everywhere (mirrors
+    /// the standalone baseline's last-arrival kick).
+    fn note_enqueued(&mut self, obs: &mut dyn Observer) {
+        self.arrivals_pending -= 1;
+        if self.arrivals_pending == 0 && self.cfg.n_coupled > 0 {
+            for c in 0..self.pool.len() {
+                if matches!(self.pool.state(c), InstanceState::Coupled(_)) {
+                    self.try_start_coupled(c, obs);
+                }
             }
         }
     }
 
     fn on_predict_done(&mut self, i: usize, slot: ReqId, obs: &mut dyn Observer) {
-        let dlen = self.requests[slot as usize].req.decode_len;
+        let dlen = self.core.requests[slot as usize].req.decode_len;
         let pred = self.predictor.predict(&[], dlen);
-        self.requests[slot as usize].req.predicted = Some(pred);
-        let meta = self.meta_of(slot);
-        if let InstState::Prefill(p) = &mut self.insts[i] {
-            p.sched.push(meta);
-            self.note_prefill_load_increased(i);
-            self.try_start_prefill(i, obs);
-        } else {
-            // instance flipped while predicting: re-route
-            self.queue.schedule_in(0, Event::Arrival(slot));
+        self.core.requests[slot as usize].req.predicted = Some(pred);
+        let meta = self.core.meta_of(slot);
+        if self.pool.accepts_work(i) {
+            if let Some(p) = self.pool.prefill_mut(i) {
+                p.sched.push(meta);
+                self.note_prefill_load_increased(i);
+                self.note_enqueued(obs);
+                self.try_start_prefill(i, obs);
+                return;
+            }
         }
+        // instance flipped (or began draining) while predicting: re-route
+        self.core.queue.schedule_in(0, Event::Arrival(slot));
     }
 
     // ----------------------------------------------------------- prefill
 
-    fn prefill_mut(&mut self, i: usize) -> &mut PrefillInst {
-        match &mut self.insts[i] {
-            InstState::Prefill(p) => p,
-            _ => panic!("instance {i} is not a prefill instance"),
-        }
-    }
-
     fn try_start_prefill(&mut self, i: usize, obs: &mut dyn Observer) {
         let cap = self.cfg.cost.kv_capacity_tokens();
         let chunk_size = self.cfg.chunk_size;
-        let InstState::Prefill(p) = &mut self.insts[i] else { return };
+        let cost = self.cfg.cost;
+        let now = self.core.now();
+        let Some(p) = self.pool.prefill_mut(i) else { return };
         if p.busy {
             return;
         }
-        // Admit scheduled requests into the chunker lazily — just enough
-        // to keep the next iterations fed. The backlog stays in the local
-        // scheduler where PrefillSchedBatch sorting applies (§3.3.1), and
-        // KV backpressure caps residency (prompt KV lives here until
-        // transferred out). Moving a request sched → chunker leaves the
-        // instance's total load unchanged.
-        while p.chunker.pending_tokens() < 2 * chunk_size as u64 {
-            let Some(nxt) = p.sched.peek() else { break };
-            if p.resident_kv + nxt.prompt_len as u64 > cap {
-                break;
-            }
-            let m = p.sched.pop().unwrap();
-            p.resident_kv += m.prompt_len as u64;
-            p.chunker.admit(m);
-        }
-        let Some(chunk) = p.chunker.next_chunk() else { return };
-        // Fixed-size iteration, charged by real tokens: the ChunkSize cap
-        // is what prevents over-saturated iterations (§3.3.3); the final
-        // partial chunk's zero-padding is shape filler, not useful compute
-        // (under the paper's stress workloads chunks are full anyway, so
-        // this matches their regime — see DESIGN.md §Calibration).
-        let mut dur = self.cfg.cost.prefill_iter_us(chunk.tokens);
-        if p.pending_pred > 0 {
-            dur = (dur as f64 * (1.0 + PARALLEL_PREDICT_OVERHEAD)) as Us;
-            p.pending_pred = p.pending_pred.saturating_sub(PREDICTIONS_PER_CHUNK);
-        }
-        let (tokens, pad) = (chunk.tokens, chunk.pad());
-        p.current = Some(chunk);
-        p.busy = true;
-        p.last_active = self.queue.now();
-        self.metrics.busy_us[i] += dur;
-        self.queue.schedule_in(dur, Event::PrefillIterDone { instance: i });
-        obs.on_chunk(self.queue.now(), i, tokens, pad, dur);
+        p.admit_ready(chunk_size, cap);
+        let Some((tokens, pad, dur)) = p.begin_chunk(&cost, now) else { return };
+        self.core.metrics.busy_us[i] += dur;
+        self.core.queue.schedule_in(dur, Event::PrefillIterDone { instance: i });
+        obs.on_chunk(now, i, tokens, pad, dur);
         // slicing the chunk shrank this instance's pending load
         self.note_prefill_load_decreased(i);
     }
 
     fn on_prefill_done(&mut self, i: usize, obs: &mut dyn Observer) {
-        let now = self.queue.now();
+        let now = self.core.now();
         let chunk = {
-            let p = self.prefill_mut(i);
-            p.busy = false;
-            p.last_active = now;
-            p.current.take().expect("iteration completed without a chunk")
+            let p = self
+                .pool
+                .prefill_mut(i)
+                .expect("prefill iteration completed on a non-prefill instance");
+            p.end_chunk(now)
         };
         for seg in &chunk.segments {
             if !seg.last {
@@ -436,13 +367,13 @@ impl Cluster {
             }
             // Request fully prefilled: first token exists now (TTFT).
             let slot = seg.req;
-            let epoch = self.insts_epoch[i];
-            let st = &mut self.requests[slot as usize];
+            let epoch = self.pool.epoch(i);
+            let st = &mut self.core.requests[slot as usize];
             st.first_token = now;
             st.prefilled_by = Some((i, epoch));
             if st.req.decode_len <= 1 {
                 // prefill's own token completes the request
-                self.finish(slot, now, obs);
+                self.core.finish(slot, now, obs);
                 self.release_prefill_resident(slot);
                 continue;
             }
@@ -460,7 +391,7 @@ impl Cluster {
     /// The §3.3.4 dispatch: stale broadcast + own recent sends → α/β split
     /// → power-of-two → least interference; then schedule the KV transfer.
     fn dispatch_request(&mut self, slot: ReqId, obs: &mut dyn Observer) -> bool {
-        let req = self.requests[slot as usize].req;
+        let req = self.core.requests[slot as usize].req;
         // merge broadcast with what we dispatched since the last tick
         // (into the reusable scratch buffer — this runs once per request)
         self.loads_scratch.clear();
@@ -485,7 +416,7 @@ impl Cluster {
         let Some(d) = target else { return false };
         let heavy = req
             .predicted
-            .map(|p| p.predicts_heavy(crate::types::HEAVY_DECODE_TOKENS))
+            .map(|p| p.predicts_heavy(HEAVY_DECODE_TOKENS))
             .unwrap_or(false);
         let entry = &mut self.since_tick[d];
         if heavy {
@@ -493,7 +424,7 @@ impl Cluster {
         } else {
             entry.1 += 1;
         }
-        entry.2 += crate::prefill::predicted_footprint(req.prompt_len, req.predicted, self.cfg.granularity);
+        entry.2 += predicted_footprint(req.prompt_len, req.predicted, self.cfg.granularity);
         // Exposed transfer latency: request-level ships everything now;
         // chunk-level already overlapped earlier chunks with compute and
         // only the tail chunk's wire time remains visible (§3.3.4).
@@ -503,8 +434,8 @@ impl Cluster {
         let dur = self
             .fabric
             .exposed_transfer_us(n_chunks, chunk_tokens, chunk_compute);
-        self.queue.schedule_in(dur, Event::TransferDone { instance: d, req: slot });
-        obs.on_transfer(self.queue.now(), d, req.id, req.prompt_len, dur);
+        self.core.queue.schedule_in(dur, Event::TransferDone { instance: d, req: slot });
+        obs.on_transfer(self.core.now(), d, req.id, req.prompt_len, dur);
         true
     }
 
@@ -514,113 +445,126 @@ impl Cluster {
         // KV has left the prefill instance: release backpressure there.
         self.release_prefill_resident(slot);
 
-        let req = self.requests[slot as usize].req;
-        let meta = self.meta_of(slot);
-        match &mut self.insts[d] {
-            InstState::Decode(di) => {
-                if req.heavy_decode() {
-                    self.metrics.decode_assign[d].0 += 1;
-                } else {
-                    self.metrics.decode_assign[d].1 += 1;
-                }
+        let req = self.core.requests[slot as usize].req;
+        let meta = self.core.meta_of(slot);
+        // A draining decode instance still accepts KV that was already in
+        // flight toward it (rejecting would pay the transfer twice).
+        let accepted = match self.pool.decode_mut(d) {
+            Some(di) => {
                 let mut job = DecodeJob::new(meta, req.decode_len);
                 job.generated = 1; // prefill produced the first token
                 di.sched.enqueue(job);
-                self.try_start_decode(d, obs);
+                true
             }
-            _ => {
-                // Instance flipped away while the KV was in flight: pick a
-                // new decode instance and pay the transfer again.
-                if !self.dispatch_request(slot, obs) {
-                    self.pending_dispatch.push(slot);
-                }
+            None => false,
+        };
+        if accepted {
+            if req.heavy_decode() {
+                self.core.metrics.decode_assign[d].0 += 1;
+            } else {
+                self.core.metrics.decode_assign[d].1 += 1;
+            }
+            self.try_start_decode(d, obs);
+        } else {
+            // Instance flipped away while the KV was in flight: pick a
+            // new decode instance and pay the transfer again.
+            if !self.dispatch_request(slot, obs) {
+                self.pending_dispatch.push(slot);
             }
         }
     }
 
     /// Release the prompt KV held on the prefill instance that actually
     /// prefilled this request (recorded at prefill completion, consumed
-    /// exactly once). If that instance flipped away while the KV was in
+    /// exactly once). If that instance left its role while the KV was in
     /// flight, its residency counter died with the role change and there
-    /// is nothing to release. Releasing *only* at the recorded instance
-    /// keeps the per-instance backpressure signal honest under
-    /// multi-prefill configs (previously the subtraction landed on
-    /// whichever instance's counter happened to fit).
+    /// is nothing to release — the epoch check catches reborn
+    /// incarnations. Releasing *only* at the recorded instance keeps the
+    /// per-instance backpressure signal honest under multi-prefill
+    /// configs.
     fn release_prefill_resident(&mut self, slot: ReqId) {
-        let st = &mut self.requests[slot as usize];
+        let st = &mut self.core.requests[slot as usize];
         let plen = st.req.prompt_len as u64;
         let Some((i, epoch)) = st.prefilled_by.take() else { return };
-        if self.insts_epoch[i] != epoch {
-            return; // instance flipped since: that residency died with it
+        if self.pool.epoch(i) != epoch {
+            return; // instance left its role since: that residency died with it
         }
-        if let InstState::Prefill(p) = &mut self.insts[i] {
-            p.resident_kv = p.resident_kv.saturating_sub(plen);
+        if let Some(p) = self.pool.prefill_mut(i) {
+            p.release_resident(plen);
         }
     }
 
     fn try_start_decode(&mut self, d: usize, obs: &mut dyn Observer) {
         let cost = self.cfg.cost;
-        let now = self.queue.now();
-        let InstState::Decode(di) = &mut self.insts[d] else { return };
-        if di.busy {
-            return;
-        }
-        let paged_in = di.sched.admit(&mut di.kv);
-        if di.sched.n_resident() == 0 {
-            return;
-        }
-        // Execute the iteration's effects now; expose them at IterDone.
-        let batch = di.sched.n_resident() as u32;
-        let kv_tokens = di.sched.running_kv_tokens();
-        di.pending_done.clear();
-        let swapped_out = di.sched.step(&mut di.kv, &mut di.pending_done);
-        debug_assert!(di.kv.check_invariants().is_ok());
-        // Iteration cost: compute + any PCIe swap traffic this iteration
-        // (victim page-out now, victim page-in when it re-admits).
-        let dur = cost.decode_iter_us(batch, kv_tokens)
-            + cost.swap_us(swapped_out)
-            + cost.swap_us(paged_in_swapins(paged_in, &di.sched));
-        di.busy = true;
-        di.last_active = now;
-        self.metrics.busy_us[d] += dur;
-        self.queue.schedule_in(dur, Event::DecodeIterDone { instance: d });
-        obs.on_decode_iter(now, d, batch, kv_tokens, dur);
+        let now = self.core.now();
+        let Some(di) = self.pool.decode_mut(d) else { return };
+        let Some(st) = di.begin_iteration(&cost, now) else { return };
+        self.core.metrics.busy_us[d] += st.dur;
+        self.core.queue.schedule_in(st.dur, Event::DecodeIterDone { instance: d });
+        obs.on_decode_iter(now, d, st.batch, st.kv_tokens, st.dur);
     }
 
     fn on_decode_done(&mut self, d: usize, obs: &mut dyn Observer) {
-        let now = self.queue.now();
-        let mut done = {
-            let InstState::Decode(di) = &mut self.insts[d] else { return };
-            di.busy = false;
-            di.last_active = now;
-            std::mem::take(&mut di.pending_done)
-        };
+        let now = self.core.now();
+        let Some(di) = self.pool.decode_mut(d) else { return };
+        let mut done = di.end_iteration(now);
         for slot in done.drain(..) {
-            self.finish(slot, now, obs);
+            self.core.finish(slot, now, obs);
         }
         // hand the buffer back so the next iteration reuses its capacity
-        if let InstState::Decode(di) = &mut self.insts[d] {
-            di.pending_done = done;
+        if let Some(di) = self.pool.decode_mut(d) {
+            di.return_done_buf(done);
         }
         self.try_start_decode(d, obs);
     }
 
-    fn finish(&mut self, slot: ReqId, now: Us, obs: &mut dyn Observer) {
-        let st = &self.requests[slot as usize];
-        let first = if st.first_token == NO_TIME { now } else { st.first_token };
-        let rec = RequestRecord {
-            id: st.req.id,
-            task: st.req.task,
-            prompt_len: st.req.prompt_len,
-            decode_len: st.req.decode_len,
-            arrival: st.req.arrival,
-            first_token: first,
-            finished: now,
-            predicted: st.req.predicted,
+    // ----------------------------------------------------------- coupled
+
+    fn try_start_coupled(&mut self, c: usize, obs: &mut dyn Observer) {
+        let cost = self.cfg.cost;
+        let batch = self.cfg.coupled_batch;
+        let more_arrivals = self.arrivals_pending > 0;
+        let now = self.core.now();
+        let Some(ci) = self.pool.coupled_mut(c) else { return };
+        let Some(st) =
+            ci.begin_iteration(&self.core.requests, &cost, batch, batch as u32, more_arrivals, now)
+        else {
+            return;
         };
-        obs.on_finish(now, &rec);
-        self.metrics.records.push(rec);
-        self.outstanding -= 1;
+        self.core.metrics.busy_us[c] += st.dur;
+        self.core.queue.schedule_in(st.dur, Event::CoupledIterDone { instance: c });
+        // One mixed iteration = a prefill side and a decode side sharing
+        // `dur`: report whichever sides are non-empty.
+        if st.prefill_tokens > 0 {
+            obs.on_chunk(now, c, st.prefill_tokens, 0, st.dur);
+        }
+        if st.batch > 0 {
+            obs.on_decode_iter(now, c, st.batch, st.kv_tokens, st.dur);
+        }
+    }
+
+    fn on_coupled_done(&mut self, c: usize, obs: &mut dyn Observer) {
+        let now = self.core.now();
+        let Some(ci) = self.pool.coupled_mut(c) else { return };
+        let (mut prefilled, mut done) = ci.end_iteration(now);
+        for slot in prefilled.drain(..) {
+            self.core.requests[slot as usize].first_token = now;
+            // single-token requests finish at prefill
+            if self.core.requests[slot as usize].req.decode_len <= 1 {
+                if let Some(ci) = self.pool.coupled_mut(c) {
+                    ci.drop_running(slot);
+                }
+                self.core.finish(slot, now, obs);
+            }
+        }
+        for slot in done.drain(..) {
+            self.core.finish(slot, now, obs);
+        }
+        // hand the buffers back so the next iteration reuses their capacity
+        if let Some(ci) = self.pool.coupled_mut(c) {
+            ci.return_bufs(prefilled, done);
+        }
+        self.try_start_coupled(c, obs);
     }
 
     // ----------------------------------------------------------- monitor
@@ -631,8 +575,11 @@ impl Cluster {
             *e = (0, 0, 0);
         }
         self.broadcast.clear();
-        for (i, s) in self.insts.iter().enumerate() {
-            if let InstState::Decode(di) = s {
+        for (i, inst) in self.pool.iter().enumerate() {
+            if !inst.accepts_work() {
+                continue; // draining decodes take no new dispatches
+            }
+            if let InstanceState::Decode(di) = &inst.state {
                 let (h, l) = di.sched.heavy_light();
                 self.broadcast.push(DecodeLoad {
                     instance: i,
@@ -647,57 +594,95 @@ impl Cluster {
 
     fn on_monitor_tick(&mut self, obs: &mut dyn Observer) {
         self.refresh_broadcast();
-        obs.on_monitor(self.queue.now(), &self.broadcast);
-        self.maybe_flip(obs);
+        obs.on_monitor(self.core.now(), &self.broadcast);
+        self.complete_drains(obs);
+        // Queued work per role, computed once per tick for both the flip
+        // and the scale policies.
+        let (prefill_pressure, decode_pressure) = self.role_pressures();
+        self.maybe_flip(prefill_pressure, decode_pressure, obs);
+        self.maybe_scale(prefill_pressure, decode_pressure, obs);
         // Retry any dispatches parked while no decode instance existed.
         for slot in std::mem::take(&mut self.pending_dispatch) {
             if !self.dispatch_request(slot, obs) {
                 self.pending_dispatch.push(slot);
             }
         }
-        if self.outstanding > 0 {
-            self.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
+        if self.core.outstanding > 0 {
+            self.core.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
+        }
+    }
+
+    /// Queued work per role across instances accepting new work. Draining
+    /// instances serve out their own backlog and are excluded — their
+    /// work neither justifies a flip toward the role nor a scale-up.
+    fn role_pressures(&self) -> (u64, u64) {
+        let (mut prefill, mut decode) = (0u64, 0u64);
+        for inst in self.pool.iter() {
+            if !inst.accepts_work() {
+                continue;
+            }
+            match &inst.state {
+                InstanceState::Prefill(p) => prefill += p.load(),
+                InstanceState::Decode(d) => decode += d.sched.total_jobs() as u64,
+                _ => {}
+            }
+        }
+        (prefill, decode)
+    }
+
+    /// Finish every drain whose last work item has left: retire the slot,
+    /// or launch the role switch it was draining toward.
+    fn complete_drains(&mut self, obs: &mut dyn Observer) {
+        let now = self.core.now();
+        for i in 0..self.pool.len() {
+            let Some(target) = self.pool.get(i).drain_to else { continue };
+            if !self.pool.is_drained(i) {
+                continue;
+            }
+            let role = self.pool.state(i).role().expect("draining instances serve a role");
+            match target {
+                DrainTarget::Retire => {
+                    self.swapped_graveyard += self.pool.retire(i);
+                    self.pool.get_mut(i).retired_at = Some(now);
+                    if role == Role::Prefill {
+                        self.least_prefill_dirty = true;
+                    }
+                    self.core.metrics.scale_downs += 1;
+                    obs.on_scale(now, i, role, false);
+                }
+                DrainTarget::Flip(to) => {
+                    let fc = self.cfg.flip.unwrap_or_default();
+                    let dur = self.rng.range(fc.flip_min_us, fc.flip_max_us + 1);
+                    self.swapped_graveyard += self.pool.begin_flip(i, to);
+                    if role == Role::Prefill {
+                        self.least_prefill_dirty = true;
+                    }
+                    self.core.metrics.flips += 1;
+                    self.core.queue.schedule_in(dur, Event::FlipDone { instance: i });
+                    obs.on_flip(now, i, to, dur);
+                }
+            }
         }
     }
 
     // -------------------------------------------------------------- flip
 
-    fn maybe_flip(&mut self, obs: &mut dyn Observer) {
+    /// The §3.5 idleness policy over the pre-computed role pressures
+    /// (any queued work on the other role — the paper flips on the
+    /// instance's own idleness; requiring the other role to actually
+    /// have work avoids useless role churn).
+    fn maybe_flip(&mut self, prefill_pressure: u64, decode_pressure: u64, obs: &mut dyn Observer) {
         let Some(flip) = self.cfg.flip else { return };
-        let now = self.queue.now();
-        let n_prefill = self
-            .insts
-            .iter()
-            .filter(|s| matches!(s, InstState::Prefill(_)))
-            .count();
-        let n_decode = self
-            .insts
-            .iter()
-            .filter(|s| matches!(s, InstState::Decode(_)))
-            .count();
-        let prefill_pressure: u64 = self
-            .insts
-            .iter()
-            .filter_map(|s| match s {
-                InstState::Prefill(p) => Some(p.load()),
-                _ => None,
-            })
-            .sum();
-        // Pressure = any live work on the other role (the paper's policy
-        // flips on the instance's own idleness; requiring the other role
-        // to actually have work avoids useless role churn).
-        let decode_pressure: u64 = self
-            .insts
-            .iter()
-            .filter_map(|s| match s {
-                InstState::Decode(d) => Some(d.sched.total_jobs() as u64),
-                _ => None,
-            })
-            .sum();
+        let now = self.core.now();
+        let n_prefill = self.pool.n_active(Role::Prefill);
+        let n_decode = self.pool.n_active(Role::Decode);
 
-        for i in 0..self.insts.len() {
-            match &self.insts[i] {
-                InstState::Prefill(p)
+        for i in 0..self.pool.len() {
+            if !self.pool.accepts_work(i) {
+                continue; // draining instances follow their own target
+            }
+            let to = match self.pool.state(i) {
+                InstanceState::Prefill(p)
                     if !p.busy
                         && p.sched.is_empty()
                         && !p.chunker.has_work()
@@ -705,89 +690,176 @@ impl Cluster {
                         && n_prefill > flip.min_per_role
                         && decode_pressure > 0 =>
                 {
-                    // drained already (idle): flip is just the role switch
-                    let dur = self.rng.range(flip.flip_min_us, flip.flip_max_us + 1);
-                    self.insts[i] = InstState::Flipping { to: Role::Decode };
-                    self.insts_epoch[i] += 1;
-                    self.least_prefill_dirty = true;
-                    self.metrics.flips += 1;
-                    self.queue.schedule_in(dur, Event::FlipDone { instance: i });
-                    obs.on_flip(now, i, Role::Decode, dur);
-                    return; // at most one flip per tick
+                    Role::Decode
                 }
-                InstState::Decode(d)
+                InstanceState::Decode(d)
                     if !d.busy
                         && d.sched.total_jobs() == 0
                         && now.saturating_sub(d.last_active) >= flip.idle_us
                         && n_decode > flip.min_per_role
                         && prefill_pressure > 0 =>
                 {
-                    let dur = self.rng.range(flip.flip_min_us, flip.flip_max_us + 1);
-                    self.insts[i] = InstState::Flipping { to: Role::Prefill };
-                    self.insts_epoch[i] += 1;
-                    self.metrics.flips += 1;
-                    self.queue.schedule_in(dur, Event::FlipDone { instance: i });
-                    obs.on_flip(now, i, Role::Prefill, dur);
-                    return;
+                    Role::Prefill
                 }
-                _ => {}
+                _ => continue,
+            };
+            // drained already (idle): flip is just the role switch
+            let dur = self.rng.range(flip.flip_min_us, flip.flip_max_us + 1);
+            self.swapped_graveyard += self.pool.begin_flip(i, to);
+            if to == Role::Decode {
+                self.least_prefill_dirty = true; // a prefill instance left
             }
+            self.core.metrics.flips += 1;
+            self.core.queue.schedule_in(dur, Event::FlipDone { instance: i });
+            obs.on_flip(now, i, to, dur);
+            return; // at most one flip per tick
         }
     }
 
     fn on_flip_done(&mut self, i: usize) {
-        let InstState::Flipping { to } = self.insts[i] else { return };
-        self.insts[i] = match to {
-            Role::Prefill => InstState::Prefill(new_prefill_inst(&self.cfg, self.queue.now())),
-            Role::Decode => InstState::Decode(new_decode_inst(&self.cfg)),
-            Role::Coupled => unreachable!(),
+        let to = match self.pool.state(i) {
+            InstanceState::Flipping { to } => *to,
+            _ => return,
         };
+        let state = match to {
+            Role::Prefill => InstanceState::Prefill(new_prefill_inst(&self.cfg, self.core.now())),
+            Role::Decode => InstanceState::Decode(new_decode_inst(&self.cfg)),
+            Role::Coupled => unreachable!("flips never target the coupled role"),
+        };
+        self.pool.finish_flip(i, state);
         self.least_prefill_dirty = true;
         self.refresh_broadcast();
+    }
+
+    // ----------------------------------------------------------- elastic
+
+    /// Grow a slot for a freshly added instance across every
+    /// instance-indexed structure, stamping its birth time for the
+    /// alive/utilization accounting.
+    fn add_instance(&mut self, state: InstanceState) -> usize {
+        let i = self.pool.push(state);
+        self.pool.get_mut(i).born = self.core.now();
+        self.core.grow_instances(self.pool.len());
+        self.since_tick.push((0, 0, 0));
+        i
+    }
+
+    /// The elastic pool policy: at most one new decision per tick — grow
+    /// the pressured role, or start draining an idle instance (drain
+    /// completions are handled by [`Cluster::complete_drains`]). The
+    /// pressures come pre-computed from the monitor tick and exclude
+    /// draining instances' own backlogs. Coupled instances never scale —
+    /// the hybrid comparison keeps that fleet fixed.
+    fn maybe_scale(&mut self, prefill_backlog: u64, decode_backlog: u64, obs: &mut dyn Observer) {
+        let Some(el) = self.cfg.elastic else { return };
+        let now = self.core.now();
+        // 1. Scale up the role whose backlog per active instance runs hot.
+        if self.pool.n_live() < el.max_instances {
+            let np = self.pool.n_active(Role::Prefill).max(1) as u64;
+            if prefill_backlog > el.prefill_up_tokens * np {
+                let state = InstanceState::Prefill(new_prefill_inst(&self.cfg, now));
+                let i = self.add_instance(state);
+                self.least_prefill_dirty = true;
+                self.core.metrics.scale_ups += 1;
+                obs.on_scale(now, i, Role::Prefill, true);
+                return;
+            }
+            let nd = self.pool.n_active(Role::Decode).max(1) as u64;
+            if decode_backlog > el.decode_up_jobs * nd {
+                let state = InstanceState::Decode(new_decode_inst(&self.cfg));
+                let i = self.add_instance(state);
+                self.core.metrics.scale_ups += 1;
+                self.refresh_broadcast(); // dispatches must see it now
+                obs.on_scale(now, i, Role::Decode, true);
+                return;
+            }
+        }
+        // 2. Drain one instance that has idled past the threshold.
+        for i in 0..self.pool.len() {
+            if !self.pool.accepts_work(i) {
+                continue;
+            }
+            let Some(r) = self.pool.state(i).as_role() else { continue };
+            let role = r.role();
+            if role == Role::Coupled {
+                continue;
+            }
+            if r.drained()
+                && now.saturating_sub(r.last_active()) >= el.down_idle_us
+                && self.pool.n_active(role) > el.min_per_role
+            {
+                self.pool.begin_drain(i, DrainTarget::Retire);
+                if role == Role::Prefill {
+                    self.least_prefill_dirty = true;
+                } else {
+                    self.refresh_broadcast(); // stop dispatching to it
+                }
+                return;
+            }
+        }
+    }
+}
+
+impl EngineHost for Cluster {
+    fn core_mut(&mut self) -> &mut EngineCore {
+        &mut self.core
+    }
+
+    fn driver_name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn begin(&mut self, _obs: &mut dyn Observer) {
+        self.arrivals_pending = self.core.requests.len();
+        self.refresh_broadcast();
+        self.core.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
+    }
+
+    fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {
+        match ev {
+            Event::Arrival(slot) => self.on_arrival(slot, obs),
+            Event::PredictDone { instance, req } => self.on_predict_done(instance, req, obs),
+            Event::PrefillIterDone { instance } => self.on_prefill_done(instance, obs),
+            Event::TransferDone { instance, req } => self.on_transfer_done(instance, req, obs),
+            Event::DecodeIterDone { instance } => self.on_decode_done(instance, obs),
+            Event::CoupledIterDone { instance } => self.on_coupled_done(instance, obs),
+            Event::MonitorTick => self.on_monitor_tick(obs),
+            Event::FlipDone { instance } => self.on_flip_done(instance),
+        }
+    }
+
+    fn end(&mut self, _obs: &mut dyn Observer) {
+        // Per-slot alive spans: birth → retirement (or run end). Static
+        // pools get full-run spans, elastic additions and retirements get
+        // exactly the window they existed — the denominator behind
+        // utilization() and the paper's resource-usage fairness metric.
+        let now = self.core.now();
+        for (i, inst) in self.pool.iter().enumerate() {
+            let until = inst.retired_at.unwrap_or(now);
+            self.core.metrics.alive_us[i] = until.saturating_sub(inst.born);
+        }
+        let mut swapped = self.swapped_graveyard;
+        for inst in self.pool.iter() {
+            if let Some(kv) = inst.state.as_role().and_then(|r| r.kv()) {
+                swapped += kv.swapped_out_tokens;
+            }
+        }
+        self.core.metrics.swapped_tokens += swapped;
     }
 }
 
 fn new_prefill_inst(cfg: &ClusterConfig, now: Us) -> PrefillInst {
-    PrefillInst {
-        sched: PrefillScheduler::new(cfg.prefill_policy, cfg.sched_batch),
-        chunker: new_chunker(cfg),
-        busy: false,
-        current: None,
-        resident_kv: 0,
-        pending_pred: 0,
-        last_active: now,
-    }
-}
-
-fn new_chunker(cfg: &ClusterConfig) -> Chunker {
-    if cfg.srtf_chunking {
-        Chunker::new_srtf(cfg.chunk_size)
-    } else {
-        Chunker::new(cfg.chunk_size)
-    }
+    PrefillInst::new(cfg.prefill_policy, cfg.sched_batch, cfg.chunk_size, cfg.srtf_chunking, now)
 }
 
 fn new_decode_inst(cfg: &ClusterConfig) -> DecodeInst {
     let pages = (cfg.cost.kv_capacity_tokens() / 16) as u32;
-    DecodeInst {
-        sched: DecodeScheduler::new(cfg.decode_policy, cfg.granularity, cfg.max_batch),
-        kv: PagedKvCache::new(pages.max(2), 16),
-        busy: false,
-        pending_done: Vec::new(),
-        last_active: 0,
-    }
+    DecodeInst::new(cfg.decode_policy, cfg.granularity, cfg.max_batch, pages)
 }
 
-/// Swap-in charge: re-admitted (previously swapped) jobs pay the PCIe
-/// fetch; fresh admissions' KV arrived over the fabric and is charged
-/// there. We approximate by charging swap cost only when the scheduler has
-/// swap history. (Kept as a function for the ablation bench to override.)
-fn paged_in_swapins(paged_in: u64, sched: &DecodeScheduler) -> u64 {
-    if sched.running_has_swap_history() {
-        paged_in
-    } else {
-        0
-    }
+fn new_coupled_inst(cfg: &ClusterConfig) -> CoupledInst {
+    let pages = (cfg.cost.kv_capacity_tokens() / 16) as u32;
+    CoupledInst::new(pages)
 }
 
 /// Convenience: run a trace through the cluster driver (the same
@@ -803,6 +875,7 @@ pub fn run_cluster(cfg: ClusterConfig, trace: Vec<Request>) -> RunMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ElasticConfig;
     use crate::workload::{WorkloadGen, WorkloadKind};
 
     fn small_cfg() -> ClusterConfig {
@@ -919,5 +992,73 @@ mod tests {
         );
         assert_eq!(m.records.len(), 96);
         assert!(m.busy_us[0] > 0 && m.busy_us[1] > 0, "both prefill instances must serve");
+    }
+
+    #[test]
+    fn hybrid_serves_through_both_architectures() {
+        // One disaggregated pair + one coupled instance in the same
+        // cluster: every request completes, and both entry points did
+        // real work (the router balances token-denominated loads).
+        let mut gen = WorkloadGen::new(19);
+        let trace = gen.trace(WorkloadKind::Mixed, 96, 24.0, 0);
+        let cfg = ClusterConfig { n_prefill: 1, n_decode: 1, n_coupled: 1, flip: None, ..Default::default() };
+        let m = run_cluster(cfg, trace);
+        assert_eq!(m.records.len(), 96);
+        assert_eq!(m.busy_us.len(), 3);
+        assert!(m.busy_us[0] > 0, "disaggregated prefill must serve");
+        assert!(m.busy_us[2] > 0, "coupled instance must serve");
+    }
+
+    #[test]
+    fn elastic_scales_up_under_backlog() {
+        // A batch burst against a single prefill/decode pair with tiny
+        // thresholds: the pool must grow, and every request completes.
+        let mut gen = WorkloadGen::new(21);
+        let trace = gen.trace(WorkloadKind::Hphd, 96, 0.0, 0);
+        let cfg = ClusterConfig {
+            n_prefill: 1,
+            n_decode: 1,
+            flip: None,
+            elastic: Some(ElasticConfig {
+                max_instances: 6,
+                prefill_up_tokens: 1024,
+                decode_up_jobs: 8,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let m = run_cluster(cfg, trace);
+        assert_eq!(m.records.len(), 96);
+        assert!(m.scale_ups >= 1, "backlog must grow the pool");
+        assert!(m.busy_us.len() > 2, "added instances get metric slots");
+    }
+
+    #[test]
+    fn elastic_drains_and_retires_idle_instances() {
+        // A burst, then a long quiet gap before a single straggler: the
+        // instances added for the burst idle past the threshold and must
+        // drain + retire, never losing a request.
+        let mut gen = WorkloadGen::new(23);
+        let mut trace = gen.trace(WorkloadKind::Hphd, 64, 0.0, 0);
+        let mut straggler = gen.trace(WorkloadKind::Lpld, 1, 0.0, 0);
+        straggler[0].arrival = 60_000_000; // a long quiet gap
+        trace.extend(straggler);
+        let cfg = ClusterConfig {
+            n_prefill: 1,
+            n_decode: 1,
+            flip: None,
+            elastic: Some(ElasticConfig {
+                max_instances: 6,
+                prefill_up_tokens: 1024,
+                decode_up_jobs: 8,
+                down_idle_us: 1_000_000,
+                min_per_role: 1,
+            }),
+            ..Default::default()
+        };
+        let m = run_cluster(cfg, trace);
+        assert_eq!(m.records.len(), 65, "no request may be lost across scale events");
+        assert!(m.scale_ups >= 1, "the burst must grow the pool");
+        assert!(m.scale_downs >= 1, "the quiet gap must shrink it again");
     }
 }

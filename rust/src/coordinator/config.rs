@@ -38,10 +38,54 @@ impl Default for FlipConfig {
     }
 }
 
+/// Elastic instance-pool policy: grow the pool when a role's backlog per
+/// active instance exceeds its threshold, drain + retire instances that
+/// sit idle (Arrow-style adaptive repurposing, arXiv:2505.11916, applied
+/// to pool *size* where flipping covers pool *shape*). Each monitor tick
+/// makes at most one new scaling *decision* (one scale-up or one new
+/// drain); drains already in progress complete (retire) whenever their
+/// last work item leaves, so a tick can additionally finish several.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticConfig {
+    /// Hard cap on non-retired instances (live + draining + flipping).
+    pub max_instances: usize,
+    /// Scale prefill up when queued+in-flight prompt tokens per active
+    /// prefill instance exceed this.
+    pub prefill_up_tokens: u64,
+    /// Scale decode up when total decode jobs per active decode instance
+    /// exceed this.
+    pub decode_up_jobs: u64,
+    /// Drain + retire an instance idle at least this long.
+    pub down_idle_us: Us,
+    /// Never retire below this many active instances of either role.
+    pub min_per_role: usize,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            max_instances: 8,
+            prefill_up_tokens: 4096,
+            decode_up_jobs: 32,
+            down_idle_us: 2_000_000,
+            min_per_role: 1,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub n_prefill: usize,
     pub n_decode: usize,
+    /// Coupled (vanilla-vLLM) instances serving *inside* this cluster —
+    /// the hybrid-fleet study. 0 (the default) is the pure disaggregated
+    /// paper setup; ≥ 1 runs both architectures in one simulation over
+    /// one arena, with arrivals routed to whichever entry point is least
+    /// loaded.
+    pub n_coupled: usize,
+    /// Fixed batch size coupled instances use for both phases (vanilla
+    /// vLLM semantics, §5.2.1; mirrors `BaselineConfig::prefill_batch`).
+    pub coupled_batch: usize,
     /// ChunkSize in tokens (512 for OPT-13B on V100, §3.3.3).
     pub chunk_size: u32,
     pub prefill_policy: PrefillPolicy,
@@ -69,6 +113,8 @@ pub struct ClusterConfig {
     /// Cluster-monitor broadcast period (paper: ~100 ms).
     pub monitor_interval_us: Us,
     pub flip: Option<FlipConfig>,
+    /// Elastic pool growth/shrink policy; `None` keeps the pool static.
+    pub elastic: Option<ElasticConfig>,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -78,6 +124,8 @@ impl Default for ClusterConfig {
         ClusterConfig {
             n_prefill: 1,
             n_decode: 1,
+            n_coupled: 0,
+            coupled_batch: 16,
             chunk_size: 512,
             prefill_policy: PrefillPolicy::Sjf,
             sched_batch: 16,
@@ -93,6 +141,7 @@ impl Default for ClusterConfig {
             n_buckets: 8,
             monitor_interval_us: 100_000,
             flip: Some(FlipConfig::default()),
+            elastic: None,
             cost: CostModel::default(),
             seed: 0,
         }

@@ -8,4 +8,4 @@ pub mod cluster;
 pub mod config;
 
 pub use cluster::{run_cluster, Cluster};
-pub use config::{ClusterConfig, FlipConfig, PredictorMode};
+pub use config::{ClusterConfig, ElasticConfig, FlipConfig, PredictorMode};

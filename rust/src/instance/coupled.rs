@@ -1,0 +1,279 @@
+//! The coupled role: vanilla-vLLM continuous batching where each
+//! iteration mixes fixed-batch whole-prompt prefills with every running
+//! decode (§5.2.1 semantics — the system whose interference §2.2
+//! measures). Moved out of `baseline/mod.rs`; the same type now also
+//! serves inside the hybrid cluster, where coupled and disaggregated
+//! instances share one engine and one arena.
+
+use std::collections::VecDeque;
+
+use crate::costmodel::CostModel;
+use crate::decode::{DecodeJob, DecodePolicy, DecodeScheduler};
+use crate::kvcache::PagedKvCache;
+use crate::sim::ReqState;
+use crate::types::{ReqId, ReqMeta, Role, Us};
+
+use super::{swapin_charge, InstanceRole};
+
+pub struct CoupledInst {
+    /// Arrived, not yet prefilled (arena slots).
+    pub waiting: VecDeque<ReqId>,
+    /// Prompt tokens across `waiting`, maintained incrementally (the
+    /// arrival router's O(1) load input).
+    pub waiting_tokens: u64,
+    /// Decode-side state (greedy admission = vLLM's policy). We reuse the
+    /// decode scheduler with jobs that were prefilled locally.
+    pub dec: DecodeScheduler,
+    pub kv: PagedKvCache,
+    pub busy: bool,
+    /// Prefilled this iteration — slot buffer reused across iterations.
+    pub pending_prefilled: Vec<ReqId>,
+    /// Completed this iteration — slot buffer reused across iterations.
+    pub pending_done: Vec<ReqId>,
+    pub last_active: Us,
+}
+
+/// One priced mixed iteration, ready to schedule and observe. The driver
+/// fires `on_chunk` for the prefill side and `on_decode_iter` for the
+/// decode side, each only when non-empty.
+pub struct CoupledIterStats {
+    pub prefill_tokens: u32,
+    pub batch: u32,
+    pub kv_tokens: u64,
+    pub dur: Us,
+}
+
+impl CoupledInst {
+    pub fn new(kv_pages: u32) -> Self {
+        CoupledInst {
+            waiting: VecDeque::new(),
+            waiting_tokens: 0,
+            // residency is memory-bound, not batch-bound: the fixed batch
+            // caps the per-iteration *step window* (see begin_iteration),
+            // not how many requests hold pages.
+            dec: DecodeScheduler::new(DecodePolicy::Greedy, 200, u32::MAX),
+            kv: PagedKvCache::new(kv_pages.max(2), 16),
+            busy: false,
+            pending_prefilled: Vec::new(),
+            pending_done: Vec::new(),
+            last_active: 0,
+        }
+    }
+
+    /// The arrival router's load score: waiting prompt tokens plus a
+    /// fixed per-resident-job charge.
+    pub fn route_load(&self) -> u64 {
+        self.waiting_tokens + self.dec.total_jobs() as u64 * 64
+    }
+
+    /// Accept a routed request into the waiting line.
+    pub fn enqueue(&mut self, slot: ReqId, prompt_len: u32) {
+        self.waiting.push_back(slot);
+        self.waiting_tokens += prompt_len as u64;
+    }
+
+    /// Run one mixed iteration's effects now and price it: (a)
+    /// fixed-batch prefill — wait for `prefill_batch` prompts, then
+    /// prefill them all in one iteration (greedy memory admission;
+    /// partial batches run only when `more_arrivals` is false or the
+    /// decode side is empty), and (b) decodes riding the same iteration,
+    /// capped at the *fixed* batch `fixed_batch` (FCFS window over
+    /// resident jobs — vanilla vLLM semantics). Returns `None` when busy
+    /// or there is nothing to do.
+    pub fn begin_iteration(
+        &mut self,
+        requests: &[ReqState],
+        cost: &CostModel,
+        prefill_batch: usize,
+        fixed_batch: u32,
+        more_arrivals: bool,
+        now: Us,
+    ) -> Option<CoupledIterStats> {
+        if self.busy {
+            return None;
+        }
+        self.pending_prefilled.clear();
+        self.pending_done.clear();
+        let mut prefill_tokens = 0u32;
+        let batch_ready = self.waiting.len() >= prefill_batch
+            || (!self.waiting.is_empty() && (!more_arrivals || self.dec.total_jobs() == 0));
+        if batch_ready {
+            while self.pending_prefilled.len() < prefill_batch {
+                let Some(&slot) = self.waiting.front() else { break };
+                let plen = requests[slot as usize].req.prompt_len;
+                if !self.kv.can_fit(slot, plen + 1) {
+                    break; // head-of-line block: vLLM stalls prefill on memory
+                }
+                self.waiting.pop_front();
+                self.waiting_tokens -= plen as u64;
+                self.kv.alloc(slot, plen + 1).expect("can_fit checked");
+                prefill_tokens += plen;
+                self.pending_prefilled.push(slot);
+            }
+        }
+        let paged_in = self.dec.admit(&mut self.kv);
+        let window = (fixed_batch as usize).min(self.dec.n_resident());
+        let batch = window as u32;
+        let kv_tokens: u64 = self.dec.running()[..window]
+            .iter()
+            .map(|j| j.kv_tokens() as u64)
+            .sum();
+        if self.pending_prefilled.is_empty() && batch == 0 {
+            return None;
+        }
+        let swapped_out = self.dec.step_n(&mut self.kv, window, &mut self.pending_done);
+        // preemption transitions happened inside step_n(): fail loudly on
+        // any page-accounting corruption before the iteration is priced
+        debug_assert!(self.kv.check_invariants().is_ok());
+        let dur = cost.mixed_iter_us(prefill_tokens, batch, kv_tokens)
+            + cost.swap_us(swapped_out + swapin_charge(paged_in, &self.dec));
+
+        // Prefilled requests become decode jobs at iteration end. Their
+        // pages were allocated above, so they enter the running batch
+        // directly (the scheduler keeps its aggregates in sync).
+        for &slot in &self.pending_prefilled {
+            let st = &requests[slot as usize];
+            // scheduler-facing meta keyed by the arena slot, not the
+            // original request id
+            let meta = ReqMeta { id: slot, ..st.req.meta() };
+            let mut job = DecodeJob::new(meta, st.req.decode_len);
+            job.generated = 1;
+            self.dec.inject_running(job);
+        }
+        self.busy = true;
+        self.last_active = now;
+        Some(CoupledIterStats { prefill_tokens, batch, kv_tokens, dur })
+    }
+
+    /// Iteration completed: hand both slot buffers (prefilled, done) to
+    /// the driver. Return them via [`CoupledInst::return_bufs`] so the
+    /// next iteration reuses their capacity.
+    pub fn end_iteration(&mut self, now: Us) -> (Vec<ReqId>, Vec<ReqId>) {
+        self.busy = false;
+        self.last_active = now;
+        (
+            std::mem::take(&mut self.pending_prefilled),
+            std::mem::take(&mut self.pending_done),
+        )
+    }
+
+    pub fn return_bufs(&mut self, prefilled: Vec<ReqId>, done: Vec<ReqId>) {
+        self.pending_prefilled = prefilled;
+        self.pending_done = done;
+    }
+
+    /// Remove a request from the running batch and release its pages
+    /// (single-token requests that finish at prefill).
+    pub fn drop_running(&mut self, slot: ReqId) {
+        if self.dec.remove_running(slot).is_some() {
+            self.kv.release(slot);
+        }
+    }
+}
+
+impl InstanceRole for CoupledInst {
+    fn role(&self) -> Role {
+        Role::Coupled
+    }
+
+    fn load(&self) -> u64 {
+        self.route_load()
+    }
+
+    fn busy(&self) -> bool {
+        self.busy
+    }
+
+    fn drained(&self) -> bool {
+        !self.busy && self.waiting.is_empty() && self.dec.total_jobs() == 0
+    }
+
+    fn last_active(&self) -> Us {
+        self.last_active
+    }
+
+    fn kv(&self) -> Option<&PagedKvCache> {
+        Some(&self.kv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NO_TIME;
+    use crate::types::{Request, TaskType};
+
+    fn arena(specs: &[(u32, u32)]) -> Vec<ReqState> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(plen, dlen))| ReqState {
+                req: Request {
+                    id: i as u64,
+                    task: TaskType::Chat,
+                    arrival: 0,
+                    prompt_len: plen,
+                    decode_len: dlen,
+                    predicted: None,
+                },
+                first_token: NO_TIME,
+                prefilled_by: None,
+                seen: false,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn partial_batches_wait_for_more_arrivals() {
+        let cost = CostModel::default();
+        let reqs = arena(&[(100, 5), (100, 5)]);
+        let mut c = CoupledInst::new(64);
+        c.enqueue(0, 100);
+        c.enqueue(1, 100);
+        // batch of 4 not filled, more arrivals coming, decodes running →
+        // the fixed batch waits
+        c.kv.alloc(9, 10).unwrap();
+        let mut j = DecodeJob::new(ReqMeta { id: 9, ..reqs[0].req.meta() }, 5);
+        j.generated = 1;
+        c.dec.inject_running(j);
+        let st = c.begin_iteration(&reqs, &cost, 4, 16, true, 0).expect("decode side runs");
+        assert_eq!(st.prefill_tokens, 0, "partial prefill batch must wait");
+        assert_eq!(st.batch, 1);
+        c.end_iteration(1);
+        // last arrival seen: the partial batch may now run
+        let st = c.begin_iteration(&reqs, &cost, 4, 16, false, 2).expect("batch runs");
+        assert_eq!(st.prefill_tokens, 200);
+        assert_eq!(c.waiting_tokens, 0);
+    }
+
+    #[test]
+    fn iteration_injects_prefilled_jobs_into_the_batch() {
+        let cost = CostModel::default();
+        let reqs = arena(&[(50, 3), (60, 1)]);
+        let mut c = CoupledInst::new(64);
+        c.enqueue(0, 50);
+        c.enqueue(1, 60);
+        let st = c.begin_iteration(&reqs, &cost, 2, 16, false, 0).unwrap();
+        assert_eq!(st.prefill_tokens, 110);
+        let (prefilled, done) = c.end_iteration(5);
+        assert_eq!(prefilled, vec![0, 1]);
+        assert!(done.is_empty());
+        assert_eq!(c.dec.n_resident(), 2, "prefilled prompts join the running batch");
+        // slot 1 is a single-token request: the driver drops it at
+        // iteration end
+        c.drop_running(1);
+        assert_eq!(c.dec.n_resident(), 1);
+        c.return_bufs(prefilled, done);
+        assert!(!InstanceRole::drained(&c), "slot 0 still decoding");
+    }
+
+    #[test]
+    fn route_load_blends_waiting_tokens_and_jobs() {
+        let mut c = CoupledInst::new(8);
+        assert_eq!(c.route_load(), 0);
+        c.enqueue(0, 100);
+        assert_eq!(c.route_load(), 100);
+        assert_eq!(InstanceRole::load(&c), 100);
+        assert_eq!(InstanceRole::role(&c), Role::Coupled);
+    }
+}

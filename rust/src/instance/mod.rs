@@ -1,0 +1,78 @@
+//! The instance layer: first-class serving instances with an explicit
+//! role state machine, shared by every DES driver.
+//!
+//! Before this module existed, `PrefillInst` and `DecodeInst` were
+//! private structs inside the 900-line `coordinator/cluster.rs` monolith
+//! and `CoupledInst` was a private struct inside `baseline/mod.rs`, each
+//! with its iteration mechanics inlined into the driver's event handlers.
+//! Now each role owns its scheduler/chunker/KV state here, behind the
+//! [`InstanceRole`] trait for load reporting and drain checks, and the
+//! drivers are policy glue (routing, two-level scheduling, flip/scale
+//! decisions) over [`InstancePool`] + `sim::EngineCore`.
+//!
+//! Role state machine (one [`Instance`] slot moves through it):
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────────┐
+//!            │                 drain_to = None                │
+//!            │   Prefill ⇄ (Flipping) ⇄ Decode       Coupled  │
+//!            └────────┬───────────────────┬──────────────┬────┘
+//!    begin_drain      │                   │              │
+//!            ┌────────▼───────────────────▼──────────────▼────┐
+//!            │ Draining{to}: same role state, no new work      │
+//!            └────────┬───────────────────────────────────────┘
+//!   drained           │ DrainTarget::Flip(role) → Flipping{to}
+//!                     │ DrainTarget::Retire     → Retired
+//!            ┌────────▼────────┐      ┌─────────┐
+//!            │ Flipping { to } │ ───▶ │ fresh    │ (epoch bumped on
+//!            └─────────────────┘      │ role     │  every role exit)
+//!                                     └─────────┘
+//! ```
+//!
+//! "Draining" is represented as the live role state plus a `drain_to`
+//! target rather than a wrapper variant, so the instance keeps serving
+//! its in-flight work with zero indirection while the pool stops routing
+//! new work to it. Epochs guard in-flight references (KV releases, stale
+//! transfers) against instances that left their role and came back.
+
+pub mod coupled;
+pub mod decode;
+pub mod pool;
+pub mod prefill;
+
+pub use coupled::{CoupledInst, CoupledIterStats};
+pub use decode::{swapin_charge, DecodeInst, DecodeIterStats};
+pub use pool::{DrainTarget, Instance, InstancePool, InstanceState};
+pub use prefill::PrefillInst;
+
+use crate::kvcache::PagedKvCache;
+use crate::types::{Role, Us};
+
+/// What every role exposes to the pool and the drivers' policy glue:
+/// identity, load reporting, and drain status. Role-specific mechanics
+/// (chunk slicing, continuous batching, mixed iterations) stay on the
+/// concrete types.
+pub trait InstanceRole {
+    /// Which role this state serves.
+    fn role(&self) -> Role;
+
+    /// Scheduling load in role-specific units (prompt tokens for prefill,
+    /// jobs for decode, the blended token score for coupled). Routing
+    /// policies compare loads *within* a role; cross-role comparisons are
+    /// the hybrid router's explicit business.
+    fn load(&self) -> u64;
+
+    /// An iteration is currently in flight.
+    fn busy(&self) -> bool;
+
+    /// No queued and no in-flight work: safe to flip or retire.
+    fn drained(&self) -> bool;
+
+    /// Virtual time of the last iteration start/end (idleness input for
+    /// flip and scale-down policies).
+    fn last_active(&self) -> Us;
+
+    /// The KV pool this role owns, if any (decode and coupled do; prefill
+    /// tracks residency as a counter, not pages).
+    fn kv(&self) -> Option<&PagedKvCache>;
+}

@@ -1,0 +1,318 @@
+//! The elastic instance pool: a growable set of [`Instance`] slots, each
+//! moving through the role state machine documented in the module header
+//! (`instance/mod.rs`). The pool owns the mechanics of every lifecycle
+//! transition — drain, flip, retire, add — plus the epoch counters that
+//! guard in-flight references, and (under `debug_assertions`) checks
+//! `PagedKvCache::check_invariants` on every transition out of a role so
+//! state-machine bugs fail loudly in tests. Drivers decide *when* to
+//! transition; the pool guarantees *how*.
+
+use crate::types::{Role, Us};
+
+use super::{CoupledInst, DecodeInst, InstanceRole, PrefillInst};
+
+/// What a draining instance becomes once its last work item leaves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainTarget {
+    Flip(Role),
+    Retire,
+}
+
+/// The role half of the state machine. `Draining` is not a variant here:
+/// a draining instance keeps its live role state (it must keep serving
+/// in-flight work) and carries its target in [`Instance::drain_to`].
+pub enum InstanceState {
+    Prefill(PrefillInst),
+    Decode(DecodeInst),
+    Coupled(CoupledInst),
+    /// Drained and mid-role-switch (§3.5); live again at FlipDone.
+    Flipping { to: Role },
+    /// Permanently removed from the pool (elastic scale-down). The slot
+    /// index stays valid so metric vectors and in-flight events keyed by
+    /// instance id never dangle.
+    Retired,
+}
+
+impl InstanceState {
+    /// The role this slot serves, if it currently serves one.
+    pub fn role(&self) -> Option<Role> {
+        self.as_role().map(|r| r.role())
+    }
+
+    /// Trait view of the live role state (None for Flipping/Retired).
+    pub fn as_role(&self) -> Option<&dyn InstanceRole> {
+        match self {
+            InstanceState::Prefill(p) => Some(p),
+            InstanceState::Decode(d) => Some(d),
+            InstanceState::Coupled(c) => Some(c),
+            InstanceState::Flipping { .. } | InstanceState::Retired => None,
+        }
+    }
+
+    /// Swap-accounting tally a departing role must not take to the grave:
+    /// the cumulative swapped-out tokens of its KV pool.
+    fn swapped_out_tokens(&self) -> u64 {
+        match self.as_role().and_then(|r| r.kv()) {
+            Some(kv) => kv.swapped_out_tokens,
+            None => 0,
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    fn debug_check_kv(&self) {
+        if let Some(kv) = self.as_role().and_then(|r| r.kv()) {
+            if let Err(e) = kv.check_invariants() {
+                panic!("KV invariants violated at lifecycle transition: {e}");
+            }
+        }
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn debug_check_kv(&self) {}
+}
+
+/// One pool slot: role state + lifecycle bookkeeping.
+pub struct Instance {
+    pub state: InstanceState,
+    /// Bumped every time this slot leaves a role (flip or retire): any
+    /// in-flight references to the old incarnation become stale.
+    pub epoch: u32,
+    /// `Some` while draining: the router sends no new work here; once
+    /// [`InstanceRole::drained`], the driver completes the transition.
+    pub drain_to: Option<DrainTarget>,
+    /// Virtual time this slot entered the pool (0 for initial topology;
+    /// the driver stamps elastic additions). Alive-time accounting input.
+    pub born: Us,
+    /// Virtual time this slot was retired; `None` while it lives.
+    pub retired_at: Option<Us>,
+}
+
+impl Instance {
+    /// This slot serves a role and accepts new work (live, not draining).
+    pub fn accepts_work(&self) -> bool {
+        self.drain_to.is_none() && self.state.as_role().is_some()
+    }
+}
+
+/// The growable pool. Instances are only ever appended (retired slots
+/// stay, keeping instance ids stable for events and metric vectors).
+#[derive(Default)]
+pub struct InstancePool {
+    insts: Vec<Instance>,
+}
+
+impl InstancePool {
+    pub fn new() -> Self {
+        InstancePool { insts: Vec::new() }
+    }
+
+    /// Add an instance (initial construction or elastic scale-up);
+    /// returns its id. The caller stamps `born` for mid-run additions.
+    pub fn push(&mut self, state: InstanceState) -> usize {
+        self.insts.push(Instance { state, epoch: 0, drain_to: None, born: 0, retired_at: None });
+        self.insts.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Instance> {
+        self.insts.iter()
+    }
+
+    pub fn get(&self, i: usize) -> &Instance {
+        &self.insts[i]
+    }
+
+    pub fn get_mut(&mut self, i: usize) -> &mut Instance {
+        &mut self.insts[i]
+    }
+
+    pub fn state(&self, i: usize) -> &InstanceState {
+        &self.insts[i].state
+    }
+
+    pub fn state_mut(&mut self, i: usize) -> &mut InstanceState {
+        &mut self.insts[i].state
+    }
+
+    pub fn epoch(&self, i: usize) -> u32 {
+        self.insts[i].epoch
+    }
+
+    /// Instances currently serving `role` and accepting work.
+    pub fn n_active(&self, role: Role) -> usize {
+        self.insts
+            .iter()
+            .filter(|s| s.accepts_work() && s.state.role() == Some(role))
+            .count()
+    }
+
+    /// Instances not yet retired (live roles + draining + flipping) —
+    /// what an elastic `max_instances` cap counts.
+    pub fn n_live(&self) -> usize {
+        self.insts
+            .iter()
+            .filter(|s| !matches!(s.state, InstanceState::Retired))
+            .count()
+    }
+
+    pub fn accepts_work(&self, i: usize) -> bool {
+        self.insts[i].accepts_work()
+    }
+
+    /// Concrete accessors (draining instances included — they keep
+    /// serving their in-flight work).
+    pub fn prefill_mut(&mut self, i: usize) -> Option<&mut PrefillInst> {
+        match &mut self.insts[i].state {
+            InstanceState::Prefill(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn decode_mut(&mut self, i: usize) -> Option<&mut DecodeInst> {
+        match &mut self.insts[i].state {
+            InstanceState::Decode(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn coupled_mut(&mut self, i: usize) -> Option<&mut CoupledInst> {
+        match &mut self.insts[i].state {
+            InstanceState::Coupled(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Queued and in-flight work both gone?
+    pub fn is_drained(&self, i: usize) -> bool {
+        self.insts[i].state.as_role().map(|r| r.drained()).unwrap_or(true)
+    }
+
+    /// Stop routing new work to `i`; once drained, the driver completes
+    /// the transition (`begin_flip` or `retire`). Checking KV invariants
+    /// here catches corruption *entering* the drain window.
+    pub fn begin_drain(&mut self, i: usize, to: DrainTarget) {
+        debug_assert!(
+            self.insts[i].state.as_role().is_some(),
+            "drain of instance {i} which serves no role"
+        );
+        self.insts[i].state.debug_check_kv();
+        self.insts[i].drain_to = Some(to);
+    }
+
+    /// Leave the current role toward `Flipping { to }`. The instance
+    /// must be drained (the §3.5 policy flips idle instances; the drain
+    /// path reaches here via `drain_to`). Bumps the epoch and returns the
+    /// departing role's cumulative swapped-out tokens for the driver to
+    /// fold into its metrics (they die with the role state otherwise).
+    pub fn begin_flip(&mut self, i: usize, to: Role) -> u64 {
+        debug_assert!(self.is_drained(i), "flip of undrained instance {i}");
+        self.insts[i].state.debug_check_kv();
+        let swapped = self.insts[i].state.swapped_out_tokens();
+        self.insts[i].state = InstanceState::Flipping { to };
+        self.insts[i].epoch += 1;
+        self.insts[i].drain_to = None;
+        swapped
+    }
+
+    /// Install the fresh role state at FlipDone. Returns false (and does
+    /// nothing) if the slot is not mid-flip.
+    pub fn finish_flip(&mut self, i: usize, state: InstanceState) -> bool {
+        if !matches!(self.insts[i].state, InstanceState::Flipping { .. }) {
+            return false;
+        }
+        self.insts[i].state = state;
+        self.insts[i].drain_to = None;
+        true
+    }
+
+    /// Permanently remove `i` from service (elastic scale-down). The
+    /// instance must be drained. Bumps the epoch; returns the departing
+    /// role's cumulative swapped-out tokens.
+    pub fn retire(&mut self, i: usize) -> u64 {
+        debug_assert!(self.is_drained(i), "retire of undrained instance {i}");
+        self.insts[i].state.debug_check_kv();
+        let swapped = self.insts[i].state.swapped_out_tokens();
+        self.insts[i].state = InstanceState::Retired;
+        self.insts[i].epoch += 1;
+        self.insts[i].drain_to = None;
+        swapped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::DecodePolicy;
+    use crate::prefill::PrefillPolicy;
+
+    fn prefill() -> InstanceState {
+        InstanceState::Prefill(PrefillInst::new(PrefillPolicy::Sjf, 16, 512, false, 0))
+    }
+
+    fn decode() -> InstanceState {
+        InstanceState::Decode(DecodeInst::new(DecodePolicy::Greedy, 200, 128, 64))
+    }
+
+    #[test]
+    fn push_counts_and_roles() {
+        let mut pool = InstancePool::new();
+        let a = pool.push(prefill());
+        let b = pool.push(decode());
+        let c = pool.push(InstanceState::Coupled(CoupledInst::new(16)));
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!(pool.n_active(Role::Prefill), 1);
+        assert_eq!(pool.n_active(Role::Decode), 1);
+        assert_eq!(pool.n_active(Role::Coupled), 1);
+        assert_eq!(pool.n_live(), 3);
+    }
+
+    #[test]
+    fn drain_excludes_from_active_but_keeps_role_state() {
+        let mut pool = InstancePool::new();
+        pool.push(prefill());
+        pool.begin_drain(0, DrainTarget::Retire);
+        assert_eq!(pool.n_active(Role::Prefill), 0, "draining instances take no new work");
+        assert!(pool.prefill_mut(0).is_some(), "draining instances keep serving");
+        assert_eq!(pool.n_live(), 1);
+        assert!(pool.is_drained(0));
+    }
+
+    #[test]
+    fn flip_bumps_epoch_and_round_trips() {
+        let mut pool = InstancePool::new();
+        pool.push(prefill());
+        assert_eq!(pool.epoch(0), 0);
+        pool.begin_flip(0, Role::Decode);
+        assert_eq!(pool.epoch(0), 1);
+        assert!(matches!(pool.state(0), InstanceState::Flipping { to: Role::Decode }));
+        assert_eq!(pool.n_active(Role::Prefill), 0);
+        assert!(pool.finish_flip(0, decode()));
+        assert_eq!(pool.n_active(Role::Decode), 1);
+        assert!(!pool.finish_flip(0, prefill()), "finish_flip only lands mid-flip");
+        // a second flip keeps bumping
+        pool.begin_flip(0, Role::Prefill);
+        assert_eq!(pool.epoch(0), 2);
+    }
+
+    #[test]
+    fn retire_is_terminal_and_preserves_slot_ids() {
+        let mut pool = InstancePool::new();
+        pool.push(prefill());
+        pool.push(decode());
+        pool.begin_drain(0, DrainTarget::Retire);
+        pool.retire(0);
+        assert!(matches!(pool.state(0), InstanceState::Retired));
+        assert_eq!(pool.epoch(0), 1);
+        assert_eq!(pool.n_live(), 1);
+        assert_eq!(pool.len(), 2, "retired slots keep ids stable");
+        assert!(pool.is_drained(0), "retired slots count as drained");
+        assert!(!pool.accepts_work(0));
+    }
+}

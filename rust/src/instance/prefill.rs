@@ -1,0 +1,195 @@
+//! The prefill role (§3.3): local scheduler → chunked prefill, with KV
+//! residency backpressure and the parallel-predictor co-run tax. Moved
+//! out of `coordinator/cluster.rs`; the driver now only prices, schedules
+//! and observes the iterations this type assembles.
+
+use crate::costmodel::CostModel;
+use crate::kvcache::PagedKvCache;
+use crate::prefill::{Chunk, Chunker, PrefillPolicy, PrefillScheduler};
+use crate::types::{Role, Us};
+
+use super::InstanceRole;
+
+/// Predictions a single saturated chunk iteration can absorb in parallel
+/// mode (the predict model is ~10x faster than the target, §3.3.2).
+pub const PREDICTIONS_PER_CHUNK: u32 = 10;
+/// Main-LLM slowdown while co-running the predictor (Figure 17: ~10%).
+pub const PARALLEL_PREDICT_OVERHEAD: f64 = 0.10;
+
+pub struct PrefillInst {
+    pub sched: PrefillScheduler,
+    pub chunker: Chunker,
+    pub busy: bool,
+    /// Chunk currently executing (applied at PrefillIterDone).
+    pub current: Option<Chunk>,
+    /// KV tokens resident for prefilled-but-untransferred requests plus
+    /// in-flight chunked requests (backpressure input).
+    pub resident_kv: u64,
+    /// Predictions waiting to ride the accelerator (parallel mode).
+    pub pending_pred: u32,
+    pub last_active: Us,
+}
+
+impl PrefillInst {
+    pub fn new(policy: PrefillPolicy, sched_batch: usize, chunk_size: u32, srtf: bool, now: Us) -> Self {
+        PrefillInst {
+            sched: PrefillScheduler::new(policy, sched_batch),
+            chunker: if srtf { Chunker::new_srtf(chunk_size) } else { Chunker::new(chunk_size) },
+            busy: false,
+            current: None,
+            resident_kv: 0,
+            pending_pred: 0,
+            last_active: now,
+        }
+    }
+
+    /// Scheduling load (§3.2): queued + in-flight prompt tokens. O(1) —
+    /// both counters are maintained incrementally.
+    pub fn load(&self) -> u64 {
+        self.sched.queued_tokens() + self.chunker.pending_tokens()
+    }
+
+    /// Admit scheduled requests into the chunker lazily — just enough to
+    /// keep the next iterations fed. The backlog stays in the local
+    /// scheduler where PrefillSchedBatch sorting applies (§3.3.1), and KV
+    /// backpressure caps residency (prompt KV lives here until
+    /// transferred out). Moving a request sched → chunker leaves the
+    /// instance's total load unchanged.
+    pub fn admit_ready(&mut self, chunk_size: u32, kv_cap: u64) {
+        while self.chunker.pending_tokens() < 2 * chunk_size as u64 {
+            let Some(nxt) = self.sched.peek() else { break };
+            if self.resident_kv + nxt.prompt_len as u64 > kv_cap {
+                break;
+            }
+            let m = self.sched.pop().unwrap();
+            self.resident_kv += m.prompt_len as u64;
+            self.chunker.admit(m);
+        }
+    }
+
+    /// Slice and price the next fixed-size chunk iteration. Returns
+    /// `(tokens, pad, dur)` for the driver to schedule and observe, or
+    /// `None` when busy or out of open prompt tokens.
+    ///
+    /// Fixed-size iteration, charged by real tokens: the ChunkSize cap is
+    /// what prevents over-saturated iterations (§3.3.3); the final
+    /// partial chunk's zero-padding is shape filler, not useful compute
+    /// (under the paper's stress workloads chunks are full anyway, so
+    /// this matches their regime — see DESIGN.md §Calibration).
+    pub fn begin_chunk(&mut self, cost: &CostModel, now: Us) -> Option<(u32, u32, Us)> {
+        if self.busy {
+            return None;
+        }
+        let chunk = self.chunker.next_chunk()?;
+        let mut dur = cost.prefill_iter_us(chunk.tokens);
+        if self.pending_pred > 0 {
+            dur = (dur as f64 * (1.0 + PARALLEL_PREDICT_OVERHEAD)) as Us;
+            self.pending_pred = self.pending_pred.saturating_sub(PREDICTIONS_PER_CHUNK);
+        }
+        let (tokens, pad) = (chunk.tokens, chunk.pad());
+        self.current = Some(chunk);
+        self.busy = true;
+        self.last_active = now;
+        Some((tokens, pad, dur))
+    }
+
+    /// Iteration completed: hand the finished chunk back to the driver
+    /// (which walks the `last` segments to dispatch completed prompts).
+    pub fn end_chunk(&mut self, now: Us) -> Chunk {
+        self.busy = false;
+        self.last_active = now;
+        self.current.take().expect("iteration completed without a chunk")
+    }
+
+    /// The prompt KV of one request left this instance (transfer done, or
+    /// the request finished at prefill): release backpressure.
+    pub fn release_resident(&mut self, tokens: u64) {
+        self.resident_kv = self.resident_kv.saturating_sub(tokens);
+    }
+}
+
+impl InstanceRole for PrefillInst {
+    fn role(&self) -> Role {
+        Role::Prefill
+    }
+
+    fn load(&self) -> u64 {
+        PrefillInst::load(self)
+    }
+
+    fn busy(&self) -> bool {
+        self.busy
+    }
+
+    fn drained(&self) -> bool {
+        !self.busy && self.sched.is_empty() && !self.chunker.has_work()
+    }
+
+    fn last_active(&self) -> Us {
+        self.last_active
+    }
+
+    fn kv(&self) -> Option<&PagedKvCache> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{ReqMeta, TaskType};
+
+    fn meta(id: u64, plen: u32) -> ReqMeta {
+        ReqMeta { id, task: TaskType::Chat, arrival: 0, prompt_len: plen, predicted: None }
+    }
+
+    fn inst() -> PrefillInst {
+        PrefillInst::new(PrefillPolicy::Fcfs, 16, 512, false, 0)
+    }
+
+    #[test]
+    fn admit_ready_respects_kv_backpressure() {
+        let mut p = inst();
+        p.sched.push(meta(0, 600));
+        p.sched.push(meta(1, 600));
+        p.admit_ready(512, 700); // only the first fits the residency cap
+        assert_eq!(p.chunker.n_open(), 1);
+        assert_eq!(p.resident_kv, 600);
+        assert_eq!(p.load(), 1200, "sched→chunker moves keep total load");
+        p.release_resident(600);
+        p.admit_ready(512, 700);
+        assert_eq!(p.chunker.n_open(), 2);
+    }
+
+    #[test]
+    fn chunk_lifecycle_sets_busy_and_prices_predict_tax() {
+        let cost = CostModel::default();
+        let mut p = inst();
+        p.sched.push(meta(0, 512));
+        p.admit_ready(512, u64::MAX);
+        let plain = cost.prefill_iter_us(512);
+        p.pending_pred = 1;
+        let (tokens, pad, dur) = p.begin_chunk(&cost, 5).expect("chunk ready");
+        assert_eq!((tokens, pad), (512, 0));
+        assert!(dur > plain, "parallel predictions must tax the iteration");
+        assert!(p.busy && p.begin_chunk(&cost, 6).is_none());
+        assert_eq!(p.pending_pred, 0);
+        let chunk = p.end_chunk(7);
+        assert!(!p.busy);
+        assert_eq!(chunk.tokens, 512);
+        assert_eq!(p.last_active, 7);
+    }
+
+    #[test]
+    fn drained_tracks_sched_chunker_and_busy() {
+        let mut p = inst();
+        assert!(InstanceRole::drained(&p));
+        p.sched.push(meta(0, 100));
+        assert!(!InstanceRole::drained(&p));
+        p.admit_ready(512, u64::MAX);
+        let _ = p.begin_chunk(&CostModel::default(), 0).unwrap();
+        assert!(!InstanceRole::drained(&p), "busy instances are not drained");
+        p.end_chunk(1);
+        assert!(InstanceRole::drained(&p));
+    }
+}

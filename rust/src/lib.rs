@@ -18,6 +18,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod decode;
 pub mod fabric;
+pub mod instance;
 pub mod kvcache;
 pub mod metrics;
 pub mod predictor;
@@ -36,8 +37,9 @@ pub mod util;
 pub mod workload;
 
 pub use api::{
-    Driver, NullObserver, Observer, ProgressObserver, Registry, Report, Scenario,
+    Driver, ElasticSpec, NullObserver, Observer, ProgressObserver, Registry, Report, Scenario,
     TimelineObserver,
 };
 pub use baseline::{run_baseline, BaselineConfig};
 pub use coordinator::{run_cluster, Cluster, ClusterConfig};
+pub use instance::{InstancePool, InstanceRole, InstanceState};

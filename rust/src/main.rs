@@ -15,7 +15,8 @@
 
 use tetri_infer::api::{
     parse_decode_policy, parse_dispatch, parse_link, parse_predictor, parse_prefill_policy,
-    parse_workload, Driver as _, NullObserver, Observer, ProgressObserver, Registry, Scenario,
+    parse_workload, Driver as _, ElasticSpec, NullObserver, Observer, ProgressObserver, Registry,
+    Scenario,
 };
 #[cfg(feature = "pjrt")]
 use tetri_infer::runtime::Engine;
@@ -29,12 +30,16 @@ fn usage() -> ! {
         "usage: tetri <sim|serve|info> [options]
   sim options (defaults in parentheses; flags override --spec values):
     --spec FILE.json      load a scenario spec (see scenarios/)
-    --driver tetri|vllm   system under test (tetri)
+    --driver tetri|vllm|hybrid   system under test (tetri)
     --workload LPLD|LPHD|HPLD|HPHD|Mixed   (Mixed)
     --requests N          (128; with a phased spec, caps each phase)
     --rate R              arrivals/s, 0 = batch (0)
     --prefill N --decode N   instances (1/1; the vLLM comparison uses
                           min(prefill,decode) coupled instances — §5.1)
+    --coupled N           coupled vLLM instances inside the cluster (0;
+                          the hybrid-fleet study)
+    --elastic-max N       elastic pool cap: autoscale instances up to N
+                          (0 = static pool; thresholds take defaults)
     --link nvlink|roce|socket (roce)
     --prefill-policy fcfs|sjf|ljf   (sjf)
     --decode-policy greedy|rs|rd    (rd)
@@ -85,6 +90,8 @@ const SIM_FLAGS: &[(&str, bool)] = &[
     ("--rate", true),
     ("--prefill", true),
     ("--decode", true),
+    ("--coupled", true),
+    ("--elastic-max", true),
     ("--link", true),
     ("--prefill-policy", true),
     ("--decode-policy", true),
@@ -162,6 +169,20 @@ fn scenario_from_args(args: &[String]) -> Scenario {
     if let Some(v) = arg_val(args, "--decode") {
         sc.n_decode = num("--decode", &v, "an instance count");
     }
+    if let Some(v) = arg_val(args, "--coupled") {
+        sc.n_coupled = num("--coupled", &v, "an instance count");
+    }
+    if let Some(v) = arg_val(args, "--elastic-max") {
+        let n: usize = num("--elastic-max", &v, "a pool cap (0 = static)");
+        // Override only the cap: a spec's tuned thresholds survive.
+        sc.elastic = if n == 0 {
+            None
+        } else {
+            let mut el = sc.elastic.unwrap_or_default();
+            el.max_instances = n;
+            Some(el)
+        };
+    }
     if let Some(v) = arg_val(args, "--link") {
         sc.link = parse_link(&v).unwrap_or_else(|e| die(&e));
     }
@@ -209,7 +230,13 @@ fn scenario_from_args(args: &[String]) -> Scenario {
 
 fn cmd_sim(args: &[String]) {
     validate_sim_flags(args);
-    let sc = scenario_from_args(args);
+    let mut sc = scenario_from_args(args);
+    // The hybrid driver guarantees ≥ 1 coupled instance; normalize before
+    // printing so the startup line describes the run that actually
+    // happens (the driver applies the same default).
+    if sc.driver == "hybrid" && sc.n_coupled == 0 {
+        sc.n_coupled = 1;
+    }
     // Self-describing runs: one line with every resolved knob, so any run
     // is reproducible from its log alone.
     println!("{}", sc.summary_line());
@@ -232,8 +259,9 @@ fn cmd_sim(args: &[String]) {
 
     // Paper's comparison setup (§5.1): TetriInfer's prefill+decode pair
     // uses twice the cards of one coupled vLLM instance; fairness is
-    // restored through resource-usage time and perf/$.
-    let base = if sc.driver == "tetri" {
+    // restored through resource-usage time and perf/$. Hybrid runs get
+    // the same coupled-only reference row.
+    let base = if sc.driver == "tetri" || sc.driver == "hybrid" {
         let base_sc = sc.baseline_counterpart();
         let base = registry
             .resolve(&base_sc)

@@ -26,6 +26,10 @@ pub struct RunMetrics {
     pub swapped_tokens: u64,
     /// Number of instance flips that occurred (§3.5).
     pub flips: u32,
+    /// Instances the elastic autoscaler added mid-run.
+    pub scale_ups: u32,
+    /// Instances the elastic autoscaler drained and retired mid-run.
+    pub scale_downs: u32,
     /// Per-instance (heavy, light) decode assignments by *true* decode
     /// length — Figure 19's balance diagnostic. Indexed by instance id;
     /// non-decode instances stay (0, 0).

@@ -1,0 +1,299 @@
+//! The DES engine core: the piece of a driver that is *not* policy.
+//!
+//! Before this existed, `coordinator/cluster.rs` and `baseline/mod.rs`
+//! each owned a private copy of the same machinery — the arena request
+//! store (trace renumbered into dense slots), the pop-dispatch event loop,
+//! the per-request finish bookkeeping, and the end-of-run metric
+//! finalization. [`EngineCore`] owns all of that once; a driver keeps a
+//! core as a field, implements [`EngineHost`] for its event handling and
+//! lifecycle hooks, and [`run_des`] drives the run. Drivers shrink to
+//! policy glue: routing, two-level scheduling, flip/scale decisions.
+//!
+//! The observer fan-out contract is unchanged: hooks fire at the instant
+//! an action is issued, and observers never influence the run.
+
+use crate::api::Observer;
+use crate::metrics::RunMetrics;
+use crate::types::{ReqId, ReqMeta, Request, RequestRecord, Us};
+
+use super::{Event, EventQueue};
+
+/// Sentinel for "first token not yet produced".
+pub const NO_TIME: Us = Us::MAX;
+
+/// Arena entry: one request plus the driver-side state that used to live
+/// in side HashMaps (first-token time) or nowhere at all (the prefilling
+/// instance, which the KV-release path needs). Shared by every driver;
+/// the coupled baseline simply never touches `prefilled_by`.
+pub struct ReqState {
+    pub req: Request,
+    pub first_token: Us,
+    /// The prefill instance (and its epoch) holding this request's prompt
+    /// KV until the transfer out completes. Consumed (`take`n) exactly
+    /// once; the epoch guards against the instance leaving its role and
+    /// coming back while the KV is in flight (a reborn incarnation must
+    /// not have a stale release land on its counter).
+    pub prefilled_by: Option<(usize, u32)>,
+    /// The arrival event fired at least once (mid-flip retries re-enqueue
+    /// `Event::Arrival`; observers must see one arrival per request).
+    pub seen: bool,
+}
+
+/// Queue + arena + metrics + termination condition: the state every DES
+/// driver shares. Drivers own one and layer policy state next to it.
+pub struct EngineCore {
+    pub queue: EventQueue,
+    /// Request arena: everything the run has seen, indexed by arena slot
+    /// (events carry slots, not original request ids).
+    pub requests: Vec<ReqState>,
+    /// Requests remaining (termination condition).
+    pub outstanding: usize,
+    pub metrics: RunMetrics,
+}
+
+impl EngineCore {
+    /// A core with per-instance metric vectors sized for `n_insts`.
+    pub fn new(n_insts: usize) -> Self {
+        EngineCore {
+            queue: EventQueue::new(),
+            requests: Vec::new(),
+            outstanding: 0,
+            metrics: RunMetrics {
+                busy_us: vec![0; n_insts],
+                alive_us: vec![0; n_insts],
+                decode_assign: vec![(0, 0); n_insts],
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn now(&self) -> Us {
+        self.queue.now()
+    }
+
+    /// Renumber the trace into dense arena slots and schedule one arrival
+    /// event per request. All internal ids (events, KV tables, queues) are
+    /// slots from here on; the original request id resurfaces only in the
+    /// final `RequestRecord`.
+    pub fn load_trace(&mut self, trace: Vec<Request>) {
+        self.outstanding = trace.len();
+        self.requests = trace
+            .into_iter()
+            .map(|req| ReqState { req, first_token: NO_TIME, prefilled_by: None, seen: false })
+            .collect();
+        for slot in 0..self.requests.len() {
+            self.queue
+                .schedule_at(self.requests[slot].req.arrival, Event::Arrival(slot as ReqId));
+        }
+    }
+
+    /// Scheduler-facing view of an arena slot (slot becomes the id).
+    pub fn meta_of(&self, slot: ReqId) -> ReqMeta {
+        let r = &self.requests[slot as usize].req;
+        ReqMeta {
+            id: slot,
+            task: r.task,
+            arrival: r.arrival,
+            prompt_len: r.prompt_len,
+            predicted: r.predicted,
+        }
+    }
+
+    /// Fire the observer's arrival hook exactly once per request,
+    /// whatever number of times the arrival event is re-delivered.
+    pub fn note_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        if !self.requests[slot as usize].seen {
+            self.requests[slot as usize].seen = true;
+            let req = self.requests[slot as usize].req;
+            obs.on_arrival(self.queue.now(), &req);
+        }
+    }
+
+    /// Record a completion: emit the `RequestRecord` (with the original
+    /// trace id) and shrink the termination counter.
+    pub fn finish(&mut self, slot: ReqId, now: Us, obs: &mut dyn Observer) {
+        let st = &self.requests[slot as usize];
+        let first = if st.first_token == NO_TIME { now } else { st.first_token };
+        let rec = RequestRecord {
+            id: st.req.id,
+            task: st.req.task,
+            prompt_len: st.req.prompt_len,
+            decode_len: st.req.decode_len,
+            arrival: st.req.arrival,
+            first_token: first,
+            finished: now,
+            predicted: st.req.predicted,
+        };
+        obs.on_finish(now, &rec);
+        self.metrics.records.push(rec);
+        self.outstanding -= 1;
+    }
+
+    /// Grow the per-instance metric vectors to cover `n_insts` slots (the
+    /// elastic pool added instances mid-run). Existing entries keep their
+    /// accumulated values.
+    pub fn grow_instances(&mut self, n_insts: usize) {
+        while self.metrics.busy_us.len() < n_insts {
+            self.metrics.busy_us.push(0);
+            self.metrics.alive_us.push(0);
+            self.metrics.decode_assign.push((0, 0));
+        }
+    }
+
+    /// Stamp every instance as alive for the whole run — the static-pool
+    /// default. Drivers with instance lifecycles (elastic pools) write
+    /// per-slot alive spans themselves in `EngineHost::end` instead.
+    pub fn stamp_alive_full_run(&mut self) {
+        let now = self.queue.now();
+        for a in self.metrics.alive_us.iter_mut() {
+            *a = now;
+        }
+    }
+
+    /// End-of-run: stamp makespan and hand the metrics out. Alive-time
+    /// accounting is the host's job (see [`EngineCore::stamp_alive_full_run`]);
+    /// `run_des` calls this after `EngineHost::end`.
+    pub fn finalize(&mut self) -> RunMetrics {
+        self.metrics.makespan_us = self.queue.now();
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+/// What a driver supplies on top of the shared core: a name (for the
+/// deadlock diagnostic), lifecycle hooks, and the per-event policy.
+pub trait EngineHost {
+    /// The shared core this driver runs on.
+    fn core_mut(&mut self) -> &mut EngineCore;
+
+    /// Driver name used in the deadlock panic message.
+    fn driver_name(&self) -> &'static str;
+
+    /// Called once after the trace is loaded, before the first event pops
+    /// (schedule periodic events, take the initial broadcast, ...).
+    fn begin(&mut self, obs: &mut dyn Observer);
+
+    /// Handle one event. The core has already counted it.
+    fn handle(&mut self, ev: Event, obs: &mut dyn Observer);
+
+    /// Called once after the last request finishes, before metric
+    /// finalization (fold per-instance tallies into the metrics, ...).
+    fn end(&mut self, obs: &mut dyn Observer);
+}
+
+/// The one event loop both drivers share: load the trace, pop events
+/// until every request finished, finalize metrics. Deterministic given
+/// the host's config and the trace; the observer never influences the
+/// run.
+pub fn run_des<H: EngineHost>(host: &mut H, trace: Vec<Request>, obs: &mut dyn Observer) -> RunMetrics {
+    let name = host.driver_name();
+    host.core_mut().load_trace(trace);
+    host.begin(obs);
+    loop {
+        let ev = {
+            let core = host.core_mut();
+            if core.outstanding == 0 {
+                break;
+            }
+            let Some((_, ev)) = core.queue.pop() else {
+                panic!("{name} deadlock: {} requests outstanding, no events", core.outstanding);
+            };
+            core.metrics.events += 1;
+            ev
+        };
+        host.handle(ev, obs);
+    }
+    host.end(obs);
+    host.core_mut().finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::NullObserver;
+    use crate::types::TaskType;
+
+    fn req(id: ReqId, arrival: Us) -> Request {
+        Request {
+            id,
+            task: TaskType::Chat,
+            arrival,
+            prompt_len: 8,
+            decode_len: 2,
+            predicted: None,
+        }
+    }
+
+    /// Minimal host: finishes each request the moment it arrives.
+    struct Echo {
+        core: EngineCore,
+        began: bool,
+        ended: bool,
+    }
+
+    impl EngineHost for Echo {
+        fn core_mut(&mut self) -> &mut EngineCore {
+            &mut self.core
+        }
+
+        fn driver_name(&self) -> &'static str {
+            "echo"
+        }
+
+        fn begin(&mut self, _obs: &mut dyn Observer) {
+            self.began = true;
+        }
+
+        fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {
+            let Event::Arrival(slot) = ev else { unreachable!() };
+            self.core.note_arrival(slot, obs);
+            let now = self.core.now();
+            self.core.finish(slot, now, obs);
+        }
+
+        fn end(&mut self, _obs: &mut dyn Observer) {
+            self.core.stamp_alive_full_run();
+            self.ended = true;
+        }
+    }
+
+    #[test]
+    fn run_des_completes_and_finalizes() {
+        let mut host = Echo { core: EngineCore::new(2), began: false, ended: false };
+        let trace = vec![req(100, 5), req(200, 9)];
+        let m = run_des(&mut host, trace, &mut NullObserver);
+        assert!(host.began && host.ended);
+        assert_eq!(m.records.len(), 2);
+        assert_eq!(m.events, 2);
+        assert_eq!(m.makespan_us, 9);
+        // records carry the original ids, not arena slots
+        let ids: Vec<ReqId> = m.records.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![100, 200]);
+        assert_eq!(m.alive_us, vec![9, 9]);
+    }
+
+    #[test]
+    fn note_arrival_fires_once_per_request() {
+        struct Count(u64);
+        impl Observer for Count {
+            fn on_arrival(&mut self, _now: Us, _req: &Request) {
+                self.0 += 1;
+            }
+        }
+        let mut core = EngineCore::new(1);
+        core.load_trace(vec![req(1, 0)]);
+        let mut obs = Count(0);
+        core.note_arrival(0, &mut obs);
+        core.note_arrival(0, &mut obs);
+        assert_eq!(obs.0, 1, "re-delivered arrivals must not re-fire the hook");
+    }
+
+    #[test]
+    fn grow_instances_extends_metric_vectors() {
+        let mut core = EngineCore::new(2);
+        core.metrics.busy_us[1] = 7;
+        core.grow_instances(4);
+        assert_eq!(core.metrics.busy_us, vec![0, 7, 0, 0]);
+        assert_eq!(core.metrics.alive_us.len(), 4);
+        assert_eq!(core.metrics.decode_assign.len(), 4);
+    }
+}

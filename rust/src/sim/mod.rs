@@ -1,7 +1,13 @@
-//! Discrete-event simulation core: a virtual clock and a monotone event
-//! queue. Every figure-regeneration run is a deterministic DES over this
-//! substrate; real mode replaces the clock with wall time but reuses all
-//! policy code.
+//! Discrete-event simulation engine: a virtual clock, a monotone event
+//! queue, and the shared [`EngineCore`] both DES drivers run on — the
+//! arena request store, the pop-dispatch loop ([`run_des`]), per-request
+//! finish bookkeeping, and metric finalization. Drivers implement
+//! [`EngineHost`] and keep only policy state of their own. Real mode
+//! replaces the clock with wall time but reuses all policy code.
+
+pub mod engine;
+
+pub use engine::{run_des, EngineCore, EngineHost, ReqState, NO_TIME};
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

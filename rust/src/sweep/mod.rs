@@ -163,6 +163,43 @@ mod tests {
     }
 
     #[test]
+    fn hybrid_and_elastic_cells_run_through_the_shared_engine() {
+        let cells = vec![
+            SweepCell::new(
+                "hybrid",
+                Scenario::builder()
+                    .driver("hybrid")
+                    .workload(WorkloadKind::Mixed)
+                    .requests(24)
+                    .rate(16.0)
+                    .seed(5)
+                    .coupled(1)
+                    .build(),
+            ),
+            SweepCell::new(
+                "elastic",
+                Scenario::builder()
+                    .workload(WorkloadKind::Hphd)
+                    .requests(24)
+                    .seed(5)
+                    .flip_idle_ms(None)
+                    .elastic(Some(crate::api::ElasticSpec {
+                        max_instances: 5,
+                        prefill_up_tokens: 512,
+                        decode_up_jobs: 4,
+                        ..Default::default()
+                    }))
+                    .build(),
+            ),
+        ];
+        let res = run_cells(cells, 2);
+        assert_eq!(res[0].report.driver, "hybrid");
+        assert_eq!(res[0].report.metrics.records.len(), 24);
+        assert_eq!(res[1].report.metrics.records.len(), 24);
+        assert!(res[1].report.metrics.scale_ups >= 1, "elastic cell must scale");
+    }
+
+    #[test]
     fn baseline_cells_run_too() {
         let cells = vec![SweepCell::new(
             "base",

@@ -35,13 +35,15 @@ const SEED: u64 = 42;
 
 fn fingerprint(m: &RunMetrics) -> String {
     format!(
-        "makespan_us={} jct_mean_ms={:.6} ttft_mean_ms={:.6} n={} swapped={} flips={}",
+        "makespan_us={} jct_mean_ms={:.6} ttft_mean_ms={:.6} n={} swapped={} flips={} scales=+{}/-{}",
         m.makespan_us,
         m.jct_summary().mean,
         m.ttft_summary().mean,
         m.records.len(),
         m.swapped_tokens,
-        m.flips
+        m.flips,
+        m.scale_ups,
+        m.scale_downs
     )
 }
 
@@ -82,6 +84,25 @@ fn cases() -> Vec<(String, Box<dyn Fn() -> RunMetrics>)> {
             let path = repo_root().join("scenarios/fig12.json");
             let sc = Scenario::load(path.to_str().unwrap()).expect("fig12 spec parses");
             sc.run().expect("fig12 spec resolves").metrics
+        }),
+    ));
+    // the instance-engine scenarios: the elastic pool (scale up under the
+    // burst, drain + retire in the tail) and the hybrid fleet (coupled +
+    // disaggregated instances sharing one engine) stay pinned too
+    out.push((
+        "scenario/elastic-spec".to_string(),
+        Box::new(|| {
+            let path = repo_root().join("scenarios/elastic.json");
+            let sc = Scenario::load(path.to_str().unwrap()).expect("elastic spec parses");
+            sc.run().expect("elastic spec resolves").metrics
+        }),
+    ));
+    out.push((
+        "scenario/hybrid-spec".to_string(),
+        Box::new(|| {
+            let path = repo_root().join("scenarios/hybrid.json");
+            let sc = Scenario::load(path.to_str().unwrap()).expect("hybrid spec parses");
+            sc.run().expect("hybrid spec resolves").metrics
         }),
     ));
     out

@@ -1,0 +1,210 @@
+//! Property tests for the instance engine's role state machine and the
+//! elastic pool (hand-rolled generators: no proptest crate in the
+//! vendored environment; the failing seed is printed via assert context).
+//!
+//! Two layers:
+//!
+//!  1. pool-level — a random sequence of add / drain / flip / retire
+//!     transitions keeps the `InstancePool` state machine consistent
+//!     (epochs bump exactly on role exits, draining excludes instances
+//!     from active counts without destroying their role state, retired
+//!     slots are terminal, slot ids stay stable);
+//!
+//!  2. end-to-end — random cluster configurations that exercise every
+//!     lifecycle edge at once (flips, elastic scale up/down, hybrid
+//!     coupled instances) must never lose or double-finish a request,
+//!     whatever the workload. This is the conservation contract the
+//!     whole refactor rests on: requests are tracked by the shared
+//!     engine arena, so no instance transition may strand one.
+
+use std::collections::HashSet;
+
+use tetri_infer::coordinator::{run_cluster, ClusterConfig, ElasticConfig, FlipConfig};
+use tetri_infer::decode::DecodePolicy;
+use tetri_infer::instance::{
+    CoupledInst, DecodeInst, DrainTarget, InstancePool, InstanceState, PrefillInst,
+};
+use tetri_infer::prefill::PrefillPolicy;
+use tetri_infer::types::Role;
+use tetri_infer::util::Pcg;
+use tetri_infer::workload::{WorkloadGen, WorkloadKind};
+
+fn random_state(rng: &mut Pcg) -> InstanceState {
+    match rng.index(3) {
+        0 => InstanceState::Prefill(PrefillInst::new(PrefillPolicy::Sjf, 16, 512, false, 0)),
+        1 => InstanceState::Decode(DecodeInst::new(DecodePolicy::Greedy, 200, 128, 64)),
+        _ => InstanceState::Coupled(CoupledInst::new(64)),
+    }
+}
+
+#[test]
+fn random_pool_transitions_keep_the_state_machine_consistent() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg::new(seed + 9_000);
+        let mut pool = InstancePool::new();
+        let mut epochs: Vec<u32> = Vec::new();
+        let mut retired: Vec<bool> = Vec::new();
+        let ctx = |seed: u64, op: usize| format!("seed {seed} op {op}");
+        for op in 0..200 {
+            let roll = rng.f64();
+            if pool.is_empty() || roll < 0.2 {
+                let st = random_state(&mut rng);
+                let i = pool.push(st);
+                assert_eq!(i, epochs.len(), "{}: ids are append-only", ctx(seed, op));
+                epochs.push(0);
+                retired.push(false);
+            } else {
+                let i = rng.index(pool.len());
+                match rng.index(4) {
+                    // begin a drain toward a random target
+                    0 => {
+                        if pool.accepts_work(i) {
+                            let to = if rng.f64() < 0.5 {
+                                DrainTarget::Retire
+                            } else {
+                                DrainTarget::Flip(Role::Decode)
+                            };
+                            pool.begin_drain(i, to);
+                            assert!(
+                                !pool.accepts_work(i),
+                                "{}: draining instances must not accept work",
+                                ctx(seed, op)
+                            );
+                            assert!(
+                                pool.state(i).as_role().is_some(),
+                                "{}: draining instances keep serving",
+                                ctx(seed, op)
+                            );
+                        }
+                    }
+                    // flip an idle (thus drained) instance
+                    1 => {
+                        if pool.state(i).as_role().is_some() && pool.is_drained(i) {
+                            let to = if rng.f64() < 0.5 { Role::Decode } else { Role::Prefill };
+                            pool.begin_flip(i, to);
+                            epochs[i] += 1;
+                            assert!(
+                                matches!(pool.state(i), InstanceState::Flipping { .. }),
+                                "{}",
+                                ctx(seed, op)
+                            );
+                        }
+                    }
+                    // land a flip
+                    2 => {
+                        let was_flipping =
+                            matches!(pool.state(i), InstanceState::Flipping { .. });
+                        let landed = pool.finish_flip(i, random_state(&mut rng));
+                        assert_eq!(
+                            landed, was_flipping,
+                            "{}: finish_flip must land exactly on mid-flip slots",
+                            ctx(seed, op)
+                        );
+                        if landed {
+                            assert!(pool.accepts_work(i), "{}", ctx(seed, op));
+                        }
+                    }
+                    // retire a drained instance
+                    _ => {
+                        if pool.state(i).as_role().is_some() && pool.is_drained(i) {
+                            pool.retire(i);
+                            epochs[i] += 1;
+                            retired[i] = true;
+                        }
+                    }
+                }
+            }
+            // global invariants after every op
+            assert_eq!(pool.len(), epochs.len(), "{}: slots never disappear", ctx(seed, op));
+            let mut live = 0;
+            for (i, inst) in pool.iter().enumerate() {
+                assert_eq!(
+                    inst.epoch, epochs[i],
+                    "{}: epoch must bump exactly on role exits",
+                    ctx(seed, op)
+                );
+                if retired[i] {
+                    assert!(
+                        matches!(inst.state, InstanceState::Retired),
+                        "{}: retirement is terminal",
+                        ctx(seed, op)
+                    );
+                }
+                if !matches!(inst.state, InstanceState::Retired) {
+                    live += 1;
+                }
+            }
+            assert_eq!(pool.n_live(), live, "{}", ctx(seed, op));
+            let active_total = pool.n_active(Role::Prefill)
+                + pool.n_active(Role::Decode)
+                + pool.n_active(Role::Coupled);
+            assert!(active_total <= live, "{}", ctx(seed, op));
+        }
+    }
+}
+
+fn random_lifecycle_cfg(rng: &mut Pcg) -> ClusterConfig {
+    ClusterConfig {
+        n_prefill: rng.range(1, 3) as usize,
+        n_decode: rng.range(1, 3) as usize,
+        n_coupled: rng.range(0, 3) as usize,
+        flip: if rng.f64() < 0.5 {
+            Some(FlipConfig { idle_us: rng.range(300_000, 2_000_000), ..Default::default() })
+        } else {
+            None
+        },
+        elastic: if rng.f64() < 0.7 {
+            Some(ElasticConfig {
+                max_instances: rng.range(3, 9) as usize,
+                prefill_up_tokens: rng.range(512, 4096),
+                decode_up_jobs: rng.range(2, 24),
+                down_idle_us: rng.range(200_000, 2_000_000),
+                min_per_role: 1,
+            })
+        } else {
+            None
+        },
+        seed: rng.next_u64(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn random_lifecycle_sequences_never_lose_or_double_finish_requests() {
+    let mut rng = Pcg::new(31_337);
+    for case in 0..20 {
+        let cfg = random_lifecycle_cfg(&mut rng);
+        let kind = WorkloadKind::ALL[rng.index(5)];
+        let n = rng.range(8, 80) as usize;
+        let rate = [0.0, 8.0, 48.0][rng.index(3)];
+        let mut gen = WorkloadGen::new(rng.next_u64());
+        let mut trace = gen.trace(kind, n, rate, 0);
+        if rng.f64() < 0.5 {
+            // a late quiet-tail straggler forces idle windows (drain +
+            // retire and flip-back paths) while the run is still alive
+            let mut tail = gen.trace(WorkloadKind::Lpld, 1, 0.0, 0);
+            tail[0].arrival = 10_000_000 + rng.range(0, 10_000_000);
+            trace.extend(tail);
+        }
+        let total = trace.len();
+        let ctx = format!("case {case}: {kind:?} n={total} cfg={cfg:?}");
+        let m = run_cluster(cfg, trace);
+        assert_eq!(m.records.len(), total, "{ctx}: lost or stranded requests");
+        let mut ids = HashSet::new();
+        for r in &m.records {
+            assert!(ids.insert(r.id), "{ctx}: double-finished request {}", r.id);
+            assert!(r.first_token >= r.arrival, "{ctx}: TTFT causality {r:?}");
+            assert!(r.finished >= r.first_token, "{ctx}: JCT causality {r:?}");
+        }
+        assert_eq!(
+            m.busy_us.len(),
+            m.alive_us.len(),
+            "{ctx}: per-instance metric vectors must stay aligned"
+        );
+        assert!(
+            m.busy_us.len() as u32 >= m.scale_ups,
+            "{ctx}: scale-ups must grow the metric vectors"
+        );
+        assert!(m.scale_downs <= m.scale_ups + 4, "{ctx}: cannot retire more than ever existed");
+    }
+}

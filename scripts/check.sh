@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verify gate (ROADMAP.md): build + full test suite from rust/,
-# plus (a) every example builds and (b) every shipped scenario spec still
-# loads and runs end-to-end in smoke mode (capped request counts), so
-# scenarios/ can never rot. Every PR runs this before landing:
+# plus (a) every example builds, (b) lints are clean (clippy -D warnings,
+# rustfmt --check), and (c) every shipped scenario spec still loads and
+# runs end-to-end in smoke mode (capped request counts), so scenarios/
+# can never rot. The instance-engine specs (scenarios/elastic.json,
+# scenarios/hybrid.json) ride the same glob as every other spec. Every PR
+# runs this before landing:
 #   ./scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -10,9 +13,23 @@ cargo build --release
 cargo build --release --examples
 cargo test -q
 
+# Lint gate: warnings are errors, formatting is canonical. (Warn-and-skip
+# on toolchains that ship without the components.)
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "WARN: clippy not installed; lint gate skipped" >&2
+fi
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --check
+else
+  echo "WARN: rustfmt not installed; format gate skipped" >&2
+fi
+
 # Smoke-run every spec through the CLI: --requests caps flat scenarios
 # and each phase of phased ones, so this stays fast while exercising the
-# full spec → scenario → driver → report pipeline.
+# full spec → scenario → driver → report pipeline (including the elastic
+# and hybrid instance-engine paths).
 for spec in ../scenarios/*.json; do
   echo "spec smoke: ${spec}"
   cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --requests 8 >/dev/null

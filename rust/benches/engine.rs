@@ -1,0 +1,188 @@
+//! Engine-level perf benches (hand-rolled harness: no criterion vendored):
+//!
+//!  1. **Queue A/B** — the calendar (timing-wheel) queue vs the reference
+//!     `BinaryHeap` queue on an identical synthetic DES schedule, with a
+//!     pop-order checksum proving they executed the same run. This is the
+//!     old-vs-new events/sec number for the million-request engine.
+//!  2. **Scale run** — scenarios/scale.json (1M mixed requests, streaming
+//!     arrivals, records off, elastic pools): end-to-end events/sec,
+//!     macro-step collapse ratio, and peak arena size (the O(active)
+//!     memory witness — compare it against the request count).
+//!
+//! Results merge into `BENCH_cluster.json` at the repo root under the
+//! `"engine"` key (read-modify-write, so benches/cluster.rs keeps its
+//! rows). Run via `cargo bench --bench engine` or scripts/bench.sh; set
+//! ENGINE_BENCH_REQUESTS to shrink the scale run while iterating.
+
+use std::time::Instant;
+
+use tetri_infer::api::Scenario;
+use tetri_infer::sim::{CalendarQueue, Event, HeapQueue};
+use tetri_infer::util::{repo_root, Json, Pcg};
+
+const QUEUE_OPS: usize = 2_000_000;
+/// Standing event population during the queue bench (each pop schedules a
+/// replacement) — roughly a large cluster's in-flight event set.
+const QUEUE_HANDLES: usize = 4_096;
+/// Best-of reps per queue, so first-pass warmup (CPU ramp, cold caches
+/// over the delay stream) doesn't bias whichever queue runs first.
+const QUEUE_REPS: usize = 3;
+
+/// Deterministic delay stream shared by both queue runs: mostly short
+/// iteration-scale gaps, a tail of monitor/flip/idle-scale gaps that
+/// exercise the overflow path.
+fn delays(n: usize) -> Vec<u64> {
+    let mut rng = Pcg::new(7);
+    (0..n)
+        .map(|_| match rng.index(32) {
+            0 => rng.range(100_000, 8_000_000),  // monitor/flip horizon
+            1 => rng.range(8_000_000, 120_000_000), // idle-gap horizon (overflow)
+            _ => rng.range(500, 50_000),         // iteration horizon
+        })
+        .collect()
+}
+
+macro_rules! drive_queue {
+    ($queue:expr, $delays:expr) => {{
+        let mut q = $queue;
+        let delays = $delays;
+        for i in 0..QUEUE_HANDLES {
+            q.schedule_at(delays[i], Event::Arrival(i as u64));
+        }
+        let mut checksum = 0u64;
+        let t = Instant::now();
+        for d in delays[QUEUE_HANDLES..].iter() {
+            let (at, ev) = q.pop().expect("standing population never drains");
+            let Event::Arrival(id) = ev else { unreachable!() };
+            checksum = checksum
+                .wrapping_mul(0x100000001b3)
+                .wrapping_add(at)
+                .wrapping_add(id);
+            q.schedule_at(at + d, Event::Arrival(id));
+        }
+        (t.elapsed().as_secs_f64(), checksum)
+    }};
+}
+
+fn main() {
+    println!("== engine benches ==");
+
+    // ---- 1. queue A/B (best of QUEUE_REPS per queue) -----------------
+    let ds = delays(QUEUE_OPS + QUEUE_HANDLES);
+    let (mut heap_s, mut cal_s) = (f64::MAX, f64::MAX);
+    let (mut heap_sum, mut cal_sum) = (0u64, 0u64);
+    for _ in 0..QUEUE_REPS {
+        let (s, c) = drive_queue!(HeapQueue::new(), &ds);
+        heap_s = heap_s.min(s);
+        heap_sum = c;
+        let (s, c) = drive_queue!(CalendarQueue::new(), &ds);
+        cal_s = cal_s.min(s);
+        cal_sum = c;
+    }
+    assert_eq!(cal_sum, heap_sum, "queues diverged: the A/B numbers are meaningless");
+    let heap_eps = QUEUE_OPS as f64 / heap_s.max(1e-12);
+    let cal_eps = QUEUE_OPS as f64 / cal_s.max(1e-12);
+    println!(
+        "queue A/B ({QUEUE_OPS} pops, {QUEUE_HANDLES} standing, best of {QUEUE_REPS}): heap {:>12.0} ev/s  calendar {:>12.0} ev/s  ({:.2}x)",
+        heap_eps,
+        cal_eps,
+        cal_eps / heap_eps
+    );
+
+    // ---- 2. million-request scale run --------------------------------
+    let spec = repo_root().join("scenarios/scale.json");
+    let mut sc = Scenario::load(spec.to_str().unwrap()).expect("scale spec parses");
+    if let Some(n) = std::env::var("ENGINE_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()) {
+        sc.requests = n;
+    }
+    println!("scale run: {} requests (streaming arrivals, records off) ...", sc.requests);
+    let t = Instant::now();
+    let report = sc.run().expect("scale spec resolves");
+    let wall = t.elapsed().as_secs_f64();
+    let m = &report.metrics;
+    let events_per_sec = m.events as f64 / wall.max(1e-12);
+    println!(
+        "scale run: {} reqs {:>10} events (+{} macro-stepped) {:>8.1} s wall {:>12.0} events/s",
+        m.n_finished(),
+        m.events,
+        m.macro_steps,
+        wall,
+        events_per_sec
+    );
+    println!(
+        "scale run: peak arena {} slots ({:.4}% of trace) | makespan {:.0} s sim | JCT mean {:.1} ms | scale +{}/-{}",
+        m.peak_arena,
+        100.0 * m.peak_arena as f64 / m.n_finished().max(1) as f64,
+        m.makespan_us as f64 / 1e6,
+        m.jct_summary().mean,
+        m.scale_ups,
+        m.scale_downs
+    );
+    assert_eq!(m.n_finished(), sc.requests, "scale run must complete every request");
+    assert!(m.records.is_empty(), "scale run must not retain records");
+
+    // ---- merge into BENCH_cluster.json -------------------------------
+    // Fail loudly on a present-but-corrupt baseline instead of silently
+    // overwriting the committed cluster rows with an engine-only doc.
+    let out = repo_root().join("BENCH_cluster.json");
+    let existing = std::fs::read_to_string(&out).ok().map(|s| {
+        Json::parse(&s).unwrap_or_else(|e| {
+            panic!(
+                "{} exists but does not parse ({e}); refusing to overwrite the \
+                 perf baseline — re-run `cargo bench --bench cluster` (or delete \
+                 the file) first",
+                out.display()
+            )
+        })
+    });
+    let engine = Json::obj([
+        (
+            "queue",
+            Json::obj([
+                ("ops", Json::from(QUEUE_OPS)),
+                ("standing_events", Json::from(QUEUE_HANDLES)),
+                ("reps", Json::from(QUEUE_REPS)),
+                ("heap_events_per_sec", Json::from(heap_eps)),
+                ("calendar_events_per_sec", Json::from(cal_eps)),
+                ("speedup", Json::from(cal_eps / heap_eps)),
+            ]),
+        ),
+        (
+            "scale_run",
+            Json::obj([
+                ("spec", Json::from("scenarios/scale.json")),
+                ("requests", Json::from(m.n_finished())),
+                ("events", Json::from(m.events)),
+                ("macro_steps", Json::from(m.macro_steps)),
+                ("events_per_sec", Json::from(events_per_sec)),
+                ("wall_s", Json::from(wall)),
+                ("peak_arena", Json::from(m.peak_arena)),
+                ("makespan_s", Json::from(m.makespan_us as f64 / 1e6)),
+            ]),
+        ),
+    ]);
+    // read-modify-write: keep whatever benches/cluster.rs recorded
+    let doc = match existing.as_ref() {
+        Some(j) => {
+            let map = j.as_obj().unwrap_or_else(|| {
+                panic!(
+                    "{} is not a JSON object; refusing to overwrite the perf baseline",
+                    out.display()
+                )
+            });
+            Json::obj(
+                map.iter()
+                    .filter(|(k, _)| k.as_str() != "engine")
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .chain(std::iter::once(("engine".to_string(), engine))),
+            )
+        }
+        None => Json::obj([
+            ("bench", Json::from("cluster")),
+            ("schema", Json::from(1u64)),
+            ("engine", engine),
+        ]),
+    };
+    std::fs::write(&out, doc.dump()).expect("writing BENCH_cluster.json");
+    println!("merged engine rows into {}", out.display());
+}

@@ -142,11 +142,20 @@ fn main() {
         }
     });
 
-    // ---- DES event queue
+    // ---- DES event queue. Horizons spread across iteration-scale (many
+    // calendar buckets), monitor-scale, and far-future (overflow) times —
+    // all < 1000 µs would collapse into one 4 ms bucket and measure a
+    // plain BinaryHeap instead of the production queue's scan/migration
+    // paths (benches/engine.rs has the dedicated heap-vs-calendar A/B).
     bench(&mut rows, "event_queue schedule+pop", n, 5, || {
         let mut q = EventQueue::new();
         for i in 0..n {
-            q.schedule_at(i * 7 % 1000, Event::Arrival(i));
+            let at = match i % 47 {
+                0 => i * 7919 % 6_000_000_000, // far future: overflow path
+                1..=4 => i * 7919 % 120_000_000, // monitor/flip horizon
+                _ => i * 7919 % 40_000,        // iteration horizon
+            };
+            q.schedule_at(at, Event::Arrival(i));
         }
         while q.pop().is_some() {}
     });

@@ -11,19 +11,28 @@ use std::time::Instant;
 
 use crate::baseline::{BaselineCluster, BaselineConfig};
 use crate::coordinator::{Cluster, ClusterConfig};
+use crate::sim::{ArrivalSource, TraceSource};
 use crate::types::Request;
 
 use super::{Observer, Report, Scenario};
 
-/// A simulated serving system that can run a trace to completion.
+/// A simulated serving system that can run an arrival stream to
+/// completion.
 pub trait Driver {
     /// Registry key / display name of this driver.
     fn name(&self) -> &str;
 
-    /// Run `trace` to completion, streaming events to `obs`. Deterministic
-    /// given the driver's config and the trace; the observer never
-    /// influences the run.
-    fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report;
+    /// Run a pull-based arrival stream to completion, streaming events to
+    /// `obs`. Deterministic given the driver's config and the source; the
+    /// observer never influences the run. This is the O(active)-memory
+    /// hot path — scale runs never materialize a trace.
+    fn run_source(&self, source: &mut dyn ArrivalSource, obs: &mut dyn Observer) -> Report;
+
+    /// Run a materialized trace (wraps it in a [`TraceSource`], whose
+    /// stable sort reproduces the pre-scheduled heap's delivery order).
+    fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report {
+        self.run_source(&mut TraceSource::from_slice(trace), obs)
+    }
 }
 
 /// The disaggregated TetriInfer cluster (§3) — also, under the
@@ -67,12 +76,9 @@ impl Driver for ClusterDriver {
         self.key
     }
 
-    fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report {
+    fn run_source(&self, source: &mut dyn ArrivalSource, obs: &mut dyn Observer) -> Report {
         let t = Instant::now();
-        // One memcpy of the Copy-POD trace per run (~50 B/request) so the
-        // driver can be re-run on the same borrowed trace; noise next to
-        // the DES run itself.
-        let metrics = Cluster::new(self.cfg.clone()).run_observed(trace.to_vec(), obs);
+        let metrics = Cluster::new(self.cfg.clone()).run_streamed(source, obs);
         Report {
             driver: self.key.to_string(),
             scenario: self.scenario.clone(),
@@ -103,9 +109,9 @@ impl Driver for BaselineDriver {
         "vllm"
     }
 
-    fn run(&self, trace: &[Request], obs: &mut dyn Observer) -> Report {
+    fn run_source(&self, source: &mut dyn ArrivalSource, obs: &mut dyn Observer) -> Report {
         let t = Instant::now();
-        let metrics = BaselineCluster::new(self.cfg.clone()).run_observed(trace.to_vec(), obs);
+        let metrics = BaselineCluster::new(self.cfg.clone()).run_streamed(source, obs);
         Report {
             driver: "vllm".to_string(),
             scenario: self.scenario.clone(),

@@ -2,7 +2,7 @@
 //! with the single JSON serializer used by `main.rs`,
 //! `examples/figures.rs`, the sweep harness, and both benches.
 
-use crate::metrics::RunMetrics;
+use crate::metrics::{perf_per_dollar, RunMetrics, RunSummaries};
 use crate::util::{Json, Summary};
 
 use super::Scenario;
@@ -34,15 +34,22 @@ fn summary_json(s: &Summary) -> Json {
 
 /// The one serializer for run metrics (milliseconds for latencies,
 /// seconds for resource/makespan). Every JSON artifact in the repo that
-/// embeds run results goes through this.
+/// embeds run results goes through this. Summaries are computed once per
+/// report and threaded into every consumer (`metrics_json_with`).
 pub fn metrics_json(m: &RunMetrics) -> Json {
+    metrics_json_with(m, &m.summaries())
+}
+
+fn metrics_json_with(m: &RunMetrics, s: &RunSummaries) -> Json {
     Json::obj([
-        ("requests", Json::from(m.records.len())),
-        ("ttft_ms", summary_json(&m.ttft_summary())),
-        ("jct_ms", summary_json(&m.jct_summary())),
-        ("resource_s", Json::from(m.resource_seconds())),
+        ("requests", Json::from(m.n_finished())),
+        ("ttft_ms", summary_json(&s.ttft)),
+        ("jct_ms", summary_json(&s.jct)),
+        ("resource_s", Json::from(s.resource_s)),
         ("makespan_s", Json::from(m.makespan_us as f64 / 1e6)),
         ("events", Json::from(m.events)),
+        ("macro_steps", Json::from(m.macro_steps)),
+        ("peak_arena", Json::from(m.peak_arena)),
         ("decode_tok_per_s", Json::from(m.decode_throughput())),
         ("utilization", Json::from(m.utilization())),
         ("swapped_tokens", Json::from(m.swapped_tokens)),
@@ -55,29 +62,38 @@ pub fn metrics_json(m: &RunMetrics) -> Json {
 impl Report {
     /// Full machine-readable report: scenario echo + metrics + wall time.
     pub fn to_json(&self) -> Json {
+        self.to_json_with(&self.metrics.summaries())
+    }
+
+    /// `to_json` with the summaries precomputed by the caller (one
+    /// collect+sort per report, however many consumers).
+    pub fn to_json_with(&self, s: &RunSummaries) -> Json {
         Json::obj([
             ("driver", Json::from(self.driver.clone())),
             (
                 "scenario",
                 self.scenario.as_ref().map(|s| s.to_json()).unwrap_or(Json::Null),
             ),
-            ("metrics", metrics_json(&self.metrics)),
+            ("metrics", metrics_json_with(&self.metrics, s)),
             ("wall_secs", Json::from(self.wall_secs)),
         ])
     }
 
     /// One human-readable line of the headline metrics.
     pub fn summary_line(&self) -> String {
-        let t = self.metrics.ttft_summary();
-        let j = self.metrics.jct_summary();
+        self.summary_line_with(&self.metrics.summaries())
+    }
+
+    /// `summary_line` with the summaries precomputed by the caller.
+    pub fn summary_line_with(&self, s: &RunSummaries) -> String {
         format!(
             "{:<10} TTFT mean {:>8.1} ms p99 {:>8.1} | JCT mean {:>9.1} ms p99 {:>9.1} | resource {:>6.1}s | flips {}",
             self.driver,
-            t.mean,
-            t.p99,
-            j.mean,
-            j.p99,
-            self.metrics.resource_seconds(),
+            s.ttft.mean,
+            s.ttft.p99,
+            s.jct.mean,
+            s.jct.p99,
+            s.resource_s,
             self.metrics.flips
         )
     }
@@ -94,8 +110,15 @@ impl Report {
     }
 
     /// Machine-readable side-by-side of this run and a baseline, with the
-    /// paper's relative deltas precomputed.
+    /// paper's relative deltas precomputed. Each side's summaries are
+    /// computed once and shared by the embedded reports and the deltas.
     pub fn comparison_json(&self, base: &Report) -> Json {
+        self.comparison_json_with(&self.metrics.summaries(), base, &base.metrics.summaries())
+    }
+
+    /// `comparison_json` with both sides' summaries precomputed by the
+    /// caller (the CLI threads the ones it already printed rows from).
+    pub fn comparison_json_with(&self, own: &RunSummaries, base: &Report, other: &RunSummaries) -> Json {
         let rel = |own: f64, other: f64| -> Json {
             if other == 0.0 {
                 Json::Null
@@ -104,24 +127,15 @@ impl Report {
             }
         };
         Json::obj([
-            ("report", self.to_json()),
-            ("baseline", base.to_json()),
+            ("report", self.to_json_with(own)),
+            ("baseline", base.to_json_with(other)),
             (
                 "deltas",
                 Json::obj([
-                    (
-                        "ttft_rel",
-                        rel(self.metrics.ttft_summary().mean, base.metrics.ttft_summary().mean),
-                    ),
-                    (
-                        "jct_rel",
-                        rel(self.metrics.jct_summary().mean, base.metrics.jct_summary().mean),
-                    ),
-                    (
-                        "resource_rel",
-                        rel(self.metrics.resource_seconds(), base.metrics.resource_seconds()),
-                    ),
-                    ("perf_per_dollar", Json::from(self.perf_per_dollar_vs(base))),
+                    ("ttft_rel", rel(own.ttft.mean, other.ttft.mean)),
+                    ("jct_rel", rel(own.jct.mean, other.jct.mean)),
+                    ("resource_rel", rel(own.resource_s, other.resource_s)),
+                    ("perf_per_dollar", Json::from(perf_per_dollar(own, other))),
                 ]),
             ),
         ])

@@ -273,6 +273,11 @@ pub struct Scenario {
     /// Override the per-instance KV pool in bytes (memory-pressure
     /// scenarios); `None` = calibrated CostModel default.
     pub hbm_kv_bytes: Option<f64>,
+    /// Keep per-request `RequestRecord`s in the run metrics. On (the
+    /// default) for golden/figure runs — exact summaries; off for scale
+    /// runs — constant memory, summaries from streaming histograms
+    /// (`--no-records` on the CLI).
+    pub records: bool,
     /// Elastic instance-pool policy; `None` keeps the pool static.
     pub elastic: Option<ElasticSpec>,
     /// Multi-phase trace; when non-empty it replaces
@@ -309,6 +314,7 @@ impl Default for Scenario {
             srtf_chunking: false,
             prefill_batch: 16,
             hbm_kv_bytes: None,
+            records: true,
             elastic: None,
             phases: Vec::new(),
         }
@@ -342,6 +348,7 @@ const KNOWN_KEYS: &[&str] = &[
     "srtf_chunking",
     "prefill_batch",
     "hbm_kv_bytes",
+    "records",
     "elastic",
     "phases",
 ];
@@ -411,6 +418,26 @@ impl Scenario {
         out
     }
 
+    /// Pull-based arrival source for this scenario, bit-identical to
+    /// [`Scenario::trace`] in delivered order: single-phase specs stream
+    /// straight from the workload generator (O(1) memory — this is the
+    /// million-request path); phased specs materialize and stable-sort,
+    /// because phases share one sequential RNG stream and may overlap in
+    /// time, so they cannot stream without buffering anyway.
+    pub fn source(&self) -> Box<dyn crate::sim::ArrivalSource> {
+        if self.phases.is_empty() {
+            Box::new(crate::workload::GenSource::new(
+                self.trace_seed,
+                self.workload,
+                self.requests,
+                self.rate,
+                0,
+            ))
+        } else {
+            Box::new(crate::sim::TraceSource::new(self.trace()))
+        }
+    }
+
     /// Total requests across phases (or the flat `requests` count).
     pub fn total_requests(&self) -> usize {
         if self.phases.is_empty() {
@@ -459,6 +486,7 @@ impl Scenario {
                 ..Default::default()
             }),
             elastic: self.elastic.map(ElasticSpec::to_config),
+            retain_records: self.records,
             cost,
             seed: self.seed,
             ..Default::default()
@@ -481,8 +509,10 @@ impl Scenario {
             n_instances: self.n_prefill.min(self.n_decode).max(1),
             prefill_batch: self.prefill_batch,
             max_batch: self.prefill_batch as u32,
+            retain_records: self.records,
             cost,
             seed: self.seed,
+            ..Default::default()
         }
     }
 
@@ -501,12 +531,14 @@ impl Scenario {
         self.run_with(&mut super::NullObserver)
     }
 
-    /// Resolve the driver and run with `obs` attached. Errors only on an
-    /// unknown driver key.
+    /// Resolve the driver and run with `obs` attached, streaming arrivals
+    /// from [`Scenario::source`] (bit-identical to running the
+    /// materialized trace — parity-tested in tests/golden.rs). Errors
+    /// only on an unknown driver key.
     pub fn run_with(&self, obs: &mut dyn super::Observer) -> Result<super::Report, String> {
         let driver = super::Registry::builtin().resolve(self)?;
-        let trace = self.trace();
-        Ok(driver.run(&trace, obs))
+        let mut source = self.source();
+        Ok(driver.run_source(source.as_mut(), obs))
     }
 
     // -------------------------------------------------------------- json
@@ -546,6 +578,7 @@ impl Scenario {
                 "hbm_kv_bytes",
                 self.hbm_kv_bytes.map(Json::from).unwrap_or(Json::Null),
             ),
+            ("records", Json::from(self.records)),
         ];
         if let Some(el) = self.elastic {
             pairs.push((
@@ -631,6 +664,7 @@ impl Scenario {
                         _ => Some(want_num(v, key)?),
                     }
                 }
+                "records" => sc.records = want_bool(v, key)?,
                 "elastic" => {
                     sc.elastic = match v {
                         Json::Null => None,
@@ -742,7 +776,7 @@ impl Scenario {
             "scenario{}: driver={} {} prefill={} decode={} coupled={} link={} prefill_policy={} \
              decode_policy={} dispatch={} predictor={} acc={} chunk={} sched_batch={} \
              max_batch={} flip_idle_ms={} elastic={} transfer={} srtf={} prefill_batch={} \
-             hbm_kv_bytes={} seed={} trace_seed={}",
+             hbm_kv_bytes={} records={} seed={} trace_seed={}",
             if self.name.is_empty() { String::new() } else { format!(" '{}'", self.name) },
             self.driver,
             phases,
@@ -775,6 +809,7 @@ impl Scenario {
             self.srtf_chunking,
             self.prefill_batch,
             self.hbm_kv_bytes.map(|b| b.to_string()).unwrap_or_else(|| "default".into()),
+            self.records,
             self.seed,
             self.trace_seed,
         )
@@ -916,6 +951,12 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Per-request record retention (off = constant-memory scale mode).
+    pub fn records(mut self, v: bool) -> Self {
+        self.sc.records = v;
+        self
+    }
+
     pub fn phase(mut self, workload: WorkloadKind, requests: usize, rate: f64, start_ms: f64) -> Self {
         self.sc.phases.push(Phase { workload, requests, rate, start_ms });
         self
@@ -964,6 +1005,7 @@ mod tests {
             .srtf_chunking(true)
             .prefill_batch(8)
             .hbm_kv_bytes(Some(2e9))
+            .records(false)
             .phase(WorkloadKind::Hpld, 64, 16.0, 0.0)
             .phase(WorkloadKind::Lphd, 96, 16.0, 8_000.0)
             .build();
@@ -999,6 +1041,47 @@ mod tests {
         let sc = Scenario::from_str(r#"{"elastic": {"down_idle_ms": 250}}"#).unwrap();
         let cfg = sc.cluster_config();
         assert_eq!(cfg.elastic.unwrap().down_idle_us, 250_000);
+    }
+
+    #[test]
+    fn records_knob_reaches_both_configs() {
+        let sc = Scenario::from_str(r#"{"records": false}"#).unwrap();
+        assert!(!sc.records);
+        assert!(!sc.cluster_config().retain_records);
+        assert!(!sc.baseline_config().retain_records);
+        // default stays on: golden runs keep exact per-request records
+        let sc = Scenario::default();
+        assert!(sc.records && sc.cluster_config().retain_records);
+        assert!(Scenario::from_str(r#"{"records": 1}"#).is_err(), "records must be a bool");
+    }
+
+    #[test]
+    fn single_phase_sources_stream_without_materializing() {
+        use crate::sim::ArrivalSource as _;
+        let sc = Scenario::builder().requests(32).rate(16.0).seed(9).build();
+        let want = sc.trace();
+        let mut src = sc.source();
+        assert_eq!(src.total(), 32);
+        for w in &want {
+            let g = src.next_request().unwrap();
+            assert_eq!((g.id, g.arrival, g.prompt_len, g.decode_len), (w.id, w.arrival, w.prompt_len, w.decode_len));
+        }
+        assert!(src.next_request().is_none());
+        // phased specs deliver in time order with trace-order ties
+        let sc = Scenario::builder()
+            .seed(9)
+            .phase(WorkloadKind::Hpld, 8, 16.0, 0.0)
+            .phase(WorkloadKind::Lphd, 8, 16.0, 100.0)
+            .build();
+        let mut src = sc.source();
+        let mut last = 0;
+        let mut n = 0;
+        while let Some(r) = src.next_request() {
+            assert!(r.arrival >= last, "phased source must be time-sorted");
+            last = r.arrival;
+            n += 1;
+        }
+        assert_eq!(n, 16);
     }
 
     #[test]

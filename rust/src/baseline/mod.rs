@@ -20,8 +20,10 @@ use crate::api::{NullObserver, Observer};
 use crate::costmodel::CostModel;
 use crate::instance::CoupledInst;
 use crate::metrics::RunMetrics;
-use crate::sim::{run_des, EngineCore, EngineHost, Event};
-use crate::types::{ReqId, Request};
+use crate::sim::{
+    macro_chain, run_des, run_des_source, ArrivalSource, EngineCore, EngineHost, Event,
+};
+use crate::types::{ReqId, Request, Us};
 
 #[derive(Clone, Debug)]
 pub struct BaselineConfig {
@@ -38,6 +40,12 @@ pub struct BaselineConfig {
     /// TetriInfer's "variable decode batch size over vLLM's fixed batch
     /// size"); TetriInfer's decode instances batch up to 128.
     pub max_batch: u32,
+    /// Keep per-request records in the run metrics (see
+    /// `ClusterConfig::retain_records` — same knob, same default).
+    pub retain_records: bool,
+    /// Macro-step coupled iteration chains (see
+    /// `ClusterConfig::macro_step` — pure perf knob, parity-tested).
+    pub macro_step: bool,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -48,6 +56,8 @@ impl Default for BaselineConfig {
             n_instances: 1,
             prefill_batch: 16,
             max_batch: 16,
+            retain_records: true,
+            macro_step: true,
             cost: CostModel::default(),
             seed: 0,
         }
@@ -68,9 +78,11 @@ impl BaselineCluster {
         let pages = (cfg.cost.kv_capacity_tokens() / 16) as u32;
         let insts = (0..cfg.n_instances).map(|_| CoupledInst::new(pages)).collect();
         let n = cfg.n_instances;
+        let mut core = EngineCore::new(n);
+        core.metrics.retain_records = cfg.retain_records;
         BaselineCluster {
             cfg,
-            core: EngineCore::new(n),
+            core,
             insts,
             arrivals_pending: 0,
         }
@@ -86,6 +98,12 @@ impl BaselineCluster {
     /// `run` whatever the observer does.
     pub fn run_observed(mut self, trace: Vec<Request>, obs: &mut dyn Observer) -> RunMetrics {
         run_des(&mut self, trace, obs)
+    }
+
+    /// Run a pull-based arrival stream to completion (O(active) memory;
+    /// identical trajectory to `run_observed` on the materialized trace).
+    pub fn run_streamed(mut self, source: &mut dyn ArrivalSource, obs: &mut dyn Observer) -> RunMetrics {
+        run_des_source(&mut self, source, obs)
     }
 
     fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
@@ -108,36 +126,46 @@ impl BaselineCluster {
         }
     }
 
-    fn try_start(&mut self, i: usize, obs: &mut dyn Observer) {
+    /// Begin one mixed iteration on `i` at virtual time `now` — the
+    /// single copy of iteration start shared by the arrival path
+    /// ([`BaselineCluster::try_start`]) and the macro-step chain. A
+    /// partial prefill batch runs only when no future arrival could still
+    /// fill it and the decode side gives the instance nothing to do. One
+    /// mixed iteration = a prefill side and a decode side sharing `dur`;
+    /// each observer hook fires only when its side is non-empty. Returns
+    /// the iteration's end time, or `None` when there is nothing to do.
+    fn start_iteration(&mut self, i: usize, now: Us, obs: &mut dyn Observer) -> Option<Us> {
         let cost = self.cfg.cost;
-        // May a partial prefill batch run? Only when no future arrival
-        // could still fill it and the decode side gives us nothing to do.
         let more_arrivals = self.arrivals_pending > 0;
-        let now = self.core.now();
-        let Some(st) = self.insts[i].begin_iteration(
+        let st = self.insts[i].begin_iteration(
             &self.core.requests,
             &cost,
             self.cfg.prefill_batch,
             self.cfg.max_batch,
             more_arrivals,
             now,
-        ) else {
-            return;
-        };
+        )?;
         self.core.metrics.busy_us[i] += st.dur;
-        self.core.queue.schedule_in(st.dur, Event::CoupledIterDone { instance: i });
-        // One mixed iteration = a prefill side and a decode side sharing
-        // `dur`: report whichever sides are non-empty.
         if st.prefill_tokens > 0 {
             obs.on_chunk(now, i, st.prefill_tokens, 0, st.dur);
         }
         if st.batch > 0 {
             obs.on_decode_iter(now, i, st.batch, st.kv_tokens, st.dur);
         }
+        Some(now + st.dur)
     }
 
-    fn on_iter_done(&mut self, i: usize, obs: &mut dyn Observer) {
+    fn try_start(&mut self, i: usize, obs: &mut dyn Observer) {
         let now = self.core.now();
+        if let Some(end) = self.start_iteration(i, now, obs) {
+            self.core.queue.schedule_at(end, Event::CoupledIterDone { instance: i });
+        }
+    }
+
+    /// Close the mixed iteration that just ended on instance `i` at
+    /// virtual time `now`: stamp first tokens, finish single-token
+    /// prompts and completed decodes, hand the buffers back for reuse.
+    fn close_iteration(&mut self, i: usize, now: Us, obs: &mut dyn Observer) {
         let (mut prefilled, mut done) = self.insts[i].end_iteration(now);
         for slot in prefilled.drain(..) {
             self.core.requests[slot as usize].first_token = now;
@@ -150,9 +178,24 @@ impl BaselineCluster {
         for slot in done.drain(..) {
             self.core.finish(slot, now, obs);
         }
-        // hand the buffers back so the next iteration reuses their capacity
         self.insts[i].return_bufs(prefilled, done);
-        self.try_start(i, obs);
+    }
+
+    /// Iteration-complete handler: the coupled-baseline instantiation of
+    /// the shared [`macro_chain`] scaffold — iterations chain inline
+    /// while nothing external can land in the window, event-for-event
+    /// identical to per-iteration stepping (parity-tested in
+    /// tests/golden.rs).
+    fn on_iter_done(&mut self, i: usize, obs: &mut dyn Observer) {
+        let macro_on = self.cfg.macro_step;
+        macro_chain(
+            self,
+            macro_on,
+            obs,
+            |s, now, obs| s.close_iteration(i, now, obs),
+            |s, now, obs| s.start_iteration(i, now, obs),
+            |s, end| s.core.queue.schedule_at(end, Event::CoupledIterDone { instance: i }),
+        );
     }
 }
 
@@ -166,7 +209,8 @@ impl EngineHost for BaselineCluster {
     }
 
     fn begin(&mut self, _obs: &mut dyn Observer) {
-        self.arrivals_pending = self.core.requests.len();
+        // arrivals stream in lazily: start from the source's total
+        self.arrivals_pending = self.core.total_expected;
     }
 
     fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {

@@ -37,7 +37,9 @@ use crate::instance::{
 use crate::metrics::RunMetrics;
 use crate::predictor::{OraclePredictor, Predictor};
 use crate::prefill::{choose, predicted_footprint, DecodeLoad};
-use crate::sim::{run_des, EngineCore, EngineHost, Event};
+use crate::sim::{
+    macro_chain, run_des, run_des_source, ArrivalSource, EngineCore, EngineHost, Event,
+};
 use crate::types::{ReqId, Request, Role, Us, HEAVY_DECODE_TOKENS};
 use crate::util::Pcg;
 
@@ -107,9 +109,11 @@ impl Cluster {
         let mut fabric = Fabric::new(cfg.link, cfg.cost.kv_bytes_per_tok);
         fabric.granularity = cfg.transfer_granularity;
         let rng = Pcg::with_stream(cfg.seed, 0x1234_5678_9abc_def1);
+        let mut core = EngineCore::new(n);
+        core.metrics.retain_records = cfg.retain_records;
         Cluster {
             cfg,
-            core: EngineCore::new(n),
+            core,
             pool,
             broadcast: Vec::new(),
             since_tick: vec![(0, 0, 0); n],
@@ -135,6 +139,13 @@ impl Cluster {
     /// to `run` (golden-tested through `api::Scenario`).
     pub fn run_observed(mut self, trace: Vec<Request>, obs: &mut dyn Observer) -> RunMetrics {
         run_des(&mut self, trace, obs)
+    }
+
+    /// Run a pull-based arrival stream to completion — the O(active)-memory
+    /// hot path scale runs use (identical trajectory to `run_observed` on
+    /// the materialized trace; parity-tested in tests/golden.rs).
+    pub fn run_streamed(mut self, source: &mut dyn ArrivalSource, obs: &mut dyn Observer) -> RunMetrics {
+        run_des_source(&mut self, source, obs)
     }
 
     // --------------------------------------------- least-loaded prefill
@@ -372,9 +383,10 @@ impl Cluster {
             st.first_token = now;
             st.prefilled_by = Some((i, epoch));
             if st.req.decode_len <= 1 {
-                // prefill's own token completes the request
-                self.core.finish(slot, now, obs);
+                // prefill's own token completes the request (release the
+                // residency first: finish recycles the arena slot)
                 self.release_prefill_resident(slot);
+                self.core.finish(slot, now, obs);
                 continue;
             }
             // Dispatcher: decentralized inter-decode scheduling over the
@@ -494,57 +506,96 @@ impl Cluster {
         }
     }
 
-    fn try_start_decode(&mut self, d: usize, obs: &mut dyn Observer) {
+    /// Begin one decode iteration on `d` at virtual time `now`: run its
+    /// effects, account busy time, fire the observer hook. Returns the
+    /// iteration's end time — the *one* copy of iteration start shared by
+    /// the arrival-triggered path ([`Cluster::try_start_decode`], which
+    /// schedules the completion event) and the macro-step chain (which
+    /// may process it inline) — or `None` when the instance is busy, has
+    /// nothing resident, or no longer serves the decode role.
+    fn start_decode_iteration(&mut self, d: usize, now: Us, obs: &mut dyn Observer) -> Option<Us> {
         let cost = self.cfg.cost;
-        let now = self.core.now();
-        let Some(di) = self.pool.decode_mut(d) else { return };
-        let Some(st) = di.begin_iteration(&cost, now) else { return };
+        let di = self.pool.decode_mut(d)?;
+        let st = di.begin_iteration(&cost, now)?;
         self.core.metrics.busy_us[d] += st.dur;
-        self.core.queue.schedule_in(st.dur, Event::DecodeIterDone { instance: d });
         obs.on_decode_iter(now, d, st.batch, st.kv_tokens, st.dur);
+        Some(now + st.dur)
     }
 
-    fn on_decode_done(&mut self, d: usize, obs: &mut dyn Observer) {
+    fn try_start_decode(&mut self, d: usize, obs: &mut dyn Observer) {
         let now = self.core.now();
+        if let Some(end) = self.start_decode_iteration(d, now, obs) {
+            self.core.queue.schedule_at(end, Event::DecodeIterDone { instance: d });
+        }
+    }
+
+    /// Close the decode iteration that just ended on `d` at virtual time
+    /// `now`: record completions and hand the buffer back for reuse.
+    /// No-op when the instance left the decode role mid-flight.
+    fn close_decode_iteration(&mut self, d: usize, now: Us, obs: &mut dyn Observer) {
         let Some(di) = self.pool.decode_mut(d) else { return };
         let mut done = di.end_iteration(now);
         for slot in done.drain(..) {
             self.core.finish(slot, now, obs);
         }
-        // hand the buffer back so the next iteration reuses its capacity
         if let Some(di) = self.pool.decode_mut(d) {
             di.return_done_buf(done);
         }
-        self.try_start_decode(d, obs);
+    }
+
+    /// Iteration-complete handler: the decode instantiation of the shared
+    /// [`macro_chain`] scaffold — successive iterations run inline while
+    /// nothing external can land in the window (the batch composition
+    /// provably cannot change there), event-for-event identical to
+    /// per-iteration stepping (parity-tested in tests/golden.rs).
+    fn on_decode_done(&mut self, d: usize, obs: &mut dyn Observer) {
+        let macro_on = self.cfg.macro_step;
+        macro_chain(
+            self,
+            macro_on,
+            obs,
+            |s, now, obs| s.close_decode_iteration(d, now, obs),
+            |s, now, obs| s.start_decode_iteration(d, now, obs),
+            |s, end| s.core.queue.schedule_at(end, Event::DecodeIterDone { instance: d }),
+        );
     }
 
     // ----------------------------------------------------------- coupled
 
-    fn try_start_coupled(&mut self, c: usize, obs: &mut dyn Observer) {
+    /// Begin one mixed coupled iteration on `c` at virtual time `now` —
+    /// the decode counterpart of [`Cluster::start_decode_iteration`]:
+    /// the single copy of iteration start shared by the arrival path and
+    /// the macro-step chain. One mixed iteration = a prefill side and a
+    /// decode side sharing `dur`; each observer hook fires only when its
+    /// side is non-empty. Returns the iteration's end time.
+    fn start_coupled_iteration(&mut self, c: usize, now: Us, obs: &mut dyn Observer) -> Option<Us> {
         let cost = self.cfg.cost;
         let batch = self.cfg.coupled_batch;
         let more_arrivals = self.arrivals_pending > 0;
-        let now = self.core.now();
-        let Some(ci) = self.pool.coupled_mut(c) else { return };
-        let Some(st) =
-            ci.begin_iteration(&self.core.requests, &cost, batch, batch as u32, more_arrivals, now)
-        else {
-            return;
-        };
+        let ci = self.pool.coupled_mut(c)?;
+        let st =
+            ci.begin_iteration(&self.core.requests, &cost, batch, batch as u32, more_arrivals, now)?;
         self.core.metrics.busy_us[c] += st.dur;
-        self.core.queue.schedule_in(st.dur, Event::CoupledIterDone { instance: c });
-        // One mixed iteration = a prefill side and a decode side sharing
-        // `dur`: report whichever sides are non-empty.
         if st.prefill_tokens > 0 {
             obs.on_chunk(now, c, st.prefill_tokens, 0, st.dur);
         }
         if st.batch > 0 {
             obs.on_decode_iter(now, c, st.batch, st.kv_tokens, st.dur);
         }
+        Some(now + st.dur)
     }
 
-    fn on_coupled_done(&mut self, c: usize, obs: &mut dyn Observer) {
+    fn try_start_coupled(&mut self, c: usize, obs: &mut dyn Observer) {
         let now = self.core.now();
+        if let Some(end) = self.start_coupled_iteration(c, now, obs) {
+            self.core.queue.schedule_at(end, Event::CoupledIterDone { instance: c });
+        }
+    }
+
+    /// Close the mixed iteration that just ended on coupled instance `c`
+    /// at virtual time `now`: stamp first tokens, finish single-token
+    /// prompts and completed decodes, hand the buffers back for reuse.
+    fn close_coupled_iteration(&mut self, c: usize, now: Us, obs: &mut dyn Observer) {
         let Some(ci) = self.pool.coupled_mut(c) else { return };
         let (mut prefilled, mut done) = ci.end_iteration(now);
         for slot in prefilled.drain(..) {
@@ -560,11 +611,26 @@ impl Cluster {
         for slot in done.drain(..) {
             self.core.finish(slot, now, obs);
         }
-        // hand the buffers back so the next iteration reuses their capacity
         if let Some(ci) = self.pool.coupled_mut(c) {
             ci.return_bufs(prefilled, done);
         }
-        self.try_start_coupled(c, obs);
+    }
+
+    /// Coupled iteration-complete handler: the same [`macro_chain`]
+    /// scaffold as [`Cluster::on_decode_done`]. The waiting line only
+    /// grows on arrival events and `arrivals_pending` only moves with
+    /// them, so inside the strictly-before-external window successive
+    /// mixed iterations are a function of instance-local state.
+    fn on_coupled_done(&mut self, c: usize, obs: &mut dyn Observer) {
+        let macro_on = self.cfg.macro_step;
+        macro_chain(
+            self,
+            macro_on,
+            obs,
+            |s, now, obs| s.close_coupled_iteration(c, now, obs),
+            |s, now, obs| s.start_coupled_iteration(c, now, obs),
+            |s, end| s.core.queue.schedule_at(end, Event::CoupledIterDone { instance: c }),
+        );
     }
 
     // ----------------------------------------------------------- monitor
@@ -810,7 +876,9 @@ impl EngineHost for Cluster {
     }
 
     fn begin(&mut self, _obs: &mut dyn Observer) {
-        self.arrivals_pending = self.core.requests.len();
+        // arrivals stream in lazily: the count of not-yet-enqueued
+        // requests starts at the source's total, not the arena size
+        self.arrivals_pending = self.core.total_expected;
         self.refresh_broadcast();
         self.core.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
     }

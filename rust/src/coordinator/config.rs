@@ -115,6 +115,16 @@ pub struct ClusterConfig {
     pub flip: Option<FlipConfig>,
     /// Elastic pool growth/shrink policy; `None` keeps the pool static.
     pub elastic: Option<ElasticConfig>,
+    /// Keep per-request `RequestRecord`s in the run metrics (exact
+    /// summaries, O(requests) memory). Scale runs turn this off and read
+    /// the constant-memory streaming histograms instead.
+    pub retain_records: bool,
+    /// Collapse decode/coupled iteration chains into one macro-stepped
+    /// event when no external event can land inside the window. Pure perf
+    /// knob: the virtual-time trajectory and every record are identical
+    /// either way (parity-tested in tests/golden.rs); off = one event per
+    /// iteration, the reference stepping.
+    pub macro_step: bool,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -142,6 +152,8 @@ impl Default for ClusterConfig {
             monitor_interval_us: 100_000,
             flip: Some(FlipConfig::default()),
             elastic: None,
+            retain_records: true,
+            macro_step: true,
             cost: CostModel::default(),
             seed: 0,
         }

@@ -18,6 +18,7 @@ use tetri_infer::api::{
     parse_workload, Driver as _, ElasticSpec, NullObserver, Observer, ProgressObserver, Registry,
     Scenario,
 };
+use tetri_infer::metrics::vs_row_from;
 #[cfg(feature = "pjrt")]
 use tetri_infer::runtime::Engine;
 #[cfg(feature = "pjrt")]
@@ -55,6 +56,12 @@ fn usage() -> ! {
     --name NAME           label echoed into reports
     --json PATH|-         write the run report (one JSON doc) to PATH
     --progress            print completion progress to stderr
+    --no-records          drop per-request records: constant-memory mode
+                          for scale runs (summaries stream through
+                          log-bucketed histograms, quantiles ±~3%)
+    --records             keep per-request records (overrides a spec that
+                          ships records:false, e.g. scenarios/scale.json)
+    --no-baseline         skip the vLLM comparison run (scale runs)
   serve options:
     --artifacts DIR       (default artifacts)
     --requests N          (default 8)
@@ -107,6 +114,9 @@ const SIM_FLAGS: &[(&str, bool)] = &[
     ("--name", true),
     ("--json", true),
     ("--progress", false),
+    ("--no-records", false),
+    ("--records", false),
+    ("--no-baseline", false),
 ];
 
 fn validate_sim_flags(args: &[String]) {
@@ -225,6 +235,12 @@ fn scenario_from_args(args: &[String]) -> Scenario {
     if let Some(v) = arg_val(args, "--trace-seed") {
         sc.trace_seed = num("--trace-seed", &v, "an integer seed");
     }
+    match (args.iter().any(|a| a == "--records"), args.iter().any(|a| a == "--no-records")) {
+        (true, true) => die("--records and --no-records are contradictory"),
+        (true, false) => sc.records = true,
+        (false, true) => sc.records = false,
+        (false, false) => {}
+    }
     sc
 }
 
@@ -243,7 +259,6 @@ fn cmd_sim(args: &[String]) {
 
     let registry = Registry::builtin();
     let driver = registry.resolve(&sc).unwrap_or_else(|e| die(&e));
-    let trace = sc.trace();
 
     let total = sc.total_requests();
     let mut progress;
@@ -254,30 +269,42 @@ fn cmd_sim(args: &[String]) {
     } else {
         &mut null
     };
-    let report = driver.run(&trace, obs);
-    println!("{}", report.summary_line());
+    // Arrivals stream straight from the scenario's source: a run never
+    // materializes its trace, so memory follows in-flight requests (the
+    // baseline comparison below regenerates the identical stream from the
+    // same trace seed).
+    let report = driver.run_source(sc.source().as_mut(), obs);
+    // Each side's summaries are computed once (a full collect + sort over
+    // the records when retained) and threaded through every row and the
+    // JSON document below.
+    let own = report.metrics.summaries();
+    println!("{}", report.summary_line_with(&own));
 
     // Paper's comparison setup (§5.1): TetriInfer's prefill+decode pair
     // uses twice the cards of one coupled vLLM instance; fairness is
     // restored through resource-usage time and perf/$. Hybrid runs get
-    // the same coupled-only reference row.
-    let base = if sc.driver == "tetri" || sc.driver == "hybrid" {
+    // the same coupled-only reference row. `--no-baseline` skips it
+    // (scale runs pay for one system, not two).
+    let want_base = (sc.driver == "tetri" || sc.driver == "hybrid")
+        && !args.iter().any(|a| a == "--no-baseline");
+    let base = if want_base {
         let base_sc = sc.baseline_counterpart();
         let base = registry
             .resolve(&base_sc)
             .unwrap_or_else(|e| die(&e))
-            .run(&trace, &mut NullObserver);
-        println!("{}", base.summary_line());
-        println!("{}", report.vs_row("TetriInfer vs vLLM", &base));
-        Some(base)
+            .run_source(base_sc.source().as_mut(), &mut NullObserver);
+        let base_s = base.metrics.summaries();
+        println!("{}", base.summary_line_with(&base_s));
+        println!("{}", vs_row_from("TetriInfer vs vLLM", &own, &base_s));
+        Some((base, base_s))
     } else {
         None
     };
 
     if let Some(path) = arg_val(args, "--json") {
         let doc = match &base {
-            Some(b) => report.comparison_json(b),
-            None => report.to_json(),
+            Some((b, base_s)) => report.comparison_json_with(&own, b, base_s),
+            None => report.to_json_with(&own),
         };
         let text = doc.dump();
         if path == "-" {

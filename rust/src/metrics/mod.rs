@@ -6,13 +6,36 @@
 //! normalized against a baseline run:
 //!     perf/$  ∝  (1 / mean JCT) / (resource_time · $rate)
 //! so `perf_per_dollar_vs(base)` reports the paper's "x-fold" improvements.
+//!
+//! Memory contract (million-request runs): every per-request quantity is
+//! *streamed* at finish time into exact counters (`finished`,
+//! `generated_tokens`) and log-bucketed histograms (`ttft_hist`,
+//! `jct_hist`), so the summaries work with `records` retention switched
+//! off. Retention stays on for golden/figure runs, where summaries are
+//! computed exactly from the records as before.
 
 use crate::types::{RequestRecord, Us, US_PER_SEC};
-use crate::util::{summarize, Summary};
+use crate::util::{summarize, LogHist, Summary};
 
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
+    /// Per-request records. Retention is opt-in per run (`retain_records`;
+    /// `Scenario`'s `records` knob): on for golden/figure runs (exact
+    /// summaries), off for scale runs (constant memory — summaries come
+    /// from the histograms below).
     pub records: Vec<RequestRecord>,
+    /// Whether [`RunMetrics::note_finish`] pushes into `records`. Drivers
+    /// set this from their config before the run starts.
+    pub retain_records: bool,
+    /// Requests finished — exact, counted whether or not records are kept.
+    pub finished: u64,
+    /// Σ decode_len over finished requests (throughput numerator).
+    pub generated_tokens: u64,
+    /// Streaming TTFT distribution in µs: exact count/sum/min/max,
+    /// ≤ ~3.2% relative quantile error (see `util::LogHist`).
+    pub ttft_hist: LogHist,
+    /// Streaming JCT distribution in µs (same shape as `ttft_hist`).
+    pub jct_hist: LogHist,
     /// Busy µs per instance (index = instance id).
     pub busy_us: Vec<Us>,
     /// µs each instance existed in the run (for utilization).
@@ -22,6 +45,14 @@ pub struct RunMetrics {
     /// DES events processed by the driver (sim-throughput denominator for
     /// the perf-trajectory benches — see EXPERIMENTS.md §Perf).
     pub events: u64,
+    /// Decode/coupled iterations absorbed into a macro-stepped event
+    /// instead of paying their own queue round-trip (diagnostic for the
+    /// collapsed event class; not part of the virtual-time trajectory).
+    pub macro_steps: u64,
+    /// High-water arena size = peak in-flight requests. The O(active)
+    /// memory proof for scale runs: with records off, total run memory is
+    /// proportional to this, not to the trace.
+    pub peak_arena: usize,
     /// Swap traffic observed (tokens), for Figure 18 diagnostics.
     pub swapped_tokens: u64,
     /// Number of instance flips that occurred (§3.5).
@@ -36,13 +67,65 @@ pub struct RunMetrics {
     pub decode_assign: Vec<(u32, u32)>,
 }
 
+/// TTFT/JCT/resource for one run, computed once and threaded through
+/// comparison rows (each summary is a full collect + sort over records —
+/// `vs_row` and perf/$ used to recompute them several times per row).
+#[derive(Clone, Debug)]
+pub struct RunSummaries {
+    pub ttft: Summary,
+    pub jct: Summary,
+    pub resource_s: f64,
+}
+
+/// perf/$ from precomputed summaries: ratio of (1/meanJCT)/resource.
+pub fn perf_per_dollar(own: &RunSummaries, base: &RunSummaries) -> f64 {
+    let a = 1.0 / (own.jct.mean * own.resource_s);
+    let b = 1.0 / (base.jct.mean * base.resource_s);
+    a / b
+}
+
 impl RunMetrics {
+    /// Stream one completed request into the metrics: exact counters +
+    /// histograms always; the full record only when retention is on.
+    pub fn note_finish(&mut self, rec: RequestRecord) {
+        self.finished += 1;
+        self.generated_tokens += rec.decode_len as u64;
+        self.ttft_hist.record(rec.ttft());
+        self.jct_hist.record(rec.jct());
+        if self.retain_records {
+            self.records.push(rec);
+        }
+    }
+
+    /// Requests finished: the streamed counter, or the record count for
+    /// hand-assembled metrics that never went through `note_finish`.
+    pub fn n_finished(&self) -> usize {
+        (self.finished as usize).max(self.records.len())
+    }
+
     pub fn ttft_summary(&self) -> Summary {
-        summarize(&self.records.iter().map(|r| r.ttft() as f64 / 1e3).collect::<Vec<_>>())
+        if self.records.is_empty() {
+            self.ttft_hist.summary_scaled(1e-3)
+        } else {
+            summarize(&self.records.iter().map(|r| r.ttft() as f64 / 1e3).collect::<Vec<_>>())
+        }
     }
 
     pub fn jct_summary(&self) -> Summary {
-        summarize(&self.records.iter().map(|r| r.jct() as f64 / 1e3).collect::<Vec<_>>())
+        if self.records.is_empty() {
+            self.jct_hist.summary_scaled(1e-3)
+        } else {
+            summarize(&self.records.iter().map(|r| r.jct() as f64 / 1e3).collect::<Vec<_>>())
+        }
+    }
+
+    /// Every comparison input computed once (see [`RunSummaries`]).
+    pub fn summaries(&self) -> RunSummaries {
+        RunSummaries {
+            ttft: self.ttft_summary(),
+            jct: self.jct_summary(),
+            resource_s: self.resource_seconds(),
+        }
     }
 
     /// Aggregate busy time across instances, in seconds (the paper's
@@ -53,16 +136,18 @@ impl RunMetrics {
 
     /// Generated tokens per second of makespan.
     pub fn decode_throughput(&self) -> f64 {
-        let toks: u64 = self.records.iter().map(|r| r.decode_len as u64).sum();
+        let toks: u64 = if self.records.is_empty() {
+            self.generated_tokens
+        } else {
+            self.records.iter().map(|r| r.decode_len as u64).sum()
+        };
         toks as f64 / (self.makespan_us.max(1) as f64 / US_PER_SEC as f64)
     }
 
     /// Performance-per-dollar of this run relative to `base` (>1 = better):
     /// ratio of (1/meanJCT)/resource.
     pub fn perf_per_dollar_vs(&self, base: &RunMetrics) -> f64 {
-        let own = 1.0 / (self.jct_summary().mean * self.resource_seconds());
-        let other = 1.0 / (base.jct_summary().mean * base.resource_seconds());
-        own / other
+        perf_per_dollar(&self.summaries(), &base.summaries())
     }
 
     /// Mean utilization across instances that existed.
@@ -77,19 +162,26 @@ impl RunMetrics {
     }
 
     /// Formatted single-line comparison against a baseline (used by the
-    /// figure harness to print the paper's headline rows).
+    /// figure harness to print the paper's headline rows). Each side's
+    /// summaries are computed exactly once for the whole row; callers
+    /// that already hold them use [`vs_row_from`] directly.
     pub fn vs_row(&self, name: &str, base: &RunMetrics) -> String {
-        let dt = 1.0 - self.ttft_summary().mean / base.ttft_summary().mean;
-        let dj = 1.0 - self.jct_summary().mean / base.jct_summary().mean;
-        let dr = 1.0 - self.resource_seconds() / base.resource_seconds();
-        format!(
-            "{name}: TTFT {:+.0}%  JCT {:+.0}%  resource {:+.0}%  perf/$ {:.2}x",
-            -dt * 100.0,
-            -dj * 100.0,
-            -dr * 100.0,
-            self.perf_per_dollar_vs(base)
-        )
+        vs_row_from(name, &self.summaries(), &base.summaries())
     }
+}
+
+/// The comparison row from precomputed summaries (see [`RunSummaries`]).
+pub fn vs_row_from(name: &str, own: &RunSummaries, base: &RunSummaries) -> String {
+    let dt = 1.0 - own.ttft.mean / base.ttft.mean;
+    let dj = 1.0 - own.jct.mean / base.jct.mean;
+    let dr = 1.0 - own.resource_s / base.resource_s;
+    format!(
+        "{name}: TTFT {:+.0}%  JCT {:+.0}%  resource {:+.0}%  perf/$ {:.2}x",
+        -dt * 100.0,
+        -dj * 100.0,
+        -dr * 100.0,
+        perf_per_dollar(own, base)
+    )
 }
 
 #[cfg(test)]
@@ -145,5 +237,39 @@ mod tests {
     fn throughput_counts_generated_tokens() {
         let m = run(100.0, 1.0); // 100 tokens over 1 s makespan
         assert!((m.decode_throughput() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn records_off_metrics_stream_through_histograms() {
+        let mut on = RunMetrics { retain_records: true, ..Default::default() };
+        let mut off = RunMetrics { retain_records: false, ..Default::default() };
+        let mut t = 0u64;
+        for i in 0..2_000u64 {
+            t += 350 + (i * 7919) % 9_000; // deterministic skewed arrivals
+            let r = rec(t, t + 40_000 + (i % 50) * 1_000, t + 300_000 + (i % 211) * 4_000, 32);
+            on.note_finish(r.clone());
+            off.note_finish(r);
+        }
+        assert_eq!(on.records.len(), 2_000);
+        assert!(off.records.is_empty(), "retention off keeps no records");
+        assert_eq!(off.n_finished(), 2_000);
+        assert_eq!(off.generated_tokens, 2_000 * 32);
+        // means are exact either way; quantiles within the bucket bound
+        let (eo, ao) = (on.jct_summary(), off.jct_summary());
+        assert!((eo.mean - ao.mean).abs() < 1e-6, "{} vs {}", eo.mean, ao.mean);
+        assert_eq!(eo.min, ao.min);
+        assert_eq!(eo.max, ao.max);
+        assert!((ao.p99 / eo.p99 - 1.0).abs() < 0.04, "{} vs {}", ao.p99, eo.p99);
+        let (et, at) = (on.ttft_summary(), off.ttft_summary());
+        assert!((et.mean - at.mean).abs() < 1e-6);
+        // comparison rows work without records
+        off.busy_us = vec![1_000_000];
+        let base = {
+            let mut b = off.clone();
+            b.busy_us = vec![2_000_000];
+            b
+        };
+        assert!(off.vs_row("off vs base", &base).contains("perf/$"));
+        assert!((off.perf_per_dollar_vs(&base) - 2.0).abs() < 1e-9);
     }
 }

@@ -2,12 +2,22 @@
 //!
 //! Before this existed, `coordinator/cluster.rs` and `baseline/mod.rs`
 //! each owned a private copy of the same machinery — the arena request
-//! store (trace renumbered into dense slots), the pop-dispatch event loop,
-//! the per-request finish bookkeeping, and the end-of-run metric
-//! finalization. [`EngineCore`] owns all of that once; a driver keeps a
-//! core as a field, implements [`EngineHost`] for its event handling and
-//! lifecycle hooks, and [`run_des`] drives the run. Drivers shrink to
-//! policy glue: routing, two-level scheduling, flip/scale decisions.
+//! store, the pop-dispatch event loop, the per-request finish bookkeeping,
+//! and the end-of-run metric finalization. [`EngineCore`] owns all of
+//! that once; a driver keeps a core as a field, implements [`EngineHost`]
+//! for its event handling and lifecycle hooks, and [`run_des_source`]
+//! drives the run. Drivers shrink to policy glue: routing, two-level
+//! scheduling, flip/scale decisions.
+//!
+//! Since the million-request refactor the engine is O(active), not
+//! O(trace): arrivals stream in one at a time from an [`ArrivalSource`]
+//! (exactly one is pending at any instant, held outside the queue), and
+//! finished arena slots recycle through a free list so the arena tracks
+//! peak *in-flight* requests. Delivery order is bit-identical to the old
+//! pre-scheduled heap: arrivals win ties against queued events (they used
+//! to carry the smallest seq numbers), equal-time arrivals keep source
+//! order, and re-delivered `Event::Arrival` retries ride the queue like
+//! any runtime event.
 //!
 //! The observer fan-out contract is unchanged: hooks fire at the instant
 //! an action is issued, and observers never influence the run.
@@ -20,6 +30,55 @@ use super::{Event, EventQueue};
 
 /// Sentinel for "first token not yet produced".
 pub const NO_TIME: Us = Us::MAX;
+
+/// A pull-based stream of requests in non-decreasing arrival order. The
+/// engine admits them into the arena lazily, so a million-request run
+/// holds one pending `Request`, not a million. Implementations:
+/// [`TraceSource`] (replay a materialized trace) and
+/// [`crate::workload::GenSource`] (sample straight from the generator).
+pub trait ArrivalSource {
+    /// The next request, or `None` once the source is exhausted. Arrival
+    /// times must be non-decreasing (trace-backed sources sort first).
+    fn next_request(&mut self) -> Option<Request>;
+
+    /// Total requests this source yields over its lifetime (the DES
+    /// termination condition and the progress denominator).
+    fn total(&self) -> usize;
+}
+
+/// Replay a materialized trace. Sorts by arrival time on construction —
+/// *stably*, so equal-time requests keep trace order: exactly the
+/// `(at, seq)` order the old pre-scheduled heap produced, for sorted and
+/// unsorted traces alike.
+pub struct TraceSource {
+    trace: Vec<Request>,
+    pos: usize,
+}
+
+impl TraceSource {
+    pub fn new(mut trace: Vec<Request>) -> Self {
+        trace.sort_by_key(|r| r.arrival);
+        TraceSource { trace, pos: 0 }
+    }
+
+    /// One memcpy of the Copy-POD trace (~50 B/request) so callers can
+    /// re-run the same borrowed trace; noise next to the DES run itself.
+    pub fn from_slice(trace: &[Request]) -> Self {
+        Self::new(trace.to_vec())
+    }
+}
+
+impl ArrivalSource for TraceSource {
+    fn next_request(&mut self) -> Option<Request> {
+        let r = self.trace.get(self.pos).copied()?;
+        self.pos += 1;
+        Some(r)
+    }
+
+    fn total(&self) -> usize {
+        self.trace.len()
+    }
+}
 
 /// Arena entry: one request plus the driver-side state that used to live
 /// in side HashMaps (first-token time) or nowhere at all (the prefilling
@@ -43,22 +102,38 @@ pub struct ReqState {
 /// driver shares. Drivers own one and layer policy state next to it.
 pub struct EngineCore {
     pub queue: EventQueue,
-    /// Request arena: everything the run has seen, indexed by arena slot
-    /// (events carry slots, not original request ids).
+    /// Request arena indexed by slot (events carry slots, not original
+    /// request ids). Finished slots recycle through the free list, so the
+    /// arena's length is the run's *peak in-flight* request count — the
+    /// O(active) memory property the scale runs depend on.
     pub requests: Vec<ReqState>,
+    /// Recycled arena slots awaiting reuse (LIFO, deterministic).
+    free_slots: Vec<ReqId>,
     /// Requests remaining (termination condition).
     pub outstanding: usize,
+    /// Total requests the arrival source delivers over the whole run
+    /// (what "trace length" used to mean to drivers).
+    pub total_expected: usize,
+    /// Arrival time of the next source request not yet admitted
+    /// ([`NO_TIME`] once exhausted) — one half of the macro-step bound.
+    next_arrival_at: Us,
     pub metrics: RunMetrics,
 }
 
 impl EngineCore {
     /// A core with per-instance metric vectors sized for `n_insts`.
+    /// Record retention defaults on; drivers override it from their
+    /// config before the run starts.
     pub fn new(n_insts: usize) -> Self {
         EngineCore {
             queue: EventQueue::new(),
             requests: Vec::new(),
+            free_slots: Vec::new(),
             outstanding: 0,
+            total_expected: 0,
+            next_arrival_at: NO_TIME,
             metrics: RunMetrics {
+                retain_records: true,
                 busy_us: vec![0; n_insts],
                 alive_us: vec![0; n_insts],
                 decode_assign: vec![(0, 0); n_insts],
@@ -71,19 +146,29 @@ impl EngineCore {
         self.queue.now()
     }
 
-    /// Renumber the trace into dense arena slots and schedule one arrival
-    /// event per request. All internal ids (events, KV tables, queues) are
-    /// slots from here on; the original request id resurfaces only in the
-    /// final `RequestRecord`.
-    pub fn load_trace(&mut self, trace: Vec<Request>) {
-        self.outstanding = trace.len();
-        self.requests = trace
-            .into_iter()
-            .map(|req| ReqState { req, first_token: NO_TIME, prefilled_by: None, seen: false })
-            .collect();
-        for slot in 0..self.requests.len() {
-            self.queue
-                .schedule_at(self.requests[slot].req.arrival, Event::Arrival(slot as ReqId));
+    /// Earliest external event that can reach any instance: the queue's
+    /// head or the next source arrival. Drivers macro-step decode chains
+    /// strictly *before* this instant (DESIGN.md §Performance has the
+    /// determinism argument).
+    pub fn next_external_at(&mut self) -> Us {
+        let q = self.queue.peek_at().unwrap_or(NO_TIME);
+        q.min(self.next_arrival_at)
+    }
+
+    /// Admit one request into the arena, recycling a finished slot when
+    /// one is free. Events carry the returned slot from here on; the
+    /// original request id resurfaces only in the final `RequestRecord`.
+    pub fn admit(&mut self, req: Request) -> ReqId {
+        let st = ReqState { req, first_token: NO_TIME, prefilled_by: None, seen: false };
+        match self.free_slots.pop() {
+            Some(slot) => {
+                self.requests[slot as usize] = st;
+                slot
+            }
+            None => {
+                self.requests.push(st);
+                (self.requests.len() - 1) as ReqId
+            }
         }
     }
 
@@ -110,7 +195,9 @@ impl EngineCore {
     }
 
     /// Record a completion: emit the `RequestRecord` (with the original
-    /// trace id) and shrink the termination counter.
+    /// trace id), recycle the arena slot, and shrink the termination
+    /// counter. The slot must carry no live references past this call —
+    /// the next admitted arrival may reuse it.
     pub fn finish(&mut self, slot: ReqId, now: Us, obs: &mut dyn Observer) {
         let st = &self.requests[slot as usize];
         let first = if st.first_token == NO_TIME { now } else { st.first_token };
@@ -125,7 +212,8 @@ impl EngineCore {
             predicted: st.req.predicted,
         };
         obs.on_finish(now, &rec);
-        self.metrics.records.push(rec);
+        self.metrics.note_finish(rec);
+        self.free_slots.push(slot);
         self.outstanding -= 1;
     }
 
@@ -150,11 +238,13 @@ impl EngineCore {
         }
     }
 
-    /// End-of-run: stamp makespan and hand the metrics out. Alive-time
-    /// accounting is the host's job (see [`EngineCore::stamp_alive_full_run`]);
-    /// `run_des` calls this after `EngineHost::end`.
+    /// End-of-run: stamp makespan and the peak arena size, hand the
+    /// metrics out. Alive-time accounting is the host's job (see
+    /// [`EngineCore::stamp_alive_full_run`]); `run_des_source` calls this
+    /// after `EngineHost::end`.
     pub fn finalize(&mut self) -> RunMetrics {
         self.metrics.makespan_us = self.queue.now();
+        self.metrics.peak_arena = self.requests.len();
         std::mem::take(&mut self.metrics)
     }
 }
@@ -168,8 +258,8 @@ pub trait EngineHost {
     /// Driver name used in the deadlock panic message.
     fn driver_name(&self) -> &'static str;
 
-    /// Called once after the trace is loaded, before the first event pops
-    /// (schedule periodic events, take the initial broadcast, ...).
+    /// Called once before the first event pops, after `total_expected`
+    /// is known (schedule periodic events, take the initial broadcast, ...).
     fn begin(&mut self, obs: &mut dyn Observer);
 
     /// Handle one event. The core has already counted it.
@@ -180,13 +270,84 @@ pub trait EngineHost {
     fn end(&mut self, obs: &mut dyn Observer);
 }
 
-/// The one event loop both drivers share: load the trace, pop events
-/// until every request finished, finalize metrics. Deterministic given
-/// the host's config and the trace; the observer never influences the
-/// run.
-pub fn run_des<H: EngineHost>(host: &mut H, trace: Vec<Request>, obs: &mut dyn Observer) -> RunMetrics {
+/// The one copy of the macro-stepping scaffold every iteration-complete
+/// handler runs (cluster decode, cluster coupled, baseline coupled): the
+/// invariants live here, the hosts only supply the three role-specific
+/// pieces.
+///
+///   * `close(host, now, obs)` — apply the just-ended iteration's
+///     effects (completions, first tokens) at virtual time `now`;
+///   * `start(host, now, obs)` — begin the next iteration at `now` and
+///     return its end time (busy accounting + observer hooks included),
+///     or `None` when the instance has nothing to do / left its role;
+///   * `schedule(host, end)` — enqueue the completion event at `end`.
+///
+/// The scaffold chains iterations inline while the next one ends
+/// *strictly before* every queued event and the pending arrival
+/// ([`EngineCore::next_external_at`]) — within that window nothing can
+/// pop, hence nothing can be scheduled to pop, so the chain is a function
+/// of instance-local state and is event-for-event identical to
+/// per-iteration stepping (`macro_on = false`, the reference). Strictness
+/// carries the tie-break: an equal-time external event holds a smaller
+/// seq and must run first, so the iteration is scheduled, not inlined.
+/// When the last request finishes mid-chain the clock is advanced to the
+/// inline instant so the makespan matches the reference exactly.
+pub fn macro_chain<H: EngineHost>(
+    host: &mut H,
+    macro_on: bool,
+    obs: &mut dyn Observer,
+    mut close: impl FnMut(&mut H, Us, &mut dyn Observer),
+    mut start: impl FnMut(&mut H, Us, &mut dyn Observer) -> Option<Us>,
+    mut schedule: impl FnMut(&mut H, Us),
+) {
+    let mut now = host.core_mut().now();
+    loop {
+        close(host, now, obs);
+        if host.core_mut().outstanding == 0 {
+            // the run ends at this inline instant: surface it to the
+            // clock so the makespan matches per-iteration stepping
+            host.core_mut().queue.advance_to(now);
+            return;
+        }
+        let Some(end) = start(host, now, obs) else { return };
+        if !macro_on || end >= host.core_mut().next_external_at() {
+            schedule(host, end);
+            return;
+        }
+        host.core_mut().metrics.macro_steps += 1;
+        now = end;
+    }
+}
+
+/// Compatibility wrapper: run a materialized trace (wraps it in a
+/// [`TraceSource`], which stable-sorts by arrival — the old pre-scheduled
+/// heap order).
+pub fn run_des<H: EngineHost>(
+    host: &mut H,
+    trace: Vec<Request>,
+    obs: &mut dyn Observer,
+) -> RunMetrics {
+    run_des_source(host, &mut TraceSource::new(trace), obs)
+}
+
+/// The one event loop every DES driver shares: pull arrivals from the
+/// source (admitting each into the arena the instant it is delivered),
+/// pop queue events, dispatch to the host until every request finished,
+/// then finalize metrics. Deterministic given the host's config and the
+/// source; the observer never influences the run.
+pub fn run_des_source<H: EngineHost>(
+    host: &mut H,
+    source: &mut dyn ArrivalSource,
+    obs: &mut dyn Observer,
+) -> RunMetrics {
     let name = host.driver_name();
-    host.core_mut().load_trace(trace);
+    let mut pending = source.next_request();
+    {
+        let core = host.core_mut();
+        core.total_expected = source.total();
+        core.outstanding = core.total_expected;
+        core.next_arrival_at = pending.map_or(NO_TIME, |r| r.arrival);
+    }
     host.begin(obs);
     loop {
         let ev = {
@@ -194,8 +355,27 @@ pub fn run_des<H: EngineHost>(host: &mut H, trace: Vec<Request>, obs: &mut dyn O
             if core.outstanding == 0 {
                 break;
             }
-            let Some((_, ev)) = core.queue.pop() else {
-                panic!("{name} deadlock: {} requests outstanding, no events", core.outstanding);
+            // Fresh arrivals win ties against queued events (they carried
+            // the smallest seq numbers under the pre-scheduled heap);
+            // equal-time arrivals keep source order because exactly one is
+            // pending at a time.
+            let take_arrival = match (&pending, core.queue.peek_at()) {
+                (Some(a), Some(t)) => a.arrival <= t,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => {
+                    panic!("{name} deadlock: {} requests outstanding, no events", core.outstanding)
+                }
+            };
+            let ev = if take_arrival {
+                let req = pending.take().expect("matched Some above");
+                core.queue.advance_to(req.arrival);
+                let slot = core.admit(req);
+                pending = source.next_request();
+                core.next_arrival_at = pending.map_or(NO_TIME, |r| r.arrival);
+                Event::Arrival(slot)
+            } else {
+                core.queue.pop().expect("peeked above").1
             };
             core.metrics.events += 1;
             ev
@@ -272,6 +452,42 @@ mod tests {
     }
 
     #[test]
+    fn unsorted_traces_replay_in_time_order() {
+        let mut host = Echo { core: EngineCore::new(1), began: false, ended: false };
+        let trace = vec![req(1, 9), req(2, 5), req(3, 9)];
+        let m = run_des(&mut host, trace, &mut NullObserver);
+        // stable sort by arrival: id 2 first, then 1 and 3 in trace order
+        let ids: Vec<ReqId> = m.records.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 1, 3]);
+        assert_eq!(m.makespan_us, 9);
+    }
+
+    #[test]
+    fn arena_slots_recycle_and_track_peak_in_flight() {
+        // Echo finishes each arrival before the next is admitted, so the
+        // arena never grows past one slot — however long the trace.
+        let mut host = Echo { core: EngineCore::new(1), began: false, ended: false };
+        let trace: Vec<Request> = (0..64).map(|i| req(1000 + i, i)).collect();
+        let m = run_des(&mut host, trace, &mut NullObserver);
+        assert_eq!(m.records.len(), 64);
+        assert_eq!(m.peak_arena, 1, "finished slots must be reused");
+        let ids: Vec<ReqId> = m.records.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (1000..1064).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn records_retention_is_opt_in() {
+        let mut host = Echo { core: EngineCore::new(1), began: false, ended: false };
+        host.core.metrics.retain_records = false;
+        let trace: Vec<Request> = (0..16).map(|i| req(i, i)).collect();
+        let m = run_des(&mut host, trace, &mut NullObserver);
+        assert!(m.records.is_empty(), "records off: nothing retained");
+        assert_eq!(m.n_finished(), 16, "the finish counter still counts");
+        assert_eq!(m.generated_tokens, 32, "2 decode tokens per request");
+        assert_eq!(m.jct_hist.count(), 16);
+    }
+
+    #[test]
     fn note_arrival_fires_once_per_request() {
         struct Count(u64);
         impl Observer for Count {
@@ -280,10 +496,10 @@ mod tests {
             }
         }
         let mut core = EngineCore::new(1);
-        core.load_trace(vec![req(1, 0)]);
+        let slot = core.admit(req(1, 0));
         let mut obs = Count(0);
-        core.note_arrival(0, &mut obs);
-        core.note_arrival(0, &mut obs);
+        core.note_arrival(slot, &mut obs);
+        core.note_arrival(slot, &mut obs);
         assert_eq!(obs.0, 1, "re-delivered arrivals must not re-fire the hook");
     }
 

@@ -6,10 +6,14 @@
 //! large simulated sweep (hundreds of policy × workload × seed cells), so
 //! sweep throughput directly bounds how many scenarios a PR can explore.
 //! Each cell is one declarative [`Scenario`](crate::api::Scenario): the
-//! trace is regenerated inside the worker from the cell's `trace_seed`,
-//! so cells are cheap to describe, ship no request vectors across
-//! threads, and are bit-identical to running sequentially — results come
-//! back in input order regardless of which worker finished first.
+//! arrival stream is regenerated inside the worker from the cell's
+//! `trace_seed` (single-phase cells stream it — `Scenario::source` —
+//! without ever materializing a trace, so even million-request scale
+//! cells like scenarios/scale.json fit the grid at O(in-flight) memory
+//! per worker), cells are cheap to describe, ship no request vectors
+//! across threads, and are bit-identical to running sequentially —
+//! results come back in input order regardless of which worker finished
+//! first.
 //!
 //! Used by `examples/figures.rs` (figure regeneration) and
 //! `benches/cluster.rs` (the BENCH_cluster.json perf baseline).

@@ -8,7 +8,7 @@ pub mod stats;
 
 pub use json::Json;
 pub use rng::Pcg;
-pub use stats::{percentile, summarize, Histogram, Summary};
+pub use stats::{percentile, summarize, Histogram, LogHist, Summary};
 
 /// Locate the repository root by walking up from the current directory
 /// until a `ROADMAP.md` is found (falling back to `.`). Lets the bench

@@ -47,6 +47,143 @@ pub fn summarize(xs: &[f64]) -> Summary {
     }
 }
 
+/// Sub-buckets per octave in [`LogHist`]: 2^5 = 32, bounding relative
+/// quantile error at 1/32 ≈ 3.2%.
+const LOG_SUB_BITS: u32 = 5;
+const LOG_SUB: usize = 1 << LOG_SUB_BITS;
+
+/// Constant-memory streaming summary over non-negative integer samples
+/// (the DES feeds it µs latencies): exact count / sum / min / max, plus a
+/// log-bucketed histogram for quantiles with ≤ ~3.2% relative error.
+/// Values below 32 land in exact unit buckets; above, each octave splits
+/// into 32 sub-buckets. The bin vector grows on demand and tops out at a
+/// couple of KB however many samples stream through — this is what lets a
+/// million-request run drop per-request records entirely.
+#[derive(Clone, Debug, Default)]
+pub struct LogHist {
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+    bins: Vec<u64>,
+}
+
+impl LogHist {
+    fn idx(v: u64) -> usize {
+        if v < LOG_SUB as u64 {
+            v as usize
+        } else {
+            let e = 63 - v.leading_zeros(); // v ∈ [2^e, 2^(e+1)), e ≥ 5
+            let sub = ((v >> (e - LOG_SUB_BITS)) as usize) & (LOG_SUB - 1);
+            LOG_SUB + ((e - LOG_SUB_BITS) as usize) * LOG_SUB + sub
+        }
+    }
+
+    /// Lower/upper bound of bucket `idx` (upper exclusive; saturating at
+    /// the very top of the u64 range, far beyond any latency).
+    fn bounds(idx: usize) -> (u64, u64) {
+        if idx < LOG_SUB {
+            (idx as u64, idx as u64 + 1)
+        } else {
+            let e = LOG_SUB_BITS + ((idx - LOG_SUB) / LOG_SUB) as u32;
+            let sub = ((idx - LOG_SUB) % LOG_SUB) as u64;
+            let width = 1u64 << (e - LOG_SUB_BITS);
+            let lo = (1u64 << e) + sub * width;
+            (lo, lo.saturating_add(width))
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v as u128;
+        let idx = Self::idx(v);
+        if self.bins.len() <= idx {
+            self.bins.resize(idx + 1, 0);
+        }
+        self.bins[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all recorded samples.
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Exact mean (sum and count are exact; only quantiles approximate).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket-midpoint value of the 0-based rank-`r` sample, clamped into
+    /// the exact [min, max] envelope.
+    fn value_at_rank(&self, r: u64) -> f64 {
+        let mut seen = 0u64;
+        for (i, &n) in self.bins.iter().enumerate() {
+            seen += n;
+            if n > 0 && seen > r {
+                let (lo, hi) = Self::bounds(i);
+                // overflow-safe midpoint of [lo, hi)
+                let mid = (lo + (hi - 1 - lo) / 2) as f64;
+                return mid.clamp(self.min as f64, self.max as f64);
+            }
+        }
+        self.max as f64
+    }
+
+    /// Approximate quantile with the same linear-interpolation convention
+    /// as [`percentile`] on sorted samples — interpolating between the
+    /// two straddled ranks' bucket midpoints — so records-off summaries
+    /// track the exact records path even at tiny sample counts (the
+    /// residual error is the ≤ ~3.2% bucket width, not a rank-rounding
+    /// jump between far-apart order statistics).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let pos = q.clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let lo_rank = pos.floor() as u64;
+        let lo = self.value_at_rank(lo_rank);
+        let frac = pos - lo_rank as f64;
+        if frac == 0.0 {
+            return lo;
+        }
+        lo + (self.value_at_rank(lo_rank + 1) - lo) * frac
+    }
+
+    /// A [`Summary`] with every field multiplied by `scale` (the metrics
+    /// layer records µs and reports ms → scale 1e-3). Mean/min/max/sum are
+    /// exact; p50/p90/p99 carry the ≤ ~3.2% bucket error.
+    pub fn summary_scaled(&self, scale: f64) -> Summary {
+        if self.count == 0 {
+            return Summary::default();
+        }
+        Summary {
+            n: self.count as usize,
+            mean: self.mean() * scale,
+            p50: self.quantile(0.5) * scale,
+            p90: self.quantile(0.9) * scale,
+            p99: self.quantile(0.99) * scale,
+            min: self.min as f64 * scale,
+            max: self.max as f64 * scale,
+            sum: self.sum as f64 * scale,
+        }
+    }
+}
+
 /// Fixed-width histogram over [lo, hi) with n bins (overflow in last bin).
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -99,6 +236,75 @@ mod tests {
     fn empty_is_nan_or_default() {
         assert_eq!(summarize(&[]).n, 0);
         assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn log_hist_exact_below_32_and_bounded_error_above() {
+        // exact unit buckets below 32
+        let mut h = LogHist::default();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        for v in 0..32u64 {
+            let i = LogHist::idx(v);
+            assert_eq!(LogHist::bounds(i), (v, v + 1));
+        }
+        // every value maps into a bucket containing it, width ≤ v/32
+        for v in [32u64, 33, 63, 64, 1_000, 65_535, 1_000_000, u64::MAX / 2] {
+            let (lo, hi) = LogHist::bounds(LogHist::idx(v));
+            assert!(lo <= v && v < hi, "{v} outside [{lo},{hi})");
+            assert!(hi - lo <= (v / 32).max(1), "{v}: bucket too wide ({lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn log_hist_summary_tracks_exact_summary() {
+        let mut h = LogHist::default();
+        let mut xs = Vec::new();
+        // deterministic skewed series, like a latency distribution
+        let mut v: u64 = 17;
+        for i in 0..10_000u64 {
+            v = v.wrapping_mul(6364136223846793005).wrapping_add(i) % 5_000_000;
+            h.record(v);
+            xs.push(v as f64);
+        }
+        let exact = summarize(&xs);
+        let approx = h.summary_scaled(1.0);
+        assert_eq!(approx.n, exact.n);
+        assert!((approx.mean - exact.mean).abs() < 1e-6, "mean is exact");
+        assert_eq!(approx.min, exact.min);
+        assert_eq!(approx.max, exact.max);
+        for (a, e) in [(approx.p50, exact.p50), (approx.p90, exact.p90), (approx.p99, exact.p99)] {
+            assert!((a / e - 1.0).abs() < 0.04, "quantile {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn log_hist_quantiles_interpolate_like_percentile() {
+        // two far-apart samples: nearest-rank would report ~1e6 for p50;
+        // interpolation must land near the exact percentile() value
+        let mut h = LogHist::default();
+        h.record(1_000);
+        h.record(1_000_000);
+        let exact = percentile(&[1_000.0, 1_000_000.0], 0.5);
+        let got = h.quantile(0.5);
+        assert!((got / exact - 1.0).abs() < 0.04, "{got} vs {exact}");
+        assert_eq!(h.quantile(0.0), 1_000.0);
+        assert_eq!(h.quantile(1.0), 1_000_000.0);
+    }
+
+    #[test]
+    fn log_hist_empty_and_single() {
+        let h = LogHist::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.summary_scaled(1.0).n, 0);
+        let mut h = LogHist::default();
+        h.record(12_345);
+        let s = h.summary_scaled(1e-3);
+        assert_eq!(s.n, 1);
+        assert!((s.mean - 12.345).abs() < 1e-9);
+        assert_eq!(s.min, s.max);
+        assert!((s.p50 - 12.345).abs() / 12.345 < 0.04);
     }
 
     #[test]

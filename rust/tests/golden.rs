@@ -23,7 +23,7 @@
 
 use std::fmt::Write as _;
 
-use tetri_infer::api::{Registry, Scenario};
+use tetri_infer::api::{Driver as _, NullObserver, Registry, Scenario};
 use tetri_infer::baseline::{run_baseline, BaselineConfig};
 use tetri_infer::coordinator::{run_cluster, ClusterConfig};
 use tetri_infer::metrics::RunMetrics;
@@ -166,6 +166,100 @@ fn shipped_scenario_specs_round_trip_and_resolve() {
         n += 1;
     }
     assert!(n >= 5, "expected the shipped scenario set, found {n} specs");
+}
+
+/// Assert two runs produced identical per-request trajectories: same
+/// fingerprint and the same `RequestRecord`s, event for event.
+fn assert_records_identical(name: &str, a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(fingerprint(a), fingerprint(b), "{name}: fingerprints diverged");
+    assert_eq!(a.records.len(), b.records.len(), "{name}: record counts diverged");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(
+            (ra.id, ra.arrival, ra.first_token, ra.finished),
+            (rb.id, rb.arrival, rb.first_token, rb.finished),
+            "{name}: record trajectory diverged"
+        );
+    }
+}
+
+/// Every shipped spec, clamped to a fast size (decode chains still form).
+fn clamped_specs() -> Vec<Scenario> {
+    let dir = repo_root().join("scenarios");
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("cannot list {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    entries.sort();
+    entries
+        .into_iter()
+        .map(|p| {
+            let mut sc = Scenario::load(p.to_str().unwrap()).unwrap_or_else(|e| panic!("{e}"));
+            sc.clamp_requests(48);
+            // parity runs compare records: retention must be on even for
+            // scale specs that ship with it off
+            sc.records = true;
+            sc
+        })
+        .collect()
+}
+
+/// The macro-stepping tentpole invariant: collapsing decode/coupled
+/// iteration chains into macro events is a pure perf refactor — for every
+/// shipped scenario spec, per-iteration stepping (`macro_step: false`)
+/// and macro stepping produce event-for-event identical `RequestRecord`s
+/// and fingerprints, while macro stepping actually collapses events.
+#[test]
+fn macro_stepping_matches_per_iteration_stepping_on_shipped_specs() {
+    let mut any_collapsed = false;
+    for sc in clamped_specs() {
+        let trace = sc.trace();
+        let (on, off) = if sc.driver == "vllm" {
+            let cfg = sc.baseline_config();
+            let on = run_baseline(cfg.clone(), trace.clone());
+            let off = run_baseline(BaselineConfig { macro_step: false, ..cfg }, trace);
+            (on, off)
+        } else {
+            let mut cfg = sc.cluster_config();
+            if sc.driver == "hybrid" && cfg.n_coupled == 0 {
+                cfg.n_coupled = 1;
+            }
+            let on = run_cluster(cfg.clone(), trace.clone());
+            let off = run_cluster(ClusterConfig { macro_step: false, ..cfg }, trace);
+            (on, off)
+        };
+        assert_records_identical(&sc.name, &on, &off);
+        assert_eq!(off.macro_steps, 0, "{}: reference stepping must not macro-step", sc.name);
+        assert!(on.events <= off.events, "{}: macro stepping may never add events", sc.name);
+        any_collapsed |= on.macro_steps > 0;
+    }
+    assert!(any_collapsed, "at least one spec must actually exercise macro-stepping");
+}
+
+/// The streaming-arrival tentpole invariant: pulling arrivals lazily from
+/// the scenario's source (one pending request, recycled arena slots) is a
+/// pure perf refactor — identical trajectory to preloading the whole
+/// materialized trace, for every shipped spec.
+#[test]
+fn streamed_arrivals_match_preloaded_trace_on_shipped_specs() {
+    let registry = Registry::builtin();
+    for sc in clamped_specs() {
+        let driver = registry.resolve(&sc).unwrap_or_else(|e| panic!("{e}"));
+        let streamed = driver.run_source(sc.source().as_mut(), &mut NullObserver);
+        let trace = sc.trace();
+        let preloaded = driver.run(&trace, &mut NullObserver);
+        assert_records_identical(&sc.name, &streamed.metrics, &preloaded.metrics);
+        assert_eq!(
+            streamed.metrics.events, preloaded.metrics.events,
+            "{}: event counts diverged",
+            sc.name
+        );
+        assert!(
+            streamed.metrics.peak_arena <= trace.len(),
+            "{}: arena may never exceed the trace",
+            sc.name
+        );
+    }
 }
 
 /// A spec-file-loaded run and the equivalent builder-constructed run must

@@ -1,0 +1,130 @@
+//! Queue-parity property test: the calendar (timing-wheel) event queue
+//! must pop in exactly the order the reference `BinaryHeap` queue pops —
+//! global `(at, seq)` with FIFO among equal times — under randomized
+//! interleavings of scheduling (near, far/overflow, clamped-past,
+//! equal-time bursts), popping, and `advance_to` window jumps. This is
+//! the determinism backstop for the million-request engine: the calendar
+//! queue is a pure perf substitution, never a semantic one.
+
+use tetri_infer::sim::{CalendarQueue, Event, HeapQueue};
+use tetri_infer::util::Pcg;
+
+/// One randomized episode: drive both queues with the identical op
+/// sequence, asserting lock-step equality after every op, then drain.
+fn episode(seed: u64, ops: usize) {
+    let mut cal = CalendarQueue::new();
+    let mut heap = HeapQueue::new();
+    let mut rng = Pcg::new(seed);
+    let mut next_id = 0u64;
+    for op in 0..ops {
+        match rng.weighted(&[0.5, 0.38, 0.12]) {
+            0 => {
+                // schedule a small burst across wildly different horizons
+                let burst = 1 + rng.index(3);
+                for _ in 0..burst {
+                    let horizon = match rng.index(12) {
+                        0 | 1 => 0,                             // tie with now
+                        2..=5 => rng.range(1, 4_096),           // same bucket
+                        6 | 7 => rng.range(1, 40_000),          // a few buckets out
+                        8 => rng.range(1, 5_000_000),           // window edge
+                        9 => rng.range(1, 300_000_000),         // deep overflow
+                        10 => rng.range(1, 7_000_000_000),      // very deep overflow
+                        _ => 0,
+                    };
+                    let mut at = cal.now() + horizon;
+                    if rng.index(10) == 0 {
+                        // exercise the past-time clamp
+                        at = at.saturating_sub(rng.range(1, 100_000));
+                    }
+                    let ev = Event::Arrival(next_id);
+                    next_id += 1;
+                    cal.schedule_at(at, ev.clone());
+                    heap.schedule_at(at, ev);
+                }
+            }
+            1 => {
+                let (a, b) = (cal.pop(), heap.pop());
+                assert_eq!(a, b, "seed {seed} op {op}: divergent pop");
+            }
+            _ => {
+                // jump the clock toward (never past) the next event — the
+                // engine does this when delivering arrivals off-queue
+                let bound = heap.peek_at();
+                let step = rng.range(0, 10_000_000);
+                let t = match bound {
+                    Some(p) => cal.now() + step.min(p - cal.now()),
+                    None => cal.now() + step,
+                };
+                cal.advance_to(t);
+                heap.advance_to(t);
+            }
+        }
+        assert_eq!(cal.now(), heap.now(), "seed {seed} op {op}: clocks diverged");
+        assert_eq!(cal.len(), heap.len(), "seed {seed} op {op}: lengths diverged");
+        assert_eq!(cal.is_empty(), heap.is_empty());
+    }
+    // drain to empty: the tail must agree event for event too
+    loop {
+        let (a, b) = (cal.pop(), heap.pop());
+        assert_eq!(a, b, "seed {seed} drain: divergent pop");
+        assert_eq!(cal.now(), heap.now());
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn calendar_queue_matches_heap_queue_under_random_schedules() {
+    for seed in 0..32 {
+        episode(seed, 3_000);
+    }
+}
+
+#[test]
+fn calendar_queue_survives_long_quiet_gaps() {
+    // sparse far-apart events: every pop crosses many empty buckets
+    // and/or overflow jumps
+    let mut cal = CalendarQueue::new();
+    let mut heap = HeapQueue::new();
+    let mut rng = Pcg::new(99);
+    let mut at = 0u64;
+    for i in 0..500u64 {
+        at += rng.range(1, 120_000_000); // up to 2 virtual minutes apart
+        cal.schedule_at(at, Event::Arrival(i));
+        heap.schedule_at(at, Event::Arrival(i));
+    }
+    loop {
+        let (a, b) = (cal.pop(), heap.pop());
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn equal_time_storms_stay_fifo() {
+    // thousands of events at identical instants: the calendar bucket
+    // heaps must preserve global seq order exactly
+    let mut cal = CalendarQueue::new();
+    let mut heap = HeapQueue::new();
+    for round in 0..4u64 {
+        let t = round * 1_000;
+        for i in 0..2_000u64 {
+            let id = round * 10_000 + i;
+            cal.schedule_at(t, Event::Arrival(id));
+            heap.schedule_at(t, Event::Arrival(id));
+        }
+    }
+    let mut popped = 0;
+    loop {
+        let (a, b) = (cal.pop(), heap.pop());
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+        popped += 1;
+    }
+    assert_eq!(popped, 8_000);
+}

@@ -2,12 +2,18 @@
 # Regenerate the machine-readable perf baselines at the repo root:
 #   BENCH_sched.json   — L3 microbenches (benches/scheduler.rs)
 #   BENCH_cluster.json — end-to-end DES throughput (benches/cluster.rs)
+#                        plus the "engine" section (benches/engine.rs):
+#                        old-vs-new queue events/sec and the 1M-request
+#                        scale run's events/sec + peak arena size
 # Run after any hot-path change and commit the refreshed files; future
-# PRs regress against them (EXPERIMENTS.md §Perf).
+# PRs regress against them (EXPERIMENTS.md §Perf). The engine bench runs
+# last: it merges into the BENCH_cluster.json the cluster bench wrote.
+# (Set ENGINE_BENCH_REQUESTS to shrink the 1M scale run while iterating.)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 cargo bench --bench scheduler
 cargo bench --bench cluster
+cargo bench --bench engine
 cd ..
 echo "perf baselines:"
 ls -l BENCH_sched.json BENCH_cluster.json

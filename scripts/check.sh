@@ -35,4 +35,19 @@ for spec in ../scenarios/*.json; do
   cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --requests 8 >/dev/null
 done
 
+# Perf-regression canary: a timed 100k-request release-mode run through
+# the streaming/macro-stepped hot path (records off, no baseline run).
+# The budget is deliberately loose — it exists to catch order-of-magnitude
+# regressions (an accidental O(n) queue op, records kept at scale), not
+# to benchmark; scripts/bench.sh records the real numbers.
+canary_start=$(date +%s)
+cargo run --release --quiet --bin tetri -- sim --spec ../scenarios/scale.json \
+  --requests 100000 --no-records --no-baseline >/dev/null
+canary_elapsed=$(( $(date +%s) - canary_start ))
+echo "perf canary: 100k-request scale run in ${canary_elapsed}s"
+if [ "${canary_elapsed}" -gt 120 ]; then
+  echo "perf canary FAILED: 100k-request run took ${canary_elapsed}s (budget 120s)" >&2
+  exit 1
+fi
+
 echo "tier-1 verify: OK"

@@ -39,6 +39,7 @@ fn req(id: u64, plen: u32, dlen: u32) -> Request {
     Request {
         id,
         task: tetri_infer::types::TaskType::Chat,
+        class: 0,
         arrival: 0,
         prompt_len: plen,
         decode_len: dlen,

@@ -43,10 +43,13 @@ pub use observer::{
 };
 pub use report::{metrics_json, Report};
 pub use scenario::{
-    decode_policy_key, dispatch_key, granularity_key, parse_decode_policy, parse_dispatch,
-    parse_granularity, parse_link, parse_predictor, parse_prefill_policy, parse_workload,
-    predictor_key, prefill_policy_key, ElasticSpec, LinkSpec, Phase, Scenario, ScenarioBuilder,
+    class_keys, decode_policy_key, dispatch_key, elastic_keys, granularity_key,
+    parse_decode_policy, parse_dispatch, parse_granularity, parse_link, parse_predictor,
+    parse_prefill_policy, parse_workload, phase_keys, predictor_key, prefill_policy_key,
+    spec_keys, value_vocab, ElasticSpec, LinkSpec, Phase, Scenario, ScenarioBuilder,
 };
+
+pub use crate::slo::{parse_class_flag, ClassSpec};
 
 #[cfg(test)]
 mod tests {

@@ -47,6 +47,17 @@ pub trait Observer {
     /// A request finished; `rec` carries the original id and timestamps.
     fn on_finish(&mut self, _now: Us, _rec: &RequestRecord) {}
 
+    /// The admission gate shed `req` at the entry router (over-rate or
+    /// over-depth for its workload class). Sheds are first-class request
+    /// outcomes: counted per class in the run metrics, surfaced here, and
+    /// never re-delivered. Classless runs (admission off) never fire this.
+    fn on_shed(&mut self, _now: Us, _req: &Request) {}
+
+    /// A request finished *outside* its class SLO: `ttft` / `tpot` flag
+    /// which deadline(s) it blew. Fires at most once per request, right
+    /// after `on_finish`. Runs without declared deadlines never fire this.
+    fn on_violation(&mut self, _now: Us, _rec: &RequestRecord, _ttft: bool, _tpot: bool) {}
+
     /// The cluster monitor broadcast fresh decode loads (one sample per
     /// decode instance, paper period ~100 ms). The baseline never fires
     /// this (it has no monitor).
@@ -121,6 +132,10 @@ pub struct TimelineObserver {
     pub scale_ups: u64,
     /// Elastic pool shrink events (instances drained and retired).
     pub scale_downs: u64,
+    /// Requests the admission gate shed (SLO multi-tenancy runs).
+    pub sheds: u64,
+    /// Requests that finished outside their class SLO.
+    pub violations: u64,
 }
 
 impl TimelineObserver {
@@ -199,6 +214,8 @@ impl TimelineObserver {
             ("flips", Json::from(self.flips)),
             ("scale_ups", Json::from(self.scale_ups)),
             ("scale_downs", Json::from(self.scale_downs)),
+            ("sheds", Json::from(self.sheds)),
+            ("violations", Json::from(self.violations)),
             ("spans", Json::from(spans)),
             ("queue", Json::from(queue)),
         ])
@@ -261,6 +278,14 @@ impl Observer for TimelineObserver {
         self.finished.push((now, rec.id));
     }
 
+    fn on_shed(&mut self, _now: Us, _req: &Request) {
+        self.sheds += 1;
+    }
+
+    fn on_violation(&mut self, _now: Us, _rec: &RequestRecord, _ttft: bool, _tpot: bool) {
+        self.violations += 1;
+    }
+
     fn on_monitor(&mut self, now: Us, loads: &[DecodeLoad]) {
         for l in loads {
             self.queue.push(QueueSample {
@@ -318,6 +343,7 @@ mod tests {
         RequestRecord {
             id,
             task: TaskType::Chat,
+            class: 0,
             prompt_len: 10,
             decode_len: 5,
             arrival: 0,
@@ -336,6 +362,18 @@ mod tests {
         t.on_transfer(150, 1, 7, 512, 40);
         t.on_flip(400, 0, Role::Decode, 6_000);
         t.on_finish(500, &rec(7));
+        let shed_req = Request {
+            id: 8,
+            task: TaskType::Chat,
+            class: 2,
+            arrival: 510,
+            prompt_len: 4,
+            decode_len: 4,
+            predicted: None,
+        };
+        t.on_shed(510, &shed_req);
+        t.on_violation(520, &rec(9), true, false);
+        assert_eq!((t.sheds, t.violations), (1, 1));
         assert_eq!(t.chunks, 2);
         assert_eq!(t.pad_tokens, 12);
         assert_eq!(t.busy_us(0), 150, "flip spans are not busy compute");

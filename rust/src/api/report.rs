@@ -2,7 +2,7 @@
 //! with the single JSON serializer used by `main.rs`,
 //! `examples/figures.rs`, the sweep harness, and both benches.
 
-use crate::metrics::{perf_per_dollar, RunMetrics, RunSummaries};
+use crate::metrics::{goodput_per_dollar, perf_per_dollar, RunMetrics, RunSummaries};
 use crate::util::{Json, Summary};
 
 use super::Scenario;
@@ -41,7 +41,7 @@ pub fn metrics_json(m: &RunMetrics) -> Json {
 }
 
 fn metrics_json_with(m: &RunMetrics, s: &RunSummaries) -> Json {
-    Json::obj([
+    let mut pairs: Vec<(&str, Json)> = vec![
         ("requests", Json::from(m.n_finished())),
         ("ttft_ms", summary_json(&s.ttft)),
         ("jct_ms", summary_json(&s.jct)),
@@ -56,7 +56,37 @@ fn metrics_json_with(m: &RunMetrics, s: &RunSummaries) -> Json {
         ("flips", Json::from(u64::from(m.flips))),
         ("scale_ups", Json::from(u64::from(m.scale_ups))),
         ("scale_downs", Json::from(u64::from(m.scale_downs))),
-    ])
+        ("shed", Json::from(m.shed)),
+        ("attained", Json::from(m.attained)),
+        ("goodput_rps", Json::from(s.goodput_rps)),
+    ];
+    // per-class SLO section, only for runs that declared a class table
+    // (classless reports stay exactly as compact as before, plus the
+    // three scalar fields above)
+    if !m.classes.is_empty() {
+        let classes: Vec<Json> = m
+            .per_class
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let tier = m.classes.get(i).map(|d| u64::from(d.tier)).unwrap_or(0);
+                Json::obj([
+                    ("name", Json::from(m.class_name(i as u8))),
+                    ("tier", Json::from(tier)),
+                    ("finished", Json::from(c.finished)),
+                    ("shed", Json::from(c.shed)),
+                    ("ttft_attainment", Json::from(c.ttft_attainment())),
+                    ("tpot_attainment", Json::from(c.tpot_attainment())),
+                    ("slo_attainment", Json::from(c.attainment())),
+                    ("ttft_ms", summary_json(&c.ttft_hist.summary_scaled(1e-3))),
+                    ("jct_ms", summary_json(&c.jct_hist.summary_scaled(1e-3))),
+                    ("tpot_ms", summary_json(&c.tpot_hist.summary_scaled(1e-3))),
+                ])
+            })
+            .collect();
+        pairs.push(("classes", Json::from(classes)));
+    }
+    Json::obj(pairs)
 }
 
 impl Report {
@@ -136,6 +166,7 @@ impl Report {
                     ("jct_rel", rel(own.jct.mean, other.jct.mean)),
                     ("resource_rel", rel(own.resource_s, other.resource_s)),
                     ("perf_per_dollar", Json::from(perf_per_dollar(own, other))),
+                    ("goodput_per_dollar", Json::from(goodput_per_dollar(own, other))),
                 ]),
             ),
         ])
@@ -155,6 +186,7 @@ mod tests {
                 records: vec![RequestRecord {
                     id: 0,
                     task: TaskType::Chat,
+                    class: 0,
                     prompt_len: 10,
                     decode_len: 100,
                     arrival: 0,

@@ -21,6 +21,7 @@ use crate::costmodel::CostModel;
 use crate::decode::DecodePolicy;
 use crate::fabric::Link;
 use crate::prefill::{DispatchPolicy, PrefillPolicy};
+use crate::slo::{ClassSpec, SloConfig, MAX_CLASSES};
 use crate::types::{Request, Us};
 use crate::util::Json;
 use crate::workload::{WorkloadGen, WorkloadKind};
@@ -80,6 +81,7 @@ pub fn prefill_policy_key(p: PrefillPolicy) -> &'static str {
         PrefillPolicy::Fcfs => "fcfs",
         PrefillPolicy::Sjf => "sjf",
         PrefillPolicy::Ljf => "ljf",
+        PrefillPolicy::Slo => "slo",
     }
 }
 
@@ -88,7 +90,8 @@ pub fn parse_prefill_policy(s: &str) -> Result<PrefillPolicy, String> {
         "fcfs" => Ok(PrefillPolicy::Fcfs),
         "sjf" => Ok(PrefillPolicy::Sjf),
         "ljf" => Ok(PrefillPolicy::Ljf),
-        _ => Err(format!("unknown prefill policy '{s}' (expected fcfs|sjf|ljf)")),
+        "slo" => Ok(PrefillPolicy::Slo),
+        _ => Err(format!("unknown prefill policy '{s}' (expected fcfs|sjf|ljf|slo)")),
     }
 }
 
@@ -283,6 +286,14 @@ pub struct Scenario {
     /// Multi-phase trace; when non-empty it replaces
     /// `workload`/`requests`/`rate` for trace generation.
     pub phases: Vec<Phase>,
+    /// Workload-class table (SLO multi-tenancy): arrival shares, priority
+    /// tiers, TTFT/TPOT deadlines, admission limits. Empty (the default)
+    /// = classless legacy run — every request is the implicit class 0,
+    /// no deadlines, and the trace is bit-identical to pre-SLO builds.
+    pub classes: Vec<ClassSpec>,
+    /// Run the deterministic entry admission gate (token buckets +
+    /// queue-depth sheds per class). Off by default.
+    pub admission: bool,
 }
 
 impl Default for Scenario {
@@ -317,6 +328,8 @@ impl Default for Scenario {
             records: true,
             elastic: None,
             phases: Vec::new(),
+            classes: Vec::new(),
+            admission: false,
         }
     }
 }
@@ -351,12 +364,96 @@ const KNOWN_KEYS: &[&str] = &[
     "records",
     "elastic",
     "phases",
+    "classes",
+    "admission",
 ];
 
 const PHASE_KEYS: &[&str] = &["workload", "requests", "rate", "start_ms"];
 
 const ELASTIC_KEYS: &[&str] =
     &["max_instances", "prefill_up_tokens", "decode_up_jobs", "down_idle_ms", "min_per_role"];
+
+const CLASS_KEYS: &[&str] =
+    &["name", "weight", "tier", "ttft_ms", "tpot_ms", "rate_limit", "burst", "max_queue"];
+
+/// Every key the JSON spec format accepts — single source of truth shared
+/// with the CLI's `--list` output.
+pub fn spec_keys() -> &'static [&'static str] {
+    KNOWN_KEYS
+}
+
+/// Keys of one entry in the spec's `phases` array.
+pub fn phase_keys() -> &'static [&'static str] {
+    PHASE_KEYS
+}
+
+/// Keys of the spec's `elastic` object.
+pub fn elastic_keys() -> &'static [&'static str] {
+    ELASTIC_KEYS
+}
+
+/// Keys of one entry in the spec's `classes` array (same spellings as the
+/// `--class` CLI flag).
+pub fn class_keys() -> &'static [&'static str] {
+    CLASS_KEYS
+}
+
+/// Every recognized value spelling per enum-valued spec key, generated
+/// by running the variants through the same `*_key` maps the parsers
+/// invert — so the CLI's `--list` output cannot drift in *spelling*
+/// from what the parsers accept (each vocab entry is round-trip-tested
+/// through its parser below; a new variant extends the exhaustive key
+/// match, whose arms are what these arrays feed from).
+pub fn value_vocab() -> Vec<(&'static str, Vec<&'static str>)> {
+    use crate::fabric::Granularity;
+    vec![
+        ("workload", WorkloadKind::ALL.iter().map(|w| w.name()).collect()),
+        (
+            "link",
+            vec![LinkSpec::Nvlink.key(), LinkSpec::Roce.key(), LinkSpec::Socket.key()],
+        ),
+        (
+            "prefill_policy",
+            [PrefillPolicy::Fcfs, PrefillPolicy::Sjf, PrefillPolicy::Ljf, PrefillPolicy::Slo]
+                .iter()
+                .map(|p| prefill_policy_key(*p))
+                .collect(),
+        ),
+        (
+            "decode_policy",
+            [DecodePolicy::Greedy, DecodePolicy::ReserveStatic, DecodePolicy::ReserveDynamic]
+                .iter()
+                .map(|p| decode_policy_key(*p))
+                .collect(),
+        ),
+        (
+            "dispatch",
+            [
+                DispatchPolicy::PowerOfTwo,
+                DispatchPolicy::Random,
+                DispatchPolicy::Imbalance,
+                DispatchPolicy::LeastLoad,
+            ]
+            .iter()
+            .map(|p| dispatch_key(*p))
+            .collect(),
+        ),
+        (
+            "predictor",
+            [PredictorMode::Parallel, PredictorMode::Sequential, PredictorMode::Disabled]
+                .iter()
+                .map(|m| predictor_key(*m))
+                .collect(),
+        ),
+        (
+            "transfer",
+            [Granularity::RequestLevel, Granularity::ChunkLevel]
+                .iter()
+                .map(|g| granularity_key(*g))
+                .collect(),
+        ),
+    ]
+}
 
 fn want_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
     j.as_str().ok_or_else(|| format!("spec key '{key}' must be a string"))
@@ -403,6 +500,7 @@ impl Scenario {
     /// `WorkloadGen::new(seed).trace(..)` call sites).
     pub fn trace(&self) -> Vec<Request> {
         let mut gen = WorkloadGen::new(self.trace_seed);
+        gen.set_classes(self.class_weights());
         if self.phases.is_empty() {
             return gen.trace(self.workload, self.requests, self.rate, 0);
         }
@@ -426,15 +524,33 @@ impl Scenario {
     /// time, so they cannot stream without buffering anyway.
     pub fn source(&self) -> Box<dyn crate::sim::ArrivalSource> {
         if self.phases.is_empty() {
-            Box::new(crate::workload::GenSource::new(
-                self.trace_seed,
-                self.workload,
-                self.requests,
-                self.rate,
-                0,
-            ))
+            Box::new(
+                crate::workload::GenSource::new(
+                    self.trace_seed,
+                    self.workload,
+                    self.requests,
+                    self.rate,
+                    0,
+                )
+                .with_classes(self.class_weights()),
+            )
         } else {
             Box::new(crate::sim::TraceSource::new(self.trace()))
+        }
+    }
+
+    /// Per-class arrival weights for the workload generator (empty for
+    /// classless scenarios — no extra RNG stream is consumed).
+    pub fn class_weights(&self) -> Vec<f64> {
+        self.classes.iter().map(|c| c.weight).collect()
+    }
+
+    /// Resolve the workload-class table + admission knob to the runtime
+    /// [`SloConfig`] both driver configs carry (ms → µs).
+    pub fn slo_config(&self) -> SloConfig {
+        SloConfig {
+            classes: self.classes.iter().map(ClassSpec::to_def).collect(),
+            admission: self.admission,
         }
     }
 
@@ -487,6 +603,7 @@ impl Scenario {
             }),
             elastic: self.elastic.map(ElasticSpec::to_config),
             retain_records: self.records,
+            slo: self.slo_config(),
             cost,
             seed: self.seed,
             ..Default::default()
@@ -510,6 +627,7 @@ impl Scenario {
             prefill_batch: self.prefill_batch,
             max_batch: self.prefill_batch as u32,
             retain_records: self.records,
+            slo: self.slo_config(),
             cost,
             seed: self.seed,
             ..Default::default()
@@ -579,6 +697,7 @@ impl Scenario {
                 self.hbm_kv_bytes.map(Json::from).unwrap_or(Json::Null),
             ),
             ("records", Json::from(self.records)),
+            ("admission", Json::from(self.admission)),
         ];
         if let Some(el) = self.elastic {
             pairs.push((
@@ -591,6 +710,36 @@ impl Scenario {
                     ("min_per_role", Json::from(el.min_per_role)),
                 ]),
             ));
+        }
+        if !self.classes.is_empty() {
+            let classes: Vec<Json> = self
+                .classes
+                .iter()
+                .map(|c| {
+                    let mut pairs: Vec<(&str, Json)> = vec![
+                        ("name", Json::from(c.name.clone())),
+                        ("weight", Json::from(c.weight)),
+                        ("tier", Json::from(u64::from(c.tier))),
+                    ];
+                    if let Some(v) = c.ttft_ms {
+                        pairs.push(("ttft_ms", Json::from(v)));
+                    }
+                    if let Some(v) = c.tpot_ms {
+                        pairs.push(("tpot_ms", Json::from(v)));
+                    }
+                    if let Some(v) = c.rate_limit {
+                        pairs.push(("rate_limit", Json::from(v)));
+                    }
+                    if let Some(v) = c.burst {
+                        pairs.push(("burst", Json::from(v)));
+                    }
+                    if let Some(v) = c.max_queue {
+                        pairs.push(("max_queue", Json::from(v)));
+                    }
+                    Json::obj(pairs)
+                })
+                .collect();
+            pairs.push(("classes", Json::from(classes)));
         }
         if !self.phases.is_empty() {
             let phases: Vec<Json> = self
@@ -699,6 +848,64 @@ impl Scenario {
                         }
                     }
                 }
+                "admission" => sc.admission = want_bool(v, key)?,
+                "classes" => {
+                    let arr = v.as_arr().ok_or("spec key 'classes' must be an array")?;
+                    if arr.len() > MAX_CLASSES {
+                        return Err(format!(
+                            "spec declares {} classes; class ids are u8, max {MAX_CLASSES}",
+                            arr.len()
+                        ));
+                    }
+                    for cj in arr {
+                        let cobj = cj.as_obj().ok_or("each class must be a JSON object")?;
+                        for ck in cobj.keys() {
+                            if !CLASS_KEYS.contains(&ck.as_str()) {
+                                return Err(format!(
+                                    "unknown class key '{ck}' (known: {})",
+                                    CLASS_KEYS.join(", ")
+                                ));
+                            }
+                        }
+                        let mut cl = ClassSpec {
+                            name: want_str(
+                                cj.get("name").ok_or("class missing 'name'")?,
+                                "name",
+                            )?
+                            .to_string(),
+                            ..Default::default()
+                        };
+                        if let Some(x) = cj.get("weight") {
+                            cl.weight = want_num(x, "weight")?;
+                        }
+                        if let Some(x) = cj.get("tier") {
+                            let t = want_num(x, "tier")?;
+                            if !(0.0..=255.0).contains(&t) || t.fract() != 0.0 {
+                                return Err(format!(
+                                    "class '{}': tier must be an integer in [0,255]",
+                                    cl.name
+                                ));
+                            }
+                            cl.tier = t as u8;
+                        }
+                        if let Some(x) = cj.get("ttft_ms") {
+                            cl.ttft_ms = Some(want_num(x, "ttft_ms")?);
+                        }
+                        if let Some(x) = cj.get("tpot_ms") {
+                            cl.tpot_ms = Some(want_num(x, "tpot_ms")?);
+                        }
+                        if let Some(x) = cj.get("rate_limit") {
+                            cl.rate_limit = Some(want_num(x, "rate_limit")?);
+                        }
+                        if let Some(x) = cj.get("burst") {
+                            cl.burst = Some(want_num(x, "burst")?);
+                        }
+                        if let Some(x) = cj.get("max_queue") {
+                            cl.max_queue = Some(want_num(x, "max_queue")? as u64);
+                        }
+                        sc.classes.push(cl);
+                    }
+                }
                 "phases" => {
                     let arr = v.as_arr().ok_or("spec key 'phases' must be an array")?;
                     for pj in arr {
@@ -776,7 +983,7 @@ impl Scenario {
             "scenario{}: driver={} {} prefill={} decode={} coupled={} link={} prefill_policy={} \
              decode_policy={} dispatch={} predictor={} acc={} chunk={} sched_batch={} \
              max_batch={} flip_idle_ms={} elastic={} transfer={} srtf={} prefill_batch={} \
-             hbm_kv_bytes={} records={} seed={} trace_seed={}",
+             hbm_kv_bytes={} records={} classes={} admission={} seed={} trace_seed={}",
             if self.name.is_empty() { String::new() } else { format!(" '{}'", self.name) },
             self.driver,
             phases,
@@ -810,6 +1017,13 @@ impl Scenario {
             self.prefill_batch,
             self.hbm_kv_bytes.map(|b| b.to_string()).unwrap_or_else(|| "default".into()),
             self.records,
+            if self.classes.is_empty() {
+                "off".to_string()
+            } else {
+                let names: Vec<&str> = self.classes.iter().map(|c| c.name.as_str()).collect();
+                format!("[{}]", names.join(","))
+            },
+            self.admission,
             self.seed,
             self.trace_seed,
         )
@@ -962,7 +1176,35 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Replace the whole workload-class table.
+    pub fn classes(mut self, v: Vec<ClassSpec>) -> Self {
+        self.sc.classes = v;
+        self
+    }
+
+    /// Append one workload class (class id = declaration order).
+    pub fn class(mut self, c: ClassSpec) -> Self {
+        self.sc.classes.push(c);
+        self
+    }
+
+    /// Toggle the deterministic entry admission gate.
+    pub fn admission(mut self, v: bool) -> Self {
+        self.sc.admission = v;
+        self
+    }
+
+    /// Finish the scenario. Panics when more than
+    /// [`MAX_CLASSES`](crate::slo::MAX_CLASSES) classes were declared —
+    /// class ids travel as `u8`, and a silent wraparound would merge the
+    /// overflow classes into class 0 (the JSON path rejects this with an
+    /// error; builder misuse is a programming bug, so it asserts).
     pub fn build(self) -> Scenario {
+        assert!(
+            self.sc.classes.len() <= MAX_CLASSES,
+            "scenario declares {} classes; class ids are u8, max {MAX_CLASSES}",
+            self.sc.classes.len()
+        );
         self.sc
     }
 }
@@ -1011,6 +1253,123 @@ mod tests {
             .build();
         let s = sc.to_json().dump();
         assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+    }
+
+    #[test]
+    fn classed_scenario_round_trips_and_resolves() {
+        let sc = Scenario::builder()
+            .name("slo")
+            .prefill_policy(PrefillPolicy::Slo)
+            .admission(true)
+            .class(ClassSpec {
+                name: "chat".into(),
+                weight: 0.5,
+                tier: 0,
+                ttft_ms: Some(300.0),
+                tpot_ms: Some(100.0),
+                ..Default::default()
+            })
+            .class(ClassSpec {
+                name: "batch".into(),
+                weight: 0.5,
+                tier: 2,
+                rate_limit: Some(4.0),
+                burst: Some(8.0),
+                max_queue: Some(64),
+                ..Default::default()
+            })
+            .build();
+        let s = sc.to_json().dump();
+        assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+        // the resolved SLO config carries µs deadlines + gate limits
+        let slo = sc.slo_config();
+        assert!(slo.admission && slo.is_active());
+        assert_eq!(slo.classes.len(), 2);
+        assert_eq!(slo.classes[0].ttft_deadline_us, Some(300_000));
+        assert_eq!(slo.classes[1].rate_limit, Some(4.0));
+        assert_eq!(slo.prefill_table(), vec![(0, 300_000), (2, crate::types::Us::MAX)]);
+        // both driver configs receive the identical config
+        assert_eq!(sc.cluster_config().slo, slo);
+        assert_eq!(sc.baseline_config().slo, slo);
+        assert_eq!(sc.class_weights(), vec![0.5, 0.5]);
+        // the trace carries class stamps from the declared shares
+        let trace = Scenario { requests: 200, ..sc.clone() }.trace();
+        assert!(trace.iter().any(|r| r.class == 0) && trace.iter().any(|r| r.class == 1));
+        // the startup line names the classes
+        let line = sc.summary_line();
+        assert!(line.contains("classes=[chat,batch]") && line.contains("admission=true"), "{line}");
+    }
+
+    #[test]
+    fn value_vocab_round_trips_through_the_parsers() {
+        let vocab = value_vocab();
+        assert_eq!(vocab.len(), 7, "one vocab entry per enum-valued spec key");
+        for (key, vals) in vocab {
+            assert!(!vals.is_empty(), "{key}: empty vocabulary");
+            for v in vals {
+                let ok = match key {
+                    "workload" => parse_workload(v).is_ok(),
+                    "link" => parse_link(v).is_ok(),
+                    "prefill_policy" => parse_prefill_policy(v).is_ok(),
+                    "decode_policy" => parse_decode_policy(v).is_ok(),
+                    "dispatch" => parse_dispatch(v).is_ok(),
+                    "predictor" => parse_predictor(v).is_ok(),
+                    "transfer" => parse_granularity(v).is_ok(),
+                    other => panic!("vocab names unknown spec key '{other}'"),
+                };
+                assert!(ok, "{key}: advertised value '{v}' must parse");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "class ids are u8")]
+    fn builder_rejects_more_classes_than_u8_can_address() {
+        let mut b = Scenario::builder();
+        for i in 0..=crate::slo::MAX_CLASSES {
+            b = b.class(ClassSpec { name: format!("c{i}"), ..Default::default() });
+        }
+        b.build();
+    }
+
+    #[test]
+    fn class_spec_parsing_rejects_bad_shapes() {
+        assert!(Scenario::from_str(r#"{"classes": [{"weight": 1}]}"#).is_err(), "name required");
+        assert!(Scenario::from_str(r#"{"classes": [{"name": "a", "teir": 1}]}"#).is_err());
+        assert!(Scenario::from_str(r#"{"classes": [{"name": "a", "tier": 300}]}"#).is_err());
+        assert!(Scenario::from_str(r#"{"classes": [{"name": "a", "tier": 1.5}]}"#).is_err());
+        assert!(Scenario::from_str(r#"{"classes": {"name": "a"}}"#).is_err(), "must be an array");
+        assert!(Scenario::from_str(r#"{"admission": 1}"#).is_err(), "admission is a bool");
+        // a well-formed minimal class takes every default
+        let sc = Scenario::from_str(r#"{"classes": [{"name": "a"}]}"#).unwrap();
+        assert_eq!(sc.classes[0].weight, 1.0);
+        assert_eq!(sc.classes[0].tier, 0);
+        assert!(sc.classes[0].ttft_ms.is_none() && !sc.admission);
+    }
+
+    #[test]
+    fn classless_default_is_slo_inert() {
+        let sc = Scenario::default();
+        assert!(sc.classes.is_empty() && !sc.admission);
+        let slo = sc.slo_config();
+        assert!(!slo.is_active(), "classless scenarios must not activate SLO machinery");
+        assert!(sc.class_weights().is_empty());
+        // streamed source parity holds for classed scenarios too
+        use crate::sim::ArrivalSource as _;
+        let classed = Scenario::builder()
+            .requests(64)
+            .rate(16.0)
+            .seed(5)
+            .class(ClassSpec { name: "a".into(), weight: 0.7, ..Default::default() })
+            .class(ClassSpec { name: "b".into(), weight: 0.3, tier: 1, ..Default::default() })
+            .build();
+        let want = classed.trace();
+        let mut src = classed.source();
+        for w in &want {
+            let g = src.next_request().unwrap();
+            assert_eq!((g.id, g.arrival, g.class), (w.id, w.arrival, w.class));
+        }
+        assert!(src.next_request().is_none());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::api::{NullObserver, Observer};
 use crate::costmodel::CostModel;
 use crate::instance::CoupledInst;
 use crate::metrics::RunMetrics;
+use crate::slo::{AdmissionGate, SloConfig};
 use crate::sim::{
     macro_chain, run_des, run_des_source, ArrivalSource, EngineCore, EngineHost, Event,
 };
@@ -46,6 +47,11 @@ pub struct BaselineConfig {
     /// Macro-step coupled iteration chains (see
     /// `ClusterConfig::macro_step` — pure perf knob, parity-tested).
     pub macro_step: bool,
+    /// SLO multi-tenancy (see `ClusterConfig::slo` — the identical gate
+    /// logic runs here; rate-limit sheds match the cluster's on a shared
+    /// trace, queue-depth sheds track this system's own congestion —
+    /// see `slo::AdmissionGate`).
+    pub slo: SloConfig,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -58,6 +64,7 @@ impl Default for BaselineConfig {
             max_batch: 16,
             retain_records: true,
             macro_step: true,
+            slo: SloConfig::default(),
             cost: CostModel::default(),
             seed: 0,
         }
@@ -71,6 +78,9 @@ pub struct BaselineCluster {
     insts: Vec<CoupledInst>,
     /// Arrivals not yet delivered (partial prefill batches wait on these).
     arrivals_pending: usize,
+    /// SLO admission gate (`None` = admission off) — the same
+    /// deterministic logic the cluster entry router runs.
+    gate: Option<AdmissionGate>,
 }
 
 impl BaselineCluster {
@@ -80,11 +90,14 @@ impl BaselineCluster {
         let n = cfg.n_instances;
         let mut core = EngineCore::new(n);
         core.metrics.retain_records = cfg.retain_records;
+        core.metrics.set_classes(cfg.slo.classes.clone());
+        let gate = AdmissionGate::from_config(&cfg.slo);
         BaselineCluster {
             cfg,
             core,
             insts,
             arrivals_pending: 0,
+            gate,
         }
     }
 
@@ -108,6 +121,17 @@ impl BaselineCluster {
 
     fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
         self.core.note_arrival(slot, obs);
+        // One admission decision per request (the baseline never
+        // re-delivers arrivals, but the contract matches the cluster's).
+        if let Some(gate) = self.gate.as_mut() {
+            let req = self.core.requests[slot as usize].req;
+            let in_flight = (self.core.in_flight() - 1) as u64;
+            if !gate.admits(req.class, self.core.now(), in_flight) {
+                self.core.shed(slot, obs);
+                self.note_delivered(obs);
+                return;
+            }
+        }
         // Least-loaded coupled instance (waiting prompts + resident jobs)
         // — O(n_instances) over maintained counters.
         let i = (0..self.insts.len())
@@ -115,14 +139,23 @@ impl BaselineCluster {
             .unwrap();
         let plen = self.core.requests[slot as usize].req.prompt_len;
         self.insts[i].enqueue(slot, plen);
+        if !self.note_delivered(obs) {
+            self.try_start(i, obs);
+        }
+    }
+
+    /// One arrival left the global queue (routed or shed). When it was
+    /// the last one, partial prefill batches may run everywhere; returns
+    /// whether that kick happened.
+    fn note_delivered(&mut self, obs: &mut dyn Observer) -> bool {
         self.arrivals_pending -= 1;
         if self.arrivals_pending == 0 {
-            // last arrival: partial batches may now run everywhere
             for j in 0..self.insts.len() {
                 self.try_start(j, obs);
             }
+            true
         } else {
-            self.try_start(i, obs);
+            false
         }
     }
 

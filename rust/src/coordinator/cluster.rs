@@ -36,7 +36,8 @@ use crate::instance::{
 };
 use crate::metrics::RunMetrics;
 use crate::predictor::{OraclePredictor, Predictor};
-use crate::prefill::{choose, predicted_footprint, DecodeLoad};
+use crate::prefill::{choose_ranked, predicted_footprint, DecodeLoad};
+use crate::slo::AdmissionGate;
 use crate::sim::{
     macro_chain, run_des, run_des_source, ArrivalSource, EngineCore, EngineHost, Event,
 };
@@ -85,6 +86,10 @@ pub struct Cluster {
     /// drains, retirements) — folded into `swapped_tokens` at run end so
     /// they don't die with the role.
     swapped_graveyard: u64,
+    /// SLO admission gate at the entry router (`None` = admission off —
+    /// the classless hot path never consults it). One deterministic
+    /// decision per request, at its first arrival delivery.
+    gate: Option<AdmissionGate>,
 }
 
 impl Cluster {
@@ -111,6 +116,11 @@ impl Cluster {
         let rng = Pcg::with_stream(cfg.seed, 0x1234_5678_9abc_def1);
         let mut core = EngineCore::new(n);
         core.metrics.retain_records = cfg.retain_records;
+        // the metrics need the class table at finish time (attainment);
+        // this also pre-sizes the per-class ledger so zero-traffic
+        // tenants still report
+        core.metrics.set_classes(cfg.slo.classes.clone());
+        let gate = AdmissionGate::from_config(&cfg.slo);
         Cluster {
             cfg,
             core,
@@ -126,6 +136,7 @@ impl Cluster {
             pending_dispatch: Vec::new(),
             arrivals_pending: 0,
             swapped_graveyard: 0,
+            gate,
         }
     }
 
@@ -237,7 +248,27 @@ impl Cluster {
     // ----------------------------------------------------------- arrival
 
     fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        // One admission decision per request, at its *first* delivery —
+        // mid-flip retries re-enqueue `Event::Arrival` and must not
+        // re-charge the token bucket.
+        let first_delivery = !self.core.requests[slot as usize].seen;
         self.core.note_arrival(slot, obs);
+        if first_delivery {
+            if let Some(gate) = self.gate.as_mut() {
+                let req = self.core.requests[slot as usize].req;
+                // in-flight excluding the arrival under decision: the
+                // engine admitted it into the arena before dispatching
+                let in_flight = (self.core.in_flight() - 1) as u64;
+                if !gate.admits(req.class, self.core.now(), in_flight) {
+                    self.core.shed(slot, obs);
+                    // the request leaves the global queue without ever
+                    // reaching a local scheduler: unblock coupled
+                    // partial batches exactly like a routed arrival
+                    self.note_enqueued(obs);
+                    return;
+                }
+            }
+        }
         // The coupled scan only exists in hybrid mode — a pure
         // disaggregated pool can never gain coupled instances mid-run,
         // so the arrival hot path stays on the O(1) prefill cache.
@@ -417,13 +448,29 @@ impl Cluster {
                 queue_len: l.queue_len + h + lt,
             }
         }));
-        let target = choose(
+        // SLO classes with a TPOT deadline rank the power-of-two pair by
+        // predicted iteration time on the cost model (resident KV from
+        // the broadcast + this request's predicted footprint): hotspot
+        // avoidance becomes violation avoidance. Classless requests (and
+        // classes without a TPOT target) take the paper's pure
+        // least-interference pick — same RNG draws either way.
+        let cost = self.cfg.cost;
+        let cap = cost.kv_capacity_tokens();
+        let footprint =
+            predicted_footprint(req.prompt_len, req.predicted, self.cfg.granularity);
+        let tpot_est = move |l: &DecodeLoad| -> Us {
+            let resident = cap.saturating_sub(l.free_kv_tokens);
+            cost.decode_iter_us(l.n_heavy + l.n_light + 1, resident + footprint)
+        };
+        let slo_ranked = self.cfg.slo.tpot_deadline_us(req.class).is_some();
+        let target = choose_ranked(
             &self.loads_scratch,
             req.prompt_len,
             req.predicted,
             self.cfg.granularity,
             self.cfg.dispatch,
             &mut self.rng,
+            if slo_ranked { Some(&tpot_est) } else { None },
         );
         let Some(d) = target else { return false };
         let heavy = req
@@ -917,7 +964,12 @@ impl EngineHost for Cluster {
 }
 
 fn new_prefill_inst(cfg: &ClusterConfig, now: Us) -> PrefillInst {
-    PrefillInst::new(cfg.prefill_policy, cfg.sched_batch, cfg.chunk_size, cfg.srtf_chunking, now)
+    let mut p =
+        PrefillInst::new(cfg.prefill_policy, cfg.sched_batch, cfg.chunk_size, cfg.srtf_chunking, now);
+    // the SLO policy sorts by (tier, deadline) from the class table;
+    // other policies ignore it (tiny vec, set unconditionally)
+    p.sched.set_class_table(cfg.slo.prefill_table());
+    p
 }
 
 fn new_decode_inst(cfg: &ClusterConfig) -> DecodeInst {
@@ -1075,6 +1127,83 @@ mod tests {
         assert_eq!(m.busy_us.len(), 3);
         assert!(m.busy_us[0] > 0, "disaggregated prefill must serve");
         assert!(m.busy_us[2] > 0, "coupled instance must serve");
+    }
+
+    #[test]
+    fn admission_gate_sheds_rate_limited_class_and_conserves() {
+        use crate::slo::{ClassSpec, SloConfig};
+        // Two classes, everything stamped class 1 via weights (class 0
+        // weight 0): class 1 is hard rate-limited, so a 64-request batch
+        // burst at t=0 admits exactly `burst` and sheds the rest.
+        let mut gen = WorkloadGen::new(31);
+        gen.set_classes(vec![0.0, 1.0]);
+        let trace = gen.trace(WorkloadKind::Lpld, 64, 0.0, 0);
+        assert!(trace.iter().all(|r| r.class == 1));
+        let slo = SloConfig {
+            classes: vec![
+                ClassSpec::default().to_def(),
+                ClassSpec {
+                    name: "batch".into(),
+                    tier: 2,
+                    rate_limit: Some(1.0),
+                    burst: Some(5.0),
+                    ..Default::default()
+                }
+                .to_def(),
+            ],
+            admission: true,
+        };
+        let m = run_cluster(ClusterConfig { slo, ..small_cfg() }, trace);
+        // batch arrival at t=0: exactly the burst is admitted
+        assert_eq!(m.shed, 59, "64 arrivals minus burst 5 must shed");
+        assert_eq!(m.records.len(), 5);
+        assert_eq!(m.per_class[1].shed, 59);
+        assert_eq!(m.per_class[1].finished, 5);
+        assert_eq!(m.finished + m.shed, 64, "sheds + finishes conserve arrivals");
+    }
+
+    #[test]
+    fn slo_policy_prioritizes_tier0_ttft_under_backlog() {
+        use crate::slo::{ClassSpec, SloConfig};
+        // A standing backlog where half the requests are tier 0 with a
+        // TTFT deadline and half are tier 2 without: SLO-EDF must give
+        // tier 0 a lower mean TTFT than tier 2 on the same trace.
+        let mk_trace = || {
+            let mut gen = WorkloadGen::new(37);
+            gen.set_classes(vec![0.5, 0.5]);
+            gen.trace(WorkloadKind::Mixed, 96, 0.0, 0)
+        };
+        let slo = SloConfig {
+            classes: vec![
+                ClassSpec { name: "chat".into(), ttft_ms: Some(500.0), ..Default::default() }
+                    .to_def(),
+                ClassSpec { name: "batch".into(), tier: 2, ..Default::default() }.to_def(),
+            ],
+            admission: false,
+        };
+        let cfg = ClusterConfig {
+            prefill_policy: crate::prefill::PrefillPolicy::Slo,
+            sched_batch: 96,
+            slo,
+            ..small_cfg()
+        };
+        let m = run_cluster(cfg, mk_trace());
+        assert_eq!(m.records.len(), 96);
+        let mean = |class: u8| {
+            let xs: Vec<f64> = m
+                .records
+                .iter()
+                .filter(|r| r.class == class)
+                .map(|r| r.ttft() as f64)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            mean(0) < mean(1),
+            "tier 0 must prefill ahead of tier 2: {} vs {}",
+            mean(0),
+            mean(1)
+        );
     }
 
     #[test]

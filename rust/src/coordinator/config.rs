@@ -4,6 +4,7 @@ use crate::costmodel::CostModel;
 use crate::decode::DecodePolicy;
 use crate::fabric::Link;
 use crate::prefill::{DispatchPolicy, PrefillPolicy};
+use crate::slo::SloConfig;
 use crate::types::Us;
 
 /// How the length predictor shares the prefill accelerator (§3.3.2).
@@ -125,6 +126,10 @@ pub struct ClusterConfig {
     /// either way (parity-tested in tests/golden.rs); off = one event per
     /// iteration, the reference stepping.
     pub macro_step: bool,
+    /// SLO multi-tenancy: workload-class table + admission gate (see
+    /// `slo::SloConfig`). The default — no classes, admission off — is
+    /// the classless legacy behavior, bit-identical to pre-SLO builds.
+    pub slo: SloConfig,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -154,6 +159,7 @@ impl Default for ClusterConfig {
             elastic: None,
             retain_records: true,
             macro_step: true,
+            slo: SloConfig::default(),
             cost: CostModel::default(),
             seed: 0,
         }

@@ -479,6 +479,7 @@ mod tests {
         Request {
             id,
             task: TaskType::Chat,
+            class: 0,
             arrival: 0,
             prompt_len: plen,
             decode_len: dlen,

@@ -211,6 +211,7 @@ mod tests {
                 req: Request {
                     id: i as u64,
                     task: TaskType::Chat,
+                    class: 0,
                     arrival: 0,
                     prompt_len: plen,
                     decode_len: dlen,

@@ -140,7 +140,7 @@ mod tests {
     use crate::types::{ReqMeta, TaskType};
 
     fn meta(id: u64, plen: u32) -> ReqMeta {
-        ReqMeta { id, task: TaskType::Chat, arrival: 0, prompt_len: plen, predicted: None }
+        ReqMeta { id, task: TaskType::Chat, class: 0, arrival: 0, prompt_len: plen, predicted: None }
     }
 
     fn inst() -> PrefillInst {

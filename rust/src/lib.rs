@@ -31,6 +31,7 @@ pub mod runtime;
 #[cfg(feature = "pjrt")]
 pub mod serve;
 pub mod sim;
+pub mod slo;
 pub mod sweep;
 pub mod types;
 pub mod util;
@@ -41,5 +42,6 @@ pub use api::{
     TimelineObserver,
 };
 pub use baseline::{run_baseline, BaselineConfig};
+pub use slo::{AdmissionGate, ClassDef, ClassSpec, SloConfig, TokenBucket};
 pub use coordinator::{run_cluster, Cluster, ClusterConfig};
 pub use instance::{InstancePool, InstanceRole, InstanceState};

@@ -14,9 +14,9 @@
 //! panic.)
 
 use tetri_infer::api::{
-    parse_decode_policy, parse_dispatch, parse_link, parse_predictor, parse_prefill_policy,
-    parse_workload, Driver as _, ElasticSpec, NullObserver, Observer, ProgressObserver, Registry,
-    Scenario,
+    class_keys, elastic_keys, parse_class_flag, parse_decode_policy, parse_dispatch, parse_link,
+    parse_predictor, parse_prefill_policy, parse_workload, phase_keys, spec_keys, value_vocab,
+    Driver as _, ElasticSpec, NullObserver, Observer, ProgressObserver, Registry, Scenario,
 };
 use tetri_infer::metrics::vs_row_from;
 #[cfg(feature = "pjrt")]
@@ -42,7 +42,8 @@ fn usage() -> ! {
     --elastic-max N       elastic pool cap: autoscale instances up to N
                           (0 = static pool; thresholds take defaults)
     --link nvlink|roce|socket (roce)
-    --prefill-policy fcfs|sjf|ljf   (sjf)
+    --prefill-policy fcfs|sjf|ljf|slo   (sjf; slo = tier + earliest
+                          TTFT deadline first, needs --class / spec classes)
     --decode-policy greedy|rs|rd    (rd)
     --dispatch po2|random|imbalance|least  (po2)
     --predictor parallel|sequential|disabled  (parallel)
@@ -62,6 +63,15 @@ fn usage() -> ! {
     --records             keep per-request records (overrides a spec that
                           ships records:false, e.g. scenarios/scale.json)
     --no-baseline         skip the vLLM comparison run (scale runs)
+    --class SPEC          add one workload class (repeatable; replaces the
+                          spec's class table when given). SPEC is
+                          key=value pairs, e.g.
+                          name=chat,weight=0.5,tier=0,ttft_ms=300,tpot_ms=100
+                          (also: rate_limit=R, burst=B, max_queue=N)
+    --admission on|off    toggle the per-class entry admission gate
+                          (token-bucket + queue-depth sheds)
+    --list                print registered drivers, scenario spec files,
+                          and recognized spec keys/values, then exit
   serve options:
     --artifacts DIR       (default artifacts)
     --requests N          (default 8)
@@ -117,7 +127,27 @@ const SIM_FLAGS: &[(&str, bool)] = &[
     ("--no-records", false),
     ("--records", false),
     ("--no-baseline", false),
+    ("--class", true),
+    ("--admission", true),
+    ("--list", false),
 ];
+
+/// Collect every value of a repeatable flag, in order.
+fn arg_vals(args: &[String], key: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == key {
+            if let Some(v) = args.get(i + 1) {
+                out.push(v.clone());
+            }
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
 
 fn validate_sim_flags(args: &[String]) {
     let mut i = 0;
@@ -241,11 +271,68 @@ fn scenario_from_args(args: &[String]) -> Scenario {
         (false, true) => sc.records = false,
         (false, false) => {}
     }
+    // --class is repeatable: given at all, the flags replace the spec's
+    // class table wholesale (mixing the two would be ambiguous).
+    let class_flags = arg_vals(args, "--class");
+    if !class_flags.is_empty() {
+        if class_flags.len() > tetri_infer::slo::MAX_CLASSES {
+            die(&format!(
+                "{} --class flags given; class ids are u8, max {}",
+                class_flags.len(),
+                tetri_infer::slo::MAX_CLASSES
+            ));
+        }
+        sc.classes =
+            class_flags.iter().map(|s| parse_class_flag(s).unwrap_or_else(|e| die(&e))).collect();
+    }
+    if let Some(v) = arg_val(args, "--admission") {
+        sc.admission = match v.as_str() {
+            "on" => true,
+            "off" => false,
+            _ => die(&format!("--admission expects on|off, got '{v}'")),
+        };
+    }
     sc
+}
+
+/// `--list`: the registered drivers, every scenario spec file found, and
+/// the recognized spec keys/value spellings. Keys come straight from the
+/// spec's key consts and the value spellings from `api::value_vocab()`
+/// (generated through the same `*_key` maps the parsers invert and
+/// round-trip-tested against them), so the listing cannot drift in
+/// spelling from what the parsers accept.
+fn cmd_list() {
+    println!("drivers: {}", Registry::builtin().driver_names().join(", "));
+    let dir = tetri_infer::util::repo_root().join("scenarios");
+    let mut specs: Vec<String> = std::fs::read_dir(&dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().is_some_and(|x| x == "json"))
+                .filter_map(|p| p.file_name().and_then(|n| n.to_str()).map(String::from))
+                .collect()
+        })
+        .unwrap_or_default();
+    specs.sort();
+    println!("scenario specs in {} ({}):", dir.display(), specs.len());
+    for s in &specs {
+        println!("  {s}");
+    }
+    println!("spec keys: {}", spec_keys().join(", "));
+    println!("  phases[] keys: {}", phase_keys().join(", "));
+    println!("  elastic keys: {}", elastic_keys().join(", "));
+    println!("  classes[] keys: {}", class_keys().join(", "));
+    for (key, vals) in value_vocab() {
+        println!("{key} values: {}", vals.join(", "));
+    }
 }
 
 fn cmd_sim(args: &[String]) {
     validate_sim_flags(args);
+    if args.iter().any(|a| a == "--list") {
+        cmd_list();
+        return;
+    }
     let mut sc = scenario_from_args(args);
     // The hybrid driver guarantees ≥ 1 coupled instance; normalize before
     // printing so the startup line describes the run that actually
@@ -279,6 +366,12 @@ fn cmd_sim(args: &[String]) {
     // JSON document below.
     let own = report.metrics.summaries();
     println!("{}", report.summary_line_with(&own));
+    // Per-class SLO attainment + shed rows (only for classed runs).
+    if !report.metrics.classes.is_empty() {
+        for row in report.metrics.class_rows() {
+            println!("{row}");
+        }
+    }
 
     // Paper's comparison setup (§5.1): TetriInfer's prefill+decode pair
     // uses twice the cards of one coupled vLLM instance; fairness is
@@ -407,6 +500,8 @@ fn main() {
         Some("sim") => cmd_sim(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
+        // `tetri --list` works top-level too (sugar for `sim --list`)
+        Some("--list") => cmd_list(),
         _ => usage(),
     }
 }

@@ -14,8 +14,68 @@
 //! off. Retention stays on for golden/figure runs, where summaries are
 //! computed exactly from the records as before.
 
+use crate::slo::ClassDef;
 use crate::types::{RequestRecord, Us, US_PER_SEC};
 use crate::util::{summarize, LogHist, Summary};
+
+/// Per-workload-class streamed counters + histograms — constant memory
+/// per class however many requests stream through (the SLO counterpart
+/// of the run-wide `ttft_hist`/`jct_hist`). Indexed by class id in
+/// [`RunMetrics::per_class`].
+#[derive(Clone, Debug, Default)]
+pub struct ClassMetrics {
+    /// Requests of this class that completed.
+    pub finished: u64,
+    /// Requests of this class the admission gate shed (counted, never
+    /// silently dropped).
+    pub shed: u64,
+    /// Finishes meeting the class TTFT deadline (all of them when the
+    /// class declares none — vacuous attainment).
+    pub ttft_attained: u64,
+    /// Finishes with ≥ 2 decode tokens (the TPOT denominator; TPOT is
+    /// undefined for single-token requests, which attain vacuously).
+    pub tpot_eligible: u64,
+    /// TPOT-eligible finishes meeting the class TPOT deadline.
+    pub tpot_attained: u64,
+    /// Finishes meeting *every* declared deadline (the goodput numerator).
+    pub attained: u64,
+    /// Streaming TTFT distribution (µs).
+    pub ttft_hist: LogHist,
+    /// Streaming JCT distribution (µs).
+    pub jct_hist: LogHist,
+    /// Streaming per-request mean TPOT distribution (µs/token, decode
+    /// tokens past the first).
+    pub tpot_hist: LogHist,
+}
+
+impl ClassMetrics {
+    /// TTFT attainment fraction (1.0 when nothing finished).
+    pub fn ttft_attainment(&self) -> f64 {
+        if self.finished == 0 {
+            1.0
+        } else {
+            self.ttft_attained as f64 / self.finished as f64
+        }
+    }
+
+    /// TPOT attainment fraction over eligible finishes (1.0 when none).
+    pub fn tpot_attainment(&self) -> f64 {
+        if self.tpot_eligible == 0 {
+            1.0
+        } else {
+            self.tpot_attained as f64 / self.tpot_eligible as f64
+        }
+    }
+
+    /// Full-SLO attainment fraction (the per-class goodput ratio).
+    pub fn attainment(&self) -> f64 {
+        if self.finished == 0 {
+            1.0
+        } else {
+            self.attained as f64 / self.finished as f64
+        }
+    }
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -65,6 +125,22 @@ pub struct RunMetrics {
     /// length — Figure 19's balance diagnostic. Indexed by instance id;
     /// non-decode instances stay (0, 0).
     pub decode_assign: Vec<(u32, u32)>,
+    /// The resolved workload-class table this run served under (empty =
+    /// classless legacy run: implicit single class, no deadlines).
+    /// Drivers stamp it from their config before the run starts; finish-
+    /// time attainment reads deadlines from here.
+    pub classes: Vec<ClassDef>,
+    /// Per-class streamed counters + histograms, indexed by class id.
+    /// Pre-sized to the declared table by [`RunMetrics::set_classes`]
+    /// (zero-traffic tenants still report) and grown on demand past it;
+    /// classless runs keep everything in slot 0.
+    pub per_class: Vec<ClassMetrics>,
+    /// Total requests the admission gate shed (Σ per-class sheds).
+    pub shed: u64,
+    /// Total finishes meeting every declared deadline — the goodput
+    /// numerator. With no deadlines declared this equals `finished`, so
+    /// goodput degenerates to plain throughput.
+    pub attained: u64,
 }
 
 /// TTFT/JCT/resource for one run, computed once and threaded through
@@ -75,6 +151,10 @@ pub struct RunSummaries {
     pub ttft: Summary,
     pub jct: Summary,
     pub resource_s: f64,
+    /// SLO-attained finishes per second of makespan (the DistServe
+    /// goodput lens; equals plain request throughput when no deadlines
+    /// are declared).
+    pub goodput_rps: f64,
 }
 
 /// perf/$ from precomputed summaries: ratio of (1/meanJCT)/resource.
@@ -84,17 +164,142 @@ pub fn perf_per_dollar(own: &RunSummaries, base: &RunSummaries) -> f64 {
     a / b
 }
 
+/// goodput/$ from precomputed summaries: ratio of goodput-per-resource —
+/// requests completed *within their SLO* per resource-second, normalized
+/// against a baseline run (>1 = better). NaN when the baseline achieved
+/// zero goodput (the ratio is meaningless there).
+pub fn goodput_per_dollar(own: &RunSummaries, base: &RunSummaries) -> f64 {
+    let a = own.goodput_rps / own.resource_s;
+    let b = base.goodput_rps / base.resource_s;
+    if b == 0.0 {
+        f64::NAN
+    } else {
+        a / b
+    }
+}
+
 impl RunMetrics {
+    /// The per-class slot for `class`, grown on demand (O(classes)
+    /// memory, not O(requests) — the constant-memory contract holds).
+    fn class_entry(per_class: &mut Vec<ClassMetrics>, class: u8) -> &mut ClassMetrics {
+        let i = class as usize;
+        if per_class.len() <= i {
+            per_class.resize_with(i + 1, ClassMetrics::default);
+        }
+        &mut per_class[i]
+    }
+
+    /// Stamp the resolved workload-class table (drivers call this before
+    /// the run starts) and pre-size the per-class ledger to cover every
+    /// *declared* class — a tenant that happens to receive zero arrivals
+    /// still gets its finished=0/shed=0 row in reports instead of
+    /// silently vanishing.
+    pub fn set_classes(&mut self, classes: Vec<ClassDef>) {
+        if self.per_class.len() < classes.len() {
+            self.per_class.resize_with(classes.len(), ClassMetrics::default);
+        }
+        self.classes = classes;
+    }
+
+    /// Display name of a class (table name, or `class<N>` past the table).
+    pub fn class_name(&self, class: u8) -> String {
+        self.classes
+            .get(class as usize)
+            .map(|c| c.name.clone())
+            .unwrap_or_else(|| format!("class{class}"))
+    }
+
     /// Stream one completed request into the metrics: exact counters +
-    /// histograms always; the full record only when retention is on.
-    pub fn note_finish(&mut self, rec: RequestRecord) {
+    /// histograms always (run-wide and per-class); the full record only
+    /// when retention is on. Returns `(ttft_violated, tpot_violated)`
+    /// against the request's class deadlines, so the engine can fire
+    /// `Observer::on_violation` without recomputing.
+    pub fn note_finish(&mut self, rec: &RequestRecord) -> (bool, bool) {
         self.finished += 1;
         self.generated_tokens += rec.decode_len as u64;
-        self.ttft_hist.record(rec.ttft());
-        self.jct_hist.record(rec.jct());
-        if self.retain_records {
-            self.records.push(rec);
+        let ttft = rec.ttft();
+        let jct = rec.jct();
+        self.ttft_hist.record(ttft);
+        self.jct_hist.record(jct);
+        // Per-request mean TPOT: decode time over tokens past the first
+        // (undefined for single-token requests, which attain vacuously).
+        let tpot = if rec.decode_len > 1 {
+            Some(rec.finished.saturating_sub(rec.first_token) / (rec.decode_len as u64 - 1))
+        } else {
+            None
+        };
+        let (ttft_dl, tpot_dl) = self
+            .classes
+            .get(rec.class as usize)
+            .map(|c| (c.ttft_deadline_us, c.tpot_deadline_us))
+            .unwrap_or((None, None));
+        let ttft_violated = ttft_dl.is_some_and(|dl| ttft > dl);
+        let tpot_violated = matches!((tpot_dl, tpot), (Some(dl), Some(t)) if t > dl);
+        let c = Self::class_entry(&mut self.per_class, rec.class);
+        c.finished += 1;
+        c.ttft_hist.record(ttft);
+        c.jct_hist.record(jct);
+        if let Some(t) = tpot {
+            c.tpot_hist.record(t);
+            c.tpot_eligible += 1;
+            if !tpot_violated {
+                c.tpot_attained += 1;
+            }
         }
+        if !ttft_violated {
+            c.ttft_attained += 1;
+        }
+        if !ttft_violated && !tpot_violated {
+            c.attained += 1;
+            self.attained += 1;
+        }
+        if self.retain_records {
+            self.records.push(rec.clone());
+        }
+        (ttft_violated, tpot_violated)
+    }
+
+    /// Stream one admission-gate shed: counted run-wide and per class —
+    /// shed requests are first-class outcomes, never silent drops.
+    pub fn note_shed(&mut self, class: u8) {
+        self.shed += 1;
+        Self::class_entry(&mut self.per_class, class).shed += 1;
+    }
+
+    /// SLO-attained finishes per second of makespan (goodput).
+    pub fn goodput_rps(&self) -> f64 {
+        self.attained as f64 / (self.makespan_us.max(1) as f64 / US_PER_SEC as f64)
+    }
+
+    /// Human-readable per-class SLO rows (one per class that saw any
+    /// traffic) — what the CLI and examples print under the summary line.
+    pub fn class_rows(&self) -> Vec<String> {
+        let mut rows = Vec::new();
+        for (i, c) in self.per_class.iter().enumerate() {
+            // every *declared* class reports (even with zero traffic);
+            // undeclared slots only appear once traffic touched them
+            if i >= self.classes.len() && c.finished == 0 && c.shed == 0 {
+                continue;
+            }
+            let tier =
+                self.classes.get(i).map(|d| d.tier.to_string()).unwrap_or_else(|| "-".into());
+            let ttft = c.ttft_hist.summary_scaled(1e-3);
+            let tpot = c.tpot_hist.summary_scaled(1e-3);
+            rows.push(format!(
+                "  class {:<12} tier {:<2} finished {:>6}  shed {:>5}  TTFT attain {:>5.1}% \
+                 (mean {:>7.1} ms)  TPOT attain {:>5.1}% (mean {:>6.1} ms)  SLO attain {:>5.1}%",
+                self.class_name(i as u8),
+                tier,
+                c.finished,
+                c.shed,
+                c.ttft_attainment() * 100.0,
+                ttft.mean,
+                c.tpot_attainment() * 100.0,
+                tpot.mean,
+                c.attainment() * 100.0,
+            ));
+        }
+        rows
     }
 
     /// Requests finished: the streamed counter, or the record count for
@@ -125,6 +330,7 @@ impl RunMetrics {
             ttft: self.ttft_summary(),
             jct: self.jct_summary(),
             resource_s: self.resource_seconds(),
+            goodput_rps: self.goodput_rps(),
         }
     }
 
@@ -148,6 +354,12 @@ impl RunMetrics {
     /// ratio of (1/meanJCT)/resource.
     pub fn perf_per_dollar_vs(&self, base: &RunMetrics) -> f64 {
         perf_per_dollar(&self.summaries(), &base.summaries())
+    }
+
+    /// Goodput-per-dollar of this run relative to `base` (>1 = better):
+    /// SLO-attained requests per resource-second, as a ratio.
+    pub fn goodput_per_dollar_vs(&self, base: &RunMetrics) -> f64 {
+        goodput_per_dollar(&self.summaries(), &base.summaries())
     }
 
     /// Mean utilization across instances that existed.
@@ -176,11 +388,12 @@ pub fn vs_row_from(name: &str, own: &RunSummaries, base: &RunSummaries) -> Strin
     let dj = 1.0 - own.jct.mean / base.jct.mean;
     let dr = 1.0 - own.resource_s / base.resource_s;
     format!(
-        "{name}: TTFT {:+.0}%  JCT {:+.0}%  resource {:+.0}%  perf/$ {:.2}x",
+        "{name}: TTFT {:+.0}%  JCT {:+.0}%  resource {:+.0}%  perf/$ {:.2}x  goodput/$ {:.2}x",
         -dt * 100.0,
         -dj * 100.0,
         -dr * 100.0,
-        perf_per_dollar(own, base)
+        perf_per_dollar(own, base),
+        goodput_per_dollar(own, base)
     )
 }
 
@@ -193,6 +406,7 @@ mod tests {
         RequestRecord {
             id: 0,
             task: TaskType::Chat,
+            class: 0,
             prompt_len: 10,
             decode_len: dlen,
             arrival,
@@ -240,6 +454,92 @@ mod tests {
     }
 
     #[test]
+    fn per_class_attainment_and_goodput() {
+        use crate::slo::ClassSpec;
+        let mut m = RunMetrics {
+            classes: vec![
+                ClassSpec {
+                    name: "chat".into(),
+                    ttft_ms: Some(100.0),
+                    tpot_ms: Some(10.0),
+                    ..Default::default()
+                }
+                .to_def(),
+                ClassSpec { name: "batch".into(), tier: 2, ..Default::default() }.to_def(),
+            ],
+            ..Default::default()
+        };
+        // chat, on time: TTFT 50 ms ≤ 100 ms, TPOT (450ms/99) ≈ 4.5 ms ≤ 10
+        let mut a = rec(0, 50_000, 500_000, 100);
+        let v = m.note_finish(&a);
+        assert_eq!(v, (false, false));
+        // chat, TTFT blown
+        a = rec(0, 150_000, 500_000, 100);
+        assert_eq!(m.note_finish(&a), (true, false));
+        // chat, TPOT blown: 2 tokens, 50 ms between first and last > 10 ms
+        a = rec(0, 10_000, 60_000, 2);
+        assert_eq!(m.note_finish(&a), (false, true));
+        // chat single-token: TPOT undefined → vacuous attainment
+        a = rec(0, 10_000, 10_000, 1);
+        assert_eq!(m.note_finish(&a), (false, false));
+        // batch class: no deadlines, anything attains
+        let mut b = rec(0, 9_000_000, 99_000_000, 50);
+        b.class = 1;
+        assert_eq!(m.note_finish(&b), (false, false));
+        m.note_shed(1);
+        m.note_shed(1);
+
+        let chat = &m.per_class[0];
+        assert_eq!((chat.finished, chat.ttft_attained, chat.attained), (4, 3, 2));
+        assert_eq!((chat.tpot_eligible, chat.tpot_attained), (3, 2));
+        assert!((chat.ttft_attainment() - 0.75).abs() < 1e-12);
+        assert!((chat.attainment() - 0.5).abs() < 1e-12);
+        let batch = &m.per_class[1];
+        assert_eq!((batch.finished, batch.shed, batch.attained), (1, 2, 1));
+        assert_eq!((m.shed, m.attained, m.finished), (2, 3, 5));
+        // goodput: 3 attained over a 1 s makespan; classless ⇒ throughput
+        m.makespan_us = 1_000_000;
+        assert!((m.goodput_rps() - 3.0).abs() < 1e-9);
+        let rows = m.class_rows();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].contains("chat") && rows[0].contains("attain"), "{}", rows[0]);
+        assert!(rows[1].contains("batch") && rows[1].contains("shed"), "{}", rows[1]);
+        assert_eq!(m.class_name(7), "class7");
+    }
+
+    #[test]
+    fn set_classes_presizes_so_zero_traffic_tenants_report() {
+        use crate::slo::ClassSpec;
+        let mut m = RunMetrics::default();
+        m.set_classes(vec![
+            ClassSpec { name: "chat".into(), ..Default::default() }.to_def(),
+            ClassSpec { name: "idle".into(), tier: 2, ..Default::default() }.to_def(),
+        ]);
+        assert_eq!(m.per_class.len(), 2, "declared classes get ledger slots up front");
+        m.note_finish(&rec(0, 1_000, 2_000, 4));
+        let rows = m.class_rows();
+        assert_eq!(rows.len(), 2, "the zero-traffic tenant still reports");
+        assert!(rows[1].contains("idle"), "{}", rows[1]);
+        assert_eq!(m.per_class[1].finished, 0);
+    }
+
+    #[test]
+    fn goodput_per_dollar_tracks_attained_per_resource() {
+        // same resource, twice the attained rate → 2x goodput/$
+        let mut a = run(100.0, 1.0);
+        a.attained = 4;
+        let mut b = run(100.0, 1.0);
+        b.attained = 2;
+        assert!((a.goodput_per_dollar_vs(&b) - 2.0).abs() < 1e-9);
+        // vs_row renders both dollar lenses
+        assert!(a.vs_row("a vs b", &b).contains("goodput/$"));
+        // zero-goodput baseline: ratio is meaningless → NaN
+        let mut z = run(100.0, 1.0);
+        z.attained = 0;
+        assert!(a.goodput_per_dollar_vs(&z).is_nan());
+    }
+
+    #[test]
     fn records_off_metrics_stream_through_histograms() {
         let mut on = RunMetrics { retain_records: true, ..Default::default() };
         let mut off = RunMetrics { retain_records: false, ..Default::default() };
@@ -247,8 +547,8 @@ mod tests {
         for i in 0..2_000u64 {
             t += 350 + (i * 7919) % 9_000; // deterministic skewed arrivals
             let r = rec(t, t + 40_000 + (i % 50) * 1_000, t + 300_000 + (i % 211) * 4_000, 32);
-            on.note_finish(r.clone());
-            off.note_finish(r);
+            on.note_finish(&r);
+            off.note_finish(&r);
         }
         assert_eq!(on.records.len(), 2_000);
         assert!(off.records.is_empty(), "retention off keeps no records");

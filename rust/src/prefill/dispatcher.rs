@@ -9,7 +9,7 @@
 //!
 //! `Random` and `Imbalance` are Figure 19's comparison policies.
 
-use crate::types::{BucketPrediction, InstanceId, HEAVY_DECODE_TOKENS};
+use crate::types::{BucketPrediction, InstanceId, Us, HEAVY_DECODE_TOKENS};
 use crate::util::Pcg;
 
 /// A decode instance's load as last broadcast by the cluster monitor
@@ -84,6 +84,29 @@ pub fn choose(
     policy: DispatchPolicy,
     rng: &mut Pcg,
 ) -> Option<InstanceId> {
+    choose_ranked(loads, prompt_len, pred, granularity, policy, rng, None)
+}
+
+/// [`choose`] with an optional SLO ranking stage: when the request's
+/// workload class carries a TPOT deadline, the driver supplies
+/// `tpot_est` — a predictor of the next decode-iteration latency on a
+/// candidate instance (cost model over the broadcast load plus this
+/// request). The power-of-two winner is then the candidate with the
+/// *larger TPOT headroom* (smaller predicted iteration time — both
+/// candidates share the request's deadline, so minimizing predicted TPOT
+/// maximizes headroom), falling back to the interference tuple on ties:
+/// hotspot avoidance becomes violation avoidance. `None` (classless
+/// runs, or classes without a TPOT target) is bit-identical to the
+/// paper's least-interference pick — same RNG draws, same winners.
+pub fn choose_ranked(
+    loads: &[DecodeLoad],
+    prompt_len: u32,
+    pred: Option<BucketPrediction>,
+    granularity: u32,
+    policy: DispatchPolicy,
+    rng: &mut Pcg,
+    tpot_est: Option<&dyn Fn(&DecodeLoad) -> Us>,
+) -> Option<InstanceId> {
     if loads.is_empty() {
         return None;
     }
@@ -126,9 +149,17 @@ pub fn choose(
             let (a, b) = pick_two(&alpha, rng);
             let (la, lb) = (alpha[a], alpha[b]);
             let (ia, ib) = (la.interference_after(heavy), lb.interference_after(heavy));
-            // least interference; tie-break on free memory then queue
-            let winner = if (ia, std::cmp::Reverse(la.free_kv_tokens), la.queue_len)
-                <= (ib, std::cmp::Reverse(lb.free_kv_tokens), lb.queue_len)
+            // SLO classes with a TPOT deadline rank by predicted headroom
+            // first: the candidate whose next iteration is predicted
+            // faster keeps the class inside its per-token budget.
+            let (ta, tb) = match tpot_est {
+                Some(est) => (est(la), est(lb)),
+                None => (0, 0),
+            };
+            // least predicted TPOT, then least interference; tie-break on
+            // free memory then queue
+            let winner = if (ta, ia, std::cmp::Reverse(la.free_kv_tokens), la.queue_len)
+                <= (tb, ib, std::cmp::Reverse(lb.free_kv_tokens), lb.queue_len)
             {
                 la
             } else {
@@ -188,6 +219,36 @@ mod tests {
         let max = *counts.iter().max().unwrap() as f64;
         let min = *counts.iter().min().unwrap() as f64;
         assert!(max / min < 1.5, "heavy spread uneven: {counts:?}");
+    }
+
+    #[test]
+    fn tpot_ranking_overrides_interference_and_none_is_identity() {
+        // Instance 0 looks better on interference (fewer heavies) but is
+        // predicted slower; the SLO ranking must pick instance 1, while
+        // the unranked call keeps the paper's least-interference pick.
+        let loads = vec![load(0, 1 << 20, 0, 40), load(1, 1 << 20, 2, 0)];
+        let est = |l: &DecodeLoad| -> Us {
+            // proxy: total resident jobs drive the next iteration time
+            ((l.n_heavy + l.n_light) as u64 + 1) * 1_000
+        };
+        for seed in 0..16 {
+            let mut rng = Pcg::new(seed);
+            let ranked = choose_ranked(
+                &loads, 10, light_pred(), 200, DispatchPolicy::PowerOfTwo, &mut rng, Some(&est),
+            );
+            assert_eq!(ranked, Some(1), "seed {seed}: headroom must win");
+        }
+        // None-ranked choose_ranked == choose, draw for draw
+        for seed in 0..16 {
+            let mut a = Pcg::new(seed);
+            let mut b = Pcg::new(seed);
+            let plain = choose(&loads, 10, heavy_pred(), 200, DispatchPolicy::PowerOfTwo, &mut a);
+            let unranked = choose_ranked(
+                &loads, 10, heavy_pred(), 200, DispatchPolicy::PowerOfTwo, &mut b, None,
+            );
+            assert_eq!(plain, unranked, "seed {seed}");
+            assert_eq!(a.next_u64(), b.next_u64(), "seed {seed}: RNG streams must stay aligned");
+        }
     }
 
     #[test]

@@ -7,5 +7,5 @@ pub mod dispatcher;
 pub mod scheduler;
 
 pub use chunker::{Chunk, Chunker, Segment};
-pub use dispatcher::{choose, predicted_footprint, DecodeLoad, DispatchPolicy};
+pub use dispatcher::{choose, choose_ranked, predicted_footprint, DecodeLoad, DispatchPolicy};
 pub use scheduler::{PrefillPolicy, PrefillScheduler};

@@ -9,7 +9,7 @@
 
 use std::collections::VecDeque;
 
-use crate::types::ReqMeta;
+use crate::types::{ReqMeta, Us};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PrefillPolicy {
@@ -18,6 +18,14 @@ pub enum PrefillPolicy {
     /// prompt length, so SJF is exact (not estimated).
     Sjf,
     Ljf,
+    /// SLO policy: priority tier first (tier 0 = most latency-critical,
+    /// never scheduled behind a higher tier number within a committed
+    /// batch), earliest TTFT deadline first within a tier; classes
+    /// without a TTFT target order by arrival behind deadlined peers of
+    /// the same tier. Requires a class table
+    /// ([`PrefillScheduler::set_class_table`]); chunk-budget preemption
+    /// downstream is unchanged.
+    Slo,
 }
 
 impl PrefillPolicy {
@@ -26,6 +34,7 @@ impl PrefillPolicy {
             PrefillPolicy::Fcfs => "FCFS",
             PrefillPolicy::Sjf => "SJF",
             PrefillPolicy::Ljf => "LJF",
+            PrefillPolicy::Slo => "SLO-EDF",
         }
     }
 }
@@ -39,6 +48,11 @@ pub struct PrefillScheduler {
     scheduled: VecDeque<ReqMeta>,
     /// Prompt tokens across both queues, maintained incrementally.
     tokens: u64,
+    /// `(tier, ttft_deadline_us)` per workload class, indexed by class id
+    /// (`Us::MAX` deadline = no TTFT target) — the [`PrefillPolicy::Slo`]
+    /// sort key source. Empty for classless runs: every class resolves to
+    /// `(0, MAX)` and SLO degenerates to FCFS.
+    class_table: Vec<(u8, Us)>,
 }
 
 impl PrefillScheduler {
@@ -50,7 +64,20 @@ impl PrefillScheduler {
             raw: VecDeque::new(),
             scheduled: VecDeque::new(),
             tokens: 0,
+            class_table: Vec::new(),
         }
+    }
+
+    /// Install the per-class `(tier, ttft_deadline_us)` table the SLO
+    /// policy sorts by (see `slo::SloConfig::prefill_table`).
+    pub fn set_class_table(&mut self, table: Vec<(u8, Us)>) {
+        self.class_table = table;
+    }
+
+    /// `(tier, absolute deadline)` of one request under the class table.
+    fn slo_key(&self, r: &ReqMeta) -> (u8, Us) {
+        let (tier, dl) = self.class_table.get(r.class as usize).copied().unwrap_or((0, Us::MAX));
+        (tier, r.arrival.saturating_add(dl))
     }
 
     pub fn push(&mut self, req: ReqMeta) {
@@ -83,6 +110,9 @@ impl PrefillScheduler {
             // stable sort keeps arrival order among equal lengths
             PrefillPolicy::Sjf => batch.sort_by_key(|r| r.prompt_len),
             PrefillPolicy::Ljf => batch.sort_by_key(|r| std::cmp::Reverse(r.prompt_len)),
+            // tier, then earliest absolute TTFT deadline; stable sort
+            // keeps arrival order among undeadlined (MAX-key) peers
+            PrefillPolicy::Slo => batch.sort_by_key(|r| self.slo_key(r)),
         }
         self.scheduled.extend(batch);
     }
@@ -108,7 +138,11 @@ mod tests {
     use crate::types::TaskType;
 
     fn req(id: u64, plen: u32) -> ReqMeta {
-        ReqMeta { id, task: TaskType::Chat, arrival: id, prompt_len: plen, predicted: None }
+        ReqMeta { id, task: TaskType::Chat, class: 0, arrival: id, prompt_len: plen, predicted: None }
+    }
+
+    fn classed(id: u64, class: u8, arrival: Us) -> ReqMeta {
+        ReqMeta { id, task: TaskType::Chat, class, arrival, prompt_len: 10, predicted: None }
     }
 
     fn drain(s: &mut PrefillScheduler) -> Vec<u64> {
@@ -140,6 +174,32 @@ mod tests {
             s.push(req(i as u64, *p));
         }
         assert_eq!(drain(&mut s), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn slo_orders_tier_then_deadline_then_arrival() {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Slo, 16);
+        // class 0: tier 0, 100 ms TTFT; class 1: tier 1, 50 ms TTFT;
+        // class 2: tier 1, no deadline
+        s.set_class_table(vec![(0, 100_000), (1, 50_000), (1, Us::MAX)]);
+        s.push(classed(0, 2, 0)); // tier 1, no deadline
+        s.push(classed(1, 1, 10)); // tier 1, dl 50_010
+        s.push(classed(2, 0, 90)); // tier 0, dl 100_090
+        s.push(classed(3, 1, 5)); // tier 1, dl 50_005
+        s.push(classed(4, 0, 20)); // tier 0, dl 100_020
+        s.push(classed(5, 2, 1)); // tier 1, no deadline, arrived after 0
+        // tier 0 first (by deadline), then tier-1 deadlines, then the
+        // undeadlined tier-1 pair in arrival (push) order
+        assert_eq!(drain(&mut s), vec![4, 2, 3, 1, 0, 5]);
+    }
+
+    #[test]
+    fn slo_without_table_degenerates_to_fcfs() {
+        let mut s = PrefillScheduler::new(PrefillPolicy::Slo, 16);
+        for (i, p) in [50, 10, 30].iter().enumerate() {
+            s.push(req(i as u64, *p));
+        }
+        assert_eq!(drain(&mut s), vec![0, 1, 2], "classless: every key is (0, MAX)");
     }
 
     #[test]

@@ -411,6 +411,7 @@ impl<'e> Server<'e> {
         metrics.records.push(RequestRecord {
             id: req.id,
             task: req.task,
+            class: req.class,
             prompt_len: req.prompt_len,
             decode_len: req.decode_len,
             arrival: 0,

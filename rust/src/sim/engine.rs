@@ -178,10 +178,21 @@ impl EngineCore {
         ReqMeta {
             id: slot,
             task: r.task,
+            class: r.class,
             arrival: r.arrival,
             prompt_len: r.prompt_len,
             predicted: r.predicted,
         }
+    }
+
+    /// Admitted-but-unfinished requests currently in the arena — the
+    /// queue-depth input every driver feeds the admission gate. Computed
+    /// the same way in every driver, but its *value* tracks the driver's
+    /// own serving speed: queue-depth sheds deliberately respond to each
+    /// system's congestion (see `slo::AdmissionGate`). Includes the
+    /// arrival being handled, if any.
+    pub fn in_flight(&self) -> usize {
+        self.requests.len() - self.free_slots.len()
     }
 
     /// Fire the observer's arrival hook exactly once per request,
@@ -204,6 +215,7 @@ impl EngineCore {
         let rec = RequestRecord {
             id: st.req.id,
             task: st.req.task,
+            class: st.req.class,
             prompt_len: st.req.prompt_len,
             decode_len: st.req.decode_len,
             arrival: st.req.arrival,
@@ -212,7 +224,23 @@ impl EngineCore {
             predicted: st.req.predicted,
         };
         obs.on_finish(now, &rec);
-        self.metrics.note_finish(rec);
+        let (ttft_violated, tpot_violated) = self.metrics.note_finish(&rec);
+        if ttft_violated || tpot_violated {
+            obs.on_violation(now, &rec, ttft_violated, tpot_violated);
+        }
+        self.free_slots.push(slot);
+        self.outstanding -= 1;
+    }
+
+    /// Record an admission-gate shed: surface it to the observer, count
+    /// it per class (shed requests are never silently dropped), recycle
+    /// the arena slot, and shrink the termination counter — a shed is a
+    /// first-class request outcome, it just never produces tokens.
+    pub fn shed(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        let req = self.requests[slot as usize].req;
+        let now = self.queue.now();
+        obs.on_shed(now, &req);
+        self.metrics.note_shed(req.class);
         self.free_slots.push(slot);
         self.outstanding -= 1;
     }
@@ -396,6 +424,7 @@ mod tests {
         Request {
             id,
             task: TaskType::Chat,
+            class: 0,
             arrival,
             prompt_len: 8,
             decode_len: 2,
@@ -501,6 +530,29 @@ mod tests {
         core.note_arrival(slot, &mut obs);
         core.note_arrival(slot, &mut obs);
         assert_eq!(obs.0, 1, "re-delivered arrivals must not re-fire the hook");
+    }
+
+    #[test]
+    fn shed_recycles_slot_counts_class_and_fires_hook() {
+        struct Sheds(u64);
+        impl Observer for Sheds {
+            fn on_shed(&mut self, _now: Us, _req: &Request) {
+                self.0 += 1;
+            }
+        }
+        let mut core = EngineCore::new(1);
+        core.outstanding = 2;
+        let slot = core.admit(req(5, 0));
+        assert_eq!(core.in_flight(), 1);
+        let mut obs = Sheds(0);
+        core.shed(slot, &mut obs);
+        assert_eq!(obs.0, 1, "on_shed must fire");
+        assert_eq!(core.metrics.shed, 1);
+        assert_eq!(core.metrics.per_class[0].shed, 1);
+        assert_eq!(core.outstanding, 1);
+        assert_eq!(core.in_flight(), 0);
+        let slot2 = core.admit(req(6, 1));
+        assert_eq!(slot, slot2, "shed slots recycle like finished ones");
     }
 
     #[test]

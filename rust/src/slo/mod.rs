@@ -1,0 +1,486 @@
+//! SLO-aware multi-tenancy: workload classes, deterministic admission
+//! control, and the deadline vocabulary the two-level schedulers and the
+//! goodput accounting consume.
+//!
+//! DistServe frames serving quality as *goodput* — requests completed
+//! within their SLO per unit resource — and Arrow adapts scheduling on
+//! disaggregated fleets to per-class targets. This module is the single
+//! source of truth for that vocabulary here:
+//!
+//!   * [`ClassSpec`] — one workload class as declared in an
+//!     `api::Scenario` (JSON / builder / `--class` CLI flag): name,
+//!     arrival-share weight, priority tier, TTFT/TPOT deadlines in ms,
+//!     and optional admission limits (token-bucket rate, queue depth).
+//!   * [`ClassDef`] / [`SloConfig`] — the resolved runtime form (µs
+//!     deadlines) carried by `ClusterConfig`/`BaselineConfig` and echoed
+//!     into `RunMetrics` so per-class attainment can be computed at
+//!     finish time with O(classes) memory.
+//!   * [`TokenBucket`] / [`AdmissionGate`] — the deterministic entry
+//!     gate. Integer micro-token arithmetic with a sub-µtoken carry: the
+//!     bucket level is a `u64` that is only ever decremented when a full
+//!     token is present, so it is *structurally* non-negative
+//!     (property-tested in tests/proptest_slo.rs), and refills are a
+//!     pure function of the virtual clock — no wall time, no RNG, every
+//!     replay takes identical decisions (see [`AdmissionGate`] for what
+//!     is and isn't comparable *across* drivers).
+//!
+//! Classless runs (`Scenario` with no `classes`) resolve to the default
+//! [`SloConfig`]: an implicit single class 0 with no deadlines and
+//! admission off — the gate is never constructed, no extra RNG stream is
+//! consumed, and the event trajectory is bit-identical to pre-SLO builds
+//! (golden-tested).
+
+use crate::types::Us;
+
+/// Hard cap on declared classes: class ids travel as `u8` on every
+/// request, so a spec may declare at most this many.
+pub const MAX_CLASSES: usize = 256;
+
+/// One workload class as declared in a scenario spec (ms units — the
+/// spec-level mirror of the runtime [`ClassDef`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSpec {
+    /// Display name echoed into reports ("chat", "batch", ...).
+    pub name: String,
+    /// Unnormalized arrival share (the workload generator samples the
+    /// class of each request from these weights, on an RNG stream
+    /// *separate* from the length draws — a classed trace keeps the same
+    /// arrivals and lengths as its classless twin).
+    pub weight: f64,
+    /// Priority tier: 0 is the most latency-critical. The SLO prefill
+    /// policy never schedules a higher tier number ahead of a lower one
+    /// within a committed batch.
+    pub tier: u8,
+    /// TTFT deadline in ms; `None` = no TTFT target.
+    pub ttft_ms: Option<f64>,
+    /// TPOT (time per output token) deadline in ms; `None` = no target.
+    pub tpot_ms: Option<f64>,
+    /// Token-bucket admission rate in requests/s; `None` = unlimited.
+    /// Over-rate arrivals are *shed* (counted per class, never silently
+    /// dropped).
+    pub rate_limit: Option<f64>,
+    /// Token-bucket burst capacity in requests; defaults to
+    /// `max(1, rate_limit)` (one second of burst).
+    pub burst: Option<f64>,
+    /// Queue-depth gate: shed an arrival of this class while the
+    /// cluster-wide in-flight count (excluding the arrival itself) is at
+    /// or above this. `None` = no depth limit.
+    pub max_queue: Option<u64>,
+}
+
+impl Default for ClassSpec {
+    fn default() -> Self {
+        ClassSpec {
+            name: "default".to_string(),
+            weight: 1.0,
+            tier: 0,
+            ttft_ms: None,
+            tpot_ms: None,
+            rate_limit: None,
+            burst: None,
+            max_queue: None,
+        }
+    }
+}
+
+impl ClassSpec {
+    /// Resolve to the runtime form (ms → µs, burst default applied).
+    pub fn to_def(&self) -> ClassDef {
+        ClassDef {
+            name: self.name.clone(),
+            weight: self.weight,
+            tier: self.tier,
+            ttft_deadline_us: self.ttft_ms.map(|ms| (ms * 1e3) as Us),
+            tpot_deadline_us: self.tpot_ms.map(|ms| (ms * 1e3) as Us),
+            rate_limit: self.rate_limit,
+            burst: self.burst.unwrap_or_else(|| self.rate_limit.unwrap_or(1.0).max(1.0)),
+            max_queue: self.max_queue,
+        }
+    }
+}
+
+/// Runtime form of a workload class (µs deadlines). Carried by driver
+/// configs and echoed into `RunMetrics::classes` for finish-time
+/// attainment accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassDef {
+    pub name: String,
+    pub weight: f64,
+    pub tier: u8,
+    pub ttft_deadline_us: Option<Us>,
+    pub tpot_deadline_us: Option<Us>,
+    pub rate_limit: Option<f64>,
+    pub burst: f64,
+    pub max_queue: Option<u64>,
+}
+
+/// The resolved SLO configuration a driver runs under. The default —
+/// empty class table, admission off — is the classless legacy behavior:
+/// every request is implicit class 0 with no deadlines.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloConfig {
+    /// Class table indexed by class id; empty = implicit single class.
+    pub classes: Vec<ClassDef>,
+    /// Whether the entry admission gate is active.
+    pub admission: bool,
+}
+
+impl SloConfig {
+    /// `(tier, ttft deadline)` per class for the SLO prefill policy
+    /// (deadline `Us::MAX` when the class has no TTFT target, so
+    /// undeadlined classes order by arrival within their tier).
+    pub fn prefill_table(&self) -> Vec<(u8, Us)> {
+        self.classes
+            .iter()
+            .map(|c| (c.tier, c.ttft_deadline_us.unwrap_or(Us::MAX)))
+            .collect()
+    }
+
+    /// TPOT deadline of `class`, if it has one (activates the
+    /// headroom-ranked decode dispatch).
+    pub fn tpot_deadline_us(&self, class: u8) -> Option<Us> {
+        self.classes.get(class as usize).and_then(|c| c.tpot_deadline_us)
+    }
+
+    /// Whether any class declares any deadline or admission limit — i.e.
+    /// whether SLO machinery can affect this run at all.
+    pub fn is_active(&self) -> bool {
+        self.admission
+            || self.classes.iter().any(|c| {
+                c.ttft_deadline_us.is_some()
+                    || c.tpot_deadline_us.is_some()
+                    || c.rate_limit.is_some()
+                    || c.max_queue.is_some()
+            })
+    }
+}
+
+// ------------------------------------------------------------ admission
+
+/// One micro-token = 1e-6 request tokens; the bucket does all arithmetic
+/// in integer micro-tokens so the level is exact and structurally
+/// non-negative at any virtual-time scale.
+const MICRO: u64 = 1_000_000;
+
+/// Deterministic token bucket over virtual time. Starts full (a burst at
+/// t=0 is admitted up to `burst`), refills `rate` tokens per virtual
+/// second, caps at `burst`.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate_per_sec: f64,
+    cap_micro: u64,
+    level_micro: u64,
+    /// Sub-µtoken refill remainder carried between refills (in [0, 1)
+    /// µtokens). Without it, closely spaced arrivals would truncate each
+    /// tiny refill to zero while still advancing `last_refill`, starving
+    /// low-rate buckets entirely under µs-spaced probe storms.
+    frac_micro: f64,
+    last_refill: Us,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_sec: f64, burst_tokens: f64) -> Self {
+        let cap_micro = ((burst_tokens.max(0.0) * MICRO as f64) as u64).max(MICRO);
+        TokenBucket {
+            rate_per_sec: rate_per_sec.max(0.0),
+            cap_micro,
+            level_micro: cap_micro,
+            frac_micro: 0.0,
+            last_refill: 0,
+        }
+    }
+
+    /// Current level in whole tokens (diagnostics/tests).
+    pub fn level_tokens(&self) -> f64 {
+        self.level_micro as f64 / MICRO as f64
+    }
+
+    fn refill(&mut self, now: Us) {
+        let dt = now.saturating_sub(self.last_refill);
+        self.last_refill = self.last_refill.max(now);
+        if dt == 0 {
+            return;
+        }
+        // rate tokens/s == rate µtokens/µs. The whole µtokens land in the
+        // level; the sub-µtoken remainder carries to the next refill, so
+        // the long-run refill rate is exact however finely the virtual
+        // clock slices it (a pure function of elapsed virtual time —
+        // deterministic across drivers and replays).
+        let exact = self.rate_per_sec * dt as f64 + self.frac_micro;
+        let add = exact as u64; // saturating float→int cast
+        self.level_micro = self.level_micro.saturating_add(add).min(self.cap_micro);
+        // a full bucket discards overflow, fraction included
+        self.frac_micro = if self.level_micro >= self.cap_micro { 0.0 } else { exact.fract() };
+    }
+
+    /// Take one token if available. Never drives the level negative: the
+    /// subtraction only happens when a full token is present.
+    pub fn try_take(&mut self, now: Us) -> bool {
+        self.refill(now);
+        if self.level_micro >= MICRO {
+            self.level_micro -= MICRO;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-class gate state (limits resolved from the class table).
+#[derive(Clone, Debug)]
+struct GateClass {
+    bucket: Option<TokenBucket>,
+    max_queue: Option<u64>,
+}
+
+/// The deterministic entry admission gate every driver consults at the
+/// *first* delivery of each arrival (mid-flip re-deliveries skip it —
+/// one decision per request). Inputs are the virtual clock and the
+/// cluster-wide in-flight count; every run of the same driver + config +
+/// trace replays the identical decisions.
+///
+/// Policy: a class sheds when in-flight ≥ its `max_queue` (if declared)
+/// or when its token bucket is empty (if it declares a `rate_limit`).
+/// Classes without limits — the usual configuration for tier 0 — are
+/// always admitted. Shed requests are counted per class and surfaced via
+/// `Observer::on_shed`; they are never silently dropped.
+///
+/// Cross-driver comparison note: the *rate-limit* component is a pure
+/// function of arrival times, so on a shared trace it sheds identically
+/// under tetri/vllm/hybrid (until decisions start compounding). The
+/// *queue-depth* component deliberately reads the serving system's own
+/// congestion — a slower system sheds more — so `max_queue` sheds (and,
+/// downstream of them, bucket levels) legitimately differ across
+/// drivers; goodput/$ comparisons measure exactly that difference.
+#[derive(Clone, Debug)]
+pub struct AdmissionGate {
+    per_class: Vec<GateClass>,
+}
+
+impl AdmissionGate {
+    /// Build the gate, or `None` when admission is off (the gate is then
+    /// never consulted — zero cost on the classless hot path).
+    pub fn from_config(slo: &SloConfig) -> Option<AdmissionGate> {
+        if !slo.admission {
+            return None;
+        }
+        Some(AdmissionGate {
+            per_class: slo
+                .classes
+                .iter()
+                .map(|c| GateClass {
+                    bucket: c.rate_limit.map(|r| TokenBucket::new(r, c.burst)),
+                    max_queue: c.max_queue,
+                })
+                .collect(),
+        })
+    }
+
+    /// One admission decision: `true` = admit, `false` = shed. `in_flight`
+    /// is the number of admitted-but-unfinished requests *excluding* the
+    /// arrival under decision.
+    pub fn admits(&mut self, class: u8, now: Us, in_flight: u64) -> bool {
+        let Some(gc) = self.per_class.get_mut(class as usize) else {
+            return true; // class beyond the table (or classless): admit
+        };
+        if let Some(mq) = gc.max_queue {
+            if in_flight >= mq {
+                return false;
+            }
+        }
+        if let Some(bucket) = gc.bucket.as_mut() {
+            if !bucket.try_take(now) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+// ------------------------------------------------------------- CLI flag
+
+/// Parse one `--class` CLI flag value into a [`ClassSpec`]. Format is
+/// comma-separated `key=value` pairs using the same key spellings as the
+/// JSON spec:
+///
+/// ```text
+/// name=chat,weight=0.5,tier=0,ttft_ms=300,tpot_ms=100,rate_limit=4,burst=8,max_queue=64
+/// ```
+///
+/// `name` is required; everything else takes the [`ClassSpec`] defaults.
+/// Unknown keys and malformed numbers are errors, never silent defaults.
+pub fn parse_class_flag(s: &str) -> Result<ClassSpec, String> {
+    let mut spec = ClassSpec { name: String::new(), ..Default::default() };
+    for pair in s.split(',') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue;
+        }
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("--class: expected key=value, got '{pair}'"))?;
+        let num = |key: &str| -> Result<f64, String> {
+            v.parse::<f64>().map_err(|_| format!("--class: {key} needs a number, got '{v}'"))
+        };
+        match k {
+            "name" => spec.name = v.to_string(),
+            "weight" => spec.weight = num("weight")?,
+            "tier" => {
+                spec.tier = v
+                    .parse::<u8>()
+                    .map_err(|_| format!("--class: tier needs an integer in [0,255], got '{v}'"))?
+            }
+            "ttft_ms" => spec.ttft_ms = Some(num("ttft_ms")?),
+            "tpot_ms" => spec.tpot_ms = Some(num("tpot_ms")?),
+            "rate_limit" => spec.rate_limit = Some(num("rate_limit")?),
+            "burst" => spec.burst = Some(num("burst")?),
+            "max_queue" => spec.max_queue = Some(num("max_queue")? as u64),
+            _ => {
+                return Err(format!(
+                    "--class: unknown key '{k}' (known: name, weight, tier, ttft_ms, tpot_ms, \
+                     rate_limit, burst, max_queue)"
+                ))
+            }
+        }
+    }
+    if spec.name.is_empty() {
+        return Err("--class: 'name=' is required".to_string());
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_inactive_and_gateless() {
+        let slo = SloConfig::default();
+        assert!(!slo.is_active());
+        assert!(AdmissionGate::from_config(&slo).is_none());
+        assert!(slo.prefill_table().is_empty());
+        assert_eq!(slo.tpot_deadline_us(0), None);
+    }
+
+    #[test]
+    fn class_spec_resolves_ms_to_us_and_defaults_burst() {
+        let spec = ClassSpec {
+            name: "chat".into(),
+            ttft_ms: Some(300.0),
+            tpot_ms: Some(100.0),
+            rate_limit: Some(4.0),
+            ..Default::default()
+        };
+        let def = spec.to_def();
+        assert_eq!(def.ttft_deadline_us, Some(300_000));
+        assert_eq!(def.tpot_deadline_us, Some(100_000));
+        assert_eq!(def.burst, 4.0, "burst defaults to the rate (one second)");
+        let unlimited = ClassSpec::default().to_def();
+        assert_eq!(unlimited.burst, 1.0, "unlimited classes default to burst 1");
+    }
+
+    #[test]
+    fn token_bucket_admits_burst_then_refills_at_rate() {
+        // 2 req/s, burst 3: three admits at t=0, the fourth sheds, half a
+        // second later one token is back.
+        let mut b = TokenBucket::new(2.0, 3.0);
+        assert!(b.try_take(0) && b.try_take(0) && b.try_take(0));
+        assert!(!b.try_take(0), "burst exhausted");
+        assert!(!b.try_take(400_000), "0.4 s × 2/s = 0.8 tokens: not yet");
+        assert!(b.try_take(500_000), "1.0 token refilled by 0.5 s");
+        assert!(!b.try_take(500_000));
+    }
+
+    #[test]
+    fn token_bucket_caps_at_burst_and_never_goes_negative() {
+        let mut b = TokenBucket::new(10.0, 2.0);
+        // a huge idle period must not bank more than the burst
+        assert!(b.try_take(3_600_000_000));
+        assert!(b.try_take(3_600_000_000));
+        assert!(!b.try_take(3_600_000_000));
+        // zero-rate bucket: burst only, then dry forever
+        let mut z = TokenBucket::new(0.0, 1.0);
+        assert!(z.try_take(0));
+        assert!(!z.try_take(u64::MAX / 2));
+        assert!(z.level_tokens() >= 0.0);
+    }
+
+    #[test]
+    fn token_bucket_sub_microtoken_refills_accumulate() {
+        // 0.5 req/s probed every virtual µs: each refill is 0.5 µtokens —
+        // without the fractional carry every one would truncate to zero
+        // (while still advancing the clock) and the bucket would starve
+        // forever. With the carry, exactly one token accrues over 2 s.
+        let mut b = TokenBucket::new(0.5, 1.0);
+        assert!(b.try_take(0), "initial burst");
+        let mut admitted = 0u64;
+        for now in 1..=2_000_000u64 {
+            if b.try_take(now) {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, 1, "0.5 req/s over 2 s refills exactly one token");
+    }
+
+    #[test]
+    fn gate_sheds_on_rate_and_queue_depth_independently() {
+        let slo = SloConfig {
+            classes: vec![
+                ClassSpec { name: "a".into(), ..Default::default() }.to_def(),
+                ClassSpec {
+                    name: "b".into(),
+                    tier: 2,
+                    rate_limit: Some(1.0),
+                    burst: Some(1.0),
+                    max_queue: Some(4),
+                    ..Default::default()
+                }
+                .to_def(),
+            ],
+            admission: true,
+        };
+        let mut gate = AdmissionGate::from_config(&slo).expect("admission on");
+        // class 0: no limits, always admitted
+        for i in 0..32 {
+            assert!(gate.admits(0, i, 1_000_000));
+        }
+        // class 1: queue-depth gate fires first
+        assert!(!gate.admits(1, 0, 4), "at the depth cap: shed");
+        assert!(gate.admits(1, 0, 3), "below the cap + one burst token");
+        assert!(!gate.admits(1, 0, 3), "bucket dry");
+        assert!(gate.admits(1, 1_000_000, 0), "refilled after 1 s");
+        // classes beyond the table admit (defensive default)
+        assert!(gate.admits(9, 0, u64::MAX));
+    }
+
+    #[test]
+    fn prefill_table_and_tpot_lookup() {
+        let slo = SloConfig {
+            classes: vec![
+                ClassSpec { name: "chat".into(), ttft_ms: Some(250.0), tpot_ms: Some(80.0), ..Default::default() }
+                    .to_def(),
+                ClassSpec { name: "batch".into(), tier: 2, ..Default::default() }.to_def(),
+            ],
+            admission: false,
+        };
+        assert_eq!(slo.prefill_table(), vec![(0, 250_000), (2, Us::MAX)]);
+        assert_eq!(slo.tpot_deadline_us(0), Some(80_000));
+        assert_eq!(slo.tpot_deadline_us(1), None);
+        assert_eq!(slo.tpot_deadline_us(7), None);
+        assert!(slo.is_active(), "deadlines alone activate the machinery");
+    }
+
+    #[test]
+    fn class_flag_parses_and_rejects() {
+        let c = parse_class_flag("name=chat,weight=0.5,tier=0,ttft_ms=300,tpot_ms=100").unwrap();
+        assert_eq!(c.name, "chat");
+        assert_eq!(c.weight, 0.5);
+        assert_eq!(c.ttft_ms, Some(300.0));
+        let c = parse_class_flag("name=batch,tier=2,rate_limit=4,burst=8,max_queue=64").unwrap();
+        assert_eq!((c.tier, c.rate_limit, c.burst, c.max_queue), (2, Some(4.0), Some(8.0), Some(64)));
+        assert!(parse_class_flag("weight=1").is_err(), "name required");
+        assert!(parse_class_flag("name=x,tirr=2").is_err(), "unknown key");
+        assert!(parse_class_flag("name=x,tier=abc").is_err(), "bad number");
+        assert!(parse_class_flag("name=x,ttft_ms").is_err(), "missing '='");
+    }
+}

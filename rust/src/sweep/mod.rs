@@ -19,9 +19,11 @@
 //! `benches/cluster.rs` (the BENCH_cluster.json perf baseline).
 
 use std::collections::VecDeque;
+use std::fmt::Write as _;
 use std::sync::Mutex;
 
 use crate::api::{Report, Scenario};
+use crate::util::Json;
 
 /// Worker count to use when the caller has no preference.
 pub fn default_workers() -> usize {
@@ -114,6 +116,65 @@ pub fn run_cells(cells: Vec<SweepCell>, workers: usize) -> Vec<CellResult> {
     parallel_map(cells, workers, SweepCell::run)
 }
 
+/// Header of [`results_csv`] — one place, so consumers and tests can't
+/// drift from the emitter.
+pub const RESULTS_CSV_HEADER: &str = "label,driver,finished,shed,ttft_mean_ms,ttft_p99_ms,\
+jct_mean_ms,jct_p99_ms,resource_s,makespan_s,utilization,attained,slo_attainment,goodput_rps";
+
+/// One CSV row per finished cell: the headline latency/resource columns
+/// plus the SLO lens — shed count, attained count, attainment fraction,
+/// and goodput (SLO-attained requests per second; equals plain request
+/// throughput for classless cells). Summaries are computed once per row.
+pub fn results_csv(results: &[CellResult]) -> String {
+    let mut out = String::from(RESULTS_CSV_HEADER);
+    out.push('\n');
+    for r in results {
+        let m = &r.report.metrics;
+        let s = m.summaries();
+        let finished = m.n_finished();
+        let attainment =
+            if finished == 0 { 1.0 } else { m.attained as f64 / finished as f64 };
+        writeln!(
+            out,
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4},{},{:.4},{:.3}",
+            r.label,
+            r.report.driver,
+            finished,
+            m.shed,
+            s.ttft.mean,
+            s.ttft.p99,
+            s.jct.mean,
+            s.jct.p99,
+            s.resource_s,
+            m.makespan_us as f64 / 1e6,
+            m.utilization(),
+            m.attained,
+            attainment,
+            s.goodput_rps,
+        )
+        .expect("writing to a String cannot fail");
+    }
+    out
+}
+
+/// Machine-readable twin of [`results_csv`]: an array of full
+/// [`Report`]s (each already carries shed counts, per-class attainment,
+/// and `goodput_rps` through the unified metrics serializer), labeled by
+/// cell.
+pub fn results_json(results: &[CellResult]) -> Json {
+    Json::from(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj([
+                    ("label", Json::from(r.label.clone())),
+                    ("report", r.report.to_json()),
+                ])
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +262,48 @@ mod tests {
         assert_eq!(res[0].report.metrics.records.len(), 24);
         assert_eq!(res[1].report.metrics.records.len(), 24);
         assert!(res[1].report.metrics.scale_ups >= 1, "elastic cell must scale");
+    }
+
+    #[test]
+    fn csv_and_json_emitters_carry_the_goodput_column() {
+        let cells = vec![
+            SweepCell::new(
+                "plain",
+                Scenario::builder().workload(WorkloadKind::Lpld).requests(12).seed(2).build(),
+            ),
+            SweepCell::new(
+                "classed",
+                Scenario::builder()
+                    .workload(WorkloadKind::Lpld)
+                    .requests(12)
+                    .seed(2)
+                    .class(crate::api::ClassSpec {
+                        name: "chat".into(),
+                        ttft_ms: Some(0.001),
+                        ..Default::default()
+                    })
+                    .build(),
+            ),
+        ];
+        let results = run_cells(cells, 2);
+        let csv = results_csv(&results);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some(RESULTS_CSV_HEADER));
+        assert!(RESULTS_CSV_HEADER.contains("goodput_rps") && RESULTS_CSV_HEADER.contains("shed"));
+        let rows: Vec<&str> = lines.collect();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].starts_with("plain,tetri,12,0,"), "{}", rows[0]);
+        // the classless cell attains everything; the impossible 1 µs TTFT
+        // deadline attains nothing → goodput 0
+        let field = |row: &str, i: usize| row.split(',').nth(i).unwrap().to_string();
+        assert_eq!(field(rows[0], 12), "1.0000", "classless attainment is vacuous");
+        assert_eq!(field(rows[1], 11), "0", "impossible deadline: nothing attained");
+        let j = results_json(&results);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].at(&["label"]).unwrap().as_str(), Some("plain"));
+        assert!(arr[1].at(&["report", "metrics", "goodput_rps"]).is_some());
+        assert!(arr[1].at(&["report", "metrics", "classes"]).is_some());
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub enum Phase {
 pub struct Request {
     pub id: ReqId,
     pub task: TaskType,
+    /// Workload class id (index into the scenario's `ClassSpec` table;
+    /// 0 = the implicit default class of classless runs). Carries the
+    /// SLO vocabulary — tier, TTFT/TPOT deadlines, admission limits —
+    /// by reference, so requests stay plain `Copy` data.
+    pub class: u8,
     pub arrival: Us,
     pub prompt_len: u32,
     /// Ground-truth generation length. In sim mode the decode instance
@@ -77,6 +82,7 @@ impl Request {
         ReqMeta {
             id: self.id,
             task: self.task,
+            class: self.class,
             arrival: self.arrival,
             prompt_len: self.prompt_len,
             predicted: self.predicted,
@@ -96,6 +102,9 @@ impl Request {
 pub struct ReqMeta {
     pub id: ReqId,
     pub task: TaskType,
+    /// Workload class id (see [`Request::class`]) — schedulers may read
+    /// it to apply per-class SLO policy.
+    pub class: u8,
     pub arrival: Us,
     pub prompt_len: u32,
     pub predicted: Option<BucketPrediction>,
@@ -152,6 +161,8 @@ pub enum Role {
 pub struct RequestRecord {
     pub id: ReqId,
     pub task: TaskType,
+    /// Workload class id (per-class attainment accounting key).
+    pub class: u8,
     pub prompt_len: u32,
     pub decode_len: u32,
     pub arrival: Us,
@@ -190,6 +201,7 @@ mod tests {
         let mut r = Request {
             id: 0,
             task: TaskType::Chat,
+            class: 0,
             arrival: 0,
             prompt_len: 512,
             decode_len: 128,
@@ -208,6 +220,7 @@ mod tests {
         let r = Request {
             id: 9,
             task: TaskType::Creation,
+            class: 3,
             arrival: 77,
             prompt_len: 600,
             decode_len: 4,
@@ -215,6 +228,7 @@ mod tests {
         };
         let m = r.meta();
         assert_eq!((m.id, m.task, m.arrival, m.prompt_len), (9, TaskType::Creation, 77, 600));
+        assert_eq!(m.class, 3, "meta must carry the workload class");
         assert_eq!(m.predicted, r.predicted);
         assert!(m.heavy_prefill());
     }
@@ -224,6 +238,7 @@ mod tests {
         let rec = RequestRecord {
             id: 1,
             task: TaskType::Chat,
+            class: 0,
             prompt_len: 10,
             decode_len: 5,
             arrival: 100,

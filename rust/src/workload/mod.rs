@@ -60,11 +60,31 @@ impl WorkloadKind {
 pub struct WorkloadGen {
     rng: Pcg,
     next_id: u64,
+    /// Per-class arrival-share weights (empty or single entry = every
+    /// request is the implicit class 0 and `class_rng` is never drawn).
+    class_weights: Vec<f64>,
+    /// The class stamp rides a *separate* RNG stream: a classed trace
+    /// keeps exactly the same arrivals and lengths as its classless twin
+    /// (and a classless trace consumes nothing here — bit-identical to
+    /// pre-SLO builds).
+    class_rng: Pcg,
 }
 
 impl WorkloadGen {
     pub fn new(seed: u64) -> Self {
-        Self { rng: Pcg::with_stream(seed, 0x9e3779b97f4a7c15), next_id: 0 }
+        Self {
+            rng: Pcg::with_stream(seed, 0x9e3779b97f4a7c15),
+            next_id: 0,
+            class_weights: Vec::new(),
+            class_rng: Pcg::with_stream(seed, 0x51f0_5e5a_71b7_4c3d),
+        }
+    }
+
+    /// Install the workload-class arrival shares (one weight per class id,
+    /// in class order). Empty or single-class tables leave every request
+    /// stamped class 0 without consuming RNG state.
+    pub fn set_classes(&mut self, weights: Vec<f64>) {
+        self.class_weights = weights;
     }
 
     /// Sample a task with the mixed-traffic prior (chat-dominant, like
@@ -88,7 +108,12 @@ impl WorkloadGen {
     fn request(&mut self, task: TaskType, arrival: Us, p: u32, d: u32) -> Request {
         let id = self.next_id;
         self.next_id += 1;
-        Request { id, task, arrival, prompt_len: p, decode_len: d, predicted: None }
+        let class = if self.class_weights.len() > 1 {
+            self.class_rng.weighted(&self.class_weights) as u8
+        } else {
+            0
+        };
+        Request { id, task, class, arrival, prompt_len: p, decode_len: d, predicted: None }
     }
 
     /// Sample one request from the full mixed distribution.
@@ -241,6 +266,14 @@ impl GenSource {
             yielded: 0,
         }
     }
+
+    /// Same stream, with workload-class arrival shares installed —
+    /// bit-identical to `WorkloadGen::set_classes` + `trace()` (the class
+    /// stamp rides its own RNG stream, see [`WorkloadGen::set_classes`]).
+    pub fn with_classes(mut self, weights: Vec<f64>) -> Self {
+        self.gen.set_classes(weights);
+        self
+    }
 }
 
 impl crate::sim::ArrivalSource for GenSource {
@@ -348,6 +381,41 @@ mod tests {
                 );
             }
             assert!(src.next_request().is_none());
+        }
+    }
+
+    #[test]
+    fn class_stamp_rides_its_own_stream() {
+        // A classed trace keeps exactly the same arrivals/lengths as its
+        // classless twin; only the class stamp differs. Shares track the
+        // weights, and GenSource delivers the identical classed stream.
+        use crate::sim::ArrivalSource as _;
+        let classless = WorkloadGen::new(29).trace(WorkloadKind::Mixed, 600, 20.0, 0);
+        let mut gen = WorkloadGen::new(29);
+        gen.set_classes(vec![0.5, 0.25, 0.25]);
+        let classed = gen.trace(WorkloadKind::Mixed, 600, 20.0, 0);
+        let mut counts = [0usize; 3];
+        for (a, b) in classless.iter().zip(classed.iter()) {
+            assert_eq!(
+                (a.id, a.arrival, a.prompt_len, a.decode_len, a.task),
+                (b.id, b.arrival, b.prompt_len, b.decode_len, b.task)
+            );
+            assert_eq!(a.class, 0, "classless requests are the implicit class 0");
+            counts[b.class as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert!(counts[0] > counts[1] && counts[0] > counts[2], "{counts:?}");
+        let mut src =
+            GenSource::new(29, WorkloadKind::Mixed, 600, 20.0, 0).with_classes(vec![0.5, 0.25, 0.25]);
+        for w in &classed {
+            let g = src.next_request().unwrap();
+            assert_eq!((g.id, g.class), (w.id, w.class), "GenSource class parity");
+        }
+        // a single-class table is the same as no table at all
+        let mut one = WorkloadGen::new(29);
+        one.set_classes(vec![1.0]);
+        for (a, b) in classless.iter().zip(one.trace(WorkloadKind::Mixed, 600, 20.0, 0)) {
+            assert_eq!((a.id, a.arrival, a.class), (b.id, b.arrival, b.class));
         }
     }
 

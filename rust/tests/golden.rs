@@ -35,7 +35,8 @@ const SEED: u64 = 42;
 
 fn fingerprint(m: &RunMetrics) -> String {
     format!(
-        "makespan_us={} jct_mean_ms={:.6} ttft_mean_ms={:.6} n={} swapped={} flips={} scales=+{}/-{}",
+        "makespan_us={} jct_mean_ms={:.6} ttft_mean_ms={:.6} n={} swapped={} flips={} \
+         scales=+{}/-{} shed={} attained={}",
         m.makespan_us,
         m.jct_summary().mean,
         m.ttft_summary().mean,
@@ -43,7 +44,9 @@ fn fingerprint(m: &RunMetrics) -> String {
         m.swapped_tokens,
         m.flips,
         m.scale_ups,
-        m.scale_downs
+        m.scale_downs,
+        m.shed,
+        m.attained
     )
 }
 
@@ -103,6 +106,27 @@ fn cases() -> Vec<(String, Box<dyn Fn() -> RunMetrics>)> {
             let path = repo_root().join("scenarios/hybrid.json");
             let sc = Scenario::load(path.to_str().unwrap()).expect("hybrid spec parses");
             sc.run().expect("hybrid spec resolves").metrics
+        }),
+    ));
+    // the SLO multi-tenancy specs: workload classes, SLO-EDF prefill,
+    // admission gate — steady state and overload (shed > 0) both pinned
+    // end-to-end, so the new subsystem's trajectory can't drift silently
+    out.push((
+        "scenario/slo-mixed-spec".to_string(),
+        Box::new(|| {
+            let path = repo_root().join("scenarios/slo_mixed.json");
+            let sc = Scenario::load(path.to_str().unwrap()).expect("slo_mixed spec parses");
+            sc.run().expect("slo_mixed spec resolves").metrics
+        }),
+    ));
+    out.push((
+        "scenario/slo-overload-spec".to_string(),
+        Box::new(|| {
+            let path = repo_root().join("scenarios/slo_overload.json");
+            let mut sc =
+                Scenario::load(path.to_str().unwrap()).expect("slo_overload spec parses");
+            sc.clamp_requests(128); // keep the golden run fast; sheds still occur
+            sc.run().expect("slo_overload spec resolves").metrics
         }),
     ));
     out
@@ -165,7 +189,7 @@ fn shipped_scenario_specs_round_trip_and_resolve() {
         registry.resolve(&sc).unwrap_or_else(|e| panic!("{path_str}: {e}"));
         n += 1;
     }
-    assert!(n >= 5, "expected the shipped scenario set, found {n} specs");
+    assert!(n >= 17, "expected the shipped scenario set (incl. slo_mixed/slo_overload), found {n} specs");
 }
 
 /// Assert two runs produced identical per-request trajectories: same

@@ -16,6 +16,7 @@ fn random_request(rng: &mut Pcg, id: u64, pred: &mut OraclePredictor) -> Request
     let mut r = Request {
         id,
         task: TaskType::Chat,
+        class: 0,
         arrival: 0,
         prompt_len: rng.range(1, 400) as u32,
         decode_len: rng.range(1, 300) as u32,
@@ -122,6 +123,7 @@ fn preemption_victims_leave_from_the_back_in_order() {
         s.push(Request {
             id,
             task: TaskType::Chat,
+            class: 0,
             arrival: 0,
             prompt_len: 23, // 3 pages each → 9 pages total, pool full
             decode_len: 40,

@@ -13,7 +13,15 @@ use tetri_infer::util::Pcg;
 use tetri_infer::workload::{WorkloadGen, WorkloadKind};
 
 fn req(id: u64, plen: u32, dlen: u32) -> Request {
-    Request { id, task: TaskType::Chat, arrival: 0, prompt_len: plen, decode_len: dlen, predicted: None }
+    Request {
+        id,
+        task: TaskType::Chat,
+        class: 0,
+        arrival: 0,
+        prompt_len: plen,
+        decode_len: dlen,
+        predicted: None,
+    }
 }
 
 #[test]

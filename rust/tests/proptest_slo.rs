@@ -1,0 +1,265 @@
+//! SLO multi-tenancy invariants, property-tested with deterministic
+//! pseudo-random configurations (hand-rolled loops — no proptest crate is
+//! vendored):
+//!
+//!  * admission conservation: per class, `admitted (finished) + shed ==
+//!    arrivals` at end of run, with nothing still queued — for every
+//!    driver, under random class tables, rates, and limits;
+//!  * token buckets never go negative and never bank more than burst +
+//!    rate × elapsed;
+//!  * the SLO prefill policy never inverts tier order within a committed
+//!    scheduler pass;
+//!  * classless scenarios are bit-identical to a single-default-class
+//!    spec with admission off (the golden-parity guarantee, testable
+//!    in-process);
+//!  * the shipped overload spec sheds only the limited low tiers.
+
+use std::collections::HashMap;
+
+use tetri_infer::api::{ClassSpec, Observer, Scenario};
+use tetri_infer::prefill::{PrefillPolicy, PrefillScheduler};
+use tetri_infer::slo::TokenBucket;
+use tetri_infer::types::{ReqMeta, Request, RequestRecord, TaskType, Us};
+use tetri_infer::util::{repo_root, Pcg};
+use tetri_infer::workload::WorkloadKind;
+
+/// Counts arrivals/finishes/sheds per class (the conservation ledger).
+#[derive(Default)]
+struct Ledger {
+    arrivals: HashMap<u8, u64>,
+    finishes: HashMap<u8, u64>,
+    sheds: HashMap<u8, u64>,
+}
+
+impl Observer for Ledger {
+    fn on_arrival(&mut self, _now: Us, req: &Request) {
+        *self.arrivals.entry(req.class).or_default() += 1;
+    }
+
+    fn on_finish(&mut self, _now: Us, rec: &RequestRecord) {
+        *self.finishes.entry(rec.class).or_default() += 1;
+    }
+
+    fn on_shed(&mut self, _now: Us, req: &Request) {
+        *self.sheds.entry(req.class).or_default() += 1;
+    }
+}
+
+fn classed_scenario(seed: u64, driver: &str, rng: &mut Pcg) -> Scenario {
+    let n_classes = 2 + rng.index(3); // 2..=4 classes
+    let mut b = Scenario::builder()
+        .name("slo-prop")
+        .driver(driver)
+        .workload(WorkloadKind::Mixed)
+        .requests(48 + rng.index(48))
+        .rate(8.0 + rng.f64() * 32.0)
+        .seed(seed)
+        .topology(1, 2)
+        .flip_idle_ms(None)
+        .prefill_policy(if rng.f64() < 0.5 { PrefillPolicy::Slo } else { PrefillPolicy::Sjf })
+        .admission(true);
+    for c in 0..n_classes {
+        b = b.class(ClassSpec {
+            name: format!("c{c}"),
+            weight: 0.2 + rng.f64(),
+            tier: c as u8,
+            ttft_ms: if rng.f64() < 0.6 { Some(100.0 + rng.f64() * 2_000.0) } else { None },
+            tpot_ms: if rng.f64() < 0.6 { Some(20.0 + rng.f64() * 300.0) } else { None },
+            // tier 0 stays unlimited (the protected class); higher tiers
+            // randomly draw rate and/or depth limits
+            rate_limit: if c > 0 && rng.f64() < 0.7 { Some(0.5 + rng.f64() * 6.0) } else { None },
+            burst: if c > 0 && rng.f64() < 0.5 { Some(1.0 + rng.f64() * 4.0) } else { None },
+            max_queue: if c > 0 && rng.f64() < 0.5 { Some(4 + rng.index(40) as u64) } else { None },
+        });
+    }
+    b.build()
+}
+
+#[test]
+fn admission_conservation_per_class_across_drivers() {
+    let mut rng = Pcg::new(0x510);
+    for round in 0..8u64 {
+        for driver in ["tetri", "vllm", "hybrid"] {
+            let sc = classed_scenario(round + 1, driver, &mut rng);
+            let total = sc.total_requests() as u64;
+            let mut ledger = Ledger::default();
+            let report = sc.run_with(&mut ledger).expect("driver resolves");
+            let m = &report.metrics;
+            let arrivals: u64 = ledger.arrivals.values().sum();
+            let finishes: u64 = ledger.finishes.values().sum();
+            let sheds: u64 = ledger.sheds.values().sum();
+            assert_eq!(arrivals, total, "{driver}/{round}: every request must arrive once");
+            assert_eq!(
+                finishes + sheds,
+                total,
+                "{driver}/{round}: admitted + shed must conserve arrivals (none still queued)"
+            );
+            assert_eq!(m.shed, sheds, "{driver}/{round}: metrics shed total mismatch");
+            assert_eq!(m.finished, finishes, "{driver}/{round}: metrics finish total mismatch");
+            // per class: arrivals == finishes + sheds, and the metrics'
+            // per-class ledger agrees with the observer's
+            for (class, n) in &ledger.arrivals {
+                let f = ledger.finishes.get(class).copied().unwrap_or(0);
+                let s = ledger.sheds.get(class).copied().unwrap_or(0);
+                assert_eq!(f + s, *n, "{driver}/{round}: class {class} leaked requests");
+                let pc = &m.per_class[*class as usize];
+                assert_eq!((pc.finished, pc.shed), (f, s), "{driver}/{round}: class {class}");
+                assert!(
+                    pc.attained <= pc.finished && pc.ttft_attained <= pc.finished,
+                    "{driver}/{round}: attainment can never exceed finishes"
+                );
+            }
+            // tier 0 declares no limits in this generator: never shed
+            assert_eq!(
+                ledger.sheds.get(&0).copied().unwrap_or(0),
+                0,
+                "{driver}/{round}: the unlimited tier-0 class must never shed"
+            );
+        }
+    }
+}
+
+#[test]
+fn token_bucket_level_bounded_and_admits_at_most_rate() {
+    let mut rng = Pcg::new(7);
+    for _ in 0..64 {
+        let rate = rng.f64() * 20.0;
+        let burst = 1.0 + rng.f64() * 10.0;
+        let mut bucket = TokenBucket::new(rate, burst);
+        let mut now: Us = 0;
+        let mut admitted = 0u64;
+        for _ in 0..400 {
+            now += rng.range(0, 400_000);
+            if bucket.try_take(now) {
+                admitted += 1;
+            }
+            let level = bucket.level_tokens();
+            assert!(level >= 0.0, "level can never go negative");
+            assert!(level <= burst + 1.0, "level can never exceed burst (+1 floor)");
+        }
+        // upper bound: initial burst + refills over the elapsed window
+        // (+1 slack for the integer-µtoken floor)
+        let bound = burst.max(1.0) + rate * now as f64 / 1e6 + 1.0;
+        assert!(
+            (admitted as f64) <= bound,
+            "admitted {admitted} exceeds burst+rate bound {bound} (rate {rate}, burst {burst})"
+        );
+    }
+}
+
+#[test]
+fn slo_prefill_never_inverts_tiers_within_a_pass() {
+    let mut rng = Pcg::new(11);
+    for round in 0..64 {
+        let n = 2 + rng.index(30);
+        // one committed pass: sched_batch covers the whole queue
+        let mut s = PrefillScheduler::new(PrefillPolicy::Slo, n.max(1));
+        let n_classes = 1 + rng.index(4);
+        let table: Vec<(u8, Us)> = (0..n_classes)
+            .map(|c| {
+                let dl = if rng.f64() < 0.5 { rng.range(1_000, 5_000_000) } else { Us::MAX };
+                (c as u8, dl)
+            })
+            .collect();
+        s.set_class_table(table.clone());
+        for id in 0..n as u64 {
+            s.push(ReqMeta {
+                id,
+                task: TaskType::Chat,
+                class: rng.index(n_classes) as u8,
+                arrival: rng.range(0, 1_000_000),
+                prompt_len: rng.range(1, 1024) as u32,
+                predicted: None,
+            });
+        }
+        let mut last: Option<(u8, Us)> = None;
+        while let Some(r) = s.pop() {
+            let (tier, dl) = table[r.class as usize];
+            let key = (tier, r.arrival.saturating_add(dl));
+            if let Some(prev) = last {
+                assert!(
+                    prev.0 <= key.0,
+                    "round {round}: tier inverted within a pass ({prev:?} before {key:?})"
+                );
+                if prev.0 == key.0 {
+                    assert!(prev.1 <= key.1, "round {round}: EDF inverted within a tier");
+                }
+            }
+            last = Some(key);
+        }
+    }
+}
+
+#[test]
+fn classless_run_is_identical_to_single_default_class_admission_off() {
+    // The bit-identity guarantee, testable in-process: a scenario with an
+    // explicit single no-deadline class and admission off takes the same
+    // trajectory — record for record — as the plain classless spec.
+    let plain = Scenario::builder()
+        .workload(WorkloadKind::Mixed)
+        .requests(64)
+        .rate(16.0)
+        .seed(3)
+        .topology(1, 2)
+        .build();
+    let classed = Scenario {
+        classes: vec![ClassSpec::default()],
+        admission: false,
+        ..plain.clone()
+    };
+    for (a, b) in plain.trace().iter().zip(classed.trace().iter()) {
+        assert_eq!(
+            (a.id, a.arrival, a.prompt_len, a.decode_len, a.class),
+            (b.id, b.arrival, b.prompt_len, b.decode_len, b.class),
+            "single-class tables must not perturb the trace"
+        );
+    }
+    for driver in ["tetri", "vllm"] {
+        let a = Scenario { driver: driver.into(), ..plain.clone() }.run().unwrap().metrics;
+        let b = Scenario { driver: driver.into(), ..classed.clone() }.run().unwrap().metrics;
+        assert_eq!(a.makespan_us, b.makespan_us, "{driver}");
+        assert_eq!(a.events, b.events, "{driver}");
+        assert_eq!(a.records.len(), b.records.len(), "{driver}");
+        for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!(
+                (ra.id, ra.arrival, ra.first_token, ra.finished),
+                (rb.id, rb.arrival, rb.first_token, rb.finished),
+                "{driver}: trajectory diverged"
+            );
+        }
+        assert_eq!(b.shed, 0, "{driver}: admission off can never shed");
+        assert_eq!(b.attained, b.finished, "{driver}: no deadlines ⇒ everything attains");
+    }
+}
+
+#[test]
+fn overload_spec_sheds_low_tiers_only_and_reports_attainment() {
+    let path = repo_root().join("scenarios/slo_overload.json");
+    let mut sc = Scenario::load(path.to_str().unwrap()).expect("shipped overload spec parses");
+    sc.clamp_requests(192);
+    let mut ledger = Ledger::default();
+    let report = sc.run_with(&mut ledger).expect("tetri resolves");
+    let m = &report.metrics;
+    // the spike is absorbed by the rate/depth-limited low tiers...
+    assert!(m.shed > 0, "the overload spec must actually shed");
+    assert_eq!(
+        ledger.sheds.get(&0).copied().unwrap_or(0),
+        0,
+        "tier-0 chat declares no limits and must never shed"
+    );
+    assert!(
+        ledger.sheds.get(&2).copied().unwrap_or(0) > 0,
+        "the rate-limited tier-2 batch class must absorb the spike"
+    );
+    // ...and the report carries the per-class SLO lens end-to-end
+    assert_eq!(m.classes.len(), 3);
+    assert!(m.per_class.len() >= 3);
+    let rows = m.class_rows();
+    assert_eq!(rows.len(), 3);
+    assert!(rows[0].contains("chat") && rows[0].contains("attain"), "{}", rows[0]);
+    let j = report.to_json();
+    assert!(j.at(&["metrics", "classes"]).is_some(), "per-class JSON section");
+    assert!(j.at(&["metrics", "goodput_rps"]).is_some());
+    // goodput can never exceed overall finish throughput
+    assert!(m.attained <= m.finished);
+}

@@ -40,6 +40,7 @@ fn prefill_chunk_split_consistency() {
         &tetri_infer::types::Request {
             id: 0,
             task: tetri_infer::types::TaskType::Chat,
+            class: 0,
             arrival: 0,
             prompt_len: 20,
             decode_len: 8,

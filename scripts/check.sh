@@ -28,11 +28,33 @@ fi
 
 # Smoke-run every spec through the CLI: --requests caps flat scenarios
 # and each phase of phased ones, so this stays fast while exercising the
-# full spec → scenario → driver → report pipeline (including the elastic
-# and hybrid instance-engine paths).
+# full spec → scenario → driver → report pipeline (including the elastic,
+# hybrid, and SLO paths). Drift guard: the floor pins the shipped set's
+# minimum size, so a deleted spec (or an empty/mis-globbed directory —
+# set -e already aborts on the unmatched-glob cargo failure) fails the
+# gate instead of rotting unsmoked.
+specs_run=0
 for spec in ../scenarios/*.json; do
   echo "spec smoke: ${spec}"
   cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --requests 8 >/dev/null
+  specs_run=$((specs_run + 1))
+done
+if [ "${specs_run}" -lt 17 ]; then
+  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 17)" >&2
+  exit 1
+fi
+
+# The SLO specs must run under every driver (the apples-to-apples
+# goodput comparison: same trace, same gate logic; queue-depth sheds
+# track each system's own congestion by design): smoke tetri/vllm/hybrid
+# on both, and require the mixed + overload specs to exist by name.
+for spec in ../scenarios/slo_mixed.json ../scenarios/slo_overload.json; do
+  test -f "${spec}" || { echo "missing shipped SLO spec ${spec}" >&2; exit 1; }
+  for drv in tetri vllm hybrid; do
+    echo "slo smoke: ${spec} under ${drv}"
+    cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --driver "${drv}" \
+      --requests 8 --no-baseline >/dev/null
+  done
 done
 
 # Perf-regression canary: a timed 100k-request release-mode run through

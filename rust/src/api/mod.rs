@@ -43,12 +43,17 @@ pub use observer::{
 };
 pub use report::{metrics_json, Report};
 pub use scenario::{
-    class_keys, decode_policy_key, dispatch_key, elastic_keys, granularity_key,
-    parse_decode_policy, parse_dispatch, parse_granularity, parse_link, parse_predictor,
-    parse_prefill_policy, parse_workload, phase_keys, predictor_key, prefill_policy_key,
-    spec_keys, value_vocab, ElasticSpec, LinkSpec, Phase, Scenario, ScenarioBuilder,
+    class_keys, decode_policy_key, dispatch_key, elastic_keys, fault_event_keys, fault_keys,
+    granularity_key, parse_decode_policy, parse_dispatch, parse_granularity, parse_link,
+    parse_predictor, parse_prefill_policy, parse_workload, phase_keys, predictor_key,
+    prefill_policy_key, spec_keys, value_vocab, ElasticSpec, LinkSpec, Phase, Scenario,
+    ScenarioBuilder,
 };
 
+pub use crate::fault::{
+    fault_kind_key, parse_fault_flag, parse_fault_kind, FaultConfig, FaultKind, FaultPlanSpec,
+    FaultSpec,
+};
 pub use crate::slo::{parse_class_flag, ClassSpec};
 
 #[cfg(test)]

@@ -62,6 +62,18 @@ pub trait Observer {
     /// decode instance, paper period ~100 ms). The baseline never fires
     /// this (it has no monitor).
     fn on_monitor(&mut self, _now: Us, _loads: &[DecodeLoad]) {}
+
+    /// A fault fired. `kind` names it (`"crash"`, `"link_out"`,
+    /// `"link_degrade"`, `"straggler"`, `"request_failed"`); `instance` is
+    /// the victim when the fault targets one. Fault-free runs never fire
+    /// this.
+    fn on_fault(&mut self, _now: Us, _kind: &'static str, _instance: Option<usize>) {}
+
+    /// The system recovered from a fault: `"restart"` (a crashed instance
+    /// came back), `"requeue"` (a lost request re-entered the prefill
+    /// queue with backoff), `"resend"` (an in-flight KV transfer hit a
+    /// link outage and was re-sent). Fault-free runs never fire this.
+    fn on_recovery(&mut self, _now: Us, _kind: &'static str, _instance: Option<usize>) {}
 }
 
 /// The do-nothing observer: what `run_cluster`/`run_baseline` attach.
@@ -136,6 +148,10 @@ pub struct TimelineObserver {
     pub sheds: u64,
     /// Requests that finished outside their class SLO.
     pub violations: u64,
+    /// Fault injections delivered (chaos runs only).
+    pub faults: u64,
+    /// Recovery actions taken: restarts, requeues, transfer re-sends.
+    pub recoveries: u64,
 }
 
 impl TimelineObserver {
@@ -216,6 +232,8 @@ impl TimelineObserver {
             ("scale_downs", Json::from(self.scale_downs)),
             ("sheds", Json::from(self.sheds)),
             ("violations", Json::from(self.violations)),
+            ("faults", Json::from(self.faults)),
+            ("recoveries", Json::from(self.recoveries)),
             ("spans", Json::from(spans)),
             ("queue", Json::from(queue)),
         ])
@@ -286,6 +304,14 @@ impl Observer for TimelineObserver {
         self.violations += 1;
     }
 
+    fn on_fault(&mut self, _now: Us, _kind: &'static str, _instance: Option<usize>) {
+        self.faults += 1;
+    }
+
+    fn on_recovery(&mut self, _now: Us, _kind: &'static str, _instance: Option<usize>) {
+        self.recoveries += 1;
+    }
+
     fn on_monitor(&mut self, now: Us, loads: &[DecodeLoad]) {
         for l in loads {
             self.queue.push(QueueSample {
@@ -350,6 +376,8 @@ mod tests {
             first_token: 10,
             finished: 20,
             predicted: None,
+            retries: 0,
+            recovered: false,
         }
     }
 
@@ -373,7 +401,11 @@ mod tests {
         };
         t.on_shed(510, &shed_req);
         t.on_violation(520, &rec(9), true, false);
+        t.on_fault(530, "crash", Some(0));
+        t.on_recovery(540, "restart", Some(0));
+        t.on_recovery(550, "requeue", None);
         assert_eq!((t.sheds, t.violations), (1, 1));
+        assert_eq!((t.faults, t.recoveries), (1, 2));
         assert_eq!(t.chunks, 2);
         assert_eq!(t.pad_tokens, 12);
         assert_eq!(t.busy_us(0), 150, "flip spans are not busy compute");

@@ -59,7 +59,17 @@ fn metrics_json_with(m: &RunMetrics, s: &RunSummaries) -> Json {
         ("shed", Json::from(m.shed)),
         ("attained", Json::from(m.attained)),
         ("goodput_rps", Json::from(s.goodput_rps)),
+        ("failed", Json::from(m.failed)),
+        ("recovered", Json::from(m.recovered)),
+        ("faults_injected", Json::from(m.faults_injected)),
+        ("transfer_resends", Json::from(m.transfer_resends)),
+        ("degraded_ms", Json::from(m.degraded_us as f64 / 1e3)),
     ];
+    // recovery-latency summary, only for runs that actually lost requests
+    // to faults (fault-free reports stay as compact as before)
+    if m.recovered > 0 {
+        pairs.push(("recovery_ms", summary_json(&m.recovery_hist.summary_scaled(1e-3))));
+    }
     // per-class SLO section, only for runs that declared a class table
     // (classless reports stay exactly as compact as before, plus the
     // three scalar fields above)
@@ -193,6 +203,8 @@ mod tests {
                     first_token: 1_000,
                     finished: (jct_ms * 1e3) as u64,
                     predicted: None,
+                    retries: 0,
+                    recovered: false,
                 }],
                 busy_us: vec![(resource_s * 1e6) as u64],
                 alive_us: vec![(resource_s * 2e6) as u64],

@@ -20,6 +20,7 @@ use crate::coordinator::{ClusterConfig, FlipConfig, PredictorMode};
 use crate::costmodel::CostModel;
 use crate::decode::DecodePolicy;
 use crate::fabric::Link;
+use crate::fault::{fault_kind_key, parse_fault_kind, FaultKind, FaultPlanSpec, FaultSpec};
 use crate::prefill::{DispatchPolicy, PrefillPolicy};
 use crate::slo::{ClassSpec, SloConfig, MAX_CLASSES};
 use crate::types::{Request, Us};
@@ -294,6 +295,12 @@ pub struct Scenario {
     /// Run the deterministic entry admission gate (token buckets +
     /// queue-depth sheds per class). Off by default.
     pub admission: bool,
+    /// Deterministic fault injection: chaos event schedule + recovery
+    /// knobs (retry budget, backoff, degraded-mode watermark). `None` —
+    /// the default — runs fault-free and is bit-identical to pre-fault
+    /// builds; `Some` with an empty event list is fault-free too (the
+    /// parity golden pins both).
+    pub faults: Option<FaultPlanSpec>,
 }
 
 impl Default for Scenario {
@@ -330,6 +337,7 @@ impl Default for Scenario {
             phases: Vec::new(),
             classes: Vec::new(),
             admission: false,
+            faults: None,
         }
     }
 }
@@ -366,6 +374,7 @@ const KNOWN_KEYS: &[&str] = &[
     "phases",
     "classes",
     "admission",
+    "faults",
 ];
 
 const PHASE_KEYS: &[&str] = &["workload", "requests", "rate", "start_ms"];
@@ -375,6 +384,10 @@ const ELASTIC_KEYS: &[&str] =
 
 const CLASS_KEYS: &[&str] =
     &["name", "weight", "tier", "ttft_ms", "tpot_ms", "rate_limit", "burst", "max_queue"];
+
+const FAULT_KEYS: &[&str] = &["events", "retry_max", "backoff_ms", "watermark"];
+
+const FAULT_EVENT_KEYS: &[&str] = &["kind", "at_ms", "instance", "down_ms", "factor"];
 
 /// Every key the JSON spec format accepts — single source of truth shared
 /// with the CLI's `--list` output.
@@ -396,6 +409,17 @@ pub fn elastic_keys() -> &'static [&'static str] {
 /// `--class` CLI flag).
 pub fn class_keys() -> &'static [&'static str] {
     CLASS_KEYS
+}
+
+/// Keys of the spec's `faults` object.
+pub fn fault_keys() -> &'static [&'static str] {
+    FAULT_KEYS
+}
+
+/// Keys of one entry in the spec's `faults.events` array (same spellings
+/// as the `--fault` CLI flag).
+pub fn fault_event_keys() -> &'static [&'static str] {
+    FAULT_EVENT_KEYS
 }
 
 /// Every recognized value spelling per enum-valued spec key, generated
@@ -452,6 +476,7 @@ pub fn value_vocab() -> Vec<(&'static str, Vec<&'static str>)> {
                 .map(|g| granularity_key(*g))
                 .collect(),
         ),
+        ("fault_kind", FaultKind::ALL.iter().map(|k| fault_kind_key(*k)).collect()),
     ]
 }
 
@@ -604,6 +629,7 @@ impl Scenario {
             elastic: self.elastic.map(ElasticSpec::to_config),
             retain_records: self.records,
             slo: self.slo_config(),
+            fault: self.faults.as_ref().map(FaultPlanSpec::to_config),
             cost,
             seed: self.seed,
             ..Default::default()
@@ -628,6 +654,7 @@ impl Scenario {
             max_batch: self.prefill_batch as u32,
             retain_records: self.records,
             slo: self.slo_config(),
+            fault: self.faults.as_ref().map(FaultPlanSpec::to_config),
             cost,
             seed: self.seed,
             ..Default::default()
@@ -708,6 +735,37 @@ impl Scenario {
                     ("decode_up_jobs", Json::from(el.decode_up_jobs)),
                     ("down_idle_ms", Json::from(el.down_idle_ms)),
                     ("min_per_role", Json::from(el.min_per_role)),
+                ]),
+            ));
+        }
+        if let Some(fp) = &self.faults {
+            let events: Vec<Json> = fp
+                .events
+                .iter()
+                .map(|ev| {
+                    let mut pairs: Vec<(&str, Json)> = vec![
+                        ("kind", Json::from(fault_kind_key(ev.kind))),
+                        ("at_ms", Json::from(ev.at_ms)),
+                    ];
+                    if let Some(i) = ev.instance {
+                        pairs.push(("instance", Json::from(i)));
+                    }
+                    if let Some(d) = ev.down_ms {
+                        pairs.push(("down_ms", Json::from(d)));
+                    }
+                    if let Some(f) = ev.factor {
+                        pairs.push(("factor", Json::from(f)));
+                    }
+                    Json::obj(pairs)
+                })
+                .collect();
+            pairs.push((
+                "faults",
+                Json::obj([
+                    ("events", Json::from(events)),
+                    ("retry_max", Json::from(u64::from(fp.retry_max))),
+                    ("backoff_ms", Json::from(fp.backoff_ms)),
+                    ("watermark", Json::from(fp.watermark)),
                 ]),
             ));
         }
@@ -849,6 +907,80 @@ impl Scenario {
                     }
                 }
                 "admission" => sc.admission = want_bool(v, key)?,
+                "faults" => {
+                    sc.faults = match v {
+                        Json::Null => None,
+                        _ => {
+                            let fobj =
+                                v.as_obj().ok_or("spec key 'faults' must be an object or null")?;
+                            for fk in fobj.keys() {
+                                if !FAULT_KEYS.contains(&fk.as_str()) {
+                                    return Err(format!(
+                                        "unknown faults key '{fk}' (known: {})",
+                                        FAULT_KEYS.join(", ")
+                                    ));
+                                }
+                            }
+                            let mut fp = FaultPlanSpec::default();
+                            if let Some(x) = v.get("retry_max") {
+                                fp.retry_max = want_num(x, "retry_max")? as u32;
+                            }
+                            if let Some(x) = v.get("backoff_ms") {
+                                fp.backoff_ms = want_num(x, "backoff_ms")?;
+                            }
+                            if let Some(x) = v.get("watermark") {
+                                fp.watermark = want_num(x, "watermark")?;
+                            }
+                            if let Some(evs) = v.get("events") {
+                                let arr = evs
+                                    .as_arr()
+                                    .ok_or("faults key 'events' must be an array")?;
+                                for ej in arr {
+                                    let eobj = ej
+                                        .as_obj()
+                                        .ok_or("each fault event must be a JSON object")?;
+                                    for ek in eobj.keys() {
+                                        if !FAULT_EVENT_KEYS.contains(&ek.as_str()) {
+                                            return Err(format!(
+                                                "unknown fault event key '{ek}' (known: {})",
+                                                FAULT_EVENT_KEYS.join(", ")
+                                            ));
+                                        }
+                                    }
+                                    let kind = parse_fault_kind(want_str(
+                                        ej.get("kind").ok_or("fault event missing 'kind'")?,
+                                        "kind",
+                                    )?)?;
+                                    let at_ms = want_num(
+                                        ej.get("at_ms").ok_or("fault event missing 'at_ms'")?,
+                                        "at_ms",
+                                    )?;
+                                    let instance = ej
+                                        .get("instance")
+                                        .map(|x| want_num(x, "instance").map(|n| n as usize))
+                                        .transpose()?;
+                                    let down_ms = ej
+                                        .get("down_ms")
+                                        .map(|x| want_num(x, "down_ms"))
+                                        .transpose()?;
+                                    let factor = ej
+                                        .get("factor")
+                                        .map(|x| want_num(x, "factor"))
+                                        .transpose()?;
+                                    fp.events.push(FaultSpec {
+                                        kind,
+                                        at_ms,
+                                        instance,
+                                        down_ms,
+                                        factor,
+                                    });
+                                }
+                            }
+                            fp.validate()?;
+                            Some(fp)
+                        }
+                    }
+                }
                 "classes" => {
                     let arr = v.as_arr().ok_or("spec key 'classes' must be an array")?;
                     if arr.len() > MAX_CLASSES {
@@ -983,7 +1115,7 @@ impl Scenario {
             "scenario{}: driver={} {} prefill={} decode={} coupled={} link={} prefill_policy={} \
              decode_policy={} dispatch={} predictor={} acc={} chunk={} sched_batch={} \
              max_batch={} flip_idle_ms={} elastic={} transfer={} srtf={} prefill_batch={} \
-             hbm_kv_bytes={} records={} classes={} admission={} seed={} trace_seed={}",
+             hbm_kv_bytes={} records={} classes={} admission={} faults={} seed={} trace_seed={}",
             if self.name.is_empty() { String::new() } else { format!(" '{}'", self.name) },
             self.driver,
             phases,
@@ -1024,6 +1156,18 @@ impl Scenario {
                 format!("[{}]", names.join(","))
             },
             self.admission,
+            self.faults
+                .as_ref()
+                .map(|fp| {
+                    format!(
+                        "{}ev,retry{},backoff{}ms,wm{}",
+                        fp.events.len(),
+                        fp.retry_max,
+                        fp.backoff_ms,
+                        fp.watermark
+                    )
+                })
+                .unwrap_or_else(|| "off".into()),
             self.seed,
             self.trace_seed,
         )
@@ -1194,6 +1338,19 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Replace the whole fault plan (`None` = fault-free).
+    pub fn faults(mut self, v: Option<FaultPlanSpec>) -> Self {
+        self.sc.faults = v;
+        self
+    }
+
+    /// Append one fault event, creating a default-knobbed plan on first
+    /// use (the builder mirror of a repeated `--fault` CLI flag).
+    pub fn fault(mut self, ev: FaultSpec) -> Self {
+        self.sc.faults.get_or_insert_with(FaultPlanSpec::default).events.push(ev);
+        self
+    }
+
     /// Finish the scenario. Panics when more than
     /// [`MAX_CLASSES`](crate::slo::MAX_CLASSES) classes were declared —
     /// class ids travel as `u8`, and a silent wraparound would merge the
@@ -1303,7 +1460,7 @@ mod tests {
     #[test]
     fn value_vocab_round_trips_through_the_parsers() {
         let vocab = value_vocab();
-        assert_eq!(vocab.len(), 7, "one vocab entry per enum-valued spec key");
+        assert_eq!(vocab.len(), 8, "one vocab entry per enum-valued spec key");
         for (key, vals) in vocab {
             assert!(!vals.is_empty(), "{key}: empty vocabulary");
             for v in vals {
@@ -1315,6 +1472,7 @@ mod tests {
                     "dispatch" => parse_dispatch(v).is_ok(),
                     "predictor" => parse_predictor(v).is_ok(),
                     "transfer" => parse_granularity(v).is_ok(),
+                    "fault_kind" => parse_fault_kind(v).is_ok(),
                     other => panic!("vocab names unknown spec key '{other}'"),
                 };
                 assert!(ok, "{key}: advertised value '{v}' must parse");
@@ -1527,10 +1685,60 @@ mod tests {
     #[test]
     fn summary_line_mentions_every_knob_family() {
         let line = Scenario::default().summary_line();
-        for needle in
-            ["driver=", "workload=", "prefill=", "link=", "dispatch=", "seed=", "flip_idle_ms="]
-        {
+        for needle in [
+            "driver=",
+            "workload=",
+            "prefill=",
+            "link=",
+            "dispatch=",
+            "seed=",
+            "flip_idle_ms=",
+            "faults=off",
+        ] {
             assert!(line.contains(needle), "summary missing {needle}: {line}");
         }
+    }
+
+    #[test]
+    fn faulted_scenario_round_trips_and_resolves() {
+        let sc = Scenario::builder()
+            .name("chaos")
+            .fault(FaultSpec { instance: Some(2), down_ms: Some(300.0), ..FaultSpec::new(FaultKind::Restart, 150.0) })
+            .fault(FaultSpec::new(FaultKind::LinkOut, 400.0))
+            .fault(FaultSpec { factor: Some(3.0), ..FaultSpec::new(FaultKind::Straggler, 50.0) })
+            .build();
+        let s = sc.to_json().dump();
+        assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+        // the resolved configs carry the µs events, sorted by fire time
+        let fc = sc.cluster_config().fault.unwrap();
+        assert_eq!(fc.events.len(), 3);
+        assert_eq!(fc.events[0].at, 50_000, "events sort by fire time");
+        assert_eq!(fc.events[1].at, 150_000);
+        assert_eq!(fc.events[1].instance, Some(2));
+        assert_eq!(fc.events[1].down, 300_000);
+        assert_eq!(fc.retry_max, 4);
+        assert_eq!(fc.backoff_us, 25_000);
+        assert_eq!(sc.baseline_config().fault.unwrap(), fc, "both drivers see one plan");
+        // the startup line surfaces the plan
+        assert!(sc.summary_line().contains("faults=3ev,retry4"), "{}", sc.summary_line());
+    }
+
+    #[test]
+    fn fault_spec_parsing_rejects_bad_shapes() {
+        assert!(Scenario::from_str(r#"{"faults": {"events": [{"at_ms": 5}]}}"#).is_err(), "kind required");
+        assert!(Scenario::from_str(r#"{"faults": {"events": [{"kind": "crash"}]}}"#).is_err(), "at_ms required");
+        assert!(Scenario::from_str(r#"{"faults": {"events": [{"kind": "meteor", "at_ms": 5}]}}"#).is_err());
+        assert!(Scenario::from_str(r#"{"faults": {"events": [{"kind": "crash", "at_ms": 5, "dwn_ms": 9}]}}"#).is_err());
+        assert!(Scenario::from_str(r#"{"faults": {"evnts": []}}"#).is_err());
+        assert!(Scenario::from_str(r#"{"faults": {"watermark": 1.5}}"#).is_err(), "validated");
+        assert!(Scenario::from_str(r#"{"faults": {"backoff_ms": 0}}"#).is_err(), "validated");
+        assert!(Scenario::from_str(r#"{"faults": 7}"#).is_err());
+        // null and a knobs-only object are both accepted
+        assert!(Scenario::from_str(r#"{"faults": null}"#).unwrap().faults.is_none());
+        let sc = Scenario::from_str(r#"{"faults": {"retry_max": 2}}"#).unwrap();
+        let fp = sc.faults.unwrap();
+        assert_eq!(fp.retry_max, 2);
+        assert!(fp.events.is_empty());
+        assert_eq!(fp.backoff_ms, 25.0, "defaults fill the rest");
     }
 }

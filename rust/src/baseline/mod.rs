@@ -18,6 +18,7 @@
 
 use crate::api::{NullObserver, Observer};
 use crate::costmodel::CostModel;
+use crate::fault::{scale_dur, FaultConfig, FaultPlan, Injection};
 use crate::instance::CoupledInst;
 use crate::metrics::RunMetrics;
 use crate::slo::{AdmissionGate, SloConfig};
@@ -52,6 +53,11 @@ pub struct BaselineConfig {
     /// trace, queue-depth sheds track this system's own congestion —
     /// see `slo::AdmissionGate`).
     pub slo: SloConfig,
+    /// Deterministic fault injection (see `ClusterConfig::fault` — the
+    /// same chaos schedule runs against coupled instances; link events
+    /// are no-ops here because the baseline ships no KV). `None` runs
+    /// fault-free, bit-identical to pre-fault builds.
+    pub fault: Option<FaultConfig>,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -65,6 +71,7 @@ impl Default for BaselineConfig {
             retain_records: true,
             macro_step: true,
             slo: SloConfig::default(),
+            fault: None,
             cost: CostModel::default(),
             seed: 0,
         }
@@ -81,6 +88,23 @@ pub struct BaselineCluster {
     /// SLO admission gate (`None` = admission off) — the same
     /// deterministic logic the cluster entry router runs.
     gate: Option<AdmissionGate>,
+    /// Deterministic chaos schedule (`None` = fault-free; every fault
+    /// path below is gated on it).
+    plan: Option<FaultPlan>,
+    /// Per-instance incarnation counters: a crash bumps the epoch so
+    /// in-flight `CoupledIterDone` events go inert (the pool-less mirror
+    /// of `instance::InstancePool`'s epochs).
+    epochs: Vec<u32>,
+    /// Whether each slot currently serves (false = crashed).
+    alive: Vec<bool>,
+    /// Crashed slots with a scheduled restart — capacity that will
+    /// return, which recovery waits for instead of burning retry budget.
+    restarts_pending: usize,
+    /// Swap tallies of crashed incarnations (their state objects are
+    /// replaced wholesale at crash).
+    swapped_graveyard: u64,
+    /// When the fleet dropped below the plan's capacity watermark.
+    degraded_since: Option<Us>,
 }
 
 impl BaselineCluster {
@@ -92,12 +116,19 @@ impl BaselineCluster {
         core.metrics.retain_records = cfg.retain_records;
         core.metrics.set_classes(cfg.slo.classes.clone());
         let gate = AdmissionGate::from_config(&cfg.slo);
+        let plan = cfg.fault.clone().map(|fc| FaultPlan::new(fc, cfg.seed));
         BaselineCluster {
             cfg,
             core,
             insts,
             arrivals_pending: 0,
             gate,
+            plan,
+            epochs: vec![0; n],
+            alive: vec![true; n],
+            restarts_pending: 0,
+            swapped_graveyard: 0,
+            degraded_since: None,
         }
     }
 
@@ -120,28 +151,81 @@ impl BaselineCluster {
     }
 
     fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        // One admission decision per request, at its first delivery —
+        // fault retries re-enter here and must not re-charge the gate.
+        let first_delivery = !self.core.requests[slot as usize].seen;
         self.core.note_arrival(slot, obs);
-        // One admission decision per request (the baseline never
-        // re-delivers arrivals, but the contract matches the cluster's).
-        if let Some(gate) = self.gate.as_mut() {
-            let req = self.core.requests[slot as usize].req;
-            let in_flight = (self.core.in_flight() - 1) as u64;
-            if !gate.admits(req.class, self.core.now(), in_flight) {
-                self.core.shed(slot, obs);
-                self.note_delivered(obs);
-                return;
+        if first_delivery {
+            if let Some(gate) = self.gate.as_mut() {
+                let req = self.core.requests[slot as usize].req;
+                let in_flight = (self.core.in_flight() - 1) as u64;
+                if !gate.admits(req.class, self.core.now(), in_flight) {
+                    self.core.shed(slot, obs);
+                    self.note_delivered(obs);
+                    return;
+                }
+            }
+            // Graceful degradation: below the fault plan's watermark,
+            // best-effort tiers shed at the door (see the cluster's twin).
+            if self.degraded_since.is_some() {
+                let class = self.core.requests[slot as usize].req.class;
+                let tier =
+                    self.cfg.slo.classes.get(class as usize).map(|c| c.tier).unwrap_or(0);
+                if tier != 0 {
+                    self.core.shed(slot, obs);
+                    self.note_delivered(obs);
+                    return;
+                }
             }
         }
         // Least-loaded coupled instance (waiting prompts + resident jobs)
-        // — O(n_instances) over maintained counters.
-        let i = (0..self.insts.len())
-            .min_by_key(|&i| self.insts[i].route_load())
-            .unwrap();
+        // — O(n_instances) over maintained counters. Crashed slots are
+        // skipped; fault-free every slot is alive and the scan is the
+        // legacy one.
+        let target = (0..self.insts.len())
+            .filter(|&i| self.alive[i])
+            .min_by_key(|&i| self.insts[i].route_load());
+        let Some(i) = target else {
+            // Every instance is down. With a restart coming, park the
+            // arrival until capacity returns; permanently dead fleets
+            // burn retry budget so the request fails bounded instead of
+            // looping forever.
+            if self.restarts_pending > 0 {
+                let delay = self.plan.as_ref().map(|p| p.backoff_us(1)).unwrap_or(100_000);
+                self.core.queue.schedule_in(delay, Event::Arrival(slot));
+            } else {
+                self.requeue_lost(slot, obs);
+            }
+            return;
+        };
         let plen = self.core.requests[slot as usize].req.prompt_len;
         self.insts[i].enqueue(slot, plen);
         if !self.note_delivered(obs) {
             self.try_start(i, obs);
         }
+    }
+
+    /// Re-queue a request lost to a fault (or stranded by a dead fleet):
+    /// charge a retry against the plan's budget, re-enter the arrival
+    /// router after exponential backoff, or fail once the budget is
+    /// spent. All callers reach here with the slot still counted in
+    /// `arrivals_pending` (crash harvest re-adds it first).
+    fn requeue_lost(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        let now = self.core.now();
+        let n = self.core.note_lost(slot, now);
+        let (retry_max, backoff) = match self.plan.as_ref() {
+            Some(p) => (p.retry_max(), p.backoff_us(n)),
+            None => return, // unreachable: fault paths require a plan
+        };
+        if n > retry_max {
+            // leaves the global queue without ever enqueuing — unblock
+            // partial batches like a shed
+            self.note_delivered(obs);
+            self.core.fail(slot, obs);
+            return;
+        }
+        self.core.queue.schedule_in(backoff, Event::Retry(slot));
+        obs.on_recovery(now, "requeue", None);
     }
 
     /// One arrival left the global queue (routed or shed). When it was
@@ -168,8 +252,14 @@ impl BaselineCluster {
     /// each observer hook fires only when its side is non-empty. Returns
     /// the iteration's end time, or `None` when there is nothing to do.
     fn start_iteration(&mut self, i: usize, now: Us, obs: &mut dyn Observer) -> Option<Us> {
+        if !self.alive[i] {
+            return None;
+        }
         let cost = self.cfg.cost;
         let more_arrivals = self.arrivals_pending > 0;
+        // straggler windows are pure functions of `now`: macro-stepped and
+        // per-iteration runs price them identically
+        let slow = self.plan.as_ref().map(|p| p.slowdown(i, now)).unwrap_or(1.0);
         let st = self.insts[i].begin_iteration(
             &self.core.requests,
             &cost,
@@ -178,20 +268,22 @@ impl BaselineCluster {
             more_arrivals,
             now,
         )?;
-        self.core.metrics.busy_us[i] += st.dur;
+        let dur = scale_dur(st.dur, slow);
+        self.core.metrics.busy_us[i] += dur;
         if st.prefill_tokens > 0 {
-            obs.on_chunk(now, i, st.prefill_tokens, 0, st.dur);
+            obs.on_chunk(now, i, st.prefill_tokens, 0, dur);
         }
         if st.batch > 0 {
-            obs.on_decode_iter(now, i, st.batch, st.kv_tokens, st.dur);
+            obs.on_decode_iter(now, i, st.batch, st.kv_tokens, dur);
         }
-        Some(now + st.dur)
+        Some(now + dur)
     }
 
     fn try_start(&mut self, i: usize, obs: &mut dyn Observer) {
         let now = self.core.now();
         if let Some(end) = self.start_iteration(i, now, obs) {
-            self.core.queue.schedule_at(end, Event::CoupledIterDone { instance: i });
+            let epoch = self.epochs[i];
+            self.core.queue.schedule_at(end, Event::CoupledIterDone { instance: i, epoch });
         }
     }
 
@@ -219,7 +311,12 @@ impl BaselineCluster {
     /// while nothing external can land in the window, event-for-event
     /// identical to per-iteration stepping (parity-tested in
     /// tests/golden.rs).
-    fn on_iter_done(&mut self, i: usize, obs: &mut dyn Observer) {
+    fn on_iter_done(&mut self, i: usize, epoch: u32, obs: &mut dyn Observer) {
+        if self.epochs[i] != epoch {
+            // crashed mid-iteration: the batch was harvested at crash
+            // time; nothing may land on the restarted incarnation
+            return;
+        }
         let macro_on = self.cfg.macro_step;
         macro_chain(
             self,
@@ -227,8 +324,100 @@ impl BaselineCluster {
             obs,
             |s, now, obs| s.close_iteration(i, now, obs),
             |s, now, obs| s.start_iteration(i, now, obs),
-            |s, end| s.core.queue.schedule_at(end, Event::CoupledIterDone { instance: i }),
+            |s, end| {
+                let epoch = s.epochs[i];
+                s.core.queue.schedule_at(end, Event::CoupledIterDone { instance: i, epoch })
+            },
         );
+    }
+
+    /// Deliver fault-plan event `k`. Link events open their windows in
+    /// the plan but are otherwise no-ops — the coupled baseline ships no
+    /// KV over any fabric (its observer hook still fires so chaos
+    /// timelines line up across drivers).
+    fn on_fault_event(&mut self, k: usize, obs: &mut dyn Observer) {
+        let now = self.core.now();
+        let live: Vec<usize> = (0..self.insts.len()).filter(|&i| self.alive[i]).collect();
+        let inj = match self.plan.as_mut() {
+            Some(p) => p.fire(k, now, &live),
+            None => return,
+        };
+        match inj {
+            Injection::Skipped => {}
+            Injection::Crash { instance, restart_at } => {
+                self.core.metrics.faults_injected += 1;
+                self.crash_instance(instance, obs);
+                if let Some(at) = restart_at {
+                    self.restarts_pending += 1;
+                    self.core.queue.schedule_at(at, Event::Restart { instance });
+                }
+            }
+            Injection::Link { outage, .. } => {
+                self.core.metrics.faults_injected += 1;
+                obs.on_fault(now, if outage { "link_out" } else { "link_degrade" }, None);
+            }
+            Injection::Straggle { instance, .. } => {
+                self.core.metrics.faults_injected += 1;
+                obs.on_fault(now, "straggler", Some(instance));
+            }
+        }
+    }
+
+    /// Abrupt instance failure: harvest every request whose state dies
+    /// with the incarnation, replace the state object wholesale (no KV or
+    /// load tally survives on the dead slot), bump the epoch, and
+    /// re-queue or fail the harvested requests.
+    fn crash_instance(&mut self, i: usize, obs: &mut dyn Observer) {
+        let now = self.core.now();
+        let lost = self.insts[i].harvest_crashed();
+        // the dead incarnation's swap tally would die with the object
+        self.swapped_graveyard += self.insts[i].kv.swapped_out_tokens;
+        let pages = (self.cfg.cost.kv_capacity_tokens() / 16) as u32;
+        self.insts[i] = CoupledInst::new(pages);
+        self.alive[i] = false;
+        self.epochs[i] += 1;
+        obs.on_fault(now, "crash", Some(i));
+        for slot in lost {
+            // harvested requests had left the global queue; they re-enter
+            // it, so they count as pending again until re-delivered
+            self.arrivals_pending += 1;
+            self.requeue_lost(slot, obs);
+        }
+        self.check_degraded(obs);
+    }
+
+    /// A crashed slot's downtime elapsed: it serves again (the fresh
+    /// state object was installed at crash time, on the new epoch).
+    fn on_restart(&mut self, i: usize, obs: &mut dyn Observer) {
+        if self.alive[i] {
+            return; // duplicate restart event
+        }
+        self.alive[i] = true;
+        self.restarts_pending = self.restarts_pending.saturating_sub(1);
+        obs.on_recovery(self.core.now(), "restart", Some(i));
+        self.check_degraded(obs);
+        self.try_start(i, obs);
+    }
+
+    /// Re-evaluate degraded mode against the plan's capacity watermark
+    /// (called only at crash/restart — capacity moves nowhere else).
+    fn check_degraded(&mut self, obs: &mut dyn Observer) {
+        let Some(watermark) = self.plan.as_ref().map(|p| p.watermark()) else { return };
+        let now = self.core.now();
+        let live = self.alive.iter().filter(|a| **a).count();
+        let degraded = (live as f64) < watermark * self.insts.len() as f64;
+        match (degraded, self.degraded_since) {
+            (true, None) => {
+                self.degraded_since = Some(now);
+                obs.on_fault(now, "degraded", None);
+            }
+            (false, Some(since)) => {
+                self.core.metrics.degraded_us += now.saturating_sub(since);
+                self.degraded_since = None;
+                obs.on_recovery(now, "capacity_restored", None);
+            }
+            _ => {}
+        }
     }
 }
 
@@ -244,18 +433,31 @@ impl EngineHost for BaselineCluster {
     fn begin(&mut self, _obs: &mut dyn Observer) {
         // arrivals stream in lazily: start from the source's total
         self.arrivals_pending = self.core.total_expected;
+        if let Some(plan) = &self.plan {
+            for (k, ev) in plan.events().iter().enumerate() {
+                self.core.queue.schedule_at(ev.at, Event::Fault(k));
+            }
+        }
     }
 
     fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {
         match ev {
             Event::Arrival(slot) => self.on_arrival(slot, obs),
-            Event::CoupledIterDone { instance } => self.on_iter_done(instance, obs),
+            Event::CoupledIterDone { instance, epoch } => self.on_iter_done(instance, epoch, obs),
+            Event::Fault(k) => self.on_fault_event(k, obs),
+            Event::Restart { instance } => self.on_restart(instance, obs),
+            Event::Retry(slot) => self.on_arrival(slot, obs),
             _ => unreachable!("unexpected event in baseline"),
         }
     }
 
     fn end(&mut self, _obs: &mut dyn Observer) {
         self.core.stamp_alive_full_run();
+        if let Some(since) = self.degraded_since.take() {
+            let now = self.core.now();
+            self.core.metrics.degraded_us += now.saturating_sub(since);
+        }
+        self.core.metrics.swapped_tokens += self.swapped_graveyard;
         for inst in &self.insts {
             self.core.metrics.swapped_tokens += inst.kv.swapped_out_tokens;
         }
@@ -320,5 +522,81 @@ mod tests {
             jct_mixed_lights > jct_light_only * 1.3,
             "light requests should suffer from heavy co-runners: {jct_light_only} vs {jct_mixed_lights}"
         );
+    }
+
+    fn fault_cfg(events: Vec<crate::fault::FaultEvent>) -> FaultConfig {
+        FaultConfig { events, retry_max: 4, backoff_us: 25_000, watermark: 0.5 }
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_plan() {
+        let mut gen = WorkloadGen::new(11);
+        let trace = gen.trace(WorkloadKind::Mixed, 48, 30.0, 0);
+        let base = run_baseline(BaselineConfig::default(), trace.clone());
+        let faulted = run_baseline(
+            BaselineConfig { fault: Some(fault_cfg(Vec::new())), ..Default::default() },
+            trace,
+        );
+        assert_eq!(base.makespan_us, faulted.makespan_us);
+        assert_eq!(base.events, faulted.events);
+        assert_eq!(base.records.len(), faulted.records.len());
+        for (a, b) in base.records.iter().zip(faulted.records.iter()) {
+            assert_eq!(a.finished, b.finished, "req {} diverged", a.id);
+            assert_eq!(a.first_token, b.first_token);
+            assert_eq!(a.retries, 0);
+            assert!(!a.recovered);
+        }
+    }
+
+    #[test]
+    fn coupled_crash_with_restart_recovers_and_conserves() {
+        use crate::fault::{FaultEvent, FaultKind};
+        let mut gen = WorkloadGen::new(13);
+        let trace = gen.trace(WorkloadKind::Mixed, 64, 0.0, 0);
+        let ev = FaultEvent {
+            at: 100_000,
+            kind: FaultKind::Restart,
+            instance: Some(1),
+            down: 400_000,
+            factor: 1.0,
+        };
+        let m = run_baseline(
+            BaselineConfig {
+                n_instances: 2,
+                fault: Some(fault_cfg(vec![ev])),
+                ..Default::default()
+            },
+            trace,
+        );
+        assert_eq!(m.faults_injected, 1);
+        assert_eq!(m.finished + m.shed + m.failed, 64, "conservation");
+        assert_eq!(m.failed, 0, "a surviving instance plus a restart loses nothing");
+        assert!(m.records.iter().any(|r| r.recovered), "someone must have re-entered");
+        assert!(m.records.iter().all(|r| r.retries <= 4));
+    }
+
+    #[test]
+    fn permanent_crash_of_whole_fleet_fails_bounded() {
+        use crate::fault::{FaultEvent, FaultKind};
+        let mut gen = WorkloadGen::new(17);
+        let trace = gen.trace(WorkloadKind::Lpld, 24, 50.0, 0);
+        let ev = FaultEvent {
+            at: 50_000,
+            kind: FaultKind::Crash,
+            instance: Some(0),
+            down: 0,
+            factor: 1.0,
+        };
+        let m = run_baseline(
+            BaselineConfig { n_instances: 1, fault: Some(fault_cfg(vec![ev])), ..Default::default() },
+            trace,
+        );
+        // the run terminates (we got metrics back) and every request is
+        // accounted for: finished before the crash, or failed after
+        // burning its retry budget
+        assert_eq!(m.finished + m.shed + m.failed, 24, "conservation");
+        assert!(m.failed >= 1, "a dead fleet must fail the stragglers");
+        assert!(m.degraded_us > 0, "0 of 1 live is below any watermark");
+        assert!(m.records.iter().all(|r| r.retries <= 4 + 1));
     }
 }

@@ -31,6 +31,7 @@
 use crate::api::{NullObserver, Observer};
 use crate::decode::DecodeJob;
 use crate::fabric::Fabric;
+use crate::fault::{scale_dur, FaultPlan, Injection};
 use crate::instance::{
     CoupledInst, DecodeInst, DrainTarget, InstancePool, InstanceRole, InstanceState, PrefillInst,
 };
@@ -90,6 +91,16 @@ pub struct Cluster {
     /// the classless hot path never consults it). One deterministic
     /// decision per request, at its first arrival delivery.
     gate: Option<AdmissionGate>,
+    /// Deterministic chaos schedule + recovery policy (`None` = fault-free
+    /// — every fault path below is gated on it, so the fault-free
+    /// trajectory is bit-identical to pre-fault builds).
+    plan: Option<FaultPlan>,
+    /// When the cluster entered degraded mode (live capacity below the
+    /// plan's watermark); folded into `metrics.degraded_us` on exit.
+    degraded_since: Option<Us>,
+    /// Role-serving instances at run start — the denominator the degraded
+    /// watermark is measured against.
+    base_capacity: usize,
 }
 
 impl Cluster {
@@ -121,6 +132,7 @@ impl Cluster {
         // tenants still report
         core.metrics.set_classes(cfg.slo.classes.clone());
         let gate = AdmissionGate::from_config(&cfg.slo);
+        let plan = cfg.fault.clone().map(|fc| FaultPlan::new(fc, cfg.seed));
         Cluster {
             cfg,
             core,
@@ -137,6 +149,9 @@ impl Cluster {
             arrivals_pending: 0,
             swapped_graveyard: 0,
             gate,
+            plan,
+            degraded_since: None,
+            base_capacity: 0,
         }
     }
 
@@ -268,6 +283,19 @@ impl Cluster {
                     return;
                 }
             }
+            // Graceful degradation: below the fault plan's capacity
+            // watermark, best-effort tiers are shed at the door so the
+            // surviving instances keep serving interactive traffic.
+            if self.degraded_since.is_some() {
+                let class = self.core.requests[slot as usize].req.class;
+                let tier =
+                    self.cfg.slo.classes.get(class as usize).map(|c| c.tier).unwrap_or(0);
+                if tier != 0 {
+                    self.core.shed(slot, obs);
+                    self.note_enqueued(obs);
+                    return;
+                }
+            }
         }
         // The coupled scan only exists in hybrid mode — a pure
         // disaggregated pool can never gain coupled instances mid-run,
@@ -289,10 +317,18 @@ impl Cluster {
                 if pl <= cl { Entry::Prefill(i) } else { Entry::Coupled(c) }
             }
             (None, None) => {
-                // No entry point right now (all flipped/flipping): retry
-                // after a monitor period.
-                let at = self.core.now() + self.cfg.monitor_interval_us;
-                self.core.queue.schedule_at(at, Event::Arrival(slot));
+                // No entry point right now. Mid-flip windows heal on
+                // their own: retry after a monitor period. Under a fault
+                // plan with no restart pending, the hole may be permanent
+                // — burn retry budget (with backoff) so the request
+                // either finds capacity that elasticity rebuilds or fails
+                // bounded, instead of looping forever.
+                if self.plan.is_some() && !self.pool.any_restart_pending() {
+                    self.requeue_lost(slot, true, obs);
+                } else {
+                    let at = self.core.now() + self.cfg.monitor_interval_us;
+                    self.core.queue.schedule_at(at, Event::Arrival(slot));
+                }
                 return;
             }
         };
@@ -321,7 +357,10 @@ impl Cluster {
             PredictorMode::Sequential => {
                 let tokens = self.core.requests[slot as usize].req.prompt_len.min(512);
                 let dur = self.cfg.cost.predictor_iter_us(tokens);
-                self.core.queue.schedule_in(dur, Event::PredictDone { instance: i, req: slot });
+                let epoch = self.pool.epoch(i);
+                self.core
+                    .queue
+                    .schedule_in(dur, Event::PredictDone { instance: i, epoch, req: slot });
             }
             PredictorMode::Disabled => {
                 let meta = self.core.meta_of(slot);
@@ -356,12 +395,12 @@ impl Cluster {
         }
     }
 
-    fn on_predict_done(&mut self, i: usize, slot: ReqId, obs: &mut dyn Observer) {
+    fn on_predict_done(&mut self, i: usize, epoch: u32, slot: ReqId, obs: &mut dyn Observer) {
         let dlen = self.core.requests[slot as usize].req.decode_len;
         let pred = self.predictor.predict(&[], dlen);
         self.core.requests[slot as usize].req.predicted = Some(pred);
         let meta = self.core.meta_of(slot);
-        if self.pool.accepts_work(i) {
+        if self.pool.epoch(i) == epoch && self.pool.accepts_work(i) {
             if let Some(p) = self.pool.prefill_mut(i) {
                 p.sched.push(meta);
                 self.note_prefill_load_increased(i);
@@ -370,7 +409,9 @@ impl Cluster {
                 return;
             }
         }
-        // instance flipped (or began draining) while predicting: re-route
+        // instance flipped, began draining, or crashed while predicting:
+        // re-route (the epoch check keeps a restarted incarnation from
+        // inheriting its predecessor's in-flight predictions)
         self.core.queue.schedule_in(0, Event::Arrival(slot));
     }
 
@@ -381,20 +422,30 @@ impl Cluster {
         let chunk_size = self.cfg.chunk_size;
         let cost = self.cfg.cost;
         let now = self.core.now();
+        let slow = self.plan.as_ref().map(|p| p.slowdown(i, now)).unwrap_or(1.0);
+        let epoch = self.pool.epoch(i);
         let Some(p) = self.pool.prefill_mut(i) else { return };
         if p.busy {
             return;
         }
         p.admit_ready(chunk_size, cap);
         let Some((tokens, pad, dur)) = p.begin_chunk(&cost, now) else { return };
+        let dur = scale_dur(dur, slow);
         self.core.metrics.busy_us[i] += dur;
-        self.core.queue.schedule_in(dur, Event::PrefillIterDone { instance: i });
+        self.core.queue.schedule_in(dur, Event::PrefillIterDone { instance: i, epoch });
         obs.on_chunk(now, i, tokens, pad, dur);
         // slicing the chunk shrank this instance's pending load
         self.note_prefill_load_decreased(i);
     }
 
-    fn on_prefill_done(&mut self, i: usize, obs: &mut dyn Observer) {
+    fn on_prefill_done(&mut self, i: usize, epoch: u32, obs: &mut dyn Observer) {
+        if self.pool.epoch(i) != epoch {
+            // the instance crashed mid-iteration: its work (and the
+            // requests in it) was harvested at crash time — nothing here
+            // may touch the restarted incarnation. Fault-free this never
+            // fires: a busy instance cannot flip.
+            return;
+        }
         let now = self.core.now();
         let chunk = {
             let p = self
@@ -484,25 +535,63 @@ impl Cluster {
             entry.1 += 1;
         }
         entry.2 += predicted_footprint(req.prompt_len, req.predicted, self.cfg.granularity);
-        // Exposed transfer latency: request-level ships everything now;
-        // chunk-level already overlapped earlier chunks with compute and
-        // only the tail chunk's wire time remains visible (§3.3.4).
-        let n_chunks = req.prompt_len.div_ceil(self.cfg.chunk_size).max(1);
-        let chunk_tokens = req.prompt_len.div_ceil(n_chunks);
-        let chunk_compute = self.cfg.cost.prefill_iter_us(self.cfg.chunk_size);
-        let dur = self
-            .fabric
-            .exposed_transfer_us(n_chunks, chunk_tokens, chunk_compute);
-        self.core.queue.schedule_in(dur, Event::TransferDone { instance: d, req: slot });
-        obs.on_transfer(self.core.now(), d, req.id, req.prompt_len, dur);
+        let now = self.core.now();
+        let nominal = self.transfer_nominal(req.prompt_len);
+        // Open fault windows reprice the wire: a degradation stretches
+        // the transfer, an outage delays the send to the window's close.
+        let dur = match self.plan.as_ref() {
+            Some(p) => p.link_transfer_us(now, nominal),
+            None => nominal,
+        };
+        let epoch = self.pool.epoch(d);
+        self.core.queue.schedule_in(dur, Event::TransferDone { instance: d, epoch, req: slot });
+        obs.on_transfer(now, d, req.id, req.prompt_len, dur);
         true
+    }
+
+    /// Fault-free exposed transfer latency for a prompt (§3.3.4):
+    /// request-level ships everything now; chunk-level already overlapped
+    /// earlier chunks with compute and only the tail chunk's wire time
+    /// remains visible.
+    fn transfer_nominal(&self, prompt_len: u32) -> Us {
+        let n_chunks = prompt_len.div_ceil(self.cfg.chunk_size).max(1);
+        let chunk_tokens = prompt_len.div_ceil(n_chunks);
+        let chunk_compute = self.cfg.cost.prefill_iter_us(self.cfg.chunk_size);
+        self.fabric.exposed_transfer_us(n_chunks, chunk_tokens, chunk_compute)
     }
 
     // ------------------------------------------------------------ decode
 
-    fn on_transfer_done(&mut self, d: usize, slot: ReqId, obs: &mut dyn Observer) {
+    fn on_transfer_done(&mut self, d: usize, epoch: u32, slot: ReqId, obs: &mut dyn Observer) {
+        let now = self.core.now();
+        // A transfer completing inside a link-outage window never made it:
+        // the bytes re-send once the window closes (the source still holds
+        // the KV — backpressure stays until the payload really lands).
+        if let Some(p) = self.plan.as_ref() {
+            if p.link_outage_until(now).is_some() {
+                let plen = self.core.requests[slot as usize].req.prompt_len;
+                let nominal = self.transfer_nominal(plen);
+                let dur =
+                    self.plan.as_ref().map(|p| p.link_transfer_us(now, nominal)).unwrap_or(nominal);
+                self.core.metrics.transfer_resends += 1;
+                obs.on_recovery(now, "resend", None);
+                self.core
+                    .queue
+                    .schedule_in(dur, Event::TransferDone { instance: d, epoch, req: slot });
+                return;
+            }
+        }
         // KV has left the prefill instance: release backpressure there.
         self.release_prefill_resident(slot);
+        if self.pool.epoch(d) != epoch {
+            // The destination crashed while the KV was in flight: the
+            // payload never landed and the restarted incarnation must not
+            // inherit it. Pick a new decode instance, pay the wire again.
+            if !self.dispatch_request(slot, obs) {
+                self.pending_dispatch.push(slot);
+            }
+            return;
+        }
 
         let req = self.core.requests[slot as usize].req;
         let meta = self.core.meta_of(slot);
@@ -562,17 +651,22 @@ impl Cluster {
     /// nothing resident, or no longer serves the decode role.
     fn start_decode_iteration(&mut self, d: usize, now: Us, obs: &mut dyn Observer) -> Option<Us> {
         let cost = self.cfg.cost;
+        // straggler windows are pure functions of `now`, so macro-stepped
+        // and per-iteration runs price them identically
+        let slow = self.plan.as_ref().map(|p| p.slowdown(d, now)).unwrap_or(1.0);
         let di = self.pool.decode_mut(d)?;
         let st = di.begin_iteration(&cost, now)?;
-        self.core.metrics.busy_us[d] += st.dur;
-        obs.on_decode_iter(now, d, st.batch, st.kv_tokens, st.dur);
-        Some(now + st.dur)
+        let dur = scale_dur(st.dur, slow);
+        self.core.metrics.busy_us[d] += dur;
+        obs.on_decode_iter(now, d, st.batch, st.kv_tokens, dur);
+        Some(now + dur)
     }
 
     fn try_start_decode(&mut self, d: usize, obs: &mut dyn Observer) {
         let now = self.core.now();
         if let Some(end) = self.start_decode_iteration(d, now, obs) {
-            self.core.queue.schedule_at(end, Event::DecodeIterDone { instance: d });
+            let epoch = self.pool.epoch(d);
+            self.core.queue.schedule_at(end, Event::DecodeIterDone { instance: d, epoch });
         }
     }
 
@@ -595,7 +689,12 @@ impl Cluster {
     /// nothing external can land in the window (the batch composition
     /// provably cannot change there), event-for-event identical to
     /// per-iteration stepping (parity-tested in tests/golden.rs).
-    fn on_decode_done(&mut self, d: usize, obs: &mut dyn Observer) {
+    fn on_decode_done(&mut self, d: usize, epoch: u32, obs: &mut dyn Observer) {
+        if self.pool.epoch(d) != epoch {
+            // crashed mid-iteration: the batch was harvested at crash
+            // time; nothing here may land on the restarted incarnation
+            return;
+        }
         let macro_on = self.cfg.macro_step;
         macro_chain(
             self,
@@ -603,7 +702,10 @@ impl Cluster {
             obs,
             |s, now, obs| s.close_decode_iteration(d, now, obs),
             |s, now, obs| s.start_decode_iteration(d, now, obs),
-            |s, end| s.core.queue.schedule_at(end, Event::DecodeIterDone { instance: d }),
+            |s, end| {
+                let epoch = s.pool.epoch(d);
+                s.core.queue.schedule_at(end, Event::DecodeIterDone { instance: d, epoch })
+            },
         );
     }
 
@@ -619,23 +721,26 @@ impl Cluster {
         let cost = self.cfg.cost;
         let batch = self.cfg.coupled_batch;
         let more_arrivals = self.arrivals_pending > 0;
+        let slow = self.plan.as_ref().map(|p| p.slowdown(c, now)).unwrap_or(1.0);
         let ci = self.pool.coupled_mut(c)?;
         let st =
             ci.begin_iteration(&self.core.requests, &cost, batch, batch as u32, more_arrivals, now)?;
-        self.core.metrics.busy_us[c] += st.dur;
+        let dur = scale_dur(st.dur, slow);
+        self.core.metrics.busy_us[c] += dur;
         if st.prefill_tokens > 0 {
-            obs.on_chunk(now, c, st.prefill_tokens, 0, st.dur);
+            obs.on_chunk(now, c, st.prefill_tokens, 0, dur);
         }
         if st.batch > 0 {
-            obs.on_decode_iter(now, c, st.batch, st.kv_tokens, st.dur);
+            obs.on_decode_iter(now, c, st.batch, st.kv_tokens, dur);
         }
-        Some(now + st.dur)
+        Some(now + dur)
     }
 
     fn try_start_coupled(&mut self, c: usize, obs: &mut dyn Observer) {
         let now = self.core.now();
         if let Some(end) = self.start_coupled_iteration(c, now, obs) {
-            self.core.queue.schedule_at(end, Event::CoupledIterDone { instance: c });
+            let epoch = self.pool.epoch(c);
+            self.core.queue.schedule_at(end, Event::CoupledIterDone { instance: c, epoch });
         }
     }
 
@@ -668,7 +773,10 @@ impl Cluster {
     /// grows on arrival events and `arrivals_pending` only moves with
     /// them, so inside the strictly-before-external window successive
     /// mixed iterations are a function of instance-local state.
-    fn on_coupled_done(&mut self, c: usize, obs: &mut dyn Observer) {
+    fn on_coupled_done(&mut self, c: usize, epoch: u32, obs: &mut dyn Observer) {
+        if self.pool.epoch(c) != epoch {
+            return; // crashed mid-iteration (see on_decode_done)
+        }
         let macro_on = self.cfg.macro_step;
         macro_chain(
             self,
@@ -676,7 +784,10 @@ impl Cluster {
             obs,
             |s, now, obs| s.close_coupled_iteration(c, now, obs),
             |s, now, obs| s.start_coupled_iteration(c, now, obs),
-            |s, end| s.core.queue.schedule_at(end, Event::CoupledIterDone { instance: c }),
+            |s, end| {
+                let epoch = s.pool.epoch(c);
+                s.core.queue.schedule_at(end, Event::CoupledIterDone { instance: c, epoch })
+            },
         );
     }
 
@@ -715,14 +826,32 @@ impl Cluster {
         self.maybe_flip(prefill_pressure, decode_pressure, obs);
         self.maybe_scale(prefill_pressure, decode_pressure, obs);
         // Retry any dispatches parked while no decode instance existed.
+        // Under a fault plan, a park with no live decode instance and no
+        // restart pending may never heal on its own — burn retry budget
+        // (the re-queue path re-prefills once capacity returns via the
+        // elastic pool, or fails the request bounded).
         for slot in std::mem::take(&mut self.pending_dispatch) {
             if !self.dispatch_request(slot, obs) {
-                self.pending_dispatch.push(slot);
+                if self.plan.is_some()
+                    && !self.pool.any_restart_pending()
+                    && !self.has_live_decode()
+                {
+                    self.requeue_lost(slot, false, obs);
+                } else {
+                    self.pending_dispatch.push(slot);
+                }
             }
         }
         if self.core.outstanding > 0 {
             self.core.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
         }
+    }
+
+    /// Any instance currently serving decode and accepting work.
+    fn has_live_decode(&self) -> bool {
+        (0..self.pool.len()).any(|i| {
+            self.pool.accepts_work(i) && matches!(self.pool.state(i), InstanceState::Decode(_))
+        })
     }
 
     /// Queued work per role across instances accepting new work. Draining
@@ -739,6 +868,13 @@ impl Cluster {
                 InstanceState::Decode(d) => decode += d.sched.total_jobs() as u64,
                 _ => {}
             }
+        }
+        // Prefilled requests parked for want of a decode instance are
+        // decode-side backlog too: after a decode crash they are what the
+        // elastic pool must grow for. Plan-gated — fault-free runs keep
+        // the legacy pressure signal bit for bit.
+        if self.plan.is_some() {
+            decode += self.pending_dispatch.len() as u64;
         }
         (prefill, decode)
     }
@@ -911,6 +1047,162 @@ impl Cluster {
             }
         }
     }
+
+    // ------------------------------------------------------------- fault
+
+    /// Deliver fault-plan event `k`: resolve its target against the live
+    /// set, open link/straggler windows, or crash an instance.
+    fn on_fault_event(&mut self, k: usize, obs: &mut dyn Observer) {
+        let now = self.core.now();
+        let live = self.pool.live_roles();
+        let inj = match self.plan.as_mut() {
+            Some(p) => p.fire(k, now, &live),
+            None => return,
+        };
+        match inj {
+            Injection::Skipped => {}
+            Injection::Crash { instance, restart_at } => {
+                self.core.metrics.faults_injected += 1;
+                self.crash_instance(instance, restart_at, obs);
+                if let Some(at) = restart_at {
+                    self.core.queue.schedule_at(at, Event::Restart { instance });
+                }
+            }
+            Injection::Link { outage, .. } => {
+                self.core.metrics.faults_injected += 1;
+                obs.on_fault(now, if outage { "link_out" } else { "link_degrade" }, None);
+            }
+            Injection::Straggle { instance, .. } => {
+                self.core.metrics.faults_injected += 1;
+                obs.on_fault(now, "straggler", Some(instance));
+            }
+        }
+    }
+
+    /// Abrupt instance failure: harvest every request whose state dies
+    /// with the incarnation, tear the role state down (epoch bump makes
+    /// in-flight completions inert), rescue its swap tallies into the
+    /// graveyard, and re-queue or fail the harvested requests.
+    fn crash_instance(&mut self, i: usize, until: Option<Us>, obs: &mut dyn Observer) {
+        let now = self.core.now();
+        // harvest before the role state is destroyed
+        let mut lost = match self.pool.state_mut(i) {
+            InstanceState::Prefill(p) => p.harvest_crashed(),
+            InstanceState::Decode(d) => d.harvest_crashed(),
+            InstanceState::Coupled(c) => c.harvest_crashed(),
+            _ => Vec::new(),
+        };
+        let Some((role, swapped)) = self.pool.crash(i, until) else { return };
+        self.swapped_graveyard += swapped;
+        if until.is_none() {
+            // permanent loss: close the alive span like a retirement
+            self.pool.get_mut(i).retired_at = Some(now);
+        }
+        if role == Role::Prefill {
+            self.least_prefill_dirty = true;
+        }
+        self.refresh_broadcast();
+        // Parked dispatches whose KV lived on the crashed prefill lost
+        // their payload — they re-prefill. Others stay parked.
+        let parked = std::mem::take(&mut self.pending_dispatch);
+        for slot in parked {
+            let from_crashed = self.core.requests[slot as usize]
+                .prefilled_by
+                .map(|(src, _)| src == i)
+                .unwrap_or(false);
+            if from_crashed {
+                lost.push(slot);
+            } else {
+                self.pending_dispatch.push(slot);
+            }
+        }
+        obs.on_fault(now, "crash", Some(i));
+        for slot in lost {
+            self.requeue_lost(slot, false, obs);
+        }
+        self.check_degraded(obs);
+    }
+
+    /// Re-queue a request lost to a fault: charge a retry against the
+    /// plan's budget and re-enter the arrival router after exponential
+    /// backoff, or fail the request once the budget is spent. `pending`
+    /// says whether the slot still counts in `arrivals_pending` (it never
+    /// reached a local scheduler) — the bookkeeping differs because the
+    /// retry path re-charges `note_enqueued` when it lands.
+    fn requeue_lost(&mut self, slot: ReqId, pending: bool, obs: &mut dyn Observer) {
+        // any residual prefill residency is stale now (epoch-guarded:
+        // this is a no-op when the holding instance already crashed)
+        self.release_prefill_resident(slot);
+        let now = self.core.now();
+        let n = self.core.note_lost(slot, now);
+        let (retry_max, backoff) = match self.plan.as_ref() {
+            Some(p) => (p.retry_max(), p.backoff_us(n)),
+            None => return, // unreachable: fault paths require a plan
+        };
+        if n > retry_max {
+            if pending {
+                // leaves the global queue without ever enqueuing —
+                // unblock coupled partial batches like a shed
+                self.note_enqueued(obs);
+            }
+            self.core.fail(slot, obs);
+            return;
+        }
+        if !pending {
+            // the retry re-enters the arrival router, which charges
+            // note_enqueued again when the request lands
+            self.arrivals_pending += 1;
+        }
+        self.core.queue.schedule_in(backoff, Event::Retry(slot));
+        obs.on_recovery(now, "requeue", None);
+    }
+
+    /// A crashed slot's downtime elapsed: restart it with a fresh (empty)
+    /// role state on the post-crash epoch.
+    fn on_restart(&mut self, i: usize, obs: &mut dyn Observer) {
+        let Some(role) = self.pool.dead_role(i) else { return };
+        let now = self.core.now();
+        let state = match role {
+            Role::Prefill => InstanceState::Prefill(new_prefill_inst(&self.cfg, now)),
+            Role::Decode => InstanceState::Decode(new_decode_inst(&self.cfg)),
+            Role::Coupled => InstanceState::Coupled(new_coupled_inst(&self.cfg)),
+        };
+        if !self.pool.install_restarted(i, state) {
+            return;
+        }
+        self.least_prefill_dirty = true;
+        self.refresh_broadcast();
+        obs.on_recovery(now, "restart", Some(i));
+        self.check_degraded(obs);
+        // parked dispatches may have a target again
+        for slot in std::mem::take(&mut self.pending_dispatch) {
+            if !self.dispatch_request(slot, obs) {
+                self.pending_dispatch.push(slot);
+            }
+        }
+    }
+
+    /// Re-evaluate degraded mode against the plan's capacity watermark.
+    /// Only crash/restart events move live capacity, so this is called
+    /// exactly there — never on the hot path.
+    fn check_degraded(&mut self, obs: &mut dyn Observer) {
+        let Some(watermark) = self.plan.as_ref().map(|p| p.watermark()) else { return };
+        let now = self.core.now();
+        let live = self.pool.live_roles().len();
+        let degraded = (live as f64) < watermark * self.base_capacity as f64;
+        match (degraded, self.degraded_since) {
+            (true, None) => {
+                self.degraded_since = Some(now);
+                obs.on_fault(now, "degraded", None);
+            }
+            (false, Some(since)) => {
+                self.core.metrics.degraded_us += now.saturating_sub(since);
+                self.degraded_since = None;
+                obs.on_recovery(now, "capacity_restored", None);
+            }
+            _ => {}
+        }
+    }
 }
 
 impl EngineHost for Cluster {
@@ -926,6 +1218,14 @@ impl EngineHost for Cluster {
         // arrivals stream in lazily: the count of not-yet-enqueued
         // requests starts at the source's total, not the arena size
         self.arrivals_pending = self.core.total_expected;
+        self.base_capacity = self.pool.live_roles().len();
+        if let Some(plan) = self.plan.as_ref() {
+            // the chaos schedule rides the normal event queue — fault
+            // events bound macro chains like any other external event
+            for (k, ev) in plan.events().iter().enumerate() {
+                self.core.queue.schedule_at(ev.at, Event::Fault(k));
+            }
+        }
         self.refresh_broadcast();
         self.core.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
     }
@@ -933,13 +1233,26 @@ impl EngineHost for Cluster {
     fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {
         match ev {
             Event::Arrival(slot) => self.on_arrival(slot, obs),
-            Event::PredictDone { instance, req } => self.on_predict_done(instance, req, obs),
-            Event::PrefillIterDone { instance } => self.on_prefill_done(instance, obs),
-            Event::TransferDone { instance, req } => self.on_transfer_done(instance, req, obs),
-            Event::DecodeIterDone { instance } => self.on_decode_done(instance, obs),
-            Event::CoupledIterDone { instance } => self.on_coupled_done(instance, obs),
+            Event::PredictDone { instance, epoch, req } => {
+                self.on_predict_done(instance, epoch, req, obs)
+            }
+            Event::PrefillIterDone { instance, epoch } => {
+                self.on_prefill_done(instance, epoch, obs)
+            }
+            Event::TransferDone { instance, epoch, req } => {
+                self.on_transfer_done(instance, epoch, req, obs)
+            }
+            Event::DecodeIterDone { instance, epoch } => self.on_decode_done(instance, epoch, obs),
+            Event::CoupledIterDone { instance, epoch } => {
+                self.on_coupled_done(instance, epoch, obs)
+            }
             Event::MonitorTick => self.on_monitor_tick(obs),
             Event::FlipDone { instance } => self.on_flip_done(instance),
+            Event::Fault(k) => self.on_fault_event(k, obs),
+            Event::Restart { instance } => self.on_restart(instance, obs),
+            // a retry re-enters the arrival router (the arrival hook
+            // fired long ago — note_arrival is idempotent)
+            Event::Retry(slot) => self.on_arrival(slot, obs),
         }
     }
 
@@ -960,6 +1273,10 @@ impl EngineHost for Cluster {
             }
         }
         self.core.metrics.swapped_tokens += swapped;
+        // a run ending inside degraded mode still reports the open span
+        if let Some(since) = self.degraded_since.take() {
+            self.core.metrics.degraded_us += now.saturating_sub(since);
+        }
     }
 }
 
@@ -1257,5 +1574,128 @@ mod tests {
         assert_eq!(m.records.len(), 65, "no request may be lost across scale events");
         assert!(m.scale_ups >= 1, "the burst must grow the pool");
         assert!(m.scale_downs >= 1, "the quiet gap must shrink it again");
+    }
+
+    fn fault_cfg(events: Vec<crate::fault::FaultEvent>) -> crate::fault::FaultConfig {
+        crate::fault::FaultConfig { events, retry_max: 4, backoff_us: 25_000, watermark: 0.5 }
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_plan() {
+        // `faults` present but with no events must not perturb a single
+        // draw or duration — the acceptance bar for fault-free parity.
+        let mk_trace = || {
+            let mut gen = WorkloadGen::new(41);
+            gen.trace(WorkloadKind::Mixed, 48, 30.0, 0)
+        };
+        let a = run_cluster(small_cfg(), mk_trace());
+        let b = run_cluster(
+            ClusterConfig { fault: Some(fault_cfg(Vec::new())), ..small_cfg() },
+            mk_trace(),
+        );
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.records.len(), b.records.len());
+        for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!((ra.first_token, ra.finished), (rb.first_token, rb.finished));
+            assert_eq!(rb.retries, 0);
+            assert!(!rb.recovered);
+        }
+    }
+
+    #[test]
+    fn decode_crash_with_restart_recovers_and_conserves() {
+        use crate::fault::{FaultEvent, FaultKind};
+        // Batch burst over two decode instances; one dies mid-backlog and
+        // restarts 300 ms later. Its jobs re-enter prefill with backoff;
+        // everything must still complete and conservation must hold.
+        let mut gen = WorkloadGen::new(43);
+        let trace = gen.trace(WorkloadKind::Hphd, 64, 0.0, 0);
+        let ev = FaultEvent {
+            at: 150_000,
+            kind: FaultKind::Restart,
+            instance: Some(2), // second decode in [prefill, decode, decode]
+            down: 300_000,
+            factor: 1.0,
+        };
+        let m = run_cluster(
+            ClusterConfig { fault: Some(fault_cfg(vec![ev])), ..small_cfg() },
+            trace,
+        );
+        assert_eq!(m.faults_injected, 1);
+        assert_eq!(
+            m.finished + m.shed + m.failed,
+            64,
+            "conservation: every arrival is finished, shed, or failed"
+        );
+        assert_eq!(m.failed, 0, "a surviving decode + a restart must rescue every request");
+        assert!(m.recovered >= 1, "the crashed instance's jobs must re-enter service");
+        for r in &m.records {
+            assert!(r.retries <= 4, "retry budget exceeded: {}", r.retries);
+            assert!(r.finished >= r.first_token);
+        }
+    }
+
+    #[test]
+    fn permanent_crash_of_only_decode_fails_bounded() {
+        use crate::fault::{FaultEvent, FaultKind};
+        // The single decode instance dies for good, no flip, no elastic:
+        // in-flight and later requests burn their retry budget and fail —
+        // the run terminates and conservation still holds.
+        let mut gen = WorkloadGen::new(47);
+        let trace = gen.trace(WorkloadKind::Lphd, 32, 0.0, 0);
+        let ev = FaultEvent {
+            at: 100_000,
+            kind: FaultKind::Crash,
+            instance: Some(1),
+            down: 0,
+            factor: 1.0,
+        };
+        let cfg = ClusterConfig {
+            n_prefill: 1,
+            n_decode: 1,
+            flip: None,
+            // watermark 0.8 over a base of 2: one loss (1 < 1.6) degrades
+            fault: Some(crate::fault::FaultConfig { watermark: 0.8, ..fault_cfg(vec![ev]) }),
+            ..Default::default()
+        };
+        let m = run_cluster(cfg, trace);
+        assert_eq!(m.finished + m.shed + m.failed, 32);
+        assert!(m.failed >= 1, "requests with no decode capacity must fail, not spin");
+        assert!(m.degraded_us > 0, "losing half the fleet crosses the watermark");
+    }
+
+    #[test]
+    fn elastic_pool_replaces_a_permanently_dead_decode() {
+        use crate::fault::{FaultEvent, FaultKind};
+        // Same permanent decode crash, but with the elastic pool on: the
+        // parked prefilled requests count as decode backlog, the pool
+        // grows a replacement, and the requests recover instead of fail.
+        let mut gen = WorkloadGen::new(53);
+        let trace = gen.trace(WorkloadKind::Lphd, 32, 0.0, 0);
+        let ev = FaultEvent {
+            at: 100_000,
+            kind: FaultKind::Crash,
+            instance: Some(1),
+            down: 0,
+            factor: 1.0,
+        };
+        let cfg = ClusterConfig {
+            n_prefill: 1,
+            n_decode: 1,
+            flip: None,
+            elastic: Some(ElasticConfig {
+                max_instances: 4,
+                prefill_up_tokens: 100_000,
+                decode_up_jobs: 1,
+                ..Default::default()
+            }),
+            fault: Some(fault_cfg(vec![ev])),
+            ..Default::default()
+        };
+        let m = run_cluster(cfg, trace);
+        assert_eq!(m.finished + m.shed + m.failed, 32);
+        assert!(m.scale_ups >= 1, "parked dispatches must pressure the pool to grow");
+        assert_eq!(m.failed, 0, "the replacement instance must rescue every request");
     }
 }

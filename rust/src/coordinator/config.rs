@@ -130,6 +130,10 @@ pub struct ClusterConfig {
     /// `slo::SloConfig`). The default — no classes, admission off — is
     /// the classless legacy behavior, bit-identical to pre-SLO builds.
     pub slo: SloConfig,
+    /// Deterministic fault injection: chaos schedule + recovery policy
+    /// (see `fault::FaultConfig`). `None` — the default — runs fault-free
+    /// and is bit-identical to pre-fault builds.
+    pub fault: Option<crate::fault::FaultConfig>,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -160,6 +164,7 @@ impl Default for ClusterConfig {
             retain_records: true,
             macro_step: true,
             slo: SloConfig::default(),
+            fault: None,
             cost: CostModel::default(),
             seed: 0,
         }

@@ -386,6 +386,20 @@ impl DecodeScheduler {
         freed
     }
 
+    /// Crash harvest: remove every job — waiting, running, swapped — and
+    /// reset the aggregates to zero so no load stays attributed to the
+    /// dead incarnation. Returns the request ids in queue order. Pages
+    /// are not individually released: the paged KV cache dies with the
+    /// instance, and recovery re-prefills from scratch.
+    pub fn drain_all(&mut self) -> Vec<ReqId> {
+        let mut ids: Vec<ReqId> = Vec::with_capacity(self.total_jobs());
+        ids.extend(self.waiting.drain(..).map(|j| j.meta.id));
+        ids.extend(self.running.drain(..).map(|j| j.meta.id));
+        ids.extend(self.swapped.drain(..).map(|j| j.meta.id));
+        self.agg = SchedAggregates::default();
+        ids
+    }
+
     /// Generate one token for every running job. Requests that overflow
     /// their pages trigger vLLM-style preemption: the *newest* running job
     /// is swapped out until the append succeeds. Completed job ids are
@@ -632,6 +646,26 @@ mod tests {
         }
         assert_eq!(done.len(), 6);
         assert_eq!(s.aggregates(), SchedAggregates::default());
+    }
+
+    #[test]
+    fn drain_all_empties_every_queue_and_zeroes_aggregates() {
+        let (mut s, mut kv) = sched(DecodePolicy::Greedy);
+        for i in 0..3 {
+            s.push(req(i, 320, 100, Some((i % 4) as u8))); // enough to force a swap
+        }
+        s.admit(&mut kv);
+        let mut done = Vec::new();
+        for _ in 0..10 {
+            s.admit(&mut kv);
+            s.step(&mut kv, &mut done);
+        }
+        let mut ids = s.drain_all();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2], "every live job must be harvested");
+        assert_eq!(s.total_jobs(), 0);
+        assert_eq!(s.aggregates(), SchedAggregates::default());
+        assert_eq!(s.heavy_light(), (0, 0));
     }
 
     #[test]

@@ -108,6 +108,17 @@ impl Fabric {
         self.link.transfer_us(self.kv_bytes_per_tok * chunk_tokens as f64)
     }
 
+    /// A copy of this fabric whose link runs `factor`× slower — what a
+    /// fault plan's link-degrade window prices transfers through (both
+    /// the wire time and the per-transfer setup stretch; congestion slows
+    /// the handshake as much as the payload).
+    pub fn degraded(&self, factor: f64) -> Fabric {
+        let mut f = *self;
+        f.link.gbps /= factor;
+        f.link.setup_us *= factor;
+        f
+    }
+
     /// Total exposed transfer latency for a prompt of `n_chunks` chunks of
     /// `chunk_tokens` each, when each chunk's shipping overlaps the next
     /// chunk's compute (`chunk_compute_us`).
@@ -172,6 +183,20 @@ mod tests {
         // request-level ships everything at the end
         f.granularity = Granularity::RequestLevel;
         assert!(f.exposed_transfer_us(4, 512, compute) > exposed);
+    }
+
+    #[test]
+    fn degraded_fabric_slows_transfers_proportionally() {
+        let f = Fabric::new(Link::roce200(), KV_TOK);
+        let slow = f.degraded(4.0);
+        let t = f.request_transfer_us(512);
+        let ts = slow.request_transfer_us(512);
+        // one-sided link: setup and wire both scale, so the total does too
+        // (up to µs truncation)
+        let ratio = ts as f64 / t as f64;
+        assert!((ratio - 4.0).abs() < 0.01, "4x degrade must price ~4x: {ratio}");
+        let unity = f.degraded(1.0);
+        assert_eq!(unity.request_transfer_us(512), t);
     }
 
     #[test]

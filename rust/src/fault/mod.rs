@@ -1,0 +1,588 @@
+//! Fault injection and recovery vocabulary: deterministic chaos schedules
+//! for the DES drivers.
+//!
+//! A scenario may declare a list of fault events — instance crashes
+//! (permanent or with a restart after a configurable downtime), KV-link
+//! outage/degradation windows, and slow-node straggler multipliers — plus
+//! the recovery knobs those faults demand (retry budget, backoff base,
+//! degraded-admission watermark). The spec level ([`FaultSpec`] /
+//! [`FaultPlanSpec`], ms units) mirrors the JSON/builder/CLI surface the
+//! way `ElasticSpec` and `ClassSpec` do; [`FaultPlanSpec::to_config`]
+//! resolves to the runtime [`FaultConfig`] (µs) carried by
+//! `ClusterConfig`/`BaselineConfig`.
+//!
+//! Determinism: the runtime [`FaultPlan`] owns its own seeded RNG stream
+//! ([`FAULT_STREAM`], the same pattern as the class-stamping stream in the
+//! workload generator), consumed *only* when an event needs a random
+//! target (`instance` absent). Scheduled events draw nothing. A run with
+//! `fault: None` builds no plan, schedules no events, and draws from no
+//! extra stream — its trajectory is bit-identical to pre-fault builds
+//! (golden-tested); a run with an empty event list likewise.
+
+use crate::types::Us;
+use crate::util::rng::Pcg;
+
+/// RNG stream id for fault-target draws — distinct from the workload
+/// length stream, the class-stamping stream, and the cluster dispatch
+/// stream, so injecting faults never perturbs arrivals or routing draws.
+pub const FAULT_STREAM: u64 = 0x7e57_fa17_c0de_0bad;
+
+/// What kind of fault an event injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Instance dies permanently (its slot never serves again).
+    Crash,
+    /// Instance dies, then restarts with a fresh (empty) role state after
+    /// `down_ms` of downtime. The restarted incarnation is a new epoch.
+    Restart,
+    /// KV-transfer link is fully out for `down_ms`: new sends wait for
+    /// the window to close; in-flight transfers landing inside the window
+    /// time out and re-send.
+    LinkOut,
+    /// KV-transfer link runs at `factor`× its nominal transfer time for
+    /// `down_ms`.
+    LinkDegrade,
+    /// Instance compute runs at `factor`× its nominal iteration time for
+    /// `down_ms` (a slow node, not a dead one).
+    Straggler,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::Crash,
+        FaultKind::Restart,
+        FaultKind::LinkOut,
+        FaultKind::LinkDegrade,
+        FaultKind::Straggler,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Restart => "restart",
+            FaultKind::LinkOut => "link_out",
+            FaultKind::LinkDegrade => "link_degrade",
+            FaultKind::Straggler => "straggler",
+        }
+    }
+}
+
+/// Parse a fault-kind spelling (JSON `kind` value / `--fault kind=`).
+pub fn parse_fault_kind(s: &str) -> Result<FaultKind, String> {
+    FaultKind::ALL
+        .into_iter()
+        .find(|k| k.name() == s)
+        .ok_or_else(|| format!("unknown fault kind '{s}' (known: crash, restart, link_out, link_degrade, straggler)"))
+}
+
+/// Inverse of [`parse_fault_kind`] (spec echo / `--list` vocabulary).
+pub fn fault_kind_key(k: FaultKind) -> &'static str {
+    k.name()
+}
+
+/// One injected fault event as declared in a scenario spec (ms units —
+/// the spec-level mirror of the runtime [`FaultEvent`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Virtual time the event fires.
+    pub at_ms: f64,
+    /// Target instance id; `None` = pick uniformly among instances
+    /// currently serving a role, from the plan's own RNG stream.
+    /// Ignored by the link kinds (the link is cluster-wide).
+    pub instance: Option<usize>,
+    /// Window length: restart downtime / link window / straggler window.
+    /// Defaults per kind (see [`FaultSpec::down_ms_or_default`]).
+    pub down_ms: Option<f64>,
+    /// Slowdown multiplier for `link_degrade`/`straggler` (must be ≥ 1).
+    pub factor: Option<f64>,
+}
+
+impl FaultSpec {
+    pub fn new(kind: FaultKind, at_ms: f64) -> Self {
+        FaultSpec { kind, at_ms, instance: None, down_ms: None, factor: None }
+    }
+
+    /// Per-kind window default when `down_ms` is absent.
+    pub fn down_ms_or_default(&self) -> f64 {
+        self.down_ms.unwrap_or(match self.kind {
+            FaultKind::Crash => 0.0, // permanent: no window
+            FaultKind::Restart => 200.0,
+            FaultKind::LinkOut => 100.0,
+            FaultKind::LinkDegrade => 200.0,
+            FaultKind::Straggler => 500.0,
+        })
+    }
+
+    /// Per-kind factor default when `factor` is absent.
+    pub fn factor_or_default(&self) -> f64 {
+        self.factor.unwrap_or(match self.kind {
+            FaultKind::LinkDegrade => 4.0,
+            FaultKind::Straggler => 2.0,
+            _ => 1.0,
+        })
+    }
+
+    /// Reject malformed events with a friendly message (shared by the
+    /// JSON loader and the `--fault` flag parser).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.at_ms.is_finite() || self.at_ms < 0.0 {
+            return Err(format!("fault at_ms must be a non-negative number, got {}", self.at_ms));
+        }
+        if let Some(d) = self.down_ms {
+            if !d.is_finite() || d <= 0.0 {
+                return Err(format!("fault down_ms must be > 0, got {d}"));
+            }
+        }
+        if let Some(f) = self.factor {
+            if !f.is_finite() || f < 1.0 {
+                return Err(format!("fault factor must be ≥ 1, got {f}"));
+            }
+            if matches!(self.kind, FaultKind::Crash | FaultKind::Restart | FaultKind::LinkOut) {
+                return Err(format!("fault kind '{}' takes no factor", self.kind.name()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The scenario-level `faults` object: the event list plus the recovery
+/// knobs (all optional in the JSON — defaults below).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlanSpec {
+    pub events: Vec<FaultSpec>,
+    /// Bounded retry budget: a request re-queued more than this many
+    /// times is permanently failed (counted, never silently dropped).
+    pub retry_max: u32,
+    /// Exponential-backoff base: retry k waits `backoff_ms · 2^k`.
+    pub backoff_ms: f64,
+    /// Degraded-mode watermark: when surviving serving capacity falls
+    /// below this fraction of the initial capacity, the coordinator sheds
+    /// non-tier-0 arrivals at admission until capacity recovers.
+    pub watermark: f64,
+}
+
+impl Default for FaultPlanSpec {
+    fn default() -> Self {
+        FaultPlanSpec { events: Vec::new(), retry_max: 4, backoff_ms: 25.0, watermark: 0.5 }
+    }
+}
+
+impl FaultPlanSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        for ev in &self.events {
+            ev.validate()?;
+        }
+        if !self.backoff_ms.is_finite() || self.backoff_ms <= 0.0 {
+            return Err(format!("faults backoff_ms must be > 0, got {}", self.backoff_ms));
+        }
+        if !self.watermark.is_finite() || !(0.0..=1.0).contains(&self.watermark) {
+            return Err(format!("faults watermark must be in [0,1], got {}", self.watermark));
+        }
+        Ok(())
+    }
+
+    /// Resolve to the runtime form (ms → µs, defaults applied, events
+    /// sorted by fire time so delivery order is spec-order-independent).
+    pub fn to_config(&self) -> FaultConfig {
+        let mut events: Vec<FaultEvent> = self
+            .events
+            .iter()
+            .map(|s| FaultEvent {
+                at: (s.at_ms * 1e3) as Us,
+                kind: s.kind,
+                instance: s.instance,
+                down: (s.down_ms_or_default() * 1e3) as Us,
+                factor: s.factor_or_default(),
+            })
+            .collect();
+        events.sort_by_key(|e| e.at);
+        FaultConfig {
+            events,
+            retry_max: self.retry_max,
+            backoff_us: (self.backoff_ms * 1e3) as Us,
+            watermark: self.watermark,
+        }
+    }
+}
+
+/// Runtime form of one fault event (µs, defaults resolved).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at: Us,
+    pub kind: FaultKind,
+    pub instance: Option<usize>,
+    pub down: Us,
+    pub factor: f64,
+}
+
+/// Runtime fault configuration carried by driver configs (the resolved
+/// mirror of [`FaultPlanSpec`], like `SloConfig` vs `ClassSpec`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Injected events, sorted by `at`.
+    pub events: Vec<FaultEvent>,
+    pub retry_max: u32,
+    pub backoff_us: Us,
+    pub watermark: f64,
+}
+
+/// A fired event, resolved against the live fleet (random targets drawn
+/// from the plan's stream). The driver executes the action.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Injection {
+    /// Kill `instance` now; if `restart_at` is set, bring it back (fresh
+    /// state, bumped epoch) at that time.
+    Crash { instance: usize, restart_at: Option<Us> },
+    /// Link window: transfers run at `factor`× (or stall entirely when
+    /// `outage`) until `until`.
+    Link { factor: f64, outage: bool, until: Us },
+    /// Instance `instance` computes at `factor`× until `until`.
+    Straggle { instance: usize, factor: f64, until: Us },
+    /// No live target existed at fire time (e.g. the named instance had
+    /// already crashed) — the event is dropped, counted by the driver.
+    Skipped,
+}
+
+/// Live per-run fault state: the schedule, the target RNG stream, and the
+/// currently open link/straggler windows. Owned by a driver only when its
+/// config carries a `FaultConfig` — absent, no fault code runs at all.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    rng: Pcg,
+    link_factor: f64,
+    link_outage: bool,
+    link_until: Us,
+    /// Per-instance (factor, until) straggler windows; grows on demand.
+    straggle: Vec<(f64, Us)>,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig, seed: u64) -> Self {
+        FaultPlan {
+            cfg,
+            rng: Pcg::with_stream(seed, FAULT_STREAM),
+            link_factor: 1.0,
+            link_outage: false,
+            link_until: 0,
+            straggle: Vec::new(),
+        }
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.cfg.events
+    }
+
+    pub fn retry_max(&self) -> u32 {
+        self.cfg.retry_max
+    }
+
+    pub fn watermark(&self) -> f64 {
+        self.cfg.watermark
+    }
+
+    /// Backoff before retry number `retries` (1-based): exponential in
+    /// the retry count, shift-capped so huge budgets cannot overflow.
+    pub fn backoff_us(&self, retries: u32) -> Us {
+        self.cfg.backoff_us.saturating_mul(1u64 << retries.saturating_sub(1).min(16))
+    }
+
+    /// Fire event `k` at `now`. `live` is the set of instance ids
+    /// currently serving a role (crash/straggler candidates). The RNG is
+    /// drawn only for events with no explicit target.
+    pub fn fire(&mut self, k: usize, now: Us, live: &[usize]) -> Injection {
+        let ev = self.cfg.events[k].clone();
+        match ev.kind {
+            FaultKind::Crash | FaultKind::Restart => {
+                let target = match ev.instance {
+                    Some(i) if live.contains(&i) => Some(i),
+                    Some(_) => None, // named target already dead/flipping
+                    None if !live.is_empty() => Some(live[self.rng.index(live.len())]),
+                    None => None,
+                };
+                match target {
+                    Some(i) => Injection::Crash {
+                        instance: i,
+                        restart_at: match ev.kind {
+                            FaultKind::Restart => Some(now + ev.down),
+                            _ => None,
+                        },
+                    },
+                    None => Injection::Skipped,
+                }
+            }
+            FaultKind::LinkOut | FaultKind::LinkDegrade => {
+                let outage = ev.kind == FaultKind::LinkOut;
+                let until = now + ev.down;
+                self.link_factor = if outage { 1.0 } else { ev.factor };
+                self.link_outage = outage;
+                self.link_until = until;
+                Injection::Link { factor: ev.factor, outage, until }
+            }
+            FaultKind::Straggler => {
+                let target = match ev.instance {
+                    Some(i) if live.contains(&i) => Some(i),
+                    Some(_) => None,
+                    None if !live.is_empty() => Some(live[self.rng.index(live.len())]),
+                    None => None,
+                };
+                match target {
+                    Some(i) => {
+                        let until = now + ev.down;
+                        if self.straggle.len() <= i {
+                            self.straggle.resize(i + 1, (1.0, 0));
+                        }
+                        self.straggle[i] = (ev.factor, until);
+                        Injection::Straggle { instance: i, factor: ev.factor, until }
+                    }
+                    None => Injection::Skipped,
+                }
+            }
+        }
+    }
+
+    /// Compute-slowdown multiplier for instance `i` at `now` (1.0 when no
+    /// straggler window is open — the scheduling fast path).
+    pub fn slowdown(&self, i: usize, now: Us) -> f64 {
+        match self.straggle.get(i) {
+            Some(&(f, until)) if now < until => f,
+            _ => 1.0,
+        }
+    }
+
+    /// If a link *outage* window is open at `now`, when it closes.
+    pub fn link_outage_until(&self, now: Us) -> Option<Us> {
+        if self.link_outage && now < self.link_until {
+            Some(self.link_until)
+        } else {
+            None
+        }
+    }
+
+    /// Exposed time of a KV transfer started at `now` whose fault-free
+    /// exposed time is `nominal`: an open outage window delays the send
+    /// to the window's close; an open degradation window stretches it.
+    pub fn link_transfer_us(&self, now: Us, nominal: Us) -> Us {
+        if now >= self.link_until {
+            return nominal;
+        }
+        if self.link_outage {
+            (self.link_until - now) + nominal
+        } else {
+            scale_dur(nominal, self.link_factor)
+        }
+    }
+}
+
+/// Scale a duration by a slowdown factor. The `f == 1.0` fast path keeps
+/// fault-free and windows-closed trajectories bit-exact (no float round
+/// trip on unaffected iterations).
+pub fn scale_dur(dur: Us, f: f64) -> Us {
+    if f == 1.0 {
+        dur
+    } else {
+        ((dur as f64) * f).round() as Us
+    }
+}
+
+// ------------------------------------------------------------- CLI flag
+
+/// Parse one `--fault` CLI flag value into a [`FaultSpec`]. Format is
+/// comma-separated `key=value` pairs using the same key spellings as the
+/// JSON spec:
+///
+/// ```text
+/// kind=restart,at_ms=500,instance=3,down_ms=200
+/// kind=link_out,at_ms=800,down_ms=100
+/// kind=straggler,at_ms=0,factor=3
+/// ```
+///
+/// `kind` and `at_ms` are required; everything else takes the per-kind
+/// defaults. Unknown keys, unknown kinds, and malformed numbers are
+/// errors, never silent defaults.
+pub fn parse_fault_flag(s: &str) -> Result<FaultSpec, String> {
+    let mut kind: Option<FaultKind> = None;
+    let mut at_ms: Option<f64> = None;
+    let mut instance: Option<usize> = None;
+    let mut down_ms: Option<f64> = None;
+    let mut factor: Option<f64> = None;
+    for pair in s.split(',') {
+        let pair = pair.trim();
+        if pair.is_empty() {
+            continue;
+        }
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("--fault: expected key=value, got '{pair}'"))?;
+        let num = |key: &str| -> Result<f64, String> {
+            v.parse::<f64>().map_err(|_| format!("--fault: {key} needs a number, got '{v}'"))
+        };
+        match k {
+            "kind" => kind = Some(parse_fault_kind(v).map_err(|e| format!("--fault: {e}"))?),
+            "at_ms" => at_ms = Some(num("at_ms")?),
+            "instance" => {
+                instance = Some(v.parse::<usize>().map_err(|_| {
+                    format!("--fault: instance needs a non-negative integer, got '{v}'")
+                })?)
+            }
+            "down_ms" => down_ms = Some(num("down_ms")?),
+            "factor" => factor = Some(num("factor")?),
+            _ => {
+                return Err(format!(
+                    "--fault: unknown key '{k}' (known: kind, at_ms, instance, down_ms, factor)"
+                ))
+            }
+        }
+    }
+    let kind = kind.ok_or_else(|| "--fault: 'kind=' is required".to_string())?;
+    let at_ms = at_ms.ok_or_else(|| "--fault: 'at_ms=' is required".to_string())?;
+    let spec = FaultSpec { kind, at_ms, instance, down_ms, factor };
+    spec.validate().map_err(|e| format!("--fault: {e}"))?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in FaultKind::ALL {
+            assert_eq!(parse_fault_kind(fault_kind_key(k)).unwrap(), k);
+        }
+        assert!(parse_fault_kind("meteor").is_err());
+    }
+
+    #[test]
+    fn spec_resolves_ms_to_us_sorted_with_defaults() {
+        let spec = FaultPlanSpec {
+            events: vec![
+                FaultSpec::new(FaultKind::LinkOut, 800.0),
+                FaultSpec { instance: Some(3), ..FaultSpec::new(FaultKind::Restart, 500.0) },
+            ],
+            ..Default::default()
+        };
+        let cfg = spec.to_config();
+        assert_eq!(cfg.events.len(), 2);
+        assert_eq!(cfg.events[0].at, 500_000, "events sorted by fire time");
+        assert_eq!(cfg.events[0].down, 200_000, "restart downtime default 200 ms");
+        assert_eq!(cfg.events[0].instance, Some(3));
+        assert_eq!(cfg.events[1].down, 100_000, "link outage default 100 ms");
+        assert_eq!(cfg.retry_max, 4);
+        assert_eq!(cfg.backoff_us, 25_000);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_events() {
+        assert!(FaultSpec { at_ms: -1.0, ..FaultSpec::new(FaultKind::Crash, 0.0) }.validate().is_err());
+        assert!(FaultSpec { down_ms: Some(0.0), ..FaultSpec::new(FaultKind::Restart, 0.0) }
+            .validate()
+            .is_err());
+        assert!(FaultSpec { factor: Some(0.5), ..FaultSpec::new(FaultKind::Straggler, 0.0) }
+            .validate()
+            .is_err());
+        assert!(
+            FaultSpec { factor: Some(2.0), ..FaultSpec::new(FaultKind::Crash, 0.0) }.validate().is_err(),
+            "crash takes no factor"
+        );
+        assert!(FaultSpec { factor: Some(2.0), ..FaultSpec::new(FaultKind::Straggler, 0.0) }
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn fire_resolves_targets_deterministically() {
+        let spec = FaultPlanSpec {
+            events: vec![
+                FaultSpec::new(FaultKind::Restart, 1.0),
+                FaultSpec { instance: Some(9), ..FaultSpec::new(FaultKind::Crash, 2.0) },
+            ],
+            ..Default::default()
+        };
+        let mut a = FaultPlan::new(spec.to_config(), 42);
+        let mut b = FaultPlan::new(spec.to_config(), 42);
+        let live = [0usize, 1, 2, 3];
+        assert_eq!(a.fire(0, 1_000, &live), b.fire(0, 1_000, &live), "same seed, same pick");
+        match a.fire(0, 1_000, &live) {
+            Injection::Crash { instance, restart_at } => {
+                assert!(live.contains(&instance));
+                assert_eq!(restart_at, Some(201_000));
+            }
+            other => panic!("expected crash, got {other:?}"),
+        }
+        assert_eq!(a.fire(1, 2_000, &live), Injection::Skipped, "named target not live");
+    }
+
+    #[test]
+    fn link_windows_delay_and_stretch_transfers() {
+        let spec = FaultPlanSpec {
+            events: vec![FaultSpec::new(FaultKind::LinkOut, 0.0)],
+            ..Default::default()
+        };
+        let mut plan = FaultPlan::new(spec.to_config(), 7);
+        assert_eq!(plan.link_transfer_us(0, 1_000), 1_000, "no window yet");
+        let inj = plan.fire(0, 10_000, &[]);
+        assert_eq!(inj, Injection::Link { factor: 1.0, outage: true, until: 110_000 });
+        assert_eq!(plan.link_outage_until(50_000), Some(110_000));
+        assert_eq!(plan.link_transfer_us(50_000, 1_000), 61_000, "wait out the outage, then send");
+        assert_eq!(plan.link_outage_until(110_000), None);
+        assert_eq!(plan.link_transfer_us(110_000, 1_000), 1_000, "window closed");
+        // degradation stretches rather than stalls
+        let spec = FaultPlanSpec {
+            events: vec![FaultSpec {
+                factor: Some(3.0),
+                ..FaultSpec::new(FaultKind::LinkDegrade, 0.0)
+            }],
+            ..Default::default()
+        };
+        let mut plan = FaultPlan::new(spec.to_config(), 7);
+        plan.fire(0, 0, &[]);
+        assert_eq!(plan.link_transfer_us(0, 1_000), 3_000);
+        assert!(plan.link_outage_until(0).is_none(), "degradation is not an outage");
+    }
+
+    #[test]
+    fn straggler_windows_scope_to_instance_and_time() {
+        let spec = FaultPlanSpec {
+            events: vec![FaultSpec {
+                instance: Some(1),
+                factor: Some(2.0),
+                down_ms: Some(10.0),
+                ..FaultSpec::new(FaultKind::Straggler, 0.0)
+            }],
+            ..Default::default()
+        };
+        let mut plan = FaultPlan::new(spec.to_config(), 1);
+        plan.fire(0, 0, &[0, 1]);
+        assert_eq!(plan.slowdown(1, 5_000), 2.0);
+        assert_eq!(plan.slowdown(0, 5_000), 1.0, "other instances unaffected");
+        assert_eq!(plan.slowdown(1, 10_000), 1.0, "window closed");
+        assert_eq!(plan.slowdown(7, 0), 1.0, "beyond the table: no slowdown");
+        assert_eq!(scale_dur(1_000, 2.0), 2_000);
+        assert_eq!(scale_dur(1_234, 1.0), 1_234, "factor 1 takes the exact fast path");
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_bounded() {
+        let plan = FaultPlan::new(FaultPlanSpec::default().to_config(), 0);
+        assert_eq!(plan.backoff_us(1), 25_000);
+        assert_eq!(plan.backoff_us(2), 50_000);
+        assert_eq!(plan.backoff_us(3), 100_000);
+        assert!(plan.backoff_us(u32::MAX) > 0, "shift-capped, no overflow");
+    }
+
+    #[test]
+    fn fault_flag_parses_and_rejects() {
+        let f = parse_fault_flag("kind=restart,at_ms=500,instance=3,down_ms=200").unwrap();
+        assert_eq!((f.kind, f.at_ms, f.instance, f.down_ms), (FaultKind::Restart, 500.0, Some(3), Some(200.0)));
+        let f = parse_fault_flag("kind=link_out,at_ms=800").unwrap();
+        assert_eq!(f.kind, FaultKind::LinkOut);
+        assert!(parse_fault_flag("at_ms=1").is_err(), "kind required");
+        assert!(parse_fault_flag("kind=crash").is_err(), "at_ms required");
+        assert!(parse_fault_flag("kind=meteor,at_ms=1").is_err(), "unknown kind");
+        assert!(parse_fault_flag("kind=crash,at_ms=1,color=red").is_err(), "unknown key");
+        assert!(parse_fault_flag("kind=crash,at_ms=abc").is_err(), "bad number");
+        assert!(parse_fault_flag("kind=straggler,at_ms=0,factor=0.2").is_err(), "factor < 1");
+    }
+}

@@ -169,6 +169,26 @@ impl CoupledInst {
             self.kv.release(slot);
         }
     }
+
+    /// Crash harvest: every request whose state dies with this instance —
+    /// the waiting line, all decode-scheduler jobs, and completions
+    /// buffered inside an in-flight iteration whose CoupledIterDone will
+    /// now be epoch-dropped (their final tokens were never surfaced).
+    /// In-flight prefilled slots were already injected into the decode
+    /// scheduler, so they arrive via `drain_all`; ids are deduped. Load
+    /// tallies reset to zero — nothing stays attributed to the dead
+    /// incarnation.
+    pub fn harvest_crashed(&mut self) -> Vec<ReqId> {
+        let mut ids: Vec<ReqId> = self.waiting.drain(..).collect();
+        self.waiting_tokens = 0;
+        ids.extend(self.dec.drain_all());
+        ids.extend(self.pending_done.drain(..));
+        self.pending_prefilled.clear();
+        self.busy = false;
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
 }
 
 impl InstanceRole for CoupledInst {
@@ -220,6 +240,9 @@ mod tests {
                 first_token: NO_TIME,
                 prefilled_by: None,
                 seen: false,
+                retries: 0,
+                recovered: false,
+                lost_at: NO_TIME,
             })
             .collect()
     }
@@ -266,6 +289,21 @@ mod tests {
         assert_eq!(c.dec.n_resident(), 1);
         c.return_bufs(prefilled, done);
         assert!(!InstanceRole::drained(&c), "slot 0 still decoding");
+    }
+
+    #[test]
+    fn harvest_crashed_collects_waiting_and_running() {
+        let cost = CostModel::default();
+        let reqs = arena(&[(50, 3), (60, 2), (70, 4)]);
+        let mut c = CoupledInst::new(64);
+        c.enqueue(0, 50);
+        c.enqueue(1, 60);
+        let _ = c.begin_iteration(&reqs, &cost, 2, 16, false, 0).unwrap();
+        c.enqueue(2, 70); // arrives while the iteration is in flight
+        let lost = c.harvest_crashed();
+        assert_eq!(lost, vec![0, 1, 2], "waiting + running, deduped");
+        assert_eq!(c.route_load(), 0, "no load left on the dead incarnation");
+        assert!(InstanceRole::drained(&c));
     }
 
     #[test]

@@ -78,6 +78,20 @@ impl DecodeInst {
     pub fn return_done_buf(&mut self, buf: Vec<ReqId>) {
         self.pending_done = buf;
     }
+
+    /// Crash harvest: every request whose decode state dies with this
+    /// instance — all scheduler jobs plus completions buffered inside an
+    /// in-flight iteration whose DecodeIterDone will now be epoch-dropped
+    /// (their final tokens were never surfaced). The paged KV dies with
+    /// the instance; recovery re-prefills from scratch.
+    pub fn harvest_crashed(&mut self) -> Vec<ReqId> {
+        let mut ids = self.sched.drain_all();
+        ids.extend(self.pending_done.drain(..));
+        self.busy = false;
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
 }
 
 /// Swap-in charge: re-admitted (previously swapped) jobs pay the PCIe
@@ -162,6 +176,22 @@ mod tests {
         d.sched.enqueue(job(0, 10, 5));
         d.sched.admit(&mut d.kv);
         assert_eq!(swapin_charge(64, &d.sched), 0, "fresh admissions ride the fabric");
+    }
+
+    #[test]
+    fn harvest_crashed_includes_iteration_buffered_completions() {
+        let mut d = inst();
+        d.sched.enqueue(job(0, 10, 1));
+        d.sched.enqueue(job(1, 10, 5));
+        // job 0 completes *inside* the iteration: it leaves the scheduler
+        // and sits in pending_done until DecodeIterDone — which a crash
+        // epoch-drops, so harvest must still surface it
+        let _ = d.begin_iteration(&CostModel::default(), 0).unwrap();
+        assert_eq!(d.pending_done, vec![0]);
+        let lost = d.harvest_crashed();
+        assert_eq!(lost, vec![0, 1]);
+        assert_eq!(d.sched.total_jobs(), 0);
+        assert!(InstanceRole::drained(&d));
     }
 
     #[test]

@@ -27,6 +27,13 @@ pub enum InstanceState {
     Coupled(CoupledInst),
     /// Drained and mid-role-switch (§3.5); live again at FlipDone.
     Flipping { to: Role },
+    /// Crashed by fault injection — abrupt, *not* drained: the role state
+    /// (and every queued/in-flight request and resident KV token in it)
+    /// died with the incarnation. `role` remembers what to restart as;
+    /// `until` is the scheduled restart time (`None` = permanent). The
+    /// epoch was bumped at the crash, so stale completions and KV
+    /// releases keyed to the old incarnation go inert.
+    Dead { role: Role, until: Option<Us> },
     /// Permanently removed from the pool (elastic scale-down). The slot
     /// index stays valid so metric vectors and in-flight events keyed by
     /// instance id never dangle.
@@ -39,13 +46,15 @@ impl InstanceState {
         self.as_role().map(|r| r.role())
     }
 
-    /// Trait view of the live role state (None for Flipping/Retired).
+    /// Trait view of the live role state (None for Flipping/Dead/Retired).
     pub fn as_role(&self) -> Option<&dyn InstanceRole> {
         match self {
             InstanceState::Prefill(p) => Some(p),
             InstanceState::Decode(d) => Some(d),
             InstanceState::Coupled(c) => Some(c),
-            InstanceState::Flipping { .. } | InstanceState::Retired => None,
+            InstanceState::Flipping { .. } | InstanceState::Dead { .. } | InstanceState::Retired => {
+                None
+            }
         }
     }
 
@@ -153,13 +162,47 @@ impl InstancePool {
             .count()
     }
 
-    /// Instances not yet retired (live roles + draining + flipping) —
-    /// what an elastic `max_instances` cap counts.
+    /// Instances not yet permanently gone (live roles + draining +
+    /// flipping + dead-but-restarting) — what an elastic `max_instances`
+    /// cap counts. A permanently crashed slot (`Dead { until: None }`)
+    /// counts like Retired: its capacity never returns, so the elastic
+    /// pool may replace it.
     pub fn n_live(&self) -> usize {
         self.insts
             .iter()
-            .filter(|s| !matches!(s.state, InstanceState::Retired))
+            .filter(|s| {
+                !matches!(
+                    s.state,
+                    InstanceState::Retired | InstanceState::Dead { until: None, .. }
+                )
+            })
             .count()
+    }
+
+    /// Ids of instances currently serving a role — the candidate set
+    /// fault injection crashes/straggles (Flipping/Dead/Retired slots
+    /// have no state left to kill).
+    pub fn live_roles(&self) -> Vec<usize> {
+        self.insts
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state.as_role().is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Whether slot `i` is crashed (restarting or permanent).
+    pub fn is_dead(&self, i: usize) -> bool {
+        matches!(self.insts[i].state, InstanceState::Dead { .. })
+    }
+
+    /// Whether any crashed slot is scheduled to restart — capacity that
+    /// *will* return, which recovery paths wait for instead of burning a
+    /// request's retry budget against a temporary hole.
+    pub fn any_restart_pending(&self) -> bool {
+        self.insts
+            .iter()
+            .any(|s| matches!(s.state, InstanceState::Dead { until: Some(_), .. }))
     }
 
     pub fn accepts_work(&self, i: usize) -> bool {
@@ -244,6 +287,58 @@ impl InstancePool {
         self.insts[i].drain_to = None;
         swapped
     }
+
+    /// Abrupt fault-injected failure of `i` — the crash twin of
+    /// [`InstancePool::retire`], with the drain requirement deliberately
+    /// absent: queued and in-flight work dies with the role state (the
+    /// driver harvests it *before* calling this, then re-queues or fails
+    /// each request). Bumps the epoch so stale completions and the
+    /// `prefilled_by` KV-release guard go inert, clears any drain target
+    /// (a crash overtakes an in-progress drain), and returns
+    /// `(role, swapped_out_tokens)` for the driver's graveyard accounting
+    /// — the same swap-tally rescue the flip path gained in the
+    /// flip-graveyard fix, which an abrupt exit needs even more: without
+    /// it a crashed slot's cumulative swap traffic would silently vanish
+    /// from the run totals. Returns `None` (and does nothing) if the slot
+    /// serves no role (already dead, flipping, or retired).
+    ///
+    /// KV invariants are still checked on the way out: a crash destroys
+    /// *contents*, not bookkeeping consistency — corruption present at
+    /// the crash instant is a real bug and must fail loudly.
+    pub fn crash(&mut self, i: usize, until: Option<Us>) -> Option<(Role, u64)> {
+        let role = self.insts[i].state.role()?;
+        self.insts[i].state.debug_check_kv();
+        let swapped = self.insts[i].state.swapped_out_tokens();
+        self.insts[i].state = InstanceState::Dead { role, until };
+        self.insts[i].epoch += 1;
+        self.insts[i].drain_to = None;
+        Some((role, swapped))
+    }
+
+    /// Bring a crashed slot back with a fresh (empty) role state. The
+    /// epoch stays at its post-crash value — the restarted incarnation is
+    /// the *new* epoch, so anything stamped with the pre-crash epoch can
+    /// never land on it. Returns the role to restart as, or `None` (and
+    /// does nothing) if the slot is not dead (e.g. a duplicate restart
+    /// event); the caller installs the state it builds for that role via
+    /// [`InstancePool::install_restarted`].
+    pub fn dead_role(&self, i: usize) -> Option<Role> {
+        match self.insts[i].state {
+            InstanceState::Dead { role, .. } => Some(role),
+            _ => None,
+        }
+    }
+
+    /// Install the fresh role state on a dead slot (restart). Returns
+    /// false (and does nothing) if the slot is not dead.
+    pub fn install_restarted(&mut self, i: usize, state: InstanceState) -> bool {
+        if !matches!(self.insts[i].state, InstanceState::Dead { .. }) {
+            return false;
+        }
+        self.insts[i].state = state;
+        self.insts[i].drain_to = None;
+        true
+    }
 }
 
 #[cfg(test)]
@@ -299,6 +394,54 @@ mod tests {
         // a second flip keeps bumping
         pool.begin_flip(0, Role::Prefill);
         assert_eq!(pool.epoch(0), 2);
+    }
+
+    #[test]
+    fn crash_needs_no_drain_bumps_epoch_and_harvests_swap_tally() {
+        let mut pool = InstancePool::new();
+        pool.push(prefill());
+        pool.push(decode());
+        // a crash lands on an undrained, even mid-drain, instance
+        pool.begin_drain(0, DrainTarget::Flip(Role::Decode));
+        let (role, swapped) = pool.crash(0, Some(500)).expect("live role crashes");
+        assert_eq!(role, Role::Prefill);
+        assert_eq!(swapped, 0);
+        assert_eq!(pool.epoch(0), 1, "crash bumps the epoch like flip/retire");
+        assert!(pool.is_dead(0));
+        assert!(pool.get(0).drain_to.is_none(), "crash overtakes the drain");
+        assert_eq!(pool.n_active(Role::Prefill), 0);
+        assert_eq!(pool.n_live(), 2, "dead-with-restart still occupies a slot");
+        assert!(pool.any_restart_pending());
+        assert_eq!(pool.live_roles(), vec![1]);
+        // crashing a dead slot is a no-op
+        assert!(pool.crash(0, None).is_none());
+        assert_eq!(pool.epoch(0), 1);
+    }
+
+    #[test]
+    fn permanent_crash_frees_elastic_capacity() {
+        let mut pool = InstancePool::new();
+        pool.push(prefill());
+        pool.push(decode());
+        pool.crash(1, None);
+        assert_eq!(pool.n_live(), 1, "permanent dead counts like retired");
+        assert!(!pool.any_restart_pending());
+        assert!(pool.is_drained(1), "roleless slots count as drained");
+    }
+
+    #[test]
+    fn restart_installs_fresh_state_under_the_post_crash_epoch() {
+        let mut pool = InstancePool::new();
+        pool.push(decode());
+        pool.crash(0, Some(1_000));
+        assert_eq!(pool.dead_role(0), Some(Role::Decode));
+        assert!(pool.install_restarted(0, decode()));
+        assert_eq!(pool.epoch(0), 1, "restart keeps the post-crash epoch");
+        assert_eq!(pool.n_active(Role::Decode), 1);
+        assert!(!pool.is_dead(0));
+        // duplicate restart events land on a live slot: no-op
+        assert!(!pool.install_restarted(0, prefill()));
+        assert_eq!(pool.dead_role(0), None);
     }
 
     #[test]

@@ -106,6 +106,33 @@ impl PrefillInst {
     pub fn release_resident(&mut self, tokens: u64) {
         self.resident_kv = self.resident_kv.saturating_sub(tokens);
     }
+
+    /// Crash harvest: every request whose prefill state dies with this
+    /// instance — the scheduler backlog, the chunker's open requests, and
+    /// the chunk executing when the crash hit (its PrefillIterDone will be
+    /// epoch-dropped, so partial progress is lost and these re-prefill
+    /// from token 0). Ids are deduped — an open request usually also has a
+    /// segment in the in-flight chunk. All load and residency tallies
+    /// reset to zero so nothing stays attributed to the dead incarnation.
+    /// Requests already prefilled here but awaiting transfer are *not*
+    /// harvested: their in-flight TransferDone carries the old epoch and
+    /// the driver recovers them when it lands stale.
+    pub fn harvest_crashed(&mut self) -> Vec<crate::types::ReqId> {
+        let mut ids: Vec<crate::types::ReqId> = Vec::new();
+        while let Some(m) = self.sched.pop() {
+            ids.push(m.id);
+        }
+        ids.extend(self.chunker.drain_open().into_iter().map(|m| m.id));
+        if let Some(chunk) = self.current.take() {
+            ids.extend(chunk.segments.iter().map(|s| s.req));
+        }
+        self.busy = false;
+        self.resident_kv = 0;
+        self.pending_pred = 0;
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
 }
 
 impl InstanceRole for PrefillInst {
@@ -178,6 +205,21 @@ mod tests {
         assert!(!p.busy);
         assert_eq!(chunk.tokens, 512);
         assert_eq!(p.last_active, 7);
+    }
+
+    #[test]
+    fn harvest_crashed_collects_backlog_open_and_inflight() {
+        let mut p = inst();
+        for i in 0..3 {
+            p.sched.push(meta(i, 600));
+        }
+        p.admit_ready(512, u64::MAX); // reqs 0,1 enter the chunker; 2 stays queued
+        let _ = p.begin_chunk(&CostModel::default(), 0).unwrap(); // req 0 mid-chunk
+        let lost = p.harvest_crashed();
+        assert_eq!(lost, vec![0, 1, 2], "backlog + open + in-flight, deduped");
+        assert_eq!(p.load(), 0, "no load left on the dead incarnation");
+        assert_eq!(p.resident_kv, 0);
+        assert!(InstanceRole::drained(&p));
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod decode;
 pub mod fabric;
+pub mod fault;
 pub mod instance;
 pub mod kvcache;
 pub mod metrics;
@@ -42,6 +43,7 @@ pub use api::{
     TimelineObserver,
 };
 pub use baseline::{run_baseline, BaselineConfig};
+pub use fault::{FaultConfig, FaultKind, FaultPlan, FaultPlanSpec, FaultSpec};
 pub use slo::{AdmissionGate, ClassDef, ClassSpec, SloConfig, TokenBucket};
 pub use coordinator::{run_cluster, Cluster, ClusterConfig};
 pub use instance::{InstancePool, InstanceRole, InstanceState};

@@ -14,9 +14,10 @@
 //! panic.)
 
 use tetri_infer::api::{
-    class_keys, elastic_keys, parse_class_flag, parse_decode_policy, parse_dispatch, parse_link,
-    parse_predictor, parse_prefill_policy, parse_workload, phase_keys, spec_keys, value_vocab,
-    Driver as _, ElasticSpec, NullObserver, Observer, ProgressObserver, Registry, Scenario,
+    class_keys, elastic_keys, fault_event_keys, fault_keys, parse_class_flag, parse_decode_policy,
+    parse_dispatch, parse_fault_flag, parse_link, parse_predictor, parse_prefill_policy,
+    parse_workload, phase_keys, spec_keys, value_vocab, Driver as _, ElasticSpec, FaultPlanSpec,
+    NullObserver, Observer, ProgressObserver, Registry, Scenario,
 };
 use tetri_infer::metrics::vs_row_from;
 #[cfg(feature = "pjrt")]
@@ -70,6 +71,12 @@ fn usage() -> ! {
                           (also: rate_limit=R, burst=B, max_queue=N)
     --admission on|off    toggle the per-class entry admission gate
                           (token-bucket + queue-depth sheds)
+    --fault SPEC          inject one fault event (repeatable; replaces the
+                          spec's fault schedule when given). SPEC is
+                          key=value pairs, e.g.
+                          kind=restart,at_ms=150,instance=2,down_ms=300
+                          (kinds: crash, restart, link_out, link_degrade,
+                          straggler; also factor=F for the slow kinds)
     --list                print registered drivers, scenario spec files,
                           and recognized spec keys/values, then exit
   serve options:
@@ -129,6 +136,7 @@ const SIM_FLAGS: &[(&str, bool)] = &[
     ("--no-baseline", false),
     ("--class", true),
     ("--admission", true),
+    ("--fault", true),
     ("--list", false),
 ];
 
@@ -292,6 +300,18 @@ fn scenario_from_args(args: &[String]) -> Scenario {
             _ => die(&format!("--admission expects on|off, got '{v}'")),
         };
     }
+    // --fault is repeatable: given at all, the flags replace the spec's
+    // fault event list wholesale (recovery knobs keep the spec's values,
+    // so `--spec chaos.json --fault ...` retunes the schedule without
+    // silently resetting retry/backoff/watermark).
+    let fault_flags = arg_vals(args, "--fault");
+    if !fault_flags.is_empty() {
+        let events = fault_flags
+            .iter()
+            .map(|s| parse_fault_flag(s).unwrap_or_else(|e| die(&e)))
+            .collect();
+        sc.faults.get_or_insert_with(FaultPlanSpec::default).events = events;
+    }
     sc
 }
 
@@ -322,6 +342,8 @@ fn cmd_list() {
     println!("  phases[] keys: {}", phase_keys().join(", "));
     println!("  elastic keys: {}", elastic_keys().join(", "));
     println!("  classes[] keys: {}", class_keys().join(", "));
+    println!("  faults keys: {}", fault_keys().join(", "));
+    println!("  faults.events[] keys: {}", fault_event_keys().join(", "));
     for (key, vals) in value_vocab() {
         println!("{key} values: {}", vals.join(", "));
     }

@@ -29,6 +29,16 @@ pub struct ClassMetrics {
     /// Requests of this class the admission gate shed (counted, never
     /// silently dropped).
     pub shed: u64,
+    /// Requests of this class permanently failed by faults (retry budget
+    /// exhausted or capacity never returned) — the third conservation
+    /// outcome: `finished + shed + failed == arrivals`.
+    pub failed: u64,
+    /// Requests of this class that *finished* after losing in-flight
+    /// state to at least one fault (lost-then-recovered).
+    pub recovered: u64,
+    /// Streaming recovery-latency distribution (µs from first fault loss
+    /// to finish) over recovered requests of this class.
+    pub recovery_hist: LogHist,
     /// Finishes meeting the class TTFT deadline (all of them when the
     /// class declares none — vacuous attainment).
     pub ttft_attained: u64,
@@ -141,6 +151,23 @@ pub struct RunMetrics {
     /// numerator. With no deadlines declared this equals `finished`, so
     /// goodput degenerates to plain throughput.
     pub attained: u64,
+    /// Requests permanently failed by faults (Σ per-class). Completes the
+    /// conservation law under fault injection:
+    /// `finished + shed + failed == arrivals`.
+    pub failed: u64,
+    /// Requests that finished after surviving at least one fault loss
+    /// (Σ per-class lost-then-recovered).
+    pub recovered: u64,
+    /// Streaming run-wide recovery-latency distribution (µs from first
+    /// fault loss to finish) over recovered requests.
+    pub recovery_hist: LogHist,
+    /// Fault-plan events actually injected (skipped events excluded).
+    pub faults_injected: u64,
+    /// KV transfers that timed out against a link outage and re-sent.
+    pub transfer_resends: u64,
+    /// Virtual µs the coordinator spent in degraded mode (surviving
+    /// capacity below the fault plan's watermark).
+    pub degraded_us: Us,
 }
 
 /// TTFT/JCT/resource for one run, computed once and threaded through
@@ -266,6 +293,25 @@ impl RunMetrics {
         Self::class_entry(&mut self.per_class, class).shed += 1;
     }
 
+    /// Stream one permanent fault failure: counted run-wide and per class
+    /// (the `shed` twin for the fault path — failed requests are
+    /// first-class outcomes too).
+    pub fn note_fail(&mut self, class: u8) {
+        self.failed += 1;
+        Self::class_entry(&mut self.per_class, class).failed += 1;
+    }
+
+    /// Stream one recovered completion: `dur` is the µs from the
+    /// request's first fault loss to its finish. Called by the engine
+    /// just before `note_finish` stamps the record.
+    pub fn note_recovery(&mut self, class: u8, dur: Us) {
+        self.recovered += 1;
+        self.recovery_hist.record(dur);
+        let c = Self::class_entry(&mut self.per_class, class);
+        c.recovered += 1;
+        c.recovery_hist.record(dur);
+    }
+
     /// SLO-attained finishes per second of makespan (goodput).
     pub fn goodput_rps(&self) -> f64 {
         self.attained as f64 / (self.makespan_us.max(1) as f64 / US_PER_SEC as f64)
@@ -278,14 +324,14 @@ impl RunMetrics {
         for (i, c) in self.per_class.iter().enumerate() {
             // every *declared* class reports (even with zero traffic);
             // undeclared slots only appear once traffic touched them
-            if i >= self.classes.len() && c.finished == 0 && c.shed == 0 {
+            if i >= self.classes.len() && c.finished == 0 && c.shed == 0 && c.failed == 0 {
                 continue;
             }
             let tier =
                 self.classes.get(i).map(|d| d.tier.to_string()).unwrap_or_else(|| "-".into());
             let ttft = c.ttft_hist.summary_scaled(1e-3);
             let tpot = c.tpot_hist.summary_scaled(1e-3);
-            rows.push(format!(
+            let mut row = format!(
                 "  class {:<12} tier {:<2} finished {:>6}  shed {:>5}  TTFT attain {:>5.1}% \
                  (mean {:>7.1} ms)  TPOT attain {:>5.1}% (mean {:>6.1} ms)  SLO attain {:>5.1}%",
                 self.class_name(i as u8),
@@ -297,7 +343,18 @@ impl RunMetrics {
                 c.tpot_attainment() * 100.0,
                 tpot.mean,
                 c.attainment() * 100.0,
-            ));
+            );
+            // fault columns only when the run saw faults — fault-free
+            // output stays byte-identical to pre-fault builds
+            if self.failed > 0 || self.recovered > 0 {
+                row.push_str(&format!(
+                    "  failed {:>5}  recovered {:>5} (mean {:>7.1} ms)",
+                    c.failed,
+                    c.recovered,
+                    c.recovery_hist.summary_scaled(1e-3).mean,
+                ));
+            }
+            rows.push(row);
         }
         rows
     }
@@ -413,6 +470,8 @@ mod tests {
             first_token: first,
             finished: fin,
             predicted: None,
+            retries: 0,
+            recovered: false,
         }
     }
 
@@ -505,6 +564,33 @@ mod tests {
         assert!(rows[0].contains("chat") && rows[0].contains("attain"), "{}", rows[0]);
         assert!(rows[1].contains("batch") && rows[1].contains("shed"), "{}", rows[1]);
         assert_eq!(m.class_name(7), "class7");
+    }
+
+    #[test]
+    fn fault_outcomes_count_per_class_and_render_rows() {
+        let mut m = RunMetrics::default();
+        m.note_fail(0);
+        m.note_fail(2);
+        m.note_recovery(2, 150_000);
+        let mut r = rec(0, 1_000, 2_000, 4);
+        r.class = 2;
+        r.recovered = true;
+        r.retries = 1;
+        m.note_finish(&r);
+        assert_eq!(m.failed, 2);
+        assert_eq!(m.recovered, 1);
+        assert_eq!(m.per_class[0].failed, 1);
+        assert_eq!(m.per_class[2].failed, 1);
+        assert_eq!(m.per_class[2].recovered, 1);
+        assert_eq!(m.per_class[2].recovery_hist.count(), 1);
+        assert_eq!(m.recovery_hist.count(), 1);
+        let rows = m.class_rows();
+        assert!(rows.iter().any(|r| r.contains("failed")), "fault columns render: {rows:?}");
+        // conservation bookkeeping: 1 finished + 0 shed + 2 failed = 3 outcomes
+        assert_eq!(m.finished + m.shed + m.failed, 3);
+        // fault-free runs keep the legacy row shape
+        let clean = RunMetrics::default();
+        assert!(!clean.class_rows().iter().any(|r| r.contains("failed")));
     }
 
     #[test]

@@ -121,6 +121,15 @@ impl Chunker {
         self.pending -= used as u64;
         Some(Chunk { segments, tokens: used, chunk_size: self.chunk_size })
     }
+
+    /// Crash harvest: take every open request (partially prefilled
+    /// progress is lost — recovery re-prefills from token 0) and zero the
+    /// pending-token tally so no load remains attributed to the dead
+    /// incarnation. Requests come back in queue order.
+    pub fn drain_open(&mut self) -> Vec<ReqMeta> {
+        self.pending = 0;
+        self.open.drain(..).map(|o| o.req).collect()
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +262,17 @@ mod tests {
         while c.next_chunk().is_some() {}
         assert_eq!(c.pending_tokens(), 0);
         assert!(!c.has_work());
+    }
+
+    #[test]
+    fn drain_open_returns_requests_and_zeroes_pending() {
+        let mut c = chunker_with(&[(1, 700), (2, 300)], 512);
+        let _ = c.next_chunk().unwrap(); // req 1 partially prefilled
+        let lost = c.drain_open();
+        assert_eq!(lost.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(c.pending_tokens(), 0, "no load left on the dead incarnation");
+        assert!(!c.has_work());
+        assert!(c.next_chunk().is_none());
     }
 
     #[test]

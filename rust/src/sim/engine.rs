@@ -96,6 +96,16 @@ pub struct ReqState {
     /// The arrival event fired at least once (mid-flip retries re-enqueue
     /// `Event::Arrival`; observers must see one arrival per request).
     pub seen: bool,
+    /// Times this request was re-queued after a fault destroyed its
+    /// in-flight state (crashed instance, dead KV). Bounded by the fault
+    /// plan's retry budget; 0 in fault-free runs.
+    pub retries: u32,
+    /// The request lost in-flight state to a fault at least once; stamped
+    /// onto the final record so recovered completions are countable.
+    pub recovered: bool,
+    /// Virtual time of the *first* fault loss ([`NO_TIME`] = never lost) —
+    /// the recovery-latency clock starts here and stops at finish.
+    pub lost_at: Us,
 }
 
 /// Queue + arena + metrics + termination condition: the state every DES
@@ -159,7 +169,15 @@ impl EngineCore {
     /// one is free. Events carry the returned slot from here on; the
     /// original request id resurfaces only in the final `RequestRecord`.
     pub fn admit(&mut self, req: Request) -> ReqId {
-        let st = ReqState { req, first_token: NO_TIME, prefilled_by: None, seen: false };
+        let st = ReqState {
+            req,
+            first_token: NO_TIME,
+            prefilled_by: None,
+            seen: false,
+            retries: 0,
+            recovered: false,
+            lost_at: NO_TIME,
+        };
         match self.free_slots.pop() {
             Some(slot) => {
                 self.requests[slot as usize] = st;
@@ -222,7 +240,13 @@ impl EngineCore {
             first_token: first,
             finished: now,
             predicted: st.req.predicted,
+            retries: st.retries,
+            recovered: st.recovered,
         };
+        if st.recovered {
+            let lost_at = st.lost_at;
+            self.metrics.note_recovery(rec.class, now.saturating_sub(lost_at));
+        }
         obs.on_finish(now, &rec);
         let (ttft_violated, tpot_violated) = self.metrics.note_finish(&rec);
         if ttft_violated || tpot_violated {
@@ -243,6 +267,34 @@ impl EngineCore {
         self.metrics.note_shed(req.class);
         self.free_slots.push(slot);
         self.outstanding -= 1;
+    }
+
+    /// Record a permanent fault failure: the request exhausted its retry
+    /// budget (or no capacity can ever return). Mirrors [`EngineCore::shed`]
+    /// exactly — observer hook, per-class count, slot recycle, termination
+    /// counter — so the conservation law extends to
+    /// `finished + shed + failed == arrivals` and the loop still ends.
+    pub fn fail(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        let req = self.requests[slot as usize].req;
+        let now = self.queue.now();
+        obs.on_fault(now, "request_failed", None);
+        self.metrics.note_fail(req.class);
+        self.free_slots.push(slot);
+        self.outstanding -= 1;
+    }
+
+    /// Stamp a fault loss on a request about to be re-queued: bump its
+    /// retry counter, mark it recovered-in-progress, and start the
+    /// recovery clock at the *first* loss. Returns the new retry count
+    /// (the caller checks it against the plan's budget).
+    pub fn note_lost(&mut self, slot: ReqId, now: Us) -> u32 {
+        let st = &mut self.requests[slot as usize];
+        st.retries += 1;
+        st.recovered = true;
+        if st.lost_at == NO_TIME {
+            st.lost_at = now;
+        }
+        st.retries
     }
 
     /// Grow the per-instance metric vectors to cover `n_insts` slots (the
@@ -553,6 +605,45 @@ mod tests {
         assert_eq!(core.in_flight(), 0);
         let slot2 = core.admit(req(6, 1));
         assert_eq!(slot, slot2, "shed slots recycle like finished ones");
+    }
+
+    #[test]
+    fn fail_recycles_slot_counts_class_and_fires_hook() {
+        struct Fails(u64);
+        impl Observer for Fails {
+            fn on_fault(&mut self, _now: Us, _kind: &'static str, _instance: Option<usize>) {
+                self.0 += 1;
+            }
+        }
+        let mut core = EngineCore::new(1);
+        core.outstanding = 2;
+        let slot = core.admit(req(5, 0));
+        let mut obs = Fails(0);
+        core.fail(slot, &mut obs);
+        assert_eq!(obs.0, 1, "on_fault must fire");
+        assert_eq!(core.metrics.failed, 1);
+        assert_eq!(core.metrics.per_class[0].failed, 1);
+        assert_eq!(core.outstanding, 1);
+        assert_eq!(core.in_flight(), 0);
+        let slot2 = core.admit(req(6, 1));
+        assert_eq!(slot, slot2, "failed slots recycle like finished ones");
+    }
+
+    #[test]
+    fn note_lost_counts_retries_and_starts_recovery_clock() {
+        let mut core = EngineCore::new(1);
+        core.outstanding = 1;
+        let slot = core.admit(req(9, 0));
+        core.queue.schedule_in(100, Event::MonitorTick);
+        core.queue.pop();
+        assert_eq!(core.note_lost(slot, 100), 1);
+        assert_eq!(core.note_lost(slot, 250), 2, "retry count accumulates");
+        assert_eq!(core.requests[slot as usize].lost_at, 100, "clock starts at first loss");
+        core.finish(slot, 100, &mut NullObserver);
+        let rec = &core.metrics.records[0];
+        assert_eq!(rec.retries, 2);
+        assert!(rec.recovered);
+        assert_eq!(core.metrics.recovered, 1);
     }
 
     #[test]

@@ -27,24 +27,37 @@ use crate::types::Us;
 
 /// Event payloads understood by the cluster driver. Kept as a plain enum
 /// (not boxed closures) so runs are deterministic and debuggable.
+///
+/// Per-instance completion events carry the slot `epoch` they were
+/// scheduled under: a crash bumps the slot's epoch without waiting for a
+/// drain (unlike flips, which only fire on drained instances), so a
+/// completion can outlive the incarnation that scheduled it. Handlers
+/// drop stale-epoch deliveries — a restarted incarnation never sees its
+/// predecessor's events. Fault-free runs never observe a mismatch.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Event {
     /// A request arrives at the global scheduler.
     Arrival(crate::types::ReqId),
     /// A prefill instance finished its current iteration.
-    PrefillIterDone { instance: usize },
+    PrefillIterDone { instance: usize, epoch: u32 },
     /// Sequential-mode length prediction finished for a request.
-    PredictDone { instance: usize, req: crate::types::ReqId },
+    PredictDone { instance: usize, epoch: u32, req: crate::types::ReqId },
     /// A KV-cache transfer to a decode instance completed.
-    TransferDone { instance: usize, req: crate::types::ReqId },
+    TransferDone { instance: usize, epoch: u32, req: crate::types::ReqId },
     /// A decode instance finished its current iteration.
-    DecodeIterDone { instance: usize },
+    DecodeIterDone { instance: usize, epoch: u32 },
     /// Cluster monitor tick: refresh load stats, broadcast, maybe flip.
     MonitorTick,
     /// An instance finished draining and flips role (§3.5).
     FlipDone { instance: usize },
     /// Coupled (vLLM baseline) instance finished an iteration.
-    CoupledIterDone { instance: usize },
+    CoupledIterDone { instance: usize, epoch: u32 },
+    /// Deliver fault-plan event `k` (index into `FaultConfig::events`).
+    Fault(usize),
+    /// A crashed instance's downtime elapsed: restart it with fresh state.
+    Restart { instance: usize },
+    /// Backoff timer for a fault-lost request expired: re-queue it.
+    Retry(crate::types::ReqId),
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]

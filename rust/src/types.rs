@@ -171,6 +171,12 @@ pub struct RequestRecord {
     /// Time the last token was produced — JCT basis.
     pub finished: Us,
     pub predicted: Option<BucketPrediction>,
+    /// How many times this request was re-queued after a fault lost its
+    /// in-flight state (0 in fault-free runs).
+    pub retries: u32,
+    /// True if the request finished after surviving at least one fault
+    /// (its recovery latency feeds the per-class recovery histogram).
+    pub recovered: bool,
 }
 
 impl RequestRecord {
@@ -245,6 +251,8 @@ mod tests {
             first_token: 150,
             finished: 300,
             predicted: None,
+            retries: 0,
+            recovered: false,
         };
         assert_eq!(rec.ttft(), 50);
         assert_eq!(rec.jct(), 200);

@@ -36,7 +36,7 @@ const SEED: u64 = 42;
 fn fingerprint(m: &RunMetrics) -> String {
     format!(
         "makespan_us={} jct_mean_ms={:.6} ttft_mean_ms={:.6} n={} swapped={} flips={} \
-         scales=+{}/-{} shed={} attained={}",
+         scales=+{}/-{} shed={} attained={} failed={} recovered={} faults={}",
         m.makespan_us,
         m.jct_summary().mean,
         m.ttft_summary().mean,
@@ -46,7 +46,10 @@ fn fingerprint(m: &RunMetrics) -> String {
         m.scale_ups,
         m.scale_downs,
         m.shed,
-        m.attained
+        m.attained,
+        m.failed,
+        m.recovered,
+        m.faults_injected
     )
 }
 
@@ -129,7 +132,51 @@ fn cases() -> Vec<(String, Box<dyn Fn() -> RunMetrics>)> {
             sc.run().expect("slo_overload spec resolves").metrics
         }),
     ));
+    // the chaos specs: crash → requeue → restart → elastic re-expansion,
+    // link outage/degrade windows, and a correlated failure storm — the
+    // fault subsystem's whole recovery trajectory stays pinned (the
+    // fingerprint carries failed/recovered/faults counters)
+    for name in ["chaos_crash", "chaos_link", "chaos_storm"] {
+        out.push((
+            format!("scenario/{name}-spec"),
+            Box::new(move || {
+                let path = repo_root().join(format!("scenarios/{name}.json"));
+                let sc = Scenario::load(path.to_str().unwrap())
+                    .unwrap_or_else(|e| panic!("{name} spec parses: {e}"));
+                sc.run().unwrap_or_else(|e| panic!("{name} spec resolves: {e}")).metrics
+            }),
+        ));
+    }
     out
+}
+
+/// Fault-free parity: a scenario with `faults` absent and one carrying an
+/// empty-events fault plan must produce bit-identical trajectories, on
+/// both drivers — the fault subsystem's scheduling hooks may not perturb
+/// a run that injects nothing.
+#[test]
+fn empty_fault_plan_runs_are_bit_identical_to_fault_free_runs() {
+    use tetri_infer::api::FaultPlanSpec;
+    for driver in ["tetri", "vllm", "hybrid"] {
+        let base = Scenario {
+            driver: driver.to_string(),
+            workload: WorkloadKind::Mixed,
+            requests: 64,
+            rate: 24.0,
+            n_prefill: 1,
+            n_decode: 2,
+            ..Scenario::builder().seed(SEED).build()
+        };
+        let faulted =
+            Scenario { faults: Some(FaultPlanSpec::default()), ..base.clone() };
+        let a = base.run().expect("fault-free run").metrics;
+        let b = faulted.run().expect("empty-plan run").metrics;
+        assert_records_identical(&format!("fault-parity/{driver}"), &a, &b);
+        assert_eq!(a.events, b.events, "{driver}: event counts diverged");
+        assert_eq!(b.faults_injected, 0);
+        assert_eq!(b.failed, 0);
+        assert!(b.records.iter().all(|r| r.retries == 0 && !r.recovered));
+    }
 }
 
 #[test]
@@ -189,7 +236,7 @@ fn shipped_scenario_specs_round_trip_and_resolve() {
         registry.resolve(&sc).unwrap_or_else(|e| panic!("{path_str}: {e}"));
         n += 1;
     }
-    assert!(n >= 17, "expected the shipped scenario set (incl. slo_mixed/slo_overload), found {n} specs");
+    assert!(n >= 20, "expected the shipped scenario set (incl. the chaos_* specs), found {n} specs");
 }
 
 /// Assert two runs produced identical per-request trajectories: same

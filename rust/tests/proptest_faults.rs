@@ -1,0 +1,206 @@
+//! Property tests for the fault-injection subsystem (hand-rolled
+//! generators: no proptest crate in the vendored environment; the failing
+//! case's config is printed via assert context).
+//!
+//! The contract under test is the conservation law the recovery design
+//! rests on: whatever chaos schedule runs against whichever driver,
+//! every arrival ends in exactly one of three ledgers —
+//!
+//!     finished + shed + failed == arrivals
+//!
+//! — and the run *terminates* (a hung DES would time the suite out).
+//! Alongside it, the per-request recovery invariants: a finished request
+//! never spent more than the plan's retry budget, recovery latency is
+//! only stamped on requests that were actually lost, and trajectories
+//! stay causal (arrival ≤ first token ≤ finish) through any number of
+//! crashes, restarts, link windows, and stragglers.
+
+use tetri_infer::api::{FaultKind, FaultPlanSpec, FaultSpec, Scenario};
+use tetri_infer::util::Pcg;
+use tetri_infer::workload::WorkloadKind;
+
+/// A random chaos schedule: 1–5 events of any kind over the first ~1.2 s
+/// of virtual time, half with named targets (which may or may not be
+/// alive when they fire — `Skipped` injections must be harmless), half
+/// drawn from the plan's own RNG stream at fire time.
+fn random_faults(rng: &mut Pcg) -> FaultPlanSpec {
+    let n_events = 1 + rng.index(5);
+    let mut events = Vec::new();
+    for _ in 0..n_events {
+        let kind = [
+            FaultKind::Crash,
+            FaultKind::Restart,
+            FaultKind::LinkOut,
+            FaultKind::LinkDegrade,
+            FaultKind::Straggler,
+        ][rng.index(5)];
+        let at_ms = 10.0 + rng.f64() * 1200.0;
+        let instance = if rng.f64() < 0.5 { Some(rng.index(4)) } else { None };
+        let down_ms = Some(20.0 + rng.f64() * 600.0);
+        let factor = match kind {
+            FaultKind::LinkDegrade | FaultKind::Straggler => Some(1.5 + rng.f64() * 3.0),
+            _ => None,
+        };
+        events.push(FaultSpec { kind, at_ms, instance, down_ms, factor });
+    }
+    FaultPlanSpec {
+        events,
+        retry_max: 2 + rng.index(4) as u32,
+        backoff_ms: 5.0 + rng.f64() * 50.0,
+        watermark: [0.0, 0.5, 0.9][rng.index(3)],
+    }
+}
+
+fn random_scenario(rng: &mut Pcg, driver: &str) -> Scenario {
+    Scenario {
+        driver: driver.to_string(),
+        workload: WorkloadKind::ALL[rng.index(5)],
+        requests: 8 + rng.index(72),
+        rate: [0.0, 16.0, 64.0][rng.index(3)],
+        n_prefill: 1 + rng.index(2),
+        n_decode: 1 + rng.index(2),
+        n_coupled: if driver == "hybrid" { 1 } else { 0 },
+        // elastic replacement for permanently dead slots, half the time
+        elastic: if rng.f64() < 0.5 {
+            Some(tetri_infer::ElasticSpec { max_instances: 6, ..Default::default() })
+        } else {
+            None
+        },
+        faults: Some(random_faults(rng)),
+        ..Scenario::builder().seed(rng.next_u64() % (1 << 50)).build()
+    }
+}
+
+#[test]
+fn random_fault_plans_conserve_every_arrival_on_every_driver() {
+    let mut rng = Pcg::new(0xfa17);
+    for case in 0..36 {
+        let driver = ["tetri", "vllm", "hybrid"][case % 3];
+        let sc = random_scenario(&mut rng, driver);
+        let total = sc.total_requests() as u64;
+        let retry_max = sc.faults.as_ref().unwrap().retry_max;
+        let ctx = || format!("case {case} ({driver}): {}", sc.summary_line());
+        let m = sc.run().unwrap_or_else(|e| panic!("{}: {e}", ctx())).metrics;
+        assert_eq!(
+            m.finished + m.shed + m.failed,
+            total,
+            "{}: conservation violated (finished={} shed={} failed={})",
+            ctx(),
+            m.finished,
+            m.shed,
+            m.failed
+        );
+        assert_eq!(m.records.len() as u64, m.finished, "{}: one record per finish", ctx());
+        for r in &m.records {
+            assert!(
+                r.retries <= retry_max,
+                "{}: request {} finished after {} retries, budget {retry_max}",
+                ctx(),
+                r.id,
+                r.retries
+            );
+            assert_eq!(
+                r.recovered,
+                r.retries > 0,
+                "{}: recovered marks exactly the lost-then-finished requests ({:?})",
+                ctx(),
+                r
+            );
+            assert!(r.first_token >= r.arrival, "{}: TTFT causality {r:?}", ctx());
+            assert!(r.finished >= r.first_token, "{}: JCT causality {r:?}", ctx());
+        }
+        assert_eq!(
+            m.recovered,
+            m.records.iter().filter(|r| r.recovered).count() as u64,
+            "{}: recovery counter matches the records",
+            ctx()
+        );
+        // failures can only come from spent retry budgets, which exist
+        // only when something was actually injected
+        if m.faults_injected == 0 {
+            assert_eq!(m.failed, 0, "{}: failures require injections", ctx());
+            assert_eq!(m.recovered, 0, "{}: recoveries require injections", ctx());
+        }
+    }
+}
+
+#[test]
+fn fault_runs_are_deterministic() {
+    let mut rng = Pcg::new(0xdead_fa17);
+    for case in 0..9 {
+        let driver = ["tetri", "vllm", "hybrid"][case % 3];
+        let sc = random_scenario(&mut rng, driver);
+        let a = sc.run().expect("run a").metrics;
+        let b = sc.run().expect("run b").metrics;
+        assert_eq!(a.makespan_us, b.makespan_us, "case {case} ({driver}): nondeterministic");
+        assert_eq!(a.events, b.events, "case {case} ({driver})");
+        assert_eq!(
+            (a.finished, a.shed, a.failed, a.recovered, a.faults_injected),
+            (b.finished, b.shed, b.failed, b.recovered, b.faults_injected),
+            "case {case} ({driver}): outcome ledgers diverged"
+        );
+        for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!(
+                (ra.id, ra.arrival, ra.first_token, ra.finished, ra.retries),
+                (rb.id, rb.arrival, rb.first_token, rb.finished, rb.retries),
+                "case {case} ({driver}): record trajectories diverged"
+            );
+        }
+    }
+}
+
+/// A crash-with-restart run on a single-decode cluster: the restarted
+/// (fresh, empty) incarnation must never hand back pre-crash state.
+/// Observable contract: with the only decode instance dead for the whole
+/// downtime window, no multi-token request can finish inside it — every
+/// decode-side completion after the crash lands strictly after the
+/// restart, and the requests the crash caught mid-decode re-enter
+/// prefill (recovered ≥ 1, each within the retry budget).
+#[test]
+fn restarted_instances_never_serve_pre_crash_state() {
+    let crash_ms = 120.0;
+    let down_ms = 300.0;
+    let sc = Scenario {
+        driver: "tetri".to_string(),
+        workload: WorkloadKind::Lphd,
+        requests: 32,
+        rate: 0.0,
+        n_prefill: 1,
+        n_decode: 1,
+        flip_idle_ms: None,
+        faults: Some(FaultPlanSpec {
+            events: vec![FaultSpec {
+                instance: Some(1),
+                down_ms: Some(down_ms),
+                ..FaultSpec::new(FaultKind::Restart, crash_ms)
+            }],
+            ..Default::default()
+        }),
+        ..Scenario::builder().seed(7).build()
+    };
+    let m = sc.run().expect("run").metrics;
+    assert_eq!(m.faults_injected, 1);
+    assert_eq!(m.finished + m.shed + m.failed, 32);
+    let crash_us = (crash_ms * 1e3) as u64;
+    let restart_us = ((crash_ms + down_ms) * 1e3) as u64;
+    assert!(
+        m.records.iter().any(|r| r.finished > crash_us),
+        "the crash must catch in-flight work"
+    );
+    for r in &m.records {
+        // the dead window is decode-silent: only prefill-side completions
+        // (single-token prompts) may finish inside it
+        if r.decode_len > 1 {
+            assert!(
+                r.finished <= crash_us || r.finished > restart_us,
+                "request {} finished at {} inside the downtime window ({}..{})",
+                r.id,
+                r.finished,
+                crash_us,
+                restart_us
+            );
+        }
+    }
+    assert!(m.recovered >= 1, "the crash must have lost resident decodes");
+    assert!(m.failed == 0, "a restart within the backoff horizon loses nothing");
+}

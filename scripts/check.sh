@@ -39,8 +39,8 @@ for spec in ../scenarios/*.json; do
   cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --requests 8 >/dev/null
   specs_run=$((specs_run + 1))
 done
-if [ "${specs_run}" -lt 17 ]; then
-  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 17)" >&2
+if [ "${specs_run}" -lt 20 ]; then
+  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 20)" >&2
   exit 1
 fi
 
@@ -56,6 +56,24 @@ for spec in ../scenarios/slo_mixed.json ../scenarios/slo_overload.json; do
       --requests 8 --no-baseline >/dev/null
   done
 done
+
+# Fault-injection matrix: every chaos spec must run under every driver
+# (the same deterministic chaos schedule fires against the disaggregated
+# cluster, the coupled baseline, and the hybrid fleet), and each run's
+# conservation law is re-checked end-to-end by the suite above; here we
+# smoke the full CLI path including the --fault flag spelling.
+for spec in ../scenarios/chaos_crash.json ../scenarios/chaos_link.json ../scenarios/chaos_storm.json; do
+  test -f "${spec}" || { echo "missing shipped chaos spec ${spec}" >&2; exit 1; }
+  for drv in tetri vllm hybrid; do
+    echo "chaos smoke: ${spec} under ${drv}"
+    cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --driver "${drv}" \
+      --requests 24 --no-baseline >/dev/null
+  done
+done
+echo "chaos smoke: CLI --fault flag"
+cargo run --release --quiet --bin tetri -- sim --workload Mixed --requests 24 --rate 24 \
+  --decode 2 --fault kind=restart,at_ms=100,instance=2,down_ms=250 \
+  --fault kind=straggler,at_ms=50,down_ms=300,factor=2 --no-baseline >/dev/null
 
 # Perf-regression canary: a timed 100k-request release-mode run through
 # the streaming/macro-stepped hot path (records off, no baseline run).

@@ -561,6 +561,67 @@ fn chaos() {
     out_json("chaos", &results_json(&results));
 }
 
+// ------------------------------------------------ prefix cache (KV reuse)
+
+/// The prefix-cache study (DESIGN.md §Prefix cache): the shipped reuse
+/// spec against its cache-off twin, then a hit-rate sweep over the
+/// prefix-population size (fewer distinct prefixes → more reuse) —
+/// TTFT and prefill-tokens-saved as a function of the achieved hit rate,
+/// plus the layer-wise transfer overlap the warm runs bank. Writes
+/// results/cache.{txt,csv,json}.
+fn cache() {
+    use tetri_infer::api::PrefixSpec;
+    let mut s = String::new();
+    writeln!(s, "== prefix cache: radix KV reuse — TTFT & tokens saved vs hit rate ==").unwrap();
+    let path = tetri_infer::util::repo_root().join("scenarios/prefix_reuse.json");
+    let warm = Scenario::load(path.to_str().unwrap()).expect("shipped prefix spec parses");
+    let spec = warm.prefix.expect("prefix_reuse.json carries a prefix block");
+    // cold twin: no stamps, no cache — the golden/property tests pin that
+    // this is bit-identical to a stamped run with the cache off
+    let mut cells = vec![SweepCell::new(
+        "cache/cold".to_string(),
+        Scenario { prefix: None, ..warm.clone() },
+    )];
+    for n in [256u32, 64, 16, 8, 2] {
+        cells.push(SweepCell::new(
+            format!("cache/warm-{n}p"),
+            Scenario {
+                prefix: Some(PrefixSpec { n_prefixes: n, ..spec }),
+                ..warm.clone()
+            },
+        ));
+    }
+    let results = run_cells(cells, default_workers());
+    let cold_ttft = results[0].report.metrics.ttft_summary().mean;
+    for cell in &results {
+        let m = &cell.report.metrics;
+        writeln!(
+            s,
+            "  {:<16} hit rate {:>5.1}%  saved {:>8} tok  TTFT {:>8.1} ms ({:+5.1}%)  \
+             JCT {:>9.1} ms  overlap {:>7.1} ms",
+            cell.label,
+            m.cache_hit_rate() * 100.0,
+            m.prefill_tokens_saved,
+            m.ttft_summary().mean,
+            (m.ttft_summary().mean / cold_ttft - 1.0) * 100.0,
+            m.jct_summary().mean,
+            m.overlap_us as f64 / 1e3,
+        )
+        .unwrap();
+    }
+    writeln!(
+        s,
+        "  (monotone lever: shrinking the prefix population raises the hit rate, \
+         which cuts prefill work and TTFT; overlap is the transfer time the \
+         layer-wise granularity hid behind prefill compute)"
+    )
+    .unwrap();
+    out("cache", &s);
+    fs::create_dir_all("results").ok();
+    fs::write("results/cache.csv", results_csv(&results)).unwrap();
+    out_json("cache", &results_json(&results));
+}
+
 // ------------------------------------------------- ablation (§3.3.4 disc.)
 
 fn ablation() {
@@ -575,7 +636,11 @@ fn ablation() {
         .seed(SEED)
         .link(LinkSpec::Socket)
         .build();
-    for (label, gran) in [("request-level", Granularity::RequestLevel), ("chunk-level", Granularity::ChunkLevel)] {
+    for (label, gran) in [
+        ("request-level", Granularity::RequestLevel),
+        ("chunk-level", Granularity::ChunkLevel),
+        ("layer-level", Granularity::LayerLevel),
+    ] {
         let m = run(&Scenario { transfer: gran, ..slow.clone() });
         writeln!(
             s,
@@ -678,6 +743,9 @@ fn main() {
     }
     if want("chaos") {
         tasks.push(Box::new(chaos));
+    }
+    if want("cache") {
+        tasks.push(Box::new(cache));
     }
     if want("ablation") {
         tasks.push(Box::new(ablation));

@@ -8,6 +8,10 @@
 //!     arrivals, records off, elastic pools): end-to-end events/sec,
 //!     macro-step collapse ratio, and peak arena size (the O(active)
 //!     memory witness — compare it against the request count).
+//!  3. **Prefix A/B** — scenarios/prefix_reuse.json warm (radix cache on)
+//!     vs its cold twin (`prefix` stripped) on a scaled-up request count:
+//!     events/sec both ways, the warm run's hit rate, and the TTFT cut
+//!     the cache buys. The cache must never cost engine throughput.
 //!
 //! Results merge into `BENCH_cluster.json` at the repo root under the
 //! `"engine"` key (read-modify-write, so benches/cluster.rs keeps its
@@ -121,6 +125,41 @@ fn main() {
     assert_eq!(m.n_finished(), sc.requests, "scale run must complete every request");
     assert!(m.records.is_empty(), "scale run must not retain records");
 
+    // ---- 3. prefix warm-vs-cold A/B ----------------------------------
+    let spec = repo_root().join("scenarios/prefix_reuse.json");
+    let mut warm_sc = Scenario::load(spec.to_str().unwrap()).expect("prefix spec parses");
+    warm_sc.requests = 20_000;
+    warm_sc.records = false;
+    if let Some(n) = std::env::var("ENGINE_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()) {
+        warm_sc.requests = n;
+    }
+    let cold_sc = Scenario { prefix: None, ..warm_sc.clone() };
+    println!("prefix A/B: {} requests warm (radix cache) vs cold ...", warm_sc.requests);
+    let t = Instant::now();
+    let warm = warm_sc.run().expect("warm prefix run resolves").metrics;
+    let warm_wall = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let cold = cold_sc.run().expect("cold prefix run resolves").metrics;
+    let cold_wall = t.elapsed().as_secs_f64();
+    let warm_eps = warm.events as f64 / warm_wall.max(1e-12);
+    let cold_eps = cold.events as f64 / cold_wall.max(1e-12);
+    assert!(warm.cache_hits > 0, "warm prefix run must hit the cache");
+    assert!(warm.prefill_tokens_saved > 0, "warm prefix run must save prefill tokens");
+    assert_eq!(cold.cache_hits + cold.cache_misses, 0, "cold twin must never touch the cache");
+    println!(
+        "prefix A/B: cold {:>12.0} ev/s  warm {:>12.0} ev/s  hit rate {:>5.1}%  saved {} tok",
+        cold_eps,
+        warm_eps,
+        warm.cache_hit_rate() * 100.0,
+        warm.prefill_tokens_saved
+    );
+    println!(
+        "prefix A/B: TTFT cold {:>8.1} ms -> warm {:>8.1} ms ({:+.1}%)",
+        cold.ttft_summary().mean,
+        warm.ttft_summary().mean,
+        (warm.ttft_summary().mean / cold.ttft_summary().mean - 1.0) * 100.0
+    );
+
     // ---- merge into BENCH_cluster.json -------------------------------
     // Fail loudly on a present-but-corrupt baseline instead of silently
     // overwriting the committed cluster rows with an engine-only doc.
@@ -158,6 +197,19 @@ fn main() {
                 ("wall_s", Json::from(wall)),
                 ("peak_arena", Json::from(m.peak_arena)),
                 ("makespan_s", Json::from(m.makespan_us as f64 / 1e6)),
+            ]),
+        ),
+        (
+            "prefix_ab",
+            Json::obj([
+                ("spec", Json::from("scenarios/prefix_reuse.json")),
+                ("requests", Json::from(warm_sc.requests)),
+                ("cold_events_per_sec", Json::from(cold_eps)),
+                ("warm_events_per_sec", Json::from(warm_eps)),
+                ("hit_rate", Json::from(warm.cache_hit_rate())),
+                ("prefill_tokens_saved", Json::from(warm.prefill_tokens_saved)),
+                ("ttft_cold_ms", Json::from(cold.ttft_summary().mean)),
+                ("ttft_warm_ms", Json::from(warm.ttft_summary().mean)),
             ]),
         ),
     ]);

@@ -398,6 +398,7 @@ mod tests {
             prompt_len: 4,
             decode_len: 4,
             predicted: None,
+            prefix: None,
         };
         t.on_shed(510, &shed_req);
         t.on_violation(520, &rec(9), true, false);

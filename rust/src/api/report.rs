@@ -70,6 +70,16 @@ fn metrics_json_with(m: &RunMetrics, s: &RunSummaries) -> Json {
     if m.recovered > 0 {
         pairs.push(("recovery_ms", summary_json(&m.recovery_hist.summary_scaled(1e-3))));
     }
+    // prefix-cache section, only for runs that consulted a cache or
+    // overlapped transfers (cache-off reports stay byte-identical)
+    if m.cache_hits + m.cache_misses > 0 {
+        pairs.push(("cache_hit_rate", Json::from(m.cache_hit_rate())));
+        pairs.push(("prefill_tokens_saved", Json::from(m.prefill_tokens_saved)));
+        pairs.push(("cache_evictions", Json::from(m.cache_evictions)));
+    }
+    if m.overlap_us > 0 {
+        pairs.push(("overlap_ms", Json::from(m.overlap_us as f64 / 1e3)));
+    }
     // per-class SLO section, only for runs that declared a class table
     // (classless reports stay exactly as compact as before, plus the
     // three scalar fields above)

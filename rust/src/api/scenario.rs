@@ -153,6 +153,7 @@ pub fn granularity_key(g: crate::fabric::Granularity) -> &'static str {
     match g {
         crate::fabric::Granularity::RequestLevel => "request",
         crate::fabric::Granularity::ChunkLevel => "chunk",
+        crate::fabric::Granularity::LayerLevel => "layer",
     }
 }
 
@@ -160,7 +161,8 @@ pub fn parse_granularity(s: &str) -> Result<crate::fabric::Granularity, String> 
     match s {
         "request" => Ok(crate::fabric::Granularity::RequestLevel),
         "chunk" => Ok(crate::fabric::Granularity::ChunkLevel),
-        _ => Err(format!("unknown transfer granularity '{s}' (expected request|chunk)")),
+        "layer" => Ok(crate::fabric::Granularity::LayerLevel),
+        _ => Err(format!("unknown transfer granularity '{s}' (expected request|chunk|layer)")),
     }
 }
 
@@ -206,6 +208,96 @@ impl ElasticSpec {
             decode_up_jobs: self.decode_up_jobs,
             down_idle_us: (self.down_idle_ms * 1e3) as Us,
             min_per_role: self.min_per_role,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- prefix
+
+/// Prompt-prefix reuse knob: stamps the workload with a popularity-skewed
+/// prefix population (system prompts, few-shot templates, multi-turn
+/// history) and arms the per-prefill-instance radix KV cache that lets
+/// repeat prefixes skip their resident prefill chunks. The spec-level
+/// mirror of `workload::PrefixPopulation` + `prefixcache::PrefixCacheConfig`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefixSpec {
+    /// Distinct prefixes in the population.
+    pub n_prefixes: u32,
+    /// Shared-prefix length in tokens (clamped to each prompt).
+    pub prefix_len: u32,
+    /// Zipf popularity exponent (0 = uniform; higher = hotter head).
+    pub zipf: f64,
+    /// Per-prefill-instance cache capacity in KV pages.
+    pub cache_pages: u32,
+    /// Tokens per content-addressed hash block (reuse granule).
+    pub block_tokens: u32,
+}
+
+impl Default for PrefixSpec {
+    fn default() -> Self {
+        PrefixSpec {
+            n_prefixes: 32,
+            prefix_len: 512,
+            zipf: 1.0,
+            cache_pages: 4096,
+            block_tokens: 128,
+        }
+    }
+}
+
+/// Parse the `--prefix` CLI flag: comma-separated `key=value` pairs over
+/// the same spellings as the spec's `prefix` object (`"off"` disables).
+/// Missing keys take the defaults, exactly like a partial JSON object.
+pub fn parse_prefix_flag(s: &str) -> Result<Option<PrefixSpec>, String> {
+    if s == "off" {
+        return Ok(None);
+    }
+    let mut p = PrefixSpec::default();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| format!("--prefix part '{part}' is not key=value"))?;
+        let parsed = val
+            .parse::<f64>()
+            .map_err(|_| format!("--prefix {key}: '{val}' is not a number"))?;
+        match key {
+            "n_prefixes" => p.n_prefixes = parsed as u32,
+            "prefix_len" => p.prefix_len = parsed as u32,
+            "zipf" => p.zipf = parsed,
+            "cache_pages" => p.cache_pages = parsed as u32,
+            "block_tokens" => {
+                if parsed < 1.0 {
+                    return Err("--prefix block_tokens must be at least 1".to_string());
+                }
+                p.block_tokens = parsed as u32;
+            }
+            _ => {
+                return Err(format!(
+                    "unknown --prefix key '{key}' (known: {})",
+                    PREFIX_KEYS.join(", ")
+                ))
+            }
+        }
+    }
+    Ok(Some(p))
+}
+
+impl PrefixSpec {
+    /// The workload-generator side: which prefixes requests are stamped with.
+    pub fn population(self) -> crate::workload::PrefixPopulation {
+        crate::workload::PrefixPopulation {
+            n_prefixes: self.n_prefixes,
+            prefix_len: self.prefix_len,
+            zipf: self.zipf,
+        }
+    }
+
+    /// The cluster side: the per-prefill-instance cache the stamps hit.
+    pub fn cache_config(self) -> crate::prefixcache::PrefixCacheConfig {
+        crate::prefixcache::PrefixCacheConfig {
+            capacity_pages: self.cache_pages,
+            block_tokens: self.block_tokens,
+            ..Default::default()
         }
     }
 }
@@ -301,6 +393,11 @@ pub struct Scenario {
     /// builds; `Some` with an empty event list is fault-free too (the
     /// parity golden pins both).
     pub faults: Option<FaultPlanSpec>,
+    /// Prompt-prefix reuse: stamp the trace with a zipf prefix population
+    /// and arm the per-prefill-instance radix KV cache. `None` — the
+    /// default — draws nothing from the prefix RNG stream and runs
+    /// bit-identical to pre-cache builds.
+    pub prefix: Option<PrefixSpec>,
 }
 
 impl Default for Scenario {
@@ -338,6 +435,7 @@ impl Default for Scenario {
             classes: Vec::new(),
             admission: false,
             faults: None,
+            prefix: None,
         }
     }
 }
@@ -375,6 +473,7 @@ const KNOWN_KEYS: &[&str] = &[
     "classes",
     "admission",
     "faults",
+    "prefix",
 ];
 
 const PHASE_KEYS: &[&str] = &["workload", "requests", "rate", "start_ms"];
@@ -388,6 +487,9 @@ const CLASS_KEYS: &[&str] =
 const FAULT_KEYS: &[&str] = &["events", "retry_max", "backoff_ms", "watermark"];
 
 const FAULT_EVENT_KEYS: &[&str] = &["kind", "at_ms", "instance", "down_ms", "factor"];
+
+const PREFIX_KEYS: &[&str] =
+    &["n_prefixes", "prefix_len", "zipf", "cache_pages", "block_tokens"];
 
 /// Every key the JSON spec format accepts — single source of truth shared
 /// with the CLI's `--list` output.
@@ -420,6 +522,12 @@ pub fn fault_keys() -> &'static [&'static str] {
 /// as the `--fault` CLI flag).
 pub fn fault_event_keys() -> &'static [&'static str] {
     FAULT_EVENT_KEYS
+}
+
+/// Keys of the spec's `prefix` object (same spellings as the `--prefix`
+/// CLI flag).
+pub fn prefix_keys() -> &'static [&'static str] {
+    PREFIX_KEYS
 }
 
 /// Every recognized value spelling per enum-valued spec key, generated
@@ -471,7 +579,7 @@ pub fn value_vocab() -> Vec<(&'static str, Vec<&'static str>)> {
         ),
         (
             "transfer",
-            [Granularity::RequestLevel, Granularity::ChunkLevel]
+            [Granularity::RequestLevel, Granularity::ChunkLevel, Granularity::LayerLevel]
                 .iter()
                 .map(|g| granularity_key(*g))
                 .collect(),
@@ -526,6 +634,7 @@ impl Scenario {
     pub fn trace(&self) -> Vec<Request> {
         let mut gen = WorkloadGen::new(self.trace_seed);
         gen.set_classes(self.class_weights());
+        gen.set_prefix(self.prefix.map(PrefixSpec::population));
         if self.phases.is_empty() {
             return gen.trace(self.workload, self.requests, self.rate, 0);
         }
@@ -557,7 +666,8 @@ impl Scenario {
                     self.rate,
                     0,
                 )
-                .with_classes(self.class_weights()),
+                .with_classes(self.class_weights())
+                .with_prefix(self.prefix.map(PrefixSpec::population)),
             )
         } else {
             Box::new(crate::sim::TraceSource::new(self.trace()))
@@ -630,6 +740,7 @@ impl Scenario {
             retain_records: self.records,
             slo: self.slo_config(),
             fault: self.faults.as_ref().map(FaultPlanSpec::to_config),
+            prefix_cache: self.prefix.map(PrefixSpec::cache_config),
             cost,
             seed: self.seed,
             ..Default::default()
@@ -766,6 +877,18 @@ impl Scenario {
                     ("retry_max", Json::from(u64::from(fp.retry_max))),
                     ("backoff_ms", Json::from(fp.backoff_ms)),
                     ("watermark", Json::from(fp.watermark)),
+                ]),
+            ));
+        }
+        if let Some(p) = self.prefix {
+            pairs.push((
+                "prefix",
+                Json::obj([
+                    ("n_prefixes", Json::from(u64::from(p.n_prefixes))),
+                    ("prefix_len", Json::from(u64::from(p.prefix_len))),
+                    ("zipf", Json::from(p.zipf)),
+                    ("cache_pages", Json::from(u64::from(p.cache_pages))),
+                    ("block_tokens", Json::from(u64::from(p.block_tokens))),
                 ]),
             ));
         }
@@ -981,6 +1104,46 @@ impl Scenario {
                         }
                     }
                 }
+                "prefix" => {
+                    sc.prefix = match v {
+                        Json::Null => None,
+                        _ => {
+                            let pobj =
+                                v.as_obj().ok_or("spec key 'prefix' must be an object or null")?;
+                            for pk in pobj.keys() {
+                                if !PREFIX_KEYS.contains(&pk.as_str()) {
+                                    return Err(format!(
+                                        "unknown prefix key '{pk}' (known: {})",
+                                        PREFIX_KEYS.join(", ")
+                                    ));
+                                }
+                            }
+                            let mut p = PrefixSpec::default();
+                            if let Some(x) = v.get("n_prefixes") {
+                                p.n_prefixes = want_num(x, "n_prefixes")? as u32;
+                            }
+                            if let Some(x) = v.get("prefix_len") {
+                                p.prefix_len = want_num(x, "prefix_len")? as u32;
+                            }
+                            if let Some(x) = v.get("zipf") {
+                                p.zipf = want_num(x, "zipf")?;
+                            }
+                            if let Some(x) = v.get("cache_pages") {
+                                p.cache_pages = want_num(x, "cache_pages")? as u32;
+                            }
+                            if let Some(x) = v.get("block_tokens") {
+                                let b = want_num(x, "block_tokens")?;
+                                if b < 1.0 {
+                                    return Err(
+                                        "prefix key 'block_tokens' must be at least 1".to_string()
+                                    );
+                                }
+                                p.block_tokens = b as u32;
+                            }
+                            Some(p)
+                        }
+                    }
+                }
                 "classes" => {
                     let arr = v.as_arr().ok_or("spec key 'classes' must be an array")?;
                     if arr.len() > MAX_CLASSES {
@@ -1115,7 +1278,8 @@ impl Scenario {
             "scenario{}: driver={} {} prefill={} decode={} coupled={} link={} prefill_policy={} \
              decode_policy={} dispatch={} predictor={} acc={} chunk={} sched_batch={} \
              max_batch={} flip_idle_ms={} elastic={} transfer={} srtf={} prefill_batch={} \
-             hbm_kv_bytes={} records={} classes={} admission={} faults={} seed={} trace_seed={}",
+             hbm_kv_bytes={} records={} classes={} admission={} faults={} prefix={} seed={} \
+             trace_seed={}",
             if self.name.is_empty() { String::new() } else { format!(" '{}'", self.name) },
             self.driver,
             phases,
@@ -1165,6 +1329,14 @@ impl Scenario {
                         fp.retry_max,
                         fp.backoff_ms,
                         fp.watermark
+                    )
+                })
+                .unwrap_or_else(|| "off".into()),
+            self.prefix
+                .map(|p| {
+                    format!(
+                        "{}x{}t,zipf{},pages{},blk{}",
+                        p.n_prefixes, p.prefix_len, p.zipf, p.cache_pages, p.block_tokens
                     )
                 })
                 .unwrap_or_else(|| "off".into()),
@@ -1341,6 +1513,12 @@ impl ScenarioBuilder {
     /// Replace the whole fault plan (`None` = fault-free).
     pub fn faults(mut self, v: Option<FaultPlanSpec>) -> Self {
         self.sc.faults = v;
+        self
+    }
+
+    /// Prompt-prefix reuse population + radix KV cache (`None` = off).
+    pub fn prefix(mut self, v: Option<PrefixSpec>) -> Self {
+        self.sc.prefix = v;
         self
     }
 
@@ -1721,6 +1899,74 @@ mod tests {
         assert_eq!(sc.baseline_config().fault.unwrap(), fc, "both drivers see one plan");
         // the startup line surfaces the plan
         assert!(sc.summary_line().contains("faults=3ev,retry4"), "{}", sc.summary_line());
+    }
+
+    #[test]
+    fn prefixed_scenario_round_trips_and_resolves() {
+        let sc = Scenario::builder()
+            .name("reuse")
+            .requests(64)
+            .seed(11)
+            .transfer(crate::fabric::Granularity::LayerLevel)
+            .prefix(Some(PrefixSpec { n_prefixes: 8, zipf: 1.2, ..Default::default() }))
+            .build();
+        let s = sc.to_json().dump();
+        assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+        // the resolved cluster config arms the cache and the layer fabric
+        let cfg = sc.cluster_config();
+        let pc = cfg.prefix_cache.unwrap();
+        assert_eq!(pc.capacity_pages, 4096);
+        assert_eq!(pc.block_tokens, 128);
+        assert_eq!(cfg.transfer_granularity, crate::fabric::Granularity::LayerLevel);
+        // the trace carries prefix stamps clamped to each prompt
+        let trace = sc.trace();
+        assert!(trace.iter().all(|r| r.prefix.is_some()));
+        assert!(trace.iter().all(|r| {
+            let st = r.prefix.unwrap();
+            st.id < 8 && st.len <= 512.min(r.prompt_len)
+        }));
+        // the streamed source delivers the identical stamps
+        use crate::sim::ArrivalSource as _;
+        let mut src = sc.source();
+        for w in &trace {
+            assert_eq!(src.next_request().unwrap().prefix, w.prefix);
+        }
+        // the startup line surfaces the knob
+        assert!(sc.summary_line().contains("prefix=8x512t,zipf1.2"), "{}", sc.summary_line());
+        assert!(Scenario::default().summary_line().contains("prefix=off"));
+    }
+
+    #[test]
+    fn prefix_spec_parsing_rejects_bad_shapes() {
+        assert!(Scenario::from_str(r#"{"prefix": {"n_prefixs": 4}}"#).is_err(), "typo'd key");
+        assert!(Scenario::from_str(r#"{"prefix": {"zipf": "hot"}}"#).is_err());
+        assert!(Scenario::from_str(r#"{"prefix": {"block_tokens": 0}}"#).is_err());
+        assert!(Scenario::from_str(r#"{"prefix": 4}"#).is_err());
+        // null and a partial object are both accepted; defaults fill
+        assert!(Scenario::from_str(r#"{"prefix": null}"#).unwrap().prefix.is_none());
+        let sc = Scenario::from_str(r#"{"prefix": {"n_prefixes": 4}}"#).unwrap();
+        let p = sc.prefix.unwrap();
+        assert_eq!(p.n_prefixes, 4);
+        assert_eq!(p.prefix_len, PrefixSpec::default().prefix_len);
+        assert_eq!(p.cache_pages, 4096);
+        // absent knob stays off and the cluster config stays cache-free
+        assert!(Scenario::default().prefix.is_none());
+        assert!(Scenario::default().cluster_config().prefix_cache.is_none());
+    }
+
+    #[test]
+    fn prefix_flag_parses_like_the_spec_object() {
+        assert_eq!(parse_prefix_flag("off").unwrap(), None);
+        let p = parse_prefix_flag("n_prefixes=8,zipf=1.5,block_tokens=64").unwrap().unwrap();
+        assert_eq!(p.n_prefixes, 8);
+        assert_eq!(p.zipf, 1.5);
+        assert_eq!(p.block_tokens, 64);
+        assert_eq!(p.prefix_len, PrefixSpec::default().prefix_len);
+        assert_eq!(parse_prefix_flag("").unwrap(), Some(PrefixSpec::default()));
+        assert!(parse_prefix_flag("n_prefix=8").is_err(), "typo'd key");
+        assert!(parse_prefix_flag("zipf=hot").is_err());
+        assert!(parse_prefix_flag("block_tokens=0").is_err());
+        assert!(parse_prefix_flag("n_prefixes").is_err(), "missing '='");
     }
 
     #[test]

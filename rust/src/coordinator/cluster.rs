@@ -28,9 +28,11 @@
 //! from a dirty-tracked cache, and the monitor tick reuses its
 //! `broadcast`/`since_tick` buffers instead of reallocating them.
 
+use std::collections::HashMap;
+
 use crate::api::{NullObserver, Observer};
 use crate::decode::DecodeJob;
-use crate::fabric::Fabric;
+use crate::fabric::{Fabric, Granularity};
 use crate::fault::{scale_dur, FaultPlan, Injection};
 use crate::instance::{
     CoupledInst, DecodeInst, DrainTarget, InstancePool, InstanceRole, InstanceState, PrefillInst,
@@ -38,11 +40,12 @@ use crate::instance::{
 use crate::metrics::RunMetrics;
 use crate::predictor::{OraclePredictor, Predictor};
 use crate::prefill::{choose_ranked, predicted_footprint, DecodeLoad};
+use crate::prefixcache::{block_hashes, Pin, PrefixCache};
 use crate::slo::AdmissionGate;
 use crate::sim::{
     macro_chain, run_des, run_des_source, ArrivalSource, EngineCore, EngineHost, Event,
 };
-use crate::types::{ReqId, Request, Role, Us, HEAVY_DECODE_TOKENS};
+use crate::types::{ReqId, ReqMeta, Request, Role, Us, HEAVY_DECODE_TOKENS};
 use crate::util::Pcg;
 
 use super::config::{ClusterConfig, PredictorMode};
@@ -101,6 +104,20 @@ pub struct Cluster {
     /// Role-serving instances at run start — the denominator the degraded
     /// watermark is measured against.
     base_capacity: usize,
+    /// Per-slot prefix caches (one per pool slot, same indexing). Empty
+    /// when `cfg.prefix_cache` is `None` — the cache-off hot path never
+    /// touches them. A slot's cache follows its instance through role
+    /// flips and crashes (invalidated when the KV dies), so the
+    /// cumulative hit/miss ledger survives incarnations.
+    prefix_caches: Vec<PrefixCache>,
+    /// Pins taken at prefix-cache admission, held until the request's
+    /// prefill completes (or a fault re-queues it): slot → (instance,
+    /// pin). Accessed by key only — iteration order never observed.
+    prefix_pins: HashMap<ReqId, (usize, Pin)>,
+    /// Prefill tokens skipped per in-flight request (the cached-prefix
+    /// depth after clamping): the KV-residency release must subtract
+    /// these, because only the suffix was admitted.
+    prefix_saved: HashMap<ReqId, u32>,
 }
 
 impl Cluster {
@@ -133,6 +150,10 @@ impl Cluster {
         core.metrics.set_classes(cfg.slo.classes.clone());
         let gate = AdmissionGate::from_config(&cfg.slo);
         let plan = cfg.fault.clone().map(|fc| FaultPlan::new(fc, cfg.seed));
+        let prefix_caches = match cfg.prefix_cache {
+            Some(pc) => (0..n).map(|_| PrefixCache::new(pc)).collect(),
+            None => Vec::new(),
+        };
         Cluster {
             cfg,
             core,
@@ -152,6 +173,9 @@ impl Cluster {
             plan,
             degraded_since: None,
             base_capacity: 0,
+            prefix_caches,
+            prefix_pins: HashMap::new(),
+            prefix_saved: HashMap::new(),
         }
     }
 
@@ -260,6 +284,106 @@ impl Cluster {
         best.map(|(i, _)| i)
     }
 
+    // ------------------------------------------------------ prefix cache
+
+    /// Cache-aware §3.2 routing: the prefill instance holding the longest
+    /// resident match for this request's prefix wins; with no resident
+    /// match anywhere (or no stamp, or cache off) the pick falls back to
+    /// the least-loaded path. Ties break by load, then lowest index —
+    /// fully deterministic.
+    fn pick_prefill_for(&mut self, slot: ReqId) -> Option<usize> {
+        if !self.prefix_caches.is_empty() {
+            if let (Some(stamp), Some(pc)) =
+                (self.core.requests[slot as usize].req.prefix, self.cfg.prefix_cache)
+            {
+                let plen = self.core.requests[slot as usize].req.prompt_len;
+                let hashes = block_hashes(stamp.id, stamp.len.min(plen), pc.block_tokens);
+                let mut best: Option<(u32, u64, usize)> = None;
+                for i in 0..self.pool.len() {
+                    let Some(load) = self.prefill_load_of(i) else { continue };
+                    let depth = self.prefix_caches[i].peek(&hashes);
+                    let better = match best {
+                        None => true,
+                        Some((bd, bl, _)) => depth > bd || (depth == bd && load < bl),
+                    };
+                    if better {
+                        best = Some((depth, load, i));
+                    }
+                }
+                if let Some((depth, _, i)) = best {
+                    if depth > 0 {
+                        return Some(i);
+                    }
+                    // cold everywhere: take the cached least-loaded path
+                    // so cache-off and cold-cache routing agree exactly
+                }
+            }
+        }
+        self.pick_prefill()
+    }
+
+    /// Prefix-cache admission on instance `i`: pin the resident prefix,
+    /// count the hit/miss, and shrink the scheduler-facing prompt to the
+    /// uncached suffix — the cached chunks skip prefill entirely. Clamped
+    /// to `prompt_len - 1` so every request still produces its first
+    /// token through a real `PrefillIterDone`.
+    fn cache_admit(&mut self, i: usize, slot: ReqId, mut meta: ReqMeta) -> ReqMeta {
+        let Some(pc) = self.cfg.prefix_cache else { return meta };
+        let Some(stamp) = meta.prefix else { return meta };
+        let Some(cache) = self.prefix_caches.get_mut(i) else { return meta };
+        let hashes = block_hashes(stamp.id, stamp.len.min(meta.prompt_len), pc.block_tokens);
+        let pin = cache.lookup_pin(&hashes);
+        let saved =
+            cache.tokens_for_depth(pin.depth()).min(meta.prompt_len.saturating_sub(1));
+        cache.note_saved(saved as u64);
+        if let Some((ci, old)) = self.prefix_pins.insert(slot, (i, pin)) {
+            // a fault-requeued request can still hold its earlier pin
+            if let Some(c) = self.prefix_caches.get_mut(ci) {
+                c.release(old);
+            }
+        }
+        if saved > 0 {
+            self.prefix_saved.insert(slot, saved);
+            meta.prompt_len -= saved;
+        } else {
+            self.prefix_saved.remove(&slot);
+        }
+        meta
+    }
+
+    /// A request finished prefilling on `i`: its whole prompt (cached
+    /// prefix + computed suffix) is resident there now. Release the
+    /// admission pin and index the prefix blocks for future arrivals.
+    fn cache_index_prefilled(&mut self, i: usize, slot: ReqId) {
+        let Some(pc) = self.cfg.prefix_cache else { return };
+        self.cache_release_pin(slot);
+        let req = &self.core.requests[slot as usize].req;
+        let Some(stamp) = req.prefix else { return };
+        let hashes = block_hashes(stamp.id, stamp.len.min(req.prompt_len), pc.block_tokens);
+        if let Some(c) = self.prefix_caches.get_mut(i) {
+            c.insert(&hashes);
+        }
+    }
+
+    /// Drop a request's admission pin, if any (no-op after the holding
+    /// cache was crash-invalidated — the pin's epoch went stale).
+    fn cache_release_pin(&mut self, slot: ReqId) {
+        if let Some((ci, pin)) = self.prefix_pins.remove(&slot) {
+            if let Some(c) = self.prefix_caches.get_mut(ci) {
+                c.release(pin);
+            }
+        }
+    }
+
+    /// Instance `i`'s KV died (crash) or left with its role (flip,
+    /// retirement): every cached block on it is gone. Epoch-tagged, so
+    /// pins still in flight release as no-ops.
+    fn cache_invalidate(&mut self, i: usize) {
+        if let Some(c) = self.prefix_caches.get_mut(i) {
+            c.invalidate();
+        }
+    }
+
     // ----------------------------------------------------------- arrival
 
     fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
@@ -301,7 +425,7 @@ impl Cluster {
         // disaggregated pool can never gain coupled instances mid-run,
         // so the arrival hot path stays on the O(1) prefill cache.
         let coupled = if self.cfg.n_coupled == 0 { None } else { self.pick_coupled() };
-        let entry = match (self.pick_prefill(), coupled) {
+        let entry = match (self.pick_prefill_for(slot), coupled) {
             (Some(i), None) => Entry::Prefill(i),
             (None, Some(c)) => Entry::Coupled(c),
             (Some(i), Some(c)) => {
@@ -347,6 +471,7 @@ impl Cluster {
                 let pred = self.predictor.predict(&[], dlen);
                 self.core.requests[slot as usize].req.predicted = Some(pred);
                 let meta = self.core.meta_of(slot);
+                let meta = self.cache_admit(i, slot, meta);
                 let p = self.pool.prefill_mut(i).expect("routed to a prefill instance");
                 p.pending_pred += 1;
                 p.sched.push(meta);
@@ -364,6 +489,7 @@ impl Cluster {
             }
             PredictorMode::Disabled => {
                 let meta = self.core.meta_of(slot);
+                let meta = self.cache_admit(i, slot, meta);
                 let p = self.pool.prefill_mut(i).expect("routed to a prefill instance");
                 p.sched.push(meta);
                 self.note_prefill_load_increased(i);
@@ -400,14 +526,17 @@ impl Cluster {
         let pred = self.predictor.predict(&[], dlen);
         self.core.requests[slot as usize].req.predicted = Some(pred);
         let meta = self.core.meta_of(slot);
-        if self.pool.epoch(i) == epoch && self.pool.accepts_work(i) {
-            if let Some(p) = self.pool.prefill_mut(i) {
-                p.sched.push(meta);
-                self.note_prefill_load_increased(i);
-                self.note_enqueued(obs);
-                self.try_start_prefill(i, obs);
-                return;
-            }
+        if self.pool.epoch(i) == epoch
+            && self.pool.accepts_work(i)
+            && self.pool.prefill_mut(i).is_some()
+        {
+            let meta = self.cache_admit(i, slot, meta);
+            let p = self.pool.prefill_mut(i).expect("prefill role checked above");
+            p.sched.push(meta);
+            self.note_prefill_load_increased(i);
+            self.note_enqueued(obs);
+            self.try_start_prefill(i, obs);
+            return;
         }
         // instance flipped, began draining, or crashed while predicting:
         // re-route (the epoch check keeps a restarted incarnation from
@@ -464,7 +593,10 @@ impl Cluster {
             let st = &mut self.core.requests[slot as usize];
             st.first_token = now;
             st.prefilled_by = Some((i, epoch));
-            if st.req.decode_len <= 1 {
+            let done_at_prefill = st.req.decode_len <= 1;
+            // whole prompt resident here now: unpin + index the prefix
+            self.cache_index_prefilled(i, slot);
+            if done_at_prefill {
                 // prefill's own token completes the request (release the
                 // residency first: finish recycles the arena slot)
                 self.release_prefill_resident(slot);
@@ -537,6 +669,13 @@ impl Cluster {
         entry.2 += predicted_footprint(req.prompt_len, req.predicted, self.cfg.granularity);
         let now = self.core.now();
         let nominal = self.transfer_nominal(req.prompt_len);
+        // Overlapped granularities hide wire time behind prefill compute;
+        // the hidden share (vs shipping everything after the last chunk)
+        // is the run's overlap win. Counted once, at first dispatch.
+        if self.fabric.granularity != Granularity::RequestLevel {
+            self.core.metrics.overlap_us +=
+                self.fabric.request_transfer_us(req.prompt_len).saturating_sub(nominal);
+        }
         // Open fault windows reprice the wire: a degradation stretches
         // the transfer, an outage delays the send to the window's close.
         let dur = match self.plan.as_ref() {
@@ -633,12 +772,17 @@ impl Cluster {
     fn release_prefill_resident(&mut self, slot: ReqId) {
         let st = &mut self.core.requests[slot as usize];
         let plen = st.req.prompt_len as u64;
-        let Some((i, epoch)) = st.prefilled_by.take() else { return };
+        let held = st.prefilled_by.take();
+        // only the uncached suffix was admitted into residency; any
+        // cache-skip note is consumed here whether or not the release
+        // itself still applies (fault re-queues re-pin from scratch)
+        let saved = self.prefix_saved.remove(&slot).unwrap_or(0) as u64;
+        let Some((i, epoch)) = held else { return };
         if self.pool.epoch(i) != epoch {
             return; // instance left its role since: that residency died with it
         }
         if let Some(p) = self.pool.prefill_mut(i) {
-            p.release_resident(plen);
+            p.release_resident(plen - saved);
         }
     }
 
@@ -895,6 +1039,7 @@ impl Cluster {
                     self.pool.get_mut(i).retired_at = Some(now);
                     if role == Role::Prefill {
                         self.least_prefill_dirty = true;
+                        self.cache_invalidate(i);
                     }
                     self.core.metrics.scale_downs += 1;
                     obs.on_scale(now, i, role, false);
@@ -905,6 +1050,7 @@ impl Cluster {
                     self.swapped_graveyard += self.pool.begin_flip(i, to);
                     if role == Role::Prefill {
                         self.least_prefill_dirty = true;
+                        self.cache_invalidate(i);
                     }
                     self.core.metrics.flips += 1;
                     self.core.queue.schedule_in(dur, Event::FlipDone { instance: i });
@@ -957,6 +1103,7 @@ impl Cluster {
             self.swapped_graveyard += self.pool.begin_flip(i, to);
             if to == Role::Decode {
                 self.least_prefill_dirty = true; // a prefill instance left
+                self.cache_invalidate(i); // its cached KV leaves with it
             }
             self.core.metrics.flips += 1;
             self.core.queue.schedule_in(dur, Event::FlipDone { instance: i });
@@ -990,6 +1137,9 @@ impl Cluster {
         self.pool.get_mut(i).born = self.core.now();
         self.core.grow_instances(self.pool.len());
         self.since_tick.push((0, 0, 0));
+        if let Some(pc) = self.cfg.prefix_cache {
+            self.prefix_caches.push(PrefixCache::new(pc));
+        }
         i
     }
 
@@ -1094,6 +1244,8 @@ impl Cluster {
         };
         let Some((role, swapped)) = self.pool.crash(i, until) else { return };
         self.swapped_graveyard += swapped;
+        // every block cached on the dead incarnation died with its KV
+        self.cache_invalidate(i);
         if until.is_none() {
             // permanent loss: close the alive span like a retirement
             self.pool.get_mut(i).retired_at = Some(now);
@@ -1130,8 +1282,9 @@ impl Cluster {
     /// reached a local scheduler) — the bookkeeping differs because the
     /// retry path re-charges `note_enqueued` when it lands.
     fn requeue_lost(&mut self, slot: ReqId, pending: bool, obs: &mut dyn Observer) {
-        // any residual prefill residency is stale now (epoch-guarded:
-        // this is a no-op when the holding instance already crashed)
+        // any residual prefill residency or cache pin is stale now
+        // (epoch-guarded: no-ops when the holding instance crashed)
+        self.cache_release_pin(slot);
         self.release_prefill_resident(slot);
         let now = self.core.now();
         let n = self.core.note_lost(slot, now);
@@ -1276,6 +1429,13 @@ impl EngineHost for Cluster {
         // a run ending inside degraded mode still reports the open span
         if let Some(since) = self.degraded_since.take() {
             self.core.metrics.degraded_us += now.saturating_sub(since);
+        }
+        // fold the per-instance prefix-cache ledgers into the run totals
+        for c in &self.prefix_caches {
+            self.core.metrics.cache_hits += c.stats.hits;
+            self.core.metrics.cache_misses += c.stats.misses;
+            self.core.metrics.prefill_tokens_saved += c.stats.saved_tokens;
+            self.core.metrics.cache_evictions += c.stats.evicted_blocks;
         }
     }
 }
@@ -1697,5 +1857,65 @@ mod tests {
         assert_eq!(m.finished + m.shed + m.failed, 32);
         assert!(m.scale_ups >= 1, "parked dispatches must pressure the pool to grow");
         assert_eq!(m.failed, 0, "the replacement instance must rescue every request");
+    }
+
+    #[test]
+    fn prefix_cache_reuse_cuts_ttft_and_counts_hits() {
+        use crate::prefixcache::PrefixCacheConfig;
+        use crate::workload::PrefixPopulation;
+        // A small hot prefix population over prompt-heavy traffic: with
+        // the cache on, repeat prefixes skip their resident chunks, so
+        // the run must record hits, saved tokens, and a strictly lower
+        // mean TTFT than the cache-off twin of the same stamped trace.
+        let mk_trace = || {
+            let mut gen = WorkloadGen::new(59);
+            gen.set_prefix(Some(PrefixPopulation { n_prefixes: 4, prefix_len: 512, zipf: 1.0 }));
+            gen.trace(WorkloadKind::Hpld, 64, 0.0, 0)
+        };
+        let cold = run_cluster(small_cfg(), mk_trace());
+        let warm = run_cluster(
+            ClusterConfig {
+                prefix_cache: Some(PrefixCacheConfig::default()),
+                ..small_cfg()
+            },
+            mk_trace(),
+        );
+        assert_eq!(cold.cache_hits + cold.cache_misses, 0, "cache off records no lookups");
+        assert!(warm.cache_hits > 0, "repeat prefixes must hit");
+        assert!(warm.prefill_tokens_saved > 0, "hits must skip real prefill tokens");
+        assert!(warm.cache_hit_rate() > 0.0 && warm.cache_hit_rate() <= 1.0);
+        assert_eq!(warm.records.len(), 64, "reuse must not lose requests");
+        assert!(
+            warm.ttft_summary().mean < cold.ttft_summary().mean,
+            "skipping prefill chunks must cut mean TTFT: warm {} vs cold {}",
+            warm.ttft_summary().mean,
+            cold.ttft_summary().mean
+        );
+    }
+
+    #[test]
+    fn stamped_trace_with_cache_off_is_bit_identical() {
+        use crate::workload::PrefixPopulation;
+        // Prefix stamps ride the requests, but with `prefix_cache: None`
+        // the cluster must not consult them: the run is event-for-event
+        // identical to the same generator without any stamps (the prefix
+        // knob draws from its own RNG stream, so the traces agree).
+        let plain = {
+            let mut gen = WorkloadGen::new(61);
+            run_cluster(small_cfg(), gen.trace(WorkloadKind::Mixed, 48, 30.0, 0))
+        };
+        let stamped = {
+            let mut gen = WorkloadGen::new(61);
+            gen.set_prefix(Some(PrefixPopulation::default()));
+            run_cluster(small_cfg(), gen.trace(WorkloadKind::Mixed, 48, 30.0, 0))
+        };
+        assert_eq!(plain.makespan_us, stamped.makespan_us);
+        assert_eq!(plain.events, stamped.events);
+        assert_eq!(plain.records.len(), stamped.records.len());
+        for (ra, rb) in plain.records.iter().zip(stamped.records.iter()) {
+            assert_eq!((ra.first_token, ra.finished), (rb.first_token, rb.finished));
+        }
+        assert_eq!(stamped.cache_hits, 0);
+        assert_eq!(stamped.prefill_tokens_saved, 0);
     }
 }

@@ -134,6 +134,10 @@ pub struct ClusterConfig {
     /// (see `fault::FaultConfig`). `None` — the default — runs fault-free
     /// and is bit-identical to pre-fault builds.
     pub fault: Option<crate::fault::FaultConfig>,
+    /// Per-prefill-instance prefix cache (radix KV reuse). `None` — the
+    /// default — skips cache bookkeeping entirely and is bit-identical to
+    /// pre-cache builds.
+    pub prefix_cache: Option<crate::prefixcache::PrefixCacheConfig>,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -165,6 +169,7 @@ impl Default for ClusterConfig {
             macro_step: true,
             slo: SloConfig::default(),
             fault: None,
+            prefix_cache: None,
             cost: CostModel::default(),
             seed: 0,
         }

@@ -498,6 +498,7 @@ mod tests {
             prompt_len: plen,
             decode_len: dlen,
             predicted: pred_bucket.map(|b| BucketPrediction::from_bucket(b, 200, 8)),
+            prefix: None,
         }
     }
 

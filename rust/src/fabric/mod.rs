@@ -78,6 +78,10 @@ pub enum Granularity {
     RequestLevel,
     /// One transfer per chunk, overlapped with subsequent chunk compute.
     ChunkLevel,
+    /// Layer-wise streaming (TRT-LLM "KV Cache Exchange"): KV for finished
+    /// layers departs while later layers of the same chunk still compute,
+    /// so even the final chunk hides all but its last layer's worth.
+    LayerLevel,
 }
 
 /// The unified API of Figure 9's "unified network transfer abstraction".
@@ -89,11 +93,14 @@ pub struct Fabric {
     pub granularity: Granularity,
     /// Bytes of KV per token (model-dependent; from CostModel).
     pub kv_bytes_per_tok: f64,
+    /// Transformer layer count — the pipelining depth LayerLevel streams
+    /// across (OPT-13B has 40 decoder layers).
+    pub n_layers: u32,
 }
 
 impl Fabric {
     pub fn new(link: Link, kv_bytes_per_tok: f64) -> Self {
-        Fabric { link, granularity: Granularity::RequestLevel, kv_bytes_per_tok }
+        Fabric { link, granularity: Granularity::RequestLevel, kv_bytes_per_tok, n_layers: 40 }
     }
 
     /// Time to ship a whole prompt's KV (request-level granularity).
@@ -135,6 +142,19 @@ impl Fabric {
                 let hidden = per.saturating_sub(chunk_compute_us);
                 // n-1 chunks overlap; the last is fully exposed.
                 hidden * n_chunks.saturating_sub(1) as u64 + per
+            }
+            Granularity::LayerLevel => {
+                // Within a chunk, layer i's KV ships while layers i+1..L
+                // still compute: the chunk hides up to (L-1)/L of its own
+                // compute, and the tail chunk only exposes what outlives
+                // that window — never less than one layer's slice of wire
+                // time (the last layer has nothing left to hide behind).
+                let per = self.chunk_transfer_us(chunk_tokens);
+                let layers = self.n_layers.max(1) as u64;
+                let window = chunk_compute_us * (layers - 1) / layers;
+                let tail = per.saturating_sub(window).max(per / layers);
+                let hidden = per.saturating_sub(chunk_compute_us);
+                hidden * n_chunks.saturating_sub(1) as u64 + tail
             }
         }
     }
@@ -183,6 +203,33 @@ mod tests {
         // request-level ships everything at the end
         f.granularity = Granularity::RequestLevel;
         assert!(f.exposed_transfer_us(4, 512, compute) > exposed);
+    }
+
+    #[test]
+    fn layer_level_never_exposes_more_than_chunk_level() {
+        let mut f = Fabric::new(Link::roce200(), KV_TOK);
+        for compute_scale in [0u64, 1, 2, 5] {
+            let per = f.chunk_transfer_us(512);
+            let compute = per * compute_scale / 2;
+            f.granularity = Granularity::ChunkLevel;
+            let chunk = f.exposed_transfer_us(4, 512, compute);
+            f.granularity = Granularity::LayerLevel;
+            let layer = f.exposed_transfer_us(4, 512, compute);
+            assert!(layer <= chunk, "scale {compute_scale}: layer={layer} chunk={chunk}");
+            // the last layer's slice of wire time can never be hidden
+            assert!(layer >= per / f.n_layers as u64);
+        }
+        // compute-rich case: layer-wise streaming beats chunk-level strictly,
+        // because the tail chunk overlaps its own compute too.
+        let per = f.chunk_transfer_us(512);
+        let compute = per * 2;
+        f.granularity = Granularity::ChunkLevel;
+        let chunk = f.exposed_transfer_us(4, 512, compute);
+        f.granularity = Granularity::LayerLevel;
+        assert!(f.exposed_transfer_us(4, 512, compute) < chunk);
+        // degenerate single-layer "model" degrades to chunk-level exactly
+        f.n_layers = 1;
+        assert_eq!(f.exposed_transfer_us(4, 512, compute), chunk);
     }
 
     #[test]

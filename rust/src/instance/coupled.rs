@@ -236,6 +236,7 @@ mod tests {
                     prompt_len: plen,
                     decode_len: dlen,
                     predicted: None,
+                    prefix: None,
                 },
                 first_token: NO_TIME,
                 prefilled_by: None,

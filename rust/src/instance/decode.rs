@@ -144,8 +144,15 @@ mod tests {
     use crate::types::{ReqMeta, TaskType};
 
     fn job(id: u64, plen: u32, dlen: u32) -> DecodeJob {
-        let meta =
-            ReqMeta { id, task: TaskType::Chat, class: 0, arrival: 0, prompt_len: plen, predicted: None };
+        let meta = ReqMeta {
+            id,
+            task: TaskType::Chat,
+            class: 0,
+            arrival: 0,
+            prompt_len: plen,
+            predicted: None,
+            prefix: None,
+        };
         DecodeJob::new(meta, dlen)
     }
 

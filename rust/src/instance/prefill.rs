@@ -167,7 +167,15 @@ mod tests {
     use crate::types::{ReqMeta, TaskType};
 
     fn meta(id: u64, plen: u32) -> ReqMeta {
-        ReqMeta { id, task: TaskType::Chat, class: 0, arrival: 0, prompt_len: plen, predicted: None }
+        ReqMeta {
+            id,
+            task: TaskType::Chat,
+            class: 0,
+            arrival: 0,
+            prompt_len: plen,
+            predicted: None,
+            prefix: None,
+        }
     }
 
     fn inst() -> PrefillInst {

@@ -5,9 +5,12 @@
 //!
 //! Invariants (property-tested in rust/tests/proptest_kv.rs):
 //!   * page 0 is never allocated (the decode artifact's trash page);
-//!   * no page is owned by two live requests;
-//!   * free + live + 1 == total pages;
-//!   * a request's capacity always covers its written tokens.
+//!   * no page is owned by two live requests, nor by a request and a
+//!     shared prefix group at once;
+//!   * free + live + shared + 1 == total pages (shared prefix pages are
+//!     counted once however many requests reference them);
+//!   * a request's capacity always covers its written tokens;
+//!   * every shared prefix group holds at least one reference.
 
 use std::collections::HashMap;
 
@@ -20,9 +23,23 @@ pub struct PagedKvCache {
     free: Vec<u32>,
     /// Live allocations: request → block table (page ids, in order).
     tables: HashMap<ReqId, BlockTable>,
+    /// Shared prefix-KV groups: content hash → refcounted page run. A
+    /// group's pages are owned by the group alone — requests reference
+    /// them through `retain_shared`/`release_shared` and never list them
+    /// in their own block tables, so N sharers cost one copy of the pages
+    /// (the radix-cache counterpart of vLLM's prefix caching).
+    shared: HashMap<u64, SharedGroup>,
     total_pages: u32,
     /// Cumulative tokens swapped out (for swap-cost accounting).
     pub swapped_out_tokens: u64,
+}
+
+/// One refcounted run of prefix pages, keyed by content hash.
+#[derive(Clone, Debug)]
+struct SharedGroup {
+    pages: Vec<u32>,
+    refs: u32,
+    tokens: u32,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -46,6 +63,7 @@ impl PagedKvCache {
             page_size,
             free: (1..total_pages).rev().collect(), // page 0 reserved
             tables: HashMap::new(),
+            shared: HashMap::new(),
             total_pages,
             swapped_out_tokens: 0,
         }
@@ -150,6 +168,62 @@ impl PagedKvCache {
         Some(t.len)
     }
 
+    // ------------------------------------------------- shared prefix pages
+
+    /// Pages currently held by shared prefix groups (each counted once,
+    /// however many requests reference it).
+    pub fn shared_pages(&self) -> u32 {
+        self.shared.values().map(|g| g.pages.len() as u32).sum()
+    }
+
+    /// Live references on the shared group `key`, 0 when absent.
+    pub fn shared_refs(&self, key: u64) -> u32 {
+        self.shared.get(&key).map_or(0, |g| g.refs)
+    }
+
+    /// Allocate a shared prefix group for `tokens` of KV under content
+    /// hash `key`, with one reference. Fails without side effects when
+    /// pages are short; the caller must not hold `key` already (reuse an
+    /// existing group through `retain_shared` instead).
+    pub fn alloc_shared(&mut self, key: u64, tokens: u32) -> Result<(), AllocError> {
+        assert!(!self.shared.contains_key(&key), "double shared alloc for {key:#x}");
+        let need = self.pages_for_tokens(tokens).max(1);
+        if need > self.free.len() as u32 {
+            return Err(AllocError::OutOfPages { needed: need, free: self.free.len() as u32 });
+        }
+        let pages = self.free.split_off(self.free.len() - need as usize);
+        self.shared.insert(key, SharedGroup { pages, refs: 1, tokens });
+        Ok(())
+    }
+
+    /// Add one reference to the shared group `key`. Returns false (and
+    /// does nothing) when no such group exists — the caller then pays for
+    /// a fresh `alloc_shared`.
+    pub fn retain_shared(&mut self, key: u64) -> bool {
+        match self.shared.get_mut(&key) {
+            Some(g) => {
+                g.refs += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one reference from the shared group `key`; the last reference
+    /// frees the pages. Returns the number of pages returned to the free
+    /// list (0 while other sharers remain or when `key` is unknown).
+    pub fn release_shared(&mut self, key: u64) -> u32 {
+        let Some(g) = self.shared.get_mut(&key) else { return 0 };
+        g.refs -= 1;
+        if g.refs > 0 {
+            return 0;
+        }
+        let g = self.shared.remove(&key).expect("present: just accessed");
+        let n = g.pages.len() as u32;
+        self.free.extend(g.pages);
+        n
+    }
+
     /// Internal consistency check (used by tests and debug assertions).
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut seen = std::collections::HashSet::new();
@@ -176,6 +250,26 @@ impl PagedKvCache {
             }
             if t.len > 0 && (cap - t.len) >= self.page_size {
                 return Err(format!("req {id} holds a fully-unused page"));
+            }
+        }
+        for (key, g) in &self.shared {
+            if g.refs == 0 {
+                return Err(format!("shared group {key:#x} lingers with zero refs"));
+            }
+            for p in &g.pages {
+                if *p == 0 || *p >= self.total_pages {
+                    return Err(format!("shared group {key:#x} holds invalid page {p}"));
+                }
+                if !seen.insert(*p) {
+                    return Err(format!("page {p} double-owned (shared group {key:#x})"));
+                }
+            }
+            let cap = g.pages.len() as u32 * self.page_size;
+            if g.tokens > cap {
+                return Err(format!(
+                    "shared group {key:#x} tokens {} exceed capacity {cap}",
+                    g.tokens
+                ));
             }
         }
         if seen.len() as u32 != self.total_pages - 1 {
@@ -253,6 +347,40 @@ mod tests {
         assert_eq!(kv.swapped_out_tokens, 10);
         assert_eq!(kv.free_pages(), 7);
         assert!(!kv.contains(1));
+    }
+
+    #[test]
+    fn shared_groups_refcount_and_free_once() {
+        let mut kv = PagedKvCache::new(10, 4);
+        kv.alloc_shared(0xabc, 10).unwrap(); // 3 pages, one copy
+        assert_eq!(kv.shared_pages(), 3);
+        assert_eq!(kv.free_pages(), 6);
+        assert!(kv.retain_shared(0xabc));
+        assert_eq!(kv.shared_refs(0xabc), 2, "second sharer costs no pages");
+        assert_eq!(kv.shared_pages(), 3);
+        kv.alloc(1, 4).unwrap(); // private table alongside
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.release_shared(0xabc), 0, "one sharer remains");
+        assert_eq!(kv.shared_pages(), 3);
+        assert_eq!(kv.release_shared(0xabc), 3, "last ref frees the run");
+        assert_eq!(kv.shared_pages(), 0);
+        assert_eq!(kv.free_pages(), 8);
+        kv.check_invariants().unwrap();
+        assert!(!kv.retain_shared(0xabc), "gone after the last release");
+        assert_eq!(kv.release_shared(0xabc), 0, "unknown key is inert");
+    }
+
+    #[test]
+    fn failed_shared_alloc_has_no_side_effects() {
+        let mut kv = PagedKvCache::new(4, 8);
+        kv.alloc(1, 16).unwrap(); // 2 of 3 usable pages
+        assert_eq!(
+            kv.alloc_shared(7, 100),
+            Err(AllocError::OutOfPages { needed: 13, free: 1 })
+        );
+        assert_eq!(kv.shared_pages(), 0);
+        assert_eq!(kv.shared_refs(7), 0);
+        kv.check_invariants().unwrap();
     }
 
     #[test]

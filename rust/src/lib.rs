@@ -24,6 +24,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod predictor;
 pub mod prefill;
+pub mod prefixcache;
 /// Real-mode PJRT runtime. Gated behind the `pjrt` cargo feature: it
 /// needs the vendored `xla` bindings + `anyhow`, which the default
 /// (dependency-free) sim build does not ship.

@@ -16,8 +16,9 @@
 use tetri_infer::api::{
     class_keys, elastic_keys, fault_event_keys, fault_keys, parse_class_flag, parse_decode_policy,
     parse_dispatch, parse_fault_flag, parse_link, parse_predictor, parse_prefill_policy,
-    parse_workload, phase_keys, spec_keys, value_vocab, Driver as _, ElasticSpec, FaultPlanSpec,
-    NullObserver, Observer, ProgressObserver, Registry, Scenario,
+    parse_prefix_flag, parse_workload, phase_keys, prefix_keys, spec_keys, value_vocab,
+    Driver as _, ElasticSpec, FaultPlanSpec, NullObserver, Observer, ProgressObserver, Registry,
+    Scenario,
 };
 use tetri_infer::metrics::vs_row_from;
 #[cfg(feature = "pjrt")]
@@ -77,6 +78,12 @@ fn usage() -> ! {
                           kind=restart,at_ms=150,instance=2,down_ms=300
                           (kinds: crash, restart, link_out, link_degrade,
                           straggler; also factor=F for the slow kinds)
+    --prefix SPEC|off     stamp the trace with a shared-prefix population
+                          and arm the per-prefill radix KV cache (replaces
+                          the spec's prefix knob when given). SPEC is
+                          key=value pairs, e.g.
+                          n_prefixes=32,prefix_len=512,zipf=1.0
+                          (also: cache_pages=N, block_tokens=N)
     --list                print registered drivers, scenario spec files,
                           and recognized spec keys/values, then exit
   serve options:
@@ -137,6 +144,7 @@ const SIM_FLAGS: &[(&str, bool)] = &[
     ("--class", true),
     ("--admission", true),
     ("--fault", true),
+    ("--prefix", true),
     ("--list", false),
 ];
 
@@ -312,6 +320,9 @@ fn scenario_from_args(args: &[String]) -> Scenario {
             .collect();
         sc.faults.get_or_insert_with(FaultPlanSpec::default).events = events;
     }
+    if let Some(v) = arg_val(args, "--prefix") {
+        sc.prefix = parse_prefix_flag(&v).unwrap_or_else(|e| die(&e));
+    }
     sc
 }
 
@@ -344,6 +355,7 @@ fn cmd_list() {
     println!("  classes[] keys: {}", class_keys().join(", "));
     println!("  faults keys: {}", fault_keys().join(", "));
     println!("  faults.events[] keys: {}", fault_event_keys().join(", "));
+    println!("  prefix keys: {}", prefix_keys().join(", "));
     for (key, vals) in value_vocab() {
         println!("{key} values: {}", vals.join(", "));
     }

@@ -168,6 +168,19 @@ pub struct RunMetrics {
     /// Virtual µs the coordinator spent in degraded mode (surviving
     /// capacity below the fault plan's watermark).
     pub degraded_us: Us,
+    /// Prefix-cache lookups that matched at least one whole block
+    /// (0 in cache-off runs — the legacy report shape is preserved).
+    pub cache_hits: u64,
+    /// Prefix-cache lookups that matched nothing.
+    pub cache_misses: u64,
+    /// Prefill tokens skipped because their prefix KV was cache-resident.
+    pub prefill_tokens_saved: u64,
+    /// Prefix-cache blocks evicted under capacity pressure.
+    pub cache_evictions: u64,
+    /// Wire µs hidden behind prefill compute by overlapped transfer
+    /// granularities (chunk- or layer-level), vs shipping everything
+    /// after the last chunk.
+    pub overlap_us: Us,
 }
 
 /// TTFT/JCT/resource for one run, computed once and threaded through
@@ -226,6 +239,17 @@ impl RunMetrics {
             self.per_class.resize_with(classes.len(), ClassMetrics::default);
         }
         self.classes = classes;
+    }
+
+    /// Fraction of prefix-cache lookups that hit (0.0 when the cache was
+    /// off or never consulted).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache_hits + self.cache_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / lookups as f64
+        }
     }
 
     /// Display name of a class (table name, or `class<N>` past the table).

@@ -138,7 +138,15 @@ mod tests {
     use crate::types::TaskType;
 
     fn req(id: u64, plen: u32) -> ReqMeta {
-        ReqMeta { id, task: TaskType::Chat, class: 0, arrival: 0, prompt_len: plen, predicted: None }
+        ReqMeta {
+            id,
+            task: TaskType::Chat,
+            class: 0,
+            arrival: 0,
+            prompt_len: plen,
+            predicted: None,
+            prefix: None,
+        }
     }
 
     fn chunker_with(reqs: &[(u64, u32)], size: u32) -> Chunker {

@@ -138,11 +138,27 @@ mod tests {
     use crate::types::TaskType;
 
     fn req(id: u64, plen: u32) -> ReqMeta {
-        ReqMeta { id, task: TaskType::Chat, class: 0, arrival: id, prompt_len: plen, predicted: None }
+        ReqMeta {
+            id,
+            task: TaskType::Chat,
+            class: 0,
+            arrival: id,
+            prompt_len: plen,
+            predicted: None,
+            prefix: None,
+        }
     }
 
     fn classed(id: u64, class: u8, arrival: Us) -> ReqMeta {
-        ReqMeta { id, task: TaskType::Chat, class, arrival, prompt_len: 10, predicted: None }
+        ReqMeta {
+            id,
+            task: TaskType::Chat,
+            class,
+            arrival,
+            prompt_len: 10,
+            predicted: None,
+            prefix: None,
+        }
     }
 
     fn drain(s: &mut PrefillScheduler) -> Vec<u64> {

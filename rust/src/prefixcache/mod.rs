@@ -1,0 +1,515 @@
+//! Content-addressed prefix cache over token ids (the SGLang RadixAttention
+//! / vLLM automatic-prefix-caching idea, applied to TetriInfer's prefill
+//! instances): shared system prompts and multi-turn histories hash into
+//! chunk-aligned *blocks* organized as a radix/trie index, so a request
+//! whose prompt prefix is already resident skips those prefill chunks and
+//! only the uncached suffix enters the chunk scheduler.
+//!
+//! Sim-mode content addressing: the workload generator stamps requests
+//! with a [`PrefixStamp`](crate::types::PrefixStamp) naming which member
+//! of the shared-prefix population their prompt starts with; the block
+//! hash chain is derived deterministically from that stamp
+//! ([`block_hashes`]), standing in for hashing real token ids. Everything
+//! downstream — trie walk, refcount pinning, LRU eviction, epoch
+//! invalidation — is the real algorithm.
+//!
+//! Invariants (property-tested in rust/tests/proptest_prefix.rs):
+//!   * `used_pages <= capacity_pages` at every instant;
+//!   * a pinned block (refcount > 0) is never evicted;
+//!   * a resident block's whole ancestor chain is resident (trie shape);
+//!   * lookups agree with a naive longest-common-prefix oracle when
+//!     capacity never forces eviction;
+//!   * a crash invalidation (epoch bump) empties the index and makes
+//!     stale pins inert.
+
+use std::collections::BTreeMap;
+
+/// Per-prefill-instance cache sizing. `block_tokens` is the hash-block
+/// granularity (chunk-aligned: only whole blocks are shared, so a prefix
+/// shorter than one block never hits); `page_size` prices blocks in the
+/// same page currency the paged KV allocator uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefixCacheConfig {
+    /// Capacity of one prefill instance's cache, in pages.
+    pub capacity_pages: u32,
+    /// Tokens per page (matches `PagedKvCache` sizing).
+    pub page_size: u32,
+    /// Tokens per content-addressed block.
+    pub block_tokens: u32,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig { capacity_pages: 4096, page_size: 16, block_tokens: 128 }
+    }
+}
+
+/// Hit/miss/evict/pinned counters, cumulative across epochs (a crash
+/// invalidation empties the index but keeps the ledger — the run report
+/// wants totals, not per-incarnation shards).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Lookups that matched at least one whole block.
+    pub hits: u64,
+    /// Lookups that matched nothing.
+    pub misses: u64,
+    /// Prefill tokens actually skipped (post-clamp, added by the caller
+    /// via [`PrefixCache::note_saved`] — the raw matched depth can exceed
+    /// what the scheduler may legally skip).
+    pub saved_tokens: u64,
+    pub inserted_blocks: u64,
+    pub evicted_blocks: u64,
+    /// Blocks destroyed by crash invalidation (epoch bumps).
+    pub invalidated_blocks: u64,
+}
+
+/// Handle returned by [`PrefixCache::lookup_pin`]: the deepest matched
+/// node plus the epoch it was pinned under. Dropping it without
+/// [`PrefixCache::release`] leaks the pin; releasing after a crash
+/// invalidation is a harmless no-op (the epoch check makes it inert).
+#[derive(Clone, Copy, Debug)]
+pub struct Pin {
+    node: usize,
+    depth: u32,
+    epoch: u32,
+}
+
+impl Pin {
+    /// Whole blocks matched when this pin was taken.
+    pub fn depth(&self) -> u32 {
+        self.depth
+    }
+}
+
+/// One trie node = one resident block. Children are keyed by the child
+/// block's content hash in a `BTreeMap` so iteration order (and thus any
+/// tie-break that ever walks it) is deterministic.
+#[derive(Clone, Debug)]
+struct Node {
+    children: BTreeMap<u64, usize>,
+    parent: usize,
+    /// This node's key inside `parent.children` (needed to unlink).
+    key: u64,
+    /// Refcount: requests currently reusing this block (routing pinned it
+    /// until their prefill completes). Pinned blocks never evict.
+    pins: u32,
+    /// LRU clock stamp (monotone tick, not virtual time — determinism).
+    last_used: u64,
+    live: bool,
+}
+
+/// The per-prefill-instance radix cache. Node 0 is the root (zero-length
+/// prefix): always live, never evicted, holds no pages.
+#[derive(Clone, Debug)]
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    pages_per_block: u32,
+    used_pages: u32,
+    /// Bumped by [`PrefixCache::invalidate`] (crash): pins taken under an
+    /// older epoch release as no-ops, lookups only ever see fresh blocks.
+    epoch: u32,
+    tick: u64,
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    pub stats: CacheStats,
+}
+
+/// Deterministic 64-bit mix (splitmix64 finalizer).
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// The chunk-aligned content-hash chain for a stamped prefix: one hash
+/// per *whole* block (`prefix_len / block_tokens`), each chained on its
+/// predecessor so block k of prefix A never collides with block k of
+/// prefix B — the radix property over synthetic content.
+pub fn block_hashes(prefix_id: u64, prefix_len: u32, block_tokens: u32) -> Vec<u64> {
+    let n = if block_tokens == 0 { 0 } else { prefix_len / block_tokens };
+    let mut out = Vec::with_capacity(n as usize);
+    let mut h = mix(prefix_id ^ 0x5157_a11a_b10c_c0de);
+    for i in 0..n as u64 {
+        h = mix(h ^ i);
+        out.push(h);
+    }
+    out
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> Self {
+        assert!(cfg.page_size > 0 && cfg.block_tokens > 0);
+        let root = Node {
+            children: BTreeMap::new(),
+            parent: 0,
+            key: 0,
+            pins: 0,
+            last_used: 0,
+            live: true,
+        };
+        PrefixCache {
+            pages_per_block: cfg.block_tokens.div_ceil(cfg.page_size),
+            cfg,
+            used_pages: 0,
+            epoch: 0,
+            tick: 0,
+            nodes: vec![root],
+            free_nodes: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &PrefixCacheConfig {
+        &self.cfg
+    }
+
+    pub fn used_pages(&self) -> u32 {
+        self.used_pages
+    }
+
+    pub fn capacity_pages(&self) -> u32 {
+        self.cfg.capacity_pages
+    }
+
+    /// Resident blocks (root excluded).
+    pub fn n_blocks(&self) -> usize {
+        self.nodes.iter().filter(|n| n.live).count() - 1
+    }
+
+    /// Pages held by pinned blocks — the "pinned bytes" gauge in page
+    /// currency (multiply by page_size × kv_bytes_per_tok for bytes).
+    pub fn pinned_pages(&self) -> u32 {
+        let pinned =
+            self.nodes.iter().skip(1).filter(|n| n.live && n.pins > 0).count() as u32;
+        pinned * self.pages_per_block
+    }
+
+    /// Tokens covered by `depth` matched blocks.
+    pub fn tokens_for_depth(&self, depth: u32) -> u32 {
+        depth * self.cfg.block_tokens
+    }
+
+    /// Read-only longest-match walk: how many whole blocks of `hashes`
+    /// are resident. No LRU touch, no pin, no stats — what cache-aware
+    /// routing probes every instance with before committing to one.
+    pub fn peek(&self, hashes: &[u64]) -> u32 {
+        let mut at = 0usize;
+        let mut depth = 0u32;
+        for h in hashes {
+            match self.nodes[at].children.get(h) {
+                Some(&c) => {
+                    at = c;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        depth
+    }
+
+    /// Longest-match walk that *commits*: bumps LRU stamps along the
+    /// matched path, pins every node on it (refcounts), and counts the
+    /// hit/miss. The caller holds the [`Pin`] until the request's prefill
+    /// completes, then [`PrefixCache::release`]s it.
+    pub fn lookup_pin(&mut self, hashes: &[u64]) -> Pin {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut at = 0usize;
+        let mut depth = 0u32;
+        for h in hashes {
+            match self.nodes[at].children.get(h) {
+                Some(&c) => {
+                    at = c;
+                    depth += 1;
+                    self.nodes[at].pins += 1;
+                    self.nodes[at].last_used = tick;
+                }
+                None => break,
+            }
+        }
+        if depth > 0 {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+        }
+        Pin { node: at, depth, epoch: self.epoch }
+    }
+
+    /// Count prefill tokens actually skipped thanks to a hit (the caller
+    /// clamps the matched depth against the request's real prompt).
+    pub fn note_saved(&mut self, tokens: u64) {
+        self.stats.saved_tokens += tokens;
+    }
+
+    /// Drop a pin taken by [`PrefixCache::lookup_pin`]: decrement the
+    /// refcount of every node on the pinned path. Inert if the cache was
+    /// invalidated since the pin was taken (the epoch moved on).
+    pub fn release(&mut self, pin: Pin) {
+        if pin.epoch != self.epoch || pin.depth == 0 {
+            return;
+        }
+        let mut at = pin.node;
+        for _ in 0..pin.depth {
+            debug_assert!(self.nodes[at].pins > 0, "release of an unpinned block");
+            self.nodes[at].pins -= 1;
+            at = self.nodes[at].parent;
+        }
+    }
+
+    /// Insert the block chain for a just-prefilled prefix, extending the
+    /// deepest existing match. Evicts unpinned LRU leaves to make room;
+    /// stops early (deeper blocks stay uncached) when every resident page
+    /// is pinned. Returns the number of blocks newly inserted.
+    pub fn insert(&mut self, hashes: &[u64]) -> u32 {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut at = 0usize;
+        let mut inserted = 0u32;
+        for h in hashes {
+            if let Some(&c) = self.nodes[at].children.get(h) {
+                at = c;
+                self.nodes[at].last_used = tick;
+                continue;
+            }
+            if !self.make_room() {
+                break;
+            }
+            let node = Node {
+                children: BTreeMap::new(),
+                parent: at,
+                key: *h,
+                pins: 0,
+                last_used: tick,
+                live: true,
+            };
+            let idx = match self.free_nodes.pop() {
+                Some(i) => {
+                    self.nodes[i] = node;
+                    i
+                }
+                None => {
+                    self.nodes.push(node);
+                    self.nodes.len() - 1
+                }
+            };
+            self.nodes[at].children.insert(*h, idx);
+            self.used_pages += self.pages_per_block;
+            self.stats.inserted_blocks += 1;
+            inserted += 1;
+            at = idx;
+        }
+        inserted
+    }
+
+    /// Free one block's worth of pages if the next insert would overflow.
+    /// Victims are unpinned *leaves* (evicting an interior block would
+    /// orphan its subtree and break the radix walk), least-recently-used
+    /// first, node index as the deterministic tie-break. Returns false
+    /// when capacity cannot be made (everything resident is pinned or on
+    /// a pinned path).
+    fn make_room(&mut self) -> bool {
+        while self.used_pages + self.pages_per_block > self.cfg.capacity_pages {
+            let mut victim: Option<(u64, usize)> = None;
+            for (i, n) in self.nodes.iter().enumerate().skip(1) {
+                if n.live && n.pins == 0 && n.children.is_empty() {
+                    let cand = (n.last_used, i);
+                    if victim.map_or(true, |v| cand < v) {
+                        victim = Some(cand);
+                    }
+                }
+            }
+            let Some((_, v)) = victim else { return false };
+            self.evict(v);
+        }
+        true
+    }
+
+    fn evict(&mut self, idx: usize) {
+        let (parent, key) = (self.nodes[idx].parent, self.nodes[idx].key);
+        self.nodes[parent].children.remove(&key);
+        self.nodes[idx].live = false;
+        self.free_nodes.push(idx);
+        self.used_pages -= self.pages_per_block;
+        self.stats.evicted_blocks += 1;
+    }
+
+    /// Crash invalidation: the instance's KV (and with it every cached
+    /// block) died with the old incarnation. Empties the index, bumps the
+    /// epoch so in-flight pins go inert, keeps the cumulative stats.
+    pub fn invalidate(&mut self) {
+        self.stats.invalidated_blocks += self.n_blocks() as u64;
+        self.nodes.truncate(1);
+        self.nodes[0].children.clear();
+        self.nodes[0].pins = 0;
+        self.free_nodes.clear();
+        self.used_pages = 0;
+        self.epoch += 1;
+    }
+
+    /// Internal consistency check (tests / debug assertions).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.used_pages > self.cfg.capacity_pages {
+            return Err(format!(
+                "capacity exceeded: {} of {} pages",
+                self.used_pages, self.cfg.capacity_pages
+            ));
+        }
+        let live = self.n_blocks() as u32;
+        if live * self.pages_per_block != self.used_pages {
+            return Err(format!(
+                "page accounting drift: {live} blocks vs {} used pages",
+                self.used_pages
+            ));
+        }
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            if !n.live {
+                continue;
+            }
+            if !self.nodes[n.parent].live {
+                return Err(format!("block {i} has a dead parent {}", n.parent));
+            }
+            if self.nodes[n.parent].children.get(&n.key) != Some(&i) {
+                return Err(format!("block {i} unlinked from parent {}", n.parent));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(capacity_pages: u32) -> PrefixCache {
+        PrefixCache::new(PrefixCacheConfig {
+            capacity_pages,
+            page_size: 16,
+            block_tokens: 128,
+        })
+    }
+
+    #[test]
+    fn block_hashes_are_chained_and_prefix_free() {
+        let a = block_hashes(1, 512, 128);
+        let b = block_hashes(2, 512, 128);
+        assert_eq!(a.len(), 4);
+        // same prefix id shares every block; different ids share none
+        assert_eq!(a, block_hashes(1, 512, 128));
+        assert!(a.iter().zip(&b).all(|(x, y)| x != y));
+        // partial blocks never hash
+        assert_eq!(block_hashes(1, 127, 128).len(), 0);
+        assert_eq!(block_hashes(1, 129, 128).len(), 1);
+        // a shorter stamp of the same id is a strict hash-chain prefix
+        assert_eq!(block_hashes(1, 256, 128), a[..2]);
+    }
+
+    #[test]
+    fn insert_then_lookup_matches_whole_blocks() {
+        let mut c = cache(1024);
+        let h = block_hashes(7, 512, 128);
+        assert_eq!(c.insert(&h), 4);
+        assert_eq!(c.peek(&h), 4);
+        assert_eq!(c.peek(&h[..2]), 2);
+        assert_eq!(c.peek(&block_hashes(8, 512, 128)), 0);
+        assert_eq!(c.used_pages(), 4 * (128 / 16));
+        assert_eq!(c.tokens_for_depth(4), 512);
+        c.check_invariants().unwrap();
+        // re-insert is idempotent
+        assert_eq!(c.insert(&h), 0);
+        assert_eq!(c.n_blocks(), 4);
+    }
+
+    #[test]
+    fn lookup_pin_counts_hits_and_release_unpins() {
+        let mut c = cache(1024);
+        c.insert(&block_hashes(1, 256, 128));
+        let pin = c.lookup_pin(&block_hashes(1, 512, 128));
+        assert_eq!(pin.depth(), 2);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.pinned_pages(), 2 * (128 / 16));
+        let miss = c.lookup_pin(&block_hashes(9, 512, 128));
+        assert_eq!(miss.depth(), 0);
+        assert_eq!(c.stats.misses, 1);
+        c.release(pin);
+        c.release(miss);
+        assert_eq!(c.pinned_pages(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_spares_pinned_blocks() {
+        // room for exactly 2 blocks (128 tokens = 8 pages each)
+        let mut c = cache(16);
+        let a = block_hashes(1, 128, 128);
+        let b = block_hashes(2, 128, 128);
+        let d = block_hashes(3, 128, 128);
+        c.insert(&a);
+        c.insert(&b);
+        let pin_a = c.lookup_pin(&a); // pins a AND makes it most recent
+        c.insert(&d); // must evict b (unpinned LRU), never a
+        assert_eq!(c.peek(&a), 1, "pinned block survives");
+        assert_eq!(c.peek(&b), 0, "unpinned LRU block evicted");
+        assert_eq!(c.peek(&d), 1);
+        assert_eq!(c.stats.evicted_blocks, 1);
+        assert!(c.used_pages() <= c.capacity_pages());
+        c.check_invariants().unwrap();
+        c.release(pin_a);
+    }
+
+    #[test]
+    fn insert_stops_when_everything_is_pinned() {
+        let mut c = cache(8); // one block only
+        let a = block_hashes(1, 128, 128);
+        c.insert(&a);
+        let pin = c.lookup_pin(&a);
+        let inserted = c.insert(&block_hashes(2, 256, 128));
+        assert_eq!(inserted, 0, "no unpinned victim: insert must back off");
+        assert_eq!(c.peek(&a), 1);
+        c.check_invariants().unwrap();
+        c.release(pin);
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_preserving_trie_shape() {
+        let mut c = cache(24); // three blocks
+        c.insert(&block_hashes(1, 384, 128)); // chain of 3
+        // inserting a fresh chain evicts the deepest (leaf) block first
+        c.insert(&block_hashes(2, 128, 128));
+        assert_eq!(c.peek(&block_hashes(1, 384, 128)), 2, "leaf went, spine stays");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invalidate_empties_the_index_and_makes_pins_inert() {
+        let mut c = cache(1024);
+        let h = block_hashes(4, 512, 128);
+        c.insert(&h);
+        let pin = c.lookup_pin(&h);
+        assert_eq!(pin.depth(), 4);
+        c.invalidate();
+        assert_eq!(c.n_blocks(), 0);
+        assert_eq!(c.used_pages(), 0);
+        assert_eq!(c.peek(&h), 0);
+        assert_eq!(c.stats.invalidated_blocks, 4);
+        c.release(pin); // stale epoch: must not underflow or touch anything
+        c.check_invariants().unwrap();
+        // the next epoch works normally
+        c.insert(&h);
+        assert_eq!(c.peek(&h), 4);
+    }
+
+    #[test]
+    fn stats_survive_invalidation() {
+        let mut c = cache(1024);
+        let h = block_hashes(5, 256, 128);
+        c.insert(&h);
+        let p = c.lookup_pin(&h);
+        c.release(p);
+        c.note_saved(256);
+        c.invalidate();
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.saved_tokens, 256);
+        assert_eq!(c.stats.inserted_blocks, 2);
+    }
+}

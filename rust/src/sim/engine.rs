@@ -200,6 +200,7 @@ impl EngineCore {
             arrival: r.arrival,
             prompt_len: r.prompt_len,
             predicted: r.predicted,
+            prefix: r.prefix,
         }
     }
 
@@ -481,6 +482,7 @@ mod tests {
             prompt_len: 8,
             decode_len: 2,
             predicted: None,
+            prefix: None,
         }
     }
 

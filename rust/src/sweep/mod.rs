@@ -119,7 +119,8 @@ pub fn run_cells(cells: Vec<SweepCell>, workers: usize) -> Vec<CellResult> {
 /// Header of [`results_csv`] — one place, so consumers and tests can't
 /// drift from the emitter.
 pub const RESULTS_CSV_HEADER: &str = "label,driver,finished,shed,ttft_mean_ms,ttft_p99_ms,\
-jct_mean_ms,jct_p99_ms,resource_s,makespan_s,utilization,attained,slo_attainment,goodput_rps";
+jct_mean_ms,jct_p99_ms,resource_s,makespan_s,utilization,attained,slo_attainment,goodput_rps,\
+cache_hit_rate,prefill_tokens_saved,overlap_ms";
 
 /// One CSV row per finished cell: the headline latency/resource columns
 /// plus the SLO lens — shed count, attained count, attainment fraction,
@@ -136,7 +137,7 @@ pub fn results_csv(results: &[CellResult]) -> String {
             if finished == 0 { 1.0 } else { m.attained as f64 / finished as f64 };
         writeln!(
             out,
-            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4},{},{:.4},{:.3}",
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4},{},{:.4},{:.3},{:.4},{},{:.3}",
             r.label,
             r.report.driver,
             finished,
@@ -151,6 +152,9 @@ pub fn results_csv(results: &[CellResult]) -> String {
             m.attained,
             attainment,
             s.goodput_rps,
+            m.cache_hit_rate(),
+            m.prefill_tokens_saved,
+            m.overlap_us as f64 / 1e3,
         )
         .expect("writing to a String cannot fail");
     }

@@ -66,6 +66,9 @@ pub struct Request {
     pub decode_len: u32,
     /// Predicted decode-length bucket (filled by the length predictor).
     pub predicted: Option<BucketPrediction>,
+    /// Shared-prefix stamp (`None` for prefix-free traffic — the legacy
+    /// default, consuming no generator RNG and touching no cache).
+    pub prefix: Option<PrefixStamp>,
 }
 
 impl Request {
@@ -86,6 +89,7 @@ impl Request {
             arrival: self.arrival,
             prompt_len: self.prompt_len,
             predicted: self.predicted,
+            prefix: self.prefix,
         }
     }
 }
@@ -108,12 +112,26 @@ pub struct ReqMeta {
     pub arrival: Us,
     pub prompt_len: u32,
     pub predicted: Option<BucketPrediction>,
+    /// Shared-prefix stamp (see [`Request::prefix`]) — cache-aware
+    /// routing and the prefill instance's suffix admission read it.
+    pub prefix: Option<PrefixStamp>,
 }
 
 impl ReqMeta {
     pub fn heavy_prefill(&self) -> bool {
         self.prompt_len > HEAVY_PREFILL_TOKENS
     }
+}
+
+/// Shared-prefix stamp: the request's prompt starts with the first `len`
+/// tokens of shared-prefix population member `id` (a system prompt or a
+/// multi-turn history). Stamped by the workload generator's `prefix` knob;
+/// the prefix cache derives its content-hash chain from this
+/// (`prefixcache::block_hashes`), standing in for hashing real token ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PrefixStamp {
+    pub id: u64,
+    pub len: u32,
 }
 
 /// A predicted decode-length range [lo, hi) in tokens (§3.3.2: ranges, not
@@ -212,6 +230,7 @@ mod tests {
             prompt_len: 512,
             decode_len: 128,
             predicted: None,
+            prefix: None,
         };
         assert!(!r.heavy_prefill());
         assert!(!r.heavy_decode());
@@ -231,11 +250,13 @@ mod tests {
             prompt_len: 600,
             decode_len: 4,
             predicted: Some(BucketPrediction::from_bucket(2, 200, 8)),
+            prefix: Some(PrefixStamp { id: 4, len: 256 }),
         };
         let m = r.meta();
         assert_eq!((m.id, m.task, m.arrival, m.prompt_len), (9, TaskType::Creation, 77, 600));
         assert_eq!(m.class, 3, "meta must carry the workload class");
         assert_eq!(m.predicted, r.predicted);
+        assert_eq!(m.prefix, r.prefix, "meta must carry the prefix stamp");
         assert!(m.heavy_prefill());
     }
 

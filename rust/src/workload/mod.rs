@@ -6,7 +6,7 @@
 //! reports; python/compile/data.py uses the *same* constants for predictor
 //! fine-tuning (keep in sync — checked by tests against manifest.json).
 
-use crate::types::{Request, TaskType, Us, HEAVY_DECODE_TOKENS, HEAVY_PREFILL_TOKENS};
+use crate::types::{PrefixStamp, Request, TaskType, Us, HEAVY_DECODE_TOKENS, HEAVY_PREFILL_TOKENS};
 use crate::util::Pcg;
 
 /// (prompt_median, prompt_sigma, decode_median, decode_sigma) per task.
@@ -56,6 +56,25 @@ impl WorkloadKind {
     }
 }
 
+/// Shared-prefix population knob: requests draw which of `n_prefixes`
+/// shared prompt prefixes (system prompts, multi-turn histories) they
+/// start with, zipf-weighted by popularity rank, each covering the first
+/// `prefix_len` prompt tokens (clamped to the sampled prompt).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefixPopulation {
+    pub n_prefixes: u32,
+    pub prefix_len: u32,
+    /// Zipf popularity exponent: weight of rank k ∝ 1/(k+1)^zipf
+    /// (0 = uniform; higher = a few prefixes dominate).
+    pub zipf: f64,
+}
+
+impl Default for PrefixPopulation {
+    fn default() -> Self {
+        PrefixPopulation { n_prefixes: 32, prefix_len: 512, zipf: 1.0 }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct WorkloadGen {
     rng: Pcg,
@@ -68,6 +87,15 @@ pub struct WorkloadGen {
     /// (and a classless trace consumes nothing here — bit-identical to
     /// pre-SLO builds).
     class_rng: Pcg,
+    /// Shared-prefix population (`None` = prefix-free legacy traffic).
+    prefix: Option<PrefixPopulation>,
+    /// Precomputed zipf weights, one per prefix rank.
+    prefix_weights: Vec<f64>,
+    /// The prefix stamp rides its own RNG stream, exactly like the class
+    /// stamp: a prefix-stamped trace keeps the same arrivals and lengths
+    /// as its prefix-free twin, and a prefix-free trace consumes nothing
+    /// here — bit-identical to pre-cache builds.
+    prefix_rng: Pcg,
 }
 
 impl WorkloadGen {
@@ -77,6 +105,9 @@ impl WorkloadGen {
             next_id: 0,
             class_weights: Vec::new(),
             class_rng: Pcg::with_stream(seed, 0x51f0_5e5a_71b7_4c3d),
+            prefix: None,
+            prefix_weights: Vec::new(),
+            prefix_rng: Pcg::with_stream(seed, 0x7c15_85eb_ca6b_9fe1),
         }
     }
 
@@ -85,6 +116,19 @@ impl WorkloadGen {
     /// stamped class 0 without consuming RNG state.
     pub fn set_classes(&mut self, weights: Vec<f64>) {
         self.class_weights = weights;
+    }
+
+    /// Install (or clear) the shared-prefix population. `None`, or a
+    /// population of zero prefixes, leaves every request unstamped
+    /// without consuming RNG state.
+    pub fn set_prefix(&mut self, prefix: Option<PrefixPopulation>) {
+        self.prefix_weights = match &prefix {
+            Some(p) if p.n_prefixes > 0 => {
+                (0..p.n_prefixes).map(|k| 1.0 / ((k + 1) as f64).powf(p.zipf)).collect()
+            }
+            _ => Vec::new(),
+        };
+        self.prefix = prefix;
     }
 
     /// Sample a task with the mixed-traffic prior (chat-dominant, like
@@ -113,7 +157,14 @@ impl WorkloadGen {
         } else {
             0
         };
-        Request { id, task, class, arrival, prompt_len: p, decode_len: d, predicted: None }
+        let prefix = match self.prefix {
+            Some(cfg) if !self.prefix_weights.is_empty() => {
+                let rank = self.prefix_rng.weighted(&self.prefix_weights) as u64;
+                Some(PrefixStamp { id: rank, len: cfg.prefix_len.min(p) })
+            }
+            _ => None,
+        };
+        Request { id, task, class, arrival, prompt_len: p, decode_len: d, predicted: None, prefix }
     }
 
     /// Sample one request from the full mixed distribution.
@@ -274,6 +325,14 @@ impl GenSource {
         self.gen.set_classes(weights);
         self
     }
+
+    /// Same stream, with a shared-prefix population installed —
+    /// bit-identical to `WorkloadGen::set_prefix` + `trace()` (the prefix
+    /// stamp rides its own RNG stream, see [`WorkloadGen::set_prefix`]).
+    pub fn with_prefix(mut self, prefix: Option<PrefixPopulation>) -> Self {
+        self.gen.set_prefix(prefix);
+        self
+    }
 }
 
 impl crate::sim::ArrivalSource for GenSource {
@@ -416,6 +475,46 @@ mod tests {
         one.set_classes(vec![1.0]);
         for (a, b) in classless.iter().zip(one.trace(WorkloadKind::Mixed, 600, 20.0, 0)) {
             assert_eq!((a.id, a.arrival, a.class), (b.id, b.arrival, b.class));
+        }
+    }
+
+    #[test]
+    fn prefix_stamp_rides_its_own_stream() {
+        // A prefix-stamped trace keeps exactly the same arrivals, lengths,
+        // classes and ids as its prefix-free twin; only the stamp differs.
+        // Popularity tracks the zipf weights, stamp lengths clamp to the
+        // prompt, and GenSource delivers the identical stamped stream.
+        use crate::sim::ArrivalSource as _;
+        let plain = WorkloadGen::new(31).trace(WorkloadKind::Mixed, 600, 20.0, 0);
+        let mut gen = WorkloadGen::new(31);
+        let pop = PrefixPopulation { n_prefixes: 4, prefix_len: 256, zipf: 1.2 };
+        gen.set_prefix(Some(pop));
+        let stamped = gen.trace(WorkloadKind::Mixed, 600, 20.0, 0);
+        let mut counts = [0usize; 4];
+        for (a, b) in plain.iter().zip(stamped.iter()) {
+            assert_eq!(
+                (a.id, a.arrival, a.prompt_len, a.decode_len, a.task, a.class),
+                (b.id, b.arrival, b.prompt_len, b.decode_len, b.task, b.class)
+            );
+            assert_eq!(a.prefix, None, "prefix-free requests stay unstamped");
+            let s = b.prefix.expect("every request draws a prefix");
+            assert!(s.id < 4);
+            assert_eq!(s.len, 256.min(b.prompt_len), "stamp clamps to the prompt");
+            counts[s.id as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert!(counts[0] > counts[3], "zipf rank 0 must dominate rank 3: {counts:?}");
+        let mut src =
+            GenSource::new(31, WorkloadKind::Mixed, 600, 20.0, 0).with_prefix(Some(pop));
+        for w in &stamped {
+            let g = src.next_request().unwrap();
+            assert_eq!((g.id, g.prefix), (w.id, w.prefix), "GenSource prefix parity");
+        }
+        // an empty population is the same as no population at all
+        let mut none = WorkloadGen::new(31);
+        none.set_prefix(Some(PrefixPopulation { n_prefixes: 0, ..pop }));
+        for (a, b) in plain.iter().zip(none.trace(WorkloadKind::Mixed, 600, 20.0, 0)) {
+            assert_eq!((a.id, a.arrival, a.prefix), (b.id, b.arrival, b.prefix));
         }
     }
 

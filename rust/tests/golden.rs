@@ -36,7 +36,8 @@ const SEED: u64 = 42;
 fn fingerprint(m: &RunMetrics) -> String {
     format!(
         "makespan_us={} jct_mean_ms={:.6} ttft_mean_ms={:.6} n={} swapped={} flips={} \
-         scales=+{}/-{} shed={} attained={} failed={} recovered={} faults={}",
+         scales=+{}/-{} shed={} attained={} failed={} recovered={} faults={} \
+         hits={} misses={} saved={}",
         m.makespan_us,
         m.jct_summary().mean,
         m.ttft_summary().mean,
@@ -49,7 +50,10 @@ fn fingerprint(m: &RunMetrics) -> String {
         m.attained,
         m.failed,
         m.recovered,
-        m.faults_injected
+        m.faults_injected,
+        m.cache_hits,
+        m.cache_misses,
+        m.prefill_tokens_saved
     )
 }
 
@@ -137,6 +141,21 @@ fn cases() -> Vec<(String, Box<dyn Fn() -> RunMetrics>)> {
     // fault subsystem's whole recovery trajectory stays pinned (the
     // fingerprint carries failed/recovered/faults counters)
     for name in ["chaos_crash", "chaos_link", "chaos_storm"] {
+        out.push((
+            format!("scenario/{name}-spec"),
+            Box::new(move || {
+                let path = repo_root().join(format!("scenarios/{name}.json"));
+                let sc = Scenario::load(path.to_str().unwrap())
+                    .unwrap_or_else(|e| panic!("{name} spec parses: {e}"));
+                sc.run().unwrap_or_else(|e| panic!("{name} spec resolves: {e}")).metrics
+            }),
+        ));
+    }
+    // the prefix-cache specs: radix KV reuse on a skewed prefix population
+    // (layer-wise transfer overlap in prefix_reuse, eviction churn in
+    // multiturn) — the fingerprint carries hit/miss/saved counters, so the
+    // cache's whole reuse trajectory stays pinned end-to-end
+    for name in ["prefix_reuse", "multiturn"] {
         out.push((
             format!("scenario/{name}-spec"),
             Box::new(move || {
@@ -236,7 +255,7 @@ fn shipped_scenario_specs_round_trip_and_resolve() {
         registry.resolve(&sc).unwrap_or_else(|e| panic!("{path_str}: {e}"));
         n += 1;
     }
-    assert!(n >= 20, "expected the shipped scenario set (incl. the chaos_* specs), found {n} specs");
+    assert!(n >= 22, "expected the shipped scenario set (incl. the prefix specs), found {n} specs");
 }
 
 /// Assert two runs produced identical per-request trajectories: same

@@ -21,6 +21,7 @@ fn random_request(rng: &mut Pcg, id: u64, pred: &mut OraclePredictor) -> Request
         prompt_len: rng.range(1, 400) as u32,
         decode_len: rng.range(1, 300) as u32,
         predicted: None,
+        prefix: None,
     };
     if rng.f64() < 0.7 {
         r.predicted = Some(pred.predict(&[], r.decode_len));
@@ -128,6 +129,7 @@ fn preemption_victims_leave_from_the_back_in_order() {
             prompt_len: 23, // 3 pages each → 9 pages total, pool full
             decode_len: 40,
             predicted: None,
+            prefix: None,
         });
     }
     s.admit(&mut kv);

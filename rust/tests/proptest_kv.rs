@@ -4,9 +4,14 @@
 //!
 //! Invariants (the decode artifact relies on all of them):
 //!   * page 0 (the trash page) is never allocated;
-//!   * no page is owned twice; free + live + trash == total;
+//!   * no page is owned twice — not by two requests, and not by a request
+//!     and a shared prefix group at once;
+//!   * free + live + shared + trash == total (shared prefix pages counted
+//!     once however many requests reference them);
 //!   * table length never exceeds page capacity;
-//!   * failed allocations have no side effects.
+//!   * failed allocations have no side effects;
+//!   * shared groups free their pages exactly when the last reference
+//!     drops, never sooner.
 
 use tetri_infer::kvcache::PagedKvCache;
 use tetri_infer::util::Pcg;
@@ -17,19 +22,35 @@ enum Op {
     Append { id: u64 },
     Release { id: u64 },
     SwapOut { id: u64 },
+    ShareAlloc { key: u64, tokens: u32 },
+    ShareRetain { key: u64 },
+    ShareRelease { key: u64 },
 }
 
-fn random_op(rng: &mut Pcg, live: &[u64], next_id: &mut u64) -> Op {
+fn random_op(rng: &mut Pcg, live: &[u64], shared: &[u64], next_id: &mut u64) -> Op {
     let roll = rng.f64();
-    if live.is_empty() || roll < 0.3 {
+    if roll < 0.15 {
+        // shared prefix traffic: a small hot key space so retains and
+        // last-reference frees both happen often
+        let key = rng.range(1, 8);
+        let sub = rng.f64();
+        return if !shared.contains(&key) && sub < 0.5 {
+            Op::ShareAlloc { key, tokens: rng.range(1, 200) as u32 }
+        } else if sub < 0.8 {
+            Op::ShareRetain { key }
+        } else {
+            Op::ShareRelease { key }
+        };
+    }
+    if live.is_empty() || roll < 0.4 {
         let id = *next_id;
         *next_id += 1;
         Op::Alloc { id, tokens: rng.range(1, 400) as u32 }
     } else {
         let id = live[rng.index(live.len())];
-        if roll < 0.75 {
+        if roll < 0.8 {
             Op::Append { id }
-        } else if roll < 0.9 {
+        } else if roll < 0.92 {
             Op::Release { id }
         } else {
             Op::SwapOut { id }
@@ -43,11 +64,13 @@ fn run_case(seed: u64, ops: usize) {
     let page_size = [1u32, 4, 8, 16, 64][rng.index(5)];
     let mut kv = PagedKvCache::new(total_pages, page_size);
     let mut live: Vec<u64> = vec![];
+    let mut shared: Vec<u64> = vec![];
+    let mut refs: std::collections::HashMap<u64, u32> = Default::default();
     let mut next_id = 0u64;
     let mut expected_len: std::collections::HashMap<u64, u32> = Default::default();
 
     for step in 0..ops {
-        let op = random_op(&mut rng, &live, &mut next_id);
+        let op = random_op(&mut rng, &live, &shared, &mut next_id);
         let ctx = || format!("seed={seed} step={step} op={op:?} pages={total_pages} psz={page_size}");
         match op {
             Op::Alloc { id, tokens } => {
@@ -84,6 +107,55 @@ fn run_case(seed: u64, ops: usize) {
                 assert_eq!(got, want, "{}", ctx());
                 live.retain(|&x| x != id);
             }
+            Op::ShareAlloc { key, tokens } => {
+                let free_before = kv.free_pages();
+                let shared_before = kv.shared_pages();
+                match kv.alloc_shared(key, tokens) {
+                    Ok(()) => {
+                        shared.push(key);
+                        refs.insert(key, 1);
+                        assert_eq!(kv.shared_refs(key), 1, "{}", ctx());
+                        assert_eq!(
+                            kv.free_pages() + kv.shared_pages(),
+                            free_before + shared_before,
+                            "shared alloc must only move pages, not create them: {}",
+                            ctx()
+                        );
+                    }
+                    Err(_) => {
+                        assert_eq!(kv.free_pages(), free_before, "failed shared alloc leaked: {}", ctx());
+                        assert_eq!(kv.shared_refs(key), 0, "{}", ctx());
+                    }
+                }
+            }
+            Op::ShareRetain { key } => {
+                let pages_before = kv.shared_pages();
+                let known = kv.retain_shared(key);
+                assert_eq!(known, refs.contains_key(&key), "{}", ctx());
+                if known {
+                    *refs.get_mut(&key).unwrap() += 1;
+                }
+                assert_eq!(kv.shared_pages(), pages_before, "retain must never cost pages: {}", ctx());
+            }
+            Op::ShareRelease { key } => {
+                let freed = kv.release_shared(key);
+                match refs.get_mut(&key) {
+                    Some(r) if *r > 1 => {
+                        *r -= 1;
+                        assert_eq!(freed, 0, "pages freed while sharers remain: {}", ctx());
+                    }
+                    Some(_) => {
+                        refs.remove(&key);
+                        shared.retain(|&k| k != key);
+                        assert!(freed > 0, "last release must free the run: {}", ctx());
+                        assert_eq!(kv.shared_refs(key), 0, "{}", ctx());
+                    }
+                    None => assert_eq!(freed, 0, "unknown key must be inert: {}", ctx()),
+                }
+            }
+        }
+        for (&key, &r) in &refs {
+            assert_eq!(kv.shared_refs(key), r, "refcount drift: {}", ctx());
         }
         kv.check_invariants().unwrap_or_else(|e| panic!("{e} [{}]", ctx()));
         for (&id, &len) in &expected_len {

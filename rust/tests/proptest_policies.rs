@@ -21,6 +21,7 @@ fn req(id: u64, plen: u32, dlen: u32) -> Request {
         prompt_len: plen,
         decode_len: dlen,
         predicted: None,
+        prefix: None,
     }
 }
 

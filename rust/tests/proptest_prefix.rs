@@ -1,0 +1,199 @@
+//! Property tests for the prefix-cache subsystem (hand-rolled: no
+//! proptest crate in the vendored environment — random op sequences from
+//! a seeded PCG, invariants checked after every operation, failing seed
+//! printed).
+//!
+//! Properties:
+//!   * without eviction pressure, lookup depth equals a naive
+//!     longest-common-prefix oracle over every inserted chain;
+//!   * eviction never frees a pinned block and capacity is never
+//!     exceeded, whatever the op order;
+//!   * with the cache off, a prefix-stamped trace runs event-for-event
+//!     identical to its unstamped twin under all three drivers — the
+//!     stamps ride a separate RNG stream and are pure metadata until a
+//!     cache consumes them.
+
+use tetri_infer::api::{BaselineDriver, ClusterDriver, Driver as _, NullObserver};
+use tetri_infer::baseline::BaselineConfig;
+use tetri_infer::coordinator::ClusterConfig;
+use tetri_infer::prefixcache::{block_hashes, Pin, PrefixCache, PrefixCacheConfig};
+use tetri_infer::util::Pcg;
+use tetri_infer::workload::{PrefixPopulation, WorkloadGen, WorkloadKind};
+
+/// Naive oracle: the longest whole-block prefix of `chain` shared with
+/// any inserted chain (the trie answers exactly this when nothing has
+/// been evicted).
+fn naive_lcp(inserted: &[Vec<u64>], chain: &[u64]) -> u32 {
+    let mut best = 0usize;
+    for other in inserted {
+        let m = other.iter().zip(chain.iter()).take_while(|(a, b)| a == b).count();
+        best = best.max(m);
+    }
+    best as u32
+}
+
+#[test]
+fn lookup_depth_matches_naive_lcp_oracle_without_eviction() {
+    for seed in 0..25u64 {
+        let mut rng = Pcg::new(seed);
+        // capacity far above what 40 inserts of ≤ 8 blocks can use, so
+        // the LRU never fires and the oracle stays exact
+        let cfg = PrefixCacheConfig { capacity_pages: 1 << 16, ..Default::default() };
+        let mut cache = PrefixCache::new(cfg);
+        let blk = cfg.block_tokens;
+        let mut inserted: Vec<Vec<u64>> = Vec::new();
+        for step in 0..40 {
+            let prefix_id = rng.range(0, 6);
+            let len = rng.range(0, 8) as u32 * blk + rng.range(0, blk as u64) as u32;
+            let chain = block_hashes(prefix_id, len, blk);
+            let ctx = || format!("seed={seed} step={step} id={prefix_id} len={len}");
+            assert_eq!(cache.peek(&chain), naive_lcp(&inserted, &chain), "{}", ctx());
+            if rng.f64() < 0.7 {
+                cache.insert(&chain);
+                inserted.push(chain.clone());
+                assert_eq!(cache.peek(&chain), chain.len() as u32, "own chain fully resident: {}", ctx());
+            } else {
+                let pin = cache.lookup_pin(&chain);
+                assert_eq!(pin.depth(), naive_lcp(&inserted, &chain), "{}", ctx());
+                cache.release(pin);
+            }
+            cache.check_invariants().unwrap_or_else(|e| panic!("{e} [{}]", ctx()));
+        }
+        // hashes are chained: sibling prefixes share nothing past their
+        // first divergent block
+        let a = block_hashes(100, 4 * blk, blk);
+        let b = block_hashes(101, 4 * blk, blk);
+        assert!(a.iter().zip(b.iter()).all(|(x, y)| x != y), "distinct ids must diverge at block 0");
+    }
+}
+
+#[test]
+fn eviction_never_frees_pinned_and_capacity_holds() {
+    for seed in 50..80u64 {
+        let mut rng = Pcg::new(seed);
+        // tiny cache: a handful of blocks fit, so almost every insert evicts
+        let cfg = PrefixCacheConfig {
+            capacity_pages: 64,
+            page_size: 16,
+            block_tokens: 128, // 8 pages per block → 8 blocks max
+        };
+        let mut cache = PrefixCache::new(cfg);
+        let blk = cfg.block_tokens;
+        let mut pins: Vec<(Vec<u64>, Pin)> = Vec::new();
+        for step in 0..300 {
+            let ctx = || format!("seed={seed} step={step}");
+            let roll = rng.f64();
+            if roll < 0.4 {
+                let chain = block_hashes(rng.range(0, 12), rng.range(1, 6) as u32 * blk, blk);
+                cache.insert(&chain);
+            } else if roll < 0.7 {
+                let chain = block_hashes(rng.range(0, 12), rng.range(1, 6) as u32 * blk, blk);
+                let pin = cache.lookup_pin(&chain);
+                pins.push((chain, pin));
+            } else if let Some((chain, pin)) = (!pins.is_empty())
+                .then(|| pins.swap_remove(rng.index(pins.len())))
+            {
+                // pinned blocks must still be resident right up to release
+                assert!(
+                    cache.peek(&chain) >= pin.depth(),
+                    "pinned prefix evicted: {} (peek {} < pin {})",
+                    ctx(),
+                    cache.peek(&chain),
+                    pin.depth()
+                );
+                cache.release(pin);
+            }
+            assert!(
+                cache.used_pages() <= cache.capacity_pages(),
+                "capacity exceeded: {} ({} > {})",
+                ctx(),
+                cache.used_pages(),
+                cache.capacity_pages()
+            );
+            cache.check_invariants().unwrap_or_else(|e| panic!("{e} [{}]", ctx()));
+        }
+        // once pressure happened at all, evictions must have been counted
+        assert!(cache.stats.inserted_blocks > 0, "seed={seed}: no inserts landed");
+    }
+}
+
+#[test]
+fn crash_invalidation_empties_the_index_but_keeps_the_ledger() {
+    let cfg = PrefixCacheConfig::default();
+    let mut cache = PrefixCache::new(cfg);
+    let chain = block_hashes(7, 4 * cfg.block_tokens, cfg.block_tokens);
+    cache.insert(&chain);
+    let pin = cache.lookup_pin(&chain);
+    let hits_before = cache.stats.hits;
+    assert!(hits_before > 0);
+    cache.invalidate();
+    assert_eq!(cache.peek(&chain), 0, "dead instance's blocks must be gone");
+    assert_eq!(cache.used_pages(), 0);
+    assert_eq!(cache.stats.hits, hits_before, "stats survive the epoch bump");
+    assert!(cache.stats.invalidated_blocks >= 4);
+    // a pin taken under the old epoch releases as a no-op
+    cache.release(pin);
+    cache.check_invariants().unwrap();
+    // the next incarnation starts cold but counts into the same ledger
+    let pin = cache.lookup_pin(&chain);
+    assert_eq!(pin.depth(), 0);
+    cache.release(pin);
+    assert_eq!(cache.stats.misses, 1);
+}
+
+/// Stamped and unstamped twins of one trace: same seed, the stamped one
+/// additionally draws prefix ranks from the dedicated prefix stream.
+fn twin_traces(seed: u64, n: usize) -> (Vec<tetri_infer::types::Request>, Vec<tetri_infer::types::Request>) {
+    let mut plain_gen = WorkloadGen::new(seed);
+    let plain = plain_gen.trace(WorkloadKind::Mixed, n, 40.0, 0);
+    let mut stamped_gen = WorkloadGen::new(seed);
+    stamped_gen.set_prefix(Some(PrefixPopulation::default()));
+    let stamped = stamped_gen.trace(WorkloadKind::Mixed, n, 40.0, 0);
+    (plain, stamped)
+}
+
+#[test]
+fn cache_off_stamped_traces_are_bit_identical_under_all_three_drivers() {
+    let (plain, stamped) = twin_traces(97, 48);
+    // the stamps themselves must not have perturbed the trace
+    for (a, b) in plain.iter().zip(stamped.iter()) {
+        assert_eq!((a.id, a.arrival, a.prompt_len, a.decode_len, a.task), (b.id, b.arrival, b.prompt_len, b.decode_len, b.task));
+        assert!(a.prefix.is_none() && b.prefix.is_some());
+    }
+    let runs: [(&str, Box<dyn Fn(&[tetri_infer::types::Request]) -> tetri_infer::metrics::RunMetrics>); 3] = [
+        (
+            "tetri",
+            Box::new(|t| {
+                ClusterDriver::from_config(ClusterConfig::default()).run(t, &mut NullObserver).metrics
+            }),
+        ),
+        (
+            "vllm",
+            Box::new(|t| {
+                BaselineDriver::from_config(BaselineConfig::default()).run(t, &mut NullObserver).metrics
+            }),
+        ),
+        (
+            "hybrid",
+            Box::new(|t| {
+                let cfg = ClusterConfig { n_coupled: 1, ..Default::default() };
+                ClusterDriver::from_config(cfg).run(t, &mut NullObserver).metrics
+            }),
+        ),
+    ];
+    for (name, run) in &runs {
+        let a = run(&plain);
+        let b = run(&stamped);
+        assert_eq!(a.makespan_us, b.makespan_us, "{name}: makespan diverged");
+        assert_eq!(a.events, b.events, "{name}: event count diverged");
+        assert_eq!(a.records.len(), b.records.len(), "{name}");
+        for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!(
+                (ra.id, ra.first_token, ra.finished),
+                (rb.id, rb.first_token, rb.finished),
+                "{name}: per-request trajectory diverged"
+            );
+        }
+        assert_eq!(b.cache_hits + b.cache_misses, 0, "{name}: cache off must never look up");
+    }
+}

@@ -170,6 +170,7 @@ fn slo_prefill_never_inverts_tiers_within_a_pass() {
                 arrival: rng.range(0, 1_000_000),
                 prompt_len: rng.range(1, 1024) as u32,
                 predicted: None,
+                prefix: None,
             });
         }
         let mut last: Option<(u8, Us)> = None;

@@ -45,6 +45,7 @@ fn prefill_chunk_split_consistency() {
             prompt_len: 20,
             decode_len: 8,
             predicted: None,
+            prefix: None,
         },
         m.vocab as u32,
     ))

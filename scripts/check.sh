@@ -39,8 +39,8 @@ for spec in ../scenarios/*.json; do
   cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --requests 8 >/dev/null
   specs_run=$((specs_run + 1))
 done
-if [ "${specs_run}" -lt 20 ]; then
-  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 20)" >&2
+if [ "${specs_run}" -lt 22 ]; then
+  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 22)" >&2
   exit 1
 fi
 
@@ -70,6 +70,23 @@ for spec in ../scenarios/chaos_crash.json ../scenarios/chaos_link.json ../scenar
       --requests 24 --no-baseline >/dev/null
   done
 done
+# Prefix-cache matrix: the reuse specs must run under every driver (the
+# stamps are pure metadata on vllm — the baseline ignores them — while
+# tetri/hybrid consume them through the radix cache), and the CLI --prefix
+# flag spelling gets one smoke of its own.
+for spec in ../scenarios/prefix_reuse.json ../scenarios/multiturn.json; do
+  test -f "${spec}" || { echo "missing shipped prefix spec ${spec}" >&2; exit 1; }
+  for drv in tetri vllm hybrid; do
+    echo "prefix smoke: ${spec} under ${drv}"
+    cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --driver "${drv}" \
+      --requests 24 --no-baseline >/dev/null
+  done
+done
+echo "prefix smoke: CLI --prefix flag"
+cargo run --release --quiet --bin tetri -- sim --workload HPLD --requests 24 --rate 24 \
+  --prefill 2 --decode 2 --prefix n_prefixes=8,prefix_len=512,zipf=1.0 \
+  --no-baseline >/dev/null
+
 echo "chaos smoke: CLI --fault flag"
 cargo run --release --quiet --bin tetri -- sim --workload Mixed --requests 24 --rate 24 \
   --decode 2 --fault kind=restart,at_ms=100,instance=2,down_ms=250 \

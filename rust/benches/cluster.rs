@@ -20,7 +20,7 @@ use tetri_infer::api::Scenario;
 use tetri_infer::decode::DecodePolicy;
 use tetri_infer::metrics::RunMetrics;
 use tetri_infer::sweep::{default_workers, run_cells, SweepCell};
-use tetri_infer::util::{repo_root, Json};
+use tetri_infer::util::{bench_meta, merge_bench_sections, repo_root, Json};
 use tetri_infer::workload::WorkloadKind;
 
 const REPS: usize = 3;
@@ -164,24 +164,29 @@ fn main() {
             ])
         })
         .collect();
-    let doc = Json::obj([
-        ("bench", Json::from("cluster")),
-        ("schema", Json::from(1u64)),
-        ("reps", Json::from(REPS)),
-        ("rows", Json::from(json_rows)),
-        (
-            "sweep",
-            Json::obj([
-                ("cells", Json::from(parallel.len())),
-                ("events", Json::from(sweep_events)),
-                ("serial_ms", Json::from(serial_s * 1e3)),
-                ("parallel_ms", Json::from(parallel_s * 1e3)),
-                ("workers", Json::from(workers)),
-                ("speedup", Json::from(speedup)),
-            ]),
-        ),
-    ]);
+    // Section-keyed read-modify-write: only this bench's keys are
+    // replaced, so the "engine" section benches/engine.rs owns survives
+    // verbatim (the old full-file write orphaned it on every re-run).
     let path = repo_root().join("BENCH_cluster.json");
-    std::fs::write(&path, doc.dump()).expect("writing BENCH_cluster.json");
-    println!("wrote {}", path.display());
+    merge_bench_sections(
+        &path,
+        &[("bench", Json::from("cluster")), ("schema", Json::from(1u64))],
+        vec![
+            ("meta", bench_meta()),
+            ("reps", Json::from(REPS)),
+            ("rows", Json::from(json_rows)),
+            (
+                "sweep",
+                Json::obj([
+                    ("cells", Json::from(parallel.len())),
+                    ("events", Json::from(sweep_events)),
+                    ("serial_ms", Json::from(serial_s * 1e3)),
+                    ("parallel_ms", Json::from(parallel_s * 1e3)),
+                    ("workers", Json::from(workers)),
+                    ("speedup", Json::from(speedup)),
+                ]),
+            ),
+        ],
+    );
+    println!("merged cluster rows into {}", path.display());
 }

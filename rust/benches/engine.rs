@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use tetri_infer::api::Scenario;
 use tetri_infer::sim::{CalendarQueue, Event, HeapQueue};
-use tetri_infer::util::{repo_root, Json, Pcg};
+use tetri_infer::util::{bench_meta, merge_bench_sections, repo_root, Json, Pcg};
 
 const QUEUE_OPS: usize = 2_000_000;
 /// Standing event population during the queue bench (each pop schedules a
@@ -160,21 +160,55 @@ fn main() {
         (warm.ttft_summary().mean / cold.ttft_summary().mean - 1.0) * 100.0
     );
 
-    // ---- merge into BENCH_cluster.json -------------------------------
-    // Fail loudly on a present-but-corrupt baseline instead of silently
-    // overwriting the committed cluster rows with an engine-only doc.
+    // ---- regression gate (warn-only) ---------------------------------
+    // Compare the fresh scale-run throughput against the committed
+    // baseline *before* overwriting it. Warn-only by default — committed
+    // numbers from a different host/toolchain are not comparable until a
+    // baseline is blessed on the CI host; BENCH_GATE_STRICT=1 turns the
+    // warning into a failure (scripts/bench_gate.sh).
     let out = repo_root().join("BENCH_cluster.json");
-    let existing = std::fs::read_to_string(&out).ok().map(|s| {
-        Json::parse(&s).unwrap_or_else(|e| {
-            panic!(
-                "{} exists but does not parse ({e}); refusing to overwrite the \
-                 perf baseline — re-run `cargo bench --bench cluster` (or delete \
-                 the file) first",
-                out.display()
-            )
-        })
-    });
+    let tolerance: f64 = std::env::var("BENCH_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let baseline_eps = std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.at(&["engine", "scale_run", "events_per_sec"])?.as_f64());
+    match baseline_eps {
+        Some(base) if base > 0.0 => {
+            let ratio = events_per_sec / base;
+            if ratio < 1.0 - tolerance {
+                println!(
+                    "WARNING: scale-run throughput regressed {:.1}% vs committed baseline \
+                     ({:.0} -> {:.0} events/s, tolerance {:.0}%)",
+                    (1.0 - ratio) * 100.0,
+                    base,
+                    events_per_sec,
+                    tolerance * 100.0
+                );
+                if std::env::var("BENCH_GATE_STRICT").as_deref() == Ok("1") {
+                    std::process::exit(1);
+                }
+            } else {
+                println!(
+                    "bench gate: {:.0} events/s vs baseline {:.0} ({:+.1}%, tolerance {:.0}%) — ok",
+                    events_per_sec,
+                    base,
+                    (ratio - 1.0) * 100.0,
+                    tolerance * 100.0
+                );
+            }
+        }
+        _ => println!(
+            "bench gate: no committed engine baseline in {} — recording fresh numbers",
+            out.display()
+        ),
+    }
+
+    // ---- merge into BENCH_cluster.json -------------------------------
     let engine = Json::obj([
+        ("meta", bench_meta()),
         (
             "queue",
             Json::obj([
@@ -213,28 +247,15 @@ fn main() {
             ]),
         ),
     ]);
-    // read-modify-write: keep whatever benches/cluster.rs recorded
-    let doc = match existing.as_ref() {
-        Some(j) => {
-            let map = j.as_obj().unwrap_or_else(|| {
-                panic!(
-                    "{} is not a JSON object; refusing to overwrite the perf baseline",
-                    out.display()
-                )
-            });
-            Json::obj(
-                map.iter()
-                    .filter(|(k, _)| k.as_str() != "engine")
-                    .map(|(k, v)| (k.clone(), v.clone()))
-                    .chain(std::iter::once(("engine".to_string(), engine))),
-            )
-        }
-        None => Json::obj([
-            ("bench", Json::from("cluster")),
-            ("schema", Json::from(1u64)),
-            ("engine", engine),
-        ]),
-    };
-    std::fs::write(&out, doc.dump()).expect("writing BENCH_cluster.json");
+    // Section-keyed read-modify-write (util::merge_bench_sections): only
+    // the "engine" key is replaced, so whatever benches/cluster.rs
+    // recorded survives verbatim — idempotent however many times and in
+    // whatever order the two benches re-run. Panics loudly on a
+    // present-but-corrupt baseline instead of silently overwriting it.
+    merge_bench_sections(
+        &out,
+        &[("bench", Json::from("cluster")), ("schema", Json::from(1u64))],
+        vec![("engine", engine)],
+    );
     println!("merged engine rows into {}", out.display());
 }

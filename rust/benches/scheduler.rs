@@ -16,7 +16,7 @@ use tetri_infer::kvcache::PagedKvCache;
 use tetri_infer::prefill::{choose, Chunker, DecodeLoad, DispatchPolicy, PrefillPolicy, PrefillScheduler};
 use tetri_infer::sim::{Event, EventQueue};
 use tetri_infer::types::Request;
-use tetri_infer::util::{repo_root, Json, Pcg};
+use tetri_infer::util::{bench_meta, merge_bench_sections, repo_root, Json, Pcg};
 use tetri_infer::workload::WorkloadKind;
 
 /// Time `f` (which performs `iters` inner operations), repeated `reps`
@@ -201,12 +201,11 @@ fn main() {
             ])
         })
         .collect();
-    let doc = Json::obj([
-        ("bench", Json::from("sched")),
-        ("schema", Json::from(1u64)),
-        ("rows", Json::from(json_rows)),
-    ]);
     let path = repo_root().join("BENCH_sched.json");
-    std::fs::write(&path, doc.dump()).expect("writing BENCH_sched.json");
+    merge_bench_sections(
+        &path,
+        &[("bench", Json::from("sched")), ("schema", Json::from(1u64))],
+        vec![("meta", bench_meta()), ("rows", Json::from(json_rows))],
+    );
     println!("wrote {}", path.display());
 }

@@ -398,6 +398,11 @@ pub struct Scenario {
     /// default — draws nothing from the prefix RNG stream and runs
     /// bit-identical to pre-cache builds.
     pub prefix: Option<PrefixSpec>,
+    /// Collect a per-event-kind wall-time profile during the run
+    /// (`--profile-events` on the CLI). Observability only: the
+    /// virtual-time trajectory, records, and fingerprints are identical
+    /// either way.
+    pub profile_events: bool,
 }
 
 impl Default for Scenario {
@@ -436,6 +441,7 @@ impl Default for Scenario {
             admission: false,
             faults: None,
             prefix: None,
+            profile_events: false,
         }
     }
 }
@@ -474,6 +480,7 @@ const KNOWN_KEYS: &[&str] = &[
     "admission",
     "faults",
     "prefix",
+    "profile_events",
 ];
 
 const PHASE_KEYS: &[&str] = &["workload", "requests", "rate", "start_ms"];
@@ -741,6 +748,7 @@ impl Scenario {
             slo: self.slo_config(),
             fault: self.faults.as_ref().map(FaultPlanSpec::to_config),
             prefix_cache: self.prefix.map(PrefixSpec::cache_config),
+            profile_events: self.profile_events,
             cost,
             seed: self.seed,
             ..Default::default()
@@ -766,6 +774,7 @@ impl Scenario {
             retain_records: self.records,
             slo: self.slo_config(),
             fault: self.faults.as_ref().map(FaultPlanSpec::to_config),
+            profile_events: self.profile_events,
             cost,
             seed: self.seed,
             ..Default::default()
@@ -836,6 +845,7 @@ impl Scenario {
             ),
             ("records", Json::from(self.records)),
             ("admission", Json::from(self.admission)),
+            ("profile_events", Json::from(self.profile_events)),
         ];
         if let Some(el) = self.elastic {
             pairs.push((
@@ -1030,6 +1040,7 @@ impl Scenario {
                     }
                 }
                 "admission" => sc.admission = want_bool(v, key)?,
+                "profile_events" => sc.profile_events = want_bool(v, key)?,
                 "faults" => {
                     sc.faults = match v {
                         Json::Null => None,
@@ -1522,6 +1533,12 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Collect the per-event-kind wall-time profile (observability only).
+    pub fn profile_events(mut self, v: bool) -> Self {
+        self.sc.profile_events = v;
+        self
+    }
+
     /// Append one fault event, creating a default-knobbed plan on first
     /// use (the builder mirror of a repeated `--fault` CLI flag).
     pub fn fault(mut self, ev: FaultSpec) -> Self {
@@ -1748,6 +1765,21 @@ mod tests {
         let sc = Scenario::default();
         assert!(sc.records && sc.cluster_config().retain_records);
         assert!(Scenario::from_str(r#"{"records": 1}"#).is_err(), "records must be a bool");
+    }
+
+    #[test]
+    fn profile_events_knob_reaches_both_configs() {
+        let sc = Scenario::from_str(r#"{"profile_events": true}"#).unwrap();
+        assert!(sc.profile_events);
+        assert!(sc.cluster_config().profile_events);
+        assert!(sc.baseline_config().profile_events);
+        // default stays off: no wall-clock timing in the hot loop
+        let sc = Scenario::default();
+        assert!(!sc.profile_events && !sc.cluster_config().profile_events);
+        assert!(
+            Scenario::from_str(r#"{"profile_events": "yes"}"#).is_err(),
+            "profile_events must be a bool"
+        );
     }
 
     #[test]

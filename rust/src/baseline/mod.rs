@@ -58,6 +58,9 @@ pub struct BaselineConfig {
     /// are no-ops here because the baseline ships no KV). `None` runs
     /// fault-free, bit-identical to pre-fault builds.
     pub fault: Option<FaultConfig>,
+    /// Collect a per-event-kind wall-time profile (see
+    /// `ClusterConfig::profile_events` — same knob, observability only).
+    pub profile_events: bool,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -72,6 +75,7 @@ impl Default for BaselineConfig {
             macro_step: true,
             slo: SloConfig::default(),
             fault: None,
+            profile_events: false,
             cost: CostModel::default(),
             seed: 0,
         }
@@ -114,6 +118,9 @@ impl BaselineCluster {
         let n = cfg.n_instances;
         let mut core = EngineCore::new(n);
         core.metrics.retain_records = cfg.retain_records;
+        if cfg.profile_events {
+            core.profile = Some(Box::default());
+        }
         core.metrics.set_classes(cfg.slo.classes.clone());
         let gate = AdmissionGate::from_config(&cfg.slo);
         let plan = cfg.fault.clone().map(|fc| FaultPlan::new(fc, cfg.seed));
@@ -153,11 +160,11 @@ impl BaselineCluster {
     fn on_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
         // One admission decision per request, at its first delivery —
         // fault retries re-enter here and must not re-charge the gate.
-        let first_delivery = !self.core.requests[slot as usize].seen;
+        let first_delivery = !self.core.seen(slot);
         self.core.note_arrival(slot, obs);
         if first_delivery {
             if let Some(gate) = self.gate.as_mut() {
-                let req = self.core.requests[slot as usize].req;
+                let req = self.core.requests[slot as usize];
                 let in_flight = (self.core.in_flight() - 1) as u64;
                 if !gate.admits(req.class, self.core.now(), in_flight) {
                     self.core.shed(slot, obs);
@@ -168,7 +175,7 @@ impl BaselineCluster {
             // Graceful degradation: below the fault plan's watermark,
             // best-effort tiers shed at the door (see the cluster's twin).
             if self.degraded_since.is_some() {
-                let class = self.core.requests[slot as usize].req.class;
+                let class = self.core.requests[slot as usize].class;
                 let tier =
                     self.cfg.slo.classes.get(class as usize).map(|c| c.tier).unwrap_or(0);
                 if tier != 0 {
@@ -198,7 +205,7 @@ impl BaselineCluster {
             }
             return;
         };
-        let plen = self.core.requests[slot as usize].req.prompt_len;
+        let plen = self.core.requests[slot as usize].prompt_len;
         self.insts[i].enqueue(slot, plen);
         if !self.note_delivered(obs) {
             self.try_start(i, obs);
@@ -211,6 +218,8 @@ impl BaselineCluster {
     /// spent. All callers reach here with the slot still counted in
     /// `arrivals_pending` (crash harvest re-adds it first).
     fn requeue_lost(&mut self, slot: ReqId, obs: &mut dyn Observer) {
+        // fault-recovery bookkeeping — cold path (plan-gated)
+        let _cold = crate::util::cold_section();
         let now = self.core.now();
         let n = self.core.note_lost(slot, now);
         let (retry_max, backoff) = match self.plan.as_ref() {
@@ -293,9 +302,9 @@ impl BaselineCluster {
     fn close_iteration(&mut self, i: usize, now: Us, obs: &mut dyn Observer) {
         let (mut prefilled, mut done) = self.insts[i].end_iteration(now);
         for slot in prefilled.drain(..) {
-            self.core.requests[slot as usize].first_token = now;
+            self.core.hot[slot as usize].first_token = now;
             // single-token requests finish at prefill
-            if self.core.requests[slot as usize].req.decode_len <= 1 {
+            if self.core.requests[slot as usize].decode_len <= 1 {
                 self.insts[i].drop_running(slot);
                 self.core.finish(slot, now, obs);
             }
@@ -336,6 +345,8 @@ impl BaselineCluster {
     /// KV over any fabric (its observer hook still fires so chaos
     /// timelines line up across drivers).
     fn on_fault_event(&mut self, k: usize, obs: &mut dyn Observer) {
+        // fault delivery allocates freely (harvests, target resolution)
+        let _cold = crate::util::cold_section();
         let now = self.core.now();
         let live: Vec<usize> = (0..self.insts.len()).filter(|&i| self.alive[i]).collect();
         let inj = match self.plan.as_mut() {
@@ -368,6 +379,8 @@ impl BaselineCluster {
     /// load tally survives on the dead slot), bump the epoch, and
     /// re-queue or fail the harvested requests.
     fn crash_instance(&mut self, i: usize, obs: &mut dyn Observer) {
+        // crash harvest + state replacement allocate — cold path
+        let _cold = crate::util::cold_section();
         let now = self.core.now();
         let lost = self.insts[i].harvest_crashed();
         // the dead incarnation's swap tally would die with the object
@@ -389,6 +402,8 @@ impl BaselineCluster {
     /// A crashed slot's downtime elapsed: it serves again (the fresh
     /// state object was installed at crash time, on the new epoch).
     fn on_restart(&mut self, i: usize, obs: &mut dyn Observer) {
+        // fault recovery — cold path
+        let _cold = crate::util::cold_section();
         if self.alive[i] {
             return; // duplicate restart event
         }
@@ -434,9 +449,10 @@ impl EngineHost for BaselineCluster {
         // arrivals stream in lazily: start from the source's total
         self.arrivals_pending = self.core.total_expected;
         if let Some(plan) = &self.plan {
-            for (k, ev) in plan.events().iter().enumerate() {
-                self.core.queue.schedule_at(ev.at, Event::Fault(k));
-            }
+            // chaos schedule seeded in one batched admission
+            self.core
+                .queue
+                .push_batch(plan.events().iter().enumerate().map(|(k, ev)| (ev.at, Event::Fault(k))));
         }
     }
 

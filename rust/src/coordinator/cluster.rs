@@ -43,7 +43,7 @@ use crate::prefill::{choose_ranked, predicted_footprint, DecodeLoad};
 use crate::prefixcache::{block_hashes, Pin, PrefixCache};
 use crate::slo::AdmissionGate;
 use crate::sim::{
-    macro_chain, run_des, run_des_source, ArrivalSource, EngineCore, EngineHost, Event,
+    macro_chain, run_des, run_des_source, ArrivalSource, EngineCore, EngineHost, Event, HotState,
 };
 use crate::types::{ReqId, ReqMeta, Request, Role, Us, HEAVY_DECODE_TOKENS};
 use crate::util::Pcg;
@@ -54,6 +54,19 @@ use super::config::{ClusterConfig, PredictorMode};
 enum Entry {
     Prefill(usize),
     Coupled(usize),
+}
+
+/// Per-run reusable buffers for coordinator paths that would otherwise
+/// allocate per event — part of the zero-alloc steady-state invariant
+/// (DESIGN.md §Performance rule 5; enforced by the `alloc-count`
+/// feature). Instance-side assembly/harvest buffers live inside the role
+/// states themselves (`pending_prefilled`, `done`, ...).
+struct Scratch {
+    /// Merged broadcast + since-tick load view, rebuilt per dispatch.
+    loads: Vec<DecodeLoad>,
+    /// The monitor tick's parked-dispatch retry sweep: swapped with
+    /// `pending_dispatch` so both vectors keep their capacity.
+    dispatch: Vec<ReqId>,
 }
 
 pub struct Cluster {
@@ -69,9 +82,8 @@ pub struct Cluster {
     /// (heavy, light, kv footprint) per instance. A real dispatcher knows
     /// its own recent sends even though the broadcast is stale.
     since_tick: Vec<(u32, u32, u64)>,
-    /// Scratch buffer for merged load views (avoids an allocation per
-    /// dispatch on the hot path — see EXPERIMENTS.md §Perf).
-    loads_scratch: Vec<DecodeLoad>,
+    /// Reusable hot-path buffers (see [`Scratch`]).
+    scratch: Scratch,
     /// Cached least-loaded prefill instance (the §3.2 routing target).
     /// Invalidated when the cached instance's load grows or the instance
     /// set changes; kept fresh in O(1) when any other instance's load
@@ -144,6 +156,9 @@ impl Cluster {
         let rng = Pcg::with_stream(cfg.seed, 0x1234_5678_9abc_def1);
         let mut core = EngineCore::new(n);
         core.metrics.retain_records = cfg.retain_records;
+        if cfg.profile_events {
+            core.profile = Some(Box::default());
+        }
         // the metrics need the class table at finish time (attainment);
         // this also pre-sizes the per-class ledger so zero-traffic
         // tenants still report
@@ -160,7 +175,7 @@ impl Cluster {
             pool,
             broadcast: Vec::new(),
             since_tick: vec![(0, 0, 0); n],
-            loads_scratch: Vec::with_capacity(n),
+            scratch: Scratch { loads: Vec::with_capacity(n), dispatch: Vec::new() },
             least_prefill: None,
             least_prefill_dirty: true,
             predictor,
@@ -294,9 +309,9 @@ impl Cluster {
     fn pick_prefill_for(&mut self, slot: ReqId) -> Option<usize> {
         if !self.prefix_caches.is_empty() {
             if let (Some(stamp), Some(pc)) =
-                (self.core.requests[slot as usize].req.prefix, self.cfg.prefix_cache)
+                (self.core.requests[slot as usize].prefix, self.cfg.prefix_cache)
             {
-                let plen = self.core.requests[slot as usize].req.prompt_len;
+                let plen = self.core.requests[slot as usize].prompt_len;
                 let hashes = block_hashes(stamp.id, stamp.len.min(plen), pc.block_tokens);
                 let mut best: Option<(u32, u64, usize)> = None;
                 for i in 0..self.pool.len() {
@@ -357,7 +372,7 @@ impl Cluster {
     fn cache_index_prefilled(&mut self, i: usize, slot: ReqId) {
         let Some(pc) = self.cfg.prefix_cache else { return };
         self.cache_release_pin(slot);
-        let req = &self.core.requests[slot as usize].req;
+        let req = &self.core.requests[slot as usize];
         let Some(stamp) = req.prefix else { return };
         let hashes = block_hashes(stamp.id, stamp.len.min(req.prompt_len), pc.block_tokens);
         if let Some(c) = self.prefix_caches.get_mut(i) {
@@ -390,11 +405,11 @@ impl Cluster {
         // One admission decision per request, at its *first* delivery —
         // mid-flip retries re-enqueue `Event::Arrival` and must not
         // re-charge the token bucket.
-        let first_delivery = !self.core.requests[slot as usize].seen;
+        let first_delivery = !self.core.seen(slot);
         self.core.note_arrival(slot, obs);
         if first_delivery {
             if let Some(gate) = self.gate.as_mut() {
-                let req = self.core.requests[slot as usize].req;
+                let req = self.core.requests[slot as usize];
                 // in-flight excluding the arrival under decision: the
                 // engine admitted it into the arena before dispatching
                 let in_flight = (self.core.in_flight() - 1) as u64;
@@ -411,7 +426,7 @@ impl Cluster {
             // watermark, best-effort tiers are shed at the door so the
             // surviving instances keep serving interactive traffic.
             if self.degraded_since.is_some() {
-                let class = self.core.requests[slot as usize].req.class;
+                let class = self.core.requests[slot as usize].class;
                 let tier =
                     self.cfg.slo.classes.get(class as usize).map(|c| c.tier).unwrap_or(0);
                 if tier != 0 {
@@ -467,9 +482,9 @@ impl Cluster {
             PredictorMode::Parallel => {
                 // Prediction rides alongside; request is immediately
                 // schedulable, concurrent chunks pay the Figure 17 tax.
-                let dlen = self.core.requests[slot as usize].req.decode_len;
+                let dlen = self.core.requests[slot as usize].decode_len;
                 let pred = self.predictor.predict(&[], dlen);
-                self.core.requests[slot as usize].req.predicted = Some(pred);
+                self.core.requests[slot as usize].predicted = Some(pred);
                 let meta = self.core.meta_of(slot);
                 let meta = self.cache_admit(i, slot, meta);
                 let p = self.pool.prefill_mut(i).expect("routed to a prefill instance");
@@ -480,7 +495,7 @@ impl Cluster {
                 self.try_start_prefill(i, obs);
             }
             PredictorMode::Sequential => {
-                let tokens = self.core.requests[slot as usize].req.prompt_len.min(512);
+                let tokens = self.core.requests[slot as usize].prompt_len.min(512);
                 let dur = self.cfg.cost.predictor_iter_us(tokens);
                 let epoch = self.pool.epoch(i);
                 self.core
@@ -500,7 +515,7 @@ impl Cluster {
     }
 
     fn route_to_coupled(&mut self, slot: ReqId, c: usize, obs: &mut dyn Observer) {
-        let plen = self.core.requests[slot as usize].req.prompt_len;
+        let plen = self.core.requests[slot as usize].prompt_len;
         let ci = self.pool.coupled_mut(c).expect("routed to a coupled instance");
         ci.enqueue(slot, plen);
         self.note_enqueued(obs);
@@ -522,9 +537,9 @@ impl Cluster {
     }
 
     fn on_predict_done(&mut self, i: usize, epoch: u32, slot: ReqId, obs: &mut dyn Observer) {
-        let dlen = self.core.requests[slot as usize].req.decode_len;
+        let dlen = self.core.requests[slot as usize].decode_len;
         let pred = self.predictor.predict(&[], dlen);
-        self.core.requests[slot as usize].req.predicted = Some(pred);
+        self.core.requests[slot as usize].predicted = Some(pred);
         let meta = self.core.meta_of(slot);
         if self.pool.epoch(i) == epoch
             && self.pool.accepts_work(i)
@@ -590,10 +605,9 @@ impl Cluster {
             // Request fully prefilled: first token exists now (TTFT).
             let slot = seg.req;
             let epoch = self.pool.epoch(i);
-            let st = &mut self.core.requests[slot as usize];
-            st.first_token = now;
-            st.prefilled_by = Some((i, epoch));
-            let done_at_prefill = st.req.decode_len <= 1;
+            self.core.hot[slot as usize] =
+                HotState { first_token: now, prefilled_by: Some((i, epoch)) };
+            let done_at_prefill = self.core.requests[slot as usize].decode_len <= 1;
             // whole prompt resident here now: unpin + index the prefix
             self.cache_index_prefilled(i, slot);
             if done_at_prefill {
@@ -617,11 +631,11 @@ impl Cluster {
     /// The §3.3.4 dispatch: stale broadcast + own recent sends → α/β split
     /// → power-of-two → least interference; then schedule the KV transfer.
     fn dispatch_request(&mut self, slot: ReqId, obs: &mut dyn Observer) -> bool {
-        let req = self.core.requests[slot as usize].req;
+        let req = self.core.requests[slot as usize];
         // merge broadcast with what we dispatched since the last tick
         // (into the reusable scratch buffer — this runs once per request)
-        self.loads_scratch.clear();
-        self.loads_scratch.extend(self.broadcast.iter().map(|l| {
+        self.scratch.loads.clear();
+        self.scratch.loads.extend(self.broadcast.iter().map(|l| {
             let (h, lt, kv) = self.since_tick[l.instance];
             DecodeLoad {
                 instance: l.instance,
@@ -647,7 +661,7 @@ impl Cluster {
         };
         let slo_ranked = self.cfg.slo.tpot_deadline_us(req.class).is_some();
         let target = choose_ranked(
-            &self.loads_scratch,
+            &self.scratch.loads,
             req.prompt_len,
             req.predicted,
             self.cfg.granularity,
@@ -708,7 +722,7 @@ impl Cluster {
         // the KV — backpressure stays until the payload really lands).
         if let Some(p) = self.plan.as_ref() {
             if p.link_outage_until(now).is_some() {
-                let plen = self.core.requests[slot as usize].req.prompt_len;
+                let plen = self.core.requests[slot as usize].prompt_len;
                 let nominal = self.transfer_nominal(plen);
                 let dur =
                     self.plan.as_ref().map(|p| p.link_transfer_us(now, nominal)).unwrap_or(nominal);
@@ -732,7 +746,7 @@ impl Cluster {
             return;
         }
 
-        let req = self.core.requests[slot as usize].req;
+        let req = self.core.requests[slot as usize];
         let meta = self.core.meta_of(slot);
         // A draining decode instance still accepts KV that was already in
         // flight toward it (rejecting would pay the transfer twice).
@@ -770,9 +784,8 @@ impl Cluster {
     /// per-instance backpressure signal honest under multi-prefill
     /// configs.
     fn release_prefill_resident(&mut self, slot: ReqId) {
-        let st = &mut self.core.requests[slot as usize];
-        let plen = st.req.prompt_len as u64;
-        let held = st.prefilled_by.take();
+        let plen = self.core.requests[slot as usize].prompt_len as u64;
+        let held = self.core.hot[slot as usize].prefilled_by.take();
         // only the uncached suffix was admitted into residency; any
         // cache-skip note is consumed here whether or not the release
         // itself still applies (fault re-queues re-pin from scratch)
@@ -895,9 +908,9 @@ impl Cluster {
         let Some(ci) = self.pool.coupled_mut(c) else { return };
         let (mut prefilled, mut done) = ci.end_iteration(now);
         for slot in prefilled.drain(..) {
-            self.core.requests[slot as usize].first_token = now;
+            self.core.hot[slot as usize].first_token = now;
             // single-token requests finish at prefill
-            if self.core.requests[slot as usize].req.decode_len <= 1 {
+            if self.core.requests[slot as usize].decode_len <= 1 {
                 if let Some(ci) = self.pool.coupled_mut(c) {
                     ci.drop_running(slot);
                 }
@@ -974,7 +987,12 @@ impl Cluster {
         // restart pending may never heal on its own — burn retry budget
         // (the re-queue path re-prefills once capacity returns via the
         // elastic pool, or fails the request bounded).
-        for slot in std::mem::take(&mut self.pending_dispatch) {
+        // (swap with the scratch buffer, not `mem::take`, so *both*
+        // vectors keep their capacity across ticks — zero-alloc steady
+        // state)
+        std::mem::swap(&mut self.pending_dispatch, &mut self.scratch.dispatch);
+        for k in 0..self.scratch.dispatch.len() {
+            let slot = self.scratch.dispatch[k];
             if !self.dispatch_request(slot, obs) {
                 if self.plan.is_some()
                     && !self.pool.any_restart_pending()
@@ -986,6 +1004,7 @@ impl Cluster {
                 }
             }
         }
+        self.scratch.dispatch.clear();
         if self.core.outstanding > 0 {
             self.core.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);
         }
@@ -1032,6 +1051,8 @@ impl Cluster {
             if !self.pool.is_drained(i) {
                 continue;
             }
+            // role teardown/flip allocates (fresh role state) — cold path
+            let _cold = crate::util::cold_section();
             let role = self.pool.state(i).role().expect("draining instances serve a role");
             match target {
                 DrainTarget::Retire => {
@@ -1098,6 +1119,8 @@ impl Cluster {
                 }
                 _ => continue,
             };
+            // flips allocate (role teardown, flip event) — cold path
+            let _cold = crate::util::cold_section();
             // drained already (idle): flip is just the role switch
             let dur = self.rng.range(flip.flip_min_us, flip.flip_max_us + 1);
             self.swapped_graveyard += self.pool.begin_flip(i, to);
@@ -1113,6 +1136,8 @@ impl Cluster {
     }
 
     fn on_flip_done(&mut self, i: usize) {
+        // fresh role state construction allocates — cold path
+        let _cold = crate::util::cold_section();
         let to = match self.pool.state(i) {
             InstanceState::Flipping { to } => *to,
             _ => return,
@@ -1133,6 +1158,8 @@ impl Cluster {
     /// instance-indexed structure, stamping its birth time for the
     /// alive/utilization accounting.
     fn add_instance(&mut self, state: InstanceState) -> usize {
+        // pool growth allocates across every instance-indexed structure
+        let _cold = crate::util::cold_section();
         let i = self.pool.push(state);
         self.pool.get_mut(i).born = self.core.now();
         self.core.grow_instances(self.pool.len());
@@ -1156,6 +1183,7 @@ impl Cluster {
         if self.pool.n_live() < el.max_instances {
             let np = self.pool.n_active(Role::Prefill).max(1) as u64;
             if prefill_backlog > el.prefill_up_tokens * np {
+                let _cold = crate::util::cold_section();
                 let state = InstanceState::Prefill(new_prefill_inst(&self.cfg, now));
                 let i = self.add_instance(state);
                 self.least_prefill_dirty = true;
@@ -1165,6 +1193,7 @@ impl Cluster {
             }
             let nd = self.pool.n_active(Role::Decode).max(1) as u64;
             if decode_backlog > el.decode_up_jobs * nd {
+                let _cold = crate::util::cold_section();
                 let state = InstanceState::Decode(new_decode_inst(&self.cfg));
                 let i = self.add_instance(state);
                 self.core.metrics.scale_ups += 1;
@@ -1187,6 +1216,7 @@ impl Cluster {
                 && now.saturating_sub(r.last_active()) >= el.down_idle_us
                 && self.pool.n_active(role) > el.min_per_role
             {
+                let _cold = crate::util::cold_section();
                 self.pool.begin_drain(i, DrainTarget::Retire);
                 if role == Role::Prefill {
                     self.least_prefill_dirty = true;
@@ -1203,6 +1233,8 @@ impl Cluster {
     /// Deliver fault-plan event `k`: resolve its target against the live
     /// set, open link/straggler windows, or crash an instance.
     fn on_fault_event(&mut self, k: usize, obs: &mut dyn Observer) {
+        // fault delivery allocates freely (harvests, target resolution)
+        let _cold = crate::util::cold_section();
         let now = self.core.now();
         let live = self.pool.live_roles();
         let inj = match self.plan.as_mut() {
@@ -1234,6 +1266,8 @@ impl Cluster {
     /// in-flight completions inert), rescue its swap tallies into the
     /// graveyard, and re-queue or fail the harvested requests.
     fn crash_instance(&mut self, i: usize, until: Option<Us>, obs: &mut dyn Observer) {
+        // crash harvest + re-queues allocate — cold path by definition
+        let _cold = crate::util::cold_section();
         let now = self.core.now();
         // harvest before the role state is destroyed
         let mut lost = match self.pool.state_mut(i) {
@@ -1258,7 +1292,7 @@ impl Cluster {
         // their payload — they re-prefill. Others stay parked.
         let parked = std::mem::take(&mut self.pending_dispatch);
         for slot in parked {
-            let from_crashed = self.core.requests[slot as usize]
+            let from_crashed = self.core.hot[slot as usize]
                 .prefilled_by
                 .map(|(src, _)| src == i)
                 .unwrap_or(false);
@@ -1282,6 +1316,8 @@ impl Cluster {
     /// reached a local scheduler) — the bookkeeping differs because the
     /// retry path re-charges `note_enqueued` when it lands.
     fn requeue_lost(&mut self, slot: ReqId, pending: bool, obs: &mut dyn Observer) {
+        // fault-recovery bookkeeping — cold path (plan-gated)
+        let _cold = crate::util::cold_section();
         // any residual prefill residency or cache pin is stale now
         // (epoch-guarded: no-ops when the holding instance crashed)
         self.cache_release_pin(slot);
@@ -1313,6 +1349,8 @@ impl Cluster {
     /// A crashed slot's downtime elapsed: restart it with a fresh (empty)
     /// role state on the post-crash epoch.
     fn on_restart(&mut self, i: usize, obs: &mut dyn Observer) {
+        // fresh role state construction allocates — cold path
+        let _cold = crate::util::cold_section();
         let Some(role) = self.pool.dead_role(i) else { return };
         let now = self.core.now();
         let state = match role {
@@ -1374,10 +1412,11 @@ impl EngineHost for Cluster {
         self.base_capacity = self.pool.live_roles().len();
         if let Some(plan) = self.plan.as_ref() {
             // the chaos schedule rides the normal event queue — fault
-            // events bound macro chains like any other external event
-            for (k, ev) in plan.events().iter().enumerate() {
-                self.core.queue.schedule_at(ev.at, Event::Fault(k));
-            }
+            // events bound macro chains like any other external event —
+            // seeded in one batched admission (sorted per bucket once)
+            self.core
+                .queue
+                .push_batch(plan.events().iter().enumerate().map(|(k, ev)| (ev.at, Event::Fault(k))));
         }
         self.refresh_broadcast();
         self.core.queue.schedule_in(self.cfg.monitor_interval_us, Event::MonitorTick);

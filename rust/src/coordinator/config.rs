@@ -138,6 +138,11 @@ pub struct ClusterConfig {
     /// default — skips cache bookkeeping entirely and is bit-identical to
     /// pre-cache builds.
     pub prefix_cache: Option<crate::prefixcache::PrefixCacheConfig>,
+    /// Collect a per-event-kind wall-time profile during the run (the
+    /// `--profile-events` CLI flag). Observability only: the virtual-time
+    /// trajectory, records, and fingerprints are identical either way —
+    /// the profile lives outside the fingerprinted metrics.
+    pub profile_events: bool,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -170,6 +175,7 @@ impl Default for ClusterConfig {
             slo: SloConfig::default(),
             fault: None,
             prefix_cache: None,
+            profile_events: false,
             cost: CostModel::default(),
             seed: 0,
         }

@@ -10,8 +10,7 @@ use std::collections::VecDeque;
 use crate::costmodel::CostModel;
 use crate::decode::{DecodeJob, DecodePolicy, DecodeScheduler};
 use crate::kvcache::PagedKvCache;
-use crate::sim::ReqState;
-use crate::types::{ReqId, ReqMeta, Role, Us};
+use crate::types::{ReqId, ReqMeta, Request, Role, Us};
 
 use super::{swapin_charge, InstanceRole};
 
@@ -82,7 +81,7 @@ impl CoupledInst {
     /// or there is nothing to do.
     pub fn begin_iteration(
         &mut self,
-        requests: &[ReqState],
+        requests: &[Request],
         cost: &CostModel,
         prefill_batch: usize,
         fixed_batch: u32,
@@ -100,7 +99,7 @@ impl CoupledInst {
         if batch_ready {
             while self.pending_prefilled.len() < prefill_batch {
                 let Some(&slot) = self.waiting.front() else { break };
-                let plen = requests[slot as usize].req.prompt_len;
+                let plen = requests[slot as usize].prompt_len;
                 if !self.kv.can_fit(slot, plen + 1) {
                     break; // head-of-line block: vLLM stalls prefill on memory
                 }
@@ -132,11 +131,11 @@ impl CoupledInst {
         // pages were allocated above, so they enter the running batch
         // directly (the scheduler keeps its aggregates in sync).
         for &slot in &self.pending_prefilled {
-            let st = &requests[slot as usize];
+            let req = &requests[slot as usize];
             // scheduler-facing meta keyed by the arena slot, not the
             // original request id
-            let meta = ReqMeta { id: slot, ..st.req.meta() };
-            let mut job = DecodeJob::new(meta, st.req.decode_len);
+            let meta = ReqMeta { id: slot, ..req.meta() };
+            let mut job = DecodeJob::new(meta, req.decode_len);
             job.generated = 1;
             self.dec.inject_running(job);
         }
@@ -220,30 +219,21 @@ impl InstanceRole for CoupledInst {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::NO_TIME;
-    use crate::types::{Request, TaskType};
+    use crate::types::TaskType;
 
-    fn arena(specs: &[(u32, u32)]) -> Vec<ReqState> {
+    fn arena(specs: &[(u32, u32)]) -> Vec<Request> {
         specs
             .iter()
             .enumerate()
-            .map(|(i, &(plen, dlen))| ReqState {
-                req: Request {
-                    id: i as u64,
-                    task: TaskType::Chat,
-                    class: 0,
-                    arrival: 0,
-                    prompt_len: plen,
-                    decode_len: dlen,
-                    predicted: None,
-                    prefix: None,
-                },
-                first_token: NO_TIME,
-                prefilled_by: None,
-                seen: false,
-                retries: 0,
-                recovered: false,
-                lost_at: NO_TIME,
+            .map(|(i, &(plen, dlen))| Request {
+                id: i as u64,
+                task: TaskType::Chat,
+                class: 0,
+                arrival: 0,
+                prompt_len: plen,
+                decode_len: dlen,
+                predicted: None,
+                prefix: None,
             })
             .collect()
     }
@@ -258,7 +248,7 @@ mod tests {
         // batch of 4 not filled, more arrivals coming, decodes running →
         // the fixed batch waits
         c.kv.alloc(9, 10).unwrap();
-        let mut j = DecodeJob::new(ReqMeta { id: 9, ..reqs[0].req.meta() }, 5);
+        let mut j = DecodeJob::new(ReqMeta { id: 9, ..reqs[0].meta() }, 5);
         j.generated = 1;
         c.dec.inject_running(j);
         let st = c.begin_iteration(&reqs, &cost, 4, 16, true, 0).expect("decode side runs");

@@ -65,6 +65,9 @@ fn usage() -> ! {
     --records             keep per-request records (overrides a spec that
                           ships records:false, e.g. scenarios/scale.json)
     --no-baseline         skip the vLLM comparison run (scale runs)
+    --profile-events      print a per-event-kind wall-time table after the
+                          run (observability only; the simulated trajectory
+                          is identical either way)
     --class SPEC          add one workload class (repeatable; replaces the
                           spec's class table when given). SPEC is
                           key=value pairs, e.g.
@@ -141,6 +144,7 @@ const SIM_FLAGS: &[(&str, bool)] = &[
     ("--no-records", false),
     ("--records", false),
     ("--no-baseline", false),
+    ("--profile-events", false),
     ("--class", true),
     ("--admission", true),
     ("--fault", true),
@@ -287,6 +291,9 @@ fn scenario_from_args(args: &[String]) -> Scenario {
         (false, true) => sc.records = false,
         (false, false) => {}
     }
+    if args.iter().any(|a| a == "--profile-events") {
+        sc.profile_events = true;
+    }
     // --class is repeatable: given at all, the flags replace the spec's
     // class table wholesale (mixing the two would be ambiguous).
     let class_flags = arg_vals(args, "--class");
@@ -404,6 +411,26 @@ fn cmd_sim(args: &[String]) {
     if !report.metrics.classes.is_empty() {
         for row in report.metrics.class_rows() {
             println!("{row}");
+        }
+    }
+    // --profile-events: per-event-kind wall-time table, busiest first.
+    if let Some(profile) = &report.metrics.event_profile {
+        println!("event profile (host wall-clock, busiest kind first):");
+        for row in profile.render() {
+            println!("{row}");
+        }
+    }
+    // alloc-count builds report the steady-state allocation count; with
+    // ALLOC_COUNT_STRICT=1 (the CI canary) a nonzero count is fatal.
+    if cfg!(feature = "alloc-count") {
+        let n = report.metrics.steady_allocs;
+        println!("steady-state heap allocations (alloc-count): {n}");
+        if n > 0 && std::env::var("ALLOC_COUNT_STRICT").as_deref() == Ok("1") {
+            eprintln!(
+                "error: {n} steady-state allocation(s) escaped the hot loop \
+                 (zero-alloc invariant, see DESIGN.md §Performance)"
+            );
+            std::process::exit(1);
         }
     }
 

@@ -181,6 +181,78 @@ pub struct RunMetrics {
     /// granularities (chunk- or layer-level), vs shipping everything
     /// after the last chunk.
     pub overlap_us: Us,
+    /// Heap allocations the `alloc-count` counting allocator observed in
+    /// the steady-state window (second half of the run, cold sections
+    /// excluded). Always 0 without the feature. Host-side diagnostic —
+    /// never part of fingerprints or reports.
+    pub steady_allocs: u64,
+    /// Per-event-kind time/count table from the engine loop
+    /// (`--profile-events`), moved out of the core at finalize. Host
+    /// wall-clock diagnostic — never part of fingerprints or reports.
+    pub event_profile: Option<Box<EventProfile>>,
+}
+
+/// Per-event-kind wall-time profile of the engine loop
+/// (`--profile-events`): one `(count, total_nanos)` row per [`Event`]
+/// variant, indexed by `Event::kind_index()`. Measures *host* time around
+/// each `EngineHost::handle` call — purely diagnostic, it never touches
+/// the virtual-time trajectory.
+///
+/// [`Event`]: crate::sim::Event
+#[derive(Clone, Debug, Default)]
+pub struct EventProfile {
+    /// `(events handled, total handler nanos)` per event kind.
+    pub rows: [(u64, u64); Self::KINDS],
+}
+
+impl EventProfile {
+    /// Event-kind count — must equal the `Event` enum's variant count
+    /// (`sim::tests::event_kind_indices_are_dense_and_stable` pins the
+    /// mapping both ways).
+    pub const KINDS: usize = 11;
+
+    /// Display names, indexed like `rows` (= `Event::kind_index()`).
+    pub const NAMES: [&'static str; Self::KINDS] = [
+        "Arrival",
+        "PrefillIterDone",
+        "PredictDone",
+        "TransferDone",
+        "DecodeIterDone",
+        "MonitorTick",
+        "FlipDone",
+        "CoupledIterDone",
+        "Fault",
+        "Restart",
+        "Retry",
+    ];
+
+    /// Formatted table: one row per kind that handled any events, busiest
+    /// (by total handler time) first, then a totals line.
+    pub fn render(&self) -> Vec<String> {
+        let mut idx: Vec<usize> = (0..Self::KINDS).filter(|&i| self.rows[i].0 > 0).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(self.rows[i].1));
+        let total_n: u64 = self.rows.iter().map(|r| r.0).sum();
+        let total_ns: u64 = self.rows.iter().map(|r| r.1).sum();
+        let mut out = Vec::with_capacity(idx.len() + 1);
+        for i in idx {
+            let (n, ns) = self.rows[i];
+            out.push(format!(
+                "  {:<16} {:>10} events  {:>10.1} ms total  {:>8.0} ns/event  {:>5.1}%",
+                Self::NAMES[i],
+                n,
+                ns as f64 / 1e6,
+                ns as f64 / n.max(1) as f64,
+                100.0 * ns as f64 / total_ns.max(1) as f64,
+            ));
+        }
+        out.push(format!(
+            "  {:<16} {:>10} events  {:>10.1} ms total",
+            "total",
+            total_n,
+            total_ns as f64 / 1e6
+        ));
+        out
+    }
 }
 
 /// TTFT/JCT/resource for one run, computed once and threaded through
@@ -647,6 +719,18 @@ mod tests {
         let mut z = run(100.0, 1.0);
         z.attained = 0;
         assert!(a.goodput_per_dollar_vs(&z).is_nan());
+    }
+
+    #[test]
+    fn event_profile_renders_busiest_first_with_totals() {
+        let mut p = EventProfile::default();
+        p.rows[0] = (10, 5_000_000); // Arrival: 10 events, 5 ms
+        p.rows[4] = (100, 20_000_000); // DecodeIterDone: 100 events, 20 ms
+        let rows = p.render();
+        assert_eq!(rows.len(), 3, "two active kinds + totals: {rows:?}");
+        assert!(rows[0].contains("DecodeIterDone"), "busiest first: {}", rows[0]);
+        assert!(rows[1].contains("Arrival"), "{}", rows[1]);
+        assert!(rows[2].contains("total") && rows[2].contains("110"), "{}", rows[2]);
     }
 
     #[test]

@@ -80,12 +80,14 @@ impl ArrivalSource for TraceSource {
     }
 }
 
-/// Arena entry: one request plus the driver-side state that used to live
-/// in side HashMaps (first-token time) or nowhere at all (the prefilling
-/// instance, which the KV-release path needs). Shared by every driver;
-/// the coupled baseline simply never touches `prefilled_by`.
-pub struct ReqState {
-    pub req: Request,
+/// Hot arena lane, parallel to the `Request` payload lane: the two
+/// driver-side fields the mid-flight pipeline writes (first token at
+/// prefill completion, the KV-holding prefill instance at dispatch).
+/// Split out of the old AoS `ReqState` so iteration-time reads of the
+/// `Request` payload stay cache-dense (DESIGN.md §Performance, SoA
+/// layout). The coupled baseline simply never touches `prefilled_by`.
+#[derive(Clone, Copy, Debug)]
+pub struct HotState {
     pub first_token: Us,
     /// The prefill instance (and its epoch) holding this request's prompt
     /// KV until the transfer out completes. Consumed (`take`n) exactly
@@ -93,30 +95,77 @@ pub struct ReqState {
     /// coming back while the KV is in flight (a reborn incarnation must
     /// not have a stale release land on its counter).
     pub prefilled_by: Option<(usize, u32)>,
+}
+
+/// Cold arena lane: per-slot bookkeeping touched only at arrival, fault,
+/// and finish time — never inside an iteration. Lives in its own side
+/// table so the hot lanes above stay dense.
+#[derive(Clone, Copy, Debug)]
+pub struct ColdState {
     /// The arrival event fired at least once (mid-flip retries re-enqueue
     /// `Event::Arrival`; observers must see one arrival per request).
     pub seen: bool,
+    /// The request lost in-flight state to a fault at least once; stamped
+    /// onto the final record so recovered completions are countable.
+    pub recovered: bool,
     /// Times this request was re-queued after a fault destroyed its
     /// in-flight state (crashed instance, dead KV). Bounded by the fault
     /// plan's retry budget; 0 in fault-free runs.
     pub retries: u32,
-    /// The request lost in-flight state to a fault at least once; stamped
-    /// onto the final record so recovered completions are countable.
-    pub recovered: bool,
     /// Virtual time of the *first* fault loss ([`NO_TIME`] = never lost) —
     /// the recovery-latency clock starts here and stops at finish.
     pub lost_at: Us,
+}
+
+/// Reusable engine buffers a finished run parks for the next run on the
+/// same thread: the arena lanes, the free list, and the event queue
+/// (whose calendar ring and per-bucket heaps are the expensive part)
+/// keep their grown capacities across cells. Sweep workers run many
+/// cells back to back, so this is what makes `parallel_map` worker
+/// contexts persistent. Pure allocation reuse: the lanes are emptied and
+/// the queue reset before parking, and no capacity is ever observable in
+/// a trajectory, so reuse is bit-identical to fresh construction
+/// (parity-tested in `sweep::tests` and tests/golden.rs).
+struct CoreBuffers {
+    queue: super::EventQueue,
+    requests: Vec<Request>,
+    hot: Vec<HotState>,
+    cold: Vec<ColdState>,
+    free_slots: Vec<ReqId>,
+}
+
+impl Default for CoreBuffers {
+    fn default() -> Self {
+        CoreBuffers {
+            queue: EventQueue::new(),
+            requests: Vec::new(),
+            hot: Vec::new(),
+            cold: Vec::new(),
+            free_slots: Vec::new(),
+        }
+    }
+}
+
+thread_local! {
+    /// The parked buffers of the last run finished on this thread.
+    static SALVAGE: std::cell::RefCell<Option<CoreBuffers>> =
+        const { std::cell::RefCell::new(None) };
 }
 
 /// Queue + arena + metrics + termination condition: the state every DES
 /// driver shares. Drivers own one and layer policy state next to it.
 pub struct EngineCore {
     pub queue: EventQueue,
-    /// Request arena indexed by slot (events carry slots, not original
-    /// request ids). Finished slots recycle through the free list, so the
-    /// arena's length is the run's *peak in-flight* request count — the
-    /// O(active) memory property the scale runs depend on.
-    pub requests: Vec<ReqState>,
+    /// Request payload arena indexed by slot (events carry slots, not
+    /// original request ids). Finished slots recycle through the free
+    /// list, so the arena's length is the run's *peak in-flight* request
+    /// count — the O(active) memory property the scale runs depend on.
+    /// `hot` and `cold` are parallel lanes over the same slots.
+    pub requests: Vec<Request>,
+    /// Hot SoA lane, parallel to `requests` (see [`HotState`]).
+    pub hot: Vec<HotState>,
+    /// Cold SoA lane, parallel to `requests` (see [`ColdState`]).
+    pub cold: Vec<ColdState>,
     /// Recycled arena slots awaiting reuse (LIFO, deterministic).
     free_slots: Vec<ReqId>,
     /// Requests remaining (termination condition).
@@ -128,17 +177,27 @@ pub struct EngineCore {
     /// ([`NO_TIME`] once exhausted) — one half of the macro-step bound.
     next_arrival_at: Us,
     pub metrics: RunMetrics,
+    /// When set (`--profile-events`), the event loop times every handled
+    /// event into this per-kind table; [`EngineCore::finalize`] moves it
+    /// into the metrics. Boxed so the common unprofiled case costs one
+    /// pointer in the core.
+    pub profile: Option<Box<crate::metrics::EventProfile>>,
 }
 
 impl EngineCore {
     /// A core with per-instance metric vectors sized for `n_insts`.
     /// Record retention defaults on; drivers override it from their
-    /// config before the run starts.
+    /// config before the run starts. Reuses this thread's parked
+    /// [`CoreBuffers`] when a previous run left some (sweep workers run
+    /// many cells back to back); trajectory-neutral — see `CoreBuffers`.
     pub fn new(n_insts: usize) -> Self {
+        let buffers = SALVAGE.with(|s| s.borrow_mut().take()).unwrap_or_default();
         EngineCore {
-            queue: EventQueue::new(),
-            requests: Vec::new(),
-            free_slots: Vec::new(),
+            queue: buffers.queue,
+            requests: buffers.requests,
+            hot: buffers.hot,
+            cold: buffers.cold,
+            free_slots: buffers.free_slots,
             outstanding: 0,
             total_expected: 0,
             next_arrival_at: NO_TIME,
@@ -149,7 +208,26 @@ impl EngineCore {
                 decode_assign: vec![(0, 0); n_insts],
                 ..Default::default()
             },
+            profile: None,
         }
+    }
+
+    /// Park this core's reusable buffers (emptied) for the next run on
+    /// this thread. Called by `run_des_source` after `finalize`.
+    fn salvage(&mut self) {
+        let mut queue = std::mem::take(&mut self.queue);
+        let mut requests = std::mem::take(&mut self.requests);
+        let mut hot = std::mem::take(&mut self.hot);
+        let mut cold = std::mem::take(&mut self.cold);
+        let mut free_slots = std::mem::take(&mut self.free_slots);
+        queue.reset();
+        requests.clear();
+        hot.clear();
+        cold.clear();
+        free_slots.clear();
+        SALVAGE.with(|s| {
+            *s.borrow_mut() = Some(CoreBuffers { queue, requests, hot, cold, free_slots });
+        });
     }
 
     pub fn now(&self) -> Us {
@@ -169,30 +247,35 @@ impl EngineCore {
     /// one is free. Events carry the returned slot from here on; the
     /// original request id resurfaces only in the final `RequestRecord`.
     pub fn admit(&mut self, req: Request) -> ReqId {
-        let st = ReqState {
-            req,
-            first_token: NO_TIME,
-            prefilled_by: None,
-            seen: false,
-            retries: 0,
-            recovered: false,
-            lost_at: NO_TIME,
-        };
+        let hot = HotState { first_token: NO_TIME, prefilled_by: None };
+        let cold = ColdState { seen: false, recovered: false, retries: 0, lost_at: NO_TIME };
         match self.free_slots.pop() {
             Some(slot) => {
-                self.requests[slot as usize] = st;
+                self.requests[slot as usize] = req;
+                self.hot[slot as usize] = hot;
+                self.cold[slot as usize] = cold;
                 slot
             }
             None => {
-                self.requests.push(st);
+                // Arena growth is a capacity event, not steady state: the
+                // lanes only push while peak in-flight is still rising.
+                let _cold = crate::util::cold_section();
+                self.requests.push(req);
+                self.hot.push(hot);
+                self.cold.push(cold);
                 (self.requests.len() - 1) as ReqId
             }
         }
     }
 
+    /// Whether the arrival hook already fired for this slot (cold lane).
+    pub fn seen(&self, slot: ReqId) -> bool {
+        self.cold[slot as usize].seen
+    }
+
     /// Scheduler-facing view of an arena slot (slot becomes the id).
     pub fn meta_of(&self, slot: ReqId) -> ReqMeta {
-        let r = &self.requests[slot as usize].req;
+        let r = &self.requests[slot as usize];
         ReqMeta {
             id: slot,
             task: r.task,
@@ -217,9 +300,9 @@ impl EngineCore {
     /// Fire the observer's arrival hook exactly once per request,
     /// whatever number of times the arrival event is re-delivered.
     pub fn note_arrival(&mut self, slot: ReqId, obs: &mut dyn Observer) {
-        if !self.requests[slot as usize].seen {
-            self.requests[slot as usize].seen = true;
-            let req = self.requests[slot as usize].req;
+        if !self.cold[slot as usize].seen {
+            self.cold[slot as usize].seen = true;
+            let req = self.requests[slot as usize];
             obs.on_arrival(self.queue.now(), &req);
         }
     }
@@ -229,24 +312,25 @@ impl EngineCore {
     /// counter. The slot must carry no live references past this call —
     /// the next admitted arrival may reuse it.
     pub fn finish(&mut self, slot: ReqId, now: Us, obs: &mut dyn Observer) {
-        let st = &self.requests[slot as usize];
-        let first = if st.first_token == NO_TIME { now } else { st.first_token };
+        let req = &self.requests[slot as usize];
+        let cold = self.cold[slot as usize];
+        let first_token = self.hot[slot as usize].first_token;
+        let first = if first_token == NO_TIME { now } else { first_token };
         let rec = RequestRecord {
-            id: st.req.id,
-            task: st.req.task,
-            class: st.req.class,
-            prompt_len: st.req.prompt_len,
-            decode_len: st.req.decode_len,
-            arrival: st.req.arrival,
+            id: req.id,
+            task: req.task,
+            class: req.class,
+            prompt_len: req.prompt_len,
+            decode_len: req.decode_len,
+            arrival: req.arrival,
             first_token: first,
             finished: now,
-            predicted: st.req.predicted,
-            retries: st.retries,
-            recovered: st.recovered,
+            predicted: req.predicted,
+            retries: cold.retries,
+            recovered: cold.recovered,
         };
-        if st.recovered {
-            let lost_at = st.lost_at;
-            self.metrics.note_recovery(rec.class, now.saturating_sub(lost_at));
+        if cold.recovered {
+            self.metrics.note_recovery(rec.class, now.saturating_sub(cold.lost_at));
         }
         obs.on_finish(now, &rec);
         let (ttft_violated, tpot_violated) = self.metrics.note_finish(&rec);
@@ -262,7 +346,7 @@ impl EngineCore {
     /// the arena slot, and shrink the termination counter — a shed is a
     /// first-class request outcome, it just never produces tokens.
     pub fn shed(&mut self, slot: ReqId, obs: &mut dyn Observer) {
-        let req = self.requests[slot as usize].req;
+        let req = self.requests[slot as usize];
         let now = self.queue.now();
         obs.on_shed(now, &req);
         self.metrics.note_shed(req.class);
@@ -276,7 +360,7 @@ impl EngineCore {
     /// counter — so the conservation law extends to
     /// `finished + shed + failed == arrivals` and the loop still ends.
     pub fn fail(&mut self, slot: ReqId, obs: &mut dyn Observer) {
-        let req = self.requests[slot as usize].req;
+        let req = self.requests[slot as usize];
         let now = self.queue.now();
         obs.on_fault(now, "request_failed", None);
         self.metrics.note_fail(req.class);
@@ -289,7 +373,7 @@ impl EngineCore {
     /// recovery clock at the *first* loss. Returns the new retry count
     /// (the caller checks it against the plan's budget).
     pub fn note_lost(&mut self, slot: ReqId, now: Us) -> u32 {
-        let st = &mut self.requests[slot as usize];
+        let st = &mut self.cold[slot as usize];
         st.retries += 1;
         st.recovered = true;
         if st.lost_at == NO_TIME {
@@ -326,6 +410,7 @@ impl EngineCore {
     pub fn finalize(&mut self) -> RunMetrics {
         self.metrics.makespan_us = self.queue.now();
         self.metrics.peak_arena = self.requests.len();
+        self.metrics.event_profile = self.profile.take();
         std::mem::take(&mut self.metrics)
     }
 }
@@ -422,19 +507,34 @@ pub fn run_des_source<H: EngineHost>(
     obs: &mut dyn Observer,
 ) -> RunMetrics {
     let name = host.driver_name();
-    let mut pending = source.next_request();
+    // Setup and `begin` (fault-plan seeding, initial broadcasts, observer
+    // warm-up) are one-time work: exempt from the zero-alloc ledger.
+    let mut pending;
     {
+        let _cold = crate::util::cold_section();
+        pending = source.next_request();
         let core = host.core_mut();
         core.total_expected = source.total();
         core.outstanding = core.total_expected;
         core.next_arrival_at = pending.map_or(NO_TIME, |r| r.arrival);
+        host.begin(obs);
     }
-    host.begin(obs);
+    let profiling = host.core_mut().profile.is_some();
+    // The steady-state allocation ledger (alloc-count feature): arm at
+    // half-completion — by then every pool has reached its working size —
+    // and read the counter when the loop exits. Outside the feature this
+    // compiles to nothing.
+    #[cfg(feature = "alloc-count")]
+    let mut steady_start: Option<u64> = None;
     loop {
         let ev = {
             let core = host.core_mut();
             if core.outstanding == 0 {
                 break;
+            }
+            #[cfg(feature = "alloc-count")]
+            if steady_start.is_none() && core.outstanding * 2 <= core.total_expected {
+                steady_start = Some(crate::util::hot_allocs());
             }
             // Fresh arrivals win ties against queued events (they carried
             // the smallest seq numbers under the pre-scheduled heap);
@@ -461,10 +561,35 @@ pub fn run_des_source<H: EngineHost>(
             core.metrics.events += 1;
             ev
         };
-        host.handle(ev, obs);
+        if profiling {
+            let kind = ev.kind_index();
+            let t0 = std::time::Instant::now();
+            host.handle(ev, obs);
+            let dt = t0.elapsed().as_nanos() as u64;
+            if let Some(p) = host.core_mut().profile.as_deref_mut() {
+                p.rows[kind].0 += 1;
+                p.rows[kind].1 += dt;
+            }
+        } else {
+            host.handle(ev, obs);
+        }
     }
-    host.end(obs);
-    host.core_mut().finalize()
+    #[cfg(feature = "alloc-count")]
+    let steady_allocs = steady_start.map(|s| crate::util::hot_allocs() - s);
+    {
+        // End-of-run folding (per-instance tallies, alive spans) is
+        // one-time work like `begin`.
+        let _cold = crate::util::cold_section();
+        host.end(obs);
+    }
+    let core = host.core_mut();
+    #[cfg(feature = "alloc-count")]
+    {
+        core.metrics.steady_allocs = steady_allocs.unwrap_or(0);
+    }
+    let metrics = core.finalize();
+    core.salvage();
+    metrics
 }
 
 #[cfg(test)]
@@ -640,12 +765,32 @@ mod tests {
         core.queue.pop();
         assert_eq!(core.note_lost(slot, 100), 1);
         assert_eq!(core.note_lost(slot, 250), 2, "retry count accumulates");
-        assert_eq!(core.requests[slot as usize].lost_at, 100, "clock starts at first loss");
+        assert_eq!(core.cold[slot as usize].lost_at, 100, "clock starts at first loss");
         core.finish(slot, 100, &mut NullObserver);
         let rec = &core.metrics.records[0];
         assert_eq!(rec.retries, 2);
         assert!(rec.recovered);
         assert_eq!(core.metrics.recovered, 1);
+    }
+
+    #[test]
+    fn salvaged_buffers_replay_identically() {
+        // Back-to-back runs on one thread: the second pulls the first's
+        // parked CoreBuffers (arena lanes + queue). Reuse must be
+        // trajectory-neutral — same records, same event count, same clock.
+        let trace: Vec<Request> = (0..32).map(|i| req(2000 + i, i * 3)).collect();
+        let run = |trace: &[Request]| {
+            let mut host = Echo { core: EngineCore::new(1), began: false, ended: false };
+            run_des(&mut host, trace.to_vec(), &mut NullObserver)
+        };
+        let a = run(&trace);
+        let b = run(&trace);
+        let key = |m: &RunMetrics| {
+            m.records.iter().map(|r| (r.id, r.first_token, r.finished)).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b), "buffer salvage must be trajectory-neutral");
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan_us, b.makespan_us);
     }
 
     #[test]

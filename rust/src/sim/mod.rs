@@ -16,8 +16,8 @@
 pub mod engine;
 
 pub use engine::{
-    macro_chain, run_des, run_des_source, ArrivalSource, EngineCore, EngineHost, ReqState,
-    TraceSource, NO_TIME,
+    macro_chain, run_des, run_des_source, ArrivalSource, ColdState, EngineCore, EngineHost,
+    HotState, TraceSource, NO_TIME,
 };
 
 use std::cmp::Reverse;
@@ -58,6 +58,26 @@ pub enum Event {
     Restart { instance: usize },
     /// Backoff timer for a fault-lost request expired: re-queue it.
     Retry(crate::types::ReqId),
+}
+
+impl Event {
+    /// Dense per-variant index into the `--profile-events` table; order
+    /// matches [`crate::metrics::EventProfile::NAMES`].
+    pub fn kind_index(&self) -> usize {
+        match self {
+            Event::Arrival(_) => 0,
+            Event::PrefillIterDone { .. } => 1,
+            Event::PredictDone { .. } => 2,
+            Event::TransferDone { .. } => 3,
+            Event::DecodeIterDone { .. } => 4,
+            Event::MonitorTick => 5,
+            Event::FlipDone { .. } => 6,
+            Event::CoupledIterDone { .. } => 7,
+            Event::Fault(_) => 8,
+            Event::Restart { .. } => 9,
+            Event::Retry(_) => 10,
+        }
+    }
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -126,6 +146,26 @@ impl HeapQueue {
     /// Schedule `ev` after a delay relative to now.
     pub fn schedule_in(&mut self, delay: Us, ev: Event) {
         self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Bulk insertion, reference semantics: exactly a loop of
+    /// [`HeapQueue::schedule_at`] calls in input order (same clamping,
+    /// same seq stamps). The oracle [`CalendarQueue::push_batch`] must
+    /// match pop for pop (tests/proptest_queue.rs).
+    pub fn push_batch(&mut self, events: impl IntoIterator<Item = (Us, Event)>) {
+        for (at, ev) in events {
+            self.schedule_at(at, ev);
+        }
+    }
+
+    /// Empty the queue and rewind the clock/seq counter to a fresh state,
+    /// keeping the heap's allocation. A reset queue is indistinguishable
+    /// from [`HeapQueue::new`] except for capacity — the property the
+    /// persistent sweep-worker contexts rely on.
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        self.now = 0;
+        self.seq = 0;
     }
 
     /// Time of the next event without popping it (`&mut self` for API
@@ -244,6 +284,83 @@ impl CalendarQueue {
     /// Schedule `ev` after a delay relative to now.
     pub fn schedule_in(&mut self, delay: Us, ev: Event) {
         self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Bulk insertion: admits `events` with exactly the clamping and seq
+    /// stamps a sequence of [`CalendarQueue::schedule_at`] calls in input
+    /// order would assign — pop order is identical by construction — but
+    /// rebuilds each touched ring bucket's heap once with an O(k)
+    /// heapify instead of k per-event sift-ups, and pulls the cursor
+    /// back at most once for the whole batch. Intended for fan-out sites
+    /// that enqueue many events at one go (pre-seeded fault plans, chunk
+    /// fan-outs); parity vs sequential push is pinned bit for bit in
+    /// tests/proptest_queue.rs.
+    pub fn push_batch(&mut self, events: impl IntoIterator<Item = (Us, Event)>) {
+        let mut staged: Vec<Scheduled> = events
+            .into_iter()
+            .map(|(at, ev)| {
+                let s = Scheduled { at: at.max(self.now), seq: self.seq, ev };
+                self.seq += 1;
+                s
+            })
+            .collect();
+        if staged.is_empty() {
+            return;
+        }
+        self.len += staged.len();
+        // One cursor pull-back for the whole batch keeps the invariant
+        // (the cursor never stands ahead of any queued event's bucket);
+        // classifying every item against the settled cursor may park a
+        // window-edge event in the overflow where sequential pushes would
+        // have ringed it, but the overflow only ever holds events at or
+        // beyond the window, so migration delivers them in (at, seq)
+        // order all the same.
+        let min_b = staged.iter().map(|s| Self::bucket_of(s.at)).min().expect("non-empty batch");
+        if min_b < self.cursor {
+            self.cursor = min_b;
+        }
+        let end = self.cursor + N_BUCKETS as u64;
+        // Group by bucket so each touched heap is drained, extended, and
+        // re-heapified exactly once ("sorts once per bucket"). Order
+        // within a bucket is irrelevant — the heap orders by (at, seq).
+        staged.sort_unstable_by_key(|s| Self::bucket_of(s.at));
+        let mut i = 0;
+        while i < staged.len() {
+            let b = Self::bucket_of(staged[i].at);
+            let mut j = i + 1;
+            while j < staged.len() && Self::bucket_of(staged[j].at) == b {
+                j += 1;
+            }
+            if b < end {
+                let slot = (b as usize) & (N_BUCKETS - 1);
+                let mut v = std::mem::take(&mut self.ring[slot]).into_vec();
+                v.extend(staged[i..j].iter().map(|s| Reverse(s.clone())));
+                self.ring[slot] = BinaryHeap::from(v);
+                self.ring_len += j - i;
+            } else {
+                self.overflow.extend(staged[i..j].iter().map(|s| Reverse(s.clone())));
+            }
+            i = j;
+        }
+    }
+
+    /// Empty the queue and rewind the clock, cursor, and seq counter to a
+    /// fresh state, keeping the ring and every per-bucket heap's grown
+    /// allocation. A reset queue is indistinguishable from
+    /// [`CalendarQueue::new`] except for capacity — the property the
+    /// persistent sweep-worker contexts rely on (runs can end with
+    /// undelivered events still queued, e.g. a scheduled restart after
+    /// the last finish, so every heap is cleared explicitly).
+    pub fn reset(&mut self) {
+        for h in self.ring.iter_mut() {
+            h.clear();
+        }
+        self.overflow.clear();
+        self.ring_len = 0;
+        self.len = 0;
+        self.cursor = 0;
+        self.now = 0;
+        self.seq = 0;
     }
 
     /// Move overflow events whose bucket slid inside the ring window.
@@ -432,6 +549,78 @@ mod tests {
         q.schedule_in(10, Event::Arrival(0));
         assert!(matches!(q.pop(), Some((60_000_010, Event::Arrival(0)))));
         assert!(matches!(q.pop(), Some((90_000_000, Event::Arrival(1)))));
+    }
+
+    #[test]
+    fn push_batch_matches_sequential_pushes() {
+        // smoke parity here (same-time storm, cross-bucket span, deep
+        // overflow, past-clamp); the exhaustive randomized version lives
+        // in tests/proptest_queue.rs
+        let ats = [5u64, 5, 5, 4_095, 4_096, 70, 9_000_000, 60_000_000_000, 0, 8_191];
+        let mut batched = CalendarQueue::new();
+        let mut seq = CalendarQueue::new();
+        // advance both past t=60 so the t=0/t=5 entries exercise clamping
+        batched.schedule_at(60, Event::MonitorTick);
+        seq.schedule_at(60, Event::MonitorTick);
+        batched.pop();
+        seq.pop();
+        batched.push_batch(ats.iter().enumerate().map(|(i, &at)| (at, Event::Arrival(i as u64))));
+        for (i, &at) in ats.iter().enumerate() {
+            seq.schedule_at(at, Event::Arrival(i as u64));
+        }
+        loop {
+            let (a, b) = (batched.pop(), seq.pop());
+            assert_eq!(a, b);
+            assert_eq!(batched.now(), seq.now());
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn reset_restores_a_fresh_queue_keeping_capacity() {
+        let mut q = CalendarQueue::new();
+        q.schedule_at(7, Event::Arrival(1));
+        q.schedule_at(9_000_000, Event::MonitorTick);
+        q.schedule_at(60_000_000_000, Event::Arrival(2)); // parks in overflow
+        q.pop();
+        q.reset();
+        assert!(q.is_empty() && q.pop().is_none());
+        assert_eq!(q.now(), 0);
+        // a reset queue behaves exactly like a new one, including seq
+        // numbering (FIFO among equal times restarts from scratch)
+        q.schedule_at(5, Event::Arrival(10));
+        q.schedule_at(5, Event::Arrival(11));
+        assert!(matches!(q.pop(), Some((5, Event::Arrival(10)))));
+        assert!(matches!(q.pop(), Some((5, Event::Arrival(11)))));
+        let mut h = HeapQueue::new();
+        h.schedule_at(3, Event::MonitorTick);
+        h.pop();
+        h.reset();
+        assert!(h.is_empty());
+        assert_eq!(h.now(), 0);
+    }
+
+    #[test]
+    fn event_kind_indices_are_dense_and_stable() {
+        let evs = [
+            Event::Arrival(0),
+            Event::PrefillIterDone { instance: 0, epoch: 0 },
+            Event::PredictDone { instance: 0, epoch: 0, req: 0 },
+            Event::TransferDone { instance: 0, epoch: 0, req: 0 },
+            Event::DecodeIterDone { instance: 0, epoch: 0 },
+            Event::MonitorTick,
+            Event::FlipDone { instance: 0 },
+            Event::CoupledIterDone { instance: 0, epoch: 0 },
+            Event::Fault(0),
+            Event::Restart { instance: 0 },
+            Event::Retry(0),
+        ];
+        for (i, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.kind_index(), i);
+        }
+        assert_eq!(evs.len(), crate::metrics::EventProfile::KINDS);
     }
 
     #[test]

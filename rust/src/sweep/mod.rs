@@ -32,8 +32,14 @@ pub fn default_workers() -> usize {
 
 /// Run `f` over `items` on up to `workers` scoped threads, pulling work
 /// dynamically off a shared queue (cells vary wildly in cost — static
-/// partitioning would leave workers idle behind one slow shard). Results
-/// are returned in input order; a worker panic propagates.
+/// partitioning would leave workers idle behind one slow shard). Workers
+/// are persistent for the whole sweep: each thread runs many cells, so
+/// per-thread run state (the engine's salvaged core buffers — see
+/// `sim::engine`) is reused across cells instead of reallocated per cell.
+/// Work is pulled in chunks — one lock acquisition hands out several
+/// cells — sized so every worker still gets multiple hand-outs and no one
+/// starves behind a slow shard. Results are returned in input order
+/// regardless of chunking; a worker panic propagates.
 pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -48,6 +54,9 @@ where
     if workers == 1 {
         return items.into_iter().map(f).collect();
     }
+    // ≥ 4 hand-outs per worker keeps dynamic balancing effective while
+    // amortizing queue contention across cheap cells.
+    let chunk = (n / (workers * 4)).max(1);
     let queue: Mutex<VecDeque<(usize, T)>> =
         Mutex::new(items.into_iter().enumerate().collect());
     let mut tagged: Vec<(usize, R)> = std::thread::scope(|s| {
@@ -57,10 +66,19 @@ where
             .map(|_| {
                 s.spawn(move || {
                     let mut out = Vec::new();
+                    let mut batch: Vec<(usize, T)> = Vec::with_capacity(chunk);
                     loop {
-                        let job = queue.lock().expect("sweep queue poisoned").pop_front();
-                        let Some((i, t)) = job else { break };
-                        out.push((i, f(t)));
+                        {
+                            let mut q = queue.lock().expect("sweep queue poisoned");
+                            let take = chunk.min(q.len());
+                            batch.extend(q.drain(..take));
+                        }
+                        if batch.is_empty() {
+                            break;
+                        }
+                        for (i, t) in batch.drain(..) {
+                            out.push((i, f(t)));
+                        }
                     }
                     out
                 })
@@ -199,6 +217,19 @@ mod tests {
     }
 
     #[test]
+    fn chunked_pulls_preserve_order_at_awkward_sizes() {
+        // sizes around chunk boundaries: n < workers, n not divisible by
+        // workers*4, n exactly workers*4, and a large prime
+        for n in [3usize, 7, 8, 12, 97] {
+            for workers in [2usize, 3, 5] {
+                let got = parallel_map((0..n as u64).collect(), workers, |x: u64| x * x);
+                let want: Vec<u64> = (0..n as u64).map(|x| x * x).collect();
+                assert_eq!(got, want, "n={n} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
     fn sweep_matches_sequential_runs() {
         let mk_cells = || -> Vec<SweepCell> {
             (0..6)
@@ -228,6 +259,54 @@ mod tests {
             );
             assert_eq!(a.report.metrics.events, b.report.metrics.events, "{}", a.label);
             assert_eq!(a.report.metrics.records.len(), b.report.metrics.records.len());
+        }
+    }
+
+    #[test]
+    fn sharded_sweep_is_record_identical_to_serial() {
+        // Persistent worker contexts: 2 workers over 8 cells means every
+        // worker runs several cells on salvaged engine buffers — any state
+        // leaking across cells through the reused buffers would perturb
+        // some record here. Mixed drivers + faults widen the surface.
+        let mk_cells = || -> Vec<SweepCell> {
+            (0..8)
+                .map(|i| {
+                    let driver = if i % 2 == 0 { "tetri" } else { "vllm" };
+                    let mut b = Scenario::builder()
+                        .driver(driver)
+                        .workload(WorkloadKind::Mixed)
+                        .requests(32)
+                        .rate(24.0)
+                        .seed(i)
+                        .topology(2, 2);
+                    if i % 3 == 0 {
+                        b = b.fault(crate::api::FaultSpec {
+                            instance: Some(0),
+                            down_ms: Some(40.0),
+                            ..crate::api::FaultSpec::new(crate::api::FaultKind::Restart, 30.0)
+                        });
+                    }
+                    SweepCell::new(format!("cell{i}"), b.build())
+                })
+                .collect()
+        };
+        let serial: Vec<CellResult> = mk_cells().into_iter().map(SweepCell::run).collect();
+        let sharded = run_cells(mk_cells(), 2);
+        assert_eq!(serial.len(), sharded.len());
+        for (a, b) in serial.iter().zip(sharded.iter()) {
+            assert_eq!(a.label, b.label);
+            let ra = &a.report.metrics.records;
+            let rb = &b.report.metrics.records;
+            assert_eq!(ra.len(), rb.len(), "{}", a.label);
+            for (x, y) in ra.iter().zip(rb.iter()) {
+                assert_eq!(
+                    (x.id, x.arrival, x.first_token, x.finished),
+                    (y.id, y.arrival, y.first_token, y.finished),
+                    "{}: records must match field-for-field",
+                    a.label
+                );
+            }
+            assert_eq!(a.report.metrics.events, b.report.metrics.events, "{}", a.label);
         }
     }
 

@@ -47,7 +47,11 @@ pub enum Phase {
 }
 
 /// One inference request as the serving system sees it. Plain old data —
-/// `Copy`, so drivers hand values around without heap traffic.
+/// `Copy`, so drivers hand values around without heap traffic. Doubles as
+/// the payload lane of the engine's SoA request arena: `EngineCore` keeps
+/// a dense `Vec<Request>` with the mutable driver-side state split into
+/// parallel hot/cold lanes (`sim::HotState` / `sim::ColdState`), so
+/// iteration-time scans touch only plain `Request` rows.
 #[derive(Clone, Copy, Debug)]
 pub struct Request {
     pub id: ReqId,

@@ -1,0 +1,149 @@
+//! Steady-state allocation ledger (the `alloc-count` feature).
+//!
+//! The DES hot loop is supposed to be allocation-free once every pool has
+//! reached its working size (DESIGN.md §Performance rule 5: "No
+//! steady-state allocation per event"). This module makes that invariant
+//! *checkable* instead of aspirational: with `--features alloc-count` a
+//! counting [`GlobalAlloc`] wraps the system allocator and counts every
+//! `alloc`/`realloc` made outside a [`cold_section`] scope. The engine
+//! loop reads the counter at half-completion and again at loop exit;
+//! the difference lands in `RunMetrics::steady_allocs` and the 100k
+//! canary asserts it is zero (`ALLOC_COUNT_STRICT=1`).
+//!
+//! Cold sections mark work that is legitimately allocating — run setup,
+//! fault handling, elastic scale-ups, arena growth, end-of-run folding —
+//! via an RAII guard on a thread-local depth. Without the feature every
+//! item here compiles to a no-op: zero-sized guard, constant-0 reads, no
+//! global allocator override.
+
+#[cfg(feature = "alloc-count")]
+mod counting {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Allocations made at cold depth 0 ("hot" allocations), all threads.
+    static HOT_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    thread_local! {
+        /// Nesting depth of [`ColdSection`] guards on this thread.
+        static COLD_DEPTH: Cell<u32> = const { Cell::new(0) };
+    }
+
+    /// Counting wrapper over the system allocator: every `alloc` and
+    /// `realloc` outside a cold section bumps the global ledger. `dealloc`
+    /// is free — releasing memory is never the invariant being policed.
+    pub struct CountingAlloc;
+
+    impl CountingAlloc {
+        #[inline]
+        fn note(&self) {
+            // During thread teardown the TLS slot may already be gone;
+            // treat that window as cold (teardown allocates legitimately).
+            let cold = COLD_DEPTH.try_with(|d| d.get()).unwrap_or(1);
+            if cold == 0 {
+                HOT_ALLOCS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    // SAFETY: pure pass-through to `System`; the ledger touches only an
+    // atomic and a TLS cell, neither of which allocates.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            self.note();
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            self.note();
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: CountingAlloc = CountingAlloc;
+
+    /// RAII guard marking the enclosing scope as legitimately allocating.
+    /// Nests; the thread is "hot" again once every guard has dropped.
+    pub struct ColdSection(());
+
+    impl ColdSection {
+        pub(super) fn enter() -> Self {
+            COLD_DEPTH.with(|d| d.set(d.get() + 1));
+            ColdSection(())
+        }
+    }
+
+    impl Drop for ColdSection {
+        fn drop(&mut self) {
+            COLD_DEPTH.with(|d| d.set(d.get() - 1));
+        }
+    }
+
+    /// Total hot allocations so far, across all threads.
+    pub fn hot_allocs() -> u64 {
+        HOT_ALLOCS.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(feature = "alloc-count")]
+pub use counting::{hot_allocs, ColdSection};
+
+/// Feature-off stand-ins: zero-sized guard, constant-0 counter, so call
+/// sites need no `cfg` of their own.
+#[cfg(not(feature = "alloc-count"))]
+pub struct ColdSection(());
+
+/// Hot-allocation ledger (always 0 without the `alloc-count` feature).
+#[cfg(not(feature = "alloc-count"))]
+pub fn hot_allocs() -> u64 {
+    0
+}
+
+/// Enter a cold (legitimately-allocating) scope; hold the guard for its
+/// duration. No-op without the `alloc-count` feature.
+pub fn cold_section() -> ColdSection {
+    #[cfg(feature = "alloc-count")]
+    {
+        ColdSection::enter()
+    }
+    #[cfg(not(feature = "alloc-count"))]
+    {
+        ColdSection(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_and_counter_are_always_callable() {
+        let before = hot_allocs();
+        {
+            let _cold = cold_section();
+            // allocations here never count, feature on or off
+            let v: Vec<u64> = (0..64).collect();
+            assert_eq!(v.len(), 64);
+        }
+        let after = hot_allocs();
+        #[cfg(not(feature = "alloc-count"))]
+        assert_eq!((before, after), (0, 0), "feature off: counter is pinned to 0");
+        #[cfg(feature = "alloc-count")]
+        assert_eq!(before, after, "cold-section allocations must not count");
+    }
+
+    #[cfg(feature = "alloc-count")]
+    #[test]
+    fn hot_allocations_are_counted() {
+        let before = hot_allocs();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        assert!(v.capacity() >= 1024);
+        assert!(hot_allocs() > before, "a hot allocation must bump the ledger");
+    }
+}

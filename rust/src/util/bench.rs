@@ -1,0 +1,112 @@
+//! Shared plumbing for the hand-rolled bench binaries: provenance
+//! metadata (git SHA + wall timestamp, so `BENCH_*.json` baselines say
+//! *which* commit on *which* day produced them — the bench-regression
+//! gate keys on this) and a section-keyed read-modify-write merge so the
+//! benches sharing one JSON file (`benches/engine.rs` and
+//! `benches/cluster.rs` both own sections of `BENCH_cluster.json`) never
+//! clobber or orphan each other's sections, however many times and in
+//! whatever order they re-run.
+
+use super::Json;
+
+/// Provenance stamp for a bench document: `{"git_sha": ..., "unix_time":
+/// ...}`. The SHA comes from `git rev-parse --short HEAD` (override or
+/// supply via `BENCH_GIT_SHA` when git is unavailable — e.g. a CI tarball
+/// checkout); `"unknown"` when neither source works.
+pub fn bench_meta() -> Json {
+    let sha = std::env::var("BENCH_GIT_SHA").ok().filter(|s| !s.is_empty()).unwrap_or_else(|| {
+        std::process::Command::new("git")
+            .args(["rev-parse", "--short", "HEAD"])
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+            .filter(|s| !s.is_empty())
+            .unwrap_or_else(|| "unknown".to_string())
+    });
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    Json::obj([("git_sha", Json::from(sha)), ("unix_time", Json::from(unix_time))])
+}
+
+/// Merge `sections` into the JSON object at `path`, replacing only those
+/// keys: existing sections written by other benches survive verbatim, and
+/// re-running the same bench overwrites its own sections in place —
+/// idempotent, no duplicates, no orphans. When the file doesn't exist the
+/// document starts from `header` (e.g. `bench`/`schema` identity keys).
+///
+/// Panics on a present-but-unparseable or non-object file instead of
+/// silently discarding a committed baseline.
+pub fn merge_bench_sections(
+    path: &std::path::Path,
+    header: &[(&str, Json)],
+    sections: Vec<(&'static str, Json)>,
+) {
+    let mut pairs: Vec<(String, Json)> = match std::fs::read_to_string(path) {
+        Ok(s) => {
+            let doc = Json::parse(&s).unwrap_or_else(|e| {
+                panic!(
+                    "{} exists but does not parse ({e}); refusing to overwrite the \
+                     perf baseline — fix or delete the file first",
+                    path.display()
+                )
+            });
+            let map = doc.as_obj().unwrap_or_else(|| {
+                panic!(
+                    "{} is not a JSON object; refusing to overwrite the perf baseline",
+                    path.display()
+                )
+            });
+            map.iter()
+                .filter(|(k, _)| !sections.iter().any(|(sk, _)| sk == k))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect()
+        }
+        Err(_) => header.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+    };
+    pairs.extend(sections.into_iter().map(|(k, v)| (k.to_string(), v)));
+    std::fs::write(path, Json::obj(pairs).dump())
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_meta_has_sha_and_time() {
+        std::env::set_var("BENCH_GIT_SHA", "abc1234");
+        let m = bench_meta();
+        std::env::remove_var("BENCH_GIT_SHA");
+        let obj = m.as_obj().expect("meta is an object");
+        assert_eq!(obj.get("git_sha").and_then(|j| j.as_str()), Some("abc1234"));
+        assert!(obj.get("unix_time").is_some());
+    }
+
+    #[test]
+    fn merge_replaces_own_sections_and_keeps_others() {
+        let dir = std::env::temp_dir().join(format!("bench_merge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let header = [("bench", Json::from("test")), ("schema", Json::from(1u64))];
+
+        // fresh file: header + section
+        merge_bench_sections(&path, &header, vec![("alpha", Json::from(1u64))]);
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.as_obj().unwrap().len(), 3);
+
+        // another bench adds its own section; alpha survives
+        merge_bench_sections(&path, &header, vec![("beta", Json::from(2u64))]);
+        // re-running the first bench overwrites alpha in place — no
+        // duplicates, beta untouched
+        merge_bench_sections(&path, &header, vec![("alpha", Json::from(9u64))]);
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let obj = doc.as_obj().unwrap();
+        assert_eq!(obj.len(), 4, "bench+schema+alpha+beta: {obj:?}");
+        assert_eq!(obj.get("alpha").and_then(|j| j.as_usize()), Some(9));
+        assert_eq!(obj.get("beta").and_then(|j| j.as_usize()), Some(2));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -2,10 +2,14 @@
 //! these): deterministic RNG, summary statistics, and a JSON
 //! parser/writer.
 
+pub mod alloc;
+pub mod bench;
 pub mod json;
 pub mod rng;
 pub mod stats;
 
+pub use alloc::{cold_section, hot_allocs, ColdSection};
+pub use bench::{bench_meta, merge_bench_sections};
 pub use json::Json;
 pub use rng::Pcg;
 pub use stats::{percentile, summarize, Histogram, LogHist, Summary};

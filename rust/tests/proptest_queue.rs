@@ -128,3 +128,158 @@ fn equal_time_storms_stay_fifo() {
     }
     assert_eq!(popped, 8_000);
 }
+
+/// One randomized batched episode: the same burst of `(at, ev)` pairs is
+/// admitted three ways — sequential `schedule_at` on a calendar queue,
+/// `push_batch` on a second calendar queue, and `schedule_at` on the
+/// reference heap — then all three must pop in lock-step. This pins
+/// [`CalendarQueue::push_batch`]'s by-construction claim: identical
+/// clamping, identical seq stamps, identical pop order.
+fn batched_episode(seed: u64, ops: usize) {
+    let mut cal_seq = CalendarQueue::new();
+    let mut cal_batch = CalendarQueue::new();
+    let mut heap = HeapQueue::new();
+    let mut rng = Pcg::new(seed);
+    let mut next_id = 0u64;
+    for op in 0..ops {
+        match rng.weighted(&[0.5, 0.38, 0.12]) {
+            0 => {
+                // bursts from 1 (degenerate batch) to ~40 events spanning
+                // ties, same-bucket, cross-bucket, window-edge, and deep
+                // overflow horizons — one batch can straddle all of them
+                let burst = 1 + rng.index(40);
+                let mut batch: Vec<(u64, Event)> = Vec::with_capacity(burst);
+                for _ in 0..burst {
+                    let horizon = match rng.index(12) {
+                        0 | 1 => 0,                        // tie with now
+                        2..=5 => rng.range(1, 4_096),      // same bucket
+                        6 | 7 => rng.range(1, 40_000),     // a few buckets out
+                        8 => rng.range(1, 5_000_000),      // window edge
+                        9 => rng.range(1, 300_000_000),    // deep overflow
+                        10 => rng.range(1, 7_000_000_000), // very deep overflow
+                        _ => 0,
+                    };
+                    let mut at = cal_seq.now() + horizon;
+                    if rng.index(10) == 0 {
+                        // exercise the past-time clamp inside a batch
+                        at = at.saturating_sub(rng.range(1, 100_000));
+                    }
+                    let ev = Event::Arrival(next_id);
+                    next_id += 1;
+                    batch.push((at, ev));
+                }
+                for (at, ev) in &batch {
+                    cal_seq.schedule_at(*at, ev.clone());
+                    heap.schedule_at(*at, ev.clone());
+                }
+                cal_batch.push_batch(batch);
+            }
+            1 => {
+                let (a, b, c) = (cal_seq.pop(), cal_batch.pop(), heap.pop());
+                assert_eq!(a, b, "seed {seed} op {op}: batch diverged from sequential");
+                assert_eq!(a, c, "seed {seed} op {op}: calendar diverged from heap");
+            }
+            _ => {
+                let bound = heap.peek_at();
+                let step = rng.range(0, 10_000_000);
+                let t = match bound {
+                    Some(p) => cal_seq.now() + step.min(p - cal_seq.now()),
+                    None => cal_seq.now() + step,
+                };
+                cal_seq.advance_to(t);
+                cal_batch.advance_to(t);
+                heap.advance_to(t);
+            }
+        }
+        assert_eq!(cal_seq.now(), cal_batch.now(), "seed {seed} op {op}: clocks diverged");
+        assert_eq!(cal_seq.len(), cal_batch.len(), "seed {seed} op {op}: lengths diverged");
+    }
+    loop {
+        let (a, b, c) = (cal_seq.pop(), cal_batch.pop(), heap.pop());
+        assert_eq!(a, b, "seed {seed} drain: batch diverged from sequential");
+        assert_eq!(a, c, "seed {seed} drain: calendar diverged from heap");
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn push_batch_matches_sequential_push_under_random_schedules() {
+    for seed in 0..32 {
+        batched_episode(seed, 2_000);
+    }
+}
+
+#[test]
+fn push_batch_equal_time_storms_stay_fifo() {
+    // one giant batch of identical instants per round: per-bucket heapify
+    // must preserve the global seq order sequential sift-ups produce
+    let mut cal_seq = CalendarQueue::new();
+    let mut cal_batch = CalendarQueue::new();
+    for round in 0..4u64 {
+        let t = round * 1_000;
+        let batch: Vec<(u64, Event)> =
+            (0..2_000u64).map(|i| (t, Event::Arrival(round * 10_000 + i))).collect();
+        for (at, ev) in &batch {
+            cal_seq.schedule_at(*at, ev.clone());
+        }
+        cal_batch.push_batch(batch);
+    }
+    loop {
+        let (a, b) = (cal_seq.pop(), cal_batch.pop());
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn push_batch_overflow_migration_matches_sequential() {
+    // one batch spanning the ring window and far beyond it, popped with
+    // long quiet gaps so overflow events migrate into the ring mid-drain
+    let mut cal_seq = CalendarQueue::new();
+    let mut cal_batch = CalendarQueue::new();
+    let mut rng = Pcg::new(7);
+    let mut batch: Vec<(u64, Event)> = Vec::new();
+    let mut at = 0u64;
+    for i in 0..3_000u64 {
+        at += rng.range(1, 60_000_000); // spans many full window slides
+        batch.push((at, Event::Arrival(i)));
+    }
+    // shuffle so the batch is not pre-sorted by time
+    for i in (1..batch.len()).rev() {
+        batch.swap(i, rng.index(i + 1));
+    }
+    for (at, ev) in &batch {
+        cal_seq.schedule_at(*at, ev.clone());
+    }
+    cal_batch.push_batch(batch);
+    let mut popped = 0;
+    loop {
+        let (a, b) = (cal_seq.pop(), cal_batch.pop());
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+        popped += 1;
+    }
+    assert_eq!(popped, 3_000);
+}
+
+#[test]
+fn push_batch_empty_and_reset_are_inert() {
+    let mut cal = CalendarQueue::new();
+    cal.push_batch(std::iter::empty());
+    assert!(cal.is_empty());
+    cal.push_batch([(5_000u64, Event::Arrival(0))]);
+    assert_eq!(cal.len(), 1);
+    // a reset queue behaves like a fresh one: same clamp, same seq order
+    cal.reset();
+    assert!(cal.is_empty());
+    assert_eq!(cal.now(), 0);
+    cal.push_batch([(10u64, Event::Arrival(1)), (10u64, Event::Arrival(2))]);
+    assert_eq!(cal.pop(), Some((10, Event::Arrival(1))), "post-reset FIFO among ties");
+    assert_eq!(cal.pop(), Some((10, Event::Arrival(2))));
+}

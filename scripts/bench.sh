@@ -11,6 +11,10 @@
 # (Set ENGINE_BENCH_REQUESTS to shrink the 1M scale run while iterating.)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
+# Provenance: the bench binaries stamp each section with git SHA + wall
+# timestamp (util::bench_meta; BENCH_GIT_SHA overrides when git is
+# unavailable). Echo it here too so the terminal log is self-describing.
+echo "bench provenance: $(git rev-parse --short HEAD 2>/dev/null || echo unknown) at $(date -u +%Y-%m-%dT%H:%M:%SZ)"
 cargo bench --bench scheduler
 cargo bench --bench cluster
 cargo bench --bench engine

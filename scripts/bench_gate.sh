@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Bench-regression gate: re-run the engine bench at a reduced request
+# count and compare its scale-run events/sec against the committed
+# BENCH_cluster.json baseline. The compare itself lives in
+# benches/engine.rs (tolerance band via BENCH_TOLERANCE, default 0.25).
+# Warn-only by default — committed numbers from a different
+# host/toolchain are not comparable; set BENCH_GATE_STRICT=1 once a
+# baseline has been blessed on the CI host to turn a regression into a
+# failure. The committed baseline file is restored afterwards so the gate
+# never dirties the tree with reduced-size numbers.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+requests="${ENGINE_BENCH_REQUESTS:-200000}"
+baseline=BENCH_cluster.json
+backup=""
+restore() {
+  if [ -n "${backup}" ]; then
+    mv -f "${backup}" "${baseline}"
+  else
+    rm -f "${baseline}"
+  fi
+}
+trap restore EXIT
+if [ -f "${baseline}" ]; then
+  backup=$(mktemp)
+  cp "${baseline}" "${backup}"
+fi
+( cd rust && ENGINE_BENCH_REQUESTS="${requests}" cargo bench --bench engine )
+echo "bench gate: done (strict=${BENCH_GATE_STRICT:-0}, tolerance=${BENCH_TOLERANCE:-0.25})"

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Zero-alloc steady-state canary (DESIGN.md §Performance): build with the
+# alloc-count counting allocator, run the 100k-request scale run through
+# the streaming/macro-stepped hot path, and require
+#   (a) zero steady-state heap allocations — with ALLOC_COUNT_STRICT=1
+#       the tetri binary exits nonzero on any (the default here), and
+#   (b) the wall budget (120s — loose on purpose: this catches
+#       order-of-magnitude regressions, scripts/bench.sh records the
+#       real numbers).
+# Knobs: ALLOC_COUNT_STRICT=0 reports the count without failing;
+# CANARY_REQUESTS / CANARY_BUDGET_S resize the run.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+requests="${CANARY_REQUESTS:-100000}"
+budget="${CANARY_BUDGET_S:-120}"
+strict="${ALLOC_COUNT_STRICT:-1}"
+cargo build --release --features alloc-count --bin tetri
+start=$(date +%s)
+ALLOC_COUNT_STRICT="${strict}" cargo run --release --features alloc-count --quiet --bin tetri -- \
+  sim --spec ../scenarios/scale.json --requests "${requests}" --no-records --no-baseline
+elapsed=$(( $(date +%s) - start ))
+echo "alloc-count canary: ${requests}-request scale run in ${elapsed}s (strict=${strict})"
+if [ "${elapsed}" -gt "${budget}" ]; then
+  echo "alloc-count canary FAILED: took ${elapsed}s (budget ${budget}s)" >&2
+  exit 1
+fi

@@ -622,6 +622,55 @@ fn cache() {
     out_json("cache", &results_json(&results));
 }
 
+// ------------------------------------------- pareto (topology search)
+
+/// The optimizer tentpole figure (DESIGN.md §Optimizer): the shipped
+/// goodput-per-dollar topology search over 2–12-instance clusters —
+/// the Pareto frontier of goodput vs $/hr with the recommended cell
+/// marked, plus the work-saved accounting (tests/golden.rs pins the
+/// frontier itself). Writes results/pareto.{txt,csv,json}.
+fn pareto() {
+    use tetri_infer::optimizer;
+    let mut s = String::new();
+    writeln!(s, "== pareto: goodput-per-dollar topology search (scenarios/optimize_mixed.json) ==").unwrap();
+    let path = tetri_infer::util::repo_root().join("scenarios/optimize_mixed.json");
+    let sc = Scenario::load(path.to_str().unwrap()).expect("shipped optimize spec parses");
+    let res = optimizer::optimize(&sc, default_workers()).expect("search runs");
+    let rec_label = res.recommended_cell().map(|c| c.label.clone());
+    writeln!(s, "  {:<22} {:>10} {:>9} {:>12}", "cell", "goodput", "$/hr", "goodput/$hr").unwrap();
+    for cell in &res.frontier {
+        let m = &cell.report.metrics;
+        let star = if Some(&cell.label) == rec_label.as_ref() { "  <- recommended" } else { "" };
+        writeln!(
+            s,
+            "  {:<22} {:>10.3} {:>9.2} {:>12.6}{star}",
+            cell.label,
+            m.goodput_rps(),
+            optimizer::cost_per_hr(m),
+            optimizer::value_of(m),
+        )
+        .unwrap();
+    }
+    let st = &res.stats;
+    writeln!(
+        s,
+        "  (searched {} cells in {} rungs: {} halved, {} SLO-pruned, {} dominance-pruned, \
+         {} full runs — {:.3} of the exhaustive grid's events)",
+        st.grid_cells,
+        st.rungs,
+        st.halving_discarded,
+        st.pruned_slo,
+        st.pruned_dominance,
+        st.full_runs,
+        st.fraction_of_exhaustive(),
+    )
+    .unwrap();
+    out("pareto", &s);
+    fs::create_dir_all("results").ok();
+    fs::write("results/pareto.csv", res.frontier_csv()).unwrap();
+    out_json("pareto", &res.to_json());
+}
+
 // ------------------------------------------------- ablation (§3.3.4 disc.)
 
 fn ablation() {
@@ -746,6 +795,9 @@ fn main() {
     }
     if want("cache") {
         tasks.push(Box::new(cache));
+    }
+    if want("pareto") {
+        tasks.push(Box::new(pareto));
     }
     if want("ablation") {
         tasks.push(Box::new(ablation));

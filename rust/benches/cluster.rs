@@ -47,7 +47,7 @@ fn run_scenario(name: &str, sc: Scenario) -> Row {
     let row = Row {
         name: name.to_string(),
         events: m.events,
-        requests: m.records.len() as u64,
+        requests: m.n_finished() as u64,
         wall_ms: best * 1e3,
         events_per_sec: m.events as f64 / best.max(1e-12),
         makespan_s: m.makespan_us as f64 / 1e6,

@@ -1,0 +1,159 @@
+//! Optimizer search-throughput bench (hand-rolled harness, like the
+//! other benches: no criterion vendored).
+//!
+//! Runs the shipped topology search (scenarios/optimize_mixed.json —
+//! 36 cells spanning 2–12 instances × 2 chunk sizes × 2 prefill
+//! policies) end to end and reports:
+//!
+//!  - **cells/sec** — the search-throughput headline that the bench gate
+//!    regresses against;
+//!  - **fraction of exhaustive** — events actually simulated vs the
+//!    estimated cost of running every grid cell full-length. This is the
+//!    whole point of the tentpole: successive halving + SLO aborts +
+//!    dominance pruning must do strictly less than half the exhaustive
+//!    work on the shipped spec (hard-asserted here, per ISSUE.md).
+//!
+//! Results merge into `BENCH_cluster.json` under the `"optimizer"` key
+//! (read-modify-write — the "engine"/cluster sections survive). Run via
+//! `cargo bench --bench optimizer` or scripts/bench.sh; set
+//! OPTIMIZER_BENCH_REQUESTS to shrink the horizon while iterating.
+
+use std::time::Instant;
+
+use tetri_infer::api::Scenario;
+use tetri_infer::optimizer;
+use tetri_infer::sweep::default_workers;
+use tetri_infer::util::{bench_meta, merge_bench_sections, repo_root, Json};
+
+const REPS: usize = 3;
+
+fn main() {
+    println!("== optimizer search benches (best of {REPS}) ==");
+
+    let spec = repo_root().join("scenarios/optimize_mixed.json");
+    let mut sc = Scenario::load(spec.to_str().unwrap()).expect("optimize_mixed spec parses");
+    if let Some(n) = std::env::var("OPTIMIZER_BENCH_REQUESTS").ok().and_then(|v| v.parse().ok()) {
+        sc.clamp_requests(n);
+    }
+    let workers = default_workers();
+    println!(
+        "search: {} requests/cell horizon, {} workers ...",
+        sc.requests, workers
+    );
+
+    let mut best_wall = f64::MAX;
+    let mut result = None;
+    for _ in 0..REPS {
+        let t = Instant::now();
+        let res = optimizer::optimize(&sc, workers).expect("search runs");
+        best_wall = best_wall.min(t.elapsed().as_secs_f64());
+        result = Some(res);
+    }
+    let res = result.unwrap();
+    let st = &res.stats;
+    let cells_per_sec = st.grid_cells as f64 / best_wall.max(1e-12);
+    let fraction = st.fraction_of_exhaustive();
+
+    println!(
+        "search: {} cells in {:>7.2} s wall = {:>7.2} cells/s ({} rungs, {} full runs)",
+        st.grid_cells, best_wall, cells_per_sec, st.rungs, st.full_runs
+    );
+    println!(
+        "search: pruned {} by halving, {} by SLO budget, {} by dominance",
+        st.halving_discarded, st.pruned_slo, st.pruned_dominance
+    );
+    println!(
+        "search: {} events simulated vs ~{:.0} exhaustive = {:.3} of exhaustive",
+        st.events_simulated, st.events_exhaustive_est, fraction
+    );
+    match res.recommended_cell() {
+        Some(rec) => println!(
+            "search: recommended {} | goodput/$ {:.6}",
+            rec.label,
+            optimizer::value_of(&rec.report.metrics)
+        ),
+        None => println!("search: recommended none (no cell met the SLO floor)"),
+    }
+
+    // The acceptance bar from ISSUE.md: the search must cost < 0.5 of the
+    // exhaustive grid on the shipped spec. Hard failure, not a warning —
+    // this is a semantic property of the algorithm, not a host-speed one.
+    assert!(
+        fraction < 0.5,
+        "search simulated {fraction:.3} of the exhaustive grid (bar: < 0.5)"
+    );
+
+    // ---- regression gate (warn-only, same protocol as benches/engine.rs)
+    let out = repo_root().join("BENCH_cluster.json");
+    let tolerance: f64 = std::env::var("BENCH_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let baseline = std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.at(&["optimizer", "cells_per_sec"])?.as_f64());
+    match baseline {
+        Some(base) if base > 0.0 => {
+            let ratio = cells_per_sec / base;
+            if ratio < 1.0 - tolerance {
+                println!(
+                    "WARNING: search throughput regressed {:.1}% vs committed baseline \
+                     ({:.1} -> {:.1} cells/s, tolerance {:.0}%)",
+                    (1.0 - ratio) * 100.0,
+                    base,
+                    cells_per_sec,
+                    tolerance * 100.0
+                );
+                if std::env::var("BENCH_GATE_STRICT").as_deref() == Ok("1") {
+                    std::process::exit(1);
+                }
+            } else {
+                println!(
+                    "bench gate: {:.1} cells/s vs baseline {:.1} ({:+.1}%, tolerance {:.0}%) — ok",
+                    cells_per_sec,
+                    base,
+                    (ratio - 1.0) * 100.0,
+                    tolerance * 100.0
+                );
+            }
+        }
+        _ => println!(
+            "bench gate: no committed optimizer baseline in {} — recording fresh numbers",
+            out.display()
+        ),
+    }
+
+    // ---- merge into BENCH_cluster.json -------------------------------
+    let section = Json::obj([
+        ("meta", bench_meta()),
+        ("spec", Json::from("scenarios/optimize_mixed.json")),
+        ("requests_per_cell", Json::from(sc.requests)),
+        ("workers", Json::from(workers)),
+        ("reps", Json::from(REPS)),
+        ("grid_cells", Json::from(st.grid_cells)),
+        ("rungs", Json::from(st.rungs)),
+        ("full_runs", Json::from(st.full_runs)),
+        ("halving_discarded", Json::from(st.halving_discarded)),
+        ("pruned_slo", Json::from(st.pruned_slo)),
+        ("pruned_dominance", Json::from(st.pruned_dominance)),
+        ("events_simulated", Json::from(st.events_simulated)),
+        ("events_exhaustive_est", Json::from(st.events_exhaustive_est)),
+        ("fraction_of_exhaustive", Json::from(fraction)),
+        ("wall_s", Json::from(best_wall)),
+        ("cells_per_sec", Json::from(cells_per_sec)),
+        (
+            "recommended",
+            match res.recommended_cell() {
+                Some(rec) => Json::from(rec.label.clone()),
+                None => Json::Null,
+            },
+        ),
+    ]);
+    merge_bench_sections(
+        &out,
+        &[("bench", Json::from("cluster")), ("schema", Json::from(1u64))],
+        vec![("optimizer", section)],
+    );
+    println!("merged optimizer rows into {}", out.display());
+}

@@ -45,9 +45,9 @@ pub use report::{metrics_json, Report};
 pub use scenario::{
     class_keys, decode_policy_key, dispatch_key, elastic_keys, fault_event_keys, fault_keys,
     granularity_key, parse_decode_policy, parse_dispatch, parse_granularity, parse_link,
-    parse_predictor, parse_prefill_policy, parse_prefix_flag, parse_workload, phase_keys,
-    predictor_key, prefill_policy_key, prefix_keys, spec_keys, value_vocab, ElasticSpec, LinkSpec,
-    Phase, PrefixSpec, Scenario, ScenarioBuilder,
+    optimize_keys, parse_predictor, parse_prefill_policy, parse_prefix_flag, parse_workload,
+    phase_keys, predictor_key, prefill_policy_key, prefix_keys, spec_keys, value_vocab,
+    ElasticSpec, LinkSpec, OptimizeGrid, Phase, PrefixSpec, Scenario, ScenarioBuilder,
 };
 
 pub use crate::fault::{

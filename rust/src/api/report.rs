@@ -65,6 +65,11 @@ fn metrics_json_with(m: &RunMetrics, s: &RunSummaries) -> Json {
         ("transfer_resends", Json::from(m.transfer_resends)),
         ("degraded_ms", Json::from(m.degraded_us as f64 / 1e3)),
     ];
+    // early-stop marker, only for runs a StopPolicy cut short (normal
+    // run-to-completion reports stay byte-identical)
+    if m.aborted {
+        pairs.push(("aborted", Json::from(true)));
+    }
     // recovery-latency summary, only for runs that actually lost requests
     // to faults (fault-free reports stay as compact as before)
     if m.recovered > 0 {

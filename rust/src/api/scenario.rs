@@ -317,6 +317,68 @@ pub struct Phase {
     pub start_ms: f64,
 }
 
+// -------------------------------------------------------------- optimize
+
+/// The spec's `optimize` object: the search grid and halving/pruning
+/// knobs `sim optimize` feeds to `optimizer::optimize`. Inert under a
+/// plain `sim` run — the scenario's own topology/policy fields describe
+/// the base cell, and the grid axes describe the candidate overrides.
+/// An empty axis means "keep the base scenario's value" for that knob.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptimizeGrid {
+    /// Candidate `n_prefill` values (empty = base value only).
+    pub prefill: Vec<usize>,
+    /// Candidate `n_decode` values (empty = base value only).
+    pub decode: Vec<usize>,
+    /// Candidate chunk sizes (empty = base value only).
+    pub chunk: Vec<u32>,
+    /// Candidate prefill policies (empty = base value only).
+    pub prefill_policy: Vec<PrefillPolicy>,
+    /// Candidate KV links (empty = base value only).
+    pub link: Vec<LinkSpec>,
+    /// Candidate elastic caps as `max_instances` values; `0` = static
+    /// pool (empty = base elastic config only).
+    pub elastic: Vec<usize>,
+    /// Candidate drivers (empty = base driver only).
+    pub drivers: Vec<String>,
+    /// First successive-halving rung's horizon as a fraction of the full
+    /// request count (floored at 8 requests).
+    pub start_fraction: f64,
+    /// Fraction of active cells kept per halving rung (1.0 disables
+    /// halving discards — every cell survives to full length).
+    pub keep_fraction: f64,
+    /// Required SLO attainment per rung: a cell whose non-attained
+    /// outcomes already exceed `(1 - min_attainment) × horizon` aborts
+    /// mid-run (the miss-budget prune). 0.0 = off.
+    pub min_attainment: f64,
+    /// Arm the dominance prune: during the final full-length stage, skip
+    /// cells whose optimistic goodput-per-dollar upper bound cannot reach
+    /// the best completed cell (see DESIGN.md §Optimizer).
+    pub prune: bool,
+    /// Extra relative slack on the dominance bound (`ub < (1 - slack) ×
+    /// incumbent` prunes); larger = more conservative. 0.0 = exact bound.
+    pub prune_slack: f64,
+}
+
+impl Default for OptimizeGrid {
+    fn default() -> Self {
+        OptimizeGrid {
+            prefill: Vec::new(),
+            decode: Vec::new(),
+            chunk: Vec::new(),
+            prefill_policy: Vec::new(),
+            link: Vec::new(),
+            elastic: Vec::new(),
+            drivers: Vec::new(),
+            start_fraction: 1.0 / 16.0,
+            keep_fraction: 0.5,
+            min_attainment: 0.0,
+            prune: true,
+            prune_slack: 0.0,
+        }
+    }
+}
+
 // -------------------------------------------------------------- scenario
 
 /// A complete, declarative experiment specification. Equality is
@@ -403,6 +465,15 @@ pub struct Scenario {
     /// virtual-time trajectory, records, and fingerprints are identical
     /// either way.
     pub profile_events: bool,
+    /// Topology search grid + halving/pruning knobs for `sim optimize`
+    /// (see [`OptimizeGrid`]). `None` — the default — makes the key
+    /// absent from JSON; a plain `sim` run ignores it either way.
+    pub optimize: Option<OptimizeGrid>,
+    /// Early-stop knobs copied into the driver config (see
+    /// [`crate::sim::StopPolicy`]). Programmatic only — the optimizer
+    /// arms it per rung; it is *not* part of the JSON spec format and is
+    /// skipped by `to_json` (shipped specs always run to completion).
+    pub stop: crate::sim::StopPolicy,
 }
 
 impl Default for Scenario {
@@ -442,6 +513,8 @@ impl Default for Scenario {
             faults: None,
             prefix: None,
             profile_events: false,
+            optimize: None,
+            stop: crate::sim::StopPolicy::off(),
         }
     }
 }
@@ -481,6 +554,7 @@ const KNOWN_KEYS: &[&str] = &[
     "faults",
     "prefix",
     "profile_events",
+    "optimize",
 ];
 
 const PHASE_KEYS: &[&str] = &["workload", "requests", "rate", "start_ms"];
@@ -497,6 +571,21 @@ const FAULT_EVENT_KEYS: &[&str] = &["kind", "at_ms", "instance", "down_ms", "fac
 
 const PREFIX_KEYS: &[&str] =
     &["n_prefixes", "prefix_len", "zipf", "cache_pages", "block_tokens"];
+
+const OPTIMIZE_KEYS: &[&str] = &[
+    "prefill",
+    "decode",
+    "chunk",
+    "prefill_policy",
+    "link",
+    "elastic",
+    "drivers",
+    "start_fraction",
+    "keep_fraction",
+    "min_attainment",
+    "prune",
+    "prune_slack",
+];
 
 /// Every key the JSON spec format accepts — single source of truth shared
 /// with the CLI's `--list` output.
@@ -535,6 +624,12 @@ pub fn fault_event_keys() -> &'static [&'static str] {
 /// CLI flag).
 pub fn prefix_keys() -> &'static [&'static str] {
     PREFIX_KEYS
+}
+
+/// Keys of the spec's `optimize` object (grid axes + halving/pruning
+/// knobs for `sim optimize`).
+pub fn optimize_keys() -> &'static [&'static str] {
+    OPTIMIZE_KEYS
 }
 
 /// Every recognized value spelling per enum-valued spec key, generated
@@ -657,6 +752,45 @@ impl Scenario {
         out
     }
 
+    /// Fingerprint of everything [`Scenario::trace`] depends on — and
+    /// nothing else. Two scenarios with equal keys generate bit-identical
+    /// traces, so the optimizer's trace cache can share one `Arc`'d trace
+    /// across every grid cell (topology/policy/link axes never enter the
+    /// generator). Floats are keyed by their exact bit pattern.
+    pub fn trace_key(&self) -> String {
+        use std::fmt::Write;
+        let mut k = format!(
+            "w={};n={};r={:x};s={}",
+            self.workload.name(),
+            self.requests,
+            self.rate.to_bits(),
+            self.trace_seed
+        );
+        for c in &self.classes {
+            let _ = write!(k, ";cw={:x}", c.weight.to_bits());
+        }
+        if let Some(p) = &self.prefix {
+            let _ = write!(
+                k,
+                ";px={}/{}/{:x}",
+                p.n_prefixes,
+                p.prefix_len,
+                p.zipf.to_bits()
+            );
+        }
+        for ph in &self.phases {
+            let _ = write!(
+                k,
+                ";ph={}/{}/{:x}/{:x}",
+                ph.workload.name(),
+                ph.requests,
+                ph.rate.to_bits(),
+                ph.start_ms.to_bits()
+            );
+        }
+        k
+    }
+
     /// Pull-based arrival source for this scenario, bit-identical to
     /// [`Scenario::trace`] in delivered order: single-phase specs stream
     /// straight from the workload generator (O(1) memory — this is the
@@ -749,6 +883,7 @@ impl Scenario {
             fault: self.faults.as_ref().map(FaultPlanSpec::to_config),
             prefix_cache: self.prefix.map(PrefixSpec::cache_config),
             profile_events: self.profile_events,
+            stop: self.stop,
             cost,
             seed: self.seed,
             ..Default::default()
@@ -775,6 +910,7 @@ impl Scenario {
             slo: self.slo_config(),
             fault: self.faults.as_ref().map(FaultPlanSpec::to_config),
             profile_events: self.profile_events,
+            stop: self.stop,
             cost,
             seed: self.seed,
             ..Default::default()
@@ -946,6 +1082,51 @@ impl Scenario {
                 })
                 .collect();
             pairs.push(("phases", Json::from(phases)));
+        }
+        if let Some(g) = &self.optimize {
+            let nums = |v: &[usize]| {
+                Json::from(v.iter().map(|&n| Json::from(n)).collect::<Vec<_>>())
+            };
+            pairs.push((
+                "optimize",
+                Json::obj([
+                    ("prefill", nums(&g.prefill)),
+                    ("decode", nums(&g.decode)),
+                    (
+                        "chunk",
+                        Json::from(
+                            g.chunk.iter().map(|&c| Json::from(u64::from(c))).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "prefill_policy",
+                        Json::from(
+                            g.prefill_policy
+                                .iter()
+                                .map(|&p| Json::from(prefill_policy_key(p)))
+                                .collect::<Vec<_>>(),
+                        ),
+                    ),
+                    (
+                        "link",
+                        Json::from(
+                            g.link.iter().map(|l| Json::from(l.key())).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    ("elastic", nums(&g.elastic)),
+                    (
+                        "drivers",
+                        Json::from(
+                            g.drivers.iter().map(|d| Json::from(d.clone())).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    ("start_fraction", Json::from(g.start_fraction)),
+                    ("keep_fraction", Json::from(g.keep_fraction)),
+                    ("min_attainment", Json::from(g.min_attainment)),
+                    ("prune", Json::from(g.prune)),
+                    ("prune_slack", Json::from(g.prune_slack)),
+                ]),
+            ));
         }
         Json::obj(pairs)
     }
@@ -1239,6 +1420,108 @@ impl Scenario {
                             .transpose()?
                             .unwrap_or(0.0);
                         sc.phases.push(Phase { workload, requests, rate, start_ms });
+                    }
+                }
+                "optimize" => {
+                    sc.optimize = match v {
+                        Json::Null => None,
+                        _ => {
+                            let oobj = v
+                                .as_obj()
+                                .ok_or("spec key 'optimize' must be an object or null")?;
+                            for ok in oobj.keys() {
+                                if !OPTIMIZE_KEYS.contains(&ok.as_str()) {
+                                    return Err(format!(
+                                        "unknown optimize key '{ok}' (known: {})",
+                                        OPTIMIZE_KEYS.join(", ")
+                                    ));
+                                }
+                            }
+                            let nums = |x: &Json, name: &str| -> Result<Vec<usize>, String> {
+                                let arr = x
+                                    .as_arr()
+                                    .ok_or(format!("optimize key '{name}' must be an array"))?;
+                                arr.iter().map(|n| want_num(n, name).map(|f| f as usize)).collect()
+                            };
+                            let mut g = OptimizeGrid::default();
+                            if let Some(x) = v.get("prefill") {
+                                g.prefill = nums(x, "prefill")?;
+                            }
+                            if let Some(x) = v.get("decode") {
+                                g.decode = nums(x, "decode")?;
+                            }
+                            if let Some(x) = v.get("chunk") {
+                                g.chunk = nums(x, "chunk")?.iter().map(|&n| n as u32).collect();
+                            }
+                            if let Some(x) = v.get("prefill_policy") {
+                                let arr = x
+                                    .as_arr()
+                                    .ok_or("optimize key 'prefill_policy' must be an array")?;
+                                g.prefill_policy = arr
+                                    .iter()
+                                    .map(|p| parse_prefill_policy(want_str(p, "prefill_policy")?))
+                                    .collect::<Result<Vec<_>, _>>()?;
+                            }
+                            if let Some(x) = v.get("link") {
+                                let arr =
+                                    x.as_arr().ok_or("optimize key 'link' must be an array")?;
+                                g.link = arr
+                                    .iter()
+                                    .map(|l| parse_link(want_str(l, "link")?))
+                                    .collect::<Result<Vec<_>, _>>()?;
+                            }
+                            if let Some(x) = v.get("elastic") {
+                                g.elastic = nums(x, "elastic")?;
+                            }
+                            if let Some(x) = v.get("drivers") {
+                                let arr =
+                                    x.as_arr().ok_or("optimize key 'drivers' must be an array")?;
+                                g.drivers = arr
+                                    .iter()
+                                    .map(|d| want_str(d, "drivers").map(str::to_string))
+                                    .collect::<Result<Vec<_>, _>>()?;
+                            }
+                            if let Some(x) = v.get("start_fraction") {
+                                let f = want_num(x, "start_fraction")?;
+                                if !(f > 0.0 && f <= 1.0) {
+                                    return Err(
+                                        "optimize key 'start_fraction' must be in (0,1]".to_string()
+                                    );
+                                }
+                                g.start_fraction = f;
+                            }
+                            if let Some(x) = v.get("keep_fraction") {
+                                let f = want_num(x, "keep_fraction")?;
+                                if !(f > 0.0 && f <= 1.0) {
+                                    return Err(
+                                        "optimize key 'keep_fraction' must be in (0,1]".to_string()
+                                    );
+                                }
+                                g.keep_fraction = f;
+                            }
+                            if let Some(x) = v.get("min_attainment") {
+                                let f = want_num(x, "min_attainment")?;
+                                if !(0.0..=1.0).contains(&f) {
+                                    return Err(
+                                        "optimize key 'min_attainment' must be in [0,1]".to_string()
+                                    );
+                                }
+                                g.min_attainment = f;
+                            }
+                            if let Some(x) = v.get("prune") {
+                                g.prune = want_bool(x, "prune")?;
+                            }
+                            if let Some(x) = v.get("prune_slack") {
+                                let f = want_num(x, "prune_slack")?;
+                                if !(0.0..=1.0).contains(&f) {
+                                    return Err(
+                                        "optimize key 'prune_slack' must be in [0,1]".to_string()
+                                    );
+                                }
+                                g.prune_slack = f;
+                            }
+                            Some(g)
+                        }
                     }
                 }
                 _ => unreachable!("key checked against KNOWN_KEYS above"),
@@ -1539,6 +1822,18 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach the optimizer search grid (`None` = plain scenario).
+    pub fn optimize(mut self, v: Option<OptimizeGrid>) -> Self {
+        self.sc.optimize = v;
+        self
+    }
+
+    /// Arm the early-stop knobs (programmatic only — never serialized).
+    pub fn stop(mut self, v: crate::sim::StopPolicy) -> Self {
+        self.sc.stop = v;
+        self
+    }
+
     /// Append one fault event, creating a default-knobbed plan on first
     /// use (the builder mirror of a repeated `--fault` CLI flag).
     pub fn fault(mut self, ev: FaultSpec) -> Self {
@@ -1605,6 +1900,48 @@ mod tests {
             .build();
         let s = sc.to_json().dump();
         assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+    }
+
+    #[test]
+    fn optimize_grid_round_trips_and_is_validated() {
+        let sc = Scenario::builder()
+            .name("opt")
+            .optimize(Some(OptimizeGrid {
+                prefill: vec![1, 2, 4],
+                decode: vec![2, 8],
+                chunk: vec![256, 512],
+                prefill_policy: vec![PrefillPolicy::Sjf, PrefillPolicy::Slo],
+                link: vec![LinkSpec::Roce, LinkSpec::Nvlink],
+                elastic: vec![0, 12],
+                drivers: vec!["tetri".into(), "vllm".into()],
+                start_fraction: 0.125,
+                keep_fraction: 0.25,
+                min_attainment: 0.9,
+                prune: false,
+                prune_slack: 0.1,
+            }))
+            .build();
+        let s = sc.to_json().dump();
+        assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+        // grid axes never enter the trace generator, so the cache key is
+        // identical with and without the optimize block
+        assert_eq!(sc.trace_key(), Scenario { optimize: None, ..sc.clone() }.trace_key());
+        // knob ranges are validated at parse time
+        for bad in [
+            r#"{"optimize": {"start_fraction": 0.0}}"#,
+            r#"{"optimize": {"keep_fraction": 1.5}}"#,
+            r#"{"optimize": {"min_attainment": -0.1}}"#,
+            r#"{"optimize": {"prune_slack": 2.0}}"#,
+            r#"{"optimize": {"bogus": 1}}"#,
+        ] {
+            assert!(Scenario::from_str(bad).is_err(), "{bad} should be rejected");
+        }
+        // trace_key separates what the generator reads…
+        let base = Scenario::default();
+        assert_ne!(base.trace_key(), Scenario { trace_seed: 1, ..base.clone() }.trace_key());
+        assert_ne!(base.trace_key(), Scenario { requests: 7, ..base.clone() }.trace_key());
+        // …and ignores what it doesn't
+        assert_eq!(base.trace_key(), Scenario { n_prefill: 9, chunk_size: 64, ..base.clone() }.trace_key());
     }
 
     #[test]

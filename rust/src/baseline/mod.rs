@@ -61,6 +61,9 @@ pub struct BaselineConfig {
     /// Collect a per-event-kind wall-time profile (see
     /// `ClusterConfig::profile_events` — same knob, observability only).
     pub profile_events: bool,
+    /// Early-stop knobs (see `ClusterConfig::stop` — same knob, off by
+    /// default).
+    pub stop: crate::sim::StopPolicy,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -76,6 +79,7 @@ impl Default for BaselineConfig {
             slo: SloConfig::default(),
             fault: None,
             profile_events: false,
+            stop: crate::sim::StopPolicy::off(),
             cost: CostModel::default(),
             seed: 0,
         }
@@ -118,6 +122,7 @@ impl BaselineCluster {
         let n = cfg.n_instances;
         let mut core = EngineCore::new(n);
         core.metrics.retain_records = cfg.retain_records;
+        core.stop = cfg.stop;
         if cfg.profile_events {
             core.profile = Some(Box::default());
         }

@@ -156,6 +156,7 @@ impl Cluster {
         let rng = Pcg::with_stream(cfg.seed, 0x1234_5678_9abc_def1);
         let mut core = EngineCore::new(n);
         core.metrics.retain_records = cfg.retain_records;
+        core.stop = cfg.stop;
         if cfg.profile_events {
             core.profile = Some(Box::default());
         }

@@ -143,6 +143,10 @@ pub struct ClusterConfig {
     /// trajectory, records, and fingerprints are identical either way —
     /// the profile lives outside the fingerprinted metrics.
     pub profile_events: bool,
+    /// Early-stop knobs (successive-halving rungs, miss-budget aborts).
+    /// Off by default — the normal run-to-completion semantics (see
+    /// [`crate::sim::StopPolicy`]).
+    pub stop: crate::sim::StopPolicy,
     pub cost: CostModel,
     pub seed: u64,
 }
@@ -176,6 +180,7 @@ impl Default for ClusterConfig {
             fault: None,
             prefix_cache: None,
             profile_events: false,
+            stop: crate::sim::StopPolicy::off(),
             cost: CostModel::default(),
             seed: 0,
         }

@@ -22,6 +22,7 @@ pub mod fault;
 pub mod instance;
 pub mod kvcache;
 pub mod metrics;
+pub mod optimizer;
 pub mod predictor;
 pub mod prefill;
 pub mod prefixcache;

@@ -4,6 +4,12 @@
 //!   sim    — run a declarative experiment `Scenario` (flags and/or a JSON
 //!            spec file; both resolve through `tetri_infer::api` and are
 //!            bit-identical) and print TTFT/JCT/resource/perf-$ rows.
+//!   sim optimize — goodput-per-dollar auto-search over a spec's
+//!            `optimize` grid (shared-trace memoization + successive
+//!            halving + early-abort pruning; see `tetri_infer::optimizer`).
+//!   sim sweep    — the same grid run exhaustively (every cell, full
+//!            length; the reference the optimizer's savings are
+//!            measured against).
 //!   serve  — real mode: load artifacts/ and serve a workload through the
 //!            AOT'd model on the PJRT CPU client.
 //!   info   — print the artifact manifest summary.
@@ -14,13 +20,17 @@
 //! panic.)
 
 use tetri_infer::api::{
-    class_keys, elastic_keys, fault_event_keys, fault_keys, parse_class_flag, parse_decode_policy,
-    parse_dispatch, parse_fault_flag, parse_link, parse_predictor, parse_prefill_policy,
-    parse_prefix_flag, parse_workload, phase_keys, prefix_keys, spec_keys, value_vocab,
+    class_keys, elastic_keys, fault_event_keys, fault_keys, optimize_keys, parse_class_flag,
+    parse_decode_policy, parse_dispatch, parse_fault_flag, parse_link, parse_predictor,
+    parse_prefill_policy, parse_prefix_flag, parse_workload, phase_keys, prefix_keys, spec_keys,
+    value_vocab,
     Driver as _, ElasticSpec, FaultPlanSpec, NullObserver, Observer, ProgressObserver, Registry,
     Scenario,
 };
 use tetri_infer::metrics::vs_row_from;
+use tetri_infer::optimizer;
+use tetri_infer::sweep::{default_workers, results_csv, results_json, run_cells, SweepCell};
+use tetri_infer::util::Json;
 #[cfg(feature = "pjrt")]
 use tetri_infer::runtime::Engine;
 #[cfg(feature = "pjrt")]
@@ -87,8 +97,23 @@ fn usage() -> ! {
                           key=value pairs, e.g.
                           n_prefixes=32,prefix_len=512,zipf=1.0
                           (also: cache_pages=N, block_tokens=N)
+    --workers N           worker threads for sim optimize / sim sweep
+                          (default: all cores; echoed in the startup line
+                          and the JSON meta)
     --list                print registered drivers, scenario spec files,
                           and recognized spec keys/values, then exit
+  sim optimize [sim options]:
+    goodput-per-dollar auto-search over the spec's 'optimize' grid
+    (n_prefill × n_decode × chunk × policy × link × elastic × driver).
+    Needs --spec FILE.json with an 'optimize' block (see
+    scenarios/optimize_mixed.json). Prints the Pareto frontier CSV, the
+    recommended topology, and the search accounting; --json writes the
+    machine-readable result.
+  sim sweep [sim options]:
+    run the spec's 'optimize' grid exhaustively (every cell at full
+    length — no halving, no pruning) and print the results CSV; --json
+    writes the labeled reports. A spec without an 'optimize' block runs
+    as a single cell.
   serve options:
     --artifacts DIR       (default artifacts)
     --requests N          (default 8)
@@ -149,6 +174,7 @@ const SIM_FLAGS: &[(&str, bool)] = &[
     ("--admission", true),
     ("--fault", true),
     ("--prefix", true),
+    ("--workers", true),
     ("--list", false),
 ];
 
@@ -363,6 +389,7 @@ fn cmd_list() {
     println!("  faults keys: {}", fault_keys().join(", "));
     println!("  faults.events[] keys: {}", fault_event_keys().join(", "));
     println!("  prefix keys: {}", prefix_keys().join(", "));
+    println!("  optimize keys: {}", optimize_keys().join(", "));
     for (key, vals) in value_vocab() {
         println!("{key} values: {}", vals.join(", "));
     }
@@ -471,6 +498,115 @@ fn cmd_sim(args: &[String]) {
     }
 }
 
+/// Resolve `--workers` (default: every core), clamped to ≥ 1.
+fn workers_from_args(args: &[String]) -> usize {
+    arg_val(args, "--workers")
+        .map(|v| num::<usize>("--workers", &v, "a worker count"))
+        .unwrap_or_else(default_workers)
+        .max(1)
+}
+
+/// Write a JSON doc to `--json PATH|-` when the flag is given.
+fn emit_json(args: &[String], doc: &Json) {
+    if let Some(path) = arg_val(args, "--json") {
+        let text = doc.dump();
+        if path == "-" {
+            println!("{text}");
+        } else {
+            std::fs::write(&path, &text)
+                .unwrap_or_else(|e| die(&format!("cannot write {path}: {e}")));
+            eprintln!("wrote {path}");
+        }
+    }
+}
+
+/// `sim optimize`: the goodput-per-dollar auto-search (see
+/// `tetri_infer::optimizer`). Deterministic for a given spec + seed at
+/// any `--workers` count.
+fn cmd_optimize(args: &[String]) {
+    validate_sim_flags(args);
+    let sc = scenario_from_args(args);
+    let Some(grid) = sc.optimize.as_ref() else {
+        die(
+            "sim optimize needs a spec with an 'optimize' block \
+             (see scenarios/optimize_mixed.json)",
+        );
+    };
+    let workers = workers_from_args(args);
+    println!("{}", sc.summary_line());
+    println!(
+        "optimize: grid={} cells | start_fraction={} keep_fraction={} min_attainment={} \
+         prune={} | workers={workers}",
+        optimizer::expand(&sc, grid).len(),
+        grid.start_fraction,
+        grid.keep_fraction,
+        grid.min_attainment,
+        grid.prune,
+    );
+    let res = optimizer::optimize(&sc, workers).unwrap_or_else(|e| die(&e));
+    print!("{}", res.frontier_csv());
+    match res.recommended_cell() {
+        Some(r) => println!(
+            "recommended: {} | goodput/$ {:.6} | goodput {:.3} rps | ${:.1}/hr",
+            r.label,
+            optimizer::value_of(&r.report.metrics),
+            r.report.metrics.goodput_rps(),
+            optimizer::cost_per_hr(&r.report.metrics),
+        ),
+        None => println!("recommended: none (no cell met the SLO floor)"),
+    }
+    let st = &res.stats;
+    println!(
+        "searched {} cells: rungs={} halving_discarded={} pruned_slo={} pruned_dominance={} \
+         full_runs={} | {} events = {:.3} of exhaustive | {:.2}s wall ({:.1} cells/s)",
+        st.grid_cells,
+        st.rungs,
+        st.halving_discarded,
+        st.pruned_slo,
+        st.pruned_dominance,
+        st.full_runs,
+        st.events_simulated,
+        st.fraction_of_exhaustive(),
+        st.wall_secs,
+        st.cells_per_sec(),
+    );
+    emit_json(
+        args,
+        &Json::obj([
+            ("scenario", sc.to_json()),
+            ("workers", Json::from(workers)),
+            ("result", res.to_json()),
+        ]),
+    );
+}
+
+/// `sim sweep`: the exhaustive reference — every grid cell at full
+/// length through the sweep harness.
+fn cmd_sweep(args: &[String]) {
+    validate_sim_flags(args);
+    let sc = scenario_from_args(args);
+    let workers = workers_from_args(args);
+    println!("{}", sc.summary_line());
+    let cells = match sc.optimize.as_ref() {
+        Some(grid) => optimizer::expand(&sc, grid),
+        None => {
+            let label = if sc.name.is_empty() { "cell".to_string() } else { sc.name.clone() };
+            vec![SweepCell::new(label, sc.clone())]
+        }
+    };
+    println!("sweep: grid={} cells (exhaustive, full length) | workers={workers}", cells.len());
+    let results = run_cells(cells, workers);
+    print!("{}", results_csv(&results));
+    emit_json(
+        args,
+        &Json::obj([
+            ("scenario", sc.to_json()),
+            ("workers", Json::from(workers)),
+            ("cells", results_json(&results)),
+        ]),
+    );
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn cmd_serve(_args: &[String]) {
     eprintln!(
@@ -558,7 +694,13 @@ fn cmd_info(args: &[String]) {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
-        Some("sim") => cmd_sim(&args[1..]),
+        // positional subcommands must peel off before cmd_sim's flag
+        // validation (it rejects any non-`--` argument)
+        Some("sim") => match args.get(1).map(String::as_str) {
+            Some("optimize") => cmd_optimize(&args[2..]),
+            Some("sweep") => cmd_sweep(&args[2..]),
+            _ => cmd_sim(&args[1..]),
+        },
         Some("serve") => cmd_serve(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         // `tetri --list` works top-level too (sugar for `sim --list`)

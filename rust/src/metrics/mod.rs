@@ -181,6 +181,12 @@ pub struct RunMetrics {
     /// granularities (chunk- or layer-level), vs shipping everything
     /// after the last chunk.
     pub overlap_us: Us,
+    /// The run was cut short by an armed [`crate::sim::StopPolicy`] knob
+    /// (successive-halving horizon or the optimizer's miss-budget abort).
+    /// Aborted runs carry exact metrics for everything simulated up to
+    /// the cut, but the conservation law `finished + shed + failed ==
+    /// arrivals` does not hold — in-flight requests are never counted.
+    pub aborted: bool,
     /// Heap allocations the `alloc-count` counting allocator observed in
     /// the steady-state window (second half of the run, cold sections
     /// excluded). Always 0 without the feature. Host-side diagnostic —

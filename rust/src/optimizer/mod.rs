@@ -1,0 +1,744 @@
+//! Goodput-per-dollar auto-search over serving topologies (DistServe-style
+//! placement search, arXiv:2401.09670 §4, applied to this paper's
+//! disaggregated cluster): expand an [`OptimizeGrid`] into
+//! n_prefill × n_decode × chunk × policy × link × elastic × driver cells,
+//! then find the Pareto frontier of goodput vs $/hr — engineered so the
+//! dominant cost is the handful of finalist cells, not the grid.
+//!
+//! Three pillars keep the search cheap (see DESIGN.md §Optimizer):
+//!
+//!   1. **Shared-trace memoization** — every cell replays one `Arc`'d
+//!      arrival trace ([`TraceCache`] keyed by [`Scenario::trace_key`]);
+//!      grid axes never enter the workload generator, so the trace is
+//!      generated once and shared zero-copy across all cells
+//!      (bit-identical to per-cell generation — pinned in
+//!      tests/optimizer.rs).
+//!   2. **Truncated successive halving** — every live cell runs a short
+//!      prefix of the trace (`SharedTraceSource::truncated`, a *complete*
+//!      run of the first `h` requests — no mid-flight abort), the top
+//!      `keep_fraction` by estimated goodput/$ survive, the horizon
+//!      doubles, repeat until the full length.
+//!   3. **Early-abort pruning** — a `StopPolicy` miss budget kills cells
+//!      mid-run the moment SLO attainment is hopeless, and a dominance
+//!      bound skips finalists whose rung-derived upper bound cannot reach
+//!      the best completed full run (final stage only — rung-vs-rung
+//!      pruning is not sound; see DESIGN.md for the bound's derivation).
+//!
+//! Everything is deterministic: cells run under `sweep::parallel_map`
+//! (input-order results), ranking ties break on grid index, and pruning
+//! decisions only read state from completed waves — same spec + seed ⇒
+//! byte-identical frontier JSON (pinned in tests/optimizer.rs and
+//! tests/golden.rs).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::api::{NullObserver, OptimizeGrid, Registry, Scenario};
+use crate::api::{prefill_policy_key, ElasticSpec, Report};
+use crate::metrics::RunMetrics;
+use crate::sim::{SharedTraceSource, StopPolicy};
+use crate::sweep::{parallel_map, CellResult, SweepCell};
+use crate::types::{Request, Us};
+use crate::util::Json;
+
+// ------------------------------------------------------------ trace cache
+
+/// Memoized arrival traces, keyed by [`Scenario::trace_key`]: one
+/// generation + one stable sort per distinct fingerprint, shared as an
+/// `Arc` across every grid cell that replays it. The sort matches
+/// `TraceSource::new`, so a `SharedTraceSource` over the cached trace is
+/// bit-identical to a fresh per-cell source.
+#[derive(Default)]
+pub struct TraceCache {
+    map: HashMap<String, Arc<Vec<Request>>>,
+}
+
+impl TraceCache {
+    pub fn new() -> Self {
+        TraceCache::default()
+    }
+
+    /// The trace for `sc`, generating (and arrival-sorting) it on first
+    /// use and handing back the shared `Arc` afterwards.
+    pub fn get(&mut self, sc: &Scenario) -> Arc<Vec<Request>> {
+        self.map
+            .entry(sc.trace_key())
+            .or_insert_with(|| {
+                let mut t = sc.trace();
+                // phased traces may interleave; TraceSource sorts stably
+                // by arrival, so the shared copy must too
+                t.sort_by_key(|r| r.arrival);
+                Arc::new(t)
+            })
+            .clone()
+    }
+
+    /// Distinct traces generated so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+// -------------------------------------------------------- grid expansion
+
+/// Sentinel for "axis not searched — inherit the base scenario's value"
+/// on the elastic axis (where `0` already means "static pool").
+const INHERIT: usize = usize::MAX;
+
+/// Expand the grid into concrete sweep cells. Empty axes inherit the base
+/// scenario's value; cell labels encode the searched axes only. Cells
+/// drop the `optimize` block (no recursion, compact echoes) and force
+/// `records: false` — a grid holds O(cells) summaries, never
+/// O(cells × requests) record vectors.
+pub fn expand(base: &Scenario, g: &OptimizeGrid) -> Vec<SweepCell> {
+    let usizes = |axis: &Vec<usize>, b: usize| -> Vec<usize> {
+        if axis.is_empty() { vec![b] } else { axis.clone() }
+    };
+    let prefills = usizes(&g.prefill, base.n_prefill);
+    let decodes = usizes(&g.decode, base.n_decode);
+    let chunks = if g.chunk.is_empty() { vec![base.chunk_size] } else { g.chunk.clone() };
+    let policies = if g.prefill_policy.is_empty() {
+        vec![base.prefill_policy]
+    } else {
+        g.prefill_policy.clone()
+    };
+    let links = if g.link.is_empty() { vec![base.link] } else { g.link.clone() };
+    let elastics = if g.elastic.is_empty() { vec![INHERIT] } else { g.elastic.clone() };
+    let drivers = if g.drivers.is_empty() {
+        vec![base.driver.clone()]
+    } else {
+        g.drivers.clone()
+    };
+
+    let mut cells = Vec::new();
+    for &np in &prefills {
+        for &nd in &decodes {
+            for &ch in &chunks {
+                for &pol in &policies {
+                    for &link in &links {
+                        for &el in &elastics {
+                            for drv in &drivers {
+                                let mut sc = base.clone();
+                                sc.optimize = None;
+                                sc.records = false;
+                                sc.n_prefill = np;
+                                sc.n_decode = nd;
+                                sc.chunk_size = ch;
+                                sc.prefill_policy = pol;
+                                sc.link = link;
+                                sc.driver = drv.clone();
+                                if el != INHERIT {
+                                    sc.elastic = if el == 0 {
+                                        None
+                                    } else {
+                                        Some(ElasticSpec {
+                                            max_instances: el,
+                                            ..base.elastic.unwrap_or_default()
+                                        })
+                                    };
+                                }
+                                let mut label =
+                                    format!("p{np}d{nd}c{ch}-{}", prefill_policy_key(pol));
+                                if !g.link.is_empty() {
+                                    label.push('-');
+                                    label.push_str(link.key());
+                                }
+                                if !g.elastic.is_empty() {
+                                    if el == 0 {
+                                        label.push_str("-static");
+                                    } else {
+                                        label.push_str(&format!("-e{el}"));
+                                    }
+                                }
+                                if !g.drivers.is_empty() {
+                                    label.push('-');
+                                    label.push_str(drv);
+                                }
+                                sc.name = label.clone();
+                                cells.push(SweepCell::new(label, sc));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
+// ------------------------------------------------------- value functions
+
+/// $/hr of a run: average live instance count × the cost model's dollar
+/// rate. Static pools resolve to `n_instances × 3600 × rate` exactly;
+/// elastic pools pay only for the instance-seconds they kept alive.
+pub fn cost_per_hr(m: &RunMetrics) -> f64 {
+    let mk = m.makespan_us.max(1) as f64;
+    let avg_instances = m.alive_us.iter().sum::<Us>() as f64 / mk;
+    avg_instances * crate::costmodel::CostModel::default().dollar_per_sec * 3600.0
+}
+
+/// The search objective: goodput (SLO-attained requests/sec) per $/hr.
+pub fn value_of(m: &RunMetrics) -> f64 {
+    let cost = cost_per_hr(m);
+    if cost <= 0.0 {
+        return 0.0;
+    }
+    m.goodput_rps() / cost
+}
+
+/// Miss budget for a horizon of `h` requests: the run aborts once
+/// `misses > floor((1 - min_attainment) × h)`. `min_attainment == 0`
+/// disarms the knob entirely (`u64::MAX` — the budget can never be
+/// exceeded before the run completes anyway).
+fn miss_budget(min_attainment: f64, h: usize) -> u64 {
+    if min_attainment <= 0.0 {
+        u64::MAX
+    } else {
+        ((1.0 - min_attainment) * h as f64).floor() as u64
+    }
+}
+
+// ----------------------------------------------------------- the search
+
+/// Per-cell search state: the cell itself plus whatever its most recent
+/// (longest-horizon) run established.
+struct CellState {
+    cell: SweepCell,
+    /// Horizon of `last` (requests delivered).
+    last_h: usize,
+    /// Most recent rung report (None until the first rung runs).
+    last: Option<Report>,
+    /// Estimated goodput/$ from `last` — the halving rank key.
+    value_est: f64,
+    /// Observed DES events per delivered request (exhaustive-cost
+    /// estimator; refined at every horizon this cell reaches).
+    events_per_req: f64,
+}
+
+/// Search accounting: how much work the three pillars saved.
+#[derive(Clone, Debug, Default)]
+pub struct OptimizerStats {
+    /// Cells in the expanded grid.
+    pub grid_cells: usize,
+    /// Halving rungs executed (0 = the grid went straight to finals).
+    pub rungs: usize,
+    /// Cells discarded by successive-halving rank cuts.
+    pub halving_discarded: usize,
+    /// Runs killed mid-flight by the SLO miss budget (rungs + finals).
+    pub pruned_slo: usize,
+    /// Finalists skipped because their upper bound could not reach the
+    /// incumbent full-run value.
+    pub pruned_dominance: usize,
+    /// Full-length runs actually executed.
+    pub full_runs: usize,
+    /// DES events actually simulated across every run.
+    pub events_simulated: u64,
+    /// Estimated events an exhaustive full-length sweep of the whole grid
+    /// would have cost (per-cell observed events/request × full length).
+    pub events_exhaustive_est: f64,
+    /// Host wall time of the whole search (not serialized — see
+    /// [`OptimizerResult::to_json`]).
+    pub wall_secs: f64,
+}
+
+impl OptimizerStats {
+    /// Fraction of the exhaustive sweep's event count actually simulated
+    /// — the headline savings number (BENCH_cluster.json asserts < 0.5 on
+    /// the shipped spec).
+    pub fn fraction_of_exhaustive(&self) -> f64 {
+        if self.events_exhaustive_est <= 0.0 {
+            return 1.0;
+        }
+        self.events_simulated as f64 / self.events_exhaustive_est
+    }
+
+    /// Grid cells per wall second (the optimizer bench headline).
+    pub fn cells_per_sec(&self) -> f64 {
+        self.grid_cells as f64 / self.wall_secs.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("grid_cells", Json::from(self.grid_cells)),
+            ("rungs", Json::from(self.rungs)),
+            ("halving_discarded", Json::from(self.halving_discarded)),
+            ("pruned_slo", Json::from(self.pruned_slo)),
+            ("pruned_dominance", Json::from(self.pruned_dominance)),
+            ("full_runs", Json::from(self.full_runs)),
+            ("events_simulated", Json::from(self.events_simulated)),
+            ("events_exhaustive_est", Json::from(self.events_exhaustive_est)),
+            ("fraction_of_exhaustive", Json::from(self.fraction_of_exhaustive())),
+        ])
+    }
+}
+
+/// The search output: the Pareto frontier (full-length runs,
+/// cost-ascending), the recommended topology, and the work accounting.
+pub struct OptimizerResult {
+    /// Non-dominated full-length cells, sorted by $/hr ascending.
+    pub frontier: Vec<CellResult>,
+    /// Index into `frontier` of the best goodput/$ cell (`None` when no
+    /// cell survived the SLO floor).
+    pub recommended: Option<usize>,
+    pub stats: OptimizerStats,
+}
+
+impl OptimizerResult {
+    /// The recommended cell, if any cell was feasible.
+    pub fn recommended_cell(&self) -> Option<&CellResult> {
+        self.recommended.and_then(|i| self.frontier.get(i))
+    }
+
+    /// Frontier CSV through the sweep serializer (same 17 columns as
+    /// every other grid artifact in the repo).
+    pub fn frontier_csv(&self) -> String {
+        crate::sweep::results_csv(&self.frontier)
+    }
+
+    /// Deterministic machine-readable result: compact frontier points,
+    /// the recommended topology, and the stats. Wall time is deliberately
+    /// *not* serialized — same spec + seed must dump byte-identical JSON
+    /// (pinned in tests/optimizer.rs).
+    pub fn to_json(&self) -> Json {
+        let frontier: Vec<Json> = self
+            .frontier
+            .iter()
+            .map(|r| {
+                let m = &r.report.metrics;
+                Json::obj([
+                    ("label", Json::from(r.label.clone())),
+                    ("driver", Json::from(r.report.driver.clone())),
+                    ("goodput_rps", Json::from(m.goodput_rps())),
+                    ("cost_per_hr", Json::from(cost_per_hr(m))),
+                    ("goodput_per_dollar_hr", Json::from(value_of(m))),
+                    ("attained", Json::from(m.attained)),
+                    ("requests", Json::from(m.n_finished())),
+                    ("makespan_s", Json::from(m.makespan_us as f64 / 1e6)),
+                ])
+            })
+            .collect();
+        let recommended = match self.recommended_cell() {
+            None => Json::Null,
+            Some(r) => {
+                let sc = r.report.scenario.as_ref();
+                let mut pairs = vec![
+                    ("label", Json::from(r.label.clone())),
+                    ("driver", Json::from(r.report.driver.clone())),
+                    ("goodput_per_dollar_hr", Json::from(value_of(&r.report.metrics))),
+                ];
+                if let Some(sc) = sc {
+                    pairs.push(("n_prefill", Json::from(sc.n_prefill)));
+                    pairs.push(("n_decode", Json::from(sc.n_decode)));
+                    pairs.push(("chunk_size", Json::from(u64::from(sc.chunk_size))));
+                    pairs.push((
+                        "prefill_policy",
+                        Json::from(prefill_policy_key(sc.prefill_policy)),
+                    ));
+                    pairs.push(("link", Json::from(sc.link.key())));
+                }
+                Json::obj(pairs)
+            }
+        };
+        Json::obj([
+            ("frontier", Json::from(frontier)),
+            ("recommended", recommended),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+}
+
+/// One cell run: resolve the driver, arm the miss budget, replay the
+/// shared trace up to `horizon` requests. A truncated horizon is a
+/// *complete* run of the prefix (metrics finalize cleanly); only the miss
+/// budget can abort it (`metrics.aborted`).
+fn run_cell(sc: &Scenario, trace: &Arc<Vec<Request>>, horizon: usize, budget: u64) -> Report {
+    let mut sc = sc.clone();
+    sc.stop = StopPolicy { miss_budget: budget, ..StopPolicy::off() };
+    let driver = Registry::builtin()
+        .resolve(&sc)
+        .unwrap_or_else(|e| panic!("optimizer cell '{}': {e}", sc.name));
+    let mut src = SharedTraceSource::truncated(trace.clone(), horizon);
+    driver.run_source(&mut src, &mut NullObserver)
+}
+
+/// Rank cell indices best-first by estimated goodput/$ (stable grid-index
+/// tie-break — determinism does not depend on float totality).
+fn rank_desc(indices: &mut [usize], states: &[CellState]) {
+    indices.sort_by(|&a, &b| {
+        states[b]
+            .value_est
+            .partial_cmp(&states[a].value_est)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+}
+
+/// Run the goodput-per-dollar search over `sc`'s `optimize` grid.
+/// Deterministic for a given spec + seed at any worker count. Errors on a
+/// missing `optimize` block, an unknown driver on the `drivers` axis, or
+/// an empty trace.
+pub fn optimize(sc: &Scenario, workers: usize) -> Result<OptimizerResult, String> {
+    let t0 = Instant::now();
+    let grid = sc.optimize.clone().ok_or("scenario has no 'optimize' block")?;
+    let workers = workers.max(1);
+    let cells = expand(sc, &grid);
+
+    // fail fast on a bad drivers axis — worker panics are bugs, not input
+    // errors, so input errors must never reach the workers
+    let registry = Registry::builtin();
+    {
+        let mut seen: Vec<&str> = Vec::new();
+        for c in &cells {
+            if !seen.contains(&c.scenario.driver.as_str()) {
+                seen.push(&c.scenario.driver);
+                registry.resolve(&c.scenario)?;
+            }
+        }
+    }
+
+    // pillar 1: one trace per distinct fingerprint, shared by Arc. The
+    // grid axes never enter the generator, so this is one generation for
+    // the whole search; the per-cell lookup keeps the code honest if a
+    // future axis ever does affect the trace.
+    let mut cache = TraceCache::new();
+    let traces: Vec<Arc<Vec<Request>>> =
+        cells.iter().map(|c| cache.get(&c.scenario)).collect();
+    let n = traces.first().map(|t| t.len()).unwrap_or(0);
+    if n == 0 {
+        return Err("optimize spec generates an empty trace".to_string());
+    }
+
+    let mut stats = OptimizerStats { grid_cells: cells.len(), ..Default::default() };
+    let mut states: Vec<CellState> = cells
+        .into_iter()
+        .map(|cell| CellState {
+            cell,
+            last_h: 0,
+            last: None,
+            value_est: 0.0,
+            events_per_req: 0.0,
+        })
+        .collect();
+    let mut active: Vec<usize> = (0..states.len()).collect();
+
+    // pillar 2: truncated successive halving — short horizons for the
+    // whole grid, full length only for the finalists
+    // floor of 8 requests per rung, but never past the trace itself
+    // (spelled without max().min() — clamp would panic when n < 8)
+    let mut h = ((n as f64 * grid.start_fraction).ceil() as usize).max(8);
+    if h > n {
+        h = n;
+    }
+    while h < n && active.len() > 1 {
+        stats.rungs += 1;
+        let budget = miss_budget(grid.min_attainment, h);
+        let runs: Vec<(usize, Report)> = {
+            let states = &states;
+            let traces = &traces;
+            parallel_map(active.clone(), workers, move |i| {
+                (i, run_cell(&states[i].cell.scenario, &traces[i], h, budget))
+            })
+        };
+        let mut alive = Vec::with_capacity(runs.len());
+        for (i, r) in runs {
+            stats.events_simulated += r.metrics.events;
+            let st = &mut states[i];
+            st.events_per_req =
+                r.metrics.events as f64 / r.metrics.n_finished().max(1) as f64;
+            st.last_h = h;
+            st.value_est = value_of(&r.metrics);
+            let aborted = r.metrics.aborted;
+            st.last = Some(r);
+            if aborted {
+                // pillar 3a: the miss budget proved this cell's SLO
+                // attainment hopeless at this horizon — dead, not ranked
+                stats.pruned_slo += 1;
+            } else {
+                alive.push(i);
+            }
+        }
+        rank_desc(&mut alive, &states);
+        let keep = ((alive.len() as f64 * grid.keep_fraction).ceil() as usize).max(1);
+        stats.halving_discarded += alive.len().saturating_sub(keep);
+        alive.truncate(keep);
+        active = alive;
+        h = (h * 2).min(n);
+    }
+
+    // final stage: full-length runs, best-ranked first so the incumbent
+    // is strong early and the dominance bound bites. Waves of `workers`
+    // keep the pruning deterministic (decisions only read completed
+    // waves) without serializing the runs.
+    rank_desc(&mut active, &states);
+    let full_budget = miss_budget(grid.min_attainment, n);
+    let t_last_arrival_s =
+        traces.first().and_then(|t| t.last()).map(|r| r.arrival as f64 / 1e6).unwrap_or(0.0);
+    let mut completed: Vec<(usize, Report)> = Vec::new();
+    let mut incumbent = f64::NEG_INFINITY;
+    for wave in active.chunks(workers) {
+        let mut to_run: Vec<usize> = Vec::with_capacity(wave.len());
+        for &i in wave {
+            // pillar 3b: dominance bound — only ever applied here, against
+            // *completed full-length* incumbents (rung-vs-rung pruning is
+            // unsound; DESIGN.md §Optimizer derives the bound)
+            let mut prune = false;
+            if grid.prune && incumbent > f64::NEG_INFINITY {
+                if let Some(ref last) = states[i].last {
+                    let m = &last.metrics;
+                    let cost = cost_per_hr(m);
+                    if cost > 0.0 {
+                        let attained_ub =
+                            m.attained as f64 + (n - states[i].last_h) as f64;
+                        let elapsed_lb_s =
+                            (m.makespan_us as f64 / 1e6).max(t_last_arrival_s).max(1e-9);
+                        let ub = attained_ub / elapsed_lb_s / cost;
+                        prune = ub < (1.0 - grid.prune_slack) * incumbent;
+                    }
+                }
+            }
+            if prune {
+                stats.pruned_dominance += 1;
+            } else {
+                to_run.push(i);
+            }
+        }
+        let runs: Vec<(usize, Report)> = {
+            let states = &states;
+            let traces = &traces;
+            parallel_map(to_run, workers, move |i| {
+                (i, run_cell(&states[i].cell.scenario, &traces[i], n, full_budget))
+            })
+        };
+        for (i, r) in runs {
+            stats.events_simulated += r.metrics.events;
+            stats.full_runs += 1;
+            states[i].events_per_req =
+                r.metrics.events as f64 / r.metrics.n_finished().max(1) as f64;
+            states[i].last_h = n;
+            if r.metrics.aborted {
+                stats.pruned_slo += 1;
+                continue;
+            }
+            let v = value_of(&r.metrics);
+            if v > incumbent {
+                incumbent = v;
+            }
+            completed.push((i, r));
+        }
+    }
+
+    // exhaustive-cost estimate: every grid cell at full length, priced at
+    // the events/request rate observed at its longest horizon
+    stats.events_exhaustive_est =
+        states.iter().map(|st| st.events_per_req * n as f64).sum();
+
+    // Pareto frontier over the completed full runs: goodput up, $/hr down
+    let points: Vec<(usize, f64, f64)> = completed
+        .iter()
+        .enumerate()
+        .map(|(k, (_, r))| (k, r.metrics.goodput_rps(), cost_per_hr(&r.metrics)))
+        .collect();
+    let dominated = |&(k, g, c): &(usize, f64, f64)| -> bool {
+        points.iter().any(|&(j, gj, cj)| {
+            j != k && gj >= g && cj <= c && (gj > g || cj < c)
+        })
+    };
+    let mut frontier_keys: Vec<(usize, f64, f64)> =
+        points.iter().filter(|p| !dominated(*p)).copied().collect();
+    frontier_keys.sort_by(|a, b| {
+        a.2.partial_cmp(&b.2)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .then(completed[a.0].0.cmp(&completed[b.0].0))
+    });
+
+    // pull the chosen reports out of `completed` without cloning metrics
+    let mut picked: Vec<Option<(usize, Report)>> = Vec::new();
+    {
+        let mut taken: Vec<Option<(usize, Report)>> =
+            completed.into_iter().map(Some).collect();
+        for &(k, _, _) in &frontier_keys {
+            picked.push(taken[k].take());
+        }
+    }
+    let frontier: Vec<CellResult> = picked
+        .into_iter()
+        .map(|slot| {
+            let (i, report) = slot.expect("frontier keys are unique");
+            CellResult { label: states[i].cell.label.clone(), report }
+        })
+        .collect();
+
+    // recommended: max goodput/$ on the frontier (ties: cheaper, then
+    // frontier order — which is grid order for identical points)
+    let mut recommended: Option<usize> = None;
+    let mut best = f64::NEG_INFINITY;
+    for (k, r) in frontier.iter().enumerate() {
+        let v = value_of(&r.report.metrics);
+        if v > best {
+            best = v;
+            recommended = Some(k);
+        }
+    }
+
+    stats.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(OptimizerResult { frontier, recommended, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::LinkSpec;
+    use crate::prefill::PrefillPolicy;
+    use crate::workload::WorkloadKind;
+
+    fn base(requests: usize) -> Scenario {
+        Scenario::builder()
+            .workload(WorkloadKind::Mixed)
+            .requests(requests)
+            .rate(24.0)
+            .seed(11)
+            .build()
+    }
+
+    #[test]
+    fn expansion_covers_the_product_and_inherits_the_base() {
+        let mut sc = base(16);
+        sc.optimize = Some(OptimizeGrid {
+            prefill: vec![1, 2],
+            decode: vec![2, 4],
+            chunk: vec![256, 512],
+            prefill_policy: vec![PrefillPolicy::Sjf, PrefillPolicy::Slo],
+            ..Default::default()
+        });
+        let cells = expand(&sc, sc.optimize.as_ref().unwrap());
+        assert_eq!(cells.len(), 16);
+        // unsearched axes inherit the base spec
+        for c in &cells {
+            assert_eq!(c.scenario.link, sc.link);
+            assert_eq!(c.scenario.driver, sc.driver);
+            assert_eq!(c.scenario.elastic, sc.elastic);
+            assert!(c.scenario.optimize.is_none(), "cells must not recurse");
+            assert!(!c.scenario.records, "cells must not retain records");
+            assert_eq!(c.label, c.scenario.name);
+        }
+        assert_eq!(cells[0].label, "p1d2c256-sjf");
+        // labels are unique
+        let mut labels: Vec<&str> = cells.iter().map(|c| c.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 16);
+    }
+
+    #[test]
+    fn searched_link_elastic_driver_axes_land_in_labels_and_specs() {
+        let mut sc = base(16);
+        sc.optimize = Some(OptimizeGrid {
+            link: vec![LinkSpec::Roce, LinkSpec::Nvlink],
+            elastic: vec![0, 6],
+            drivers: vec!["tetri".into(), "vllm".into()],
+            ..Default::default()
+        });
+        let cells = expand(&sc, sc.optimize.as_ref().unwrap());
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].label, "p1d1c512-sjf-roce-static-tetri");
+        assert!(cells.iter().any(|c| c.label.ends_with("-vllm")));
+        let e6 = cells.iter().find(|c| c.label.contains("-e6")).unwrap();
+        assert_eq!(e6.scenario.elastic.unwrap().max_instances, 6);
+        let st = cells.iter().find(|c| c.label.contains("-static")).unwrap();
+        assert!(st.scenario.elastic.is_none());
+    }
+
+    #[test]
+    fn trace_cache_shares_one_arc_across_grid_cells() {
+        let mut sc = base(32);
+        sc.optimize = Some(OptimizeGrid {
+            prefill: vec![1, 2],
+            chunk: vec![256, 512],
+            ..Default::default()
+        });
+        let cells = expand(&sc, sc.optimize.as_ref().unwrap());
+        let mut cache = TraceCache::new();
+        let first = cache.get(&cells[0].scenario);
+        for c in &cells[1..] {
+            assert!(
+                Arc::ptr_eq(&first, &cache.get(&c.scenario)),
+                "grid axes must not fork the trace"
+            );
+        }
+        assert_eq!(cache.len(), 1);
+        assert_eq!(first.len(), 32);
+        // the cached trace is the scenario's own trace, arrival-sorted
+        let mut fresh = cells[0].scenario.trace();
+        fresh.sort_by_key(|r| r.arrival);
+        assert_eq!(first.len(), fresh.len());
+        for (a, b) in first.iter().zip(fresh.iter()) {
+            assert_eq!(
+                (a.id, a.arrival, a.prompt_len, a.decode_len, a.class),
+                (b.id, b.arrival, b.prompt_len, b.decode_len, b.class)
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_search_finds_a_frontier_and_accounts_for_its_work() {
+        let mut sc = base(48);
+        sc.optimize = Some(OptimizeGrid {
+            prefill: vec![1, 2],
+            decode: vec![1, 2],
+            start_fraction: 0.25,
+            keep_fraction: 0.5,
+            ..Default::default()
+        });
+        let res = optimize(&sc, 2).unwrap();
+        assert_eq!(res.stats.grid_cells, 4);
+        assert!(!res.frontier.is_empty(), "classless cells are all feasible");
+        let rec = res.recommended_cell().expect("a recommendation");
+        // the recommended cell is the max-value frontier point
+        for r in &res.frontier {
+            assert!(value_of(&rec.report.metrics) >= value_of(&r.report.metrics));
+        }
+        // frontier is cost-ascending and non-dominated
+        for w in res.frontier.windows(2) {
+            let (c0, c1) = (cost_per_hr(&w[0].report.metrics), cost_per_hr(&w[1].report.metrics));
+            assert!(c0 <= c1, "frontier must be cost-sorted: {c0} vs {c1}");
+            assert!(
+                w[1].report.metrics.goodput_rps() > w[0].report.metrics.goodput_rps()
+                    || (c0 == c1),
+                "a higher-cost frontier point must buy goodput"
+            );
+        }
+        // halving ran and saved work
+        assert!(res.stats.rungs >= 1);
+        assert!(res.stats.full_runs <= res.stats.grid_cells);
+        assert!(res.stats.events_simulated > 0);
+        assert!(res.stats.events_exhaustive_est > 0.0);
+        // CSV rides the sweep serializer
+        let csv = res.frontier_csv();
+        assert!(csv.starts_with(crate::sweep::RESULTS_CSV_HEADER));
+        assert_eq!(csv.lines().count(), 1 + res.frontier.len());
+        // JSON is self-consistent
+        let j = res.to_json();
+        assert_eq!(
+            j.at(&["frontier"]).unwrap().as_arr().unwrap().len(),
+            res.frontier.len()
+        );
+        assert!(j.at(&["recommended", "label"]).is_some());
+        assert!(j.at(&["stats", "grid_cells"]).is_some());
+    }
+
+    #[test]
+    fn missing_grid_and_unknown_driver_are_input_errors() {
+        let sc = base(8);
+        assert!(optimize(&sc, 1).unwrap_err().contains("optimize"));
+        let mut bad = base(8);
+        bad.optimize =
+            Some(OptimizeGrid { drivers: vec!["nope".into()], ..Default::default() });
+        assert!(optimize(&bad, 1).unwrap_err().contains("nope"));
+    }
+}

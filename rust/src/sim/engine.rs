@@ -31,6 +31,48 @@ use super::{Event, EventQueue};
 /// Sentinel for "first token not yet produced".
 pub const NO_TIME: Us = Us::MAX;
 
+/// Early-stop knobs for a run (all off by default — the normal
+/// run-to-completion semantics). The optimizer's truncated
+/// successive-halving rungs and its SLO-hopeless abort both ride these:
+/// the loop checks the policy *between* events, so a cutoff never lands
+/// mid-handler and [`EngineCore::finalize`] still stamps a clean
+/// makespan/peak/profile snapshot of everything simulated so far. A run
+/// cut short marks [`RunMetrics::aborted`]; the conservation law
+/// `finished + shed + failed == arrivals` intentionally does not hold
+/// for aborted runs (in-flight requests are simply never counted).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StopPolicy {
+    /// Stop once this many requests reached an outcome (finish, shed, or
+    /// fail). `0` = off.
+    pub max_requests: usize,
+    /// Stop before handling any event past this virtual time — the clock
+    /// never advances beyond the horizon. [`NO_TIME`] = off.
+    pub horizon_us: Us,
+    /// Abort once the running count of non-attained outcomes
+    /// (SLO-violating finishes + sheds + fails) *exceeds* this budget —
+    /// the optimizer's "attainment already hopeless" prune. The count is
+    /// monotone in events handled, so the check is an exact lower bound
+    /// on the run's final violations. `u64::MAX` = off.
+    pub miss_budget: u64,
+}
+
+impl Default for StopPolicy {
+    fn default() -> Self {
+        StopPolicy { max_requests: 0, horizon_us: NO_TIME, miss_budget: u64::MAX }
+    }
+}
+
+impl StopPolicy {
+    /// The run-to-completion default (no knob armed).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    pub fn is_off(&self) -> bool {
+        self == &Self::default()
+    }
+}
+
 /// A pull-based stream of requests in non-decreasing arrival order. The
 /// engine admits them into the arena lazily, so a million-request run
 /// holds one pending `Request`, not a million. Implementations:
@@ -77,6 +119,55 @@ impl ArrivalSource for TraceSource {
 
     fn total(&self) -> usize {
         self.trace.len()
+    }
+}
+
+/// Replay an `Arc`-shared, pre-sorted trace zero-copy — the optimizer's
+/// trace-memoization primitive. Every grid cell sharing a (workload,
+/// classes, prefix, seed) fingerprint replays the *same* materialized
+/// trace through its own `SharedTraceSource`, so a 1000-cell grid
+/// generates arrivals once instead of 1000 times. `truncated` caps the
+/// replay at a request-count horizon for successive-halving rungs: the
+/// engine sees a complete `limit`-request run (clean totals, clean
+/// finalize), not an aborted one.
+///
+/// The trace must already be in non-decreasing arrival order (the
+/// [`ArrivalSource`] contract). Callers sort once at materialization
+/// with the same stable `sort_by_key(arrival)` as [`TraceSource::new`] —
+/// bit-parity with per-cell generation is pinned in tests/optimizer.rs.
+pub struct SharedTraceSource {
+    trace: std::sync::Arc<Vec<Request>>,
+    pos: usize,
+    limit: usize,
+}
+
+impl SharedTraceSource {
+    /// Replay the whole shared trace.
+    pub fn new(trace: std::sync::Arc<Vec<Request>>) -> Self {
+        let limit = trace.len();
+        SharedTraceSource { trace, pos: 0, limit }
+    }
+
+    /// Replay only the first `limit` requests (clamped to the trace
+    /// length) — a successive-halving rung's horizon.
+    pub fn truncated(trace: std::sync::Arc<Vec<Request>>, limit: usize) -> Self {
+        let limit = limit.min(trace.len());
+        SharedTraceSource { trace, pos: 0, limit }
+    }
+}
+
+impl ArrivalSource for SharedTraceSource {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.pos >= self.limit {
+            return None;
+        }
+        let r = self.trace[self.pos];
+        self.pos += 1;
+        Some(r)
+    }
+
+    fn total(&self) -> usize {
+        self.limit
     }
 }
 
@@ -176,6 +267,10 @@ pub struct EngineCore {
     /// Arrival time of the next source request not yet admitted
     /// ([`NO_TIME`] once exhausted) — one half of the macro-step bound.
     next_arrival_at: Us,
+    /// Early-stop knobs (see [`StopPolicy`]); off by default. Drivers
+    /// copy their config's policy in right after construction, next to
+    /// `retain_records`.
+    pub stop: StopPolicy,
     pub metrics: RunMetrics,
     /// When set (`--profile-events`), the event loop times every handled
     /// event into this per-kind table; [`EngineCore::finalize`] moves it
@@ -201,6 +296,7 @@ impl EngineCore {
             outstanding: 0,
             total_expected: 0,
             next_arrival_at: NO_TIME,
+            stop: StopPolicy::off(),
             metrics: RunMetrics {
                 retain_records: true,
                 busy_us: vec![0; n_insts],
@@ -241,6 +337,26 @@ impl EngineCore {
     pub fn next_external_at(&mut self) -> Us {
         let q = self.queue.peek_at().unwrap_or(NO_TIME);
         q.min(self.next_arrival_at)
+    }
+
+    /// Whether an armed [`StopPolicy`] knob says to cut the run here,
+    /// checked between events by `run_des_source`. Three compares when
+    /// every knob is off — negligible against an event dispatch.
+    fn should_stop(&mut self) -> bool {
+        let sp = self.stop;
+        if sp.max_requests > 0 && self.total_expected - self.outstanding >= sp.max_requests {
+            return true;
+        }
+        if sp.miss_budget != u64::MAX {
+            let m = &self.metrics;
+            if (m.finished - m.attained) + m.shed + m.failed > sp.miss_budget {
+                return true;
+            }
+        }
+        if sp.horizon_us != NO_TIME && self.next_external_at() > sp.horizon_us {
+            return true;
+        }
+        false
     }
 
     /// Admit one request into the arena, recycling a finished slot when
@@ -532,6 +648,15 @@ pub fn run_des_source<H: EngineHost>(
             if core.outstanding == 0 {
                 break;
             }
+            if core.should_stop() {
+                // Cut cleanly *between* events: everything simulated so
+                // far is already folded into the metrics, and `finalize`
+                // below stamps makespan at the current clock. In-flight
+                // requests stay uncounted — `aborted` flags the partial
+                // conservation law for downstream consumers.
+                core.metrics.aborted = true;
+                break;
+            }
             #[cfg(feature = "alloc-count")]
             if steady_start.is_none() && core.outstanding * 2 <= core.total_expected {
                 steady_start = Some(crate::util::hot_allocs());
@@ -791,6 +916,112 @@ mod tests {
         assert_eq!(key(&a), key(&b), "buffer salvage must be trajectory-neutral");
         assert_eq!(a.events, b.events);
         assert_eq!(a.makespan_us, b.makespan_us);
+    }
+
+    #[test]
+    fn shared_trace_source_replays_and_truncates() {
+        let trace: Vec<Request> = (0..16).map(|i| req(100 + i, i * 2)).collect();
+        let arc = std::sync::Arc::new(trace.clone());
+
+        // Full replay is bit-identical to the owned TraceSource.
+        let run_src = |src: &mut dyn ArrivalSource| {
+            let mut host = Echo { core: EngineCore::new(1), began: false, ended: false };
+            run_des_source(&mut host, src, &mut NullObserver)
+        };
+        let a = run_src(&mut TraceSource::new(trace.clone()));
+        let b = run_src(&mut SharedTraceSource::new(arc.clone()));
+        assert_eq!(
+            a.records.iter().map(|r| (r.id, r.finished)).collect::<Vec<_>>(),
+            b.records.iter().map(|r| (r.id, r.finished)).collect::<Vec<_>>()
+        );
+        assert_eq!(a.events, b.events);
+
+        // Truncation is a *complete* short run, not an aborted one: the
+        // engine's total comes from the source, so totals and the
+        // conservation law hold at the horizon.
+        let c = run_src(&mut SharedTraceSource::truncated(arc.clone(), 5));
+        assert_eq!(c.n_finished(), 5);
+        assert!(!c.aborted);
+        let d = run_src(&mut TraceSource::new(trace[..5].to_vec()));
+        assert_eq!(
+            c.records.iter().map(|r| (r.id, r.finished)).collect::<Vec<_>>(),
+            d.records.iter().map(|r| (r.id, r.finished)).collect::<Vec<_>>()
+        );
+
+        // Limit clamps to the trace length.
+        let e = run_src(&mut SharedTraceSource::truncated(arc, 99));
+        assert_eq!(e.n_finished(), 16);
+    }
+
+    #[test]
+    fn stop_policy_max_requests_cuts_cleanly() {
+        let mut host = Echo { core: EngineCore::new(1), began: false, ended: false };
+        host.core.stop = StopPolicy { max_requests: 5, ..StopPolicy::off() };
+        let trace: Vec<Request> = (0..8).map(|i| req(i, i * 10)).collect();
+        let m = run_des(&mut host, trace, &mut NullObserver);
+        assert!(m.aborted, "a cutoff run must be flagged");
+        assert_eq!(m.n_finished(), 5, "exactly max_requests outcomes");
+        assert_eq!(m.makespan_us, 40, "clock stops at the last handled event");
+        assert!(host.ended, "EngineHost::end still runs on abort");
+    }
+
+    #[test]
+    fn stop_policy_horizon_never_advances_past_cutoff() {
+        let mut host = Echo { core: EngineCore::new(1), began: false, ended: false };
+        host.core.stop = StopPolicy { horizon_us: 25, ..StopPolicy::off() };
+        let trace: Vec<Request> = (0..8).map(|i| req(i, i * 10)).collect();
+        let m = run_des(&mut host, trace, &mut NullObserver);
+        assert!(m.aborted);
+        assert_eq!(m.n_finished(), 3, "arrivals at 0/10/20 beat the horizon");
+        assert!(m.makespan_us <= 25, "the clock never crosses the horizon");
+    }
+
+    #[test]
+    fn stop_policy_miss_budget_aborts_hopeless_runs() {
+        /// Sheds every arrival — pure non-attained outcomes.
+        struct Shedder {
+            core: EngineCore,
+        }
+        impl EngineHost for Shedder {
+            fn core_mut(&mut self) -> &mut EngineCore {
+                &mut self.core
+            }
+            fn driver_name(&self) -> &'static str {
+                "shedder"
+            }
+            fn begin(&mut self, _obs: &mut dyn Observer) {}
+            fn handle(&mut self, ev: Event, obs: &mut dyn Observer) {
+                let Event::Arrival(slot) = ev else { unreachable!() };
+                self.core.shed(slot, obs);
+            }
+            fn end(&mut self, _obs: &mut dyn Observer) {
+                self.core.stamp_alive_full_run();
+            }
+        }
+        let mut host = Shedder { core: EngineCore::new(1) };
+        host.core.stop = StopPolicy { miss_budget: 3, ..StopPolicy::off() };
+        let trace: Vec<Request> = (0..32).map(|i| req(i, i)).collect();
+        let m = run_des(&mut host, trace, &mut NullObserver);
+        assert!(m.aborted, "budget exceeded must abort");
+        assert_eq!(m.shed, 4, "aborts on the first outcome past the budget");
+    }
+
+    #[test]
+    fn stop_policy_off_is_the_default_and_changes_nothing() {
+        assert!(StopPolicy::default().is_off());
+        let run = |stop: StopPolicy| {
+            let mut host = Echo { core: EngineCore::new(1), began: false, ended: false };
+            host.core.stop = stop;
+            let trace: Vec<Request> = (0..12).map(|i| req(i, i * 7)).collect();
+            run_des(&mut host, trace, &mut NullObserver)
+        };
+        let a = run(StopPolicy::off());
+        // Generous armed knobs that never fire leave the run untouched.
+        let b = run(StopPolicy { max_requests: 1000, horizon_us: 1_000_000, miss_budget: 1000 });
+        assert!(!a.aborted && !b.aborted);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.n_finished(), 12);
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod engine;
 
 pub use engine::{
     macro_chain, run_des, run_des_source, ArrivalSource, ColdState, EngineCore, EngineHost,
-    HotState, TraceSource, NO_TIME,
+    HotState, SharedTraceSource, StopPolicy, TraceSource, NO_TIME,
 };
 
 use std::cmp::Reverse;

@@ -118,9 +118,24 @@ pub struct CellResult {
 
 impl SweepCell {
     /// Run this cell to completion (deterministic given the scenario).
-    /// Panics on an unknown driver key — sweep grids are authored in
-    /// code, so a bad key is a bug, not an input error.
-    pub fn run(self) -> CellResult {
+    /// Per-request records are forced *off*: a grid holds O(cells)
+    /// results, and every summary the CSV/JSON emitters read comes from
+    /// the streaming histograms, so keeping per-request vectors alive
+    /// across the whole sweep would cost O(cells × requests) memory for
+    /// nothing. The virtual-time trajectory is identical either way (the
+    /// knob only controls retention); use [`SweepCell::run_full`] when the
+    /// caller genuinely needs the records. Panics on an unknown driver
+    /// key — sweep grids are authored in code, so a bad key is a bug, not
+    /// an input error.
+    pub fn run(mut self) -> CellResult {
+        self.scenario.records = false;
+        self.run_full()
+    }
+
+    /// [`SweepCell::run`] without the record override — retention follows
+    /// the scenario's own `records` knob (record-level parity tests and
+    /// per-request figure post-processing go through here).
+    pub fn run_full(self) -> CellResult {
         let report = self
             .scenario
             .run()
@@ -258,7 +273,9 @@ mod tests {
                 a.label
             );
             assert_eq!(a.report.metrics.events, b.report.metrics.events, "{}", a.label);
-            assert_eq!(a.report.metrics.records.len(), b.report.metrics.records.len());
+            assert_eq!(a.report.metrics.n_finished(), b.report.metrics.n_finished());
+            // the sweep path drops per-request records — O(cells) memory
+            assert!(a.report.metrics.records.is_empty(), "{}", a.label);
         }
     }
 
@@ -290,8 +307,8 @@ mod tests {
                 })
                 .collect()
         };
-        let serial: Vec<CellResult> = mk_cells().into_iter().map(SweepCell::run).collect();
-        let sharded = run_cells(mk_cells(), 2);
+        let serial: Vec<CellResult> = mk_cells().into_iter().map(SweepCell::run_full).collect();
+        let sharded = parallel_map(mk_cells(), 2, SweepCell::run_full);
         assert_eq!(serial.len(), sharded.len());
         for (a, b) in serial.iter().zip(sharded.iter()) {
             assert_eq!(a.label, b.label);
@@ -342,8 +359,8 @@ mod tests {
         ];
         let res = run_cells(cells, 2);
         assert_eq!(res[0].report.driver, "hybrid");
-        assert_eq!(res[0].report.metrics.records.len(), 24);
-        assert_eq!(res[1].report.metrics.records.len(), 24);
+        assert_eq!(res[0].report.metrics.n_finished(), 24);
+        assert_eq!(res[1].report.metrics.n_finished(), 24);
         assert!(res[1].report.metrics.scale_ups >= 1, "elastic cell must scale");
     }
 
@@ -401,7 +418,7 @@ mod tests {
                 .build(),
         )];
         let res = run_cells(cells, 2);
-        assert_eq!(res[0].report.metrics.records.len(), 16);
+        assert_eq!(res[0].report.metrics.n_finished(), 16);
         assert_eq!(res[0].report.driver, "vllm");
     }
 

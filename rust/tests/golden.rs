@@ -255,7 +255,81 @@ fn shipped_scenario_specs_round_trip_and_resolve() {
         registry.resolve(&sc).unwrap_or_else(|e| panic!("{path_str}: {e}"));
         n += 1;
     }
-    assert!(n >= 22, "expected the shipped scenario set (incl. the prefix specs), found {n} specs");
+    assert!(n >= 23, "expected the shipped scenario set (incl. the optimizer spec), found {n} specs");
+}
+
+/// The optimizer tentpole pin: the shipped search spec — clamped to a
+/// fast horizon — must produce the same frontier, recommendation, and
+/// work accounting forever. Own golden file, same bless-on-first-run
+/// protocol as `tests/golden_e2e.txt`; and the result must not depend on
+/// the worker count (the search is wave-synchronized, results come back
+/// in input order).
+#[test]
+fn optimizer_frontier_is_deterministic_and_pinned() {
+    const OPT_GOLDEN_PATH: &str = "tests/golden_optimizer.txt";
+    let path = repo_root().join("scenarios/optimize_mixed.json");
+    let mut sc =
+        Scenario::load(path.to_str().unwrap()).expect("optimize_mixed spec parses");
+    sc.clamp_requests(96);
+    let a = tetri_infer::optimizer::optimize(&sc, 2).expect("search runs");
+    let b = tetri_infer::optimizer::optimize(&sc, 4).expect("search runs");
+    assert_eq!(
+        a.to_json().dump(),
+        b.to_json().dump(),
+        "frontier JSON must not depend on the worker count"
+    );
+    assert_eq!(a.frontier_csv(), b.frontier_csv());
+
+    let mut body = String::new();
+    writeln!(body, "spec=optimize_mixed requests=96").unwrap();
+    for r in &a.frontier {
+        writeln!(body, "frontier: {}", r.label).unwrap();
+    }
+    writeln!(
+        body,
+        "recommended: {}",
+        a.recommended_cell().map(|r| r.label.as_str()).unwrap_or("none")
+    )
+    .unwrap();
+    let st = &a.stats;
+    writeln!(
+        body,
+        "stats: grid={} rungs={} halved={} slo_pruned={} dominance_pruned={} full_runs={} \
+         events={}",
+        st.grid_cells,
+        st.rungs,
+        st.halving_discarded,
+        st.pruned_slo,
+        st.pruned_dominance,
+        st.full_runs,
+        st.events_simulated
+    )
+    .unwrap();
+
+    // golden-independent sanity: the grid expanded fully and the search
+    // did strictly less event work than the exhaustive sweep estimate
+    assert_eq!(st.grid_cells, 36, "3 prefill × 3 decode × 2 chunk × 2 policy");
+    assert!(!a.frontier.is_empty(), "some topology must meet the SLO floor");
+    assert!(
+        st.fraction_of_exhaustive() < 1.0,
+        "halving must beat the exhaustive sweep (got {})",
+        st.fraction_of_exhaustive()
+    );
+
+    match std::fs::read_to_string(OPT_GOLDEN_PATH) {
+        Ok(golden) => {
+            assert_eq!(
+                golden, body,
+                "optimizer frontier drifted from {OPT_GOLDEN_PATH}.\n\
+                 If the change is intentional (search semantics changed), delete\n\
+                 the file, re-run `cargo test`, and commit the re-blessed version."
+            );
+        }
+        Err(_) => {
+            std::fs::write(OPT_GOLDEN_PATH, &body).expect("blessing optimizer golden");
+            eprintln!("golden: blessed {OPT_GOLDEN_PATH} (first run) — commit it");
+        }
+    }
 }
 
 /// Assert two runs produced identical per-request trajectories: same

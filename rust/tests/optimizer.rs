@@ -1,0 +1,199 @@
+//! Integration tests for the goodput-per-dollar optimizer (the PR-9
+//! tentpole), covering the three soundness claims the search rests on:
+//!
+//!  1. **Trace-memoization parity** — replaying one shared, pre-sorted
+//!     `Arc<Vec<Request>>` through `SharedTraceSource` is bit-identical
+//!     to each cell generating and streaming its own arrivals, for every
+//!     builtin driver (tetri / vllm / hybrid). If this breaks, the
+//!     optimizer silently searches a *different* simulation than the one
+//!     `sim run` would execute.
+//!  2. **Determinism** — same spec + seed ⇒ byte-identical frontier JSON
+//!     and CSV, at any worker count. The finals stage is wave-barriered
+//!     precisely so the dominance incumbent never depends on thread
+//!     scheduling.
+//!  3. **Pruning soundness** — under a zero-tolerance config
+//!     (keep_fraction 1.0 so halving discards nothing, min_attainment
+//!     0.0 so no SLO aborts, prune_slack 0.0), successive halving plus
+//!     dominance pruning must still recommend a cell whose full-run
+//!     goodput/$ equals the exhaustive-sweep winner's. Hand-rolled
+//!     property loop in the style of tests/proptest_slo.rs (Pcg-seeded,
+//!     no external crates).
+
+use std::sync::Arc;
+
+use tetri_infer::api::{Driver as _, NullObserver, OptimizeGrid, Registry, Scenario};
+use tetri_infer::metrics::RunMetrics;
+use tetri_infer::optimizer::{self, value_of};
+use tetri_infer::sim::SharedTraceSource;
+use tetri_infer::sweep::run_cells;
+use tetri_infer::util::{repo_root, Pcg};
+use tetri_infer::workload::WorkloadKind;
+
+/// `Request` / `RequestRecord` deliberately do not implement `PartialEq`,
+/// so parity is asserted on the per-request field tuples that matter.
+fn assert_metrics_identical(tag: &str, a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(a.events, b.events, "{tag}: event counts diverged");
+    assert_eq!(a.makespan_us, b.makespan_us, "{tag}: makespan diverged");
+    assert_eq!(a.attained, b.attained, "{tag}: SLO attainment diverged");
+    assert_eq!(a.records.len(), b.records.len(), "{tag}: record counts diverged");
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(
+            (x.id, x.arrival, x.first_token, x.finished),
+            (y.id, y.arrival, y.first_token, y.finished),
+            "{tag}: per-request timeline diverged"
+        );
+    }
+}
+
+/// Run `sc` the ordinary way (streamed arrival source, as `sim run` and
+/// the exhaustive sweep do) and via a shared pre-sorted trace (as every
+/// optimizer cell does), and demand bit-identical metrics.
+fn assert_shared_trace_parity(tag: &str, sc: &Scenario) {
+    let fresh = sc.run().unwrap_or_else(|e| panic!("{tag}: fresh run failed: {e}"));
+
+    let mut trace = sc.trace();
+    trace.sort_by_key(|r| r.arrival); // same stable sort as optimizer::TraceCache
+    let shared = Arc::new(trace);
+    let driver = Registry::builtin()
+        .resolve(sc)
+        .unwrap_or_else(|e| panic!("{tag}: driver resolve failed: {e}"));
+    let mut src = SharedTraceSource::new(shared);
+    let replay = driver.run_source(&mut src, &mut NullObserver);
+
+    assert!(!fresh.metrics.aborted && !replay.metrics.aborted, "{tag}: no stop policy armed");
+    assert_metrics_identical(tag, &fresh.metrics, &replay.metrics);
+}
+
+#[test]
+fn shared_trace_replay_is_bit_identical_across_all_drivers() {
+    for driver in ["tetri", "vllm", "hybrid"] {
+        let mut sc = Scenario::builder()
+            .name(&format!("parity-{driver}"))
+            .driver(driver)
+            .workload(WorkloadKind::Mixed)
+            .requests(96)
+            .rate(12.0)
+            .seed(42)
+            .topology(2, 2)
+            .build();
+        sc.records = true;
+        assert_shared_trace_parity(driver, &sc);
+    }
+
+    // And the shipped classed search spec itself (SLO classes + admission),
+    // since that is exactly what `sim optimize` replays through the cache.
+    let path = repo_root().join("scenarios/optimize_mixed.json");
+    let mut sc = Scenario::load(path.to_str().unwrap()).expect("optimize_mixed parses");
+    sc.clamp_requests(48);
+    sc.records = true;
+    sc.optimize = None; // parity is about the run, not the search
+    assert_shared_trace_parity("optimize_mixed", &sc);
+}
+
+#[test]
+fn optimizer_output_is_byte_identical_across_runs_and_worker_counts() {
+    let path = repo_root().join("scenarios/optimize_mixed.json");
+    let mut sc = Scenario::load(path.to_str().unwrap()).expect("optimize_mixed parses");
+    sc.clamp_requests(64);
+
+    let runs: Vec<_> = [1, 1, 3]
+        .iter()
+        .map(|&w| optimizer::optimize(&sc, w).expect("search runs"))
+        .collect();
+    let json0 = runs[0].to_json().dump();
+    let csv0 = runs[0].frontier_csv();
+    assert!(!json0.is_empty() && !csv0.is_empty());
+    for (i, r) in runs.iter().enumerate().skip(1) {
+        assert_eq!(json0, r.to_json().dump(), "run {i} JSON drifted");
+        assert_eq!(csv0, r.frontier_csv(), "run {i} CSV drifted");
+    }
+}
+
+/// Zero-tolerance configs disable everything except dominance pruning, so
+/// this is the direct test that the upper bound used to skip finalist
+/// cells is a true bound: the exhaustive winner's goodput/$ must always
+/// be the recommended value.
+#[test]
+fn halving_and_pruning_never_lose_the_exhaustive_winner() {
+    let mut rng = Pcg::new(0x0917);
+    for round in 0..6u64 {
+        let driver = ["tetri", "vllm", "hybrid"][rng.index(3)];
+        let workload =
+            [WorkloadKind::Mixed, WorkloadKind::Lphd, WorkloadKind::Lpld][rng.index(3)];
+        let requests = 48 + rng.index(49); // 48..=96
+        let rate = 4.0 + 12.0 * rng.f64();
+        let grid = OptimizeGrid {
+            prefill: vec![1, 1 + rng.index(3)],
+            decode: vec![1, 2 + rng.index(3)],
+            chunk: if rng.index(2) == 0 { vec![256] } else { vec![256, 512] },
+            start_fraction: 0.25,
+            keep_fraction: 1.0,  // halving keeps every cell alive
+            min_attainment: 0.0, // no SLO aborts
+            prune: true,         // dominance pruning stays ON — the thing under test
+            prune_slack: 0.0,
+            ..OptimizeGrid::default()
+        };
+        let sc = Scenario::builder()
+            .name(&format!("prop-{round}"))
+            .driver(driver)
+            .workload(workload)
+            .requests(requests)
+            .rate(rate)
+            .seed(0xBEEF ^ round)
+            .optimize(Some(grid))
+            .build();
+
+        // Ground truth: run every expanded cell at full length.
+        let cells = optimizer::expand(&sc, sc.optimize.as_ref().unwrap());
+        let exhaustive = run_cells(cells, 2);
+        let best = exhaustive
+            .iter()
+            .map(|c| value_of(&c.report.metrics))
+            .fold(f64::MIN, f64::max);
+        assert!(best > 0.0, "round {round} ({driver}): exhaustive sweep produced no goodput");
+
+        let res = optimizer::optimize(&sc, 2)
+            .unwrap_or_else(|e| panic!("round {round} ({driver}): search failed: {e}"));
+        assert_eq!(
+            res.stats.halving_discarded, 0,
+            "round {round}: keep_fraction 1.0 must discard nothing"
+        );
+        assert_eq!(res.stats.pruned_slo, 0, "round {round}: min_attainment 0 must abort nothing");
+        let rec = res
+            .recommended_cell()
+            .unwrap_or_else(|| panic!("round {round} ({driver}): no recommendation"));
+        let rec_value = value_of(&rec.report.metrics);
+        // Exact f64 match is intended: the winner's full run is replayed
+        // from the same shared trace, so its value is bit-identical to the
+        // exhaustive run's (parity test above). A tiny relative epsilon
+        // only papers over platform-specific float formatting, not logic.
+        let tol = 1e-12 * best.abs().max(1.0);
+        assert!(
+            (rec_value - best).abs() <= tol,
+            "round {round} ({driver}): dominance pruning lost the exhaustive winner: \
+             recommended {rec_value} ({}), exhaustive best {best}",
+            rec.label
+        );
+
+        // The frontier itself must be mutually non-dominated.
+        let pts: Vec<(f64, f64)> = res
+            .frontier
+            .iter()
+            .map(|c| {
+                (c.report.metrics.goodput_rps(), optimizer::cost_per_hr(&c.report.metrics))
+            })
+            .collect();
+        for (i, &(gi, ci)) in pts.iter().enumerate() {
+            for (j, &(gj, cj)) in pts.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dominates = gj >= gi && cj <= ci && (gj > gi || cj < ci);
+                assert!(
+                    !dominates,
+                    "round {round}: frontier point {i} is dominated by {j}"
+                );
+            }
+        }
+    }
+}

@@ -18,6 +18,9 @@ echo "bench provenance: $(git rev-parse --short HEAD 2>/dev/null || echo unknown
 cargo bench --bench scheduler
 cargo bench --bench cluster
 cargo bench --bench engine
+# The optimizer bench merges the "optimizer" section (search cells/sec +
+# fraction-of-exhaustive) and hard-asserts the < 0.5 work bound.
+cargo bench --bench optimizer
 cd ..
 echo "perf baselines:"
 ls -l BENCH_sched.json BENCH_cluster.json

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Bench-regression gate: re-run the engine bench at a reduced request
 # count and compare its scale-run events/sec against the committed
-# BENCH_cluster.json baseline. The compare itself lives in
-# benches/engine.rs (tolerance band via BENCH_TOLERANCE, default 0.25).
+# BENCH_cluster.json baseline, then the optimizer bench (reduced
+# per-cell horizon) against the committed search cells/sec. The compares
+# themselves live in benches/engine.rs and benches/optimizer.rs
+# (tolerance band via BENCH_TOLERANCE, default 0.25).
 # Warn-only by default — committed numbers from a different
 # host/toolchain are not comparable; set BENCH_GATE_STRICT=1 once a
 # baseline has been blessed on the CI host to turn a regression into a
@@ -26,4 +28,6 @@ if [ -f "${baseline}" ]; then
   cp "${baseline}" "${backup}"
 fi
 ( cd rust && ENGINE_BENCH_REQUESTS="${requests}" cargo bench --bench engine )
+opt_requests="${OPTIMIZER_BENCH_REQUESTS:-96}"
+( cd rust && OPTIMIZER_BENCH_REQUESTS="${opt_requests}" cargo bench --bench optimizer )
 echo "bench gate: done (strict=${BENCH_GATE_STRICT:-0}, tolerance=${BENCH_TOLERANCE:-0.25})"

@@ -39,8 +39,8 @@ for spec in ../scenarios/*.json; do
   cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --requests 8 >/dev/null
   specs_run=$((specs_run + 1))
 done
-if [ "${specs_run}" -lt 22 ]; then
-  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 22)" >&2
+if [ "${specs_run}" -lt 23 ]; then
+  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 23)" >&2
   exit 1
 fi
 
@@ -86,6 +86,14 @@ echo "prefix smoke: CLI --prefix flag"
 cargo run --release --quiet --bin tetri -- sim --workload HPLD --requests 24 --rate 24 \
   --prefill 2 --decode 2 --prefix n_prefixes=8,prefix_len=512,zipf=1.0 \
   --no-baseline >/dev/null
+
+# Optimizer smoke: the topology search CLI must run the shipped search
+# spec end to end (short horizon, 2 workers) and emit a frontier +
+# recommendation deterministically — the full pins live in
+# tests/golden.rs and tests/optimizer.rs; this guards the CLI spelling.
+echo "optimizer smoke: sim optimize --spec scenarios/optimize_mixed.json"
+cargo run --release --quiet --bin tetri -- sim optimize \
+  --spec ../scenarios/optimize_mixed.json --requests 24 --workers 2 >/dev/null
 
 echo "chaos smoke: CLI --fault flag"
 cargo run --release --quiet --bin tetri -- sim --workload Mixed --requests 24 --rate 24 \

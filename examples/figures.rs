@@ -671,6 +671,63 @@ fn pareto() {
     out_json("pareto", &res.to_json());
 }
 
+// ------------------------------------- telemetry (latency attribution)
+
+/// The observability figure (DESIGN.md §Telemetry): "where did my latency
+/// go?" — the shipped telemetry demo plus the overload spec under every
+/// driver, each with the span machine armed. Prints each run's per-phase
+/// breakdown rows (queue vs prefill vs transfer vs decode, % of request
+/// time), writes the demo's sampler series CSV and its Perfetto trace
+/// (open in ui.perfetto.dev), and results/telemetry.{txt,json}.
+fn telemetry() {
+    use tetri_infer::api::TelemetrySpec;
+    let mut s = String::new();
+    writeln!(s, "== telemetry: per-phase latency attribution (spans + sampler) ==").unwrap();
+    let demo_path = tetri_infer::util::repo_root().join("scenarios/telemetry_demo.json");
+    let demo = Scenario::load(demo_path.to_str().unwrap()).expect("shipped telemetry spec parses");
+    let over_path = tetri_infer::util::repo_root().join("scenarios/slo_overload.json");
+    let over = Scenario::load(over_path.to_str().unwrap()).expect("shipped SLO spec parses");
+    let mut cells = vec![SweepCell::new("telemetry_demo/tetri".to_string(), demo)];
+    for driver in ["tetri", "vllm", "hybrid"] {
+        cells.push(SweepCell::new(
+            format!("slo_overload/{driver}"),
+            Scenario {
+                driver: driver.to_string(),
+                telemetry: Some(TelemetrySpec { sample_ms: 20.0, max_samples: 1024, trace: false }),
+                ..over.clone()
+            },
+        ));
+    }
+    let results = run_cells(cells, default_workers());
+    for cell in &results {
+        let t = cell.report.telemetry.as_ref().expect("armed cells distill a summary");
+        writeln!(
+            s,
+            "  {:<24} {} spans, {} samples, {:.1} ms of request time accounted",
+            cell.label,
+            t.spans,
+            t.series.len(),
+            t.accounted_ms(),
+        )
+        .unwrap();
+        for line in t.breakdown_lines() {
+            writeln!(s, "    {line}").unwrap();
+        }
+    }
+    // the demo spec arms trace=true: keep its Perfetto export and series
+    // around next to the figure text (the same files `tetri sim --trace
+    // --series` would write)
+    let demo_t = results[0].report.telemetry.as_ref().expect("demo cell is armed");
+    fs::create_dir_all("results").ok();
+    fs::write("results/telemetry.series.csv", demo_t.series_csv()).unwrap();
+    let trace = demo_t.trace.as_ref().expect("telemetry_demo.json arms trace");
+    fs::write("results/telemetry.trace.json", trace.dump()).unwrap();
+    writeln!(s, "  (trace: results/telemetry.trace.json — open in ui.perfetto.dev;").unwrap();
+    writeln!(s, "   series: results/telemetry.series.csv — queue/KV/shed over virtual time)").unwrap();
+    out("telemetry", &s);
+    out_json("telemetry", &results_json(&results));
+}
+
 // ------------------------------------------------- ablation (§3.3.4 disc.)
 
 fn ablation() {
@@ -798,6 +855,9 @@ fn main() {
     }
     if want("pareto") {
         tasks.push(Box::new(pareto));
+    }
+    if want("telemetry") {
+        tasks.push(Box::new(telemetry));
     }
     if want("ablation") {
         tasks.push(Box::new(ablation));

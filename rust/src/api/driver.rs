@@ -84,6 +84,7 @@ impl Driver for ClusterDriver {
             scenario: self.scenario.clone(),
             metrics,
             wall_secs: t.elapsed().as_secs_f64(),
+            telemetry: None,
         }
     }
 }
@@ -117,6 +118,7 @@ impl Driver for BaselineDriver {
             scenario: self.scenario.clone(),
             metrics,
             wall_secs: t.elapsed().as_secs_f64(),
+            telemetry: None,
         }
     }
 }

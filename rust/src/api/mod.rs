@@ -39,15 +39,16 @@ pub mod scenario;
 
 pub use driver::{BaselineDriver, ClusterDriver, Driver, Registry};
 pub use observer::{
-    NullObserver, Observer, ProgressObserver, QueueSample, Span, SpanKind, TimelineObserver,
+    NullObserver, Observer, ProgressObserver, QueueSample, Span, SpanKind, Tee, TimelineObserver,
 };
 pub use report::{metrics_json, Report};
 pub use scenario::{
     class_keys, decode_policy_key, dispatch_key, elastic_keys, fault_event_keys, fault_keys,
     granularity_key, parse_decode_policy, parse_dispatch, parse_granularity, parse_link,
-    optimize_keys, parse_predictor, parse_prefill_policy, parse_prefix_flag, parse_workload,
-    phase_keys, predictor_key, prefill_policy_key, prefix_keys, spec_keys, value_vocab,
-    ElasticSpec, LinkSpec, OptimizeGrid, Phase, PrefixSpec, Scenario, ScenarioBuilder,
+    optimize_keys, parse_predictor, parse_prefill_policy, parse_prefix_flag,
+    parse_telemetry_flag, parse_workload, phase_keys, predictor_key, prefill_policy_key,
+    prefix_keys, spec_keys, telemetry_keys, value_vocab, ElasticSpec, LinkSpec, OptimizeGrid,
+    Phase, PrefixSpec, Scenario, ScenarioBuilder, TelemetrySpec,
 };
 
 pub use crate::fault::{

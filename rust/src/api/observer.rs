@@ -74,6 +74,164 @@ pub trait Observer {
     /// queue with backoff), `"resend"` (an in-flight KV transfer hit a
     /// link outage and was re-sent). Fault-free runs never fire this.
     fn on_recovery(&mut self, _now: Us, _kind: &'static str, _instance: Option<usize>) {}
+
+    /// Sequential-mode length prediction for original request `req` was
+    /// issued; the result lands at `now + dur` and only then can the
+    /// request be scheduled. Parallel/disabled predictor modes never
+    /// fire this (prediction co-runs with prefill, §3.3.2).
+    fn on_predict(&mut self, _now: Us, _req: ReqId, _dur: Us) {}
+
+    /// Original request `req` was included in its first prefill
+    /// chunk (or in the prefill side of its first coupled iteration) on
+    /// `instance` — the queue→prefill phase boundary.
+    fn on_prefill_start(&mut self, _now: Us, _instance: usize, _req: ReqId) {}
+
+    /// Original request `req`'s prompt completed on `instance` — its
+    /// first token exists and its KV is ready to dispatch. Fires for
+    /// every completed prefill, including single-token requests that
+    /// finish right here.
+    fn on_prefill_finish(&mut self, _now: Us, _instance: usize, _req: ReqId) {}
+
+    /// Original request `req` joined the decode batch on `instance`
+    /// (post-transfer on disaggregated fleets; at the prefilling
+    /// iteration's end on coupled instances).
+    fn on_decode_enter(&mut self, _now: Us, _instance: usize, _req: ReqId) {}
+
+    /// Original request `req` could not be dispatched to any decode
+    /// instance and was parked pending capacity (degraded cluster).
+    /// May re-fire at every monitor-tick retry while parked.
+    fn on_parked(&mut self, _now: Us, _req: ReqId) {}
+
+    /// Original request `req` was lost to a fault and re-queued with
+    /// backoff; it re-enters the entry router at `until`. Fires right
+    /// before the matching `on_recovery(_, "requeue", _)`.
+    fn on_backoff(&mut self, _now: Us, _req: ReqId, _until: Us) {}
+
+    /// A request exhausted its retry budget and failed terminally.
+    /// Fires right after the matching `on_fault(_, "request_failed", _)`
+    /// with the full request attached.
+    fn on_request_failed(&mut self, _now: Us, _req: &Request) {}
+
+    /// The prefix cache was consulted for original request `req`;
+    /// `hit_tokens` prompt tokens were served from cache (0 = miss).
+    /// Cache-off runs never fire this.
+    fn on_cache(&mut self, _now: Us, _req: ReqId, _hit_tokens: u32) {}
+}
+
+/// Forwards every hook to two observers, in order — how the scenario
+/// runner composes the telemetry collector with the caller's observer
+/// without either knowing about the other.
+pub struct Tee<'a> {
+    pub first: &'a mut dyn Observer,
+    pub second: &'a mut dyn Observer,
+}
+
+impl<'a> Tee<'a> {
+    pub fn new(first: &'a mut dyn Observer, second: &'a mut dyn Observer) -> Self {
+        Tee { first, second }
+    }
+}
+
+impl Observer for Tee<'_> {
+    fn on_arrival(&mut self, now: Us, req: &Request) {
+        self.first.on_arrival(now, req);
+        self.second.on_arrival(now, req);
+    }
+
+    fn on_chunk(&mut self, now: Us, instance: usize, tokens: u32, pad: u32, dur: Us) {
+        self.first.on_chunk(now, instance, tokens, pad, dur);
+        self.second.on_chunk(now, instance, tokens, pad, dur);
+    }
+
+    fn on_transfer(&mut self, now: Us, instance: usize, req: ReqId, tokens: u32, dur: Us) {
+        self.first.on_transfer(now, instance, req, tokens, dur);
+        self.second.on_transfer(now, instance, req, tokens, dur);
+    }
+
+    fn on_decode_iter(&mut self, now: Us, instance: usize, batch: u32, kv_tokens: u64, dur: Us) {
+        self.first.on_decode_iter(now, instance, batch, kv_tokens, dur);
+        self.second.on_decode_iter(now, instance, batch, kv_tokens, dur);
+    }
+
+    fn on_flip(&mut self, now: Us, instance: usize, to: Role, dur: Us) {
+        self.first.on_flip(now, instance, to, dur);
+        self.second.on_flip(now, instance, to, dur);
+    }
+
+    fn on_scale(&mut self, now: Us, instance: usize, role: Role, added: bool) {
+        self.first.on_scale(now, instance, role, added);
+        self.second.on_scale(now, instance, role, added);
+    }
+
+    fn on_finish(&mut self, now: Us, rec: &RequestRecord) {
+        self.first.on_finish(now, rec);
+        self.second.on_finish(now, rec);
+    }
+
+    fn on_shed(&mut self, now: Us, req: &Request) {
+        self.first.on_shed(now, req);
+        self.second.on_shed(now, req);
+    }
+
+    fn on_violation(&mut self, now: Us, rec: &RequestRecord, ttft: bool, tpot: bool) {
+        self.first.on_violation(now, rec, ttft, tpot);
+        self.second.on_violation(now, rec, ttft, tpot);
+    }
+
+    fn on_monitor(&mut self, now: Us, loads: &[DecodeLoad]) {
+        self.first.on_monitor(now, loads);
+        self.second.on_monitor(now, loads);
+    }
+
+    fn on_fault(&mut self, now: Us, kind: &'static str, instance: Option<usize>) {
+        self.first.on_fault(now, kind, instance);
+        self.second.on_fault(now, kind, instance);
+    }
+
+    fn on_recovery(&mut self, now: Us, kind: &'static str, instance: Option<usize>) {
+        self.first.on_recovery(now, kind, instance);
+        self.second.on_recovery(now, kind, instance);
+    }
+
+    fn on_predict(&mut self, now: Us, req: ReqId, dur: Us) {
+        self.first.on_predict(now, req, dur);
+        self.second.on_predict(now, req, dur);
+    }
+
+    fn on_prefill_start(&mut self, now: Us, instance: usize, req: ReqId) {
+        self.first.on_prefill_start(now, instance, req);
+        self.second.on_prefill_start(now, instance, req);
+    }
+
+    fn on_prefill_finish(&mut self, now: Us, instance: usize, req: ReqId) {
+        self.first.on_prefill_finish(now, instance, req);
+        self.second.on_prefill_finish(now, instance, req);
+    }
+
+    fn on_decode_enter(&mut self, now: Us, instance: usize, req: ReqId) {
+        self.first.on_decode_enter(now, instance, req);
+        self.second.on_decode_enter(now, instance, req);
+    }
+
+    fn on_parked(&mut self, now: Us, req: ReqId) {
+        self.first.on_parked(now, req);
+        self.second.on_parked(now, req);
+    }
+
+    fn on_backoff(&mut self, now: Us, req: ReqId, until: Us) {
+        self.first.on_backoff(now, req, until);
+        self.second.on_backoff(now, req, until);
+    }
+
+    fn on_request_failed(&mut self, now: Us, req: &Request) {
+        self.first.on_request_failed(now, req);
+        self.second.on_request_failed(now, req);
+    }
+
+    fn on_cache(&mut self, now: Us, req: ReqId, hit_tokens: u32) {
+        self.first.on_cache(now, req, hit_tokens);
+        self.second.on_cache(now, req, hit_tokens);
+    }
 }
 
 /// The do-nothing observer: what `run_cluster`/`run_baseline` attach.
@@ -124,6 +282,21 @@ pub struct QueueSample {
     pub n_light: u32,
 }
 
+impl QueueSample {
+    /// The one projection from a monitor broadcast entry to a sample —
+    /// shared by [`TimelineObserver`] and the telemetry series sampler
+    /// so the two can never drift on field semantics.
+    pub fn from_load(at: Us, l: &DecodeLoad) -> Self {
+        QueueSample {
+            at,
+            instance: l.instance,
+            queue_len: l.queue_len,
+            n_heavy: l.n_heavy,
+            n_light: l.n_light,
+        }
+    }
+}
+
 /// Records per-instance busy/queue traces — the raw series behind
 /// Figure-4-style interference plots. Also subsumes the driver's old
 /// ad-hoc chunk counters (`total_chunks`/`total_pad_tokens` lived on the
@@ -134,6 +307,13 @@ pub struct TimelineObserver {
     pub queue: Vec<QueueSample>,
     /// (finish time, original request id).
     pub finished: Vec<(Us, ReqId)>,
+    /// (arrival time, original request id) — timestamped, so the trace
+    /// exporter can reuse the timeline as a span source.
+    pub arrival_events: Vec<(Us, ReqId)>,
+    /// (shed time, original request id).
+    pub shed_events: Vec<(Us, ReqId)>,
+    /// (violation time, original request id, blew_ttft, blew_tpot).
+    pub violation_events: Vec<(Us, ReqId, bool, bool)>,
     pub arrivals: u64,
     pub chunks: u64,
     pub pad_tokens: u64,
@@ -221,8 +401,19 @@ impl TimelineObserver {
                 ])
             })
             .collect();
+        let stamped = |evs: &[(Us, ReqId)]| -> Json {
+            Json::from(
+                evs.iter()
+                    .map(|&(at, id)| {
+                        Json::obj([("at_us", Json::from(at)), ("req", Json::from(id))])
+                    })
+                    .collect::<Vec<Json>>(),
+            )
+        };
         Json::obj([
             ("arrivals", Json::from(self.arrivals)),
+            ("arrival_events", stamped(&self.arrival_events)),
+            ("shed_events", stamped(&self.shed_events)),
             ("chunks", Json::from(self.chunks)),
             ("pad_tokens", Json::from(self.pad_tokens)),
             ("transfers", Json::from(self.transfers)),
@@ -241,8 +432,9 @@ impl TimelineObserver {
 }
 
 impl Observer for TimelineObserver {
-    fn on_arrival(&mut self, _now: Us, _req: &Request) {
+    fn on_arrival(&mut self, now: Us, req: &Request) {
         self.arrivals += 1;
+        self.arrival_events.push((now, req.id));
     }
 
     fn on_chunk(&mut self, now: Us, instance: usize, tokens: u32, pad: u32, dur: Us) {
@@ -296,12 +488,14 @@ impl Observer for TimelineObserver {
         self.finished.push((now, rec.id));
     }
 
-    fn on_shed(&mut self, _now: Us, _req: &Request) {
+    fn on_shed(&mut self, now: Us, req: &Request) {
         self.sheds += 1;
+        self.shed_events.push((now, req.id));
     }
 
-    fn on_violation(&mut self, _now: Us, _rec: &RequestRecord, _ttft: bool, _tpot: bool) {
+    fn on_violation(&mut self, now: Us, rec: &RequestRecord, ttft: bool, tpot: bool) {
         self.violations += 1;
+        self.violation_events.push((now, rec.id, ttft, tpot));
     }
 
     fn on_fault(&mut self, _now: Us, _kind: &'static str, _instance: Option<usize>) {
@@ -314,49 +508,73 @@ impl Observer for TimelineObserver {
 
     fn on_monitor(&mut self, now: Us, loads: &[DecodeLoad]) {
         for l in loads {
-            self.queue.push(QueueSample {
-                at: now,
-                instance: l.instance,
-                queue_len: l.queue_len,
-                n_heavy: l.n_heavy,
-                n_light: l.n_light,
-            });
+            self.queue.push(QueueSample::from_load(now, l));
         }
     }
 }
 
-/// Prints coarse progress to stderr as requests finish — for long
-/// interactive runs (`tetri sim --progress`).
+/// Prints coarse progress to stderr as requests resolve — for long
+/// interactive runs (`tetri sim --progress`). Every terminal outcome
+/// advances progress: finishes, admission sheds, and terminal failures
+/// all count, so a heavy-shed overload run ticks instead of appearing
+/// hung at the last finished count.
 #[derive(Debug)]
 pub struct ProgressObserver {
     total: usize,
     done: usize,
+    shed: usize,
+    failed: usize,
     every: usize,
 }
 
 impl ProgressObserver {
-    /// Report every `every` completions (and at the end). `every` is
+    /// Report every `every` resolutions (and at the end). `every` is
     /// clamped to at least 1.
     pub fn new(total: usize, every: usize) -> Self {
-        ProgressObserver { total, done: 0, every: every.max(1) }
+        ProgressObserver { total, done: 0, shed: 0, failed: 0, every: every.max(1) }
     }
 
+    /// Requests that finished normally.
     pub fn done(&self) -> usize {
         self.done
+    }
+
+    /// Every resolved request: finished + shed + failed — what progress
+    /// is measured against.
+    pub fn resolved(&self) -> usize {
+        self.done + self.shed + self.failed
+    }
+
+    fn step(&mut self, now: Us) {
+        let n = self.resolved();
+        if n % self.every == 0 || n == self.total {
+            eprintln!(
+                "[progress] {}/{} requests resolved (finished {} / shed {} / failed {}) at t={:.2}s (sim)",
+                n,
+                self.total,
+                self.done,
+                self.shed,
+                self.failed,
+                now as f64 / 1e6
+            );
+        }
     }
 }
 
 impl Observer for ProgressObserver {
     fn on_finish(&mut self, now: Us, _rec: &RequestRecord) {
         self.done += 1;
-        if self.done % self.every == 0 || self.done == self.total {
-            eprintln!(
-                "[progress] {}/{} requests done at t={:.2}s (sim)",
-                self.done,
-                self.total,
-                now as f64 / 1e6
-            );
-        }
+        self.step(now);
+    }
+
+    fn on_shed(&mut self, now: Us, _req: &Request) {
+        self.shed += 1;
+        self.step(now);
+    }
+
+    fn on_request_failed(&mut self, now: Us, _req: &Request) {
+        self.failed += 1;
+        self.step(now);
     }
 }
 
@@ -424,6 +642,126 @@ mod tests {
         p.on_finish(1, &rec(0));
         p.on_finish(2, &rec(1));
         assert_eq!(p.done(), 2);
+    }
+
+    fn request(id: ReqId) -> Request {
+        Request {
+            id,
+            task: TaskType::Chat,
+            class: 0,
+            arrival: 0,
+            prompt_len: 4,
+            decode_len: 4,
+            predicted: None,
+            prefix: None,
+        }
+    }
+
+    #[test]
+    fn progress_counts_shed_and_failed_toward_resolution() {
+        // a heavy-shed overload run must tick: sheds and terminal
+        // failures resolve requests just as finishes do
+        let mut p = ProgressObserver::new(4, 100);
+        p.on_finish(1, &rec(0));
+        p.on_shed(2, &request(1));
+        p.on_shed(3, &request(2));
+        p.on_request_failed(4, &request(3));
+        assert_eq!(p.done(), 1, "done() stays finishes-only");
+        assert_eq!(p.resolved(), 4, "finished + shed + failed all advance progress");
+    }
+
+    #[test]
+    fn timeline_routes_timestamped_arrival_shed_violation_events() {
+        let mut t = TimelineObserver::new();
+        t.on_arrival(100, &request(7));
+        t.on_arrival(250, &request(8));
+        t.on_shed(250, &request(8));
+        t.on_violation(900, &rec(7), true, false);
+        assert_eq!(t.arrivals, 2);
+        assert_eq!(t.arrival_events, vec![(100, 7), (250, 8)], "arrival keeps its timestamp");
+        assert_eq!(t.shed_events, vec![(250, 8)]);
+        assert_eq!(t.violation_events, vec![(900, 7, true, false)]);
+        let s = t.to_json().dump();
+        let j = crate::util::Json::parse(&s).unwrap();
+        assert_eq!(j.get("arrival_events").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            j.get("shed_events").unwrap().as_arr().unwrap()[0].get("at_us").unwrap().as_usize(),
+            Some(250)
+        );
+    }
+
+    #[test]
+    fn queue_sample_from_load_is_the_shared_projection() {
+        let l = DecodeLoad {
+            instance: 3,
+            free_kv_tokens: 100,
+            n_heavy: 2,
+            n_light: 5,
+            queue_len: 7,
+        };
+        let q = QueueSample::from_load(42, &l);
+        assert_eq!((q.at, q.instance, q.queue_len, q.n_heavy, q.n_light), (42, 3, 7, 2, 5));
+        let mut t = TimelineObserver::new();
+        t.on_monitor(42, &[l]);
+        assert_eq!(t.queue_series(3), vec![(42, 7)]);
+    }
+
+    #[derive(Default)]
+    struct Counter {
+        calls: u64,
+    }
+
+    impl Observer for Counter {
+        fn on_arrival(&mut self, _: Us, _: &Request) {
+            self.calls += 1;
+        }
+        fn on_predict(&mut self, _: Us, _: ReqId, _: Us) {
+            self.calls += 1;
+        }
+        fn on_prefill_start(&mut self, _: Us, _: usize, _: ReqId) {
+            self.calls += 1;
+        }
+        fn on_prefill_finish(&mut self, _: Us, _: usize, _: ReqId) {
+            self.calls += 1;
+        }
+        fn on_decode_enter(&mut self, _: Us, _: usize, _: ReqId) {
+            self.calls += 1;
+        }
+        fn on_parked(&mut self, _: Us, _: ReqId) {
+            self.calls += 1;
+        }
+        fn on_backoff(&mut self, _: Us, _: ReqId, _: Us) {
+            self.calls += 1;
+        }
+        fn on_request_failed(&mut self, _: Us, _: &Request) {
+            self.calls += 1;
+        }
+        fn on_cache(&mut self, _: Us, _: ReqId, _: u32) {
+            self.calls += 1;
+        }
+        fn on_finish(&mut self, _: Us, _: &RequestRecord) {
+            self.calls += 1;
+        }
+    }
+
+    #[test]
+    fn tee_forwards_every_hook_to_both_observers() {
+        let (mut a, mut b) = (Counter::default(), Counter::default());
+        {
+            let mut tee = Tee::new(&mut a, &mut b);
+            tee.on_arrival(0, &request(1));
+            tee.on_predict(1, 1, 5);
+            tee.on_prefill_start(2, 0, 1);
+            tee.on_prefill_finish(3, 0, 1);
+            tee.on_cache(3, 1, 64);
+            tee.on_decode_enter(4, 1, 1);
+            tee.on_parked(5, 1);
+            tee.on_backoff(6, 1, 10);
+            tee.on_request_failed(7, &request(1));
+            tee.on_finish(8, &rec(1));
+        }
+        assert_eq!(a.calls, 10);
+        assert_eq!(b.calls, 10, "both sides see every hook, in order");
     }
 
     #[test]

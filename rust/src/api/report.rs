@@ -19,6 +19,11 @@ pub struct Report {
     pub metrics: RunMetrics,
     /// Host wall time of the DES run (not virtual time).
     pub wall_secs: f64,
+    /// Per-phase latency breakdown + virtual-time series, present only
+    /// when the scenario armed telemetry (`Scenario::telemetry`). Attached
+    /// by `Scenario::run_with` after the run, so drivers stay
+    /// telemetry-agnostic.
+    pub telemetry: Option<crate::telemetry::TelemetrySummary>,
 }
 
 fn summary_json(s: &Summary) -> Json {
@@ -123,7 +128,7 @@ impl Report {
     /// `to_json` with the summaries precomputed by the caller (one
     /// collect+sort per report, however many consumers).
     pub fn to_json_with(&self, s: &RunSummaries) -> Json {
-        Json::obj([
+        let mut pairs: Vec<(&str, Json)> = vec![
             ("driver", Json::from(self.driver.clone())),
             (
                 "scenario",
@@ -131,7 +136,13 @@ impl Report {
             ),
             ("metrics", metrics_json_with(&self.metrics, s)),
             ("wall_secs", Json::from(self.wall_secs)),
-        ])
+        ];
+        // telemetry block, only for armed runs (off-path reports stay
+        // byte-identical to pre-telemetry builds)
+        if let Some(t) = &self.telemetry {
+            pairs.push(("telemetry", t.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     /// One human-readable line of the headline metrics.
@@ -227,6 +238,7 @@ mod tests {
                 ..Default::default()
             },
             wall_secs: 0.01,
+            telemetry: None,
         }
     }
 

@@ -302,6 +302,90 @@ impl PrefixSpec {
     }
 }
 
+// ------------------------------------------------------------- telemetry
+
+/// The spec's `telemetry` object: arms the per-request span tracer,
+/// per-phase latency breakdown, and virtual-time series sampler
+/// (`telemetry::Telemetry`). `None` — the default — attaches no observer
+/// at all, so the run is bit-identical to pre-telemetry builds (the
+/// 3-driver parity test pins it). Purely observational: telemetry never
+/// influences scheduling, so even armed runs keep the same trajectory.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TelemetrySpec {
+    /// Series sampler period in virtual milliseconds.
+    pub sample_ms: f64,
+    /// Series ring-buffer capacity: on overflow the sampler keeps every
+    /// other point and doubles its interval, so memory stays bounded on
+    /// arbitrarily long runs (deterministic downsampling).
+    pub max_samples: usize,
+    /// Also record Perfetto/Chrome trace events (per-request lanes,
+    /// instance slices, fault instants) for `--trace` export.
+    pub trace: bool,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        TelemetrySpec { sample_ms: 50.0, max_samples: 4096, trace: false }
+    }
+}
+
+/// Parse the `--telemetry` CLI flag: comma-separated `key=value` pairs
+/// over the same spellings as the spec's `telemetry` object (`"off"`
+/// disables, `""` arms the defaults, a bare `trace` arms trace export).
+pub fn parse_telemetry_flag(s: &str) -> Result<Option<TelemetrySpec>, String> {
+    if s == "off" {
+        return Ok(None);
+    }
+    let mut t = TelemetrySpec::default();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        if part == "trace" {
+            t.trace = true;
+            continue;
+        }
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| format!("--telemetry part '{part}' is not key=value"))?;
+        match key {
+            "sample_ms" => {
+                let f = val
+                    .parse::<f64>()
+                    .map_err(|_| format!("--telemetry sample_ms: '{val}' is not a number"))?;
+                if !f.is_finite() || f <= 0.0 {
+                    return Err("--telemetry sample_ms must be positive".to_string());
+                }
+                t.sample_ms = f;
+            }
+            "max_samples" => {
+                let f = val
+                    .parse::<f64>()
+                    .map_err(|_| format!("--telemetry max_samples: '{val}' is not a number"))?;
+                if f < 2.0 {
+                    return Err("--telemetry max_samples must be at least 2".to_string());
+                }
+                t.max_samples = f as usize;
+            }
+            "trace" => {
+                t.trace = match val {
+                    "true" | "on" | "1" => true,
+                    "false" | "off" | "0" => false,
+                    _ => {
+                        return Err(format!(
+                            "--telemetry trace: '{val}' is not a boolean"
+                        ))
+                    }
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "unknown --telemetry key '{key}' (known: {})",
+                    TELEMETRY_KEYS.join(", ")
+                ))
+            }
+        }
+    }
+    Ok(Some(t))
+}
+
 // ---------------------------------------------------------------- phases
 
 /// One workload phase of a multi-phase trace (load-shift scenarios like
@@ -469,6 +553,10 @@ pub struct Scenario {
     /// (see [`OptimizeGrid`]). `None` — the default — makes the key
     /// absent from JSON; a plain `sim` run ignores it either way.
     pub optimize: Option<OptimizeGrid>,
+    /// Span tracer + series sampler (see [`TelemetrySpec`]). `None` — the
+    /// default — attaches no telemetry observer; runs are bit-identical
+    /// to pre-telemetry builds.
+    pub telemetry: Option<TelemetrySpec>,
     /// Early-stop knobs copied into the driver config (see
     /// [`crate::sim::StopPolicy`]). Programmatic only — the optimizer
     /// arms it per rung; it is *not* part of the JSON spec format and is
@@ -514,6 +602,7 @@ impl Default for Scenario {
             prefix: None,
             profile_events: false,
             optimize: None,
+            telemetry: None,
             stop: crate::sim::StopPolicy::off(),
         }
     }
@@ -555,6 +644,7 @@ const KNOWN_KEYS: &[&str] = &[
     "prefix",
     "profile_events",
     "optimize",
+    "telemetry",
 ];
 
 const PHASE_KEYS: &[&str] = &["workload", "requests", "rate", "start_ms"];
@@ -571,6 +661,8 @@ const FAULT_EVENT_KEYS: &[&str] = &["kind", "at_ms", "instance", "down_ms", "fac
 
 const PREFIX_KEYS: &[&str] =
     &["n_prefixes", "prefix_len", "zipf", "cache_pages", "block_tokens"];
+
+const TELEMETRY_KEYS: &[&str] = &["sample_ms", "max_samples", "trace"];
 
 const OPTIMIZE_KEYS: &[&str] = &[
     "prefill",
@@ -630,6 +722,12 @@ pub fn prefix_keys() -> &'static [&'static str] {
 /// knobs for `sim optimize`).
 pub fn optimize_keys() -> &'static [&'static str] {
     OPTIMIZE_KEYS
+}
+
+/// Keys of the spec's `telemetry` object (same spellings as the
+/// `--telemetry` CLI flag).
+pub fn telemetry_keys() -> &'static [&'static str] {
+    TELEMETRY_KEYS
 }
 
 /// Every recognized value spelling per enum-valued spec key, generated
@@ -939,7 +1037,21 @@ impl Scenario {
     pub fn run_with(&self, obs: &mut dyn super::Observer) -> Result<super::Report, String> {
         let driver = super::Registry::builtin().resolve(self)?;
         let mut source = self.source();
-        Ok(driver.run_source(source.as_mut(), obs))
+        match &self.telemetry {
+            // The zero-cost path: no telemetry observer exists at all, so
+            // armed-off runs pay exactly the pre-telemetry hook cost
+            // (default no-op Observer methods).
+            None => Ok(driver.run_source(source.as_mut(), obs)),
+            Some(spec) => {
+                let mut tel = crate::telemetry::Telemetry::from_spec(spec, self);
+                let mut report = {
+                    let mut tee = super::Tee::new(&mut tel, obs);
+                    driver.run_source(source.as_mut(), &mut tee)
+                };
+                report.telemetry = Some(tel.into_summary(&report.metrics));
+                Ok(report)
+            }
+        }
     }
 
     // -------------------------------------------------------------- json
@@ -1125,6 +1237,16 @@ impl Scenario {
                     ("min_attainment", Json::from(g.min_attainment)),
                     ("prune", Json::from(g.prune)),
                     ("prune_slack", Json::from(g.prune_slack)),
+                ]),
+            ));
+        }
+        if let Some(t) = self.telemetry {
+            pairs.push((
+                "telemetry",
+                Json::obj([
+                    ("sample_ms", Json::from(t.sample_ms)),
+                    ("max_samples", Json::from(t.max_samples)),
+                    ("trace", Json::from(t.trace)),
                 ]),
             ));
         }
@@ -1524,6 +1646,48 @@ impl Scenario {
                         }
                     }
                 }
+                "telemetry" => {
+                    sc.telemetry = match v {
+                        Json::Null => None,
+                        _ => {
+                            let tobj = v
+                                .as_obj()
+                                .ok_or("spec key 'telemetry' must be an object or null")?;
+                            for tk in tobj.keys() {
+                                if !TELEMETRY_KEYS.contains(&tk.as_str()) {
+                                    return Err(format!(
+                                        "unknown telemetry key '{tk}' (known: {})",
+                                        TELEMETRY_KEYS.join(", ")
+                                    ));
+                                }
+                            }
+                            let mut t = TelemetrySpec::default();
+                            if let Some(x) = v.get("sample_ms") {
+                                let f = want_num(x, "sample_ms")?;
+                                if !f.is_finite() || f <= 0.0 {
+                                    return Err(
+                                        "telemetry key 'sample_ms' must be positive".to_string()
+                                    );
+                                }
+                                t.sample_ms = f;
+                            }
+                            if let Some(x) = v.get("max_samples") {
+                                let f = want_num(x, "max_samples")?;
+                                if f < 2.0 {
+                                    return Err(
+                                        "telemetry key 'max_samples' must be at least 2"
+                                            .to_string(),
+                                    );
+                                }
+                                t.max_samples = f as usize;
+                            }
+                            if let Some(x) = v.get("trace") {
+                                t.trace = want_bool(x, "trace")?;
+                            }
+                            Some(t)
+                        }
+                    }
+                }
                 _ => unreachable!("key checked against KNOWN_KEYS above"),
             }
         }
@@ -1572,8 +1736,8 @@ impl Scenario {
             "scenario{}: driver={} {} prefill={} decode={} coupled={} link={} prefill_policy={} \
              decode_policy={} dispatch={} predictor={} acc={} chunk={} sched_batch={} \
              max_batch={} flip_idle_ms={} elastic={} transfer={} srtf={} prefill_batch={} \
-             hbm_kv_bytes={} records={} classes={} admission={} faults={} prefix={} seed={} \
-             trace_seed={}",
+             hbm_kv_bytes={} records={} classes={} admission={} faults={} prefix={} \
+             telemetry={} seed={} trace_seed={}",
             if self.name.is_empty() { String::new() } else { format!(" '{}'", self.name) },
             self.driver,
             phases,
@@ -1632,6 +1796,15 @@ impl Scenario {
                         "{}x{}t,zipf{},pages{},blk{}",
                         p.n_prefixes, p.prefix_len, p.zipf, p.cache_pages, p.block_tokens
                     )
+                })
+                .unwrap_or_else(|| "off".into()),
+            self.telemetry
+                .map(|t| {
+                    let mut s = format!("{}ms,cap{}", t.sample_ms, t.max_samples);
+                    if t.trace {
+                        s.push_str(",trace");
+                    }
+                    s
                 })
                 .unwrap_or_else(|| "off".into()),
             self.seed,
@@ -1825,6 +1998,12 @@ impl ScenarioBuilder {
     /// Attach the optimizer search grid (`None` = plain scenario).
     pub fn optimize(mut self, v: Option<OptimizeGrid>) -> Self {
         self.sc.optimize = v;
+        self
+    }
+
+    /// Arm the span tracer + series sampler (`None` = zero-cost off).
+    pub fn telemetry(mut self, v: Option<TelemetrySpec>) -> Self {
+        self.sc.telemetry = v;
         self
     }
 
@@ -2241,6 +2420,7 @@ mod tests {
             "seed=",
             "flip_idle_ms=",
             "faults=off",
+            "telemetry=off",
         ] {
             assert!(line.contains(needle), "summary missing {needle}: {line}");
         }
@@ -2355,5 +2535,59 @@ mod tests {
         assert_eq!(fp.retry_max, 2);
         assert!(fp.events.is_empty());
         assert_eq!(fp.backoff_ms, 25.0, "defaults fill the rest");
+    }
+
+    #[test]
+    fn telemetry_spec_round_trips_and_validates() {
+        let sc = Scenario::builder()
+            .name("traced")
+            .requests(16)
+            .telemetry(Some(TelemetrySpec { sample_ms: 10.0, max_samples: 256, trace: true }))
+            .build();
+        let s = sc.to_json().dump();
+        assert_eq!(Scenario::from_str(&s).unwrap(), sc);
+        // partial objects fill from defaults; null turns it back off
+        let t = Scenario::from_str(r#"{"telemetry": {"sample_ms": 5}}"#)
+            .unwrap()
+            .telemetry
+            .unwrap();
+        assert_eq!(t.sample_ms, 5.0);
+        assert_eq!(t.max_samples, TelemetrySpec::default().max_samples);
+        assert!(!t.trace);
+        assert!(Scenario::from_str(r#"{"telemetry": null}"#).unwrap().telemetry.is_none());
+        // bad shapes are rejected at parse time
+        for bad in [
+            r#"{"telemetry": {"sample_mss": 5}}"#,
+            r#"{"telemetry": {"sample_ms": 0}}"#,
+            r#"{"telemetry": {"sample_ms": -1}}"#,
+            r#"{"telemetry": {"max_samples": 1}}"#,
+            r#"{"telemetry": {"trace": 1}}"#,
+            r#"{"telemetry": 7}"#,
+        ] {
+            assert!(Scenario::from_str(bad).is_err(), "{bad} should be rejected");
+        }
+        // the startup line surfaces the knob
+        assert!(sc.summary_line().contains("telemetry=10ms,cap256,trace"), "{}", sc.summary_line());
+        // telemetry never enters the trace generator
+        assert_eq!(
+            sc.trace_key(),
+            Scenario { telemetry: None, ..sc.clone() }.trace_key()
+        );
+    }
+
+    #[test]
+    fn telemetry_flag_parses_like_the_spec_object() {
+        assert_eq!(parse_telemetry_flag("off").unwrap(), None);
+        assert_eq!(parse_telemetry_flag("").unwrap(), Some(TelemetrySpec::default()));
+        let t = parse_telemetry_flag("sample_ms=5,max_samples=64,trace").unwrap().unwrap();
+        assert_eq!(t.sample_ms, 5.0);
+        assert_eq!(t.max_samples, 64);
+        assert!(t.trace);
+        assert!(!parse_telemetry_flag("trace=false").unwrap().unwrap().trace);
+        assert!(parse_telemetry_flag("sample_ms=0").is_err());
+        assert!(parse_telemetry_flag("max_samples=1").is_err());
+        assert!(parse_telemetry_flag("sampl_ms=5").is_err(), "typo'd key");
+        assert!(parse_telemetry_flag("trace=maybe").is_err());
+        assert!(parse_telemetry_flag("sample_ms").is_err(), "missing '='");
     }
 }

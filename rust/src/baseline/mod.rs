@@ -238,6 +238,7 @@ impl BaselineCluster {
             self.core.fail(slot, obs);
             return;
         }
+        obs.on_backoff(now, self.core.requests[slot as usize].id, now + backoff);
         self.core.queue.schedule_in(backoff, Event::Retry(slot));
         obs.on_recovery(now, "requeue", None);
     }
@@ -290,6 +291,12 @@ impl BaselineCluster {
         if st.batch > 0 {
             obs.on_decode_iter(now, i, st.batch, st.kv_tokens, dur);
         }
+        // prompts admitted into this iteration begin prefill now (coupled
+        // instances prefill whole prompts in one iteration — no chunking)
+        for k in 0..self.insts[i].pending_prefilled.len() {
+            let slot = self.insts[i].pending_prefilled[k];
+            obs.on_prefill_start(now, i, self.core.requests[slot as usize].id);
+        }
         Some(now + dur)
     }
 
@@ -308,10 +315,13 @@ impl BaselineCluster {
         let (mut prefilled, mut done) = self.insts[i].end_iteration(now);
         for slot in prefilled.drain(..) {
             self.core.hot[slot as usize].first_token = now;
+            obs.on_prefill_finish(now, i, self.core.requests[slot as usize].id);
             // single-token requests finish at prefill
             if self.core.requests[slot as usize].decode_len <= 1 {
                 self.insts[i].drop_running(slot);
                 self.core.finish(slot, now, obs);
+            } else {
+                obs.on_decode_enter(now, i, self.core.requests[slot as usize].id);
             }
         }
         for slot in done.drain(..) {

@@ -343,7 +343,13 @@ impl Cluster {
     /// uncached suffix — the cached chunks skip prefill entirely. Clamped
     /// to `prompt_len - 1` so every request still produces its first
     /// token through a real `PrefillIterDone`.
-    fn cache_admit(&mut self, i: usize, slot: ReqId, mut meta: ReqMeta) -> ReqMeta {
+    fn cache_admit(
+        &mut self,
+        i: usize,
+        slot: ReqId,
+        mut meta: ReqMeta,
+        obs: &mut dyn Observer,
+    ) -> ReqMeta {
         let Some(pc) = self.cfg.prefix_cache else { return meta };
         let Some(stamp) = meta.prefix else { return meta };
         let Some(cache) = self.prefix_caches.get_mut(i) else { return meta };
@@ -352,6 +358,7 @@ impl Cluster {
         let saved =
             cache.tokens_for_depth(pin.depth()).min(meta.prompt_len.saturating_sub(1));
         cache.note_saved(saved as u64);
+        obs.on_cache(self.core.now(), self.core.requests[slot as usize].id, saved);
         if let Some((ci, old)) = self.prefix_pins.insert(slot, (i, pin)) {
             // a fault-requeued request can still hold its earlier pin
             if let Some(c) = self.prefix_caches.get_mut(ci) {
@@ -487,7 +494,7 @@ impl Cluster {
                 let pred = self.predictor.predict(&[], dlen);
                 self.core.requests[slot as usize].predicted = Some(pred);
                 let meta = self.core.meta_of(slot);
-                let meta = self.cache_admit(i, slot, meta);
+                let meta = self.cache_admit(i, slot, meta, obs);
                 let p = self.pool.prefill_mut(i).expect("routed to a prefill instance");
                 p.pending_pred += 1;
                 p.sched.push(meta);
@@ -499,13 +506,14 @@ impl Cluster {
                 let tokens = self.core.requests[slot as usize].prompt_len.min(512);
                 let dur = self.cfg.cost.predictor_iter_us(tokens);
                 let epoch = self.pool.epoch(i);
+                obs.on_predict(self.core.now(), self.core.requests[slot as usize].id, dur);
                 self.core
                     .queue
                     .schedule_in(dur, Event::PredictDone { instance: i, epoch, req: slot });
             }
             PredictorMode::Disabled => {
                 let meta = self.core.meta_of(slot);
-                let meta = self.cache_admit(i, slot, meta);
+                let meta = self.cache_admit(i, slot, meta, obs);
                 let p = self.pool.prefill_mut(i).expect("routed to a prefill instance");
                 p.sched.push(meta);
                 self.note_prefill_load_increased(i);
@@ -546,7 +554,7 @@ impl Cluster {
             && self.pool.accepts_work(i)
             && self.pool.prefill_mut(i).is_some()
         {
-            let meta = self.cache_admit(i, slot, meta);
+            let meta = self.cache_admit(i, slot, meta, obs);
             let p = self.pool.prefill_mut(i).expect("prefill role checked above");
             p.sched.push(meta);
             self.note_prefill_load_increased(i);
@@ -579,6 +587,16 @@ impl Cluster {
         self.core.metrics.busy_us[i] += dur;
         self.core.queue.schedule_in(dur, Event::PrefillIterDone { instance: i, epoch });
         obs.on_chunk(now, i, tokens, pad, dur);
+        // Requests whose first tokens entered this chunk open their
+        // prefill span (a segment with start == 0 is its request's first
+        // inclusion in any chunk).
+        if let Some(p) = self.pool.prefill_mut(i) {
+            for seg in p.in_flight_segments() {
+                if seg.start == 0 {
+                    obs.on_prefill_start(now, i, self.core.requests[seg.req as usize].id);
+                }
+            }
+        }
         // slicing the chunk shrank this instance's pending load
         self.note_prefill_load_decreased(i);
     }
@@ -605,6 +623,7 @@ impl Cluster {
             }
             // Request fully prefilled: first token exists now (TTFT).
             let slot = seg.req;
+            obs.on_prefill_finish(now, i, self.core.requests[slot as usize].id);
             let epoch = self.pool.epoch(i);
             self.core.hot[slot as usize] =
                 HotState { first_token: now, prefilled_by: Some((i, epoch)) };
@@ -623,6 +642,7 @@ impl Cluster {
             if !self.dispatch_request(slot, obs) {
                 // No decode instance known (mid-flip window): park the
                 // request; the monitor tick retries dispatch.
+                obs.on_parked(now, self.core.requests[slot as usize].id);
                 self.pending_dispatch.push(slot);
             }
         }
@@ -742,6 +762,7 @@ impl Cluster {
             // payload never landed and the restarted incarnation must not
             // inherit it. Pick a new decode instance, pay the wire again.
             if !self.dispatch_request(slot, obs) {
+                obs.on_parked(now, self.core.requests[slot as usize].id);
                 self.pending_dispatch.push(slot);
             }
             return;
@@ -756,6 +777,7 @@ impl Cluster {
                 let mut job = DecodeJob::new(meta, req.decode_len);
                 job.generated = 1; // prefill produced the first token
                 di.sched.enqueue(job);
+                obs.on_decode_enter(now, d, req.id);
                 true
             }
             None => false,
@@ -771,6 +793,7 @@ impl Cluster {
             // Instance flipped away while the KV was in flight: pick a
             // new decode instance and pay the transfer again.
             if !self.dispatch_request(slot, obs) {
+                obs.on_parked(now, self.core.requests[slot as usize].id);
                 self.pending_dispatch.push(slot);
             }
         }
@@ -891,6 +914,14 @@ impl Cluster {
         if st.batch > 0 {
             obs.on_decode_iter(now, c, st.batch, st.kv_tokens, dur);
         }
+        // the waiting-line batch admitted into this iteration opens each
+        // request's prefill span (coupled prompts prefill whole, one shot)
+        if let Some(ci) = self.pool.coupled_mut(c) {
+            for k in 0..ci.pending_prefilled.len() {
+                let slot = ci.pending_prefilled[k];
+                obs.on_prefill_start(now, c, self.core.requests[slot as usize].id);
+            }
+        }
         Some(now + dur)
     }
 
@@ -910,12 +941,16 @@ impl Cluster {
         let (mut prefilled, mut done) = ci.end_iteration(now);
         for slot in prefilled.drain(..) {
             self.core.hot[slot as usize].first_token = now;
+            obs.on_prefill_finish(now, c, self.core.requests[slot as usize].id);
             // single-token requests finish at prefill
             if self.core.requests[slot as usize].decode_len <= 1 {
                 if let Some(ci) = self.pool.coupled_mut(c) {
                     ci.drop_running(slot);
                 }
                 self.core.finish(slot, now, obs);
+            } else {
+                // the rest stay resident and decode in place
+                obs.on_decode_enter(now, c, self.core.requests[slot as usize].id);
             }
         }
         for slot in done.drain(..) {
@@ -1343,6 +1378,7 @@ impl Cluster {
             // note_enqueued again when the request lands
             self.arrivals_pending += 1;
         }
+        obs.on_backoff(now, self.core.requests[slot as usize].id, now + backoff);
         self.core.queue.schedule_in(backoff, Event::Retry(slot));
         obs.on_recovery(now, "requeue", None);
     }

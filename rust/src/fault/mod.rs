@@ -67,6 +67,18 @@ impl FaultKind {
     }
 }
 
+/// Every `kind` string a driver can pass to `Observer::on_fault` — the
+/// fault-instant vocabulary of a Perfetto trace (superset of
+/// [`FaultKind`] spellings: the engine adds derived conditions like
+/// `degraded` and `request_failed`). Trace tooling and the telemetry
+/// schema test key on this list.
+pub const OBSERVED_FAULT_KINDS: [&str; 6] =
+    ["crash", "link_out", "link_degrade", "straggler", "degraded", "request_failed"];
+
+/// Likewise for `Observer::on_recovery` — every recovery-instant name.
+pub const OBSERVED_RECOVERY_KINDS: [&str; 4] =
+    ["requeue", "restart", "resend", "capacity_restored"];
+
 /// Parse a fault-kind spelling (JSON `kind` value / `--fault kind=`).
 pub fn parse_fault_kind(s: &str) -> Result<FaultKind, String> {
     FaultKind::ALL

@@ -93,6 +93,13 @@ impl PrefillInst {
         Some((tokens, pad, dur))
     }
 
+    /// Segments of the chunk currently executing (empty when idle) — the
+    /// telemetry seam: a segment with `start == 0` is its request's first
+    /// inclusion in any chunk, one with `last` its final tokens.
+    pub fn in_flight_segments(&self) -> &[crate::prefill::Segment] {
+        self.current.as_ref().map(|c| c.segments.as_slice()).unwrap_or(&[])
+    }
+
     /// Iteration completed: hand the finished chunk back to the driver
     /// (which walks the `last` segments to dispatch completed prompts).
     pub fn end_chunk(&mut self, now: Us) -> Chunk {
@@ -209,8 +216,13 @@ mod tests {
         assert!(dur > plain, "parallel predictions must tax the iteration");
         assert!(p.busy && p.begin_chunk(&cost, 6).is_none());
         assert_eq!(p.pending_pred, 0);
+        // the in-flight view exposes the whole prompt as one first+last segment
+        let segs = p.in_flight_segments();
+        assert_eq!(segs.len(), 1);
+        assert!(segs[0].start == 0 && segs[0].last);
         let chunk = p.end_chunk(7);
         assert!(!p.busy);
+        assert!(p.in_flight_segments().is_empty(), "idle instances expose no segments");
         assert_eq!(chunk.tokens, 512);
         assert_eq!(p.last_active, 7);
     }

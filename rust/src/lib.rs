@@ -36,16 +36,18 @@ pub mod serve;
 pub mod sim;
 pub mod slo;
 pub mod sweep;
+pub mod telemetry;
 pub mod types;
 pub mod util;
 pub mod workload;
 
 pub use api::{
     Driver, ElasticSpec, NullObserver, Observer, ProgressObserver, Registry, Report, Scenario,
-    TimelineObserver,
+    Tee, TelemetrySpec, TimelineObserver,
 };
 pub use baseline::{run_baseline, BaselineConfig};
 pub use fault::{FaultConfig, FaultKind, FaultPlan, FaultPlanSpec, FaultSpec};
 pub use slo::{AdmissionGate, ClassDef, ClassSpec, SloConfig, TokenBucket};
 pub use coordinator::{run_cluster, Cluster, ClusterConfig};
+pub use telemetry::{Telemetry, TelemetrySummary};
 pub use instance::{InstancePool, InstanceRole, InstanceState};

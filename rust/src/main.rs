@@ -22,10 +22,10 @@
 use tetri_infer::api::{
     class_keys, elastic_keys, fault_event_keys, fault_keys, optimize_keys, parse_class_flag,
     parse_decode_policy, parse_dispatch, parse_fault_flag, parse_link, parse_predictor,
-    parse_prefill_policy, parse_prefix_flag, parse_workload, phase_keys, prefix_keys, spec_keys,
-    value_vocab,
+    parse_prefill_policy, parse_prefix_flag, parse_telemetry_flag, parse_workload, phase_keys,
+    prefix_keys, spec_keys, telemetry_keys, value_vocab,
     Driver as _, ElasticSpec, FaultPlanSpec, NullObserver, Observer, ProgressObserver, Registry,
-    Scenario,
+    Scenario, TelemetrySpec,
 };
 use tetri_infer::metrics::vs_row_from;
 use tetri_infer::optimizer;
@@ -97,6 +97,18 @@ fn usage() -> ! {
                           key=value pairs, e.g.
                           n_prefixes=32,prefix_len=512,zipf=1.0
                           (also: cache_pages=N, block_tokens=N)
+    --telemetry SPEC|off  arm the telemetry subsystem: per-phase latency
+                          attribution + virtual-time series sampling
+                          (replaces the spec's telemetry knob). SPEC is
+                          key=value pairs, e.g.
+                          sample_ms=50,max_samples=4096,trace=on
+                          ('' = all defaults; off disarms a spec)
+    --trace PATH          write a Perfetto/Chrome trace-event JSON of the
+                          run to PATH — load it in ui.perfetto.dev
+                          (implies --telemetry, arms span export)
+    --series PATH         write the sampled virtual-time series CSV
+                          (queue depths, phase populations, KV occupancy,
+                          shed rate, ...) to PATH (implies --telemetry)
     --workers N           worker threads for sim optimize / sim sweep
                           (default: all cores; echoed in the startup line
                           and the JSON meta)
@@ -174,6 +186,9 @@ const SIM_FLAGS: &[(&str, bool)] = &[
     ("--admission", true),
     ("--fault", true),
     ("--prefix", true),
+    ("--telemetry", true),
+    ("--trace", true),
+    ("--series", true),
     ("--workers", true),
     ("--list", false),
 ];
@@ -356,6 +371,17 @@ fn scenario_from_args(args: &[String]) -> Scenario {
     if let Some(v) = arg_val(args, "--prefix") {
         sc.prefix = parse_prefix_flag(&v).unwrap_or_else(|e| die(&e));
     }
+    if let Some(v) = arg_val(args, "--telemetry") {
+        sc.telemetry = parse_telemetry_flag(&v).unwrap_or_else(|e| die(&e));
+    }
+    // --trace / --series are output paths, but asking for either arms the
+    // subsystem that produces them (a spec's sample_ms/max_samples survive).
+    if args.iter().any(|a| a == "--trace") {
+        sc.telemetry.get_or_insert_with(TelemetrySpec::default).trace = true;
+    }
+    if args.iter().any(|a| a == "--series") {
+        sc.telemetry.get_or_insert_with(TelemetrySpec::default);
+    }
     sc
 }
 
@@ -389,6 +415,7 @@ fn cmd_list() {
     println!("  faults keys: {}", fault_keys().join(", "));
     println!("  faults.events[] keys: {}", fault_event_keys().join(", "));
     println!("  prefix keys: {}", prefix_keys().join(", "));
+    println!("  telemetry keys: {}", telemetry_keys().join(", "));
     println!("  optimize keys: {}", optimize_keys().join(", "));
     for (key, vals) in value_vocab() {
         println!("{key} values: {}", vals.join(", "));
@@ -413,7 +440,6 @@ fn cmd_sim(args: &[String]) {
     println!("{}", sc.summary_line());
 
     let registry = Registry::builtin();
-    let driver = registry.resolve(&sc).unwrap_or_else(|e| die(&e));
 
     let total = sc.total_requests();
     let mut progress;
@@ -427,8 +453,9 @@ fn cmd_sim(args: &[String]) {
     // Arrivals stream straight from the scenario's source: a run never
     // materializes its trace, so memory follows in-flight requests (the
     // baseline comparison below regenerates the identical stream from the
-    // same trace seed).
-    let report = driver.run_source(sc.source().as_mut(), obs);
+    // same trace seed). `run_with` tees in the telemetry observer when the
+    // scenario arms it — otherwise this is exactly the raw driver path.
+    let report = sc.run_with(obs).unwrap_or_else(|e| die(&e));
     // Each side's summaries are computed once (a full collect + sort over
     // the records when retained) and threaded through every row and the
     // JSON document below.
@@ -445,6 +472,38 @@ fn cmd_sim(args: &[String]) {
         println!("event profile (host wall-clock, busiest kind first):");
         for row in profile.render() {
             println!("{row}");
+        }
+    }
+    // Telemetry: "where did my latency go?" — the per-phase attribution,
+    // plus the trace/series artifacts when their flags asked for them.
+    if let Some(t) = &report.telemetry {
+        println!(
+            "latency attribution ({} spans, {} samples, {:.1} ms request time accounted):",
+            t.spans,
+            t.series.len(),
+            t.accounted_ms()
+        );
+        for line in t.breakdown_lines() {
+            println!("  {line}");
+        }
+        for c in &t.classes {
+            let parts: Vec<String> = c
+                .phases
+                .iter()
+                .map(|p| format!("{} p99 {:.1} ms", p.phase, p.p99_ms))
+                .collect();
+            println!("  class {} ({}): {}", c.class, c.name, parts.join(" | "));
+        }
+        if let Some(path) = arg_val(args, "--series") {
+            std::fs::write(&path, t.series_csv())
+                .unwrap_or_else(|e| die(&format!("cannot write {path}: {e}")));
+            eprintln!("wrote {path}");
+        }
+        if let Some(path) = arg_val(args, "--trace") {
+            let trace = t.trace.as_ref().expect("--trace arms span export");
+            std::fs::write(&path, trace.dump())
+                .unwrap_or_else(|e| die(&format!("cannot write {path}: {e}")));
+            eprintln!("wrote {path} (open in ui.perfetto.dev)");
         }
     }
     // alloc-count builds report the steady-state allocation count; with

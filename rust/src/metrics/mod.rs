@@ -483,6 +483,16 @@ impl RunMetrics {
         }
     }
 
+    /// Exact Σ JCT over finished requests, in µs. `LogHist` accumulates
+    /// the true sum at record time (only quantiles are bucketed), so
+    /// this holds with or without record retention. Telemetry's
+    /// reconciliation invariant: an armed run's `accounted_us` equals
+    /// this exactly — every finished request's phases partition its
+    /// arrival→finish interval (tests/telemetry.rs pins it, slack 0).
+    pub fn jct_sum_us(&self) -> u128 {
+        self.jct_hist.sum()
+    }
+
     /// Every comparison input computed once (see [`RunSummaries`]).
     pub fn summaries(&self) -> RunSummaries {
         RunSummaries {

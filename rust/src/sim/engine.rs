@@ -479,6 +479,7 @@ impl EngineCore {
         let req = self.requests[slot as usize];
         let now = self.queue.now();
         obs.on_fault(now, "request_failed", None);
+        obs.on_request_failed(now, &req);
         self.metrics.note_fail(req.class);
         self.free_slots.push(slot);
         self.outstanding -= 1;

@@ -155,12 +155,25 @@ pub const RESULTS_CSV_HEADER: &str = "label,driver,finished,shed,ttft_mean_ms,tt
 jct_mean_ms,jct_p99_ms,resource_s,makespan_s,utilization,attained,slo_attainment,goodput_rps,\
 cache_hit_rate,prefill_tokens_saved,overlap_ms";
 
+/// Latency-attribution columns appended to [`RESULTS_CSV_HEADER`] when
+/// at least one cell in the grid armed telemetry (telemetry-off grids
+/// emit the exact legacy header — no drift for existing consumers).
+pub const BREAKDOWN_CSV_COLUMNS: &str =
+    ",queue_p99_ms,prefill_p99_ms,transfer_p99_ms,decode_p99_ms";
+
 /// One CSV row per finished cell: the headline latency/resource columns
 /// plus the SLO lens — shed count, attained count, attainment fraction,
 /// and goodput (SLO-attained requests per second; equals plain request
 /// throughput for classless cells). Summaries are computed once per row.
+/// When any cell carries a telemetry summary, every row additionally
+/// gets the [`BREAKDOWN_CSV_COLUMNS`] per-phase p99s (0.000 for cells
+/// that ran telemetry-off or never visited a phase).
 pub fn results_csv(results: &[CellResult]) -> String {
+    let breakdown = results.iter().any(|r| r.report.telemetry.is_some());
     let mut out = String::from(RESULTS_CSV_HEADER);
+    if breakdown {
+        out.push_str(BREAKDOWN_CSV_COLUMNS);
+    }
     out.push('\n');
     for r in results {
         let m = &r.report.metrics;
@@ -168,7 +181,7 @@ pub fn results_csv(results: &[CellResult]) -> String {
         let finished = m.n_finished();
         let attainment =
             if finished == 0 { 1.0 } else { m.attained as f64 / finished as f64 };
-        writeln!(
+        write!(
             out,
             "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4},{},{:.4},{:.3},{:.4},{},{:.3}",
             r.label,
@@ -190,6 +203,18 @@ pub fn results_csv(results: &[CellResult]) -> String {
             m.overlap_us as f64 / 1e3,
         )
         .expect("writing to a String cannot fail");
+        if breakdown {
+            for phase in ["queue", "prefill", "transfer", "decode"] {
+                let p99 = r
+                    .report
+                    .telemetry
+                    .as_ref()
+                    .map(|t| t.phase_p99_ms(phase))
+                    .unwrap_or(0.0);
+                write!(out, ",{p99:.3}").expect("writing to a String cannot fail");
+            }
+        }
+        out.push('\n');
     }
     out
 }
@@ -404,6 +429,41 @@ mod tests {
         assert_eq!(arr[0].at(&["label"]).unwrap().as_str(), Some("plain"));
         assert!(arr[1].at(&["report", "metrics", "goodput_rps"]).is_some());
         assert!(arr[1].at(&["report", "metrics", "classes"]).is_some());
+    }
+
+    #[test]
+    fn telemetry_armed_grids_grow_breakdown_columns() {
+        let armed = Scenario::builder()
+            .workload(WorkloadKind::Lpld)
+            .requests(12)
+            .seed(4)
+            .telemetry(Some(crate::api::TelemetrySpec::default()))
+            .build();
+        let plain =
+            Scenario::builder().workload(WorkloadKind::Lpld).requests(12).seed(4).build();
+        let results =
+            run_cells(vec![SweepCell::new("armed", armed), SweepCell::new("plain", plain)], 2);
+        let csv = results_csv(&results);
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert_eq!(header, format!("{RESULTS_CSV_HEADER}{BREAKDOWN_CSV_COLUMNS}"));
+        let cols = header.split(',').count();
+        let rows: Vec<&str> = lines.collect();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.split(',').count() == cols), "rows match the header");
+        // the armed cell attributes real decode time; the off cell pads 0s
+        let field = |row: &str, i: usize| row.split(',').nth(i).unwrap().to_string();
+        assert!(field(rows[0], cols - 1).parse::<f64>().unwrap() > 0.0, "{}", rows[0]);
+        assert_eq!(field(rows[1], cols - 1), "0.000");
+        // a fully telemetry-off grid emits the legacy header byte-for-byte
+        let off = run_cells(
+            vec![SweepCell::new(
+                "p",
+                Scenario::builder().workload(WorkloadKind::Lpld).requests(6).seed(1).build(),
+            )],
+            1,
+        );
+        assert!(results_csv(&off).starts_with(&format!("{RESULTS_CSV_HEADER}\n")));
     }
 
     #[test]

@@ -1,0 +1,966 @@
+//! Telemetry (observability subsystem): per-request span tracing,
+//! virtual-time series sampling, latency attribution, and Perfetto /
+//! Chrome `trace_event` export.
+//!
+//! The whole subsystem rides the [`Observer`] seam — it *watches* a run
+//! and never influences it, so telemetry-on and telemetry-off runs are
+//! bit-identical (parity-tested across all three drivers). When the
+//! scenario's `telemetry` knob is absent nothing here is even
+//! constructed: the drivers fire the same no-op default hooks they
+//! always fired, which is the zero-cost-off argument (see DESIGN.md
+//! §Telemetry).
+//!
+//! Three pillars:
+//!
+//!  * **Span traces** — every delivered request walks a phase machine
+//!    (queue → predict → prefill → dispatch → transfer → decode, with
+//!    retry/parked excursions on faults and dispatch stalls). Each
+//!    transition closes the open phase; at `on_finish` the per-phase
+//!    accruals fold into constant-memory [`LogHist`]s (run-level and
+//!    per-class), so the report can print "p99 TTFT = 41% queue + 52%
+//!    prefill + 7% transfer" without retaining per-request records.
+//!    For every finished request the phases *partition* its
+//!    arrival→finish interval exactly (slack 0): the accrued sum equals
+//!    its JCT, so breakdown totals reconcile with the JCT histogram.
+//!  * **Series sampler** — a periodic virtual-time collector
+//!    (configurable `sample_ms`) piggybacking on hook timestamps:
+//!    state is piecewise-constant between DES events, so sampling at
+//!    the *top* of each hook (before the event mutates gauges) is
+//!    exact. The ring is capped at `max_samples`; on overflow it keeps
+//!    every other point and doubles the interval (deterministic
+//!    downsampling, O(log) total work however long the run).
+//!  * **Perfetto export** — phase spans (pid = instance lane, tid =
+//!    original request id), instance busy slices (chunks, decode
+//!    iterations, flips), fault/recovery instants, and counter tracks
+//!    serialize to the Chrome `trace_event` JSON format with virtual-µs
+//!    timestamps; the file loads directly in `ui.perfetto.dev`.
+
+use std::collections::HashMap;
+
+use crate::api::{Observer, Scenario, TelemetrySpec};
+use crate::metrics::RunMetrics;
+use crate::prefill::DecodeLoad;
+use crate::types::{ReqId, Request, RequestRecord, Role, Us};
+use crate::util::{Json, LogHist};
+
+/// Phases of the per-request span machine, in pipeline order. Every
+/// delivered request is in exactly one phase at any instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Entry-router / local-scheduler wait, from delivery to first
+    /// chunk inclusion (or to coupled-iteration prefill inclusion).
+    Queue,
+    /// Sequential length prediction plus any re-queue wait behind it
+    /// (the request cannot be scheduled until predicted, so the whole
+    /// interval is causally attributed here). Parallel-mode prediction
+    /// co-runs with prefill and never opens this phase.
+    Predict,
+    /// First chunk inclusion to last-segment completion (first token).
+    Prefill,
+    /// Prefill done, waiting for a decode target to be chosen.
+    Dispatch,
+    /// KV transfer issued until the request joins a decode batch.
+    Transfer,
+    /// Resident on a decode (or coupled) instance until the final token.
+    Decode,
+    /// Lost to a fault and re-queued with backoff (covers the backoff
+    /// wait plus the re-queue wait until re-inclusion in a chunk).
+    Retry,
+    /// Parked in `pending_dispatch`: no decode instance could accept
+    /// the request (degraded cluster or all targets down).
+    Parked,
+}
+
+/// Number of phases — the span machine's histogram arity.
+pub const N_PHASES: usize = 8;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Queue,
+        Phase::Predict,
+        Phase::Prefill,
+        Phase::Dispatch,
+        Phase::Transfer,
+        Phase::Decode,
+        Phase::Retry,
+        Phase::Parked,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queue => "queue",
+            Phase::Predict => "predict",
+            Phase::Prefill => "prefill",
+            Phase::Dispatch => "dispatch",
+            Phase::Transfer => "transfer",
+            Phase::Decode => "decode",
+            Phase::Retry => "retry",
+            Phase::Parked => "parked",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// One Chrome `trace_event` entry: a complete span (`ph == 'X'`) or a
+/// global instant (`ph == 'i'`). Counters and metadata are synthesized
+/// at export time from the sample ring.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub ph: char,
+    /// Virtual µs (the trace_event spec's native unit).
+    pub ts: Us,
+    pub dur: Us,
+    /// 0 = the scheduler lane; `instance + 1` otherwise.
+    pub pid: u64,
+    /// Original request id for request lanes; 0 for instance slices.
+    pub tid: u64,
+    pub arg: Option<(&'static str, u64)>,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("name", Json::from(self.name)),
+            ("ph", Json::from(if self.ph == 'X' { "X" } else { "i" })),
+            ("ts", Json::from(self.ts)),
+            ("pid", Json::from(self.pid)),
+            ("tid", Json::from(self.tid)),
+        ];
+        if self.ph == 'X' {
+            pairs.push(("dur", Json::from(self.dur)));
+        } else {
+            pairs.push(("s", Json::from("g")));
+        }
+        if let Some((k, v)) = self.arg {
+            pairs.push(("args", Json::obj([(k, Json::from(v))])));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// One virtual-time sample of the run's gauges. Cumulative counters
+/// (finished/shed/failed/cache) are as-of `t`; phase populations and
+/// in-flight are instantaneous.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SeriesPoint {
+    pub t: Us,
+    pub in_flight: u64,
+    /// Requests currently in each phase, indexed like [`Phase::ALL`].
+    pub phases: [u64; N_PHASES],
+    pub finished: u64,
+    pub shed: u64,
+    pub failed: u64,
+    /// Queued requests across decode instances (last monitor broadcast).
+    pub decode_queue: u64,
+    /// Resident KV tokens across decode batches (last iteration issue).
+    pub kv_tokens: u64,
+    /// Live instances per role: [prefill, decode, coupled].
+    pub roles: [u64; 3],
+    pub cache_hits: u64,
+    pub cache_lookups: u64,
+}
+
+/// Header of the `*.series.csv` emitted from a [`TelemetrySummary`].
+pub const SERIES_CSV_HEADER: &str = "t_ms,in_flight,queue,predict,prefill,dispatch,transfer,\
+decode,retry,parked,finished,shed,failed,decode_queue,kv_tokens,n_prefill,n_decode,n_coupled,\
+cache_hits,cache_lookups";
+
+/// Digest of one phase's latency histogram (milliseconds). `sum_ms` and
+/// `mean_ms` are exact; quantiles carry LogHist's ≤ ~3.2% bucket error.
+#[derive(Clone, Debug)]
+pub struct PhaseStat {
+    pub phase: &'static str,
+    pub count: u64,
+    pub sum_ms: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Per-class latency breakdown (SLO multi-tenancy runs).
+#[derive(Clone, Debug)]
+pub struct ClassBreakdown {
+    pub class: u8,
+    pub name: String,
+    pub phases: Vec<PhaseStat>,
+}
+
+/// Everything telemetry distilled from one run: the per-phase latency
+/// attribution, the sampled series, and (when armed) the Perfetto trace.
+/// Attached to [`crate::api::Report`] as `Some` only when the scenario's
+/// `telemetry` knob was set, so telemetry-off reports stay byte-identical.
+#[derive(Clone, Debug)]
+pub struct TelemetrySummary {
+    /// Final sampling interval (µs) — doubled on each ring overflow.
+    pub sample_interval_us: Us,
+    /// Run-level per-phase stats; phases nobody visited are omitted.
+    pub breakdown: Vec<PhaseStat>,
+    pub classes: Vec<ClassBreakdown>,
+    pub series: Vec<SeriesPoint>,
+    /// Phase spans closed over the run (finished + in-flight requests).
+    pub spans: u64,
+    /// Σ per-request phase time over finished requests (µs). Equals the
+    /// exact JCT-histogram sum — the reconciliation invariant.
+    pub accounted_us: u128,
+    /// Chrome trace-event JSON, present when the spec armed `trace`.
+    pub trace: Option<Json>,
+}
+
+fn stat_json(s: &PhaseStat) -> Json {
+    Json::obj([
+        ("phase", Json::from(s.phase)),
+        ("count", Json::from(s.count)),
+        ("sum_ms", Json::from(s.sum_ms)),
+        ("mean_ms", Json::from(s.mean_ms)),
+        ("p50_ms", Json::from(s.p50_ms)),
+        ("p99_ms", Json::from(s.p99_ms)),
+    ])
+}
+
+impl TelemetrySummary {
+    /// Run-level stats for one phase by name, if anyone visited it.
+    pub fn phase(&self, name: &str) -> Option<&PhaseStat> {
+        self.breakdown.iter().find(|p| p.phase == name)
+    }
+
+    /// p99 of one phase in ms (0.0 when the phase never occurred) —
+    /// what the sweep CSV's breakdown columns print.
+    pub fn phase_p99_ms(&self, name: &str) -> f64 {
+        self.phase(name).map(|p| p.p99_ms).unwrap_or(0.0)
+    }
+
+    pub fn accounted_ms(&self) -> f64 {
+        self.accounted_us as f64 / 1e3
+    }
+
+    /// Compact JSON block for the report (`"telemetry"` key). The full
+    /// series and the trace ship as separate files, not here.
+    pub fn to_json(&self) -> Json {
+        let breakdown: Vec<Json> = self.breakdown.iter().map(stat_json).collect();
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("sample_ms", Json::from(self.sample_interval_us as f64 / 1e3)),
+            ("samples", Json::from(self.series.len())),
+            ("spans", Json::from(self.spans)),
+            ("accounted_ms", Json::from(self.accounted_ms())),
+            ("breakdown", Json::from(breakdown)),
+        ];
+        if !self.classes.is_empty() {
+            let classes: Vec<Json> = self
+                .classes
+                .iter()
+                .map(|c| {
+                    Json::obj([
+                        ("class", Json::from(u64::from(c.class))),
+                        ("name", Json::from(c.name.clone())),
+                        ("breakdown", Json::from(c.phases.iter().map(stat_json).collect::<Vec<_>>())),
+                    ])
+                })
+                .collect();
+            pairs.push(("classes", Json::from(classes)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// The sampled series as CSV (see [`SERIES_CSV_HEADER`]).
+    pub fn series_csv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(64 * (self.series.len() + 1));
+        out.push_str(SERIES_CSV_HEADER);
+        out.push('\n');
+        for s in &self.series {
+            let _ = write!(out, "{:.3},{}", s.t as f64 / 1e3, s.in_flight);
+            for p in s.phases {
+                let _ = write!(out, ",{p}");
+            }
+            let _ = writeln!(
+                out,
+                ",{},{},{},{},{},{},{},{},{},{}",
+                s.finished,
+                s.shed,
+                s.failed,
+                s.decode_queue,
+                s.kv_tokens,
+                s.roles[0],
+                s.roles[1],
+                s.roles[2],
+                s.cache_hits,
+                s.cache_lookups
+            );
+        }
+        out
+    }
+
+    /// Human-readable breakdown rows ("where did my latency go?"),
+    /// one per visited phase, with each phase's share of the total
+    /// accounted request time.
+    pub fn breakdown_lines(&self) -> Vec<String> {
+        let total = self.accounted_ms().max(f64::MIN_POSITIVE);
+        self.breakdown
+            .iter()
+            .map(|p| {
+                format!(
+                    "{:<9} n={:<8} mean {:>9.2} ms  p50 {:>9.2}  p99 {:>9.2}  | {:>5.1}% of request time",
+                    p.phase,
+                    p.count,
+                    p.mean_ms,
+                    p.p50_ms,
+                    p.p99_ms,
+                    100.0 * p.sum_ms / total
+                )
+            })
+            .collect()
+    }
+}
+
+/// Open-request state inside the span machine.
+#[derive(Clone, Copy, Debug)]
+struct Track {
+    class: u8,
+    phase: Phase,
+    /// When the open phase started (the next span's `ts`).
+    last: Us,
+    /// Trace lane of the open phase (0 = scheduler, instance + 1 else).
+    span_pid: u64,
+    /// Accrued µs per phase, folded into the histograms at finish.
+    acc: [Us; N_PHASES],
+}
+
+/// The telemetry observer: span machine + gauges + sampler + trace
+/// buffer. Construct with [`Telemetry::from_spec`], attach via the
+/// observer seam (the scenario runner tees it with the caller's
+/// observer), then call [`Telemetry::into_summary`].
+#[derive(Debug)]
+pub struct Telemetry {
+    interval: Us,
+    max_samples: usize,
+    trace_on: bool,
+    next_sample: Us,
+    tracks: HashMap<ReqId, Track>,
+    hists: [LogHist; N_PHASES],
+    per_class: Vec<(u8, Box<[LogHist; N_PHASES]>)>,
+    phase_count: [u64; N_PHASES],
+    arrived: u64,
+    finished: u64,
+    shed: u64,
+    failed: u64,
+    decode_queue: u64,
+    kv_by_inst: Vec<u64>,
+    roles: [i64; 3],
+    cache_hits: u64,
+    cache_lookups: u64,
+    samples: Vec<SeriesPoint>,
+    events: Vec<TraceEvent>,
+    max_pid: u64,
+    spans: u64,
+    accounted_us: u128,
+}
+
+fn role_idx(r: Role) -> usize {
+    match r {
+        Role::Prefill => 0,
+        Role::Decode => 1,
+        Role::Coupled => 2,
+    }
+}
+
+impl Telemetry {
+    /// Raw constructor. `roles` seeds the live-instance gauges
+    /// ([prefill, decode, coupled]); `interval_us` is clamped ≥ 1 and
+    /// `max_samples` ≥ 2 so the sampler always terminates.
+    pub fn new(interval_us: Us, max_samples: usize, trace_on: bool, roles: [i64; 3]) -> Self {
+        let interval = interval_us.max(1);
+        Telemetry {
+            interval,
+            max_samples: max_samples.max(2),
+            trace_on,
+            next_sample: interval,
+            tracks: HashMap::new(),
+            hists: std::array::from_fn(|_| LogHist::default()),
+            per_class: Vec::new(),
+            phase_count: [0; N_PHASES],
+            arrived: 0,
+            finished: 0,
+            shed: 0,
+            failed: 0,
+            decode_queue: 0,
+            kv_by_inst: Vec::new(),
+            roles,
+            cache_hits: 0,
+            cache_lookups: 0,
+            samples: Vec::new(),
+            events: Vec::new(),
+            max_pid: 0,
+            spans: 0,
+            accounted_us: 0,
+        }
+    }
+
+    /// Build from the scenario's `telemetry` knob, seeding role gauges
+    /// from the topology the driver will actually instantiate.
+    pub fn from_spec(spec: &TelemetrySpec, sc: &Scenario) -> Self {
+        let roles = if sc.driver == "vllm" {
+            [0, 0, sc.baseline_config().n_instances as i64]
+        } else {
+            [sc.n_prefill as i64, sc.n_decode as i64, sc.n_coupled as i64]
+        };
+        Telemetry::new((spec.sample_ms * 1e3).max(1.0) as Us, spec.max_samples, spec.trace, roles)
+    }
+
+    /// Sample every interval boundary in `(last tick, now]`. Called at
+    /// the top of every hook, *before* the event mutates any gauge —
+    /// DES state is piecewise-constant between events, so each sample
+    /// sees the exact state that held at its boundary.
+    fn tick(&mut self, now: Us) {
+        while self.next_sample <= now {
+            if self.samples.len() >= self.max_samples {
+                // deterministic downsample: keep every other point,
+                // double the cadence
+                let mut keep = false;
+                self.samples.retain(|_| {
+                    keep = !keep;
+                    keep
+                });
+                self.interval = self.interval.saturating_mul(2);
+            }
+            let t = self.next_sample;
+            self.samples.push(SeriesPoint {
+                t,
+                in_flight: self.arrived - self.finished - self.shed - self.failed,
+                phases: self.phase_count,
+                finished: self.finished,
+                shed: self.shed,
+                failed: self.failed,
+                decode_queue: self.decode_queue,
+                kv_tokens: self.kv_by_inst.iter().sum(),
+                roles: self.roles.map(|r| r.max(0) as u64),
+                cache_hits: self.cache_hits,
+                cache_lookups: self.cache_lookups,
+            });
+            self.next_sample += self.interval;
+        }
+    }
+
+    fn push_event(&mut self, ev: TraceEvent) {
+        self.max_pid = self.max_pid.max(ev.pid);
+        self.events.push(ev);
+    }
+
+    /// Close the open phase of `id` at `now` and open `next` on lane
+    /// `pid`. Unknown ids (never delivered, or already closed) no-op.
+    fn transition(&mut self, id: ReqId, now: Us, next: Phase, pid: u64) {
+        let Some(tr) = self.tracks.get_mut(&id) else { return };
+        let dur = now.saturating_sub(tr.last);
+        let (closed, ts, span_pid) = (tr.phase, tr.last, tr.span_pid);
+        tr.acc[closed.idx()] += dur;
+        tr.last = now;
+        tr.phase = next;
+        tr.span_pid = pid;
+        self.phase_count[closed.idx()] = self.phase_count[closed.idx()].saturating_sub(1);
+        self.phase_count[next.idx()] += 1;
+        if dur > 0 {
+            self.spans += 1;
+            if self.trace_on {
+                self.push_event(TraceEvent {
+                    name: closed.name(),
+                    ph: 'X',
+                    ts,
+                    dur,
+                    pid: span_pid,
+                    tid: id,
+                    arg: None,
+                });
+            }
+        }
+    }
+
+    /// Remove `id` without folding into the breakdown (shed / failed —
+    /// the breakdown covers finished requests only, so phase sums stay
+    /// reconcilable with the JCT histogram). The closing span still
+    /// reaches the trace so sheds are visible in Perfetto.
+    fn drop_track(&mut self, id: ReqId, now: Us) {
+        let Some(tr) = self.tracks.remove(&id) else { return };
+        let dur = now.saturating_sub(tr.last);
+        self.phase_count[tr.phase.idx()] = self.phase_count[tr.phase.idx()].saturating_sub(1);
+        if dur > 0 {
+            self.spans += 1;
+            if self.trace_on {
+                self.push_event(TraceEvent {
+                    name: tr.phase.name(),
+                    ph: 'X',
+                    ts: tr.last,
+                    dur,
+                    pid: tr.span_pid,
+                    tid: id,
+                    arg: None,
+                });
+            }
+        }
+    }
+
+    fn class_hists(&mut self, class: u8) -> &mut [LogHist; N_PHASES] {
+        let pos = match self.per_class.iter().position(|(c, _)| *c == class) {
+            Some(p) => p,
+            None => {
+                self.per_class.push((class, Box::new(std::array::from_fn(|_| LogHist::default()))));
+                self.per_class.len() - 1
+            }
+        };
+        &mut self.per_class[pos].1
+    }
+
+    /// The Chrome trace-event JSON: metadata lanes, every recorded
+    /// span/instant, and counter tracks synthesized from the samples.
+    fn trace_json(&self) -> Json {
+        let mut evs: Vec<Json> = Vec::with_capacity(self.events.len() + 3 * self.samples.len() + 2);
+        let meta = |pid: u64, name: String| {
+            Json::obj([
+                ("name", Json::from("process_name")),
+                ("ph", Json::from("M")),
+                ("pid", Json::from(pid)),
+                ("args", Json::obj([("name", Json::from(name))])),
+            ])
+        };
+        evs.push(meta(0, "scheduler".to_string()));
+        for pid in 1..=self.max_pid {
+            evs.push(meta(pid, format!("instance {}", pid - 1)));
+        }
+        for e in &self.events {
+            evs.push(e.to_json());
+        }
+        for s in &self.samples {
+            for (name, v) in [
+                ("in_flight", s.in_flight),
+                ("decode_queue", s.decode_queue),
+                ("kv_tokens", s.kv_tokens),
+            ] {
+                evs.push(Json::obj([
+                    ("name", Json::from(name)),
+                    ("ph", Json::from("C")),
+                    ("ts", Json::from(s.t)),
+                    ("pid", Json::from(0u64)),
+                    ("args", Json::obj([("value", Json::from(v))])),
+                ]));
+            }
+        }
+        Json::obj([
+            ("displayTimeUnit", Json::from("ms")),
+            ("traceEvents", Json::from(evs)),
+        ])
+    }
+
+    /// Distill the run. `m` resolves class names for the per-class
+    /// breakdown; in-flight tracks (aborted runs) are discarded.
+    pub fn into_summary(mut self, m: &RunMetrics) -> TelemetrySummary {
+        let trace = if self.trace_on { Some(self.trace_json()) } else { None };
+        let stats_of = |hists: &[LogHist; N_PHASES]| -> Vec<PhaseStat> {
+            Phase::ALL
+                .iter()
+                .filter_map(|p| {
+                    let h = &hists[p.idx()];
+                    if h.count() == 0 {
+                        return None;
+                    }
+                    let s = h.summary_scaled(1e-3);
+                    Some(PhaseStat {
+                        phase: p.name(),
+                        count: h.count(),
+                        sum_ms: s.sum,
+                        mean_ms: s.mean,
+                        p50_ms: s.p50,
+                        p99_ms: s.p99,
+                    })
+                })
+                .collect()
+        };
+        let breakdown = stats_of(&self.hists);
+        self.per_class.sort_by_key(|(c, _)| *c);
+        let classes = self
+            .per_class
+            .iter()
+            .map(|(c, hists)| ClassBreakdown {
+                class: *c,
+                name: m.class_name(*c).to_string(),
+                phases: stats_of(hists),
+            })
+            .collect();
+        TelemetrySummary {
+            sample_interval_us: self.interval,
+            breakdown,
+            classes,
+            series: self.samples,
+            spans: self.spans,
+            accounted_us: self.accounted_us,
+            trace,
+        }
+    }
+}
+
+impl Observer for Telemetry {
+    fn on_arrival(&mut self, now: Us, req: &Request) {
+        self.tick(now);
+        self.arrived += 1;
+        self.phase_count[Phase::Queue.idx()] += 1;
+        self.tracks.insert(
+            req.id,
+            Track { class: req.class, phase: Phase::Queue, last: now, span_pid: 0, acc: [0; N_PHASES] },
+        );
+    }
+
+    fn on_predict(&mut self, now: Us, req: ReqId, _dur: Us) {
+        self.tick(now);
+        self.transition(req, now, Phase::Predict, 0);
+    }
+
+    fn on_prefill_start(&mut self, now: Us, instance: usize, req: ReqId) {
+        self.tick(now);
+        self.transition(req, now, Phase::Prefill, instance as u64 + 1);
+    }
+
+    fn on_prefill_finish(&mut self, now: Us, _instance: usize, req: ReqId) {
+        self.tick(now);
+        self.transition(req, now, Phase::Dispatch, 0);
+    }
+
+    fn on_transfer(&mut self, now: Us, instance: usize, req: ReqId, _tokens: u32, _dur: Us) {
+        self.tick(now);
+        self.transition(req, now, Phase::Transfer, instance as u64 + 1);
+    }
+
+    fn on_decode_enter(&mut self, now: Us, instance: usize, req: ReqId) {
+        self.tick(now);
+        self.transition(req, now, Phase::Decode, instance as u64 + 1);
+    }
+
+    fn on_parked(&mut self, now: Us, req: ReqId) {
+        self.tick(now);
+        self.transition(req, now, Phase::Parked, 0);
+    }
+
+    fn on_backoff(&mut self, now: Us, req: ReqId, _until: Us) {
+        self.tick(now);
+        self.transition(req, now, Phase::Retry, 0);
+    }
+
+    fn on_finish(&mut self, now: Us, rec: &RequestRecord) {
+        self.tick(now);
+        let Some(mut tr) = self.tracks.remove(&rec.id) else { return };
+        let dur = now.saturating_sub(tr.last);
+        tr.acc[tr.phase.idx()] += dur;
+        self.phase_count[tr.phase.idx()] = self.phase_count[tr.phase.idx()].saturating_sub(1);
+        if dur > 0 {
+            self.spans += 1;
+            if self.trace_on {
+                self.push_event(TraceEvent {
+                    name: tr.phase.name(),
+                    ph: 'X',
+                    ts: tr.last,
+                    dur,
+                    pid: tr.span_pid,
+                    tid: rec.id,
+                    arg: None,
+                });
+            }
+        }
+        self.finished += 1;
+        let total: Us = tr.acc.iter().sum();
+        self.accounted_us += total as u128;
+        for p in 0..N_PHASES {
+            if tr.acc[p] > 0 {
+                self.hists[p].record(tr.acc[p]);
+            }
+        }
+        let hists = self.class_hists(tr.class);
+        for p in 0..N_PHASES {
+            if tr.acc[p] > 0 {
+                hists[p].record(tr.acc[p]);
+            }
+        }
+    }
+
+    fn on_shed(&mut self, now: Us, req: &Request) {
+        self.tick(now);
+        self.shed += 1;
+        self.drop_track(req.id, now);
+    }
+
+    fn on_request_failed(&mut self, now: Us, req: &Request) {
+        self.tick(now);
+        self.failed += 1;
+        self.drop_track(req.id, now);
+    }
+
+    fn on_chunk(&mut self, now: Us, instance: usize, tokens: u32, _pad: u32, dur: Us) {
+        self.tick(now);
+        if self.trace_on {
+            self.push_event(TraceEvent {
+                name: "chunk",
+                ph: 'X',
+                ts: now,
+                dur,
+                pid: instance as u64 + 1,
+                tid: 0,
+                arg: Some(("tokens", tokens as u64)),
+            });
+        }
+    }
+
+    fn on_decode_iter(&mut self, now: Us, instance: usize, batch: u32, kv_tokens: u64, dur: Us) {
+        self.tick(now);
+        if self.kv_by_inst.len() <= instance {
+            self.kv_by_inst.resize(instance + 1, 0);
+        }
+        self.kv_by_inst[instance] = kv_tokens;
+        if self.trace_on {
+            self.push_event(TraceEvent {
+                name: "decode_iter",
+                ph: 'X',
+                ts: now,
+                dur,
+                pid: instance as u64 + 1,
+                tid: 0,
+                arg: Some(("batch", batch as u64)),
+            });
+        }
+    }
+
+    fn on_flip(&mut self, now: Us, instance: usize, to: Role, dur: Us) {
+        self.tick(now);
+        // flips swap prefill↔decode; count the new role live at issue
+        // time (the dur-long warmup is visible as the flip slice)
+        let from = match to {
+            Role::Decode => Role::Prefill,
+            Role::Prefill => Role::Decode,
+            Role::Coupled => Role::Coupled,
+        };
+        self.roles[role_idx(from)] -= 1;
+        self.roles[role_idx(to)] += 1;
+        if self.trace_on {
+            self.push_event(TraceEvent {
+                name: "flip",
+                ph: 'X',
+                ts: now,
+                dur,
+                pid: instance as u64 + 1,
+                tid: 0,
+                arg: None,
+            });
+        }
+    }
+
+    fn on_scale(&mut self, now: Us, _instance: usize, role: Role, added: bool) {
+        self.tick(now);
+        self.roles[role_idx(role)] += if added { 1 } else { -1 };
+    }
+
+    fn on_monitor(&mut self, now: Us, loads: &[DecodeLoad]) {
+        self.tick(now);
+        self.decode_queue = loads.iter().map(|l| u64::from(l.queue_len)).sum();
+    }
+
+    fn on_fault(&mut self, now: Us, kind: &'static str, instance: Option<usize>) {
+        self.tick(now);
+        if self.trace_on {
+            self.push_event(TraceEvent {
+                name: kind,
+                ph: 'i',
+                ts: now,
+                dur: 0,
+                pid: instance.map(|i| i as u64 + 1).unwrap_or(0),
+                tid: 0,
+                arg: None,
+            });
+        }
+    }
+
+    fn on_recovery(&mut self, now: Us, kind: &'static str, instance: Option<usize>) {
+        self.tick(now);
+        if self.trace_on {
+            self.push_event(TraceEvent {
+                name: kind,
+                ph: 'i',
+                ts: now,
+                dur: 0,
+                pid: instance.map(|i| i as u64 + 1).unwrap_or(0),
+                tid: 0,
+                arg: None,
+            });
+        }
+    }
+
+    fn on_cache(&mut self, now: Us, _req: ReqId, hit_tokens: u32) {
+        self.tick(now);
+        self.cache_lookups += 1;
+        if hit_tokens > 0 {
+            self.cache_hits += 1;
+        }
+    }
+
+    fn on_violation(&mut self, now: Us, _rec: &RequestRecord, _ttft: bool, _tpot: bool) {
+        self.tick(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::TaskType;
+
+    fn req(id: ReqId, class: u8, arrival: Us) -> Request {
+        Request {
+            id,
+            task: TaskType::Chat,
+            class,
+            arrival,
+            prompt_len: 100,
+            decode_len: 10,
+            predicted: None,
+            prefix: None,
+        }
+    }
+
+    fn rec(id: ReqId, class: u8, arrival: Us, finished: Us) -> RequestRecord {
+        RequestRecord {
+            id,
+            task: TaskType::Chat,
+            class,
+            prompt_len: 100,
+            decode_len: 10,
+            arrival,
+            first_token: arrival + 1,
+            finished,
+            predicted: None,
+            retries: 0,
+            recovered: false,
+        }
+    }
+
+    /// Drive one request through the full pipeline by hand.
+    fn walk(t: &mut Telemetry, id: ReqId, at: Us) {
+        t.on_arrival(at, &req(id, 0, at));
+        t.on_prefill_start(at + 10, 0, id);
+        t.on_prefill_finish(at + 30, 0, id);
+        t.on_transfer(at + 32, 1, id, 100, 5);
+        t.on_decode_enter(at + 37, 1, id);
+        t.on_finish(at + 100, &rec(id, 0, at, at + 100));
+    }
+
+    #[test]
+    fn phases_partition_the_request_interval_exactly() {
+        let mut t = Telemetry::new(1_000_000, 4096, false, [1, 1, 0]);
+        walk(&mut t, 7, 1_000);
+        assert_eq!(t.accounted_us, 100, "Σ phases == JCT, slack 0");
+        assert_eq!(t.finished, 1);
+        let s = t.into_summary(&RunMetrics::default());
+        let total: f64 = s.breakdown.iter().map(|p| p.sum_ms).sum();
+        assert!((total - s.accounted_ms()).abs() < 1e-9);
+        let names: Vec<&str> = s.breakdown.iter().map(|p| p.phase).collect();
+        assert_eq!(names, vec!["queue", "prefill", "dispatch", "transfer", "decode"]);
+        assert_eq!(s.phase("queue").unwrap().count, 1);
+        assert!((s.phase("decode").unwrap().sum_ms - 0.063).abs() < 1e-9);
+        assert_eq!(s.phase_p99_ms("retry"), 0.0, "unvisited phases read 0");
+    }
+
+    #[test]
+    fn retry_and_shed_paths_keep_the_books_straight() {
+        let mut t = Telemetry::new(1_000_000, 4096, false, [1, 1, 0]);
+        // a request crashes out of prefill, backs off, then finishes
+        t.on_arrival(0, &req(1, 2, 0));
+        t.on_prefill_start(5, 0, 1);
+        t.on_backoff(20, 1, 45);
+        t.on_prefill_start(60, 0, 1);
+        t.on_prefill_finish(80, 0, 1);
+        t.on_transfer(80, 1, 1, 100, 4);
+        t.on_decode_enter(84, 1, 1);
+        t.on_finish(120, &rec(1, 2, 0, 120));
+        // a shed request leaves no breakdown trace
+        t.on_arrival(50, &req(2, 2, 50));
+        t.on_shed(50, &req(2, 2, 50));
+        // a failed request likewise
+        t.on_arrival(55, &req(3, 2, 55));
+        t.on_request_failed(90, &req(3, 2, 55));
+        assert_eq!((t.finished, t.shed, t.failed), (1, 1, 1));
+        assert_eq!(t.accounted_us, 120, "shed/failed never enter the breakdown");
+        assert_eq!(t.phase_count, [0; N_PHASES], "no open phases left behind");
+        let s = t.into_summary(&RunMetrics::default());
+        assert!((s.phase("retry").unwrap().sum_ms - 0.040).abs() < 1e-9, "backoff + requeue wait");
+        assert_eq!(s.classes.len(), 1);
+        assert_eq!(s.classes[0].class, 2);
+    }
+
+    #[test]
+    fn sampler_is_piecewise_exact_and_downsamples_deterministically() {
+        let mut t = Telemetry::new(10, 4, false, [1, 1, 0]);
+        t.on_arrival(0, &req(1, 0, 0));
+        // next event at t=35: boundaries 10,20,30 must see 1 in flight
+        t.on_prefill_start(35, 0, 1);
+        assert_eq!(t.samples.len(), 3);
+        assert!(t.samples.iter().all(|s| s.in_flight == 1));
+        assert_eq!(t.samples[2].phases[Phase::Queue.idx()], 1);
+        // crossing the cap keeps every other point and doubles cadence
+        t.on_prefill_finish(200, 0, 1);
+        assert!(t.samples.len() <= 4);
+        assert_eq!(t.interval, 20);
+        let ts: Vec<Us> = t.samples.iter().map(|s| s.t).collect();
+        let mut sorted = ts.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(ts, sorted, "series stays strictly increasing after downsampling");
+    }
+
+    #[test]
+    fn trace_export_is_valid_chrome_trace_event_json() {
+        let mut t = Telemetry::new(50, 4096, true, [1, 1, 0]);
+        walk(&mut t, 3, 0);
+        t.on_chunk(5, 0, 100, 28, 7);
+        t.on_decode_iter(40, 1, 4, 400, 6);
+        t.on_flip(90, 0, Role::Decode, 600);
+        t.on_fault(95, "crash", Some(1));
+        t.on_recovery(99, "restart", Some(1));
+        let s = t.into_summary(&RunMetrics::default());
+        let trace = s.trace.expect("trace armed");
+        let parsed = Json::parse(&trace.dump()).expect("round-trips");
+        let evs = parsed.get("traceEvents").expect("top-level traceEvents").as_arr().unwrap();
+        assert!(!evs.is_empty());
+        let mut phases = 0;
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(e.get("name").is_some() && e.get("pid").is_some());
+            match ph {
+                "X" => {
+                    assert!(e.get("ts").is_some() && e.get("dur").is_some());
+                    if e.get("tid").unwrap().as_usize() == Some(3) {
+                        phases += 1;
+                    }
+                }
+                "i" => assert_eq!(e.get("s").unwrap().as_str(), Some("g")),
+                "C" => assert!(e.at(&["args", "value"]).is_some()),
+                "M" => assert!(e.at(&["args", "name"]).is_some()),
+                other => panic!("unexpected ph {other}"),
+            }
+        }
+        assert_eq!(phases, 5, "request 3's five phase spans all exported");
+        // telemetry-off construction records no events at all
+        let mut off = Telemetry::new(50, 4096, false, [1, 1, 0]);
+        walk(&mut off, 9, 0);
+        assert!(off.events.is_empty());
+        assert!(off.into_summary(&RunMetrics::default()).trace.is_none());
+    }
+
+    #[test]
+    fn series_csv_has_one_row_per_sample_and_pinned_header() {
+        let mut t = Telemetry::new(25, 4096, false, [2, 1, 0]);
+        walk(&mut t, 1, 0);
+        t.on_monitor(110, &[]);
+        let s = t.into_summary(&RunMetrics::default());
+        let csv = s.series_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some(SERIES_CSV_HEADER));
+        assert_eq!(lines.count(), s.series.len());
+        assert_eq!(SERIES_CSV_HEADER.split(',').count(), 20);
+        assert!(s.series.iter().all(|p| p.roles == [2, 1, 0]));
+    }
+}

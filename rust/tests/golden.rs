@@ -255,7 +255,7 @@ fn shipped_scenario_specs_round_trip_and_resolve() {
         registry.resolve(&sc).unwrap_or_else(|e| panic!("{path_str}: {e}"));
         n += 1;
     }
-    assert!(n >= 23, "expected the shipped scenario set (incl. the optimizer spec), found {n} specs");
+    assert!(n >= 24, "expected the shipped scenario set (incl. the telemetry demo), found {n} specs");
 }
 
 /// The optimizer tentpole pin: the shipped search spec — clamped to a

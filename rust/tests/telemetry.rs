@@ -1,0 +1,180 @@
+//! Telemetry subsystem end-to-end (the observability tentpole):
+//!
+//!  1. observer-seam parity — arming telemetry (spans + sampler + trace)
+//!     must leave the simulated trajectory bit-identical across all three
+//!     drivers, record-for-record;
+//!  2. span conservation — every finished request's phases partition its
+//!     arrival→finish interval exactly, so the run-level `accounted_us`
+//!     equals the JCT histogram's exact sum (slack 0 by design);
+//!  3. Perfetto schema — the `--trace` export is valid Chrome
+//!     trace-event JSON with the pinned event shapes and the pinned
+//!     fault/recovery instant vocabulary.
+
+use tetri_infer::api::{FaultKind, FaultSpec, Scenario, TelemetrySpec};
+use tetri_infer::fault::{OBSERVED_FAULT_KINDS, OBSERVED_RECOVERY_KINDS};
+use tetri_infer::telemetry::Phase;
+use tetri_infer::util::{repo_root, Json};
+use tetri_infer::workload::WorkloadKind;
+
+/// A chaos-flavored scenario touching every span type: mixed workload,
+/// disaggregated or coupled topology, and a mid-run instance restart so
+/// retry/backoff and parked excursions actually happen.
+fn chaotic(driver: &str, seed: u64) -> Scenario {
+    Scenario::builder()
+        .driver(driver)
+        .workload(WorkloadKind::Mixed)
+        .requests(64)
+        .rate(32.0)
+        .seed(seed)
+        .topology(1, 2)
+        .coupled(if driver == "hybrid" { 1 } else { 0 })
+        .fault(FaultSpec {
+            instance: Some(0),
+            down_ms: Some(60.0),
+            ..FaultSpec::new(FaultKind::Restart, 40.0)
+        })
+        .build()
+}
+
+#[test]
+fn telemetry_on_is_bit_identical_to_off_across_all_drivers() {
+    for driver in ["tetri", "vllm", "hybrid"] {
+        let off = chaotic(driver, 9).run().expect("off run");
+        let mut sc = chaotic(driver, 9);
+        sc.telemetry = Some(TelemetrySpec { sample_ms: 5.0, max_samples: 64, trace: true });
+        let on = sc.run().expect("armed run");
+        assert_eq!(off.metrics.makespan_us, on.metrics.makespan_us, "{driver}");
+        assert_eq!(off.metrics.events, on.metrics.events, "{driver}");
+        assert_eq!(off.metrics.shed, on.metrics.shed, "{driver}");
+        assert_eq!(off.metrics.failed, on.metrics.failed, "{driver}");
+        assert_eq!(off.metrics.records.len(), on.metrics.records.len(), "{driver}");
+        for (a, b) in off.metrics.records.iter().zip(on.metrics.records.iter()) {
+            assert_eq!(
+                (a.id, a.arrival, a.first_token, a.finished, a.retries),
+                (b.id, b.arrival, b.first_token, b.finished, b.retries),
+                "{driver}: records must match field-for-field"
+            );
+        }
+        assert!(off.telemetry.is_none(), "{driver}: off runs carry no telemetry block");
+        let t = on.telemetry.expect("armed run distills a summary");
+        assert!(t.spans > 0, "{driver}");
+        assert!(!t.series.is_empty(), "{driver}: the sampler must have fired");
+        assert!(t.trace.is_some(), "{driver}: trace=true exports");
+        // off-path JSON is byte-identical to a pre-telemetry report; the
+        // armed report only *adds* the telemetry block
+        let off_json = off.to_json().dump();
+        assert!(!off_json.contains("\"telemetry\""), "{driver}");
+        assert!(on.to_json().dump().contains("\"telemetry\""), "{driver}");
+    }
+}
+
+#[test]
+fn span_conservation_holds_across_drivers_and_seeds() {
+    // hand-rolled property loop (the crate is dependency-free): whatever
+    // the fault/retry/shed trajectory, finished requests' phase accruals
+    // telescope to exactly arrival→finish, so the run-level sum matches
+    // the exact JCT sum the metrics accumulated independently.
+    for driver in ["tetri", "vllm", "hybrid"] {
+        for seed in 0..4u64 {
+            let mut sc = chaotic(driver, seed);
+            sc.telemetry = Some(TelemetrySpec { sample_ms: 7.0, max_samples: 128, trace: false });
+            let r = sc.run().expect("armed run");
+            let t = r.telemetry.as_ref().expect("summary attached");
+            assert_eq!(
+                t.accounted_us,
+                r.metrics.jct_sum_us(),
+                "{driver} seed {seed}: Σ phases must equal Σ JCT (slack 0)"
+            );
+            let total: f64 = t.breakdown.iter().map(|p| p.sum_ms).sum();
+            assert!(
+                (total - t.accounted_ms()).abs() < 1e-6,
+                "{driver} seed {seed}: breakdown rows must add up"
+            );
+            for p in &t.breakdown {
+                assert!(
+                    Phase::ALL.iter().any(|q| q.name() == p.phase),
+                    "{driver} seed {seed}: unknown phase '{}'",
+                    p.phase
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn slo_overload_breakdown_reconciles_and_covers_classes() {
+    let path = repo_root().join("scenarios/slo_overload.json");
+    let mut sc = Scenario::load(path.to_str().unwrap()).expect("slo_overload parses");
+    sc.requests = 128; // smoke horizon
+    sc.telemetry = Some(TelemetrySpec { sample_ms: 10.0, max_samples: 512, trace: false });
+    let r = sc.run().expect("runs");
+    let m = &r.metrics;
+    let t = r.telemetry.as_ref().expect("armed");
+    assert_eq!(m.finished + m.shed + m.failed, 128, "conservation");
+    assert!(m.shed > 0, "the overload scenario must shed");
+    assert_eq!(t.accounted_us, m.jct_sum_us(), "shed requests never enter the breakdown");
+    assert!(t.phase("queue").is_some() && t.phase("decode").is_some());
+    // the spec declares three classes; every class that finished anything
+    // gets its own per-phase breakdown, resolvable by name
+    assert!(!t.classes.is_empty());
+    for c in &t.classes {
+        assert!(!c.phases.is_empty(), "class {} breakdown", c.class);
+    }
+    let lines = t.breakdown_lines();
+    assert_eq!(lines.len(), t.breakdown.len());
+    assert!(lines.iter().any(|l| l.contains("% of request time")), "{lines:?}");
+}
+
+#[test]
+fn perfetto_export_schema_is_pinned() {
+    let path = repo_root().join("scenarios/chaos_crash.json");
+    let mut sc = Scenario::load(path.to_str().unwrap()).expect("chaos_crash parses");
+    sc.telemetry = Some(TelemetrySpec { sample_ms: 25.0, max_samples: 256, trace: true });
+    let r = sc.run().expect("runs");
+    let t = r.telemetry.as_ref().expect("armed");
+    let dumped = t.trace.as_ref().expect("trace armed").dump();
+    let parsed = Json::parse(&dumped).expect("export must round-trip through the parser");
+    assert_eq!(parsed.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let evs = parsed.get("traceEvents").expect("top-level traceEvents").as_arr().unwrap();
+    assert!(evs.len() > 10, "a chaos run leaves a real trace, got {}", evs.len());
+    let (mut spans, mut instants, mut counters, mut metas) = (0u64, 0u64, 0u64, 0u64);
+    for e in evs {
+        let name = e.get("name").expect("every event is named").as_str().unwrap().to_string();
+        assert!(e.get("pid").is_some(), "every event has a process lane");
+        match e.get("ph").expect("every event has a phase").as_str().unwrap() {
+            "X" => {
+                spans += 1;
+                assert!(e.get("ts").is_some() && e.get("dur").is_some(), "complete spans");
+            }
+            "i" => {
+                instants += 1;
+                assert_eq!(e.get("s").unwrap().as_str(), Some("g"), "global instants");
+                assert!(
+                    OBSERVED_FAULT_KINDS.contains(&name.as_str())
+                        || OBSERVED_RECOVERY_KINDS.contains(&name.as_str()),
+                    "instant '{name}' must come from the pinned fault/recovery vocabulary"
+                );
+            }
+            "C" => {
+                counters += 1;
+                assert!(e.at(&["args", "value"]).is_some(), "counters carry a value");
+            }
+            "M" => {
+                metas += 1;
+                assert_eq!(name, "process_name");
+                assert!(e.at(&["args", "name"]).is_some());
+            }
+            other => panic!("unexpected ph '{other}'"),
+        }
+    }
+    assert!(spans > 0 && instants > 0 && counters > 0 && metas > 0);
+    // request phase spans use the phase taxonomy; tid is the request lane
+    let phase_names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+    assert!(
+        evs.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("X")
+                && e.get("name").and_then(|n| n.as_str()).is_some_and(|n| phase_names.contains(&n))
+        }),
+        "at least one request phase span exported"
+    );
+}

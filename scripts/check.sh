@@ -39,8 +39,8 @@ for spec in ../scenarios/*.json; do
   cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --requests 8 >/dev/null
   specs_run=$((specs_run + 1))
 done
-if [ "${specs_run}" -lt 23 ]; then
-  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 23)" >&2
+if [ "${specs_run}" -lt 24 ]; then
+  echo "spec drift guard FAILED: smoke-ran only ${specs_run} scenarios/*.json (floor 24)" >&2
   exit 1
 fi
 
@@ -86,6 +86,33 @@ echo "prefix smoke: CLI --prefix flag"
 cargo run --release --quiet --bin tetri -- sim --workload HPLD --requests 24 --rate 24 \
   --prefill 2 --decode 2 --prefix n_prefixes=8,prefix_len=512,zipf=1.0 \
   --no-baseline >/dev/null
+
+# Telemetry smoke: --trace must produce a loadable Chrome trace-event
+# JSON on the overload and chaos specs under every driver (the span
+# machine covers the disaggregated, coupled, and hybrid pipelines). The
+# full schema pin lives in tests/telemetry.rs (real parser round trip);
+# this tiny check guards the CLI path end to end: the file exists, is
+# one JSON object with a traceEvents array, and contains complete spans.
+telemetry_tmp=$(mktemp -d)
+trap 'rm -rf "${telemetry_tmp}"' EXIT
+for spec in ../scenarios/slo_overload.json ../scenarios/chaos_crash.json; do
+  for drv in tetri vllm hybrid; do
+    echo "telemetry smoke: ${spec} under ${drv} (--trace)"
+    out="${telemetry_tmp}/$(basename "${spec}" .json).${drv}.trace.json"
+    cargo run --release --quiet --bin tetri -- sim --spec "${spec}" --driver "${drv}" \
+      --requests 24 --no-baseline --telemetry sample_ms=10 --trace "${out}" \
+      --series "${telemetry_tmp}/series.csv" >/dev/null
+    test -s "${out}" || { echo "telemetry smoke FAILED: ${out} missing/empty" >&2; exit 1; }
+    for needle in '"displayTimeUnit":"ms"' '"traceEvents":[' '"ph":"X"' '"process_name"'; do
+      grep -qF "${needle}" "${out}" || {
+        echo "telemetry smoke FAILED: ${out} lacks ${needle}" >&2; exit 1; }
+    done
+    head -c 1 "${out}" | grep -qF '{' || {
+      echo "telemetry smoke FAILED: ${out} is not a JSON object" >&2; exit 1; }
+    head -n 1 "${telemetry_tmp}/series.csv" | grep -qF 't_ms,in_flight,queue' || {
+      echo "telemetry smoke FAILED: series CSV header drifted" >&2; exit 1; }
+  done
+done
 
 # Optimizer smoke: the topology search CLI must run the shipped search
 # spec end to end (short horizon, 2 workers) and emit a frontier +
